@@ -1,0 +1,64 @@
+//! The Angle application (paper §7) end to end: four synthetic sensor
+//! sites produce anonymized packet windows with a planted port-scan
+//! regime shift; Sector stores the pcap files; a Sphere UDF extracts
+//! per-source features; the client clusters each temporal window
+//! through the PJRT k-means artifact, computes the delta_j series
+//! (Figs 5-6), flags the emergent window, and scores sources with
+//! rho(x).
+//!
+//!     make artifacts && cargo run --release --offline --example angle_pipeline
+
+use sector_sphere::cluster::Cluster;
+use sector_sphere::mining::{run_pipeline, AngleScenario, Regime};
+use sector_sphere::util::hist::ascii_plot;
+
+fn main() -> Result<(), String> {
+    let cluster = Cluster::builder()
+        .nodes(4)
+        .seed(20080824)
+        .with_runtime(true)
+        .build()?;
+    let scenario = AngleScenario {
+        sensors: 4,
+        sources_per_sensor: 25,
+        windows: 10,
+        packets_per_source: 40,
+        anomalies: vec![(6, 3, Regime::Scan), (6, 11, Regime::Exfil)],
+        seed: 20080824,
+        k: 6,
+    };
+    println!(
+        "angle: {} sensors x {} sources x {} windows (scan+exfil planted at window 6)",
+        scenario.sensors, scenario.sources_per_sensor, scenario.windows
+    );
+
+    let report = run_pipeline(&cluster.cloud, &scenario, cluster.runtime.as_ref())?;
+
+    println!(
+        "  {} pcap files -> {} feature vectors",
+        report.feature_files, report.features_total
+    );
+    println!("\ndelta_j series (cluster movement between windows, cf. Fig 5):");
+    print!("{}", ascii_plot(&report.analysis.deltas, 60, 8));
+    println!("  deltas: {:?}", report
+        .analysis
+        .deltas
+        .iter()
+        .map(|d| (d * 100.0).round() / 100.0)
+        .collect::<Vec<_>>());
+    println!("  emergent windows flagged: {:?}", report.emergent_window_ids);
+    println!("  emergent clusters: {}", report.clusters.len());
+    println!("\ntop scored sources (rho, paper §7.1):");
+    for (src, w, score) in &report.top_scores {
+        println!("  rho={score:.4}  src={src:016x}  window={w}");
+    }
+
+    assert!(
+        report.emergent_window_ids.contains(&6),
+        "planted regime shift must be flagged: {:?}",
+        report.emergent_window_ids
+    );
+    assert!(!report.clusters.is_empty());
+    println!("\nangle_pipeline OK");
+    Ok(())
+}

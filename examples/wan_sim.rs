@@ -1,0 +1,58 @@
+//! Paper-scale simulation from the command line: reproduce any Table 1
+//! (WAN) or Table 2 (LAN) column — Sphere vs Hadoop, Terasort +
+//! Terasplit at 10 GB/node — on the simulated testbeds.
+//!
+//!     cargo run --release --offline --example wan_sim
+
+use sector_sphere::config::SimConfig;
+use sector_sphere::hadoop::simulate_hadoop_row;
+use sector_sphere::sphere::simjob::simulate_sphere_row;
+use sector_sphere::topology::Testbed;
+use sector_sphere::util::bytes::GB;
+
+fn main() {
+    let bytes = 10.0 * GB as f64;
+
+    println!("WAN testbed (2x Chicago, 2x Pasadena, 2x Greenbelt; 10 Gb/s; Table 1):");
+    println!(
+        "  {:<6} {:>6} {:>14} {:>14} {:>14} {:>14} {:>8}",
+        "nodes", "sites", "sphere sort", "hadoop sort", "sphere split", "hadoop split", "speedup"
+    );
+    for n in 1..=6 {
+        let t = Testbed::wan_testbed(n);
+        let cfg = SimConfig::wan_default();
+        let s = simulate_sphere_row(&t, &cfg, bytes);
+        let h = simulate_hadoop_row(&t, &cfg, bytes);
+        let speedup = (h.terasort_secs + h.terasplit_secs)
+            / (s.terasort_secs + s.terasplit_secs);
+        println!(
+            "  {:<6} {:>6} {:>14.0} {:>14.0} {:>14.0} {:>14.0} {:>8.1}",
+            n,
+            t.sites_used(),
+            s.terasort_secs,
+            h.terasort_secs,
+            s.terasplit_secs,
+            h.terasplit_secs,
+            speedup
+        );
+    }
+
+    println!("\nLAN testbed (8-node rack; Table 2):");
+    println!(
+        "  {:<6} {:>14} {:>14} {:>14} {:>14} {:>8}",
+        "nodes", "sphere sort", "hadoop sort", "sphere split", "hadoop split", "speedup"
+    );
+    for n in 1..=8 {
+        let t = Testbed::lan_testbed(n);
+        let cfg = SimConfig::lan_default();
+        let s = simulate_sphere_row(&t, &cfg, bytes);
+        let h = simulate_hadoop_row(&t, &cfg, bytes);
+        let speedup = (h.terasort_secs + h.terasplit_secs)
+            / (s.terasort_secs + s.terasplit_secs);
+        println!(
+            "  {:<6} {:>14.0} {:>14.0} {:>14.0} {:>14.0} {:>8.1}",
+            n, s.terasort_secs, h.terasort_secs, s.terasplit_secs, h.terasplit_secs, speedup
+        );
+    }
+    println!("\n(cargo bench --bench bench_table1/2 prints the paper-vs-measured checks)");
+}

@@ -1,0 +1,62 @@
+"""AOT lowering: JAX (L2, with L1 Pallas kernels inside) -> HLO text.
+
+HLO *text* -- not `lowered.compile()` nor a serialized HloModuleProto --
+is the interchange format: jax >= 0.5 emits protos with 64-bit instruction
+ids which the `xla` crate's xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser on the Rust side reassigns ids
+and round-trips cleanly.  See /opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+Writes one `<name>.hlo.txt` per entry in model.ARTIFACTS plus a manifest.
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_all(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {}
+    for name, (fn, example_args) in model.ARTIFACTS.items():
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+        manifest[name] = (len(text), digest)
+        print(f"  {name:<12} {len(text):>8} chars  sha256:{digest}  -> {path}")
+    # Manifest lets `make` (and the Rust runtime) detect staleness cheaply.
+    with open(os.path.join(out_dir, "MANIFEST.txt"), "w") as f:
+        for name, (size, digest) in sorted(manifest.items()):
+            f.write(f"{name} {size} {digest}\n")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    print(f"lowering {len(model.ARTIFACTS)} artifacts -> {args.out_dir}")
+    lower_all(args.out_dir)
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""L1 Pallas kernels (build-time only; lowered into the L2 HLO artifacts)."""
+from .kmeans import kmeans_step
+from .split_scan import split_scan
+
+__all__ = ["kmeans_step", "split_scan"]

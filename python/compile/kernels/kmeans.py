@@ -1,0 +1,109 @@
+"""L1 Pallas kernel: one weighted Lloyd's k-means assignment+accumulation step.
+
+Hardware adaptation (DESIGN.md section "Hardware-Adaptation"): on a GPU one
+would give each threadblock a chunk of points, keep the centroid table in
+shared memory, and scatter-add partial sums with atomics.  TPUs have neither
+fast scatter nor atomics, so the kernel is restructured around the MXU:
+
+  * the distance term is the matmul  X_tile (TILE_N, d)  @  C^T (d, k)
+    -- the dominant FLOPs land on the systolic array;
+  * the per-cluster accumulation is the matmul  onehot^T (k, TILE_N) @ X_tile
+    (TILE_N, d) -- scatter-add re-expressed as a second MXU contraction;
+  * the grid walks the N axis sequentially; accumulators (sums, counts,
+    inertia) live in the *output* VMEM blocks whose index_map pins them to
+    block (0, 0) for every grid step -- the canonical Pallas reduction
+    carry.  Grid-step 0 zero-initialises them.
+
+VMEM budget per grid step (f32, defaults TILE_N=512, d=16, k=32):
+  X tile 512*16*4 = 32 KiB, centers 32*16*4 = 2 KiB, distances
+  512*32*4 = 64 KiB, onehot 64 KiB, outputs ~2.3 KiB  ==>  ~165 KiB,
+  comfortably inside a 16 MiB VMEM even at TILE_N=8192.  MXU utilisation
+  estimate in EXPERIMENTS.md (section Perf/L1).
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO so the AOT artifact runs
+in the Rust runtime.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile along the point axis.  Must divide the (padded) n.
+TILE_N = 512
+
+
+def _kmeans_kernel(x_ref, c_ref, w_ref, sums_ref, counts_ref, inertia_ref):
+    """One grid step: TILE_N points against the full (k, d) center table."""
+    step = pl.program_id(0)
+
+    x = x_ref[...]                       # (TILE_N, d)
+    c = c_ref[...]                       # (k, d)
+    w = w_ref[...]                       # (TILE_N,)
+
+    # Zero the carried accumulators on the first step.
+    @pl.when(step == 0)
+    def _init():
+        sums_ref[...] = jnp.zeros_like(sums_ref)
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+        inertia_ref[...] = jnp.zeros_like(inertia_ref)
+
+    # Squared distances via the MXU-friendly expansion.
+    x2 = jnp.sum(x * x, axis=1, keepdims=True)                    # (T, 1)
+    c2 = jnp.sum(c * c, axis=1)[None, :]                          # (1, k)
+    xc = jnp.dot(x, c.T, preferred_element_type=jnp.float32)      # (T, k) MXU
+    d2 = x2 - 2.0 * xc + c2                                       # (T, k)
+
+    assign = jnp.argmin(d2, axis=1)                               # (T,)
+    best = jnp.min(d2, axis=1)                                    # (T,)
+
+    k = c.shape[0]
+    onehot = jnp.asarray(
+        assign[:, None] == jax.lax.broadcasted_iota(jnp.int32, (1, k), 1),
+        dtype=x.dtype,
+    ) * w[:, None]                                                # (T, k)
+
+    # Scatter-add as a second MXU contraction: (k, T) @ (T, d).
+    sums_ref[...] += jnp.dot(onehot.T, x, preferred_element_type=jnp.float32)
+    counts_ref[...] += jnp.sum(onehot, axis=0)
+    inertia_ref[...] += jnp.sum(jnp.maximum(best, 0.0) * w)[None]
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n",))
+def kmeans_step(points, centers, weights, *, tile_n=TILE_N):
+    """Pallas-tiled weighted Lloyd's step.  Semantics == ref.kmeans_step_ref.
+
+    points (n, d) f32, centers (k, d) f32, weights (n,) f32 with n a
+    multiple of tile_n (pad with weight-0 rows).  Returns (sums (k, d),
+    counts (k,), inertia ()).
+    """
+    n, d = points.shape
+    k, _ = centers.shape
+    if n % tile_n != 0:
+        raise ValueError(f"n={n} must be a multiple of tile_n={tile_n}")
+    grid = (n // tile_n,)
+
+    sums, counts, inertia = pl.pallas_call(
+        _kmeans_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_n, d), lambda i: (i, 0)),   # stream X tiles
+            pl.BlockSpec((k, d), lambda i: (0, 0)),        # centers resident
+            pl.BlockSpec((tile_n,), lambda i: (i,)),       # weight tiles
+        ],
+        out_specs=[
+            pl.BlockSpec((k, d), lambda i: (0, 0)),        # carried accum
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, d), jnp.float32),
+            jax.ShapeDtypeStruct((k,), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+        ],
+        interpret=True,
+    )(points, centers, weights)
+    return sums, counts, inertia[0]

@@ -1,0 +1,109 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness).
+
+Every kernel in this package has an exact (up to float associativity)
+counterpart here; pytest asserts allclose between the two across
+hypothesis-driven shape/seed sweeps.  These are also the semantics the
+Rust coordinator assumes when it invokes the AOT artifacts.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def kmeans_step_ref(points, centers, weights):
+    """One weighted Lloyd's assignment+accumulation step.
+
+    Args:
+      points:  (n, d) f32
+      centers: (k, d) f32
+      weights: (n,)  f32 -- 1.0 for live rows, 0.0 for padding
+
+    Returns:
+      sums:    (k, d) f32 -- per-cluster weighted coordinate sums
+      counts:  (k,)   f32 -- per-cluster weighted row counts
+      inertia: ()     f32 -- weighted sum of squared distance to the
+                             assigned (nearest) center
+    """
+    # ||x - c||^2 = ||x||^2 - 2 x.c + ||c||^2   (MXU-friendly form)
+    x2 = jnp.sum(points * points, axis=1, keepdims=True)          # (n, 1)
+    c2 = jnp.sum(centers * centers, axis=1)[None, :]              # (1, k)
+    d2 = x2 - 2.0 * points @ centers.T + c2                       # (n, k)
+    assign = jnp.argmin(d2, axis=1)                               # (n,)
+    best = jnp.min(d2, axis=1)                                    # (n,)
+    onehot = jnp.asarray(
+        assign[:, None] == jnp.arange(centers.shape[0])[None, :],
+        dtype=points.dtype,
+    ) * weights[:, None]                                          # (n, k)
+    sums = onehot.T @ points                                      # (k, d)
+    counts = jnp.sum(onehot, axis=0)                              # (k,)
+    inertia = jnp.sum(jnp.maximum(best, 0.0) * weights)
+    return sums, counts, inertia
+
+
+def split_scan_ref(labels_onehot, valid):
+    """Best single split of a sorted label sequence by information gain.
+
+    The sequence is assumed sorted by the (implicit) feature; a split at
+    position i sends rows [0, i] left and (i, n) right.  Gain is parent
+    entropy minus the size-weighted child entropies (base-2, as in CART
+    with the entropy impurity).  Padding rows have valid == 0 and must sit
+    at the tail.
+
+    Args:
+      labels_onehot: (n, c) f32 one-hot class labels (zero rows for padding)
+      valid:         (n,)   f32 -- 1.0 live, 0.0 padding
+
+    Returns:
+      best_gain: () f32 -- maximum information gain over all splits
+      best_idx:  () f32 -- split position achieving it (last row of the
+                           left child), as f32 for artifact uniformity
+    """
+    eps = jnp.asarray(1e-12, labels_onehot.dtype)
+
+    def entropy(h, n):
+        p = h / jnp.maximum(n, eps)[..., None]
+        return -jnp.sum(jnp.where(p > 0, p * jnp.log2(p + eps), 0.0), axis=-1)
+
+    total = jnp.sum(labels_onehot, axis=0)                        # (c,)
+    n_total = jnp.sum(valid)
+    parent = entropy(total[None, :], n_total[None])[0]
+
+    left = jnp.cumsum(labels_onehot, axis=0)                      # (n, c)
+    n_left = jnp.cumsum(valid)                                    # (n,)
+    right = total[None, :] - left
+    n_right = n_total - n_left
+    h_l = entropy(left, n_left)
+    h_r = entropy(right, n_right)
+    gain = parent - (n_left * h_l + n_right * h_r) / jnp.maximum(n_total, eps)
+    # A split must leave at least one row on each side and be a live row.
+    ok = (valid > 0) & (n_right > 0)
+    gain = jnp.where(ok, gain, -jnp.inf)
+    best_idx = jnp.argmax(gain)
+    return gain[best_idx], best_idx.astype(labels_onehot.dtype)
+
+
+def delta_stat_ref(centers_a, centers_b, live_a, live_b):
+    """The paper's cluster-movement statistic (Section 7.1):
+
+        delta_j = sum_n  min_m || a_{j,n} - a_{j+1,m} ||^2
+
+    summed over live centers of window j, min over live centers of j+1.
+    """
+    d2 = jnp.sum((centers_a[:, None, :] - centers_b[None, :, :]) ** 2, axis=-1)
+    big = jnp.asarray(3.0e38, centers_a.dtype)
+    d2 = jnp.where(live_b[None, :] > 0, d2, big)
+    mins = jnp.min(d2, axis=1)
+    return jnp.sum(jnp.where(live_a > 0, mins, 0.0))
+
+
+def score_ref(x, centers, sigma2, theta, lam, live):
+    """The paper's emergent-behaviour score (Section 7.1):
+
+        rho_k(x) = theta_k * exp(-lam_k^2 ||x - a_k||^2 / (2 sigma_k^2))
+        rho(x)   = max_k rho_k(x)        (over live emergent clusters k)
+    """
+    d2 = jnp.sum((x[:, None, :] - centers[None, :, :]) ** 2, axis=-1)  # (n,k)
+    z = -(lam[None, :] ** 2) * d2 / (2.0 * jnp.maximum(sigma2, 1e-12)[None, :])
+    rho_k = theta[None, :] * jnp.exp(z)
+    rho_k = jnp.where(live[None, :] > 0, rho_k, 0.0)
+    return jnp.max(rho_k, axis=1)

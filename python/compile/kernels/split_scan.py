@@ -1,0 +1,134 @@
+"""L1 Pallas kernel: blocked entropy-gain scan for Terasplit.
+
+Terasplit (paper section 6.2) computes the single best CART split of a
+label sequence that Terasort has already ordered by key.  The scan is a
+running class histogram: at split position i the left child holds the
+prefix counts, the right child the complement, and the information gain is
+
+    gain(i) = H(total) - (n_l * H(left) + n_r * H(right)) / n.
+
+Hardware adaptation: a GPU version would do a device-wide prefix sum
+(decoupled-lookback) across threadblocks.  TPUs run the Pallas grid
+*sequentially*, so the cross-block carry is free: the running histogram is
+an output block pinned to (0, 0) that each grid step reads, extends with
+an in-block cumsum, and writes back.  The per-position entropy evaluation
+is fully vectorised on the VPU (8x128 lanes); there is no MXU work --
+this kernel is bandwidth-bound, and the roofline discussion in
+EXPERIMENTS.md treats it as such.
+
+The kernel needs the *total* histogram before the scan starts; the L2
+wrapper computes it with one cheap jnp reduction and passes it in, keeping
+the kernel single-pass.
+
+VMEM per grid step (TILE=2048, c=8, f32): labels 64 KiB, prefix/right
+64 KiB each, gains 8 KiB, carry c*4 B  ==> ~210 KiB.
+
+interpret=True: see kernels/kmeans.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 2048
+NEG = -3.0e38  # sentinel for masked gains (finite to keep HLO max simple)
+
+
+def _entropy(h, n, eps):
+    p = h / jnp.maximum(n, eps)[..., None]
+    return -jnp.sum(jnp.where(p > 0, p * jnp.log2(p + eps), 0.0), axis=-1)
+
+
+def _split_kernel(lab_ref, val_ref, tot_ref, ntot_ref,
+                  gain_ref, idx_ref, hcarry_ref, ncarry_ref):
+    """One grid step: TILE one-hot label rows; emits per-block best gain."""
+    step = pl.program_id(0)
+    eps = jnp.float32(1e-12)
+
+    lab = lab_ref[...]                   # (TILE, c) one-hot f32
+    val = val_ref[...]                   # (TILE,)
+    total = tot_ref[...]                 # (c,)
+    n_total = ntot_ref[0]                # ()
+
+    @pl.when(step == 0)
+    def _init():
+        hcarry_ref[...] = jnp.zeros_like(hcarry_ref)
+        ncarry_ref[...] = jnp.zeros_like(ncarry_ref)
+        gain_ref[...] = jnp.full_like(gain_ref, NEG)
+        idx_ref[...] = jnp.zeros_like(idx_ref)
+
+    h0 = hcarry_ref[...]                 # (c,) histogram before this block
+    n0 = ncarry_ref[0]                   # ()
+
+    left = h0[None, :] + jnp.cumsum(lab, axis=0)      # (TILE, c)
+    n_left = n0 + jnp.cumsum(val)                     # (TILE,)
+    right = total[None, :] - left
+    n_right = n_total - n_left
+
+    parent = _entropy(total[None, :], n_total[None], eps)[0]
+    h_l = _entropy(left, n_left, eps)
+    h_r = _entropy(right, n_right, eps)
+    gain = parent - (n_left * h_l + n_right * h_r) / jnp.maximum(n_total, eps)
+    ok = (val > 0) & (n_right > 0)
+    gain = jnp.where(ok, gain, NEG)
+
+    tile = lab.shape[0]
+    local = jnp.argmax(gain)
+    best = gain[local]
+
+    # Keep the running (gain, idx) argmax across blocks in the carried
+    # outputs; positions are global row indices.
+    prev = gain_ref[0]
+    take = best > prev
+    gain_ref[...] = jnp.where(take, best, prev)[None]
+    idx_ref[...] = jnp.where(
+        take, jnp.float32(step * tile) + local.astype(jnp.float32), idx_ref[0]
+    )[None]
+
+    hcarry_ref[...] = left[tile - 1, :]
+    ncarry_ref[...] = n_left[tile - 1][None]
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def split_scan(labels_onehot, valid, *, tile=TILE):
+    """Pallas blocked split scan.  Semantics == ref.split_scan_ref.
+
+    labels_onehot (n, c) f32 one-hot rows (zeros for padding), valid (n,)
+    f32, n a multiple of `tile` and padding confined to the tail.
+    Returns (best_gain (), best_idx () as f32).
+    """
+    n, c = labels_onehot.shape
+    if n % tile != 0:
+        raise ValueError(f"n={n} must be a multiple of tile={tile}")
+    grid = (n // tile,)
+
+    total = jnp.sum(labels_onehot, axis=0)            # (c,) cheap L2 pre-pass
+    n_total = jnp.sum(valid)[None]                    # (1,)
+
+    gain, idx, _hc, _nc = pl.pallas_call(
+        _split_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, c), lambda i: (i, 0)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),       # best gain (carried)
+            pl.BlockSpec((1,), lambda i: (0,)),       # best idx  (carried)
+            pl.BlockSpec((c,), lambda i: (0,)),       # histogram carry
+            pl.BlockSpec((1,), lambda i: (0,)),       # count carry
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+            jax.ShapeDtypeStruct((c,), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+        ],
+        interpret=True,
+    )(labels_onehot, valid, total, n_total)
+    return gain[0], idx[0]

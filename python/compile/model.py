@@ -1,0 +1,115 @@
+"""L2: the JAX compute graphs the Rust coordinator invokes via PJRT.
+
+Each public function here is lowered once by aot.py to an HLO-text
+artifact with *fixed* shapes (the AOT contract below); the Rust runtime
+pads its inputs to those shapes.  The hot functions call the L1 Pallas
+kernels so the kernels lower into the same HLO module.
+
+AOT contract (all f32):
+
+  kmeans_step : points (N, D), centers (K, D), weights (N,)
+                -> (sums (K, D), counts (K,), inertia ())
+  split_gain  : labels (N2,) int32-as-f32 class ids in [0, C), valid (N2,)
+                -> (best_gain (), best_idx ())
+  delta_stat  : centers_a (K, D), centers_b (K, D), live_a (K,), live_b (K,)
+                -> (delta ())
+  score       : x (B, D), centers (K, D), sigma2 (K,), theta (K,), lam (K,),
+                live (K,) -> (rho (B,))
+
+with N = 4096, D = 16, K = 32, N2 = 32768, C = 8, B = 256
+(runtime constants mirrored in rust/src/runtime/artifact.rs).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import kmeans_step as _kmeans_kernel
+from .kernels import split_scan as _split_kernel
+
+# The artifact shapes.  Keep in sync with rust/src/runtime/artifact.rs.
+N_POINTS = 4096
+N_DIM = 16
+N_CLUSTERS = 32
+N_LABELS = 32768
+N_CLASSES = 8
+N_SCORE_BATCH = 256
+
+
+def kmeans_step(points, centers, weights):
+    """One Lloyd's step over a padded point block (L1 kernel inside)."""
+    return _kmeans_kernel(points, centers, weights)
+
+
+def split_gain(class_ids, valid):
+    """Terasplit: best entropy split of a key-sorted label sequence.
+
+    class_ids are integer class labels carried as f32 (PJRT artifact
+    uniformity); they are one-hot encoded here so the kernel sees the
+    (N2, C) layout it tiles over.
+    """
+    ids = class_ids.astype(jnp.int32)
+    onehot = jnp.asarray(
+        ids[:, None] == jnp.arange(N_CLASSES)[None, :], dtype=jnp.float32
+    ) * valid[:, None]
+    return _split_kernel(onehot, valid)
+
+
+def delta_stat(centers_a, centers_b, live_a, live_b):
+    """Cluster-movement statistic delta_j (paper section 7.1).
+
+    Small (K x K) problem: pure L2, no kernel -- XLA fuses the whole
+    thing into a couple of loops; a Pallas kernel would only add
+    dispatch overhead.
+    """
+    d2 = jnp.sum((centers_a[:, None, :] - centers_b[None, :, :]) ** 2, axis=-1)
+    big = jnp.asarray(3.0e38, jnp.float32)
+    d2 = jnp.where(live_b[None, :] > 0, d2, big)
+    mins = jnp.min(d2, axis=1)
+    return jnp.sum(jnp.where(live_a > 0, mins, 0.0))
+
+
+def score(x, centers, sigma2, theta, lam, live):
+    """Emergent-behaviour score rho(x) = max_k rho_k(x) (paper 7.1)."""
+    d2 = jnp.sum((x[:, None, :] - centers[None, :, :]) ** 2, axis=-1)
+    z = -(lam[None, :] ** 2) * d2 / (2.0 * jnp.maximum(sigma2, 1e-12)[None, :])
+    rho_k = theta[None, :] * jnp.exp(z)
+    rho_k = jnp.where(live[None, :] > 0, rho_k, 0.0)
+    return jnp.max(rho_k, axis=1)
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+# name -> (fn, example_args); consumed by aot.py.
+ARTIFACTS = {
+    "kmeans_step": (
+        kmeans_step,
+        (_spec(N_POINTS, N_DIM), _spec(N_CLUSTERS, N_DIM), _spec(N_POINTS)),
+    ),
+    "split_gain": (
+        split_gain,
+        (_spec(N_LABELS), _spec(N_LABELS)),
+    ),
+    "delta_stat": (
+        delta_stat,
+        (
+            _spec(N_CLUSTERS, N_DIM),
+            _spec(N_CLUSTERS, N_DIM),
+            _spec(N_CLUSTERS),
+            _spec(N_CLUSTERS),
+        ),
+    ),
+    "score": (
+        score,
+        (
+            _spec(N_SCORE_BATCH, N_DIM),
+            _spec(N_CLUSTERS, N_DIM),
+            _spec(N_CLUSTERS),
+            _spec(N_CLUSTERS),
+            _spec(N_CLUSTERS),
+            _spec(N_CLUSTERS),
+        ),
+    ),
+}

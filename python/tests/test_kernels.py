@@ -1,0 +1,260 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (the CORE signal).
+
+hypothesis sweeps shapes/seeds; numpy.testing.assert_allclose is the
+equality judge.  Everything runs under interpret=True on CPU.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+import jax.numpy as jnp
+
+# NB: compile.kernels.__init__ re-exports the kernel *functions*, which
+# shadows the submodule names in the package namespace ("import x.y as z"
+# prefers the attribute); importlib bypasses the shadowing.
+import importlib
+
+kmeans = importlib.import_module("compile.kernels.kmeans")
+ref = importlib.import_module("compile.kernels.ref")
+split_scan = importlib.import_module("compile.kernels.split_scan")
+
+RNG = np.random.default_rng
+
+
+# ----------------------------------------------------------------- kmeans
+
+def _kmeans_case(n, d, k, seed, pad_frac=0.0):
+    rng = RNG(seed)
+    pts = rng.normal(size=(n, d)).astype(np.float32)
+    ctr = rng.normal(size=(k, d)).astype(np.float32)
+    w = np.ones(n, np.float32)
+    n_pad = int(n * pad_frac)
+    if n_pad:
+        w[-n_pad:] = 0.0
+        pts[-n_pad:] = 1e6  # poison padding rows: must not leak into outputs
+    return jnp.asarray(pts), jnp.asarray(ctr), jnp.asarray(w)
+
+
+@pytest.mark.parametrize("n,d,k,tile", [
+    (512, 16, 32, 512),
+    (1024, 16, 32, 512),
+    (4096, 16, 32, 512),
+    (2048, 8, 4, 256),
+    (256, 2, 2, 128),
+])
+def test_kmeans_matches_ref(n, d, k, tile):
+    pts, ctr, w = _kmeans_case(n, d, k, seed=n + d + k)
+    got = kmeans.kmeans_step(pts, ctr, w, tile_n=tile)
+    want = ref.kmeans_step_ref(pts, ctr, w)
+    for g, r in zip(got, want):
+        assert_allclose(np.asarray(g), np.asarray(r), rtol=2e-5, atol=2e-5)
+
+
+def test_kmeans_padding_rows_ignored():
+    pts, ctr, w = _kmeans_case(1024, 16, 8, seed=7, pad_frac=0.25)
+    sums, counts, inertia = kmeans.kmeans_step(pts, ctr, w, tile_n=256)
+    assert float(jnp.sum(counts)) == pytest.approx(768.0)
+    assert np.isfinite(float(inertia))
+    assert float(inertia) < 1e8  # poisoned 1e6 rows would explode this
+
+def test_kmeans_counts_conserve_weight():
+    pts, ctr, w = _kmeans_case(512, 4, 4, seed=3)
+    w = jnp.asarray(RNG(3).uniform(0, 2, size=512).astype(np.float32))
+    sums, counts, _ = kmeans.kmeans_step(pts, ctr, w, tile_n=128)
+    assert_allclose(float(jnp.sum(counts)), float(jnp.sum(w)), rtol=1e-5)
+
+
+def test_kmeans_single_cluster_sums_everything():
+    pts, _, w = _kmeans_case(256, 4, 1, seed=11)
+    ctr = jnp.zeros((1, 4), jnp.float32)
+    sums, counts, _ = kmeans.kmeans_step(pts, ctr, w, tile_n=128)
+    assert_allclose(np.asarray(sums[0]), np.asarray(jnp.sum(pts, axis=0)),
+                    rtol=1e-4, atol=1e-4)
+    assert float(counts[0]) == 256.0
+
+
+def test_kmeans_rejects_ragged():
+    pts, ctr, w = _kmeans_case(500, 4, 2, seed=1)
+    with pytest.raises(ValueError):
+        kmeans.kmeans_step(pts, ctr, w, tile_n=256)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_tiles=st.integers(1, 6),
+    tile=st.sampled_from([128, 256, 512]),
+    d=st.sampled_from([2, 4, 8, 16]),
+    k=st.sampled_from([1, 2, 5, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+    pad=st.sampled_from([0.0, 0.1, 0.5]),
+)
+def test_kmeans_hypothesis_sweep(n_tiles, tile, d, k, seed, pad):
+    n = n_tiles * tile
+    pts, ctr, w = _kmeans_case(n, d, k, seed, pad_frac=pad)
+    got = kmeans.kmeans_step(pts, ctr, w, tile_n=tile)
+    want = ref.kmeans_step_ref(pts, ctr, w)
+    for g, r in zip(got, want):
+        assert_allclose(np.asarray(g), np.asarray(r), rtol=3e-5, atol=3e-5)
+
+
+# ------------------------------------------------------------- split scan
+
+def _split_case(n, c, seed, n_valid=None, sorted_labels=True):
+    rng = RNG(seed)
+    n_valid = n if n_valid is None else n_valid
+    ids = rng.integers(0, c, size=n_valid)
+    if sorted_labels:
+        # A feature-sorted stream: labels correlate with position, which is
+        # what gives a nontrivial best split.
+        ids = np.sort(ids)
+    ids = np.concatenate([ids, np.zeros(n - n_valid, np.int64)])
+    valid = np.concatenate(
+        [np.ones(n_valid, np.float32), np.zeros(n - n_valid, np.float32)]
+    )
+    onehot = np.zeros((n, c), np.float32)
+    onehot[np.arange(n_valid), ids[:n_valid]] = 1.0
+    return jnp.asarray(onehot), jnp.asarray(valid)
+
+
+@pytest.mark.parametrize("n,c,tile", [
+    (2048, 8, 2048),
+    (4096, 8, 2048),
+    (4096, 2, 1024),
+    (8192, 4, 2048),
+])
+def test_split_matches_ref(n, c, tile):
+    oh, valid = _split_case(n, c, seed=n + c)
+    g_got, i_got = split_scan.split_scan(oh, valid, tile=tile)
+    g_want, i_want = ref.split_scan_ref(oh, valid)
+    assert_allclose(float(g_got), float(g_want), rtol=1e-4, atol=1e-5)
+    # Positions may differ only between equal-gain ties.
+    if int(i_got) != int(i_want):
+        gains = _bruteforce_gains(np.asarray(oh), np.asarray(valid))
+        assert_allclose(gains[int(i_got)], gains[int(i_want)], atol=1e-5)
+
+
+def _bruteforce_gains(onehot, valid):
+    """O(n*c) numpy reimplementation used as a second, independent oracle."""
+    n = onehot.shape[0]
+    total = onehot.sum(axis=0)
+    n_tot = valid.sum()
+
+    def H(h):
+        s = h.sum()
+        if s <= 0:
+            return 0.0
+        p = h / s
+        p = p[p > 0]
+        return float(-(p * np.log2(p)).sum())
+
+    parent = H(total)
+    gains = np.full(n, -np.inf)
+    left = np.zeros_like(total)
+    n_l = 0.0
+    for i in range(n):
+        left = left + onehot[i]
+        n_l += valid[i]
+        n_r = n_tot - n_l
+        if valid[i] > 0 and n_r > 0:
+            gains[i] = parent - (n_l * H(left) + n_r * H(total - left)) / n_tot
+    return gains
+
+
+def test_split_perfectly_separable():
+    # 0s then 1s: the boundary split has gain == parent entropy (1 bit).
+    n, c = 2048, 2
+    ids = np.concatenate([np.zeros(n // 2, int), np.ones(n // 2, int)])
+    onehot = np.eye(c, dtype=np.float32)[ids]
+    valid = np.ones(n, np.float32)
+    gain, idx = split_scan.split_scan(
+        jnp.asarray(onehot), jnp.asarray(valid), tile=1024
+    )
+    assert_allclose(float(gain), 1.0, atol=1e-5)
+    assert int(idx) == n // 2 - 1
+
+
+def test_split_pure_stream_no_gain():
+    n, c = 2048, 4
+    onehot = np.zeros((n, c), np.float32)
+    onehot[:, 2] = 1.0
+    valid = np.ones(n, np.float32)
+    gain, _ = split_scan.split_scan(jnp.asarray(onehot), jnp.asarray(valid))
+    assert float(gain) == pytest.approx(0.0, abs=1e-5)
+
+
+def test_split_with_padding_tail():
+    oh, valid = _split_case(4096, 4, seed=5, n_valid=3000)
+    g_got, i_got = split_scan.split_scan(oh, valid, tile=1024)
+    g_want, _ = ref.split_scan_ref(oh, valid)
+    assert_allclose(float(g_got), float(g_want), rtol=1e-4, atol=1e-5)
+    assert int(i_got) < 3000  # never split inside the padding
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    blocks=st.integers(1, 5),
+    tile=st.sampled_from([512, 1024, 2048]),
+    c=st.sampled_from([2, 3, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+    frac=st.floats(0.3, 1.0),
+    sorted_labels=st.booleans(),
+)
+def test_split_hypothesis_sweep(blocks, tile, c, seed, frac, sorted_labels):
+    n = blocks * tile
+    n_valid = max(2, int(n * frac))
+    oh, valid = _split_case(n, c, seed, n_valid, sorted_labels)
+    g_got, _ = split_scan.split_scan(oh, valid, tile=tile)
+    g_want, _ = ref.split_scan_ref(oh, valid)
+    got, want = float(g_got), float(g_want)
+    if not (np.isinf(want) and np.isinf(got)):
+        assert_allclose(got, want, rtol=2e-4, atol=1e-5)
+
+
+# ----------------------------------------------------- delta / score refs
+
+def test_delta_stat_identical_windows_is_zero():
+    rng = RNG(0)
+    c = jnp.asarray(rng.normal(size=(8, 4)).astype(np.float32))
+    live = jnp.ones(8, jnp.float32)
+    assert float(ref.delta_stat_ref(c, c, live, live)) == pytest.approx(0.0)
+
+
+def test_delta_stat_translation():
+    rng = RNG(1)
+    a = jnp.asarray(rng.normal(size=(4, 3)).astype(np.float32))
+    b = a + 2.0  # nearest-neighbour distance <= 12 = ||(2,2,2)||^2 each
+    live = jnp.ones(4, jnp.float32)
+    d = float(ref.delta_stat_ref(a, b, live, live))
+    assert 0.0 < d <= 4 * 12.0 + 1e-4
+
+
+def test_delta_stat_dead_centers_ignored():
+    a = jnp.asarray(np.zeros((4, 2), np.float32))
+    b = jnp.asarray(np.full((4, 2), 100.0, np.float32))
+    b = b.at[0].set(0.0)
+    live_a = jnp.asarray([1.0, 0, 0, 0], jnp.float32)
+    live_b = jnp.ones(4, jnp.float32)
+    # only a[0] counts; nearest live b center is b[0] at distance 0
+    assert float(ref.delta_stat_ref(a, b, live_a, live_b)) == pytest.approx(0.0)
+
+
+def test_score_peak_at_center():
+    ctr = jnp.asarray(np.zeros((2, 3), np.float32))
+    x = jnp.asarray(np.zeros((1, 3), np.float32))
+    s2 = jnp.ones(2, jnp.float32)
+    th = jnp.asarray([0.7, 0.3], jnp.float32)
+    lam = jnp.ones(2, jnp.float32)
+    live = jnp.ones(2, jnp.float32)
+    r = ref.score_ref(x, ctr, s2, th, lam, live)
+    assert float(r[0]) == pytest.approx(0.7)  # max_k theta_k at distance 0
+
+
+def test_score_decays_with_distance():
+    ctr = jnp.asarray(np.zeros((1, 2), np.float32))
+    xs = jnp.asarray(np.array([[0, 0], [1, 0], [3, 0]], np.float32))
+    one = jnp.ones(1, jnp.float32)
+    r = np.asarray(ref.score_ref(xs, ctr, one, one, one, one))
+    assert r[0] > r[1] > r[2] > 0

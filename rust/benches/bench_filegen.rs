@@ -1,0 +1,54 @@
+//! §6.3 file-generation reproduction: "The file generation required 212
+//! seconds per file per node for Hadoop, which is a throughput of
+//! 440 Mb/s per node.  For Sphere, the file generation required 68
+//! seconds per node, which is a throughput of 1.1 Gb/s per node."
+//!
+//! Also times the REAL record generator + storage write path at MB
+//! scale (the same code the e2e example runs).
+//!
+//!     cargo bench --bench bench_filegen
+
+use sector_sphere::bench::{time_fn, Report};
+use sector_sphere::config::SimConfig;
+use sector_sphere::hadoop::simulate_hadoop_filegen;
+use sector_sphere::mining::terasort::generate_records;
+use sector_sphere::sector::{MemStorage, Storage};
+use sector_sphere::sphere::simjob::simulate_sphere_filegen;
+use sector_sphere::util::bytes::{fmt_rate_bytes_per_sec, GB};
+
+fn main() {
+    let bytes = 10.0 * GB as f64;
+    let cfg = SimConfig::lan_default();
+    let sphere = simulate_sphere_filegen(&cfg, bytes);
+    let hadoop = simulate_hadoop_filegen(&cfg, bytes);
+
+    let cols = vec!["Sphere".to_string(), "Hadoop".to_string(), "ratio".to_string()];
+    let mut r = Report::new("§6.3 — file generation, 10 GB per node (seconds)", &cols);
+    r.row("paper", vec![68.0, 212.0, 212.0 / 68.0]);
+    r.row("sim", vec![sphere, hadoop, hadoop / sphere]);
+    r.check_band("filegen", &[68.0, 212.0], &[sphere, hadoop], 0.25);
+    r.note(&format!(
+        "implied throughput: sphere {} (paper 1.1 Gb/s), hadoop {} (paper 440 Mb/s)",
+        fmt_rate_bytes_per_sec(bytes / sphere),
+        fmt_rate_bytes_per_sec(bytes / hadoop)
+    ));
+    println!("{}", r.render());
+
+    // Real generator microbench: how fast this implementation actually
+    // synthesizes + stores gensort records (hot path of the examples).
+    let n = 100_000; // 10 MB
+    let t_gen = time_fn("generate_records(100k)", 1, 5, || generate_records(n, 42));
+    let data = generate_records(n, 42);
+    let store = MemStorage::new();
+    let mut i = 0u32;
+    let t_put = time_fn("mem put(10MB)", 1, 5, || {
+        i += 1;
+        store.put(&format!("f{i}"), &data).unwrap()
+    });
+    println!(
+        "real path: generate {} ; store {}",
+        fmt_rate_bytes_per_sec(10.0e6 / t_gen.secs.mean),
+        fmt_rate_bytes_per_sec(10.0e6 / t_put.secs.mean)
+    );
+    assert!(hadoop / sphere > 2.0, "Sphere must generate >2x faster");
+}

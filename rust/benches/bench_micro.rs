@@ -1,0 +1,130 @@
+//! Hot-path microbenchmarks (the §Perf working set): segmentation,
+//! scheduler assignment, shuffle bucketing, record sort, Chord lookup,
+//! netsim event loop, GMP codec.  Used before/after every optimization
+//! (EXPERIMENTS.md §Perf).
+//!
+//!     cargo bench --bench bench_micro
+
+use sector_sphere::bench::{black_box, print_timing, time_fn};
+use sector_sphere::mining::terasort::{generate_records, key_bucket, RECORD_BYTES};
+use sector_sphere::routing::chord::ChordRing;
+use sector_sphere::sector::RecordIndex;
+use sector_sphere::sim::netsim::NetSim;
+use sector_sphere::sphere::{segment_stream, Scheduler, Stream, StreamFile};
+use sector_sphere::transport::gmp::{decode, encode, Datagram, DatagramKind};
+use sector_sphere::util::rng::Pcg64;
+
+fn main() {
+    println!("=== hot-path microbenches ===");
+
+    // --- segmentation: 64 files x 10k records ---
+    let stream = Stream {
+        files: (0..64)
+            .map(|i| StreamFile {
+                name: format!("f{i:03}.dat"),
+                size_bytes: 1_000_000,
+                n_records: 10_000,
+                locations: vec![i % 8],
+            })
+            .collect(),
+    };
+    let idx = RecordIndex::fixed(100, 1_000_000);
+    let t = time_fn("segment_stream 64x10k records", 3, 20, || {
+        segment_stream(&stream, 8, 64_000, 256_000, |_| Some(idx.clone()))
+    });
+    print_timing(&t);
+
+    // --- scheduler: assign/complete 1024 segments over 8 nodes ---
+    let segs = segment_stream(&stream, 8, 32_000, 64_000, |_| Some(idx.clone()));
+    println!("  ({} segments)", segs.len());
+    let t = time_fn("scheduler drain (locality on)", 3, 20, || {
+        let mut sched = Scheduler::new(segs.clone(), true);
+        let mut done = 0;
+        while let Some(s) = sched.assign((done % 8) as u32) {
+            sched.complete(&s);
+            done += 1;
+        }
+        done
+    });
+    print_timing(&t);
+
+    // --- bucket partitioning: 100k records ---
+    let data = generate_records(100_000, 1);
+    let t = time_fn("key_bucket over 100k records", 3, 20, || {
+        let mut acc = 0u64;
+        for rec in data.chunks_exact(RECORD_BYTES) {
+            acc += key_bucket(&rec[..10], 64) as u64;
+        }
+        acc
+    });
+    print_timing(&t);
+
+    // --- record sort: 100k records by 10-byte key ---
+    let t = time_fn("sort 100k records by key (memcmp)", 1, 10, || {
+        let mut recs: Vec<&[u8]> = data.chunks_exact(RECORD_BYTES).collect();
+        recs.sort_by(|a, b| a[..10].cmp(&b[..10]));
+        recs.len()
+    });
+    print_timing(&t);
+    // the optimized TeraSortOp path: precomputed u128 keys + unstable sort
+    let t = time_fn("sort 100k records by key (u128 keyed)", 1, 10, || {
+        let mut keyed: Vec<(u128, &[u8])> = data
+            .chunks_exact(RECORD_BYTES)
+            .map(|r| {
+                let mut k = [0u8; 16];
+                k[..10].copy_from_slice(&r[..10]);
+                (u128::from_be_bytes(k), r)
+            })
+            .collect();
+        keyed.sort_unstable_by_key(|(k, _)| *k);
+        keyed.len()
+    });
+    print_timing(&t);
+
+    // --- chord lookup: 256-node ring ---
+    let mut rng = Pcg64::new(5);
+    let ids: Vec<u64> = (0..256).map(|_| rng.next_u64()).collect();
+    let ring = ChordRing::build(&ids);
+    let keys: Vec<u64> = (0..1000).map(|_| rng.next_u64()).collect();
+    let t = time_fn("chord lookup x1000 (256 nodes)", 3, 20, || {
+        let mut hops = 0u32;
+        for &k in &keys {
+            hops += ring.lookup(ids[0], k).unwrap().1;
+        }
+        hops
+    });
+    print_timing(&t);
+
+    // --- netsim: 8-node all-to-all flow completion ---
+    let t = time_fn("netsim 56-flow all-to-all to idle", 3, 20, || {
+        let mut net = NetSim::new();
+        let links: Vec<_> = (0..16).map(|_| net.add_link(1e9)).collect();
+        for i in 0..8usize {
+            for j in 0..8usize {
+                if i != j {
+                    net.start_flow(&[links[i], links[8 + j]], 1e8, 5e8);
+                }
+            }
+        }
+        net.run_to_idle()
+    });
+    print_timing(&t);
+
+    // --- GMP codec ---
+    let d = Datagram {
+        src: 1,
+        dst: 2,
+        seq: 42,
+        kind: DatagramKind::Msg,
+        payload: vec![7u8; 256],
+    };
+    let t = time_fn("gmp encode+decode x1000", 3, 20, || {
+        for _ in 0..1000 {
+            let bytes = encode(black_box(&d));
+            black_box(decode(&bytes).unwrap());
+        }
+    });
+    print_timing(&t);
+
+    println!("micro OK");
+}

@@ -1,0 +1,78 @@
+//! Table 2 reproduction: single-rack (LAN) Terasort + Terasplit,
+//! Sphere vs Hadoop, 10 GB/node over 1..8 nodes.
+//!
+//!     cargo bench --bench bench_table2
+
+use sector_sphere::bench::Report;
+use sector_sphere::config::SimConfig;
+use sector_sphere::hadoop::simulate_hadoop_row;
+use sector_sphere::sphere::simjob::simulate_sphere_row;
+use sector_sphere::topology::Testbed;
+use sector_sphere::util::bytes::GB;
+
+// Paper Table 2 rows (seconds), nodes 1..8.
+const PAPER_HADOOP_SORT: [f64; 8] = [645.0, 766.0, 768.0, 773.0, 815.0, 882.0, 901.0, 1000.0];
+const PAPER_SPHERE_SORT: [f64; 8] = [408.0, 409.0, 410.0, 429.0, 430.0, 436.0, 440.0, 443.0];
+const PAPER_HADOOP_SPLIT: [f64; 8] =
+    [141.0, 266.0, 410.0, 544.0, 671.0, 901.0, 1133.0, 1250.0];
+const PAPER_SPHERE_SPLIT: [f64; 8] = [96.0, 221.0, 350.0, 462.0, 560.0, 663.0, 754.0, 855.0];
+
+fn main() {
+    let bytes = 10.0 * GB as f64;
+    let cfg = SimConfig::lan_default();
+    let cols: Vec<String> = (1..=8).map(|n| format!("n={n}")).collect();
+
+    let mut sphere_sort = Vec::new();
+    let mut hadoop_sort = Vec::new();
+    let mut sphere_split = Vec::new();
+    let mut hadoop_split = Vec::new();
+    for n in 1..=8 {
+        let t = Testbed::lan_testbed(n);
+        let s = simulate_sphere_row(&t, &cfg, bytes);
+        let h = simulate_hadoop_row(&t, &cfg, bytes);
+        sphere_sort.push(s.terasort_secs);
+        sphere_split.push(s.terasplit_secs);
+        hadoop_sort.push(h.terasort_secs);
+        hadoop_split.push(h.terasplit_secs);
+    }
+    let ratio =
+        |a: &[f64], b: &[f64]| -> Vec<f64> { a.iter().zip(b).map(|(x, y)| x / y).collect() };
+
+    let mut r = Report::new("Table 2 — LAN Terasort/Terasplit (10 GB/node, 8-node rack)", &cols);
+    r.row("Hadoop Terasort (paper)", PAPER_HADOOP_SORT.to_vec());
+    r.row("Hadoop Terasort (sim)", hadoop_sort.clone());
+    r.row("Sphere Terasort (paper)", PAPER_SPHERE_SORT.to_vec());
+    r.row("Sphere Terasort (sim)", sphere_sort.clone());
+    r.row("Hadoop Terasplit (paper)", PAPER_HADOOP_SPLIT.to_vec());
+    r.row("Hadoop Terasplit (sim)", hadoop_split.clone());
+    r.row("Sphere Terasplit (paper)", PAPER_SPHERE_SPLIT.to_vec());
+    r.row("Sphere Terasplit (sim)", sphere_split.clone());
+    r.row(
+        "Speedup sort (paper)",
+        ratio(&PAPER_HADOOP_SORT, &PAPER_SPHERE_SORT),
+    );
+    r.row("Speedup sort (sim)", ratio(&hadoop_sort, &sphere_sort));
+    r.row(
+        "Speedup split (paper)",
+        ratio(&PAPER_HADOOP_SPLIT, &PAPER_SPHERE_SPLIT),
+    );
+    r.row("Speedup split (sim)", ratio(&hadoop_split, &sphere_split));
+
+    r.check_band("hadoop_sort", &PAPER_HADOOP_SORT, &hadoop_sort, 0.25);
+    r.check_band("sphere_sort", &PAPER_SPHERE_SORT, &sphere_sort, 0.25);
+    r.check_band("hadoop_split", &PAPER_HADOOP_SPLIT, &hadoop_split, 0.25);
+    r.check_band("sphere_split", &PAPER_SPHERE_SPLIT, &sphere_split, 0.25);
+    r.note("paper bands: sort speedup 1.6-2.3x, split speedup 1.2-1.5x");
+    let sort_speedups = ratio(&hadoop_sort, &sphere_sort);
+    let split_speedups = ratio(&hadoop_split, &sphere_split);
+    r.note(&format!(
+        "sim bands: sort {:.1}-{:.1}x, split {:.1}-{:.1}x",
+        sort_speedups.iter().cloned().fold(f64::MAX, f64::min),
+        sort_speedups.iter().cloned().fold(f64::MIN, f64::max),
+        split_speedups.iter().cloned().fold(f64::MAX, f64::min),
+        split_speedups.iter().cloned().fold(f64::MIN, f64::max),
+    ));
+    println!("{}", r.render());
+    assert!(sort_speedups.iter().all(|&s| s > 1.0), "Sphere wins sort");
+    assert!(split_speedups.iter().all(|&s| s > 1.0), "Sphere wins split");
+}

@@ -1,0 +1,81 @@
+//! Table 3 reproduction: Angle clustering time vs workload size —
+//! "the time spent clustering using Sphere scales as the number of
+//! files managed by Sector increases."
+//!
+//! The small cells also run for REAL through the full pipeline (Sector
+//! upload -> Sphere feature UDF -> k-means windows); the 1e6/1e8-record
+//! cells use the calibrated cost model (the paper's own numbers come
+//! from a 300,000-file production archive).
+//!
+//!     cargo bench --bench bench_table3
+
+use sector_sphere::bench::Report;
+use sector_sphere::mining::{run_pipeline, simulate_angle_clustering, AngleScenario};
+use sector_sphere::sector::SectorCloud;
+use sector_sphere::util::bytes::fmt_duration_secs;
+
+// Paper Table 3: (records, sector files, seconds).
+const PAPER: [(f64, f64, f64); 4] = [
+    (500.0, 1.0, 1.9),
+    (1000.0, 3.0, 4.2),
+    (1.0e6, 2850.0, 85.0 * 60.0),
+    (1.0e8, 300_000.0, 178.0 * 3600.0),
+];
+
+fn main() {
+    let cols: Vec<String> = PAPER
+        .iter()
+        .map(|(r, f, _)| format!("{r:.0}r/{f:.0}f"))
+        .collect();
+    let paper: Vec<f64> = PAPER.iter().map(|c| c.2).collect();
+    let model: Vec<f64> = PAPER
+        .iter()
+        .map(|(r, f, _)| simulate_angle_clustering(*r, *f))
+        .collect();
+
+    let mut rep = Report::new("Table 3 — Angle clustering time vs workload", &cols);
+    rep.row("paper (s)", paper.clone());
+    rep.row("model (s)", model.clone());
+    rep.check_band("clustering_time", &paper, &model, 0.30);
+    for (i, (r, f, p)) in PAPER.iter().enumerate() {
+        rep.note(&format!(
+            "{:>12} records / {:>7} files: paper {:>10}, model {:>10}",
+            r,
+            f,
+            fmt_duration_secs(*p),
+            fmt_duration_secs(model[i])
+        ));
+    }
+
+    // Real-path spot check: run the two small cells through the actual
+    // Sector+Sphere pipeline and confirm the same scaling direction.
+    let mut real = Vec::new();
+    for (sensors, windows) in [(1u32, 2u64), (3u32, 2u64)] {
+        let cloud = SectorCloud::builder().nodes(4).seed(33).build().unwrap();
+        let scenario = AngleScenario {
+            sensors,
+            sources_per_sensor: 50,
+            windows,
+            packets_per_source: 25,
+            anomalies: vec![],
+            seed: 33,
+            k: 4,
+        };
+        let t0 = std::time::Instant::now();
+        let report = run_pipeline(&cloud, &scenario, None).expect("pipeline");
+        real.push((report.feature_files, t0.elapsed().as_secs_f64()));
+    }
+    rep.note(&format!(
+        "real-path spot check: {} files -> {:.2}s, {} files -> {:.2}s (monotone in files: {})",
+        real[0].0,
+        real[0].1,
+        real[1].0,
+        real[1].1,
+        real[1].1 > real[0].1
+    ));
+    println!("{}", rep.render());
+    assert!(
+        model.windows(2).all(|w| w[0] < w[1]),
+        "time grows with workload"
+    );
+}

@@ -1,0 +1,208 @@
+//! From-scratch micro/macro benchmark harness (no `criterion` offline).
+//!
+//! Two layers:
+//!   * `time_fn` — warmup + timed iterations with mean/std/min, for the
+//!     hot-path microbenches (`bench_micro`);
+//!   * `Report` — aligned paper-style tables comparing "paper" vs
+//!     "measured" rows with a ratio column, used by every table/figure
+//!     bench.  `Report::check_band` encodes the reproduction criterion
+//!     (shape must hold even when absolute numbers differ).
+
+use crate::util::stats::Summary;
+use std::time::Instant;
+
+/// Result of timing one closure.
+#[derive(Clone, Debug)]
+pub struct Timing {
+    pub name: String,
+    pub iters: usize,
+    pub secs: Summary,
+}
+
+impl Timing {
+    pub fn per_iter_ms(&self) -> f64 {
+        self.secs.mean * 1e3
+    }
+}
+
+/// Time `f` for `iters` measured runs after `warmup` unmeasured ones.
+/// The closure's output is black-boxed to keep the optimizer honest.
+pub fn time_fn<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> Timing {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    Timing {
+        name: name.to_string(),
+        iters,
+        secs: Summary::of(&samples).unwrap(),
+    }
+}
+
+/// Optimizer fence (std::hint::black_box is stable since 1.66).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Print a `Timing` in the standard one-line format.
+pub fn print_timing(t: &Timing) {
+    println!(
+        "{:<44} {:>6} iters  mean {:>10.4} ms  min {:>10.4} ms  p99 {:>10.4} ms",
+        t.name,
+        t.iters,
+        t.secs.mean * 1e3,
+        t.secs.min * 1e3,
+        t.secs.p99 * 1e3
+    );
+}
+
+/// A paper-vs-measured comparison table.
+pub struct Report {
+    title: String,
+    columns: Vec<String>,
+    rows: Vec<(String, Vec<f64>)>,
+    notes: Vec<String>,
+    deviations: Vec<String>,
+}
+
+impl Report {
+    pub fn new(title: &str, columns: &[String]) -> Self {
+        Self {
+            title: title.to_string(),
+            columns: columns.to_vec(),
+            rows: Vec::new(),
+            notes: Vec::new(),
+            deviations: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, label: &str, values: Vec<f64>) -> &mut Self {
+        assert_eq!(values.len(), self.columns.len(), "row width mismatch");
+        self.rows.push((label.to_string(), values));
+        self
+    }
+
+    pub fn note(&mut self, s: &str) -> &mut Self {
+        self.notes.push(s.to_string());
+        self
+    }
+
+    /// Record a reproduction check: each measured value must lie within
+    /// `tol` relative error of the paper value, element-wise. Failures
+    /// are collected (not fatal) and surfaced in `render()` plus
+    /// `deviation_count()` so benches can exit non-zero if desired.
+    pub fn check_band(&mut self, what: &str, paper: &[f64], measured: &[f64], tol: f64) {
+        assert_eq!(paper.len(), measured.len());
+        for (i, (&p, &m)) in paper.iter().zip(measured).enumerate() {
+            if p == 0.0 {
+                continue;
+            }
+            let rel = (m - p).abs() / p.abs();
+            if rel > tol {
+                self.deviations.push(format!(
+                    "{what}[{i}]: paper {p:.1} vs measured {m:.1} ({:+.0}% > ±{:.0}%)",
+                    100.0 * (m - p) / p,
+                    tol * 100.0
+                ));
+            }
+        }
+    }
+
+    pub fn deviation_count(&self) -> usize {
+        self.deviations.len()
+    }
+
+    pub fn render(&self) -> String {
+        let label_w = self
+            .rows
+            .iter()
+            .map(|(l, _)| l.len())
+            .chain(std::iter::once(8))
+            .max()
+            .unwrap();
+        let col_w = self
+            .columns
+            .iter()
+            .map(|c| c.len().max(8))
+            .collect::<Vec<_>>();
+        let mut s = format!("\n=== {} ===\n", self.title);
+        s.push_str(&format!("{:<label_w$}", ""));
+        for (c, w) in self.columns.iter().zip(&col_w) {
+            s.push_str(&format!(" {c:>w$}"));
+        }
+        s.push('\n');
+        for (label, vals) in &self.rows {
+            s.push_str(&format!("{label:<label_w$}"));
+            for (v, w) in vals.iter().zip(&col_w) {
+                if v.abs() >= 1000.0 {
+                    s.push_str(&format!(" {v:>w$.0}"));
+                } else if v.abs() >= 10.0 {
+                    s.push_str(&format!(" {v:>w$.1}"));
+                } else {
+                    s.push_str(&format!(" {v:>w$.2}"));
+                }
+            }
+            s.push('\n');
+        }
+        for n in &self.notes {
+            s.push_str(&format!("  note: {n}\n"));
+        }
+        if self.deviations.is_empty() {
+            s.push_str("  reproduction check: all values within band\n");
+        } else {
+            for d in &self.deviations {
+                s.push_str(&format!("  DEVIATION: {d}\n"));
+            }
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_fn_collects_samples() {
+        let t = time_fn("noop-ish", 2, 5, || {
+            let mut s = 0u64;
+            for i in 0..100 {
+                s = s.wrapping_add(i);
+            }
+            s
+        });
+        assert_eq!(t.iters, 5);
+        assert!(t.secs.mean >= 0.0);
+        assert!(t.per_iter_ms() >= 0.0);
+    }
+
+    #[test]
+    fn report_renders_and_checks_bands() {
+        let mut r = Report::new("Table X", &["1".into(), "2".into()]);
+        r.row("paper", vec![100.0, 200.0]);
+        r.row("measured", vec![104.0, 290.0]);
+        r.check_band("sort", &[100.0, 200.0], &[104.0, 290.0], 0.25);
+        assert_eq!(r.deviation_count(), 1);
+        let text = r.render();
+        assert!(text.contains("Table X"));
+        assert!(text.contains("DEVIATION"));
+        let mut ok = Report::new("T", &["a".into()]);
+        ok.row("r", vec![1.0]);
+        ok.check_band("x", &[1.0], &[1.1], 0.25);
+        assert!(ok.render().contains("within band"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn report_rejects_ragged_rows() {
+        let mut r = Report::new("T", &["a".into(), "b".into()]);
+        r.row("bad", vec![1.0]);
+    }
+}

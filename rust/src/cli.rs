@@ -1,0 +1,195 @@
+//! Minimal command-line parser (offline environment: no `clap`).
+//!
+//! Supports `program <subcommand> --flag value --switch positional...`
+//! with `--key=value` and `--key value` forms, typed accessors, and a
+//! generated usage string.  Unknown flags are an error, which catches
+//! typos in bench sweeps.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+#[derive(Clone, Debug)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+}
+
+impl Args {
+    /// Parse argv (without the program name) against a flag spec.
+    pub fn parse(
+        argv: &[String],
+        expect_subcommand: bool,
+        spec: &[FlagSpec],
+    ) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        if expect_subcommand {
+            match it.peek() {
+                Some(s) if !s.starts_with('-') => {
+                    out.subcommand = Some(it.next().unwrap().clone());
+                }
+                _ => {}
+            }
+        }
+        while let Some(arg) = it.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (body, None),
+                };
+                let fs = spec
+                    .iter()
+                    .find(|f| f.name == name)
+                    .ok_or_else(|| format!("unknown flag --{name}"))?;
+                if fs.takes_value {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| format!("--{name} requires a value"))?
+                            .clone(),
+                    };
+                    out.flags.insert(name.to_string(), val);
+                } else {
+                    if inline_val.is_some() {
+                        return Err(format!("--{name} does not take a value"));
+                    }
+                    out.switches.push(name.to_string());
+                }
+            } else {
+                out.positional.push(arg.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+
+    pub fn str_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name} expects a number, got {v:?}")),
+        }
+    }
+}
+
+/// Render a usage block for `--help`.
+pub fn usage(program: &str, subcommands: &[(&str, &str)], spec: &[FlagSpec]) -> String {
+    let mut s = format!("usage: {program} <command> [flags]\n\ncommands:\n");
+    for (name, help) in subcommands {
+        s.push_str(&format!("  {name:<16} {help}\n"));
+    }
+    s.push_str("\nflags:\n");
+    for f in spec {
+        let val = if f.takes_value { " <value>" } else { "" };
+        s.push_str(&format!("  --{}{val:<10} {}\n", f.name, f.help));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> Vec<FlagSpec> {
+        vec![
+            FlagSpec {
+                name: "nodes",
+                help: "node count",
+                takes_value: true,
+            },
+            FlagSpec {
+                name: "verbose",
+                help: "chatty",
+                takes_value: false,
+            },
+        ]
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_flags_positionals() {
+        let a = Args::parse(
+            &sv(&["sort", "--nodes", "6", "--verbose", "input.dat"]),
+            true,
+            &spec(),
+        )
+        .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("sort"));
+        assert_eq!(a.usize_or("nodes", 1).unwrap(), 6);
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["input.dat"]);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = Args::parse(&sv(&["--nodes=8"]), false, &spec()).unwrap();
+        assert_eq!(a.usize_or("nodes", 1).unwrap(), 8);
+    }
+
+    #[test]
+    fn rejects_unknown_and_malformed() {
+        assert!(Args::parse(&sv(&["--bogus"]), false, &spec()).is_err());
+        assert!(Args::parse(&sv(&["--nodes"]), false, &spec()).is_err());
+        assert!(Args::parse(&sv(&["--verbose=1"]), false, &spec()).is_err());
+        let a = Args::parse(&sv(&["--nodes", "abc"]), false, &spec()).unwrap();
+        assert!(a.usize_or("nodes", 1).is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&[], false, &spec()).unwrap();
+        assert_eq!(a.usize_or("nodes", 4).unwrap(), 4);
+        assert_eq!(a.f64_or("nodes", 1.5).unwrap(), 1.5);
+        assert_eq!(a.str_or("nodes", "x"), "x");
+        assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    fn usage_renders() {
+        let u = usage("sector-sphere", &[("sort", "run terasort")], &spec());
+        assert!(u.contains("sort"));
+        assert!(u.contains("--nodes"));
+    }
+}

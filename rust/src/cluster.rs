@@ -1,0 +1,281 @@
+//! High-level facade: an in-process Sector/Sphere cluster with the
+//! standard workloads wired up.  This is the API the examples and the
+//! CLI drive; everything underneath is the real coordination stack
+//! (Sector replication, Chord lookup, Sphere SPEs, shuffle).
+
+use std::path::PathBuf;
+
+use crate::mining::terasort::{
+    self, validate_sorted, TeraPartitionOp, TeraSortOp, RECORD_BYTES,
+};
+use crate::mining::terasplit;
+use crate::runtime::Runtime;
+use crate::sector::{DiskStorage, MemStorage, SectorCloud, Storage};
+use crate::sphere::{run_job, FaultPlan, JobSpec, Stream};
+
+/// An in-process cluster.
+pub struct Cluster {
+    pub cloud: SectorCloud,
+    pub runtime: Option<Runtime>,
+    /// Temp dir for disk-backed clusters (removed on drop).
+    temp_root: Option<PathBuf>,
+}
+
+pub struct ClusterBuilder {
+    nodes: usize,
+    replicas: usize,
+    seed: u64,
+    on_disk: bool,
+    load_runtime: bool,
+}
+
+impl Default for ClusterBuilder {
+    fn default() -> Self {
+        Self {
+            nodes: 4,
+            replicas: 2,
+            seed: 20080824,
+            on_disk: false,
+            load_runtime: false,
+        }
+    }
+}
+
+impl ClusterBuilder {
+    pub fn nodes(mut self, n: usize) -> Self {
+        self.nodes = n;
+        self
+    }
+
+    pub fn replicas(mut self, r: usize) -> Self {
+        self.replicas = r;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+
+    /// Back slaves with real files under a temp dir (the e2e examples).
+    pub fn on_disk(mut self, yes: bool) -> Self {
+        self.on_disk = yes;
+        self
+    }
+
+    /// Load the PJRT artifacts (requires `make artifacts`).
+    pub fn with_runtime(mut self, yes: bool) -> Self {
+        self.load_runtime = yes;
+        self
+    }
+
+    pub fn build(self) -> Result<Cluster, String> {
+        let temp_root = if self.on_disk {
+            let mut p = std::env::temp_dir();
+            p.push(format!(
+                "sector-cluster-{}-{}",
+                std::process::id(),
+                self.seed
+            ));
+            Some(p)
+        } else {
+            None
+        };
+        let root = temp_root.clone();
+        let cloud = SectorCloud::builder()
+            .nodes(self.nodes)
+            .replicas(self.replicas)
+            .seed(self.seed)
+            .storage_factory(move |id| -> Box<dyn Storage> {
+                match &root {
+                    Some(r) => Box::new(
+                        DiskStorage::new(r.join(format!("slave{id:03}")))
+                            .expect("create slave dir"),
+                    ),
+                    None => Box::new(MemStorage::new()),
+                }
+            })
+            .build()?;
+        let runtime = if self.load_runtime {
+            Some(
+                Runtime::load(&Runtime::default_dir())
+                    .map_err(|e| format!("load PJRT artifacts: {e:#}"))?,
+            )
+        } else {
+            None
+        };
+        Ok(Cluster {
+            cloud,
+            runtime,
+            temp_root,
+        })
+    }
+}
+
+/// Result of a full two-stage Terasort + Terasplit run.
+pub struct TerasortReport {
+    pub records: usize,
+    pub bucket_files: usize,
+    pub sorted_files: Vec<String>,
+    pub globally_sorted: bool,
+    pub split_gain_bits: f64,
+    pub split_index: usize,
+    pub partition_locality: f64,
+    pub wall_secs: f64,
+}
+
+impl Cluster {
+    pub fn builder() -> ClusterBuilder {
+        ClusterBuilder::default()
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.cloud.n_slaves()
+    }
+
+    /// Upload `records_per_node` gensort records per node as one file
+    /// each (the Terasort input layout).
+    pub fn load_terasort_input(&self, records_per_node: usize) -> Result<Vec<String>, String> {
+        let ip = "10.0.0.30".parse().unwrap();
+        let mut names = Vec::new();
+        for node in 0..self.cloud.n_slaves() as u32 {
+            let data = terasort::generate_records(
+                records_per_node,
+                0x7e5a_0000 + node as u64,
+            );
+            let idx = terasort::record_index(&data);
+            let name = format!("tera/input{node:03}.dat");
+            self.cloud.upload(ip, &name, &data, Some(&idx), Some(node))?;
+            names.push(name);
+        }
+        Ok(names)
+    }
+
+    /// Run the full Terasort (partition+shuffle, local sort) followed by
+    /// Terasplit, validating global order. This is the end-to-end driver
+    /// the paper's Tables 1-2 time at 10 GB/node scale.
+    pub fn terasort_e2e(&self, records_per_node: usize) -> Result<TerasortReport, String> {
+        let t0 = std::time::Instant::now();
+        let inputs = self.load_terasort_input(records_per_node)?;
+        let stream = Stream::from_cloud(&self.cloud, &inputs)?;
+        let buckets = (self.nodes() * 4) as u32;
+
+        // Stage A: range-partition into bucket files across the cloud.
+        let partition = run_job(
+            &self.cloud,
+            &TeraPartitionOp { buckets },
+            &stream,
+            &JobSpec {
+                output_name: "tera/bucket".into(),
+                seg_min_bytes: 16 * RECORD_BYTES as u64,
+                seg_max_bytes: 4096 * RECORD_BYTES as u64,
+                ..JobSpec::default()
+            },
+            &FaultPlan::default(),
+        )?;
+
+        // Stage B: sort each bucket locally.
+        let bucket_stream = Stream::from_cloud(&self.cloud, &partition.output_files)?;
+        let sort = run_job(
+            &self.cloud,
+            &TeraSortOp,
+            &bucket_stream,
+            &JobSpec {
+                output_name: "tera/sorted".into(),
+                // one segment per bucket file: sort needs the whole bucket
+                seg_min_bytes: u64::MAX / 4,
+                seg_max_bytes: u64::MAX / 2,
+                ..JobSpec::default()
+            },
+            &FaultPlan::default(),
+        )?;
+
+        // Validate: each output sorted, and bucket boundaries ordered.
+        let mut globally_sorted = true;
+        let mut last_key: Option<Vec<u8>> = None;
+        let mut total_records = 0usize;
+        let mut sorted_files = sort.output_files.clone();
+        sorted_files.sort(); // seg ids follow bucket order
+        let mut all_labels = Vec::new();
+        for name in &sorted_files {
+            let bytes = self.cloud.download(0, name)?;
+            total_records += validate_sorted(&bytes)?;
+            if let (Some(prev), Some(first)) = (&last_key, terasort::first_key(&bytes)) {
+                if prev.as_slice() > first {
+                    globally_sorted = false;
+                }
+            }
+            last_key = terasort::last_key(&bytes).map(|k| k.to_vec());
+            all_labels.extend(terasplit::labels_of(&bytes, 8));
+        }
+        if total_records != records_per_node * self.nodes() {
+            return Err(format!(
+                "record loss: {total_records} of {}",
+                records_per_node * self.nodes()
+            ));
+        }
+
+        // Terasplit over the sorted stream (PJRT artifact when loaded).
+        let (gain, idx) = match &self.runtime {
+            Some(rt) => {
+                let (agg, factor) =
+                    terasplit::aggregate_labels(&all_labels, 8, rt.shapes.n_labels);
+                let (g, i) = rt.split_gain(&agg).map_err(|e| format!("{e:#}"))?;
+                (g as f64, i * factor)
+            }
+            None => terasplit::best_split_host(&all_labels, 8),
+        };
+
+        Ok(TerasortReport {
+            records: total_records,
+            bucket_files: partition.output_files.len(),
+            sorted_files,
+            globally_sorted,
+            split_gain_bits: gain,
+            split_index: idx,
+            partition_locality: partition.locality_fraction,
+            wall_secs: t0.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+impl Drop for Cluster {
+    fn drop(&mut self) {
+        if let Some(root) = &self.temp_root {
+            std::fs::remove_dir_all(root).ok();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn terasort_e2e_in_memory() {
+        let cluster = Cluster::builder().nodes(3).seed(5).build().unwrap();
+        let report = cluster.terasort_e2e(500).unwrap();
+        assert_eq!(report.records, 1500);
+        assert!(report.globally_sorted, "range partition + local sorts");
+        assert!(report.bucket_files > 1);
+        assert!(report.split_gain_bits >= 0.0);
+        assert!(report.split_index < 1500);
+    }
+
+    #[test]
+    fn terasort_e2e_on_disk() {
+        let cluster = Cluster::builder()
+            .nodes(2)
+            .seed(6)
+            .on_disk(true)
+            .build()
+            .unwrap();
+        let report = cluster.terasort_e2e(300).unwrap();
+        assert_eq!(report.records, 600);
+        assert!(report.globally_sorted);
+        // temp dir cleaned up on drop
+        let root = cluster.temp_root.clone().unwrap();
+        drop(cluster);
+        assert!(!root.exists());
+    }
+}

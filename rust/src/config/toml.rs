@@ -1,0 +1,313 @@
+//! Minimal TOML-subset parser (offline environment: no serde/toml crates).
+//!
+//! Supports what the cluster/job config files need:
+//!   * `[section]` and `[section.sub]` headers
+//!   * `key = "string" | 123 | 4.5 | true | [1, 2, 3] | ["a", "b"]`
+//!   * `#` comments, blank lines
+//!
+//! Values are kept as a small dynamic enum; typed accessors live on
+//! `Table`.  Errors carry the line number.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed config: dotted-path -> value ("section.key").
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Table {
+    entries: BTreeMap<String, Value>,
+}
+
+#[derive(Debug)]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+impl Table {
+    pub fn parse(text: &str) -> Result<Table, ParseError> {
+        let mut entries = BTreeMap::new();
+        let mut section = String::new();
+        for (idx, raw) in text.lines().enumerate() {
+            let lineno = idx + 1;
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(inner) = line.strip_prefix('[') {
+                let name = inner.strip_suffix(']').ok_or_else(|| ParseError {
+                    line: lineno,
+                    msg: "unterminated section header".into(),
+                })?;
+                let name = name.trim();
+                if name.is_empty() {
+                    return Err(ParseError {
+                        line: lineno,
+                        msg: "empty section name".into(),
+                    });
+                }
+                section = name.to_string();
+                continue;
+            }
+            let eq = line.find('=').ok_or_else(|| ParseError {
+                line: lineno,
+                msg: format!("expected `key = value`, got {line:?}"),
+            })?;
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                return Err(ParseError {
+                    line: lineno,
+                    msg: "empty key".into(),
+                });
+            }
+            let val = parse_value(line[eq + 1..].trim(), lineno)?;
+            let path = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            if entries.insert(path.clone(), val).is_some() {
+                return Err(ParseError {
+                    line: lineno,
+                    msg: format!("duplicate key {path:?}"),
+                });
+            }
+        }
+        Ok(Table { entries })
+    }
+
+    pub fn get(&self, path: &str) -> Option<&Value> {
+        self.entries.get(path)
+    }
+
+    pub fn str_or<'a>(&'a self, path: &str, default: &'a str) -> &'a str {
+        self.get(path).and_then(Value::as_str).unwrap_or(default)
+    }
+
+    pub fn int_or(&self, path: &str, default: i64) -> i64 {
+        self.get(path).and_then(Value::as_int).unwrap_or(default)
+    }
+
+    pub fn float_or(&self, path: &str, default: f64) -> f64 {
+        self.get(path).and_then(Value::as_float).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, path: &str, default: bool) -> bool {
+        self.get(path).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(String::as_str)
+    }
+
+    /// All keys under a section prefix ("sector." ...).
+    pub fn section_keys<'a>(&'a self, section: &'a str) -> impl Iterator<Item = &'a str> + 'a {
+        let prefix = format!("{section}.");
+        self.entries
+            .keys()
+            .filter(move |k| k.starts_with(&prefix))
+            .map(String::as_str)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A `#` inside a quoted string does not start a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, line: usize) -> Result<Value, ParseError> {
+    let err = |msg: String| ParseError { line, msg };
+    if s.is_empty() {
+        return Err(err("missing value".into()));
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| err(format!("unterminated string {s:?}")))?;
+        if inner.contains('"') {
+            return Err(err("embedded quote in string".into()));
+        }
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| err(format!("unterminated array {s:?}")))?;
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(vec![]));
+        }
+        let items = split_top_level(inner)
+            .into_iter()
+            .map(|item| parse_value(item.trim(), line))
+            .collect::<Result<Vec<_>, _>>()?;
+        return Ok(Value::Array(items));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.replace('_', "").parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(err(format!("unrecognized value {s:?}")))
+}
+
+/// Split an array body on commas not inside quotes.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let t = Table::parse(
+            r#"
+            # cluster file
+            name = "wan"
+            [sector]
+            replicas = 2
+            check_interval_secs = 86400.0
+            p2p = true
+            [sphere]
+            smin = "8MB"   # parsed by util::bytes later
+            "#,
+        )
+        .unwrap();
+        assert_eq!(t.str_or("name", "?"), "wan");
+        assert_eq!(t.int_or("sector.replicas", 0), 2);
+        assert_eq!(t.float_or("sector.check_interval_secs", 0.0), 86400.0);
+        assert!(t.bool_or("sector.p2p", false));
+        assert_eq!(t.str_or("sphere.smin", "?"), "8MB");
+        assert_eq!(t.int_or("missing", 7), 7);
+    }
+
+    #[test]
+    fn parses_arrays() {
+        let t = Table::parse(r#"rtt = [16.0, 55.0, 71.0]
+names = ["chicago", "pasadena"]"#)
+            .unwrap();
+        let rtt = t.get("rtt").unwrap().as_array().unwrap();
+        assert_eq!(rtt.len(), 3);
+        assert_eq!(rtt[1].as_float(), Some(55.0));
+        let names = t.get("names").unwrap().as_array().unwrap();
+        assert_eq!(names[0].as_str(), Some("chicago"));
+    }
+
+    #[test]
+    fn int_vs_float() {
+        let t = Table::parse("a = 3\nb = 3.5\nc = 1_000_000").unwrap();
+        assert_eq!(t.get("a").unwrap().as_int(), Some(3));
+        assert_eq!(t.get("a").unwrap().as_float(), Some(3.0));
+        assert_eq!(t.get("b").unwrap().as_int(), None);
+        assert_eq!(t.get("c").unwrap().as_int(), Some(1_000_000));
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let t = Table::parse(r##"s = "a#b" # trailing"##).unwrap();
+        assert_eq!(t.str_or("s", "?"), "a#b");
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = Table::parse("ok = 1\nbroken").unwrap_err();
+        assert_eq!(e.line, 2);
+        let e = Table::parse("[unclosed").unwrap_err();
+        assert_eq!(e.line, 1);
+        let e = Table::parse("x = \"abc").unwrap_err();
+        assert_eq!(e.line, 1);
+        let e = Table::parse("x = 1\nx = 2").unwrap_err();
+        assert!(e.msg.contains("duplicate"));
+    }
+
+    #[test]
+    fn section_keys_enumerate() {
+        let t = Table::parse("[a]\nx = 1\ny = 2\n[b]\nz = 3").unwrap();
+        let keys: Vec<&str> = t.section_keys("a").collect();
+        assert_eq!(keys, vec!["a.x", "a.y"]);
+    }
+}

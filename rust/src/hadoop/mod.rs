@@ -1,0 +1,16 @@
+//! Hadoop 0.16 baseline (paper §2, §6): an HDFS-like block store and a
+//! MapReduce engine, implemented so the comparison in Tables 1–2 runs
+//! against a real competitor rather than a strawman.  `hdfs` and
+//! `mapreduce` are runnable (threads + bytes); `simjob` carries the
+//! cost structure to paper scale.
+
+pub mod hdfs;
+pub mod mapreduce;
+pub mod simjob;
+
+pub use hdfs::{BlockId, BlockMeta, DataNodeId, Hdfs, HdfsFileMeta};
+pub use mapreduce::{run_mapreduce, JobStats, Kv, MapReduceJob};
+pub use simjob::{
+    simulate_hadoop_filegen, simulate_hadoop_row, simulate_hadoop_terasort,
+    simulate_hadoop_terasplit, HadoopSimResult,
+};

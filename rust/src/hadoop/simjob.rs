@@ -1,0 +1,283 @@
+//! Paper-scale Hadoop 0.16 simulation — the baseline columns of
+//! Tables 1–2.
+//!
+//! Structure follows the real engine (`mapreduce.rs`): block-granular
+//! map tasks → spill → shuffle (HTTP over TCP, 5 parallel fetchers,
+//! 2008-era 64 KB socket buffers) → merge → reduce → output write.
+//! Mechanisms:
+//!
+//!   * all disk I/O through the Java stream stack at `io_efficiency`
+//!     (checksums, serialization, JVM — the paper §6.3 measured 440 Mb/s
+//!     HDFS writes vs 1.1 Gb/s for Sphere on identical disks);
+//!   * per-task JVM startup (Hadoop 0.16 forked a JVM per task);
+//!   * merge passes double when the partition exceeds memory
+//!     (io.sort.mb-era multi-round merges) and halve their I/O when the
+//!     page cache can hold the intermediate data;
+//!   * shuffle fetches ride TCP: window-limited per stream on long-RTT
+//!     paths (transport::tcp), aggregated over parallel copies;
+//!   * distributed-mode overhead: turning on the networked shuffle path
+//!     costs a constant, and stragglers/fetch-count growth add a
+//!     per-node term (calibrated once, shared by both testbeds).
+
+use crate::config::SimConfig;
+use crate::sim::netsim::NetSim;
+use crate::topology::Testbed;
+use crate::transport::TcpModel;
+
+/// Result of one simulated Hadoop benchmark.
+#[derive(Clone, Debug)]
+pub struct HadoopSimResult {
+    pub terasort_secs: f64,
+    pub terasplit_secs: f64,
+    pub map_secs: f64,
+    pub shuffle_secs: f64,
+    pub reduce_secs: f64,
+}
+
+fn fits_in_cache(cfg: &SimConfig, bytes_per_node: f64) -> bool {
+    bytes_per_node <= 0.7 * cfg.hardware.mem_bytes as f64
+}
+
+/// Simulate Hadoop Terasort with `bytes_per_node` input per node.
+pub fn simulate_hadoop_terasort(
+    testbed: &Testbed,
+    cfg: &SimConfig,
+    bytes_per_node: f64,
+) -> HadoopSimResult {
+    let n = testbed.nodes();
+    let h = &cfg.hadoop;
+    let b = bytes_per_node;
+    let read = cfg.hardware.disk_read_bps * h.io_efficiency;
+    let write = cfg.hardware.disk_write_bps * h.io_efficiency;
+    let cores = h.cores_used.min(cfg.hardware.cores) as f64;
+    let cache = fits_in_cache(cfg, b);
+    let cache_factor = if cache { 0.5 } else { 1.0 };
+
+    // ---- map phase: read input, run map, spill partitioned output ----
+    let blocks_per_node = (b / h.block_bytes as f64).ceil();
+    let startup = blocks_per_node / cores * h.task_startup_secs;
+    let map_cpu = b / (cfg.cpu.hadoop_map_bps * cores);
+    let map_io = b / read + b / write;
+    let map_secs = map_io.max(map_cpu) + startup;
+
+    // ---- shuffle: local re-read + network fetches (overlapped w/ map) ----
+    let local_shuffle_io = (b / read + b / write) * cache_factor * h.shuffle_http_overhead;
+    let net_secs = if n > 1 {
+        let mut net = NetSim::new();
+        let links = testbed.build_network(&mut net);
+        let tcp = TcpModel {
+            wnd_max: 64.0 * 1024.0, // untuned 2008 defaults (paper §6.3:
+            // "Hadoop may not have been [tested] using 10 Gb/s NICs")
+            ..TcpModel::hadoop_shuffle()
+        };
+        for src in 0..n {
+            for dst in 0..n {
+                if src == dst {
+                    continue;
+                }
+                let path = testbed.path(&links, src, dst);
+                let bottleneck = testbed.bottleneck_bps(&net, &path);
+                let rtt = testbed.rtt_secs(src, dst);
+                // Hadoop 0.16: 2 concurrent reduce tasks per node
+                // (tasktracker.reduce.tasks.maximum) x parallel.copies
+                // fetchers, spread across the n-1 source nodes.
+                let streams =
+                    (2.0 * tcp.parallel_streams as f64 / (n as f64 - 1.0)).max(1.0);
+                let cap = (tcp.stream_rate(bottleneck, rtt) * streams).min(bottleneck);
+                net.start_flow(&path, b / n as f64, cap);
+            }
+        }
+        net.run_to_idle()
+    } else {
+        0.0
+    };
+    // Hadoop overlaps fetches with the tail of the map phase.
+    let shuffle_secs = 0.5 * local_shuffle_io.max(net_secs) + local_shuffle_io.min(net_secs) * 0.5;
+
+    // ---- merge + reduce + output ----
+    let merge_passes = if cache { h.merge_passes } else { h.merge_passes + 1.0 };
+    let merge_io = merge_passes * (b / read + b / write) * cache_factor;
+    let reduce_cpu = b / (cfg.cpu.hadoop_sort_bps * cores);
+    // Job output goes through the HDFS client write pipeline.
+    let hdfs_write = cfg.hardware.disk_write_bps * h.hdfs_write_efficiency;
+    let output_io = h.replication_out as f64 * b / hdfs_write;
+    let reduce_secs = merge_io.max(reduce_cpu) + output_io;
+
+    // ---- distributed-mode overhead (shuffle servers + stragglers) ----
+    let dist = if n > 1 { 60.0 + 30.0 * (n as f64 - 1.0) } else { 0.0 };
+
+    HadoopSimResult {
+        terasort_secs: map_secs + shuffle_secs + reduce_secs + dist,
+        terasplit_secs: 0.0,
+        map_secs,
+        shuffle_secs,
+        reduce_secs,
+    }
+}
+
+/// Hadoop Terasplit: a single client streams the sorted output through
+/// the entropy scan, reading HDFS over TCP sequentially per file (same
+/// workload shape as the Sphere version, baseline software stack).
+pub fn simulate_hadoop_terasplit(testbed: &Testbed, cfg: &SimConfig, bytes_per_node: f64) -> f64 {
+    let h = &cfg.hadoop;
+    let read = cfg.hardware.disk_read_bps * h.io_efficiency;
+    let tcp = TcpModel {
+        wnd_max: 64.0 * 1024.0,
+        parallel_streams: 5,
+        ..TcpModel::default()
+    };
+    // One-time job overhead: on the memory-starved generation the first
+    // 10 GB scan fights the JVM heap for the page cache (GC churn while
+    // the job spins up); absent on the 16 GB boxes (calibrated to the
+    // Table 1 vs Table 2 single-node Terasplit cells).
+    let mut total = if fits_in_cache(cfg, bytes_per_node) {
+        0.0
+    } else {
+        230.0
+    };
+    for src in 0..testbed.nodes() {
+        let rtt = testbed.rtt_secs(0, src);
+        // HDFS bulk reads stream through DataNode pipes with sizeable
+        // buffers; cross-site reads still pay the fetch setup.
+        let net_cap = if src == 0 {
+            f64::INFINITY
+        } else {
+            let bulk = TcpModel {
+                wnd_max: 1024.0 * 1024.0,
+                ..tcp
+            };
+            bulk.rate_cap(testbed.nic_bps, rtt)
+        };
+        // The Java client scans slower than the native one.
+        let scan = cfg.cpu.scan_bps * 0.75;
+        let rate = read.min(net_cap).min(scan);
+        // A JVM fork per block-granular map task feeds the scan.
+        let startups = (bytes_per_node / h.block_bytes as f64).ceil()
+            / h.cores_used.max(1) as f64
+            * h.task_startup_secs;
+        total += bytes_per_node / rate + startups + tcp.setup_secs(rtt, false);
+    }
+    total
+}
+
+/// Hadoop file generation (§6.3): writing through the HDFS client
+/// pipeline (paper measured 212 s per 10 GB file per node = 440 Mb/s).
+pub fn simulate_hadoop_filegen(cfg: &SimConfig, bytes_per_node: f64) -> f64 {
+    let write = cfg.hardware.disk_write_bps * cfg.hadoop.hdfs_write_efficiency;
+    bytes_per_node / write * cfg.hadoop.replication_out as f64
+}
+
+/// Full Table-row simulation: Terasort + Terasplit.
+pub fn simulate_hadoop_row(
+    testbed: &Testbed,
+    cfg: &SimConfig,
+    bytes_per_node: f64,
+) -> HadoopSimResult {
+    let mut r = simulate_hadoop_terasort(testbed, cfg, bytes_per_node);
+    r.terasplit_secs = simulate_hadoop_terasplit(testbed, cfg, bytes_per_node);
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sphere::simjob::simulate_sphere_row;
+    use crate::util::bytes::GB;
+
+    #[test]
+    fn single_node_wan_near_paper() {
+        let t = Testbed::wan_testbed(1);
+        let c = SimConfig::wan_default();
+        let r = simulate_hadoop_row(&t, &c, 10.0 * GB as f64);
+        // Paper Table 1: Hadoop Terasort 2312 s, Terasplit 460 s.
+        assert!(
+            (r.terasort_secs - 2312.0).abs() / 2312.0 < 0.25,
+            "terasort {:.0} vs paper 2312",
+            r.terasort_secs
+        );
+        assert!(
+            (r.terasplit_secs - 460.0).abs() / 460.0 < 0.35,
+            "terasplit {:.0} vs paper 460",
+            r.terasplit_secs
+        );
+    }
+
+    #[test]
+    fn single_node_lan_near_paper() {
+        let t = Testbed::lan_testbed(1);
+        let c = SimConfig::lan_default();
+        let r = simulate_hadoop_row(&t, &c, 10.0 * GB as f64);
+        // Paper Table 2: Hadoop Terasort 645 s, Terasplit 141 s.
+        assert!(
+            (r.terasort_secs - 645.0).abs() / 645.0 < 0.25,
+            "terasort {:.0} vs paper 645",
+            r.terasort_secs
+        );
+        assert!(
+            (r.terasplit_secs - 141.0).abs() / 141.0 < 0.35,
+            "terasplit {:.0} vs paper 141",
+            r.terasplit_secs
+        );
+    }
+
+    #[test]
+    fn sphere_beats_hadoop_everywhere() {
+        // The paper's headline: speedups 2.4-2.6x (WAN sort), 1.6-2.3x
+        // (LAN sort), 1.2-1.9x (split). Check who-wins at every sweep
+        // point; exact factors are checked by the bench reports.
+        let b = 10.0 * GB as f64;
+        for n in 1..=6 {
+            let t = Testbed::wan_testbed(n);
+            let c = SimConfig::wan_default();
+            let h = simulate_hadoop_row(&t, &c, b);
+            let s = simulate_sphere_row(&t, &c, b);
+            assert!(
+                h.terasort_secs > 1.5 * s.terasort_secs,
+                "WAN n={n}: hadoop {:.0} vs sphere {:.0}",
+                h.terasort_secs,
+                s.terasort_secs
+            );
+            assert!(h.terasplit_secs > s.terasplit_secs, "WAN split n={n}");
+        }
+        for n in 1..=8 {
+            let t = Testbed::lan_testbed(n);
+            let c = SimConfig::lan_default();
+            let h = simulate_hadoop_row(&t, &c, b);
+            let s = simulate_sphere_row(&t, &c, b);
+            assert!(
+                h.terasort_secs > 1.2 * s.terasort_secs,
+                "LAN n={n}: hadoop {:.0} vs sphere {:.0}",
+                h.terasort_secs,
+                s.terasort_secs
+            );
+        }
+    }
+
+    #[test]
+    fn filegen_ratio_matches_section_6_3() {
+        // Paper: Hadoop 212 s vs Sphere 68 s per 10 GB file per node.
+        let c = SimConfig::lan_default();
+        let hadoop = simulate_hadoop_filegen(&c, 10.0 * GB as f64);
+        let sphere = crate::sphere::simjob::simulate_sphere_filegen(&c, 10.0 * GB as f64);
+        assert!((hadoop - 212.0).abs() / 212.0 < 0.25, "hadoop filegen {hadoop:.0}");
+        let ratio = hadoop / sphere;
+        assert!(
+            (2.0..4.5).contains(&ratio),
+            "filegen ratio {ratio:.1} (paper: 212/68 = 3.1)"
+        );
+    }
+
+    #[test]
+    fn hadoop_degrades_with_scale_even_on_lan() {
+        let b = 10.0 * GB as f64;
+        let c = SimConfig::lan_default();
+        let r1 = simulate_hadoop_terasort(&Testbed::lan_testbed(1), &c, b);
+        let r8 = simulate_hadoop_terasort(&Testbed::lan_testbed(8), &c, b);
+        assert!(
+            r8.terasort_secs > 1.25 * r1.terasort_secs,
+            "paper: 645 -> 1000; got {:.0} -> {:.0}",
+            r1.terasort_secs,
+            r8.terasort_secs
+        );
+    }
+}

@@ -1,0 +1,51 @@
+//! # Sector/Sphere — high-performance data-cloud data mining
+//!
+//! A full reproduction of *"Data Mining Using High Performance Data
+//! Clouds: Experimental Studies Using Sector and Sphere"* (Grossman &
+//! Gu, KDD 2008) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * [`sector`] — the storage cloud: distributed, replicated, indexed
+//!   files located through a peer-to-peer routing layer, with ACL-gated
+//!   writes (paper §4).
+//! * [`sphere`] — the compute cloud: Sphere Processing Elements apply
+//!   user-defined functions to stream segments with locality-aware
+//!   scheduling and shuffled output streams (paper §3).
+//! * [`transport`] / [`routing`] — the networking layer: UDT rate-based
+//!   transport, the Group Messaging Protocol, connection caching, and
+//!   Chord routing (paper §5).
+//! * [`hadoop`] — the comparison baseline: an HDFS-like block store and
+//!   a MapReduce engine with Hadoop 0.16's cost structure (paper §6).
+//! * [`mining`] — the evaluation workloads: Terasort, Terasplit, and
+//!   the Angle anomaly-detection application (paper §6–7).
+//! * [`sim`] — the discrete-event testbed simulator standing in for the
+//!   paper's 6-node WAN and 8-node rack (substitutions: DESIGN.md §2).
+//! * [`runtime`] — the PJRT bridge that loads the AOT-compiled JAX/
+//!   Pallas artifacts (`artifacts/*.hlo.txt`) and executes them on the
+//!   request path without Python.
+//! * [`cluster`] — the in-process "real mode" cluster used by the
+//!   examples: real files, real threads, emulated network.
+//!
+//! The remaining modules are offline-environment substrates built from
+//! scratch: [`cli`], [`config`], [`bench`], [`testkit`], [`metrics`],
+//! [`util`].
+//!
+//! See `examples/` for runnable end-to-end drivers and `rust/benches/`
+//! for the reproduction of every table and figure in the paper
+//! (experiment index: DESIGN.md §5).
+
+pub mod bench;
+pub mod cli;
+pub mod cluster;
+pub mod config;
+pub mod hadoop;
+pub mod metrics;
+pub mod mining;
+pub mod routing;
+pub mod runtime;
+pub mod sector;
+pub mod sim;
+pub mod sphere;
+pub mod testkit;
+pub mod topology;
+pub mod transport;
+pub mod util;

@@ -1,0 +1,177 @@
+//! sector-sphere — CLI for the Sector/Sphere reproduction.
+//!
+//! Subcommands mirror the paper's workflows: bring up an in-process
+//! cloud and run Terasort/Terasplit/Angle for real, or simulate the
+//! paper-scale testbeds (Tables 1–2 rows) from the command line.
+
+use sector_sphere::cli::{usage, Args, FlagSpec};
+use sector_sphere::cluster::Cluster;
+use sector_sphere::config::SimConfig;
+use sector_sphere::hadoop::simulate_hadoop_row;
+use sector_sphere::mining::{run_pipeline, AngleScenario};
+use sector_sphere::sphere::simjob::simulate_sphere_row;
+use sector_sphere::topology::Testbed;
+use sector_sphere::util::bytes::{fmt_duration_secs, parse_bytes};
+
+const SUBCOMMANDS: &[(&str, &str)] = &[
+    ("sort", "run real Terasort+Terasplit on an in-process cluster"),
+    ("angle", "run the Angle anomaly-detection pipeline"),
+    ("sim", "simulate a paper-scale Table 1/2 row (WAN or LAN)"),
+    ("quickstart", "upload files and run a grep UDF"),
+];
+
+fn flag_spec() -> Vec<FlagSpec> {
+    vec![
+        FlagSpec { name: "nodes", help: "cluster node count", takes_value: true },
+        FlagSpec { name: "records", help: "records per node (sort)", takes_value: true },
+        FlagSpec { name: "testbed", help: "sim testbed: wan|lan", takes_value: true },
+        FlagSpec { name: "bytes-per-node", help: "sim data size, e.g. 10GB", takes_value: true },
+        FlagSpec { name: "windows", help: "angle time windows", takes_value: true },
+        FlagSpec { name: "seed", help: "deterministic seed", takes_value: true },
+        FlagSpec { name: "disk", help: "back slaves with real files", takes_value: false },
+        FlagSpec { name: "pjrt", help: "load AOT artifacts (needs `make artifacts`)", takes_value: false },
+        FlagSpec { name: "help", help: "show usage", takes_value: false },
+    ]
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match Args::parse(&argv, true, &flag_spec()) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n");
+            eprintln!("{}", usage("sector-sphere", SUBCOMMANDS, &flag_spec()));
+            std::process::exit(2);
+        }
+    };
+    if args.has("help") || args.subcommand.is_none() {
+        println!("{}", usage("sector-sphere", SUBCOMMANDS, &flag_spec()));
+        return;
+    }
+    let result = match args.subcommand.as_deref().unwrap() {
+        "sort" => cmd_sort(&args),
+        "angle" => cmd_angle(&args),
+        "sim" => cmd_sim(&args),
+        "quickstart" => cmd_quickstart(&args),
+        other => Err(format!("unknown command {other:?}")),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn build_cluster(args: &Args) -> Result<Cluster, String> {
+    Cluster::builder()
+        .nodes(args.usize_or("nodes", 4)?)
+        .seed(args.u64_or("seed", 20080824)?)
+        .on_disk(args.has("disk"))
+        .with_runtime(args.has("pjrt"))
+        .build()
+}
+
+fn cmd_sort(args: &Args) -> Result<(), String> {
+    let records = args.usize_or("records", 2000)?;
+    let cluster = build_cluster(args)?;
+    println!(
+        "terasort: {} nodes x {} records ({} bytes/node){}",
+        cluster.nodes(),
+        records,
+        records * 100,
+        if cluster.runtime.is_some() { " [pjrt]" } else { "" }
+    );
+    let r = cluster.terasort_e2e(records)?;
+    println!("  records sorted     {}", r.records);
+    println!("  bucket files       {}", r.bucket_files);
+    println!("  globally sorted    {}", r.globally_sorted);
+    println!("  split gain         {:.4} bits @ record {}", r.split_gain_bits, r.split_index);
+    println!("  partition locality {:.0}%", r.partition_locality * 100.0);
+    println!("  wall time          {}", fmt_duration_secs(r.wall_secs));
+    if !r.globally_sorted {
+        return Err("output not globally sorted".into());
+    }
+    Ok(())
+}
+
+fn cmd_angle(args: &Args) -> Result<(), String> {
+    let cluster = build_cluster(args)?;
+    let scenario = AngleScenario {
+        windows: args.u64_or("windows", 8)?,
+        ..AngleScenario::default()
+    };
+    let report = run_pipeline(&cluster.cloud, &scenario, cluster.runtime.as_ref())?;
+    println!("angle: {} feature files, {} vectors", report.feature_files, report.features_total);
+    println!("  delta series  {:?}", report.analysis.deltas.iter().map(|d| (d * 100.0).round() / 100.0).collect::<Vec<_>>());
+    println!("  emergent at   {:?}", report.emergent_window_ids);
+    for (src, w, score) in &report.top_scores {
+        println!("  rho={score:.4}  src={src:016x} window={w}");
+    }
+    Ok(())
+}
+
+fn cmd_sim(args: &Args) -> Result<(), String> {
+    let nodes = args.usize_or("nodes", 6)?;
+    let bytes = parse_bytes(args.str_or("bytes-per-node", "10GB"))? as f64;
+    let (testbed, cfg) = match args.str_or("testbed", "wan") {
+        "wan" => (Testbed::wan_testbed(nodes), SimConfig::wan_default()),
+        "lan" => (Testbed::lan_testbed(nodes), SimConfig::lan_default()),
+        other => return Err(format!("unknown testbed {other:?} (wan|lan)")),
+    };
+    let sphere = simulate_sphere_row(&testbed, &cfg, bytes);
+    let hadoop = simulate_hadoop_row(&testbed, &cfg, bytes);
+    println!("{} / {} per node:", testbed.name, args.str_or("bytes-per-node", "10GB"));
+    println!("  {:<20} {:>10} {:>10}", "", "Sphere", "Hadoop");
+    println!("  {:<20} {:>10.0} {:>10.0}", "Terasort (s)", sphere.terasort_secs, hadoop.terasort_secs);
+    println!("  {:<20} {:>10.0} {:>10.0}", "Terasplit (s)", sphere.terasplit_secs, hadoop.terasplit_secs);
+    println!(
+        "  {:<20} {:>10.0} {:>10.0}",
+        "Total (s)",
+        sphere.terasort_secs + sphere.terasplit_secs,
+        hadoop.terasort_secs + hadoop.terasplit_secs
+    );
+    println!(
+        "  speedup: sort {:.1}x, split {:.1}x, total {:.1}x",
+        hadoop.terasort_secs / sphere.terasort_secs,
+        hadoop.terasplit_secs / sphere.terasplit_secs,
+        (hadoop.terasort_secs + hadoop.terasplit_secs)
+            / (sphere.terasort_secs + sphere.terasplit_secs)
+    );
+    Ok(())
+}
+
+fn cmd_quickstart(args: &Args) -> Result<(), String> {
+    use sector_sphere::sphere::{run_job, FaultPlan, GrepOp, JobSpec, Stream};
+    let cluster = build_cluster(args)?;
+    let ip = "10.0.0.20".parse().unwrap();
+    let cloud = &cluster.cloud;
+    for (i, text) in [
+        "a brown dwarf candidate\nnothing here\n",
+        "another brown dwarf\nblue giant\n",
+    ]
+    .iter()
+    .enumerate()
+    {
+        let lines: Vec<&str> = text.split_inclusive('\n').collect();
+        let lengths: Vec<u64> = lines.iter().map(|l| l.len() as u64).collect();
+        let idx = sector_sphere::sector::RecordIndex::from_lengths(&lengths);
+        cloud.upload(ip, &format!("sky{i}.dat"), text.as_bytes(), Some(&idx), None)?;
+    }
+    let stream = Stream::from_cloud(cloud, &["sky0.dat".into(), "sky1.dat".into()])?;
+    let res = run_job(
+        cloud,
+        &GrepOp,
+        &stream,
+        &JobSpec {
+            params: b"brown dwarf".to_vec(),
+            seg_min_bytes: 1,
+            seg_max_bytes: 1024,
+            ..JobSpec::default()
+        },
+        &FaultPlan::default(),
+    )?;
+    println!("quickstart: sphere.run(sky, \"grep brown dwarf\") matched:");
+    for (_, rec) in res.to_client {
+        print!("  {}", String::from_utf8_lossy(&rec));
+    }
+    Ok(())
+}

@@ -1,0 +1,156 @@
+//! Lightweight metrics registry: counters, gauges and timers, shared
+//! across threads.  The coordinator exposes one registry per cluster;
+//! `report()` renders the table the CLI prints at job completion.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+#[derive(Default)]
+struct Inner {
+    counters: Mutex<BTreeMap<String, Arc<AtomicU64>>>,
+    gauges: Mutex<BTreeMap<String, Arc<AtomicI64>>>,
+    timers: Mutex<BTreeMap<String, Vec<f64>>>,
+}
+
+/// Cheap-to-clone handle to a shared metrics registry.
+#[derive(Clone, Default)]
+pub struct Metrics {
+    inner: Arc<Inner>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn counter(&self, name: &str) -> Arc<AtomicU64> {
+        let mut m = self.inner.counters.lock().unwrap();
+        m.entry(name.to_string()).or_default().clone()
+    }
+
+    pub fn add(&self, name: &str, v: u64) {
+        self.counter(name).fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn incr(&self, name: &str) {
+        self.add(name, 1);
+    }
+
+    pub fn get(&self, name: &str) -> u64 {
+        self.counter(name).load(Ordering::Relaxed)
+    }
+
+    pub fn gauge_set(&self, name: &str, v: i64) {
+        let mut m = self.inner.gauges.lock().unwrap();
+        m.entry(name.to_string())
+            .or_default()
+            .store(v, Ordering::Relaxed);
+    }
+
+    pub fn gauge(&self, name: &str) -> i64 {
+        let m = self.inner.gauges.lock().unwrap();
+        m.get(name).map(|g| g.load(Ordering::Relaxed)).unwrap_or(0)
+    }
+
+    /// Record a duration sample in seconds under `name`.
+    pub fn observe_secs(&self, name: &str, secs: f64) {
+        let mut m = self.inner.timers.lock().unwrap();
+        m.entry(name.to_string()).or_default().push(secs);
+    }
+
+    /// Time a closure and record it.
+    pub fn time<T>(&self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.observe_secs(name, t0.elapsed().as_secs_f64());
+        out
+    }
+
+    pub fn timer_samples(&self, name: &str) -> Vec<f64> {
+        let m = self.inner.timers.lock().unwrap();
+        m.get(name).cloned().unwrap_or_default()
+    }
+
+    /// Render all metrics as an aligned text table.
+    pub fn report(&self) -> String {
+        use crate::util::stats::Summary;
+        let mut out = String::new();
+        let counters = self.inner.counters.lock().unwrap();
+        if !counters.is_empty() {
+            out.push_str("counters:\n");
+            for (k, v) in counters.iter() {
+                out.push_str(&format!("  {k:<40} {}\n", v.load(Ordering::Relaxed)));
+            }
+        }
+        let gauges = self.inner.gauges.lock().unwrap();
+        if !gauges.is_empty() {
+            out.push_str("gauges:\n");
+            for (k, v) in gauges.iter() {
+                out.push_str(&format!("  {k:<40} {}\n", v.load(Ordering::Relaxed)));
+            }
+        }
+        let timers = self.inner.timers.lock().unwrap();
+        if !timers.is_empty() {
+            out.push_str("timers (secs):\n");
+            for (k, samples) in timers.iter() {
+                if let Some(s) = Summary::of(samples) {
+                    out.push_str(&format!(
+                        "  {k:<40} n={} mean={:.4} p50={:.4} p99={:.4} max={:.4}\n",
+                        s.n, s.mean, s.p50, s.p99, s.max
+                    ));
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn counters_accumulate_across_clones() {
+        let m = Metrics::new();
+        let m2 = m.clone();
+        m.add("sector.uploads", 2);
+        m2.incr("sector.uploads");
+        assert_eq!(m.get("sector.uploads"), 3);
+        assert_eq!(m.get("missing"), 0);
+    }
+
+    #[test]
+    fn concurrent_increments() {
+        let m = Metrics::new();
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let m = m.clone();
+                thread::spawn(move || {
+                    for _ in 0..1000 {
+                        m.incr("x");
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(m.get("x"), 8000);
+    }
+
+    #[test]
+    fn timers_and_report() {
+        let m = Metrics::new();
+        let v = m.time("op", || 42);
+        assert_eq!(v, 42);
+        m.observe_secs("op", 0.5);
+        m.gauge_set("spes", 6);
+        let r = m.report();
+        assert!(r.contains("op"));
+        assert!(r.contains("spes"));
+        assert_eq!(m.timer_samples("op").len(), 2);
+    }
+}

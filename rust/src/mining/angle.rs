@@ -1,0 +1,214 @@
+//! The Angle application (paper §7): sensors produce anonymized packet
+//! files; Sector manages them; Sphere extracts features and the client
+//! clusters windows, computes delta_j, flags emergent clusters and
+//! scores feature vectors.
+//!
+//! `run_pipeline` is the real end-to-end path (examples/angle_pipeline
+//! drives it, optionally through PJRT); `simulate_angle_clustering`
+//! carries the cost model to Table 3's 300,000-file scale.
+
+use crate::mining::emergent::{
+    analyze_windows, emergent_clusters, emergent_windows, score_batch, EmergentCluster,
+    WindowAnalysis,
+};
+use crate::mining::features::{AngleFeatureOp, FeatureVector, FEATURE_RECORD_BYTES};
+use crate::mining::pcap::{Regime, TraceGen};
+use crate::runtime::Runtime;
+use crate::sector::SectorCloud;
+use crate::sphere::{run_job, FaultPlan, JobSpec, Stream};
+
+/// Scenario description for a synthetic Angle run.
+#[derive(Clone, Debug)]
+pub struct AngleScenario {
+    pub sensors: u32,
+    pub sources_per_sensor: usize,
+    pub windows: u64,
+    pub packets_per_source: usize,
+    /// (window, source-index, regime) regime shifts to plant.
+    pub anomalies: Vec<(u64, usize, Regime)>,
+    pub seed: u64,
+    pub k: usize,
+}
+
+impl Default for AngleScenario {
+    fn default() -> Self {
+        Self {
+            sensors: 4, // the paper's four sensor sites
+            sources_per_sensor: 25,
+            windows: 8,
+            packets_per_source: 40,
+            anomalies: vec![(5, 3, Regime::Scan), (5, 7, Regime::Scan)],
+            seed: 20080824,
+            k: 6,
+        }
+    }
+}
+
+/// Pipeline output.
+pub struct AngleReport {
+    pub feature_files: usize,
+    pub features_total: usize,
+    pub analysis: WindowAnalysis,
+    pub emergent_window_ids: Vec<usize>,
+    pub clusters: Vec<EmergentCluster>,
+    /// (src, window, score) of the top-scored feature vectors.
+    pub top_scores: Vec<(u64, u64, f32)>,
+}
+
+/// Generate traces, upload to Sector, extract features via Sphere, and
+/// run the emergent-cluster analysis on the client.
+pub fn run_pipeline(
+    cloud: &SectorCloud,
+    scenario: &AngleScenario,
+    runtime: Option<&Runtime>,
+) -> Result<AngleReport, String> {
+    let ip = "10.0.0.40".parse().unwrap();
+    // ---- sensors write one pcap file per (sensor, window) ----
+    let mut n_files = 0usize;
+    for sensor in 0..scenario.sensors {
+        let mut gen = TraceGen::new(sensor, scenario.sources_per_sensor, scenario.seed);
+        for w in 0..scenario.windows {
+            let anomalous: Vec<(usize, Regime)> = scenario
+                .anomalies
+                .iter()
+                .filter(|(aw, _, _)| *aw == w)
+                .map(|(_, s, r)| (*s, *r))
+                .collect();
+            let (bytes, _) = gen.window_file(w, scenario.packets_per_source, &anomalous);
+            let name = format!("angle/s{sensor:02}-w{w:04}.pcap");
+            let target = (sensor % cloud.n_slaves() as u32) as u32;
+            cloud
+                .upload(ip, &name, &bytes, None, Some(target))
+                .map_err(|e| format!("upload {name}: {e}"))?;
+            n_files += 1;
+        }
+    }
+
+    // ---- Sphere feature extraction, one job per window ----
+    let mut windows: Vec<Vec<FeatureVector>> = Vec::with_capacity(scenario.windows as usize);
+    for w in 0..scenario.windows {
+        let names: Vec<String> = (0..scenario.sensors)
+            .map(|s| format!("angle/s{s:02}-w{w:04}.pcap"))
+            .collect();
+        let stream = Stream::from_cloud(cloud, &names)?;
+        let spec = JobSpec {
+            output_name: format!("angle-feat-w{w}"),
+            params: w.to_le_bytes().to_vec(),
+            ..JobSpec::default()
+        };
+        let res = run_job(cloud, &AngleFeatureOp, &stream, &spec, &FaultPlan::default())?;
+        let mut feats = Vec::with_capacity(res.to_client.len());
+        for (_, rec) in res.to_client {
+            if rec.len() != FEATURE_RECORD_BYTES {
+                return Err(format!("bad feature record of {} bytes", rec.len()));
+            }
+            feats.push(FeatureVector::from_bytes(&rec)?);
+        }
+        feats.sort_by_key(|f| f.src);
+        windows.push(feats);
+    }
+    let features_total = windows.iter().map(Vec::len).sum();
+
+    // ---- client-side temporal analysis (PJRT-backed when available) ----
+    let analysis = analyze_windows(&windows, scenario.k, scenario.seed, runtime)?;
+    let emergent_ids = emergent_windows(&analysis.deltas, 2, 3.0);
+    let clusters = match emergent_ids.first() {
+        Some(&w) if w >= 1 => {
+            emergent_clusters(&analysis.models[w - 1], &analysis.models[w], 1.0)
+        }
+        _ => Vec::new(),
+    };
+    // score the flagged window's vectors
+    let mut top_scores = Vec::new();
+    if let Some(&w) = emergent_ids.first() {
+        let xs = &windows[w];
+        let scores = score_batch(xs, &clusters, runtime)?;
+        let mut scored: Vec<(u64, u64, f32)> = xs
+            .iter()
+            .zip(scores)
+            .map(|(f, s)| (f.src, f.window, s))
+            .collect();
+        scored.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap());
+        scored.truncate(10);
+        top_scores = scored;
+    }
+
+    Ok(AngleReport {
+        feature_files: n_files,
+        features_total,
+        analysis,
+        emergent_window_ids: emergent_ids,
+        clusters,
+        top_scores,
+    })
+}
+
+/// Table 3 cost model: clustering time vs (records, Sector files).
+/// Dominated by per-file costs (lookup, connection, open, feature-file
+/// fetch) plus a per-record scan/cluster cost — fitted to the table's
+/// four cells (EXPERIMENTS.md §Calibration):
+///   500 rec / 1 file = 1.9 s; 1e3 / 3 = 4.2 s;
+///   1e6 / 2850 = 85 min; 1e8 / 300000 = 178 h.
+pub fn simulate_angle_clustering(n_records: f64, n_files: f64) -> f64 {
+    const PER_FILE_SECS: f64 = 1.45; // lookup + GMP + UDT open + read
+    const PER_RECORD_SECS: f64 = 0.55e-3; // aggregate + cluster iterations
+    n_files * PER_FILE_SECS + n_records * PER_RECORD_SECS
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pipeline_detects_planted_scan() {
+        let cloud = SectorCloud::builder().nodes(4).seed(3).build().unwrap();
+        let scenario = AngleScenario::default();
+        let report = run_pipeline(&cloud, &scenario, None).unwrap();
+        assert_eq!(report.feature_files, 32, "4 sensors x 8 windows");
+        // 4 sensors x 25 sources x 8 windows = 800 feature vectors
+        assert_eq!(report.features_total, 800);
+        assert_eq!(report.analysis.deltas.len(), 7);
+        assert!(
+            report.emergent_window_ids.contains(&5),
+            "planted shift at window 5; flagged {:?} deltas {:?}",
+            report.emergent_window_ids,
+            report.analysis.deltas
+        );
+        assert!(!report.clusters.is_empty());
+        // top-scored sources are the scanners (sensor-local source ids 3, 7)
+        assert!(!report.top_scores.is_empty());
+        let scanners: std::collections::HashSet<u64> = (0..4)
+            .flat_map(|sensor| {
+                [
+                    crate::mining::pcap::anonymize_ip([10, sensor, 0, 3], scenario.seed),
+                    crate::mining::pcap::anonymize_ip([10, sensor, 0, 7], scenario.seed),
+                ]
+            })
+            .collect();
+        let top2: Vec<u64> = report.top_scores.iter().take(2).map(|t| t.0).collect();
+        assert!(
+            top2.iter().all(|s| scanners.contains(s)),
+            "top scores {top2:?} should be planted scanners"
+        );
+    }
+
+    #[test]
+    fn table3_model_matches_paper_cells() {
+        // (records, files, paper seconds)
+        let cells = [
+            (500.0, 1.0, 1.9),
+            (1000.0, 3.0, 4.2),
+            (1.0e6, 2850.0, 85.0 * 60.0),
+            (1.0e8, 300_000.0, 178.0 * 3600.0),
+        ];
+        for (recs, files, paper) in cells {
+            let got = simulate_angle_clustering(recs, files);
+            let rel = (got - paper).abs() / paper;
+            assert!(
+                rel < 0.30,
+                "cell ({recs}, {files}): {got:.1} vs paper {paper:.1} ({:.0}%)",
+                rel * 100.0
+            );
+        }
+    }
+}

@@ -1,0 +1,279 @@
+//! Emergent-cluster detection (paper §7.1):
+//!
+//!   "One way is for Sphere to aggregate feature files into temporal
+//!   windows w_1, w_2, w_3 ... For each window w_j, clusters are
+//!   computed with centers a_{j,1}, ..., a_{j,k} and the temporal
+//!   evolution of these clusters is used to identify ... emergent
+//!   clusters."
+//!
+//! delta_j = sum_n min_m ||a_{j,n} - a_{j+1,m}||^2 is the movement
+//! statistic (Figs 5-6); a window whose delta spikes against the
+//! trailing history flags its new clusters as emergent, and the scoring
+//! function rho(x) ranks feature vectors against them.
+
+use crate::mining::features::{FeatureVector, FEATURE_DIM};
+use crate::mining::kmeans::{fit, KmeansModel};
+use crate::runtime::Runtime;
+use crate::util::stats::Welford;
+
+/// Host delta_j (oracle; the PJRT artifact computes the same).
+pub fn delta_host(a: &[f32], b: &[f32], d: usize) -> f64 {
+    let ka = a.len() / d;
+    let kb = b.len() / d;
+    let mut total = 0.0f64;
+    for i in 0..ka {
+        let mut best = f64::MAX;
+        for j in 0..kb {
+            let mut dist = 0.0f64;
+            for x in 0..d {
+                let diff = (a[i * d + x] - b[j * d + x]) as f64;
+                dist += diff * diff;
+            }
+            best = best.min(dist);
+        }
+        total += best;
+    }
+    total
+}
+
+/// Cluster every window and compute the delta series (len = windows-1).
+/// `runtime`: route k-means steps and delta through PJRT when given.
+pub struct WindowAnalysis {
+    pub models: Vec<KmeansModel>,
+    pub deltas: Vec<f64>,
+}
+
+pub fn analyze_windows(
+    windows: &[Vec<FeatureVector>],
+    k: usize,
+    seed: u64,
+    runtime: Option<&Runtime>,
+) -> Result<WindowAnalysis, String> {
+    let d = FEATURE_DIM;
+    let mut models = Vec::with_capacity(windows.len());
+    for (i, w) in windows.iter().enumerate() {
+        let pts: Vec<f32> = w.iter().flat_map(|f| f.values).collect();
+        let k_eff = k.min(w.len().max(1));
+        if w.is_empty() {
+            return Err(format!("window {i} has no feature vectors"));
+        }
+        models.push(fit(&pts, d, k_eff, 30, seed + i as u64, runtime)?);
+    }
+    let mut deltas = Vec::with_capacity(models.len().saturating_sub(1));
+    for pair in models.windows(2) {
+        // Symmetrized statistic: the paper's formula sums, for each
+        // center of w_j, the distance to its nearest center of w_{j+1};
+        // a cluster *appearing* in w_{j+1} is invisible in that
+        // direction (every old center still has a near neighbour), so we
+        // add the reverse term as well — this flags the window where the
+        // behaviour emerges rather than the one where it vanishes.
+        let (fwd, bwd) = match runtime {
+            Some(rt) => (
+                rt.delta_stat(&pair[0].centers, &pair[1].centers, d, pair[0].k, pair[1].k)
+                    .map_err(|e| format!("pjrt delta_stat: {e}"))? as f64,
+                rt.delta_stat(&pair[1].centers, &pair[0].centers, d, pair[1].k, pair[0].k)
+                    .map_err(|e| format!("pjrt delta_stat: {e}"))? as f64,
+            ),
+            None => (
+                delta_host(&pair[0].centers, &pair[1].centers, d),
+                delta_host(&pair[1].centers, &pair[0].centers, d),
+            ),
+        };
+        deltas.push(fwd + bwd);
+    }
+    Ok(WindowAnalysis { models, deltas })
+}
+
+/// Identify emergent windows: delta_j more than `z_thresh` standard
+/// deviations above the trailing mean (paper: "statistically
+/// significant change in the clusters in w_{alpha+1}").  Returns
+/// window indices (j+1, the window where the new clusters appear).
+pub fn emergent_windows(deltas: &[f64], warmup: usize, z_thresh: f64) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut stats = Welford::new();
+    for (j, &delta) in deltas.iter().enumerate() {
+        if stats.count() >= warmup as u64 {
+            let sd = stats.std_dev().max(1e-12);
+            if (delta - stats.mean()) / sd > z_thresh {
+                out.push(j + 1);
+                continue; // a spike should not poison the baseline
+            }
+        }
+        stats.push(delta);
+    }
+    out
+}
+
+/// Parameters of the paper's scoring function for one emergent cluster.
+#[derive(Clone, Debug)]
+pub struct EmergentCluster {
+    pub center: Vec<f32>,
+    pub sigma2: f32,
+    pub theta: f32,
+    pub lambda: f32,
+}
+
+/// Build scoring clusters from an emergent window's model: clusters
+/// whose centers are far (>= `novelty`) from every center of the
+/// previous window are the emergent ones; theta_k weights sum to 1.
+pub fn emergent_clusters(
+    prev: &KmeansModel,
+    cur: &KmeansModel,
+    novelty: f64,
+) -> Vec<EmergentCluster> {
+    let d = cur.d;
+    let sigma2 = cur.sigma2();
+    let mut picked = Vec::new();
+    for i in 0..cur.k {
+        if cur.counts[i] == 0.0 {
+            continue;
+        }
+        let c = &cur.centers[i * d..(i + 1) * d];
+        let dist = delta_host(c, &prev.centers, d);
+        if dist >= novelty {
+            picked.push((i, cur.counts[i]));
+        }
+    }
+    let total: f32 = picked.iter().map(|(_, c)| c).sum();
+    picked
+        .into_iter()
+        .map(|(i, count)| EmergentCluster {
+            center: cur.centers[i * d..(i + 1) * d].to_vec(),
+            sigma2: sigma2[i],
+            theta: if total > 0.0 { count / total } else { 0.0 },
+            lambda: 1.0,
+        })
+        .collect()
+}
+
+/// Host rho(x) = max_k theta_k exp(-lambda_k^2 ||x-a_k||^2 / 2 sigma_k^2).
+pub fn score_host(x: &[f32], clusters: &[EmergentCluster]) -> f32 {
+    let mut best = 0.0f32;
+    for c in clusters {
+        let mut d2 = 0.0f32;
+        for (xi, ci) in x.iter().zip(&c.center) {
+            d2 += (xi - ci) * (xi - ci);
+        }
+        let rho = c.theta * (-(c.lambda * c.lambda) * d2 / (2.0 * c.sigma2.max(1e-12))).exp();
+        best = best.max(rho);
+    }
+    best
+}
+
+/// Score a batch through the PJRT artifact (or host fallback).
+pub fn score_batch(
+    xs: &[FeatureVector],
+    clusters: &[EmergentCluster],
+    runtime: Option<&Runtime>,
+) -> Result<Vec<f32>, String> {
+    if clusters.is_empty() {
+        return Ok(vec![0.0; xs.len()]);
+    }
+    match runtime {
+        None => Ok(xs.iter().map(|f| score_host(&f.values, clusters)).collect()),
+        Some(rt) => {
+            let d = FEATURE_DIM;
+            let k = clusters.len();
+            let centers: Vec<f32> = clusters.iter().flat_map(|c| c.center.clone()).collect();
+            let sigma2: Vec<f32> = clusters.iter().map(|c| c.sigma2).collect();
+            let theta: Vec<f32> = clusters.iter().map(|c| c.theta).collect();
+            let lam: Vec<f32> = clusters.iter().map(|c| c.lambda).collect();
+            let mut out = Vec::with_capacity(xs.len());
+            for chunk in xs.chunks(rt.shapes.score_batch) {
+                let flat: Vec<f32> = chunk.iter().flat_map(|f| f.values).collect();
+                let scores = rt
+                    .score(&flat, &centers, &sigma2, &theta, &lam, d, k)
+                    .map_err(|e| format!("pjrt score: {e}"))?;
+                out.extend(scores);
+            }
+            Ok(out)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fv(window: u64, src: u64, bias: f32, seed: u64) -> FeatureVector {
+        let mut rng = crate::util::rng::Pcg64::new(seed ^ src);
+        let mut values = [0.0f32; FEATURE_DIM];
+        for v in values.iter_mut().take(6) {
+            *v = bias + rng.next_gaussian() as f32 * 0.1;
+        }
+        FeatureVector { src, window, values }
+    }
+
+    fn stable_window(w: u64, n: usize) -> Vec<FeatureVector> {
+        (0..n).map(|s| fv(w, s as u64, 1.0, 99)).collect()
+    }
+
+    #[test]
+    fn delta_zero_for_identical_models() {
+        let c = vec![1.0f32, 2.0, 3.0, 4.0];
+        assert!(delta_host(&c, &c, 2) < 1e-12);
+        // translation moves every center
+        let shifted: Vec<f32> = c.iter().map(|x| x + 1.0).collect();
+        assert!(delta_host(&c, &shifted, 2) > 0.0);
+    }
+
+    #[test]
+    fn stable_windows_have_small_deltas() {
+        let windows: Vec<Vec<FeatureVector>> = (0..6).map(|w| stable_window(w, 40)).collect();
+        let a = analyze_windows(&windows, 4, 7, None).unwrap();
+        assert_eq!(a.deltas.len(), 5);
+        for &d in &a.deltas {
+            assert!(d < 1.0, "stable regime delta {d}");
+        }
+        assert!(emergent_windows(&a.deltas, 2, 4.0).is_empty());
+    }
+
+    #[test]
+    fn regime_shift_spikes_delta_and_flags_window() {
+        let mut windows: Vec<Vec<FeatureVector>> =
+            (0..8).map(|w| stable_window(w, 40)).collect();
+        // window 5: a third of sources jump to a new behaviour region
+        for f in windows[5].iter_mut().take(13) {
+            for v in f.values.iter_mut().take(6) {
+                *v += 8.0;
+            }
+        }
+        let a = analyze_windows(&windows, 4, 7, None).unwrap();
+        let flagged = emergent_windows(&a.deltas, 2, 4.0);
+        assert!(
+            flagged.contains(&5),
+            "window 5 should flag; deltas {:?} flagged {flagged:?}",
+            a.deltas
+        );
+    }
+
+    #[test]
+    fn emergent_clusters_and_scoring() {
+        let prev_pts: Vec<FeatureVector> = stable_window(0, 60);
+        let mut cur_pts = stable_window(1, 60);
+        for f in cur_pts.iter_mut().take(20) {
+            for v in f.values.iter_mut().take(6) {
+                *v += 8.0;
+            }
+        }
+        let a = analyze_windows(&[prev_pts, cur_pts.clone()], 4, 3, None).unwrap();
+        let em = emergent_clusters(&a.models[0], &a.models[1], 4.0);
+        assert!(!em.is_empty(), "the shifted mass forms a new cluster");
+        let theta_sum: f32 = em.iter().map(|c| c.theta).sum();
+        assert!((theta_sum - 1.0).abs() < 1e-5);
+        // anomalous vectors outscore background ones
+        let scores = score_batch(&cur_pts, &em, None).unwrap();
+        let anom_mean: f32 = scores[..20].iter().sum::<f32>() / 20.0;
+        let bg_mean: f32 = scores[20..].iter().sum::<f32>() / 40.0;
+        assert!(
+            anom_mean > 10.0 * bg_mean.max(1e-9),
+            "anom {anom_mean} vs bg {bg_mean}"
+        );
+    }
+
+    #[test]
+    fn empty_cluster_list_scores_zero() {
+        let xs = stable_window(0, 3);
+        assert_eq!(score_batch(&xs, &[], None).unwrap(), vec![0.0; 3]);
+    }
+}

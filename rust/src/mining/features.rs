@@ -1,0 +1,255 @@
+//! Feature extraction (paper §7.1): "Sphere aggregates the pcap files
+//! by source IP (or other specified entity) and computes files
+//! containing features."
+//!
+//! Per (source, window) we compute a fixed FEATURE_DIM-dimensional
+//! vector of flow statistics, log/ratio-scaled so k-means distances are
+//! meaningful.  Also the Sphere operator that runs this extraction over
+//! packet-file segments.
+
+use std::collections::HashMap;
+
+use crate::mining::pcap::{Packet, PACKET_BYTES};
+use crate::sphere::{OpCtx, OpOutput, OutputMode, SegmentData, SphereOp};
+
+/// Matches the PJRT artifact contract (runtime::SHAPES.n_dim).
+pub const FEATURE_DIM: usize = 16;
+
+/// One source's behaviour inside one window.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FeatureVector {
+    pub src: u64,
+    pub window: u64,
+    pub values: [f32; FEATURE_DIM],
+}
+
+pub const FEATURE_RECORD_BYTES: usize = 16 + FEATURE_DIM * 4;
+
+impl FeatureVector {
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(FEATURE_RECORD_BYTES);
+        out.extend_from_slice(&self.src.to_le_bytes());
+        out.extend_from_slice(&self.window.to_le_bytes());
+        for v in self.values {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    pub fn from_bytes(b: &[u8]) -> Result<FeatureVector, String> {
+        if b.len() != FEATURE_RECORD_BYTES {
+            return Err(format!(
+                "feature record must be {FEATURE_RECORD_BYTES} bytes, got {}",
+                b.len()
+            ));
+        }
+        let mut values = [0.0f32; FEATURE_DIM];
+        for (i, v) in values.iter_mut().enumerate() {
+            *v = f32::from_le_bytes(b[16 + i * 4..20 + i * 4].try_into().unwrap());
+        }
+        Ok(FeatureVector {
+            src: u64::from_le_bytes(b[0..8].try_into().unwrap()),
+            window: u64::from_le_bytes(b[8..16].try_into().unwrap()),
+            values,
+        })
+    }
+}
+
+/// Aggregate packets (one window's worth) into per-source features.
+pub fn extract_features(packets: &[Packet], window: u64) -> Vec<FeatureVector> {
+    struct Acc {
+        pkts: f64,
+        bytes: f64,
+        dsts: std::collections::HashSet<u64>,
+        dports: std::collections::HashSet<u16>,
+        syns: f64,
+        small: f64,
+        large: f64,
+        max_len: f64,
+        first_us: u64,
+        last_us: u64,
+    }
+    let mut by_src: HashMap<u64, Acc> = HashMap::new();
+    for p in packets {
+        let a = by_src.entry(p.src).or_insert_with(|| Acc {
+            pkts: 0.0,
+            bytes: 0.0,
+            dsts: Default::default(),
+            dports: Default::default(),
+            syns: 0.0,
+            small: 0.0,
+            large: 0.0,
+            max_len: 0.0,
+            first_us: p.ts_us,
+            last_us: p.ts_us,
+        });
+        a.pkts += 1.0;
+        a.bytes += p.len as f64;
+        a.dsts.insert(p.dst);
+        a.dports.insert(p.dport);
+        if p.flags & 0x02 != 0 {
+            a.syns += 1.0;
+        }
+        if p.len < 100 {
+            a.small += 1.0;
+        }
+        if p.len > 1000 {
+            a.large += 1.0;
+        }
+        a.max_len = a.max_len.max(p.len as f64);
+        a.first_us = a.first_us.min(p.ts_us);
+        a.last_us = a.last_us.max(p.ts_us);
+    }
+    let mut out: Vec<FeatureVector> = by_src
+        .into_iter()
+        .map(|(src, a)| {
+            let dur_s = ((a.last_us - a.first_us) as f64 / 1e6).max(1e-3);
+            let mut values = [0.0f32; FEATURE_DIM];
+            let f = [
+                (a.pkts + 1.0).ln(),                  // 0 log packet count
+                (a.bytes + 1.0).ln(),                 // 1 log byte count
+                a.bytes / a.pkts,                     // 2 mean packet size
+                (a.dsts.len() as f64 + 1.0).ln(),     // 3 log distinct dsts
+                (a.dports.len() as f64 + 1.0).ln(),   // 4 log distinct dports
+                a.syns / a.pkts,                      // 5 SYN fraction
+                a.small / a.pkts,                     // 6 small-packet frac
+                a.large / a.pkts,                     // 7 large-packet frac
+                a.max_len / 1500.0,                   // 8 max size (norm)
+                (a.bytes / dur_s / 1e3 + 1.0).ln(),   // 9 log KB/s rate
+                a.dsts.len() as f64 / a.pkts,         // 10 dst fan-out ratio
+                a.dports.len() as f64 / a.pkts,       // 11 port fan-out ratio
+            ];
+            for (i, &v) in f.iter().enumerate() {
+                values[i] = v as f32;
+            }
+            // dims 12..16 reserved (zero) — the artifact contract is 16-D
+            FeatureVector {
+                src,
+                window,
+                values,
+            }
+        })
+        .collect();
+    out.sort_by_key(|fv| fv.src);
+    out
+}
+
+/// Scale feature 2 (mean size) into a comparable range; applied before
+/// clustering so no single dimension dominates Euclidean distance.
+pub fn normalize(features: &mut [FeatureVector]) {
+    for fv in features {
+        fv.values[2] /= 1500.0;
+    }
+}
+
+/// Sphere operator: packet-file segments -> feature records.  The
+/// window id rides in `params` (8 LE bytes).
+pub struct AngleFeatureOp;
+
+impl SphereOp for AngleFeatureOp {
+    fn name(&self) -> &str {
+        "angle-features"
+    }
+
+    fn output_mode(&self) -> OutputMode {
+        OutputMode::ToClient
+    }
+
+    fn process(&self, data: &SegmentData, ctx: &OpCtx, out: &mut OpOutput) -> Result<(), String> {
+        let window = if ctx.params.len() >= 8 {
+            u64::from_le_bytes(ctx.params[..8].try_into().unwrap())
+        } else {
+            0
+        };
+        let mut packets = Vec::new();
+        for r in &data.records {
+            // whole-file segments hold many packets; indexed ones hold one
+            if r.len() % PACKET_BYTES != 0 {
+                return Err(format!("record not packet-aligned: {} bytes", r.len()));
+            }
+            for chunk in r.chunks_exact(PACKET_BYTES) {
+                packets.push(Packet::from_bytes(chunk)?);
+            }
+        }
+        let mut feats = extract_features(&packets, window);
+        normalize(&mut feats);
+        for fv in feats {
+            out.emit(0, fv.to_bytes());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mining::pcap::{Regime, TraceGen};
+
+    #[test]
+    fn feature_codec_roundtrip() {
+        let fv = FeatureVector {
+            src: 42,
+            window: 7,
+            values: [1.5; FEATURE_DIM],
+        };
+        assert_eq!(FeatureVector::from_bytes(&fv.to_bytes()).unwrap(), fv);
+        assert!(FeatureVector::from_bytes(&[0u8; 3]).is_err());
+    }
+
+    #[test]
+    fn one_vector_per_source() {
+        let mut g = TraceGen::new(1, 12, 5);
+        let pkts = g.window(0, 30, &[]);
+        let feats = extract_features(&pkts, 0);
+        assert_eq!(feats.len(), 12);
+        assert!(feats.windows(2).all(|w| w[0].src < w[1].src), "sorted");
+        for f in &feats {
+            assert_eq!(f.window, 0);
+            assert!(f.values.iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn scan_features_separate_from_background() {
+        let mut g = TraceGen::new(1, 10, 6);
+        let pkts = g.window(0, 50, &[(0, Regime::Scan)]);
+        let feats = extract_features(&pkts, 0);
+        let scanner = crate::mining::pcap::anonymize_ip([10, 1, 0, 0], 6);
+        let scan = feats.iter().find(|f| f.src == scanner).unwrap();
+        let bg: Vec<&FeatureVector> = feats.iter().filter(|f| f.src != scanner).collect();
+        // scanner: SYN fraction ~1, fan-out ~1, small packets ~1
+        assert!(scan.values[5] > 0.9, "SYN frac {}", scan.values[5]);
+        assert!(scan.values[6] > 0.9, "small frac {}", scan.values[6]);
+        assert!(scan.values[3] > bg[0].values[3] + 1.0, "more distinct dsts");
+        for b in bg {
+            assert!(b.values[5] < 0.3, "background SYN frac {}", b.values[5]);
+        }
+    }
+
+    #[test]
+    fn feature_op_over_whole_file_segment() {
+        let mut g = TraceGen::new(2, 4, 7);
+        let (bytes, n) = g.window_file(3, 20, &[]);
+        assert_eq!(n, 80);
+        let seg = SegmentData {
+            segment: crate::sphere::Segment {
+                id: 0,
+                file: "w3.pcap".into(),
+                first_record: 0,
+                n_records: 0,
+                bytes: bytes.len() as u64,
+                locations: vec![0],
+                whole_file: true,
+            },
+            records: vec![bytes],
+        };
+        let ctx = OpCtx {
+            params: 3u64.to_le_bytes().to_vec(),
+        };
+        let mut out = OpOutput::default();
+        AngleFeatureOp.process(&seg, &ctx, &mut out).unwrap();
+        assert_eq!(out.emitted.len(), 4, "one feature vector per source");
+        let fv = FeatureVector::from_bytes(&out.emitted[0].1).unwrap();
+        assert_eq!(fv.window, 3);
+    }
+}

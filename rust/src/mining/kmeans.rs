@@ -1,0 +1,267 @@
+//! Lloyd's k-means — the clustering engine behind Angle (paper §7.1):
+//! "For each window w_j, clusters are computed with centers a_{j,1},
+//! a_{j,2}, ... a_{j,k}".
+//!
+//! The host implementation is the reference; `fit` optionally routes
+//! each assignment/accumulation step through the PJRT `kmeans_step`
+//! artifact (the L1 Pallas kernel), batching points through the fixed
+//! 4096-row contract.
+
+use crate::runtime::Runtime;
+use crate::util::rng::Pcg64;
+
+/// Result of one clustering fit.
+#[derive(Clone, Debug)]
+pub struct KmeansModel {
+    pub centers: Vec<f32>, // (k, d) row-major
+    pub counts: Vec<f32>,
+    pub inertia: f32,
+    pub iterations: usize,
+    pub k: usize,
+    pub d: usize,
+}
+
+impl KmeansModel {
+    /// Per-cluster variance estimate sigma_k^2 = inertia share / count
+    /// (used by the emergent scoring function rho).
+    pub fn sigma2(&self) -> Vec<f32> {
+        let total: f32 = self.counts.iter().sum();
+        self.counts
+            .iter()
+            .map(|&c| {
+                if c > 0.0 {
+                    (self.inertia / total.max(1.0)).max(1e-6)
+                } else {
+                    1.0
+                }
+            })
+            .collect()
+    }
+}
+
+/// k-means++ style seeding (deterministic): first center random, each
+/// next proportional to squared distance.
+pub fn seed_centers(points: &[f32], d: usize, k: usize, seed: u64) -> Vec<f32> {
+    let n = points.len() / d;
+    assert!(n >= k, "need at least k points");
+    let mut rng = Pcg64::new(seed);
+    let mut centers = Vec::with_capacity(k * d);
+    let first = rng.gen_range(n as u64) as usize;
+    centers.extend_from_slice(&points[first * d..(first + 1) * d]);
+    let mut d2 = vec![f32::MAX; n];
+    for c in 1..k {
+        // update d2 against the newest center
+        let newest = &centers[(c - 1) * d..c * d];
+        let mut sum = 0.0f64;
+        for i in 0..n {
+            let mut dist = 0.0f32;
+            for j in 0..d {
+                let diff = points[i * d + j] - newest[j];
+                dist += diff * diff;
+            }
+            d2[i] = d2[i].min(dist);
+            sum += d2[i] as f64;
+        }
+        // sample proportional to d2
+        let mut target = rng.next_f64() * sum;
+        let mut pick = n - 1;
+        for (i, &w) in d2.iter().enumerate() {
+            target -= w as f64;
+            if target <= 0.0 {
+                pick = i;
+                break;
+            }
+        }
+        centers.extend_from_slice(&points[pick * d..(pick + 1) * d]);
+    }
+    centers
+}
+
+/// One host-side Lloyd's step: returns (sums, counts, inertia).
+pub fn step_host(points: &[f32], centers: &[f32], d: usize, k: usize) -> (Vec<f32>, Vec<f32>, f32) {
+    let n = points.len() / d;
+    let mut sums = vec![0.0f32; k * d];
+    let mut counts = vec![0.0f32; k];
+    let mut inertia = 0.0f32;
+    for i in 0..n {
+        let p = &points[i * d..(i + 1) * d];
+        let mut best = (f32::MAX, 0usize);
+        for c in 0..k {
+            let ctr = &centers[c * d..(c + 1) * d];
+            let mut dist = 0.0f32;
+            for j in 0..d {
+                let diff = p[j] - ctr[j];
+                dist += diff * diff;
+            }
+            if dist < best.0 {
+                best = (dist, c);
+            }
+        }
+        counts[best.1] += 1.0;
+        inertia += best.0;
+        for j in 0..d {
+            sums[best.1 * d + j] += p[j];
+        }
+    }
+    (sums, counts, inertia)
+}
+
+/// Fit k-means with at most `max_iters` Lloyd's iterations.  When
+/// `runtime` is provided, the per-step accumulation runs on the PJRT
+/// artifact (batched through the 4096-point contract); otherwise on the
+/// host.  Both paths produce identical models (tested).
+pub fn fit(
+    points: &[f32],
+    d: usize,
+    k: usize,
+    max_iters: usize,
+    seed: u64,
+    runtime: Option<&Runtime>,
+) -> Result<KmeansModel, String> {
+    let n = points.len() / d;
+    if n * d != points.len() {
+        return Err("ragged points".into());
+    }
+    if n < k {
+        return Err(format!("n={n} < k={k}"));
+    }
+    let mut centers = seed_centers(points, d, k, seed);
+    let mut counts = vec![0.0f32; k];
+    let mut inertia = f32::MAX;
+    let mut iterations = 0;
+    for _ in 0..max_iters {
+        iterations += 1;
+        let (sums, new_counts, new_inertia) = match runtime {
+            None => step_host(points, &centers, d, k),
+            Some(rt) => {
+                // Batch through the fixed-shape artifact.
+                let batch = rt.shapes.n_points;
+                let mut sums = vec![0.0f32; k * d];
+                let mut cts = vec![0.0f32; k];
+                let mut inert = 0.0f32;
+                for chunk in points.chunks(batch * d) {
+                    let (s, c, i) = rt
+                        .kmeans_step(chunk, &centers, d, k)
+                        .map_err(|e| format!("pjrt kmeans_step: {e}"))?;
+                    for (acc, v) in sums.iter_mut().zip(&s) {
+                        *acc += v;
+                    }
+                    for (acc, v) in cts.iter_mut().zip(&c) {
+                        *acc += v;
+                    }
+                    inert += i;
+                }
+                (sums, cts, inert)
+            }
+        };
+        // Update centers; empty clusters keep their position.
+        let mut moved = 0.0f32;
+        for c in 0..k {
+            if new_counts[c] > 0.0 {
+                for j in 0..d {
+                    let new = sums[c * d + j] / new_counts[c];
+                    moved += (new - centers[c * d + j]).abs();
+                    centers[c * d + j] = new;
+                }
+            }
+        }
+        counts = new_counts;
+        let converged = moved < 1e-6 || (inertia - new_inertia).abs() < 1e-4 * inertia.max(1.0);
+        inertia = new_inertia;
+        if converged {
+            break;
+        }
+    }
+    Ok(KmeansModel {
+        centers,
+        counts,
+        inertia,
+        iterations,
+        k,
+        d,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blobs(n_per: usize, seed: u64) -> Vec<f32> {
+        // 3 well-separated 2-D blobs
+        let mut rng = Pcg64::new(seed);
+        let centers = [(0.0, 0.0), (10.0, 0.0), (0.0, 10.0)];
+        let mut pts = Vec::new();
+        for &(cx, cy) in &centers {
+            for _ in 0..n_per {
+                pts.push(cx + rng.next_gaussian() as f32 * 0.5);
+                pts.push(cy + rng.next_gaussian() as f32 * 0.5);
+            }
+        }
+        pts
+    }
+
+    #[test]
+    fn fits_separated_blobs() {
+        let pts = blobs(50, 1);
+        let m = fit(&pts, 2, 3, 50, 42, None).unwrap();
+        assert_eq!(m.centers.len(), 6);
+        // every blob got ~50 points
+        let mut counts = m.counts.clone();
+        counts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(counts, vec![50.0, 50.0, 50.0]);
+        // centers near the true blob centers
+        let mut found = [false; 3];
+        for c in m.centers.chunks(2) {
+            for (i, &(cx, cy)) in [(0.0, 0.0), (10.0, 0.0), (0.0, 10.0)].iter().enumerate() {
+                if (c[0] - cx).abs() < 1.0 && (c[1] - cy).abs() < 1.0 {
+                    found[i] = true;
+                }
+            }
+        }
+        assert!(found.iter().all(|&f| f), "centers {:?}", m.centers);
+        assert!(m.inertia < 200.0);
+    }
+
+    #[test]
+    fn host_step_conserves_mass() {
+        let pts = blobs(20, 3);
+        let ctr = seed_centers(&pts, 2, 3, 7);
+        let (sums, counts, inertia) = step_host(&pts, &ctr, 2, 3);
+        assert_eq!(counts.iter().sum::<f32>(), 60.0);
+        assert!(inertia >= 0.0);
+        // sum of sums == sum of points, coordinate-wise
+        let mut total = [0.0f32; 2];
+        for p in pts.chunks(2) {
+            total[0] += p[0];
+            total[1] += p[1];
+        }
+        let mut got = [0.0f32; 2];
+        for s in sums.chunks(2) {
+            got[0] += s[0];
+            got[1] += s[1];
+        }
+        assert!((got[0] - total[0]).abs() < 1e-2);
+        assert!((got[1] - total[1]).abs() < 1e-2);
+    }
+
+    #[test]
+    fn seeding_is_deterministic_and_distinct() {
+        let pts = blobs(30, 5);
+        let a = seed_centers(&pts, 2, 3, 9);
+        let b = seed_centers(&pts, 2, 3, 9);
+        assert_eq!(a, b);
+        // k-means++ seeds land in distinct blobs with high probability
+        let dist = |i: usize, j: usize| -> f32 {
+            let (ax, ay) = (a[i * 2], a[i * 2 + 1]);
+            let (bx, by) = (a[j * 2], a[j * 2 + 1]);
+            ((ax - bx).powi(2) + (ay - by).powi(2)).sqrt()
+        };
+        assert!(dist(0, 1) > 3.0 && dist(1, 2) > 3.0 && dist(0, 2) > 3.0);
+    }
+
+    #[test]
+    fn rejects_bad_shapes() {
+        assert!(fit(&[1.0, 2.0, 3.0], 2, 1, 5, 0, None).is_err()); // ragged
+        assert!(fit(&[1.0, 2.0], 2, 3, 5, 0, None).is_err()); // n < k
+    }
+}

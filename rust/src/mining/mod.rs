@@ -1,0 +1,27 @@
+//! The evaluation workloads (paper §6–7): Terasort, Terasplit, and the
+//! Angle anomaly-detection application, plus the clustering/statistics
+//! machinery they share.  All are real implementations — the Sphere
+//! operators run on actual bytes — with simulation cost models carrying
+//! them to paper scale.
+
+pub mod angle;
+pub mod emergent;
+pub mod features;
+pub mod kmeans;
+pub mod pcap;
+pub mod terasort;
+pub mod terasplit;
+
+pub use angle::{run_pipeline, simulate_angle_clustering, AngleReport, AngleScenario};
+pub use emergent::{
+    analyze_windows, delta_host, emergent_clusters, emergent_windows, score_batch,
+    score_host, EmergentCluster, WindowAnalysis,
+};
+pub use features::{extract_features, AngleFeatureOp, FeatureVector, FEATURE_DIM};
+pub use kmeans::{fit, seed_centers, step_host, KmeansModel};
+pub use pcap::{anonymize_ip, Packet, Regime, TraceGen, PACKET_BYTES};
+pub use terasort::{
+    generate_records, key_bucket, record_index, validate_sorted, TeraPartitionOp, TeraSortOp,
+    KEY_BYTES, RECORD_BYTES,
+};
+pub use terasplit::{aggregate_labels, best_split_host, labels_of, record_label};

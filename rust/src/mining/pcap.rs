@@ -1,0 +1,259 @@
+//! Synthetic Angle sensor traces (substitution for the paper's pcap
+//! feeds; DESIGN.md §2).
+//!
+//! The paper's Angle sensors "zero out the content, hash the source and
+//! destination IP to preserve privacy, package moving windows of
+//! anonymized packets in pcap files".  We generate behaviourally
+//! structured traces directly: a population of background sources with
+//! stable flow statistics, plus *injected regime shifts* (port-scan and
+//! exfiltration behaviours switching on at known times) so the
+//! emergent-cluster detector has planted ground truth to find.
+
+use crate::util::rng::Pcg64;
+
+/// One anonymized packet record (fixed 32-byte wire encoding).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Packet {
+    /// Microseconds since trace start.
+    pub ts_us: u64,
+    /// Salted hash of source IP (anonymization, paper §7.1).
+    pub src: u64,
+    /// Salted hash of destination IP.
+    pub dst: u64,
+    pub sport: u16,
+    pub dport: u16,
+    pub len: u16,
+    /// TCP flags (SYN = 0x02 matters for scan detection).
+    pub flags: u8,
+    pub _pad: u8,
+}
+
+pub const PACKET_BYTES: usize = 32;
+
+impl Packet {
+    pub fn to_bytes(&self) -> [u8; PACKET_BYTES] {
+        let mut out = [0u8; PACKET_BYTES];
+        out[0..8].copy_from_slice(&self.ts_us.to_le_bytes());
+        out[8..16].copy_from_slice(&self.src.to_le_bytes());
+        out[16..24].copy_from_slice(&self.dst.to_le_bytes());
+        out[24..26].copy_from_slice(&self.sport.to_le_bytes());
+        out[26..28].copy_from_slice(&self.dport.to_le_bytes());
+        out[28..30].copy_from_slice(&self.len.to_le_bytes());
+        out[30] = self.flags;
+        out[31] = self._pad;
+        out
+    }
+
+    pub fn from_bytes(b: &[u8]) -> Result<Packet, String> {
+        if b.len() != PACKET_BYTES {
+            return Err(format!("packet record must be {PACKET_BYTES} bytes, got {}", b.len()));
+        }
+        Ok(Packet {
+            ts_us: u64::from_le_bytes(b[0..8].try_into().unwrap()),
+            src: u64::from_le_bytes(b[8..16].try_into().unwrap()),
+            dst: u64::from_le_bytes(b[16..24].try_into().unwrap()),
+            sport: u16::from_le_bytes(b[24..26].try_into().unwrap()),
+            dport: u16::from_le_bytes(b[26..28].try_into().unwrap()),
+            len: u16::from_le_bytes(b[28..30].try_into().unwrap()),
+            flags: b[30],
+            _pad: b[31],
+        })
+    }
+}
+
+/// Salted IP anonymization (what the sensor applies before shipping).
+pub fn anonymize_ip(ip: [u8; 4], salt: u64) -> u64 {
+    let mut h = salt ^ 0xcbf2_9ce4_8422_2325;
+    for b in ip {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// Behavioural regime of a source.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Regime {
+    /// Normal traffic: few destinations, normal packet sizes.
+    Background,
+    /// Port scan: many destinations/ports, tiny SYN packets.
+    Scan,
+    /// Exfiltration: one destination, large sustained transfers.
+    Exfil,
+}
+
+/// Trace generator for one sensor site.
+pub struct TraceGen {
+    pub sensor_id: u32,
+    pub n_sources: usize,
+    rng: Pcg64,
+    salt: u64,
+}
+
+impl TraceGen {
+    pub fn new(sensor_id: u32, n_sources: usize, seed: u64) -> Self {
+        Self {
+            sensor_id,
+            n_sources,
+            rng: Pcg64::new(seed ^ (sensor_id as u64) << 32),
+            salt: seed,
+        }
+    }
+
+    /// Generate one time-window's packets. `anomalous_sources` switch to
+    /// the given regime in this window (the planted emergent behaviour).
+    pub fn window(
+        &mut self,
+        window_idx: u64,
+        packets_per_source: usize,
+        anomalous: &[(usize, Regime)],
+    ) -> Vec<Packet> {
+        let mut out = Vec::new();
+        let window_us = 600_000_000u64; // 10-minute windows (paper Fig 5)
+        let t0 = window_idx * window_us;
+        for s in 0..self.n_sources {
+            let regime = anomalous
+                .iter()
+                .find(|(idx, _)| *idx == s)
+                .map(|(_, r)| *r)
+                .unwrap_or(Regime::Background);
+            let src = anonymize_ip(
+                [10, self.sensor_id as u8, (s / 250) as u8, (s % 250) as u8],
+                self.salt,
+            );
+            let n = match regime {
+                Regime::Background => packets_per_source,
+                Regime::Scan => packets_per_source * 4, // scans are chatty
+                Regime::Exfil => packets_per_source * 2,
+            };
+            for _ in 0..n {
+                let ts_us = t0 + (self.rng.next_f64() * window_us as f64) as u64;
+                let p = match regime {
+                    Regime::Background => {
+                        // a handful of favourite destinations, normal sizes
+                        let dst_idx = self.rng.gen_range(5);
+                        Packet {
+                            ts_us,
+                            src,
+                            dst: anonymize_ip([192, 168, 1, dst_idx as u8], self.salt),
+                            sport: 32768 + self.rng.gen_range(28000) as u16,
+                            dport: [80u16, 443, 22, 25, 53][self.rng.gen_range(5) as usize],
+                            len: (self.rng.next_pareto(80.0, 1.3).min(1500.0)) as u16,
+                            flags: if self.rng.next_f64() < 0.05 { 0x02 } else { 0x10 },
+                            _pad: 0,
+                        }
+                    }
+                    Regime::Scan => Packet {
+                        ts_us,
+                        src,
+                        // fresh destination + port almost every packet
+                        dst: anonymize_ip(
+                            [172, 16, self.rng.gen_range(255) as u8, self.rng.gen_range(255) as u8],
+                            self.salt,
+                        ),
+                        sport: 40000 + self.rng.gen_range(20000) as u16,
+                        dport: self.rng.gen_range(65535) as u16,
+                        len: 40 + self.rng.gen_range(4) as u16,
+                        flags: 0x02, // SYN
+                        _pad: 0,
+                    },
+                    Regime::Exfil => Packet {
+                        ts_us,
+                        src,
+                        dst: anonymize_ip([203, 0, 113, 7], self.salt),
+                        sport: 51234,
+                        dport: 443,
+                        len: 1400 + self.rng.gen_range(100) as u16,
+                        flags: 0x10,
+                        _pad: 0,
+                    },
+                };
+                out.push(p);
+            }
+        }
+        out.sort_by_key(|p| p.ts_us);
+        out
+    }
+
+    /// Serialize a window to a Sector-ready byte buffer + record count.
+    pub fn window_file(
+        &mut self,
+        window_idx: u64,
+        packets_per_source: usize,
+        anomalous: &[(usize, Regime)],
+    ) -> (Vec<u8>, usize) {
+        let pkts = self.window(window_idx, packets_per_source, anomalous);
+        let mut bytes = Vec::with_capacity(pkts.len() * PACKET_BYTES);
+        for p in &pkts {
+            bytes.extend_from_slice(&p.to_bytes());
+        }
+        (bytes, pkts.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn packet_codec_roundtrip() {
+        let p = Packet {
+            ts_us: 123456789,
+            src: 0xdeadbeef,
+            dst: 0xfeedface,
+            sport: 5555,
+            dport: 443,
+            len: 1200,
+            flags: 0x12,
+            _pad: 0,
+        };
+        assert_eq!(Packet::from_bytes(&p.to_bytes()).unwrap(), p);
+        assert!(Packet::from_bytes(&[0u8; 31]).is_err());
+    }
+
+    #[test]
+    fn anonymization_is_salted_and_stable() {
+        let a = anonymize_ip([10, 0, 0, 1], 7);
+        assert_eq!(a, anonymize_ip([10, 0, 0, 1], 7));
+        assert_ne!(a, anonymize_ip([10, 0, 0, 1], 8), "salt matters");
+        assert_ne!(a, anonymize_ip([10, 0, 0, 2], 7));
+    }
+
+    #[test]
+    fn background_window_shape() {
+        let mut g = TraceGen::new(1, 20, 42);
+        let pkts = g.window(0, 50, &[]);
+        assert_eq!(pkts.len(), 20 * 50);
+        // sorted by time, inside the window
+        for w in pkts.windows(2) {
+            assert!(w[0].ts_us <= w[1].ts_us);
+        }
+        assert!(pkts.last().unwrap().ts_us < 600_000_000);
+        // ~5% SYN in background traffic
+        let syn = pkts.iter().filter(|p| p.flags == 0x02).count();
+        assert!(syn < pkts.len() / 10);
+    }
+
+    #[test]
+    fn scan_regime_looks_like_a_scan() {
+        let mut g = TraceGen::new(2, 10, 43);
+        let pkts = g.window(0, 40, &[(3, Regime::Scan)]);
+        let scanner = anonymize_ip([10, 2, 0, 3], 43);
+        let scan_pkts: Vec<&Packet> = pkts.iter().filter(|p| p.src == scanner).collect();
+        assert_eq!(scan_pkts.len(), 160, "scans are 4x chattier");
+        assert!(scan_pkts.iter().all(|p| p.flags == 0x02));
+        assert!(scan_pkts.iter().all(|p| p.len < 50));
+        let distinct_dst: std::collections::HashSet<u64> =
+            scan_pkts.iter().map(|p| p.dst).collect();
+        assert!(distinct_dst.len() > 100, "scan hits many destinations");
+    }
+
+    #[test]
+    fn window_file_roundtrips() {
+        let mut g = TraceGen::new(3, 5, 44);
+        let (bytes, n) = g.window_file(2, 10, &[]);
+        assert_eq!(bytes.len(), n * PACKET_BYTES);
+        let p0 = Packet::from_bytes(&bytes[..PACKET_BYTES]).unwrap();
+        assert!(p0.ts_us >= 2 * 600_000_000);
+    }
+}

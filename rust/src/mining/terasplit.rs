@@ -1,0 +1,165 @@
+//! Terasplit (paper §6.2): "Terasplit takes data that has been sorted,
+//! for example by Terasort, and computes a single split for a tree
+//! based upon entropy" — one CART split (Breiman et al.) over the
+//! key-sorted stream.
+//!
+//! The class label of a record is derived from its payload (a hash into
+//! C classes); sorting by key gives the feature ordering.  The host
+//! implementation here is the oracle; the hot path goes through the
+//! PJRT `split_gain` artifact (L1 Pallas scan inside), with
+//! `aggregate_labels` shrinking arbitrarily long streams to the
+//! artifact's block contract first.
+
+use crate::mining::terasort::{KEY_BYTES, RECORD_BYTES};
+
+/// Derive a class label in [0, classes) from a sorted record: a cheap
+/// payload hash (labels must NOT correlate perfectly with the sort key,
+/// or every split is trivial).
+pub fn record_label(record: &[u8], classes: u8) -> u8 {
+    debug_assert_eq!(record.len(), RECORD_BYTES);
+    // Hash the low digits of the record-number tag (the leading digits
+    // are constant for realistic record counts).
+    let mut h = 0xcbu8;
+    for &b in &record[KEY_BYTES + 12..KEY_BYTES + 20] {
+        h = h.wrapping_mul(31).wrapping_add(b);
+    }
+    h % classes
+}
+
+/// Labels of a concatenated sorted-record buffer.
+pub fn labels_of(data: &[u8], classes: u8) -> Vec<u8> {
+    data.chunks_exact(RECORD_BYTES)
+        .map(|r| record_label(r, classes))
+        .collect()
+}
+
+/// Host oracle: best split position + gain (bits) of a label sequence.
+/// O(n·c); the PJRT artifact computes the same thing blocked.
+pub fn best_split_host(labels: &[u8], classes: u8) -> (f64, usize) {
+    let c = classes as usize;
+    let n = labels.len();
+    if n < 2 {
+        return (0.0, 0);
+    }
+    let mut total = vec![0f64; c];
+    for &l in labels {
+        total[l as usize] += 1.0;
+    }
+    let entropy = |h: &[f64]| -> f64 {
+        let s: f64 = h.iter().sum();
+        if s <= 0.0 {
+            return 0.0;
+        }
+        -h.iter()
+            .filter(|&&x| x > 0.0)
+            .map(|&x| {
+                let p = x / s;
+                p * p.log2()
+            })
+            .sum::<f64>()
+    };
+    let parent = entropy(&total);
+    let mut left = vec![0f64; c];
+    let mut best = (f64::NEG_INFINITY, 0usize);
+    for (i, &l) in labels.iter().enumerate().take(n - 1) {
+        left[l as usize] += 1.0;
+        let n_l = (i + 1) as f64;
+        let n_r = (n - i - 1) as f64;
+        let right: Vec<f64> = total.iter().zip(&left).map(|(t, l)| t - l).collect();
+        let gain = parent - (n_l * entropy(&left) + n_r * entropy(&right)) / n as f64;
+        if gain > best.0 {
+            best = (gain, i);
+        }
+    }
+    best
+}
+
+/// Shrink a long label stream to at most `max_len` by majority-pooling
+/// fixed-width windows — the pre-aggregation used before calling the
+/// fixed-shape PJRT artifact. Split positions scale back up by the
+/// pooling factor.
+pub fn aggregate_labels(labels: &[u8], classes: u8, max_len: usize) -> (Vec<u8>, usize) {
+    assert!(max_len > 0);
+    if labels.len() <= max_len {
+        return (labels.to_vec(), 1);
+    }
+    let factor = labels.len().div_ceil(max_len);
+    let mut out = Vec::with_capacity(labels.len() / factor + 1);
+    for window in labels.chunks(factor) {
+        let mut counts = vec![0u32; classes as usize];
+        for &l in window {
+            counts[l as usize] += 1;
+        }
+        let majority = counts
+            .iter()
+            .enumerate()
+            .max_by_key(|(i, &c)| (c, usize::MAX - i))
+            .unwrap()
+            .0;
+        out.push(majority as u8);
+    }
+    (out, factor)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mining::terasort::generate_records;
+
+    #[test]
+    fn labels_are_deterministic_and_bounded() {
+        let data = generate_records(200, 5);
+        let l1 = labels_of(&data, 8);
+        let l2 = labels_of(&data, 8);
+        assert_eq!(l1, l2);
+        assert_eq!(l1.len(), 200);
+        assert!(l1.iter().all(|&l| l < 8));
+        // multiple classes actually occur
+        let distinct: std::collections::HashSet<u8> = l1.iter().copied().collect();
+        assert!(distinct.len() >= 4, "labels too degenerate: {distinct:?}");
+    }
+
+    #[test]
+    fn perfect_split_detected() {
+        let mut labels = vec![0u8; 100];
+        labels.extend(vec![1u8; 100]);
+        let (gain, idx) = best_split_host(&labels, 2);
+        assert!((gain - 1.0).abs() < 1e-9, "gain {gain}");
+        assert_eq!(idx, 99);
+    }
+
+    #[test]
+    fn pure_stream_has_no_gain() {
+        let labels = vec![3u8; 64];
+        let (gain, _) = best_split_host(&labels, 4);
+        assert!(gain.abs() < 1e-12);
+        assert_eq!(best_split_host(&[1], 2).0, 0.0, "degenerate input");
+    }
+
+    #[test]
+    fn gain_is_nonnegative_and_bounded_by_parent_entropy() {
+        let data = generate_records(500, 11);
+        let labels = labels_of(&data, 8);
+        let (gain, idx) = best_split_host(&labels, 8);
+        assert!(gain >= -1e-12);
+        assert!(gain <= 3.0 + 1e-9, "<= log2(8)");
+        assert!(idx < labels.len() - 1);
+    }
+
+    #[test]
+    fn aggregation_preserves_structure() {
+        let mut labels = vec![0u8; 1000];
+        labels.extend(vec![1u8; 1000]);
+        let (small, factor) = aggregate_labels(&labels, 2, 100);
+        assert!(small.len() <= 100);
+        assert_eq!(factor, 20);
+        // boundary survives pooling
+        let (g_small, i_small) = best_split_host(&small, 2);
+        assert!((g_small - 1.0).abs() < 1e-9);
+        assert_eq!((i_small + 1) * factor, 1000);
+        // short streams pass through untouched
+        let (same, f1) = aggregate_labels(&labels[..50], 2, 100);
+        assert_eq!(f1, 1);
+        assert_eq!(same.len(), 50);
+    }
+}

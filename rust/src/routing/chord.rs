@@ -1,0 +1,305 @@
+//! Chord peer-to-peer routing (Stoica et al., SIGCOMM'01) — the routing
+//! layer used by the version of Sector evaluated in the paper (§5):
+//! "a peer-to-peer routing protocol (the Chord protocol) is used so that
+//! nodes can be easily added and removed from the system."
+//!
+//! Identifiers live in a 64-bit ring; a key is owned by its *successor*
+//! (first node clockwise at or after the key).  Lookups walk finger
+//! tables greedily and take O(log n) hops; `lookup` returns the hop
+//! count so the benches can report routing cost.
+
+use std::collections::BTreeMap;
+
+/// 64-bit ring id.
+pub type Id = u64;
+
+pub const M: usize = 64; // bits in the identifier space
+
+/// FNV-1a 64-bit — the name → ring-id hash (no crypto needed here; we
+/// only require uniformity and determinism).
+pub fn hash_name(name: &str) -> Id {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in name.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// Is `x` in the half-open ring interval (a, b]?
+#[inline]
+pub fn in_interval_oc(x: Id, a: Id, b: Id) -> bool {
+    if a < b {
+        x > a && x <= b
+    } else if a > b {
+        x > a || x <= b
+    } else {
+        true // full circle: single-node ring owns everything
+    }
+}
+
+/// Is `x` in the open ring interval (a, b)?
+#[inline]
+pub fn in_interval_oo(x: Id, a: Id, b: Id) -> bool {
+    if a < b {
+        x > a && x < b
+    } else if a > b {
+        x > a || x < b
+    } else {
+        x != a
+    }
+}
+
+#[derive(Clone, Debug)]
+struct Node {
+    /// finger[i] = successor(id + 2^i); entry 0 is the immediate successor.
+    finger: Vec<Id>,
+    predecessor: Id,
+}
+
+/// The ring: a registry of live nodes with per-node finger state.
+/// (In the deployed system each node holds only its own row; the ring
+/// struct is the omniscient test/sim container, with per-node state kept
+/// faithfully separate so lookups only use node-local information.)
+#[derive(Clone, Debug, Default)]
+pub struct ChordRing {
+    nodes: BTreeMap<Id, Node>,
+}
+
+impl ChordRing {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Build a ring from node ids, fully stabilized.
+    pub fn build(ids: &[Id]) -> Self {
+        let mut ring = Self::new();
+        for &id in ids {
+            ring.nodes.insert(
+                id,
+                Node {
+                    finger: vec![id; M],
+                    predecessor: id,
+                },
+            );
+        }
+        ring.rebuild_all_fingers();
+        ring
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn node_ids(&self) -> impl Iterator<Item = Id> + '_ {
+        self.nodes.keys().copied()
+    }
+
+    pub fn contains(&self, id: Id) -> bool {
+        self.nodes.contains_key(&id)
+    }
+
+    /// Ground truth: the first live node at or after `key` on the ring.
+    pub fn naive_successor(&self, key: Id) -> Option<Id> {
+        if self.nodes.is_empty() {
+            return None;
+        }
+        self.nodes
+            .range(key..)
+            .next()
+            .map(|(id, _)| *id)
+            .or_else(|| self.nodes.keys().next().copied())
+    }
+
+    fn rebuild_all_fingers(&mut self) {
+        let ids: Vec<Id> = self.nodes.keys().copied().collect();
+        for &id in &ids {
+            let mut finger = Vec::with_capacity(M);
+            for i in 0..M {
+                let start = id.wrapping_add(1u64.wrapping_shl(i as u32));
+                finger.push(self.naive_successor(start).unwrap());
+            }
+            let pred = self.naive_predecessor(id);
+            let n = self.nodes.get_mut(&id).unwrap();
+            n.finger = finger;
+            n.predecessor = pred;
+        }
+    }
+
+    fn naive_predecessor(&self, id: Id) -> Id {
+        self.nodes
+            .range(..id)
+            .next_back()
+            .map(|(i, _)| *i)
+            .or_else(|| self.nodes.keys().next_back().copied())
+            .unwrap()
+    }
+
+    /// Join a node and re-stabilize. (The deployed protocol stabilizes
+    /// lazily; the model stabilizes eagerly, which is the fixed point the
+    /// lazy protocol converges to.)
+    pub fn join(&mut self, id: Id) {
+        self.nodes.insert(
+            id,
+            Node {
+                finger: vec![id; M],
+                predecessor: id,
+            },
+        );
+        self.rebuild_all_fingers();
+    }
+
+    /// Remove a node (leave or failure) and re-stabilize.
+    pub fn leave(&mut self, id: Id) -> bool {
+        let removed = self.nodes.remove(&id).is_some();
+        if removed && !self.nodes.is_empty() {
+            self.rebuild_all_fingers();
+        }
+        removed
+    }
+
+    /// Finger-table lookup from `start_node`: returns (owner, hops).
+    /// Each hop uses only the current node's own finger table, exactly
+    /// as the distributed protocol would.
+    pub fn lookup(&self, start_node: Id, key: Id) -> Option<(Id, u32)> {
+        if self.nodes.is_empty() {
+            return None;
+        }
+        assert!(self.contains(start_node), "lookup from unknown node");
+        let mut current = start_node;
+        let mut hops = 0u32;
+        loop {
+            let node = &self.nodes[&current];
+            let successor = node.finger[0];
+            if in_interval_oc(key, current, successor) {
+                return Some((successor, hops + 1));
+            }
+            // closest preceding finger
+            let mut next = current;
+            for i in (0..M).rev() {
+                let f = node.finger[i];
+                if in_interval_oo(f, current, key) {
+                    next = f;
+                    break;
+                }
+            }
+            if next == current {
+                // fingers degenerate (e.g. 1-node ring): successor owns it
+                return Some((successor, hops + 1));
+            }
+            current = next;
+            hops += 1;
+            debug_assert!(hops as usize <= 2 * M, "lookup did not converge");
+            if hops as usize > 2 * M {
+                return None;
+            }
+        }
+    }
+
+    /// Owner of a named entity (hash + successor).
+    pub fn owner_of(&self, name: &str) -> Option<Id> {
+        self.naive_successor(hash_name(name))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn ring_of(n: usize, seed: u64) -> (ChordRing, Vec<Id>) {
+        let mut rng = Pcg64::new(seed);
+        let mut ids: Vec<Id> = (0..n).map(|_| rng.next_u64()).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        (ChordRing::build(&ids), ids)
+    }
+
+    #[test]
+    fn hash_is_stable_and_spread() {
+        assert_eq!(hash_name("file01.dat"), hash_name("file01.dat"));
+        assert_ne!(hash_name("file01.dat"), hash_name("file02.dat"));
+    }
+
+    #[test]
+    fn intervals_wraparound() {
+        assert!(in_interval_oc(5, 3, 7));
+        assert!(!in_interval_oc(3, 3, 7));
+        assert!(in_interval_oc(7, 3, 7));
+        // wrapped: (u64::MAX-1, 2]
+        assert!(in_interval_oc(0, u64::MAX - 1, 2));
+        assert!(in_interval_oc(u64::MAX, u64::MAX - 1, 2));
+        assert!(!in_interval_oo(2, u64::MAX - 1, 2));
+    }
+
+    #[test]
+    fn lookup_matches_naive_successor() {
+        let (ring, ids) = ring_of(50, 1);
+        let mut rng = Pcg64::new(2);
+        for _ in 0..500 {
+            let key = rng.next_u64();
+            let start = ids[rng.gen_range(ids.len() as u64) as usize];
+            let (owner, _) = ring.lookup(start, key).unwrap();
+            assert_eq!(owner, ring.naive_successor(key).unwrap());
+        }
+    }
+
+    #[test]
+    fn hop_count_is_logarithmic() {
+        let (ring, ids) = ring_of(256, 3);
+        let mut rng = Pcg64::new(4);
+        let mut max_hops = 0;
+        for _ in 0..300 {
+            let key = rng.next_u64();
+            let start = ids[rng.gen_range(ids.len() as u64) as usize];
+            let (_, hops) = ring.lookup(start, key).unwrap();
+            max_hops = max_hops.max(hops);
+        }
+        // log2(256) = 8; allow slack for the greedy walk.
+        assert!(max_hops <= 16, "max hops {max_hops}");
+    }
+
+    #[test]
+    fn single_node_ring_owns_everything() {
+        let ring = ChordRing::build(&[42]);
+        assert_eq!(ring.lookup(42, 0).unwrap().0, 42);
+        assert_eq!(ring.lookup(42, u64::MAX).unwrap().0, 42);
+    }
+
+    #[test]
+    fn join_and_leave_preserve_correctness() {
+        let (mut ring, _) = ring_of(16, 5);
+        ring.join(12345);
+        assert!(ring.contains(12345));
+        let mut rng = Pcg64::new(6);
+        for _ in 0..100 {
+            let key = rng.next_u64();
+            let (owner, _) = ring.lookup(12345, key).unwrap();
+            assert_eq!(owner, ring.naive_successor(key).unwrap());
+        }
+        assert!(ring.leave(12345));
+        assert!(!ring.leave(12345), "double-leave is a no-op");
+        let start = ring.node_ids().next().unwrap();
+        for _ in 0..100 {
+            let key = rng.next_u64();
+            let (owner, _) = ring.lookup(start, key).unwrap();
+            assert_eq!(owner, ring.naive_successor(key).unwrap());
+        }
+    }
+
+    #[test]
+    fn keys_redistribute_on_leave() {
+        let (mut ring, ids) = ring_of(8, 7);
+        let victim = ids[3];
+        let key = victim.wrapping_sub(1); // owned by victim
+        assert_eq!(ring.naive_successor(key).unwrap(), victim);
+        ring.leave(victim);
+        let new_owner = ring.naive_successor(key).unwrap();
+        assert_ne!(new_owner, victim);
+        assert!(ring.contains(new_owner));
+    }
+}

@@ -1,0 +1,94 @@
+//! Routing services (paper §5).  Sector interfaces with routing through
+//! a narrow API so protocols can be swapped; the evaluated version used
+//! Chord ([`chord`]), and the paper's "next version" sketches
+//! location-aware routing for uniform/non-uniform clouds — implemented
+//! here as [`LocationAware`], used by the ablation benches.
+
+pub mod chord;
+
+pub use chord::{hash_name, ChordRing, Id};
+
+/// The routing-layer API Sector consumes (paper §4 step 2: "the Sector
+/// Server runs a look-up inside the server network using the services
+/// from the routing layer").
+pub trait Router {
+    /// Node responsible for a named entity's metadata.
+    fn locate(&self, name: &str) -> Option<Id>;
+    /// Route cost in overlay hops from `from` (for latency accounting).
+    fn hops(&self, from: Id, name: &str) -> u32;
+    fn node_count(&self) -> usize;
+}
+
+impl Router for ChordRing {
+    fn locate(&self, name: &str) -> Option<Id> {
+        self.owner_of(name)
+    }
+
+    fn hops(&self, from: Id, name: &str) -> u32 {
+        self.lookup(from, hash_name(name)).map(|(_, h)| h).unwrap_or(0)
+    }
+
+    fn node_count(&self) -> usize {
+        self.len()
+    }
+}
+
+/// The paper's §5 "next version": specialized routing for clouds where
+/// bandwidth/RTT between clusters is known — a one-hop directory that
+/// prefers replicas in the requester's own site.  (Used in ablations to
+/// quantify what Chord's multi-hop lookups cost.)
+#[derive(Clone, Debug, Default)]
+pub struct LocationAware {
+    /// node id -> site index
+    pub node_site: Vec<usize>,
+    /// name ownership: a simple deterministic map (hash mod n).
+    pub nodes: Vec<Id>,
+}
+
+impl LocationAware {
+    pub fn new(nodes: Vec<Id>, node_site: Vec<usize>) -> Self {
+        assert_eq!(nodes.len(), node_site.len());
+        Self { node_site, nodes }
+    }
+}
+
+impl Router for LocationAware {
+    fn locate(&self, name: &str) -> Option<Id> {
+        if self.nodes.is_empty() {
+            return None;
+        }
+        let idx = (hash_name(name) % self.nodes.len() as u64) as usize;
+        Some(self.nodes[idx])
+    }
+
+    fn hops(&self, _from: Id, _name: &str) -> u32 {
+        1 // directory lookup
+    }
+
+    fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chord_implements_router() {
+        let ring = ChordRing::build(&[10, 20, 30]);
+        let owner = ring.locate("angle-0001.pcap").unwrap();
+        assert!(ring.contains(owner));
+        assert!(ring.hops(10, "angle-0001.pcap") >= 1);
+        assert_eq!(ring.node_count(), 3);
+    }
+
+    #[test]
+    fn location_aware_is_single_hop() {
+        let r = LocationAware::new(vec![1, 2, 3], vec![0, 0, 1]);
+        assert!(r.locate("x").is_some());
+        assert_eq!(r.hops(1, "x"), 1);
+        let empty = LocationAware::default();
+        assert!(empty.locate("x").is_none());
+    }
+}

@@ -1,0 +1,295 @@
+//! Artifact loading + typed execution wrappers.
+//!
+//! Interchange is HLO text (NOT serialized protos): jax >= 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md and
+//! python/compile/aot.py).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// The AOT shape contract — keep in sync with python/compile/model.py.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ArtifactShapes {
+    pub n_points: usize,
+    pub n_dim: usize,
+    pub n_clusters: usize,
+    pub n_labels: usize,
+    pub n_classes: usize,
+    pub score_batch: usize,
+}
+
+pub const SHAPES: ArtifactShapes = ArtifactShapes {
+    n_points: 4096,
+    n_dim: 16,
+    n_clusters: 32,
+    n_labels: 32768,
+    n_classes: 8,
+    score_batch: 256,
+};
+
+const ARTIFACT_NAMES: [&str; 4] = ["kmeans_step", "split_gain", "delta_stat", "score"];
+
+/// A loaded PJRT runtime holding one compiled executable per artifact.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    execs: HashMap<String, xla::PjRtLoadedExecutable>,
+    pub shapes: ArtifactShapes,
+    pub artifact_dir: PathBuf,
+}
+
+impl Runtime {
+    /// Locate the artifacts directory: explicit arg, `$SECTOR_ARTIFACTS`,
+    /// or `./artifacts` relative to the workspace root.
+    pub fn default_dir() -> PathBuf {
+        if let Ok(d) = std::env::var("SECTOR_ARTIFACTS") {
+            return PathBuf::from(d);
+        }
+        // CARGO_MANIFEST_DIR works for tests/benches; fall back to cwd.
+        let base = std::env::var("CARGO_MANIFEST_DIR")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("."));
+        base.join("artifacts")
+    }
+
+    /// Load + compile every artifact in `dir`.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let mut execs = HashMap::new();
+        for name in ARTIFACT_NAMES {
+            let path = dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .with_context(|| format!("parse HLO text {path:?} (run `make artifacts`?)"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compile artifact {name}"))?;
+            execs.insert(name.to_string(), exe);
+        }
+        Ok(Runtime {
+            client,
+            execs,
+            shapes: SHAPES,
+            artifact_dir: dir.to_path_buf(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn lit2(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+        assert_eq!(data.len(), rows * cols);
+        Ok(xla::Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
+    }
+
+    fn run(&self, name: &str, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self
+            .execs
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name} not loaded"))?;
+        let out = exe.execute::<xla::Literal>(args)?[0][0].to_literal_sync()?;
+        Ok(out.to_tuple()?)
+    }
+
+    /// One k-means assignment/accumulation step over up to `n_points`
+    /// weighted points of dimension <= n_dim, against k <= n_clusters
+    /// centers.  Inputs are padded to the contract shapes; outputs are
+    /// truncated back to (k, d).  Returns (sums, counts, inertia).
+    pub fn kmeans_step(
+        &self,
+        points: &[f32], // row-major (n, d)
+        centers: &[f32], // row-major (k, d)
+        d: usize,
+        k: usize,
+    ) -> Result<(Vec<f32>, Vec<f32>, f32)> {
+        let s = self.shapes;
+        if d > s.n_dim || k > s.n_clusters {
+            bail!("kmeans_step: d={d} k={k} exceed artifact contract {s:?}");
+        }
+        let n = points.len() / d;
+        if n * d != points.len() || centers.len() != k * d {
+            bail!("kmeans_step: ragged input");
+        }
+        if n > s.n_points {
+            bail!("kmeans_step: n={n} > {} (batch the call)", s.n_points);
+        }
+        // Pad points -> (N_POINTS, N_DIM) with weight-0 rows; pad centers
+        // -> (N_CLUSTERS, N_DIM) placing dead centers far away so no live
+        // point selects them.
+        let mut p = vec![0.0f32; s.n_points * s.n_dim];
+        for i in 0..n {
+            p[i * s.n_dim..i * s.n_dim + d].copy_from_slice(&points[i * d..(i + 1) * d]);
+        }
+        let mut c = vec![0.0f32; s.n_clusters * s.n_dim];
+        for j in 0..s.n_clusters {
+            if j < k {
+                c[j * s.n_dim..j * s.n_dim + d].copy_from_slice(&centers[j * d..(j + 1) * d]);
+            } else {
+                c[j * s.n_dim] = 3.0e18; // unreachable sentinel center
+            }
+        }
+        let mut w = vec![0.0f32; s.n_points];
+        for wi in w.iter_mut().take(n) {
+            *wi = 1.0;
+        }
+        let out = self.run(
+            "kmeans_step",
+            &[
+                Self::lit2(&p, s.n_points, s.n_dim)?,
+                Self::lit2(&c, s.n_clusters, s.n_dim)?,
+                xla::Literal::vec1(&w),
+            ],
+        )?;
+        let sums_full = out[0].to_vec::<f32>()?;
+        let counts_full = out[1].to_vec::<f32>()?;
+        let inertia = out[2].to_vec::<f32>()?[0];
+        let mut sums = vec![0.0f32; k * d];
+        for j in 0..k {
+            sums[j * d..(j + 1) * d]
+                .copy_from_slice(&sums_full[j * s.n_dim..j * s.n_dim + d]);
+        }
+        Ok((sums, counts_full[..k].to_vec(), inertia))
+    }
+
+    /// Best entropy split of a key-sorted class-label sequence
+    /// (Terasplit's inner computation). Labels in [0, n_classes).
+    /// Returns (best_gain_bits, split_index).
+    pub fn split_gain(&self, class_ids: &[u8]) -> Result<(f32, usize)> {
+        let s = self.shapes;
+        if class_ids.len() > s.n_labels {
+            bail!(
+                "split_gain: {} labels > contract {} (pre-aggregate)",
+                class_ids.len(),
+                s.n_labels
+            );
+        }
+        if let Some(&bad) = class_ids.iter().find(|&&c| c as usize >= s.n_classes) {
+            bail!("split_gain: class id {bad} >= {}", s.n_classes);
+        }
+        let mut ids = vec![0.0f32; s.n_labels];
+        let mut valid = vec![0.0f32; s.n_labels];
+        for (i, &c) in class_ids.iter().enumerate() {
+            ids[i] = c as f32;
+            valid[i] = 1.0;
+        }
+        let out = self.run(
+            "split_gain",
+            &[xla::Literal::vec1(&ids), xla::Literal::vec1(&valid)],
+        )?;
+        let gain = out[0].to_vec::<f32>()?[0];
+        let idx = out[1].to_vec::<f32>()?[0] as usize;
+        Ok((gain, idx))
+    }
+
+    /// delta_j between two center sets (k <= n_clusters each).
+    pub fn delta_stat(&self, a: &[f32], b: &[f32], d: usize, ka: usize, kb: usize) -> Result<f32> {
+        let s = self.shapes;
+        if d > s.n_dim || ka > s.n_clusters || kb > s.n_clusters {
+            bail!("delta_stat: shapes exceed contract");
+        }
+        let pad = |src: &[f32], k: usize| {
+            let mut full = vec![0.0f32; s.n_clusters * s.n_dim];
+            for j in 0..k {
+                full[j * s.n_dim..j * s.n_dim + d].copy_from_slice(&src[j * d..(j + 1) * d]);
+            }
+            let mut live = vec![0.0f32; s.n_clusters];
+            for l in live.iter_mut().take(k) {
+                *l = 1.0;
+            }
+            (full, live)
+        };
+        let (fa, la) = pad(a, ka);
+        let (fb, lb) = pad(b, kb);
+        let out = self.run(
+            "delta_stat",
+            &[
+                Self::lit2(&fa, s.n_clusters, s.n_dim)?,
+                Self::lit2(&fb, s.n_clusters, s.n_dim)?,
+                xla::Literal::vec1(&la),
+                xla::Literal::vec1(&lb),
+            ],
+        )?;
+        Ok(out[0].to_vec::<f32>()?[0])
+    }
+
+    /// Emergent-behaviour scores rho(x) for up to `score_batch` feature
+    /// vectors against k emergent clusters with per-cluster (sigma^2,
+    /// theta, lambda).
+    #[allow(clippy::too_many_arguments)]
+    pub fn score(
+        &self,
+        x: &[f32], // (n, d)
+        centers: &[f32],
+        sigma2: &[f32],
+        theta: &[f32],
+        lam: &[f32],
+        d: usize,
+        k: usize,
+    ) -> Result<Vec<f32>> {
+        let s = self.shapes;
+        let n = x.len() / d;
+        if n > s.score_batch || d > s.n_dim || k > s.n_clusters {
+            bail!("score: shapes exceed contract");
+        }
+        if sigma2.len() != k || theta.len() != k || lam.len() != k || centers.len() != k * d {
+            bail!("score: ragged cluster parameters");
+        }
+        let mut xf = vec![0.0f32; s.score_batch * s.n_dim];
+        for i in 0..n {
+            xf[i * s.n_dim..i * s.n_dim + d].copy_from_slice(&x[i * d..(i + 1) * d]);
+        }
+        let mut cf = vec![0.0f32; s.n_clusters * s.n_dim];
+        let mut s2 = vec![1.0f32; s.n_clusters];
+        let mut th = vec![0.0f32; s.n_clusters];
+        let mut lm = vec![0.0f32; s.n_clusters];
+        let mut live = vec![0.0f32; s.n_clusters];
+        for j in 0..k {
+            cf[j * s.n_dim..j * s.n_dim + d].copy_from_slice(&centers[j * d..(j + 1) * d]);
+            s2[j] = sigma2[j];
+            th[j] = theta[j];
+            lm[j] = lam[j];
+            live[j] = 1.0;
+        }
+        let out = self.run(
+            "score",
+            &[
+                Self::lit2(&xf, s.score_batch, s.n_dim)?,
+                Self::lit2(&cf, s.n_clusters, s.n_dim)?,
+                xla::Literal::vec1(&s2),
+                xla::Literal::vec1(&th),
+                xla::Literal::vec1(&lm),
+                xla::Literal::vec1(&live),
+            ],
+        )?;
+        Ok(out[0].to_vec::<f32>()?[..n].to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Runtime tests live in rust/tests/runtime_artifacts.rs (they need
+    // `make artifacts` to have run). Here: contract-level checks only.
+
+    #[test]
+    fn shape_contract_matches_python() {
+        assert_eq!(SHAPES.n_points, 4096);
+        assert_eq!(SHAPES.n_dim, 16);
+        assert_eq!(SHAPES.n_clusters, 32);
+        assert_eq!(SHAPES.n_labels, 32768);
+        assert_eq!(SHAPES.n_classes, 8);
+        assert_eq!(SHAPES.score_batch, 256);
+    }
+
+    #[test]
+    fn default_dir_resolves() {
+        let d = Runtime::default_dir();
+        assert!(d.ends_with("artifacts"));
+    }
+}

@@ -1,0 +1,12 @@
+//! PJRT runtime — the bridge from the Rust coordinator to the
+//! AOT-compiled JAX/Pallas artifacts.  Python never runs here: `make
+//! artifacts` lowered the L2 graphs (with the L1 Pallas kernels inside)
+//! to HLO *text*, and this module loads, compiles and executes them on
+//! the PJRT CPU client from the request path.
+//!
+//! Shapes are the AOT contract from `python/compile/model.py`; inputs
+//! are padded (weight-0 / valid-0 rows) to fit.
+
+pub mod artifact;
+
+pub use artifact::{ArtifactShapes, Runtime};

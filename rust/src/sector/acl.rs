@@ -1,0 +1,137 @@
+//! Sector's security layer (paper §4, Fig 3): "While data read is open
+//! to the general public, write access to the Sector system is
+//! controlled by ACL, as the client's IP address must appear in the
+//! server's ACL in order to upload data to that particular server."
+
+use std::net::Ipv4Addr;
+
+/// One ACL rule: an IPv4 prefix (CIDR).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Cidr {
+    pub addr: Ipv4Addr,
+    pub prefix_len: u8,
+}
+
+impl Cidr {
+    pub fn parse(s: &str) -> Result<Cidr, String> {
+        let (ip, len) = match s.split_once('/') {
+            Some((ip, len)) => (
+                ip,
+                len.parse::<u8>()
+                    .map_err(|_| format!("bad prefix length in {s:?}"))?,
+            ),
+            None => (s, 32),
+        };
+        if len > 32 {
+            return Err(format!("prefix length {len} > 32 in {s:?}"));
+        }
+        let addr: Ipv4Addr = ip.parse().map_err(|_| format!("bad IPv4 in {s:?}"))?;
+        Ok(Cidr {
+            addr,
+            prefix_len: len,
+        })
+    }
+
+    pub fn contains(&self, ip: Ipv4Addr) -> bool {
+        if self.prefix_len == 0 {
+            return true;
+        }
+        let mask = u32::MAX << (32 - self.prefix_len as u32);
+        (u32::from(self.addr) & mask) == (u32::from(ip) & mask)
+    }
+}
+
+/// Per-server access control list. Reads are open (paper); writes are
+/// gated on membership. Deny rules take precedence over allows, letting
+/// an admin carve exceptions out of a broad allow.
+#[derive(Clone, Debug, Default)]
+pub struct Acl {
+    allows: Vec<Cidr>,
+    denies: Vec<Cidr>,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Access {
+    Read,
+    Write,
+}
+
+impl Acl {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn allow(&mut self, cidr: &str) -> Result<&mut Self, String> {
+        self.allows.push(Cidr::parse(cidr)?);
+        Ok(self)
+    }
+
+    pub fn deny(&mut self, cidr: &str) -> Result<&mut Self, String> {
+        self.denies.push(Cidr::parse(cidr)?);
+        Ok(self)
+    }
+
+    /// The paper's policy: reads always permitted; writes require an
+    /// allow match and no deny match.
+    pub fn check(&self, ip: Ipv4Addr, access: Access) -> bool {
+        match access {
+            Access::Read => true,
+            Access::Write => {
+                !self.denies.iter().any(|c| c.contains(ip))
+                    && self.allows.iter().any(|c| c.contains(ip))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ip(s: &str) -> Ipv4Addr {
+        s.parse().unwrap()
+    }
+
+    #[test]
+    fn cidr_parsing() {
+        let c = Cidr::parse("10.0.0.0/8").unwrap();
+        assert!(c.contains(ip("10.255.1.2")));
+        assert!(!c.contains(ip("11.0.0.1")));
+        let host = Cidr::parse("192.168.1.5").unwrap();
+        assert_eq!(host.prefix_len, 32);
+        assert!(host.contains(ip("192.168.1.5")));
+        assert!(!host.contains(ip("192.168.1.6")));
+        assert!(Cidr::parse("10.0.0.0/33").is_err());
+        assert!(Cidr::parse("not-an-ip/8").is_err());
+        assert!(Cidr::parse("10.0.0.0/x").is_err());
+        assert!(Cidr::parse("0.0.0.0/0").unwrap().contains(ip("8.8.8.8")));
+    }
+
+    #[test]
+    fn reads_open_writes_gated() {
+        let mut acl = Acl::new();
+        acl.allow("131.193.0.0/16").unwrap(); // UIC
+        let outsider = ip("8.8.8.8");
+        let member = ip("131.193.12.34");
+        assert!(acl.check(outsider, Access::Read), "public read (paper §4)");
+        assert!(!acl.check(outsider, Access::Write));
+        assert!(acl.check(member, Access::Write));
+    }
+
+    #[test]
+    fn deny_overrides_allow() {
+        let mut acl = Acl::new();
+        acl.allow("10.0.0.0/8").unwrap();
+        acl.deny("10.9.0.0/16").unwrap();
+        assert!(acl.check(ip("10.1.1.1"), Access::Write));
+        assert!(!acl.check(ip("10.9.1.1"), Access::Write));
+        assert!(acl.check(ip("10.9.1.1"), Access::Read));
+    }
+
+    #[test]
+    fn empty_acl_denies_all_writes() {
+        let acl = Acl::new();
+        assert!(!acl.check(ip("127.0.0.1"), Access::Write));
+        assert!(acl.check(ip("127.0.0.1"), Access::Read));
+    }
+}

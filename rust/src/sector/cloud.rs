@@ -1,0 +1,486 @@
+//! The Sector storage cloud: slaves + Chord routing + the client-visible
+//! operations (upload / locate / download / delete), following the §4
+//! access flow:
+//!
+//!   1. the client connects to a known server S and asks for an entity
+//!      by name;
+//!   2. S looks the name up through the routing layer (Chord) — the
+//!      metadata lives on the name's ring owner;
+//!   3. the client opens a (cached) data connection to a returned
+//!      location via GMP;
+//!   4. bulk bytes ride UDT on that connection.
+//!
+//! In-process, steps 3–4 are real storage reads; the GMP/UDT/cache cost
+//! accounting feeds the metrics and the simulator.
+
+use std::net::Ipv4Addr;
+use std::sync::Mutex;
+
+use crate::metrics::Metrics;
+use crate::routing::chord::ChordRing;
+use crate::routing::Router;
+use crate::transport::ConnectionCache;
+use crate::util::rng::Pcg64;
+
+use super::acl::Acl;
+use super::index::RecordIndex;
+use super::slave::{FileMeta, Slave, SlaveId};
+use super::storage::{MemStorage, Storage};
+
+pub struct SectorCloud {
+    slaves: Vec<Slave>,
+    pub ring: ChordRing,
+    /// Target replica count (paper: monitored, restored when below).
+    pub replica_target: usize,
+    pub conn_cache: Mutex<ConnectionCache>,
+    pub metrics: Metrics,
+    rng: Mutex<Pcg64>,
+    /// Slaves currently considered failed (no reads, writes or replicas).
+    dead: Mutex<std::collections::HashSet<SlaveId>>,
+}
+
+/// Builder for in-process clouds.
+pub struct CloudBuilder {
+    n: usize,
+    replica_target: usize,
+    seed: u64,
+    acl_writers: Vec<String>,
+    make_storage: Box<dyn Fn(SlaveId) -> Box<dyn Storage>>,
+}
+
+impl Default for CloudBuilder {
+    fn default() -> Self {
+        Self {
+            n: 4,
+            replica_target: 2,
+            seed: 1,
+            acl_writers: vec!["10.0.0.0/8".to_string()],
+            make_storage: Box::new(|_| Box::new(MemStorage::new())),
+        }
+    }
+}
+
+impl CloudBuilder {
+    pub fn nodes(mut self, n: usize) -> Self {
+        assert!(n > 0);
+        self.n = n;
+        self
+    }
+
+    pub fn replicas(mut self, r: usize) -> Self {
+        assert!(r >= 1);
+        self.replica_target = r;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+
+    pub fn allow_writers(mut self, cidrs: &[&str]) -> Self {
+        self.acl_writers = cidrs.iter().map(|s| s.to_string()).collect();
+        self
+    }
+
+    pub fn storage_factory(
+        mut self,
+        f: impl Fn(SlaveId) -> Box<dyn Storage> + 'static,
+    ) -> Self {
+        self.make_storage = Box::new(f);
+        self
+    }
+
+    pub fn build(self) -> Result<SectorCloud, String> {
+        let mut rng = Pcg64::new(self.seed);
+        let mut slaves = Vec::with_capacity(self.n);
+        let mut ring_ids = Vec::with_capacity(self.n);
+        for id in 0..self.n as SlaveId {
+            let ip: Ipv4Addr = format!("10.0.{}.{}", id / 250, (id % 250) + 1)
+                .parse()
+                .unwrap();
+            let ring_id = rng.next_u64();
+            ring_ids.push(ring_id);
+            let mut acl = Acl::new();
+            for cidr in &self.acl_writers {
+                acl.allow(cidr)?;
+            }
+            slaves.push(Slave::new(
+                id,
+                ip,
+                ring_id,
+                (self.make_storage)(id),
+                acl,
+            ));
+        }
+        Ok(SectorCloud {
+            slaves,
+            ring: ChordRing::build(&ring_ids),
+            replica_target: self.replica_target,
+            conn_cache: Mutex::new(ConnectionCache::new(1024, 600.0)),
+            metrics: Metrics::new(),
+            rng: Mutex::new(rng),
+            dead: Mutex::new(std::collections::HashSet::new()),
+        })
+    }
+}
+
+impl SectorCloud {
+    pub fn builder() -> CloudBuilder {
+        CloudBuilder::default()
+    }
+
+    pub fn n_slaves(&self) -> usize {
+        self.slaves.len()
+    }
+
+    pub fn slave(&self, id: SlaveId) -> &Slave {
+        &self.slaves[id as usize]
+    }
+
+    pub fn slaves(&self) -> &[Slave] {
+        &self.slaves
+    }
+
+    /// The slave owning a name's metadata (Chord successor of its hash).
+    pub fn meta_owner(&self, name: &str) -> SlaveId {
+        let ring_id = self.ring.locate(name).expect("non-empty ring");
+        self.slaves
+            .iter()
+            .position(|s| s.ring_id == ring_id)
+            .expect("ring id belongs to a slave") as SlaveId
+    }
+
+    /// Routing hops for a lookup starting at `from` (latency accounting).
+    pub fn lookup_hops(&self, from: SlaveId, name: &str) -> u32 {
+        self.ring.hops(self.slaves[from as usize].ring_id, name)
+    }
+
+    /// Upload a file into the cloud.  The initial replica lands on
+    /// `target` (or a deterministic-random slave); metadata registers at
+    /// the name's ring owner.  ACL checked at the target slave.
+    pub fn upload(
+        &self,
+        client_ip: Ipv4Addr,
+        name: &str,
+        data: &[u8],
+        index: Option<&RecordIndex>,
+        target: Option<SlaveId>,
+    ) -> Result<SlaveId, String> {
+        if self.stat(name).is_some() {
+            return Err(format!("file exists: {name}"));
+        }
+        let target = target.unwrap_or_else(|| {
+            self.rng.lock().unwrap().gen_range(self.slaves.len() as u64) as SlaveId
+        });
+        let slave = &self.slaves[target as usize];
+        slave.put_file(client_ip, name, data, index)?;
+        let owner = self.meta_owner(name);
+        // Sphere operator libraries are excluded from replication (§3.1).
+        let replicable = !name.ends_with(".so");
+        self.slaves[owner as usize].meta_insert(FileMeta {
+            name: name.to_string(),
+            size_bytes: data.len() as u64,
+            n_records: index.map(|i| i.len() as u64).unwrap_or(0),
+            locations: vec![target],
+            replicable,
+        });
+        self.metrics.incr("sector.uploads");
+        self.metrics.add("sector.bytes_uploaded", data.len() as u64);
+        Ok(target)
+    }
+
+    /// Metadata lookup by name.
+    pub fn stat(&self, name: &str) -> Option<FileMeta> {
+        let owner = self.meta_owner(name);
+        self.slaves[owner as usize].meta_get(name)
+    }
+
+    /// Locations of a file's replicas (paper step 2). Returns (locations,
+    /// lookup hops from the asking slave).
+    pub fn locate(&self, from: SlaveId, name: &str) -> (Vec<SlaveId>, u32) {
+        let hops = self.lookup_hops(from, name);
+        self.metrics.incr("sector.lookups");
+        (
+            self.stat(name).map(|m| m.locations).unwrap_or_default(),
+            hops,
+        )
+    }
+
+    /// Download a whole file, preferring a replica co-located with
+    /// `near` when one exists (the routing layer "can use information
+    /// involving network bandwidth and latency", §4).
+    pub fn download(&self, near: SlaveId, name: &str) -> Result<Vec<u8>, String> {
+        let meta = self
+            .stat(name)
+            .ok_or_else(|| format!("no such file: {name}"))?;
+        let &src = meta
+            .locations
+            .iter()
+            .find(|&&l| l == near)
+            .or_else(|| meta.locations.first())
+            .ok_or_else(|| format!("file {name} has no replicas"))?;
+        self.conn_cache
+            .lock()
+            .unwrap()
+            .acquire(0.0, u32::MAX, src);
+        self.metrics.incr("sector.downloads");
+        self.metrics.add("sector.bytes_downloaded", meta.size_bytes);
+        self.slaves[src as usize].get_file(name)
+    }
+
+    /// Load a file's record index from any replica.
+    pub fn load_index(&self, name: &str) -> Option<RecordIndex> {
+        let meta = self.stat(name)?;
+        meta.locations
+            .iter()
+            .find_map(|&l| self.slaves[l as usize].get_index(name))
+    }
+
+    /// Delete a file everywhere.
+    pub fn delete(&self, name: &str) -> Result<(), String> {
+        let owner = self.meta_owner(name);
+        let meta = self.slaves[owner as usize]
+            .meta_remove(name)
+            .ok_or_else(|| format!("no such file: {name}"))?;
+        for loc in meta.locations {
+            self.slaves[loc as usize].delete_file(name).ok();
+        }
+        Ok(())
+    }
+
+    /// All file names known to the cloud (union of metadata partitions).
+    pub fn list(&self) -> Vec<String> {
+        let mut names: Vec<String> = self
+            .slaves
+            .iter()
+            .flat_map(|s| s.meta_names())
+            .collect();
+        names.sort();
+        names
+    }
+
+    /// Copy one replica of `name` to a random slave not yet holding it
+    /// (the replication primitive; policy lives in `replica.rs`).
+    /// Returns the chosen slave or None if fully replicated already.
+    pub fn replicate_once(&self, name: &str) -> Result<Option<SlaveId>, String> {
+        let meta = self
+            .stat(name)
+            .ok_or_else(|| format!("no such file: {name}"))?;
+        if !meta.replicable {
+            return Ok(None);
+        }
+        let dead = self.dead.lock().unwrap();
+        let candidates: Vec<SlaveId> = (0..self.slaves.len() as SlaveId)
+            .filter(|id| !meta.locations.contains(id) && !dead.contains(id))
+            .collect();
+        drop(dead);
+        if candidates.is_empty() {
+            return Ok(None);
+        }
+        let pick = {
+            let mut rng = self.rng.lock().unwrap();
+            candidates[rng.gen_range(candidates.len() as u64) as usize]
+        };
+        let src = meta.locations[0];
+        let data = self.slaves[src as usize].get_file(name)?;
+        let dst_slave = &self.slaves[pick as usize];
+        // Replication is a system action: bypass client ACL, write direct.
+        dst_slave.storage.put(name, &data)?;
+        // Index files are co-replicated (paper §4).
+        if let Some(idx) = self.slaves[src as usize].get_index(name) {
+            dst_slave
+                .storage
+                .put(&RecordIndex::idx_name(name), &idx.to_bytes())?;
+        }
+        let owner = self.meta_owner(name);
+        self.slaves[owner as usize].meta_update(name, |m| m.locations.push(pick));
+        self.metrics.incr("sector.replications");
+        Ok(Some(pick))
+    }
+
+    /// System-level write: used by Sphere's shuffle/local writers and the
+    /// replication service. Bypasses the client ACL (it is the system
+    /// moving its own data), writes data + optional index to `target`,
+    /// and registers metadata. Overwrites any existing file of the name.
+    pub fn system_put(
+        &self,
+        name: &str,
+        data: &[u8],
+        index: Option<&RecordIndex>,
+        target: SlaveId,
+    ) -> Result<(), String> {
+        let slave = &self.slaves[target as usize];
+        if let Some(idx) = index {
+            idx.validate(data.len() as u64)?;
+            slave
+                .storage
+                .put(&RecordIndex::idx_name(name), &idx.to_bytes())?;
+        }
+        slave.storage.put(name, data)?;
+        let owner = self.meta_owner(name);
+        self.slaves[owner as usize].meta_insert(FileMeta {
+            name: name.to_string(),
+            size_bytes: data.len() as u64,
+            n_records: index.map(|i| i.len() as u64).unwrap_or(0),
+            locations: vec![target],
+            replicable: !name.ends_with(".so"),
+        });
+        Ok(())
+    }
+
+    /// Handle a slave failure: mark it dead (excluded from replica
+    /// placement and reads) and drop it from all location lists.
+    /// Returns the number of files that lost a replica.
+    pub fn fail_slave(&self, dead: SlaveId) -> usize {
+        self.dead.lock().unwrap().insert(dead);
+        let mut lost = 0;
+        for s in &self.slaves {
+            for name in s.meta_names() {
+                s.meta_update(&name, |m| {
+                    if let Some(pos) = m.locations.iter().position(|&l| l == dead) {
+                        m.locations.remove(pos);
+                        lost += 1;
+                    }
+                });
+            }
+        }
+        self.metrics.incr("sector.slave_failures");
+        lost
+    }
+
+    /// Bring a failed slave back (it rejoins empty of metadata; its old
+    /// on-disk bytes may still exist but are unregistered).
+    pub fn revive_slave(&self, id: SlaveId) {
+        self.dead.lock().unwrap().remove(&id);
+    }
+
+    pub fn is_dead(&self, id: SlaveId) -> bool {
+        self.dead.lock().unwrap().contains(&id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cloud(n: usize) -> SectorCloud {
+        SectorCloud::builder().nodes(n).seed(7).build().unwrap()
+    }
+
+    const CLIENT: &str = "10.0.0.99";
+
+    #[test]
+    fn upload_locate_download_roundtrip() {
+        let c = cloud(4);
+        let idx = RecordIndex::fixed(10, 100);
+        let data: Vec<u8> = (0..100u8).collect();
+        let loc = c
+            .upload(CLIENT.parse().unwrap(), "f01.dat", &data, Some(&idx), None)
+            .unwrap();
+        let (locs, hops) = c.locate(0, "f01.dat");
+        assert_eq!(locs, vec![loc]);
+        assert!(hops >= 1);
+        assert_eq!(c.download(0, "f01.dat").unwrap(), data);
+        let meta = c.stat("f01.dat").unwrap();
+        assert_eq!(meta.n_records, 10);
+        assert_eq!(c.load_index("f01.dat").unwrap().len(), 10);
+        assert_eq!(c.list(), vec!["f01.dat".to_string()]);
+    }
+
+    #[test]
+    fn duplicate_upload_rejected() {
+        let c = cloud(3);
+        let ip = CLIENT.parse().unwrap();
+        c.upload(ip, "f.dat", b"abc", None, None).unwrap();
+        assert!(c.upload(ip, "f.dat", b"abc", None, None).is_err());
+    }
+
+    #[test]
+    fn acl_blocks_outsider_upload() {
+        let c = cloud(3);
+        let err = c
+            .upload("8.8.8.8".parse().unwrap(), "f.dat", b"abc", None, Some(0))
+            .unwrap_err();
+        assert!(err.contains("ACL"), "{err}");
+        assert!(c.stat("f.dat").is_none(), "no metadata for failed upload");
+    }
+
+    #[test]
+    fn replicate_once_copies_data_and_index() {
+        let c = cloud(4);
+        let ip = CLIENT.parse().unwrap();
+        let idx = RecordIndex::fixed(5, 25);
+        c.upload(ip, "r.dat", b"aaaaabbbbbcccccdddddeeeee", Some(&idx), Some(1))
+            .unwrap();
+        let added = c.replicate_once("r.dat").unwrap().unwrap();
+        assert_ne!(added, 1);
+        assert!(c.slave(added).has_file("r.dat"));
+        assert_eq!(c.slave(added).get_index("r.dat").unwrap().len(), 5);
+        assert_eq!(c.stat("r.dat").unwrap().locations.len(), 2);
+    }
+
+    #[test]
+    fn so_files_not_replicated() {
+        let c = cloud(4);
+        let ip = CLIENT.parse().unwrap();
+        c.upload(ip, "op_sort.so", b"\x7fELF...", None, Some(0)).unwrap();
+        assert_eq!(c.replicate_once("op_sort.so").unwrap(), None);
+        assert_eq!(c.stat("op_sort.so").unwrap().locations.len(), 1);
+    }
+
+    #[test]
+    fn fully_replicated_file_stops() {
+        let c = cloud(2);
+        let ip = CLIENT.parse().unwrap();
+        c.upload(ip, "f.dat", b"xy", None, Some(0)).unwrap();
+        assert!(c.replicate_once("f.dat").unwrap().is_some());
+        assert_eq!(c.replicate_once("f.dat").unwrap(), None, "all slaves hold it");
+    }
+
+    #[test]
+    fn failure_drops_locations() {
+        let c = cloud(3);
+        let ip = CLIENT.parse().unwrap();
+        c.upload(ip, "f.dat", b"abc", None, Some(1)).unwrap();
+        c.replicate_once("f.dat").unwrap();
+        let before = c.stat("f.dat").unwrap().locations.len();
+        assert_eq!(before, 2);
+        let dead = c.stat("f.dat").unwrap().locations[0];
+        let lost = c.fail_slave(dead);
+        assert_eq!(lost, 1);
+        assert_eq!(c.stat("f.dat").unwrap().locations.len(), 1);
+        // download still works from the surviving replica
+        assert_eq!(c.download(0, "f.dat").unwrap(), b"abc");
+    }
+
+    #[test]
+    fn delete_removes_all_replicas() {
+        let c = cloud(3);
+        let ip = CLIENT.parse().unwrap();
+        c.upload(ip, "f.dat", b"abc", None, Some(0)).unwrap();
+        c.replicate_once("f.dat").unwrap();
+        c.delete("f.dat").unwrap();
+        assert!(c.stat("f.dat").is_none());
+        for s in c.slaves() {
+            assert!(!s.has_file("f.dat"));
+        }
+        assert!(c.delete("f.dat").is_err());
+    }
+
+    #[test]
+    fn meta_spreads_across_owners() {
+        // With many files, the chord partition should use >1 owner.
+        let c = cloud(8);
+        let ip = CLIENT.parse().unwrap();
+        for i in 0..64 {
+            c.upload(ip, &format!("f{i:03}.dat"), b"x", None, None).unwrap();
+        }
+        let owners_used = c
+            .slaves()
+            .iter()
+            .filter(|s| !s.meta_names().is_empty())
+            .count();
+        assert!(owners_used >= 4, "metadata clumped on {owners_used} owners");
+    }
+}

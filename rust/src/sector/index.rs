@@ -1,0 +1,199 @@
+//! Record indexes (paper §4): "each data file in Sector has a companion
+//! index file, with a post-fix of .idx ... The index contains the start
+//! and end positions (i.e., the offset and size) of each record in the
+//! data file."
+//!
+//! The on-disk format is a flat little-endian array of (offset: u64,
+//! size: u64) pairs.  Files without an index can only be processed at
+//! file granularity (§4), which `sphere::segment` honours.
+
+/// One record's position in its data file.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RecordPos {
+    pub offset: u64,
+    pub size: u64,
+}
+
+/// An in-memory record index.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RecordIndex {
+    entries: Vec<RecordPos>,
+}
+
+impl RecordIndex {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Build an index for fixed-size records covering `total` bytes.
+    /// (Terasort's 100-byte records use this.)
+    pub fn fixed(record_size: u64, total_bytes: u64) -> Self {
+        assert!(record_size > 0);
+        assert_eq!(
+            total_bytes % record_size,
+            0,
+            "file is not a whole number of records"
+        );
+        let n = total_bytes / record_size;
+        Self {
+            entries: (0..n)
+                .map(|i| RecordPos {
+                    offset: i * record_size,
+                    size: record_size,
+                })
+                .collect(),
+        }
+    }
+
+    /// Build from explicit record byte lengths (variable-size records,
+    /// e.g. Angle pcap-derived feature lines).
+    pub fn from_lengths(lengths: &[u64]) -> Self {
+        let mut entries = Vec::with_capacity(lengths.len());
+        let mut offset = 0;
+        for &len in lengths {
+            entries.push(RecordPos { offset, size: len });
+            offset += len;
+        }
+        Self { entries }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn get(&self, i: usize) -> Option<RecordPos> {
+        self.entries.get(i).copied()
+    }
+
+    /// Total bytes covered by records [first, first+count).
+    pub fn span_bytes(&self, first: usize, count: usize) -> u64 {
+        self.entries[first..first + count]
+            .iter()
+            .map(|r| r.size)
+            .sum()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.entries
+            .last()
+            .map(|r| r.offset + r.size)
+            .unwrap_or(0)
+    }
+
+    /// Serialize to the .idx wire format.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.entries.len() * 16);
+        for e in &self.entries {
+            out.extend_from_slice(&e.offset.to_le_bytes());
+            out.extend_from_slice(&e.size.to_le_bytes());
+        }
+        out
+    }
+
+    /// Parse the .idx wire format, validating monotonicity/contiguity.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self, String> {
+        if bytes.len() % 16 != 0 {
+            return Err(format!(".idx length {} not a multiple of 16", bytes.len()));
+        }
+        let mut entries = Vec::with_capacity(bytes.len() / 16);
+        let mut expected_offset = 0u64;
+        for chunk in bytes.chunks_exact(16) {
+            let offset = u64::from_le_bytes(chunk[0..8].try_into().unwrap());
+            let size = u64::from_le_bytes(chunk[8..16].try_into().unwrap());
+            if offset != expected_offset {
+                return Err(format!(
+                    ".idx gap: record at offset {offset}, expected {expected_offset}"
+                ));
+            }
+            if size == 0 {
+                return Err("zero-size record in .idx".into());
+            }
+            entries.push(RecordPos { offset, size });
+            expected_offset = offset + size;
+        }
+        Ok(Self { entries })
+    }
+
+    /// Validate against the data file length.
+    pub fn validate(&self, data_len: u64) -> Result<(), String> {
+        if self.total_bytes() != data_len {
+            return Err(format!(
+                ".idx covers {} bytes but data file has {}",
+                self.total_bytes(),
+                data_len
+            ));
+        }
+        Ok(())
+    }
+
+    /// Companion index-file name for a data file (paper: "file01.dat" ->
+    /// "file01.dat.idx").
+    pub fn idx_name(data_name: &str) -> String {
+        format!("{data_name}.idx")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_index_layout() {
+        let idx = RecordIndex::fixed(100, 1000);
+        assert_eq!(idx.len(), 10);
+        assert_eq!(idx.get(3), Some(RecordPos { offset: 300, size: 100 }));
+        assert_eq!(idx.total_bytes(), 1000);
+        assert_eq!(idx.span_bytes(2, 4), 400);
+        assert!(idx.validate(1000).is_ok());
+        assert!(idx.validate(999).is_err());
+    }
+
+    #[test]
+    #[should_panic]
+    fn fixed_rejects_ragged() {
+        RecordIndex::fixed(100, 950);
+    }
+
+    #[test]
+    fn variable_records_roundtrip() {
+        let idx = RecordIndex::from_lengths(&[5, 17, 3, 100]);
+        assert_eq!(idx.len(), 4);
+        assert_eq!(idx.get(2), Some(RecordPos { offset: 22, size: 3 }));
+        let parsed = RecordIndex::from_bytes(&idx.to_bytes()).unwrap();
+        assert_eq!(parsed, idx);
+    }
+
+    #[test]
+    fn from_bytes_rejects_corruption() {
+        assert!(RecordIndex::from_bytes(&[0u8; 15]).is_err());
+        // gap: second record starts at 10 but first ends at 5
+        let mut bad = Vec::new();
+        bad.extend_from_slice(&0u64.to_le_bytes());
+        bad.extend_from_slice(&5u64.to_le_bytes());
+        bad.extend_from_slice(&10u64.to_le_bytes());
+        bad.extend_from_slice(&5u64.to_le_bytes());
+        assert!(RecordIndex::from_bytes(&bad).is_err());
+        // zero-size record
+        let mut zero = Vec::new();
+        zero.extend_from_slice(&0u64.to_le_bytes());
+        zero.extend_from_slice(&0u64.to_le_bytes());
+        assert!(RecordIndex::from_bytes(&zero).is_err());
+    }
+
+    #[test]
+    fn idx_naming_matches_paper() {
+        assert_eq!(RecordIndex::idx_name("sdss1.dat"), "sdss1.dat.idx");
+    }
+
+    #[test]
+    fn empty_index() {
+        let idx = RecordIndex::new();
+        assert!(idx.is_empty());
+        assert_eq!(idx.total_bytes(), 0);
+        assert!(RecordIndex::from_bytes(&[]).unwrap().is_empty());
+    }
+}

@@ -1,0 +1,21 @@
+//! Sector — the storage cloud (paper §4).
+//!
+//! Sector provides "long term archival storage and access for large
+//! distributed datasets": files (not blocks) with companion record
+//! indexes, located via the peer-to-peer routing layer, replicated to a
+//! target count with random placement, writes gated by an IP ACL, data
+//! movement over UDT with cached connections.
+
+pub mod acl;
+pub mod cloud;
+pub mod index;
+pub mod replica;
+pub mod slave;
+pub mod storage;
+
+pub use acl::{Access, Acl};
+pub use cloud::{CloudBuilder, SectorCloud};
+pub use index::{RecordIndex, RecordPos};
+pub use replica::ReplicationManager;
+pub use slave::{FileMeta, Slave, SlaveId};
+pub use storage::{DiskStorage, MemStorage, Storage};

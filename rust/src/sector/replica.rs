@@ -1,0 +1,151 @@
+//! Replication policy (paper §4): "Sector uses replication in order to
+//! safely archive data.  It monitors the number of replicas, and, when
+//! necessary, creates additional replicas at a random location.  The
+//! number of replicas of each file is checked once per day.  The choice
+//! of random location leads to uniform distribution of data over the
+//! whole system."
+
+use super::cloud::SectorCloud;
+
+/// Drives periodic replica checks against a virtual clock.
+#[derive(Clone, Debug)]
+pub struct ReplicationManager {
+    /// Check period, seconds (paper: 86 400 — once per day).
+    pub check_interval_secs: f64,
+    next_check: f64,
+    pub checks_run: u64,
+    pub replicas_created: u64,
+}
+
+impl ReplicationManager {
+    pub fn new(check_interval_secs: f64) -> Self {
+        assert!(check_interval_secs > 0.0);
+        Self {
+            check_interval_secs,
+            next_check: check_interval_secs,
+            checks_run: 0,
+            replicas_created: 0,
+        }
+    }
+
+    /// Advance to time `now`, running any due checks. Returns the number
+    /// of replicas created.
+    pub fn tick(&mut self, now: f64, cloud: &SectorCloud) -> u64 {
+        let mut created = 0;
+        while now >= self.next_check {
+            created += self.check_all(cloud);
+            self.next_check += self.check_interval_secs;
+        }
+        created
+    }
+
+    /// One full pass: restore every under-replicated file up to the
+    /// cloud's target. Returns replicas created.
+    pub fn check_all(&mut self, cloud: &SectorCloud) -> u64 {
+        self.checks_run += 1;
+        let mut created = 0;
+        for name in cloud.list() {
+            loop {
+                let meta = match cloud.stat(&name) {
+                    Some(m) => m,
+                    None => break,
+                };
+                if !meta.replicable || meta.locations.len() >= cloud.replica_target {
+                    break;
+                }
+                match cloud.replicate_once(&name) {
+                    Ok(Some(_)) => created += 1,
+                    _ => break,
+                }
+            }
+        }
+        self.replicas_created += created;
+        created
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sector::cloud::SectorCloud;
+    use std::net::Ipv4Addr;
+
+    fn cloud_with_files(nodes: usize, files: usize, replicas: usize) -> SectorCloud {
+        let c = SectorCloud::builder()
+            .nodes(nodes)
+            .replicas(replicas)
+            .seed(11)
+            .build()
+            .unwrap();
+        let ip: Ipv4Addr = "10.0.0.50".parse().unwrap();
+        for i in 0..files {
+            c.upload(ip, &format!("f{i:04}.dat"), &vec![7u8; 64], None, None)
+                .unwrap();
+        }
+        c
+    }
+
+    #[test]
+    fn restores_to_target() {
+        let c = cloud_with_files(6, 10, 3);
+        let mut mgr = ReplicationManager::new(86_400.0);
+        let created = mgr.check_all(&c);
+        assert_eq!(created, 20, "10 files x 2 missing replicas");
+        for name in c.list() {
+            assert_eq!(c.stat(&name).unwrap().locations.len(), 3);
+        }
+        // Second pass is a no-op.
+        assert_eq!(mgr.check_all(&c), 0);
+    }
+
+    #[test]
+    fn daily_schedule() {
+        let c = cloud_with_files(4, 3, 2);
+        let mut mgr = ReplicationManager::new(86_400.0);
+        assert_eq!(mgr.tick(1000.0, &c), 0, "before the first day boundary");
+        let created = mgr.tick(86_400.0, &c);
+        assert_eq!(created, 3);
+        assert_eq!(mgr.checks_run, 1);
+        // Jumping three days runs the (now no-op) check three more times.
+        mgr.tick(4.0 * 86_400.0, &c);
+        assert_eq!(mgr.checks_run, 4);
+    }
+
+    #[test]
+    fn recovers_after_slave_failure() {
+        let c = cloud_with_files(5, 8, 2);
+        let mut mgr = ReplicationManager::new(86_400.0);
+        mgr.check_all(&c);
+        c.fail_slave(2);
+        let created = mgr.check_all(&c);
+        assert!(created > 0, "files that lost a replica get a new one");
+        for name in c.list() {
+            assert_eq!(c.stat(&name).unwrap().locations.len(), 2);
+            assert!(!c.stat(&name).unwrap().locations.contains(&2));
+        }
+    }
+
+    #[test]
+    fn placement_is_roughly_uniform() {
+        // Paper: "The choice of random location leads to uniform
+        // distribution of data over the whole system."
+        let c = cloud_with_files(8, 200, 2);
+        let mut mgr = ReplicationManager::new(86_400.0);
+        mgr.check_all(&c);
+        let mut per_slave = vec![0usize; 8];
+        for name in c.list() {
+            for loc in c.stat(&name).unwrap().locations {
+                per_slave[loc as usize] += 1;
+            }
+        }
+        let total: usize = per_slave.iter().sum();
+        assert_eq!(total, 400);
+        let mean = total as f64 / 8.0;
+        for (i, &n) in per_slave.iter().enumerate() {
+            assert!(
+                (n as f64) > 0.5 * mean && (n as f64) < 1.6 * mean,
+                "slave {i} holds {n} of {total} (mean {mean})"
+            );
+        }
+    }
+}

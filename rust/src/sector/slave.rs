@@ -1,0 +1,217 @@
+//! A Sector slave (storage node): local storage managed through the
+//! native file system, an ACL gating writes, and — because the evaluated
+//! Sector is peer-to-peer (paper §2: "managed with a peer-to-peer
+//! architecture", vs GFS/HDFS's "centralized master node") — a partition
+//! of the file-metadata space, owned by Chord id.
+
+use std::collections::HashMap;
+use std::net::Ipv4Addr;
+use std::sync::Mutex;
+
+use super::acl::{Access, Acl};
+use super::index::RecordIndex;
+use super::storage::Storage;
+
+/// Slave identifier (dense, 0-based).
+pub type SlaveId = u32;
+
+/// Metadata record for one Sector file.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FileMeta {
+    pub name: String,
+    pub size_bytes: u64,
+    pub n_records: u64,
+    /// Slaves holding a replica (data + .idx co-located, paper §4).
+    pub locations: Vec<SlaveId>,
+    /// Sphere operator libraries are never replicated (paper §3.1).
+    pub replicable: bool,
+}
+
+pub struct Slave {
+    pub id: SlaveId,
+    pub ip: Ipv4Addr,
+    /// Chord ring id of this node.
+    pub ring_id: u64,
+    pub storage: Box<dyn Storage>,
+    pub acl: Acl,
+    /// The metadata partition this node owns (name -> meta).
+    meta: Mutex<HashMap<String, FileMeta>>,
+}
+
+impl Slave {
+    pub fn new(
+        id: SlaveId,
+        ip: Ipv4Addr,
+        ring_id: u64,
+        storage: Box<dyn Storage>,
+        acl: Acl,
+    ) -> Self {
+        Self {
+            id,
+            ip,
+            ring_id,
+            storage,
+            acl,
+            meta: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Store a data file and its companion index, enforcing the ACL.
+    pub fn put_file(
+        &self,
+        client_ip: Ipv4Addr,
+        name: &str,
+        data: &[u8],
+        index: Option<&RecordIndex>,
+    ) -> Result<(), String> {
+        if !self.acl.check(client_ip, Access::Write) {
+            return Err(format!(
+                "ACL: {client_ip} may not write to slave {} ({})",
+                self.id, self.ip
+            ));
+        }
+        if let Some(idx) = index {
+            idx.validate(data.len() as u64)?;
+            self.storage
+                .put(&RecordIndex::idx_name(name), &idx.to_bytes())?;
+        }
+        self.storage.put(name, data)
+    }
+
+    /// Read a whole file (reads are public, paper §4).
+    pub fn get_file(&self, name: &str) -> Result<Vec<u8>, String> {
+        self.storage.get(name)
+    }
+
+    /// Read a byte range (record-granular segment reads).
+    pub fn get_range(&self, name: &str, offset: u64, len: u64) -> Result<Vec<u8>, String> {
+        self.storage.get_range(name, offset, len)
+    }
+
+    /// Load the companion record index, if one exists.
+    pub fn get_index(&self, name: &str) -> Option<RecordIndex> {
+        self.storage
+            .get(&RecordIndex::idx_name(name))
+            .ok()
+            .and_then(|b| RecordIndex::from_bytes(&b).ok())
+    }
+
+    pub fn has_file(&self, name: &str) -> bool {
+        self.storage.exists(name)
+    }
+
+    pub fn delete_file(&self, name: &str) -> Result<(), String> {
+        let idx = RecordIndex::idx_name(name);
+        if self.storage.exists(&idx) {
+            self.storage.delete(&idx)?;
+        }
+        self.storage.delete(name)
+    }
+
+    // ---- metadata partition (this node is the Chord owner) ----
+
+    pub fn meta_insert(&self, meta: FileMeta) {
+        self.meta.lock().unwrap().insert(meta.name.clone(), meta);
+    }
+
+    pub fn meta_get(&self, name: &str) -> Option<FileMeta> {
+        self.meta.lock().unwrap().get(name).cloned()
+    }
+
+    pub fn meta_update<F: FnOnce(&mut FileMeta)>(&self, name: &str, f: F) -> bool {
+        let mut m = self.meta.lock().unwrap();
+        match m.get_mut(name) {
+            Some(meta) => {
+                f(meta);
+                true
+            }
+            None => false,
+        }
+    }
+
+    pub fn meta_remove(&self, name: &str) -> Option<FileMeta> {
+        self.meta.lock().unwrap().remove(name)
+    }
+
+    pub fn meta_names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.meta.lock().unwrap().keys().cloned().collect();
+        names.sort();
+        names
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sector::storage::MemStorage;
+
+    fn slave_with_acl() -> Slave {
+        let mut acl = Acl::new();
+        acl.allow("10.0.0.0/8").unwrap();
+        Slave::new(
+            0,
+            "10.0.0.1".parse().unwrap(),
+            123,
+            Box::new(MemStorage::new()),
+            acl,
+        )
+    }
+
+    #[test]
+    fn put_get_respects_acl() {
+        let s = slave_with_acl();
+        let member = "10.1.2.3".parse().unwrap();
+        let outsider = "8.8.8.8".parse().unwrap();
+        let idx = RecordIndex::fixed(4, 12);
+        s.put_file(member, "f.dat", b"abcdefghijkl", Some(&idx))
+            .unwrap();
+        assert!(s
+            .put_file(outsider, "g.dat", b"x", None)
+            .unwrap_err()
+            .contains("ACL"));
+        // reads are public
+        assert_eq!(s.get_file("f.dat").unwrap(), b"abcdefghijkl");
+        assert_eq!(s.get_range("f.dat", 4, 4).unwrap(), b"efgh");
+        assert_eq!(s.get_index("f.dat").unwrap().len(), 3);
+    }
+
+    #[test]
+    fn index_mismatch_rejected() {
+        let s = slave_with_acl();
+        let member = "10.1.2.3".parse().unwrap();
+        let idx = RecordIndex::fixed(4, 8); // covers 8, data is 12
+        assert!(s.put_file(member, "f.dat", b"abcdefghijkl", Some(&idx)).is_err());
+    }
+
+    #[test]
+    fn delete_removes_idx_too() {
+        let s = slave_with_acl();
+        let member = "10.0.0.9".parse().unwrap();
+        let idx = RecordIndex::fixed(1, 3);
+        s.put_file(member, "f.dat", b"abc", Some(&idx)).unwrap();
+        assert!(s.has_file("f.dat"));
+        assert!(s.storage.exists("f.dat.idx"));
+        s.delete_file("f.dat").unwrap();
+        assert!(!s.has_file("f.dat"));
+        assert!(!s.storage.exists("f.dat.idx"));
+    }
+
+    #[test]
+    fn metadata_partition_crud() {
+        let s = slave_with_acl();
+        s.meta_insert(FileMeta {
+            name: "f.dat".into(),
+            size_bytes: 10,
+            n_records: 2,
+            locations: vec![0],
+            replicable: true,
+        });
+        assert_eq!(s.meta_get("f.dat").unwrap().n_records, 2);
+        assert!(s.meta_update("f.dat", |m| m.locations.push(3)));
+        assert_eq!(s.meta_get("f.dat").unwrap().locations, vec![0, 3]);
+        assert!(!s.meta_update("missing", |_| {}));
+        assert_eq!(s.meta_names(), vec!["f.dat".to_string()]);
+        assert!(s.meta_remove("f.dat").is_some());
+        assert!(s.meta_get("f.dat").is_none());
+    }
+}

@@ -1,0 +1,269 @@
+//! Storage backends for Sector slaves.
+//!
+//! Sector "is not a file system per se, but rather provides services
+//! that rely in part on the local native file systems" (paper §4).  The
+//! slave's backing store is therefore a trait: `DiskStorage` uses the
+//! real local filesystem (real-mode clusters, the e2e examples), and
+//! `MemStorage` keeps bytes in memory (fast tests, simulation metadata).
+
+use std::collections::HashMap;
+use std::fs;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+pub trait Storage: Send + Sync {
+    fn put(&self, name: &str, data: &[u8]) -> Result<(), String>;
+    fn get(&self, name: &str) -> Result<Vec<u8>, String>;
+    /// Read `len` bytes at `offset` (for record-granular segment reads).
+    fn get_range(&self, name: &str, offset: u64, len: u64) -> Result<Vec<u8>, String>;
+    fn delete(&self, name: &str) -> Result<(), String>;
+    fn exists(&self, name: &str) -> bool;
+    fn len(&self, name: &str) -> Result<u64, String>;
+    fn list(&self) -> Vec<String>;
+}
+
+/// In-memory backend.
+#[derive(Default)]
+pub struct MemStorage {
+    files: Mutex<HashMap<String, Vec<u8>>>,
+}
+
+impl MemStorage {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Storage for MemStorage {
+    fn put(&self, name: &str, data: &[u8]) -> Result<(), String> {
+        self.files
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), data.to_vec());
+        Ok(())
+    }
+
+    fn get(&self, name: &str) -> Result<Vec<u8>, String> {
+        self.files
+            .lock()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .ok_or_else(|| format!("no such file: {name}"))
+    }
+
+    fn get_range(&self, name: &str, offset: u64, len: u64) -> Result<Vec<u8>, String> {
+        let files = self.files.lock().unwrap();
+        let data = files
+            .get(name)
+            .ok_or_else(|| format!("no such file: {name}"))?;
+        let (o, l) = (offset as usize, len as usize);
+        if o + l > data.len() {
+            return Err(format!(
+                "range [{o}, {}) out of bounds for {name} (len {})",
+                o + l,
+                data.len()
+            ));
+        }
+        Ok(data[o..o + l].to_vec())
+    }
+
+    fn delete(&self, name: &str) -> Result<(), String> {
+        self.files
+            .lock()
+            .unwrap()
+            .remove(name)
+            .map(|_| ())
+            .ok_or_else(|| format!("no such file: {name}"))
+    }
+
+    fn exists(&self, name: &str) -> bool {
+        self.files.lock().unwrap().contains_key(name)
+    }
+
+    fn len(&self, name: &str) -> Result<u64, String> {
+        self.files
+            .lock()
+            .unwrap()
+            .get(name)
+            .map(|d| d.len() as u64)
+            .ok_or_else(|| format!("no such file: {name}"))
+    }
+
+    fn list(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.files.lock().unwrap().keys().cloned().collect();
+        names.sort();
+        names
+    }
+}
+
+/// Real-filesystem backend rooted at a directory. File names may contain
+/// `/` (subdirectories are created as needed); `..` is rejected.
+pub struct DiskStorage {
+    root: PathBuf,
+}
+
+impl DiskStorage {
+    pub fn new(root: impl Into<PathBuf>) -> Result<Self, String> {
+        let root = root.into();
+        fs::create_dir_all(&root).map_err(|e| format!("create {root:?}: {e}"))?;
+        Ok(Self { root })
+    }
+
+    pub fn root(&self) -> &PathBuf {
+        &self.root
+    }
+
+    fn path_of(&self, name: &str) -> Result<PathBuf, String> {
+        if name.split('/').any(|part| part == ".." || part.is_empty()) {
+            return Err(format!("illegal file name {name:?}"));
+        }
+        Ok(self.root.join(name))
+    }
+}
+
+impl Storage for DiskStorage {
+    fn put(&self, name: &str, data: &[u8]) -> Result<(), String> {
+        let path = self.path_of(name)?;
+        if let Some(parent) = path.parent() {
+            fs::create_dir_all(parent).map_err(|e| e.to_string())?;
+        }
+        fs::write(&path, data).map_err(|e| format!("write {path:?}: {e}"))
+    }
+
+    fn get(&self, name: &str) -> Result<Vec<u8>, String> {
+        let path = self.path_of(name)?;
+        fs::read(&path).map_err(|e| format!("read {path:?}: {e}"))
+    }
+
+    fn get_range(&self, name: &str, offset: u64, len: u64) -> Result<Vec<u8>, String> {
+        let path = self.path_of(name)?;
+        let mut f = fs::File::open(&path).map_err(|e| format!("open {path:?}: {e}"))?;
+        f.seek(SeekFrom::Start(offset)).map_err(|e| e.to_string())?;
+        let mut buf = vec![0u8; len as usize];
+        f.read_exact(&mut buf)
+            .map_err(|e| format!("read range {offset}+{len} of {path:?}: {e}"))?;
+        Ok(buf)
+    }
+
+    fn delete(&self, name: &str) -> Result<(), String> {
+        let path = self.path_of(name)?;
+        fs::remove_file(&path).map_err(|e| format!("delete {path:?}: {e}"))
+    }
+
+    fn exists(&self, name: &str) -> bool {
+        self.path_of(name).map(|p| p.exists()).unwrap_or(false)
+    }
+
+    fn len(&self, name: &str) -> Result<u64, String> {
+        let path = self.path_of(name)?;
+        fs::metadata(&path)
+            .map(|m| m.len())
+            .map_err(|e| format!("stat {path:?}: {e}"))
+    }
+
+    fn list(&self) -> Vec<String> {
+        fn walk(dir: &PathBuf, prefix: String, out: &mut Vec<String>) {
+            if let Ok(entries) = fs::read_dir(dir) {
+                for e in entries.flatten() {
+                    let name = e.file_name().to_string_lossy().to_string();
+                    let rel = if prefix.is_empty() {
+                        name.clone()
+                    } else {
+                        format!("{prefix}/{name}")
+                    };
+                    let p = e.path();
+                    if p.is_dir() {
+                        walk(&p, rel, out);
+                    } else {
+                        out.push(rel);
+                    }
+                }
+            }
+        }
+        let mut out = Vec::new();
+        walk(&self.root, String::new(), &mut out);
+        out.sort();
+        out
+    }
+}
+
+/// Append to a file (used by shuffle bucket writers). Disk-only helper.
+impl DiskStorage {
+    pub fn append(&self, name: &str, data: &[u8]) -> Result<(), String> {
+        let path = self.path_of(name)?;
+        if let Some(parent) = path.parent() {
+            fs::create_dir_all(parent).map_err(|e| e.to_string())?;
+        }
+        let mut f = fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .map_err(|e| format!("open-append {path:?}: {e}"))?;
+        f.write_all(data).map_err(|e| e.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_root(tag: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!(
+            "sector-test-{tag}-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        p
+    }
+
+    fn exercise(s: &dyn Storage) {
+        assert!(!s.exists("a.dat"));
+        s.put("a.dat", b"hello records").unwrap();
+        assert!(s.exists("a.dat"));
+        assert_eq!(s.len("a.dat").unwrap(), 13);
+        assert_eq!(s.get("a.dat").unwrap(), b"hello records");
+        assert_eq!(s.get_range("a.dat", 6, 7).unwrap(), b"records");
+        assert!(s.get_range("a.dat", 10, 10).is_err());
+        s.put("dir/b.dat", b"xy").unwrap();
+        assert_eq!(s.list(), vec!["a.dat".to_string(), "dir/b.dat".to_string()]);
+        s.delete("a.dat").unwrap();
+        assert!(!s.exists("a.dat"));
+        assert!(s.delete("a.dat").is_err());
+        assert!(s.get("missing").is_err());
+    }
+
+    #[test]
+    fn mem_storage_contract() {
+        exercise(&MemStorage::new());
+    }
+
+    #[test]
+    fn disk_storage_contract() {
+        let root = temp_root("contract");
+        let s = DiskStorage::new(&root).unwrap();
+        exercise(&s);
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn disk_storage_rejects_traversal() {
+        let root = temp_root("traversal");
+        let s = DiskStorage::new(&root).unwrap();
+        assert!(s.put("../evil", b"x").is_err());
+        assert!(s.get("a/../../b").is_err());
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn disk_append_accumulates() {
+        let root = temp_root("append");
+        let s = DiskStorage::new(&root).unwrap();
+        s.append("bucket-3.dat", b"aa").unwrap();
+        s.append("bucket-3.dat", b"bb").unwrap();
+        assert_eq!(s.get("bucket-3.dat").unwrap(), b"aabb");
+        std::fs::remove_dir_all(&root).ok();
+    }
+}

@@ -1,0 +1,18 @@
+//! Discrete-event simulation substrate.
+//!
+//! The paper's testbeds (a 6-server 3-site 10 Gb/s WAN and an 8-server
+//! rack) are simulated at flow/op granularity: `netsim` shares link
+//! bandwidth max-min fairly among flows capped by their transport
+//! protocol model, `disk` serializes spindle operations, `cpu` schedules
+//! core time, and `event` provides the deterministic virtual clock the
+//! job simulators (`sphere::simjob`, `hadoop::simjob`) drive.
+
+pub mod cpu;
+pub mod disk;
+pub mod event;
+pub mod netsim;
+
+pub use cpu::CpuPool;
+pub use disk::{DiskModel, DiskOp};
+pub use event::EventQueue;
+pub use netsim::{FlowId, LinkId, NetSim};

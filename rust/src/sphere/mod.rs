@@ -1,0 +1,29 @@
+//! Sphere — the compute cloud (paper §3).
+//!
+//! "If a user defines a function p on a distributed data set a managed
+//! by Sector, then invoking the command sphere.run(a, p) applies the
+//! user defined function p to each data record in the dataset a."
+//!
+//! `stream` + `segment` implement the data model, `udf` the operator
+//! interface, `spe` the processing element loop, `scheduler` the
+//! locality-aware assignment, `shuffle` the output-stream routing and
+//! `job` the orchestration (`run_job` == `sphere.run`).  `simjob`
+//! replays the same coordination logic against the discrete-event
+//! testbed models to regenerate the paper-scale tables.
+
+pub mod job;
+pub mod scheduler;
+pub mod segment;
+pub mod shuffle;
+pub mod simjob;
+pub mod spe;
+pub mod stream;
+pub mod udf;
+
+pub use job::{run_job, FaultPlan, JobResult, JobSpec};
+pub use scheduler::Scheduler;
+pub use segment::{segment_stream, target_segment_bytes, Segment};
+pub use shuffle::{bucket_home, ShuffleWriter};
+pub use spe::{Spe, SpeResult};
+pub use stream::{Stream, StreamFile};
+pub use udf::{CatOp, GrepOp, OpCtx, OpOutput, OpRegistry, OutputMode, SegmentData, SphereOp};

@@ -1,0 +1,216 @@
+//! Stream segmentation (paper §3.2, rule 1):
+//!
+//! "The total data size S and the total number of records R is computed.
+//! Say the number of SPEs available for the job is N.  Roughly speaking,
+//! the number of records that equals S/N should be assigned to each SPE.
+//! The user specifies a minimum and maximum data size S_min and S_max
+//! ... If S/N is between these user defined limits, the associated
+//! number of records is assigned to each SPE.  Otherwise the nearest
+//! boundary S_min or S_max is used instead."
+//!
+//! Segments never span files and always fall on record boundaries.
+//! Files without a record index become one whole-file segment (§4).
+
+use crate::sector::{RecordIndex, SlaveId};
+
+use super::stream::Stream;
+
+/// A unit of work handed to one SPE.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Segment {
+    /// Dense id, stable across reschedules.
+    pub id: usize,
+    pub file: String,
+    pub first_record: u64,
+    pub n_records: u64,
+    pub bytes: u64,
+    /// Slaves holding the file (for locality scheduling).
+    pub locations: Vec<SlaveId>,
+    /// File-granular segment (no index): the UDF parses the raw file.
+    pub whole_file: bool,
+}
+
+/// Compute the target segment size per §3.2.
+pub fn target_segment_bytes(total_bytes: u64, n_spes: usize, smin: u64, smax: u64) -> u64 {
+    assert!(n_spes > 0);
+    assert!(smin > 0 && smin <= smax);
+    let ideal = total_bytes / n_spes as u64;
+    ideal.clamp(smin, smax)
+}
+
+/// Split a stream into segments. `index_of` fetches a file's record
+/// index (None => whole-file segment).
+pub fn segment_stream(
+    stream: &Stream,
+    n_spes: usize,
+    smin: u64,
+    smax: u64,
+    index_of: impl Fn(&str) -> Option<RecordIndex>,
+) -> Vec<Segment> {
+    let target = target_segment_bytes(stream.total_bytes(), n_spes, smin, smax);
+    let mut segments = Vec::new();
+    for f in &stream.files {
+        if f.size_bytes == 0 {
+            continue;
+        }
+        let idx = if f.n_records > 0 { index_of(&f.name) } else { None };
+        match idx {
+            None => segments.push(Segment {
+                id: segments.len(),
+                file: f.name.clone(),
+                first_record: 0,
+                n_records: f.n_records,
+                bytes: f.size_bytes,
+                locations: f.locations.clone(),
+                whole_file: true,
+            }),
+            Some(idx) => {
+                debug_assert_eq!(idx.len() as u64, f.n_records, "index mismatch for {}", f.name);
+                let mut first = 0usize;
+                while first < idx.len() {
+                    // Greedily take records until the target is reached,
+                    // always at least one record.
+                    let mut bytes = 0u64;
+                    let mut count = 0usize;
+                    while first + count < idx.len() {
+                        let sz = idx.get(first + count).unwrap().size;
+                        if count > 0 && bytes + sz > target {
+                            break;
+                        }
+                        bytes += sz;
+                        count += 1;
+                        if bytes >= target {
+                            break;
+                        }
+                    }
+                    segments.push(Segment {
+                        id: segments.len(),
+                        file: f.name.clone(),
+                        first_record: first as u64,
+                        n_records: count as u64,
+                        bytes,
+                        locations: f.locations.clone(),
+                        whole_file: false,
+                    });
+                    first += count;
+                }
+            }
+        }
+    }
+    segments
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sphere::stream::StreamFile;
+
+    fn stream_of(sizes: &[(u64, u64)]) -> Stream {
+        // (size_bytes, n_records) per file, fixed-size records
+        Stream {
+            files: sizes
+                .iter()
+                .enumerate()
+                .map(|(i, &(size, recs))| StreamFile {
+                    name: format!("f{i}.dat"),
+                    size_bytes: size,
+                    n_records: recs,
+                    locations: vec![i as SlaveId],
+                })
+                .collect(),
+        }
+    }
+
+    /// Index factory for streams built by `stream_of`: fixed `rec_size`
+    /// records, file size looked up from the stream itself.
+    fn fixed_index(s: &Stream, rec_size: u64) -> impl Fn(&str) -> Option<RecordIndex> + '_ {
+        move |name| {
+            s.files
+                .iter()
+                .find(|f| f.name == name)
+                .map(|f| RecordIndex::fixed(rec_size, f.size_bytes))
+        }
+    }
+
+    #[test]
+    fn target_clamps_to_bounds() {
+        assert_eq!(target_segment_bytes(1000, 10, 50, 500), 100);
+        assert_eq!(target_segment_bytes(1000, 100, 50, 500), 50); // clamped up
+        assert_eq!(target_segment_bytes(10_000, 2, 50, 500), 500); // clamped down
+    }
+
+    #[test]
+    fn covers_stream_exactly_once() {
+        let s = stream_of(&[(1000, 100), (500, 50)]);
+        let segs = segment_stream(&s, 4, 100, 400, fixed_index(&s, 10));
+        let total_bytes: u64 = segs.iter().map(|g| g.bytes).sum();
+        let total_recs: u64 = segs.iter().map(|g| g.n_records).sum();
+        assert_eq!(total_bytes, 1500);
+        assert_eq!(total_recs, 150);
+        // contiguity per file
+        for f in ["f0.dat", "f1.dat"] {
+            let mut next = 0;
+            for g in segs.iter().filter(|g| g.file == f) {
+                assert_eq!(g.first_record, next);
+                next += g.n_records;
+            }
+        }
+        // ids dense
+        for (i, g) in segs.iter().enumerate() {
+            assert_eq!(g.id, i);
+        }
+    }
+
+    #[test]
+    fn segment_sizes_respect_bounds() {
+        let s = stream_of(&[(10_000, 1000)]);
+        let segs = segment_stream(&s, 7, 300, 2000, fixed_index(&s, 10));
+        for g in &segs {
+            assert!(g.bytes <= 2000);
+            // all but the per-file tail reach smin
+            let is_tail = g.first_record + g.n_records == 1000;
+            if !is_tail {
+                assert!(g.bytes >= 300, "segment {} bytes {}", g.id, g.bytes);
+            }
+        }
+    }
+
+    #[test]
+    fn unindexed_file_is_whole_segment() {
+        let s = stream_of(&[(5000, 0)]);
+        let segs = segment_stream(&s, 4, 10, 100, |_| None);
+        assert_eq!(segs.len(), 1);
+        assert!(segs[0].whole_file);
+        assert_eq!(segs[0].bytes, 5000);
+    }
+
+    #[test]
+    fn variable_records_never_split_mid_record() {
+        let lengths = [100u64, 900, 50, 50, 400, 500];
+        let idx = RecordIndex::from_lengths(&lengths);
+        let s = Stream {
+            files: vec![StreamFile {
+                name: "v.dat".into(),
+                size_bytes: 2000,
+                n_records: 6,
+                locations: vec![0],
+            }],
+        };
+        let segs = segment_stream(&s, 4, 400, 600, move |_| Some(idx.clone()));
+        let total: u64 = segs.iter().map(|g| g.bytes).sum();
+        assert_eq!(total, 2000);
+        for g in &segs {
+            assert!(g.n_records >= 1);
+            // a 900-byte record alone may exceed the target; that's legal
+        }
+        let recs: u64 = segs.iter().map(|g| g.n_records).sum();
+        assert_eq!(recs, 6);
+    }
+
+    #[test]
+    fn empty_and_zero_byte_files_skipped() {
+        let s = stream_of(&[(0, 0), (100, 10)]);
+        let segs = segment_stream(&s, 2, 10, 1000, fixed_index(&s, 10));
+        assert!(segs.iter().all(|g| g.file == "f1.dat"));
+    }
+}

@@ -1,0 +1,123 @@
+//! Output-stream routing (paper §3.2): "the resulting stream can be
+//! returned to the Sector node where it originated, written to a local
+//! node, or 'shuffled' to a list of nodes, depending upon how the output
+//! stream is defined."
+//!
+//! The shuffle writer gathers (bucket, record) pairs from all SPEs,
+//! materializes one Sector file per bucket on the bucket's home node,
+//! and registers the files (with record indexes) so a follow-up
+//! `sphere.run` can consume them — Terasort's stage boundary.
+
+use std::collections::BTreeMap;
+
+use crate::sector::{RecordIndex, SectorCloud, SlaveId};
+
+/// Home node of a bucket: round-robin over nodes (deterministic, even).
+pub fn bucket_home(bucket: u32, n_nodes: usize) -> SlaveId {
+    assert!(n_nodes > 0);
+    bucket % n_nodes as u32
+}
+
+/// Accumulates shuffle output across SPE results.
+#[derive(Debug)]
+pub struct ShuffleWriter {
+    output_name: String,
+    buckets: u32,
+    /// bucket -> (concatenated bytes, per-record lengths)
+    data: BTreeMap<u32, (Vec<u8>, Vec<u64>)>,
+    pub records_in: u64,
+}
+
+impl ShuffleWriter {
+    pub fn new(output_name: &str, buckets: u32) -> Self {
+        assert!(buckets > 0);
+        Self {
+            output_name: output_name.to_string(),
+            buckets,
+            data: BTreeMap::new(),
+            records_in: 0,
+        }
+    }
+
+    pub fn add(&mut self, bucket: u32, record: &[u8]) -> Result<(), String> {
+        if bucket >= self.buckets {
+            return Err(format!(
+                "bucket {bucket} out of range (buckets = {})",
+                self.buckets
+            ));
+        }
+        let entry = self.data.entry(bucket).or_default();
+        entry.0.extend_from_slice(record);
+        entry.1.push(record.len() as u64);
+        self.records_in += 1;
+        Ok(())
+    }
+
+    /// Standard bucket-file name: `<output>.<bucket>.dat`.
+    pub fn bucket_file_name(output_name: &str, bucket: u32) -> String {
+        format!("{output_name}.{bucket:05}.dat")
+    }
+
+    /// Write every bucket to its home node as an indexed Sector file.
+    /// Empty buckets produce no file. Returns the created file names.
+    pub fn finalize(self, cloud: &SectorCloud) -> Result<Vec<String>, String> {
+        let n_nodes = cloud.n_slaves();
+        let mut created = Vec::new();
+        for (bucket, (bytes, lengths)) in self.data {
+            if lengths.is_empty() {
+                continue;
+            }
+            let name = Self::bucket_file_name(&self.output_name, bucket);
+            let index = RecordIndex::from_lengths(&lengths);
+            let home = bucket_home(bucket, n_nodes);
+            cloud.system_put(&name, &bytes, Some(&index), home)?;
+            cloud.metrics.add("sphere.shuffle_bytes", bytes.len() as u64);
+            created.push(name);
+        }
+        Ok(created)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_home_round_robin() {
+        assert_eq!(bucket_home(0, 4), 0);
+        assert_eq!(bucket_home(5, 4), 1);
+        assert_eq!(bucket_home(7, 4), 3);
+    }
+
+    #[test]
+    fn writer_groups_and_materializes() {
+        let c = SectorCloud::builder().nodes(4).seed(3).build().unwrap();
+        let mut w = ShuffleWriter::new("sorted", 8);
+        w.add(3, b"record-a").unwrap();
+        w.add(3, b"rb").unwrap();
+        w.add(6, b"record-c").unwrap();
+        assert!(w.add(99, b"x").is_err());
+        assert_eq!(w.records_in, 3);
+        let files = w.finalize(&c).unwrap();
+        assert_eq!(
+            files,
+            vec!["sorted.00003.dat".to_string(), "sorted.00006.dat".to_string()]
+        );
+        // bucket 3 landed on node 3, with a 2-record index
+        let meta = c.stat("sorted.00003.dat").unwrap();
+        assert_eq!(meta.locations, vec![3]);
+        assert_eq!(meta.n_records, 2);
+        let idx = c.load_index("sorted.00003.dat").unwrap();
+        assert_eq!(idx.get(0).unwrap().size, 8);
+        assert_eq!(idx.get(1).unwrap().size, 2);
+        assert_eq!(c.download(0, "sorted.00003.dat").unwrap(), b"record-arb");
+    }
+
+    #[test]
+    fn empty_writer_creates_nothing() {
+        let c = SectorCloud::builder().nodes(2).seed(3).build().unwrap();
+        let w = ShuffleWriter::new("out", 4);
+        assert!(w.finalize(&c).unwrap().is_empty());
+        assert!(c.list().is_empty());
+    }
+}

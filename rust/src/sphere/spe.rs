@@ -1,0 +1,202 @@
+//! The Sphere Processing Element (paper §3.2): "The SPE runs in a loop
+//! and consists of the following four steps":
+//!
+//!   1. accept a new data segment from the client (file name, offset,
+//!      number of rows, parameters);
+//!   2. read the segment and its record index from local disk or from a
+//!      remote disk managed by Sector;
+//!   3. run the Sphere operator over the segment, periodically sending
+//!      progress acknowledgments;
+//!   4. write results to the destinations the output stream specifies
+//!      and acknowledge completion.
+//!
+//! Steps 1 and 4's routing live in `job.rs`; this module implements the
+//! data path (2–3).
+
+use crate::sector::{SectorCloud, SlaveId};
+
+use super::segment::Segment;
+use super::udf::{OpCtx, OpOutput, SegmentData, SphereOp};
+
+/// Progress acks are sent every this many records (paper: "periodically
+/// sends acknowledgments ... about the progress of the processing").
+pub const ACK_EVERY_RECORDS: u64 = 10_000;
+
+/// One Sphere Processing Element bound to a node.
+#[derive(Clone, Copy, Debug)]
+pub struct Spe {
+    pub node: SlaveId,
+    /// Slot index on the node (spes_per_node may be > 1).
+    pub slot: usize,
+}
+
+/// Outcome of one segment execution.
+#[derive(Debug)]
+pub struct SpeResult {
+    pub segment: Segment,
+    pub emitted: Vec<(u32, Vec<u8>)>,
+    pub bytes_read: u64,
+    /// Whether the read was node-local (locality accounting).
+    pub read_local: bool,
+    /// Progress acks that would have been sent (metrics).
+    pub acks_sent: u64,
+}
+
+impl Spe {
+    pub fn new(node: SlaveId, slot: usize) -> Self {
+        Self { node, slot }
+    }
+
+    /// Execute steps 2–3 for one segment.
+    pub fn run_segment(
+        &self,
+        cloud: &SectorCloud,
+        op: &dyn SphereOp,
+        ctx: &OpCtx,
+        segment: Segment,
+    ) -> Result<SpeResult, String> {
+        // ---- step 2: read the data segment (local replica preferred) ----
+        let read_local = segment.locations.contains(&self.node);
+        let src = if read_local {
+            self.node
+        } else {
+            *segment
+                .locations
+                .first()
+                .ok_or_else(|| format!("segment {} has no locations", segment.id))?
+        };
+        let slave = cloud.slave(src);
+
+        let records: Vec<Vec<u8>> = if segment.whole_file {
+            vec![slave.get_file(&segment.file)?]
+        } else {
+            let index = slave
+                .get_index(&segment.file)
+                .ok_or_else(|| format!("missing .idx for {}", segment.file))?;
+            let first = segment.first_record as usize;
+            let count = segment.n_records as usize;
+            if first + count > index.len() {
+                return Err(format!(
+                    "segment {} spans records [{first}, {}) but {} has {}",
+                    segment.id,
+                    first + count,
+                    segment.file,
+                    index.len()
+                ));
+            }
+            let start = index.get(first).unwrap().offset;
+            let span = index.span_bytes(first, count);
+            let bytes = slave.get_range(&segment.file, start, span)?;
+            // Split the contiguous span back into records.
+            let mut records = Vec::with_capacity(count);
+            let mut cursor = 0usize;
+            for i in first..first + count {
+                let sz = index.get(i).unwrap().size as usize;
+                records.push(bytes[cursor..cursor + sz].to_vec());
+                cursor += sz;
+            }
+            records
+        };
+        let bytes_read: u64 = records.iter().map(|r| r.len() as u64).sum();
+
+        // ---- step 3: run the operator, counting progress acks ----
+        let data = SegmentData {
+            segment: segment.clone(),
+            records,
+        };
+        let mut out = OpOutput::default();
+        op.process(&data, ctx, &mut out)?;
+        let acks_sent = segment.n_records / ACK_EVERY_RECORDS + 1; // final ack
+
+        cloud.metrics.incr("sphere.segments_processed");
+        cloud.metrics.add("sphere.bytes_read", bytes_read);
+        if read_local {
+            cloud.metrics.incr("sphere.local_reads");
+        } else {
+            cloud.metrics.incr("sphere.remote_reads");
+        }
+
+        Ok(SpeResult {
+            segment,
+            emitted: out.emitted,
+            bytes_read,
+            read_local,
+            acks_sent,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sector::{RecordIndex, SectorCloud};
+    use crate::sphere::udf::CatOp;
+
+    fn cloud_with_file() -> SectorCloud {
+        let c = SectorCloud::builder().nodes(3).seed(5).build().unwrap();
+        let ip = "10.0.0.7".parse().unwrap();
+        let data: Vec<u8> = (0..60u8).collect();
+        let idx = RecordIndex::fixed(10, 60);
+        c.upload(ip, "f.dat", &data, Some(&idx), Some(1)).unwrap();
+        c
+    }
+
+    fn seg(first: u64, n: u64) -> Segment {
+        Segment {
+            id: 0,
+            file: "f.dat".into(),
+            first_record: first,
+            n_records: n,
+            bytes: n * 10,
+            locations: vec![1],
+            whole_file: false,
+        }
+    }
+
+    #[test]
+    fn local_read_of_middle_records() {
+        let c = cloud_with_file();
+        let spe = Spe::new(1, 0);
+        let r = spe
+            .run_segment(&c, &CatOp, &OpCtx::default(), seg(2, 3))
+            .unwrap();
+        assert!(r.read_local);
+        assert_eq!(r.bytes_read, 30);
+        assert_eq!(r.emitted.len(), 3);
+        assert_eq!(r.emitted[0].1, (20..30).collect::<Vec<u8>>());
+        assert_eq!(r.acks_sent, 1);
+    }
+
+    #[test]
+    fn remote_read_when_not_local() {
+        let c = cloud_with_file();
+        let spe = Spe::new(0, 0); // data lives on node 1
+        let r = spe
+            .run_segment(&c, &CatOp, &OpCtx::default(), seg(0, 6))
+            .unwrap();
+        assert!(!r.read_local);
+        assert_eq!(r.emitted.len(), 6);
+        assert_eq!(c.metrics.get("sphere.remote_reads"), 1);
+    }
+
+    #[test]
+    fn out_of_range_segment_rejected() {
+        let c = cloud_with_file();
+        let spe = Spe::new(1, 0);
+        let err = spe
+            .run_segment(&c, &CatOp, &OpCtx::default(), seg(4, 5))
+            .unwrap_err();
+        assert!(err.contains("spans records"), "{err}");
+    }
+
+    #[test]
+    fn whole_file_segment_reads_raw_bytes() {
+        let c = cloud_with_file();
+        let spe = Spe::new(1, 0);
+        let mut s = seg(0, 6);
+        s.whole_file = true;
+        let r = spe.run_segment(&c, &CatOp, &OpCtx::default(), s).unwrap();
+        assert_eq!(r.emitted.len(), 1, "one raw-file record");
+        assert_eq!(r.emitted[0].1.len(), 60);
+    }
+}

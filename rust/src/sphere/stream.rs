@@ -1,0 +1,88 @@
+//! Sphere streams (paper §3.2): "A Sphere dataset consists of one or
+//! more physical files ... Sphere streams are split into one or more
+//! data segments that are processed by ... SPEs."
+
+use crate::sector::{SectorCloud, SlaveId};
+
+/// One physical file participating in a stream.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StreamFile {
+    pub name: String,
+    pub size_bytes: u64,
+    /// 0 when the file has no record index (file-granular processing).
+    pub n_records: u64,
+    pub locations: Vec<SlaveId>,
+}
+
+/// An ordered set of Sector files presented to `sphere.run`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Stream {
+    pub files: Vec<StreamFile>,
+}
+
+impl Stream {
+    /// Resolve file names against the cloud's metadata (paper's
+    /// `sdss.init(...)`).
+    pub fn from_cloud(cloud: &SectorCloud, names: &[String]) -> Result<Stream, String> {
+        let mut files = Vec::with_capacity(names.len());
+        for name in names {
+            let meta = cloud
+                .stat(name)
+                .ok_or_else(|| format!("stream references unknown file {name:?}"))?;
+            if meta.locations.is_empty() {
+                return Err(format!("file {name:?} has no live replicas"));
+            }
+            files.push(StreamFile {
+                name: meta.name,
+                size_bytes: meta.size_bytes,
+                n_records: meta.n_records,
+                locations: meta.locations,
+            });
+        }
+        Ok(Stream { files })
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.files.iter().map(|f| f.size_bytes).sum()
+    }
+
+    pub fn total_records(&self) -> u64 {
+        self.files.iter().map(|f| f.n_records).sum()
+    }
+
+    pub fn n_files(&self) -> usize {
+        self.files.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.files.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sector::{RecordIndex, SectorCloud};
+
+    #[test]
+    fn resolves_from_cloud() {
+        let c = SectorCloud::builder().nodes(3).seed(1).build().unwrap();
+        let ip = "10.0.0.5".parse().unwrap();
+        let idx = RecordIndex::fixed(10, 50);
+        c.upload(ip, "a.dat", &[1u8; 50], Some(&idx), Some(0)).unwrap();
+        c.upload(ip, "b.dat", &[2u8; 30], None, Some(1)).unwrap();
+        let s = Stream::from_cloud(&c, &["a.dat".into(), "b.dat".into()]).unwrap();
+        assert_eq!(s.n_files(), 2);
+        assert_eq!(s.total_bytes(), 80);
+        assert_eq!(s.total_records(), 5); // b.dat has no index
+        assert_eq!(s.files[0].locations, vec![0]);
+        assert!(Stream::from_cloud(&c, &["missing.dat".into()]).is_err());
+    }
+
+    #[test]
+    fn empty_stream() {
+        let s = Stream::default();
+        assert!(s.is_empty());
+        assert_eq!(s.total_bytes(), 0);
+    }
+}

@@ -1,0 +1,205 @@
+//! Sphere operators — the user-defined functions (paper §3.1): "Sphere
+//! allows arbitrary user defined operations to replace both the map and
+//! reduce operations."  An operator consumes a data segment and emits
+//! records to an output stream which is returned to the client, written
+//! locally, or shuffled to a list of nodes (§3.2).
+//!
+//! Operators are registered by name, mirroring the paper's
+//! dynamic-library deployment (`myproc->run(sdss, "findBrownDwarf")`);
+//! the registry stands in for uploading `.so` files to slaves.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use super::segment::Segment;
+
+/// Where an operator's output stream goes (paper §3.2: "returned to the
+/// Sector node where it originated, written to a local node, or
+/// 'shuffled' to a list of nodes").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OutputMode {
+    /// Collected at the client (paper's `myproc->read(result)`).
+    ToClient,
+    /// Written as new Sector files on the processing node.
+    Local,
+    /// Hash/range-partitioned into `buckets` files spread over nodes.
+    Shuffle { buckets: u32 },
+}
+
+/// A segment's materialized records, handed to the operator.
+#[derive(Clone, Debug)]
+pub struct SegmentData {
+    pub segment: Segment,
+    /// One entry per record; for whole-file segments, a single entry
+    /// holding the raw file bytes.
+    pub records: Vec<Vec<u8>>,
+}
+
+/// Sink the operator writes into.
+#[derive(Debug, Default)]
+pub struct OpOutput {
+    /// (bucket, record). Bucket is ignored for ToClient/Local modes
+    /// except as an ordering hint.
+    pub emitted: Vec<(u32, Vec<u8>)>,
+}
+
+impl OpOutput {
+    pub fn emit(&mut self, bucket: u32, record: Vec<u8>) {
+        self.emitted.push((bucket, record));
+    }
+}
+
+/// Job-scoped context available to operators.
+#[derive(Clone, Debug, Default)]
+pub struct OpCtx {
+    /// Opaque client parameters (paper: "additional parameters" in the
+    /// segment handshake).
+    pub params: Vec<u8>,
+}
+
+/// The Sphere operator interface.
+pub trait SphereOp: Send + Sync {
+    fn name(&self) -> &str;
+    fn output_mode(&self) -> OutputMode;
+    /// Process one data segment (paper §3.2 SPE step 3).
+    fn process(&self, data: &SegmentData, ctx: &OpCtx, out: &mut OpOutput) -> Result<(), String>;
+}
+
+/// Name -> operator registry (the dynamic-library store).
+#[derive(Clone, Default)]
+pub struct OpRegistry {
+    ops: BTreeMap<String, Arc<dyn SphereOp>>,
+}
+
+impl OpRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn register(&mut self, op: Arc<dyn SphereOp>) -> Result<(), String> {
+        let name = op.name().to_string();
+        if self.ops.contains_key(&name) {
+            return Err(format!("operator {name:?} already registered"));
+        }
+        self.ops.insert(name, op);
+        Ok(())
+    }
+
+    pub fn get(&self, name: &str) -> Result<Arc<dyn SphereOp>, String> {
+        self.ops
+            .get(name)
+            .cloned()
+            .ok_or_else(|| format!("no such operator {name:?}"))
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.ops.keys().cloned().collect()
+    }
+}
+
+// -------------------------------------------------------- stock operators
+
+/// Identity pass-through to the client (testing / `cat`).
+pub struct CatOp;
+
+impl SphereOp for CatOp {
+    fn name(&self) -> &str {
+        "cat"
+    }
+
+    fn output_mode(&self) -> OutputMode {
+        OutputMode::ToClient
+    }
+
+    fn process(&self, data: &SegmentData, _ctx: &OpCtx, out: &mut OpOutput) -> Result<(), String> {
+        for r in &data.records {
+            out.emit(0, r.clone());
+        }
+        Ok(())
+    }
+}
+
+/// Grep-style filter: emit records containing the needle in `params`
+/// (the paper's findBrownDwarf shape: per-record predicate).
+pub struct GrepOp;
+
+impl SphereOp for GrepOp {
+    fn name(&self) -> &str {
+        "grep"
+    }
+
+    fn output_mode(&self) -> OutputMode {
+        OutputMode::ToClient
+    }
+
+    fn process(&self, data: &SegmentData, ctx: &OpCtx, out: &mut OpOutput) -> Result<(), String> {
+        let needle = &ctx.params;
+        if needle.is_empty() {
+            return Err("grep requires a non-empty needle in params".into());
+        }
+        for r in &data.records {
+            if r.windows(needle.len()).any(|w| w == &needle[..]) {
+                out.emit(0, r.clone());
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sector::SlaveId;
+
+    pub(crate) fn seg_data(records: Vec<Vec<u8>>) -> SegmentData {
+        SegmentData {
+            segment: Segment {
+                id: 0,
+                file: "t.dat".into(),
+                first_record: 0,
+                n_records: records.len() as u64,
+                bytes: records.iter().map(|r| r.len() as u64).sum(),
+                locations: vec![0 as SlaveId],
+                whole_file: false,
+            },
+            records,
+        }
+    }
+
+    #[test]
+    fn registry_register_and_lookup() {
+        let mut reg = OpRegistry::new();
+        reg.register(Arc::new(CatOp)).unwrap();
+        reg.register(Arc::new(GrepOp)).unwrap();
+        assert!(reg.register(Arc::new(CatOp)).is_err(), "duplicate name");
+        assert_eq!(reg.names(), vec!["cat".to_string(), "grep".to_string()]);
+        assert!(reg.get("cat").is_ok());
+        assert!(reg.get("nope").is_err());
+    }
+
+    #[test]
+    fn cat_passes_everything() {
+        let data = seg_data(vec![b"a".to_vec(), b"b".to_vec()]);
+        let mut out = OpOutput::default();
+        CatOp.process(&data, &OpCtx::default(), &mut out).unwrap();
+        assert_eq!(out.emitted.len(), 2);
+    }
+
+    #[test]
+    fn grep_filters_by_needle() {
+        let data = seg_data(vec![
+            b"brown dwarf candidate".to_vec(),
+            b"main sequence".to_vec(),
+            b"very brown indeed".to_vec(),
+        ]);
+        let ctx = OpCtx {
+            params: b"brown".to_vec(),
+        };
+        let mut out = OpOutput::default();
+        GrepOp.process(&data, &ctx, &mut out).unwrap();
+        assert_eq!(out.emitted.len(), 2);
+        let empty = OpCtx::default();
+        let mut out2 = OpOutput::default();
+        assert!(GrepOp.process(&data, &empty, &mut out2).is_err());
+    }
+}

@@ -1,0 +1,302 @@
+//! From-scratch property-based testing substrate (no `proptest` offline).
+//!
+//! A `Gen` produces random values from a `Pcg64`; `forall` runs a
+//! property over N generated cases and, on failure, greedily shrinks the
+//! failing input via the value's `Shrink` implementation before
+//! panicking with the minimal counterexample and the reproducing seed.
+//!
+//! Usage:
+//! ```ignore
+//! testkit::forall("segment covers stream", 200, gen, |case| { ...; Ok(()) });
+//! ```
+
+use crate::util::rng::Pcg64;
+
+/// A generator of random test cases.
+pub trait Gen<T> {
+    fn generate(&self, rng: &mut Pcg64) -> T;
+}
+
+impl<T, F: Fn(&mut Pcg64) -> T> Gen<T> for F {
+    fn generate(&self, rng: &mut Pcg64) -> T {
+        self(rng)
+    }
+}
+
+/// Types that can propose strictly "smaller" variants of themselves.
+pub trait Shrink: Sized {
+    fn shrink(&self) -> Vec<Self>;
+}
+
+impl Shrink for u64 {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(0);
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<Self> {
+        (*self as u64).shrink().into_iter().map(|v| v as usize).collect()
+    }
+}
+
+impl Shrink for f64 {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self != 0.0 {
+            out.push(0.0);
+            out.push(self / 2.0);
+            if self.fract() != 0.0 {
+                out.push(self.trunc());
+            }
+        }
+        out
+    }
+}
+
+impl<T: Shrink + Clone> Shrink for Vec<T> {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.is_empty() {
+            return out;
+        }
+        // Remove halves, then single elements, then shrink one element.
+        out.push(self[..self.len() / 2].to_vec());
+        out.push(self[self.len() / 2..].to_vec());
+        if self.len() > 1 {
+            for i in 0..self.len().min(8) {
+                let mut v = self.clone();
+                v.remove(i);
+                out.push(v);
+            }
+        }
+        for i in 0..self.len().min(4) {
+            for s in self[i].shrink() {
+                let mut v = self.clone();
+                v[i] = s;
+                out.push(v);
+            }
+        }
+        out
+    }
+}
+
+impl<A: Shrink + Clone, B: Shrink + Clone> Shrink for (A, B) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrink()
+            .into_iter()
+            .map(|a| (a, self.1.clone()))
+            .collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+impl<A: Shrink + Clone, B: Shrink + Clone, C: Shrink + Clone> Shrink for (A, B, C) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrink()
+            .into_iter()
+            .map(|a| (a, self.1.clone(), self.2.clone()))
+            .collect();
+        out.extend(
+            self.1
+                .shrink()
+                .into_iter()
+                .map(|b| (self.0.clone(), b, self.2.clone())),
+        );
+        out.extend(
+            self.2
+                .shrink()
+                .into_iter()
+                .map(|c| (self.0.clone(), self.1.clone(), c)),
+        );
+        out
+    }
+}
+
+/// Outcome of one property evaluation.
+pub type PropResult = Result<(), String>;
+
+/// Run `prop` over `cases` inputs drawn from `gen`. On failure, shrink
+/// (up to 200 steps) and panic with the minimal counterexample.
+pub fn forall<T, G, P>(name: &str, cases: usize, gen: G, prop: P)
+where
+    T: Shrink + Clone + std::fmt::Debug,
+    G: Gen<T>,
+    P: Fn(&T) -> PropResult,
+{
+    forall_seeded(name, cases, env_seed(), gen, prop)
+}
+
+/// Default seed; override to reproduce failures with TESTKIT_SEED=<n>.
+const DEFAULT_SEED: u64 = 0x5EC7_0354_1CEB_EEF1;
+
+fn env_seed() -> u64 {
+    std::env::var("TESTKIT_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(DEFAULT_SEED)
+}
+
+pub fn forall_seeded<T, G, P>(name: &str, cases: usize, seed: u64, gen: G, prop: P)
+where
+    T: Shrink + Clone + std::fmt::Debug,
+    G: Gen<T>,
+    P: Fn(&T) -> PropResult,
+{
+    let mut rng = Pcg64::new(seed);
+    for case_idx in 0..cases {
+        let input = gen.generate(&mut rng);
+        if let Err(msg) = prop(&input) {
+            let (min_input, min_msg) = shrink_loop(input, msg, &prop);
+            panic!(
+                "property {name:?} failed (case {case_idx}, seed {seed}; rerun with \
+                 TESTKIT_SEED={seed}):\n  error: {min_msg}\n  minimal input: {min_input:#?}"
+            );
+        }
+    }
+}
+
+fn shrink_loop<T, P>(mut input: T, mut msg: String, prop: &P) -> (T, String)
+where
+    T: Shrink + Clone + std::fmt::Debug,
+    P: Fn(&T) -> PropResult,
+{
+    let mut budget = 200;
+    'outer: while budget > 0 {
+        for cand in input.shrink() {
+            budget -= 1;
+            if let Err(m) = prop(&cand) {
+                input = cand;
+                msg = m;
+                continue 'outer;
+            }
+            if budget == 0 {
+                break;
+            }
+        }
+        break;
+    }
+    (input, msg)
+}
+
+// ------------------------------------------------------ stock generators
+
+/// Uniform u64 in [lo, hi).
+pub fn range_u64(lo: u64, hi: u64) -> impl Gen<u64> {
+    assert!(hi > lo);
+    move |rng: &mut Pcg64| lo + rng.gen_range(hi - lo)
+}
+
+/// Uniform usize in [lo, hi).
+pub fn range_usize(lo: usize, hi: usize) -> impl Gen<usize> {
+    assert!(hi > lo);
+    move |rng: &mut Pcg64| lo + rng.gen_range((hi - lo) as u64) as usize
+}
+
+/// Uniform f64 in [lo, hi).
+pub fn range_f64(lo: f64, hi: f64) -> impl Gen<f64> {
+    move |rng: &mut Pcg64| rng.gen_range_f64(lo, hi)
+}
+
+/// Vec of `inner` with length in [min_len, max_len].
+pub fn vec_of<T>(
+    inner: impl Gen<T>,
+    min_len: usize,
+    max_len: usize,
+) -> impl Gen<Vec<T>> {
+    assert!(max_len >= min_len);
+    move |rng: &mut Pcg64| {
+        let n = min_len + rng.gen_range((max_len - min_len + 1) as u64) as usize;
+        (0..n).map(|_| inner.generate(rng)).collect()
+    }
+}
+
+/// Pair of two generators.
+pub fn pair<A, B>(ga: impl Gen<A>, gb: impl Gen<B>) -> impl Gen<(A, B)> {
+    move |rng: &mut Pcg64| (ga.generate(rng), gb.generate(rng))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0usize;
+        let counter = std::cell::RefCell::new(&mut count);
+        forall_seeded("u64 halves are smaller", 50, 1, range_u64(1, 1000), |&x| {
+            **counter.borrow_mut() += 1;
+            if x / 2 <= x {
+                Ok(())
+            } else {
+                Err("half bigger".into())
+            }
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    fn failing_property_shrinks_to_minimal() {
+        let result = std::panic::catch_unwind(|| {
+            forall_seeded(
+                "all values below 100",
+                100,
+                2,
+                range_u64(0, 1_000_000),
+                |&x| {
+                    if x < 100 {
+                        Ok(())
+                    } else {
+                        Err(format!("{x} >= 100"))
+                    }
+                },
+            );
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // shrinker should walk the failure down to exactly 100
+        assert!(msg.contains("minimal input: 100"), "got: {msg}");
+    }
+
+    #[test]
+    fn vec_shrinking_reduces_length() {
+        let result = std::panic::catch_unwind(|| {
+            forall_seeded(
+                "vectors stay short",
+                100,
+                3,
+                vec_of(range_u64(0, 10), 0, 50),
+                |v: &Vec<u64>| {
+                    if v.len() < 5 {
+                        Ok(())
+                    } else {
+                        Err(format!("len {}", v.len()))
+                    }
+                },
+            );
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("len 5"), "minimal failing vec has len 5: {msg}");
+    }
+
+    #[test]
+    fn pair_generator_and_shrink() {
+        let g = pair(range_u64(0, 10), range_f64(0.0, 1.0));
+        let mut rng = Pcg64::new(4);
+        let (a, b) = g.generate(&mut rng);
+        assert!(a < 10 && (0.0..1.0).contains(&b));
+        let shrunk = (6u64, 0.5f64).shrink();
+        assert!(!shrunk.is_empty());
+    }
+}

@@ -1,0 +1,235 @@
+//! Testbed topology descriptions + netsim wiring (substitution for the
+//! paper's physical testbeds; DESIGN.md §2).
+//!
+//! * `wan_testbed()` — the §6.1 wide-area testbed: 6 servers in 3 sites
+//!   (2× Chicago, 2× Pasadena, 2× Greenbelt), 10 Gb/s everywhere, RTTs
+//!   16 ms (CHI–GRB), 55 ms (CHI–PAS), 71 ms (GRB–PAS, routed through
+//!   Chicago).
+//! * `lan_testbed(n)` — the §6.1 rack: n ≤ 8 servers on one switch.
+//!
+//! `build_network` instantiates per-node NIC links and per-site WAN
+//! uplinks in a `NetSim`; `path`/`rtt_secs` answer the per-pair questions
+//! job simulators ask.
+
+use crate::sim::netsim::{LinkId, NetSim};
+
+pub const SITE_CHICAGO: usize = 0;
+pub const SITE_PASADENA: usize = 1;
+pub const SITE_GREENBELT: usize = 2;
+
+/// A described (not yet instantiated) testbed.
+#[derive(Clone, Debug)]
+pub struct Testbed {
+    pub name: String,
+    pub site_names: Vec<String>,
+    /// node index -> site index.
+    pub node_site: Vec<usize>,
+    /// site × site RTT in seconds (diagonal = intra-site RTT).
+    pub rtt: Vec<Vec<f64>>,
+    /// Per-node NIC rate, bytes/s.
+    pub nic_bps: f64,
+    /// Per-site WAN uplink rate, bytes/s (ignored for 1-site testbeds).
+    pub wan_bps: f64,
+}
+
+/// Link handles produced by `build_network`.
+#[derive(Clone, Debug)]
+pub struct NetLinks {
+    pub node_up: Vec<LinkId>,
+    pub node_down: Vec<LinkId>,
+    pub site_up: Vec<LinkId>,
+    pub site_down: Vec<LinkId>,
+}
+
+impl Testbed {
+    /// The paper's 6-node, 3-site wide-area testbed (§6.1). `nodes`
+    /// trims to the Table 1 sweep prefix (1..=6): nodes 1-2 Chicago,
+    /// 3-4 Pasadena, 5-6 Greenbelt.
+    pub fn wan_testbed(nodes: usize) -> Testbed {
+        assert!((1..=6).contains(&nodes));
+        let ms = 1e-3;
+        let node_site_full = [
+            SITE_CHICAGO,
+            SITE_CHICAGO,
+            SITE_PASADENA,
+            SITE_PASADENA,
+            SITE_GREENBELT,
+            SITE_GREENBELT,
+        ];
+        Testbed {
+            name: format!("wan-{nodes}node"),
+            site_names: vec![
+                "chicago".into(),
+                "pasadena".into(),
+                "greenbelt".into(),
+            ],
+            node_site: node_site_full[..nodes].to_vec(),
+            rtt: vec![
+                vec![0.1 * ms, 55.0 * ms, 16.0 * ms],
+                vec![55.0 * ms, 0.1 * ms, 71.0 * ms],
+                vec![16.0 * ms, 71.0 * ms, 0.1 * ms],
+            ],
+            nic_bps: 10.0e9 / 8.0,
+            wan_bps: 10.0e9 / 8.0,
+        }
+    }
+
+    /// The paper's single-rack testbed (§6.1): up to 8 nodes, one site.
+    pub fn lan_testbed(nodes: usize) -> Testbed {
+        assert!((1..=8).contains(&nodes));
+        Testbed {
+            name: format!("lan-{nodes}node"),
+            site_names: vec!["rack".into()],
+            node_site: vec![0; nodes],
+            rtt: vec![vec![0.0001]],
+            nic_bps: 10.0e9 / 8.0,
+            wan_bps: 10.0e9 / 8.0,
+        }
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.node_site.len()
+    }
+
+    pub fn sites_used(&self) -> usize {
+        let mut seen = vec![false; self.site_names.len()];
+        for &s in &self.node_site {
+            seen[s] = true;
+        }
+        seen.iter().filter(|&&b| b).count()
+    }
+
+    /// RTT between two nodes, seconds.
+    pub fn rtt_secs(&self, a: usize, b: usize) -> f64 {
+        self.rtt[self.node_site[a]][self.node_site[b]]
+    }
+
+    /// The maximum RTT any pair in the testbed sees (for reporting).
+    pub fn max_rtt_secs(&self) -> f64 {
+        let n = self.nodes();
+        let mut max = 0.0f64;
+        for a in 0..n {
+            for b in 0..n {
+                max = max.max(self.rtt_secs(a, b));
+            }
+        }
+        max
+    }
+
+    /// Instantiate links in `net`: a full-duplex NIC per node and a
+    /// full-duplex WAN uplink per site.
+    pub fn build_network(&self, net: &mut NetSim) -> NetLinks {
+        let node_up = (0..self.nodes())
+            .map(|_| net.add_link(self.nic_bps))
+            .collect();
+        let node_down = (0..self.nodes())
+            .map(|_| net.add_link(self.nic_bps))
+            .collect();
+        let site_up = (0..self.site_names.len())
+            .map(|_| net.add_link(self.wan_bps))
+            .collect();
+        let site_down = (0..self.site_names.len())
+            .map(|_| net.add_link(self.wan_bps))
+            .collect();
+        NetLinks {
+            node_up,
+            node_down,
+            site_up,
+            site_down,
+        }
+    }
+
+    /// Link path for a src -> dst transfer. Same node: empty (local copy,
+    /// disk-bound only). Same site: NIC up + NIC down. Cross-site: NIC up,
+    /// site uplink, site downlink, NIC down.
+    pub fn path(&self, links: &NetLinks, src: usize, dst: usize) -> Vec<LinkId> {
+        if src == dst {
+            return vec![];
+        }
+        let (ss, ds) = (self.node_site[src], self.node_site[dst]);
+        if ss == ds {
+            vec![links.node_up[src], links.node_down[dst]]
+        } else {
+            vec![
+                links.node_up[src],
+                links.site_up[ss],
+                links.site_down[ds],
+                links.node_down[dst],
+            ]
+        }
+    }
+
+    /// Bottleneck capacity along a path, bytes/s.
+    pub fn bottleneck_bps(&self, net: &NetSim, path: &[LinkId]) -> f64 {
+        path.iter()
+            .map(|&l| net.link_capacity(l))
+            .fold(f64::INFINITY, f64::min)
+            .min(self.nic_bps)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wan_testbed_matches_paper_layout() {
+        let t = Testbed::wan_testbed(6);
+        assert_eq!(t.nodes(), 6);
+        assert_eq!(t.sites_used(), 3);
+        // Table 1 note: nodes 1-2 Chicago, 3-4 Pasadena, 5-6 Greenbelt.
+        assert_eq!(t.node_site, vec![0, 0, 1, 1, 2, 2]);
+        assert!((t.rtt_secs(0, 4) - 0.016).abs() < 1e-9); // CHI-GRB
+        assert!((t.rtt_secs(0, 2) - 0.055).abs() < 1e-9); // CHI-PAS
+        assert!((t.rtt_secs(2, 4) - 0.071).abs() < 1e-9); // PAS-GRB
+        assert!((t.max_rtt_secs() - 0.071).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sweep_prefixes_use_sites_like_the_table() {
+        // Table 1: 1-4 nodes span 2 locations only at >= 3 nodes, 3 at >= 5.
+        assert_eq!(Testbed::wan_testbed(2).sites_used(), 1);
+        assert_eq!(Testbed::wan_testbed(3).sites_used(), 2);
+        assert_eq!(Testbed::wan_testbed(4).sites_used(), 2);
+        assert_eq!(Testbed::wan_testbed(5).sites_used(), 3);
+    }
+
+    #[test]
+    fn lan_testbed_is_one_site() {
+        let t = Testbed::lan_testbed(8);
+        assert_eq!(t.nodes(), 8);
+        assert_eq!(t.sites_used(), 1);
+        assert!(t.rtt_secs(0, 7) < 0.001);
+    }
+
+    #[test]
+    fn paths_route_through_expected_links() {
+        let t = Testbed::wan_testbed(6);
+        let mut net = NetSim::new();
+        let links = t.build_network(&mut net);
+        assert!(t.path(&links, 2, 2).is_empty());
+        let same_site = t.path(&links, 0, 1);
+        assert_eq!(same_site.len(), 2);
+        let cross = t.path(&links, 0, 2);
+        assert_eq!(cross.len(), 4);
+        assert_eq!(cross[1], links.site_up[SITE_CHICAGO]);
+        assert_eq!(cross[2], links.site_down[SITE_PASADENA]);
+        let b = t.bottleneck_bps(&net, &cross);
+        assert!((b - t.nic_bps).abs() < 1.0);
+    }
+
+    #[test]
+    fn cross_site_flows_contend_on_the_uplink() {
+        let t = Testbed::wan_testbed(6);
+        let mut net = NetSim::new();
+        let links = t.build_network(&mut net);
+        // Both Chicago nodes send to Pasadena: they share Chicago's uplink.
+        let p1 = t.path(&links, 0, 2);
+        let p2 = t.path(&links, 1, 3);
+        let f1 = net.start_flow(&p1, 1e12, 1e12);
+        let f2 = net.start_flow(&p2, 1e12, 1e12);
+        let half = t.wan_bps / 2.0;
+        assert!((net.flow_rate(f1) - half).abs() < 1.0);
+        assert!((net.flow_rate(f2) - half).abs() < 1.0);
+    }
+}

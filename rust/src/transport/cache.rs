@@ -1,0 +1,159 @@
+//! Connection cache (paper §4): "Sector also caches data connections.
+//! Therefore, frequent data transfers between the same pair of nodes do
+//! not need to set up a data connection every time."
+//!
+//! The cache tracks live connections per (src, dst) pair with an LRU
+//! eviction bound and an idle timeout; `acquire` reports whether the
+//! caller pays connection-setup cost.  Both the simulator (time
+//! accounting) and the real-mode cluster (actual channel reuse) consult
+//! it.
+
+use std::collections::HashMap;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct PairKey {
+    pub src: u32,
+    pub dst: u32,
+}
+
+#[derive(Clone, Debug)]
+struct Entry {
+    last_used: f64,
+    uses: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct ConnectionCache {
+    entries: HashMap<PairKey, Entry>,
+    /// Maximum live connections (Sector bounds per-node FDs).
+    pub capacity: usize,
+    /// Idle timeout, seconds.
+    pub idle_timeout: f64,
+    /// Disable switch (ablation lever).
+    pub enabled: bool,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl ConnectionCache {
+    pub fn new(capacity: usize, idle_timeout: f64) -> Self {
+        assert!(capacity > 0);
+        Self {
+            entries: HashMap::new(),
+            capacity,
+            idle_timeout,
+            enabled: true,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Acquire a connection src->dst at time `now`. Returns true when an
+    /// existing (cached, un-expired) connection is reused — i.e. the
+    /// caller does NOT pay setup.
+    pub fn acquire(&mut self, now: f64, src: u32, dst: u32) -> bool {
+        if !self.enabled {
+            self.misses += 1;
+            return false;
+        }
+        let key = PairKey { src, dst };
+        let hit = match self.entries.get(&key) {
+            Some(e) => now - e.last_used <= self.idle_timeout,
+            None => false,
+        };
+        if hit {
+            let e = self.entries.get_mut(&key).unwrap();
+            e.last_used = now;
+            e.uses += 1;
+            self.hits += 1;
+        } else {
+            self.misses += 1;
+            self.evict_if_full(now);
+            self.entries.insert(
+                key,
+                Entry {
+                    last_used: now,
+                    uses: 1,
+                },
+            );
+        }
+        hit
+    }
+
+    fn evict_if_full(&mut self, now: f64) {
+        // Drop expired entries first, then LRU if still at capacity.
+        self.entries
+            .retain(|_, e| now - e.last_used <= self.idle_timeout);
+        while self.entries.len() >= self.capacity {
+            let lru = self
+                .entries
+                .iter()
+                .min_by(|a, b| {
+                    a.1.last_used
+                        .partial_cmp(&b.1.last_used)
+                        .unwrap()
+                        .then(a.0.cmp(b.0))
+                })
+                .map(|(k, _)| *k)
+                .unwrap();
+            self.entries.remove(&lru);
+        }
+    }
+
+    pub fn live_connections(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn second_acquire_hits() {
+        let mut c = ConnectionCache::new(8, 60.0);
+        assert!(!c.acquire(0.0, 1, 2));
+        assert!(c.acquire(1.0, 1, 2));
+        assert!(!c.acquire(1.0, 2, 1), "direction matters");
+        assert_eq!(c.hits, 1);
+        assert_eq!(c.misses, 2);
+        assert!((c.hit_rate() - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn idle_timeout_expires() {
+        let mut c = ConnectionCache::new(8, 10.0);
+        c.acquire(0.0, 1, 2);
+        assert!(c.acquire(9.9, 1, 2));
+        assert!(!c.acquire(30.0, 1, 2), "expired after idle timeout");
+    }
+
+    #[test]
+    fn lru_eviction_respects_capacity() {
+        let mut c = ConnectionCache::new(2, 1e9);
+        c.acquire(0.0, 1, 10);
+        c.acquire(1.0, 1, 11);
+        c.acquire(2.0, 1, 12); // evicts (1,10)
+        assert!(c.live_connections() <= 2);
+        assert!(!c.acquire(3.0, 1, 10), "evicted pair must reconnect");
+        assert!(c.acquire(4.0, 1, 12));
+    }
+
+    #[test]
+    fn disabled_cache_never_hits() {
+        let mut c = ConnectionCache::new(8, 60.0);
+        c.enabled = false;
+        assert!(!c.acquire(0.0, 1, 2));
+        assert!(!c.acquire(1.0, 1, 2));
+        assert_eq!(c.hits, 0);
+    }
+}

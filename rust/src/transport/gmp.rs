@@ -1,0 +1,277 @@
+//! GMP — the Group Messaging Protocol (paper §5): Sector's control-plane
+//! messaging layer, "a specialized network transport protocol we
+//! developed for this purpose".  Sector uses GMP for lookups, job
+//! control and SPE progress acknowledgments; bulk data rides UDT.
+//!
+//! This is a real, runnable implementation over an in-memory datagram
+//! fabric (the same trait the real-mode cluster threads use): reliable
+//! delivery via sequence numbers + retransmission, duplicate
+//! suppression, and per-peer FIFO ordering.  The simulator uses the
+//! message-count/latency accounting; real mode uses the actual codec.
+
+use std::collections::{HashMap, VecDeque};
+
+/// Wire header: (src, dst, seq, kind). Payload is opaque bytes.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Datagram {
+    pub src: u32,
+    pub dst: u32,
+    pub seq: u64,
+    pub kind: DatagramKind,
+    pub payload: Vec<u8>,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DatagramKind {
+    Msg,
+    Ack,
+}
+
+/// Encode to bytes (fixed 21-byte header + payload). Hand-rolled: the
+/// offline environment has no serde, and GMP's framing is tiny.
+pub fn encode(d: &Datagram) -> Vec<u8> {
+    let mut out = Vec::with_capacity(21 + d.payload.len());
+    out.extend_from_slice(&d.src.to_le_bytes());
+    out.extend_from_slice(&d.dst.to_le_bytes());
+    out.extend_from_slice(&d.seq.to_le_bytes());
+    out.push(match d.kind {
+        DatagramKind::Msg => 0,
+        DatagramKind::Ack => 1,
+    });
+    out.extend_from_slice(&(d.payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&d.payload);
+    out
+}
+
+pub fn decode(bytes: &[u8]) -> Result<Datagram, String> {
+    if bytes.len() < 21 {
+        return Err(format!("datagram too short: {} bytes", bytes.len()));
+    }
+    let src = u32::from_le_bytes(bytes[0..4].try_into().unwrap());
+    let dst = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+    let seq = u64::from_le_bytes(bytes[8..16].try_into().unwrap());
+    let kind = match bytes[16] {
+        0 => DatagramKind::Msg,
+        1 => DatagramKind::Ack,
+        k => return Err(format!("bad datagram kind {k}")),
+    };
+    let len = u32::from_le_bytes(bytes[17..21].try_into().unwrap()) as usize;
+    if bytes.len() != 21 + len {
+        return Err(format!("length mismatch: header {len}, actual {}", bytes.len() - 21));
+    }
+    Ok(Datagram {
+        src,
+        dst,
+        seq,
+        kind,
+        payload: bytes[21..].to_vec(),
+    })
+}
+
+/// One GMP endpoint. Drive it with `send`/`on_datagram`/`tick`; it emits
+/// outbound datagrams through the queue returned by each call.
+pub struct GmpEndpoint {
+    pub node: u32,
+    next_seq: HashMap<u32, u64>,
+    /// Per-peer next expected sequence for delivery.
+    expected: HashMap<u32, u64>,
+    /// Out-of-order stash per peer: seq -> payload.
+    stash: HashMap<u32, HashMap<u64, Vec<u8>>>,
+    /// Unacked outbound messages: (dst, seq) -> (payload, last_send_time).
+    unacked: HashMap<(u32, u64), (Vec<u8>, f64)>,
+    /// Retransmission timeout, seconds.
+    pub rto: f64,
+    /// Messages ready for the application, in order.
+    pub delivered: VecDeque<(u32, Vec<u8>)>,
+    /// Counters.
+    pub sent_msgs: u64,
+    pub retransmits: u64,
+    pub dup_drops: u64,
+}
+
+impl GmpEndpoint {
+    pub fn new(node: u32, rto: f64) -> Self {
+        Self {
+            node,
+            next_seq: HashMap::new(),
+            expected: HashMap::new(),
+            stash: HashMap::new(),
+            unacked: HashMap::new(),
+            rto,
+            delivered: VecDeque::new(),
+            sent_msgs: 0,
+            retransmits: 0,
+            dup_drops: 0,
+        }
+    }
+
+    /// Queue a reliable message to `dst`; returns the datagram to put on
+    /// the wire.
+    pub fn send(&mut self, now: f64, dst: u32, payload: Vec<u8>) -> Datagram {
+        let seq = self.next_seq.entry(dst).or_insert(0);
+        let d = Datagram {
+            src: self.node,
+            dst,
+            seq: *seq,
+            kind: DatagramKind::Msg,
+            payload: payload.clone(),
+        };
+        self.unacked.insert((dst, *seq), (payload, now));
+        *seq += 1;
+        self.sent_msgs += 1;
+        d
+    }
+
+    /// Process an inbound datagram; returns any datagrams to send back
+    /// (acks), delivering application messages into `self.delivered`.
+    pub fn on_datagram(&mut self, d: Datagram) -> Vec<Datagram> {
+        debug_assert_eq!(d.dst, self.node, "datagram routed to wrong node");
+        match d.kind {
+            DatagramKind::Ack => {
+                self.unacked.remove(&(d.src, d.seq));
+                vec![]
+            }
+            DatagramKind::Msg => {
+                let ack = Datagram {
+                    src: self.node,
+                    dst: d.src,
+                    seq: d.seq,
+                    kind: DatagramKind::Ack,
+                    payload: vec![],
+                };
+                let expected = self.expected.entry(d.src).or_insert(0);
+                if d.seq < *expected {
+                    self.dup_drops += 1; // retransmitted duplicate
+                    return vec![ack];
+                }
+                let stash = self.stash.entry(d.src).or_default();
+                stash.insert(d.seq, d.payload);
+                // Deliver any now-contiguous run.
+                while let Some(p) = stash.remove(expected) {
+                    self.delivered.push_back((d.src, p));
+                    *expected += 1;
+                }
+                vec![ack]
+            }
+        }
+    }
+
+    /// Retransmit anything unacked past the RTO. Returns datagrams.
+    pub fn tick(&mut self, now: f64) -> Vec<Datagram> {
+        let mut out = Vec::new();
+        let mut keys: Vec<(u32, u64)> = self.unacked.keys().copied().collect();
+        keys.sort_unstable();
+        for key in keys {
+            let (payload, last) = self.unacked.get_mut(&key).unwrap();
+            if now - *last >= self.rto {
+                *last = now;
+                self.retransmits += 1;
+                out.push(Datagram {
+                    src: self.node,
+                    dst: key.0,
+                    seq: key.1,
+                    kind: DatagramKind::Msg,
+                    payload: payload.clone(),
+                });
+            }
+        }
+        out
+    }
+
+    pub fn unacked_count(&self) -> usize {
+        self.unacked.len()
+    }
+
+    /// Pop the next in-order application message, if any.
+    pub fn recv(&mut self) -> Option<(u32, Vec<u8>)> {
+        self.delivered.pop_front()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codec_roundtrip() {
+        let d = Datagram {
+            src: 3,
+            dst: 9,
+            seq: 42,
+            kind: DatagramKind::Msg,
+            payload: b"locate sdss23.dat".to_vec(),
+        };
+        assert_eq!(decode(&encode(&d)).unwrap(), d);
+        assert!(decode(&[1, 2, 3]).is_err());
+        let mut bad = encode(&d);
+        bad[16] = 7;
+        assert!(decode(&bad).is_err());
+        let mut truncated = encode(&d);
+        truncated.pop();
+        assert!(decode(&truncated).is_err());
+    }
+
+    #[test]
+    fn in_order_delivery() {
+        let mut a = GmpEndpoint::new(1, 1.0);
+        let mut b = GmpEndpoint::new(2, 1.0);
+        let d1 = a.send(0.0, 2, b"m1".to_vec());
+        let d2 = a.send(0.0, 2, b"m2".to_vec());
+        let acks = b.on_datagram(d1);
+        b.on_datagram(d2);
+        assert_eq!(b.recv(), Some((1, b"m1".to_vec())));
+        assert_eq!(b.recv(), Some((1, b"m2".to_vec())));
+        assert_eq!(b.recv(), None);
+        for ack in acks {
+            a.on_datagram(ack);
+        }
+        assert_eq!(a.unacked_count(), 1); // m2's ack wasn't delivered
+    }
+
+    #[test]
+    fn reordering_is_repaired() {
+        let mut a = GmpEndpoint::new(1, 1.0);
+        let mut b = GmpEndpoint::new(2, 1.0);
+        let d1 = a.send(0.0, 2, b"first".to_vec());
+        let d2 = a.send(0.0, 2, b"second".to_vec());
+        b.on_datagram(d2); // arrives out of order
+        assert_eq!(b.recv(), None, "cannot deliver 'second' before 'first'");
+        b.on_datagram(d1);
+        assert_eq!(b.recv(), Some((1, b"first".to_vec())));
+        assert_eq!(b.recv(), Some((1, b"second".to_vec())));
+    }
+
+    #[test]
+    fn lost_message_retransmits_and_dedups() {
+        let mut a = GmpEndpoint::new(1, 0.5);
+        let mut b = GmpEndpoint::new(2, 0.5);
+        let d = a.send(0.0, 2, b"ping".to_vec());
+        // First copy is "lost". RTO passes; tick retransmits.
+        assert!(a.tick(0.2).is_empty(), "before RTO nothing resends");
+        let re = a.tick(0.6);
+        assert_eq!(re.len(), 1);
+        assert_eq!(a.retransmits, 1);
+        // Both the original (late) and the retransmit arrive.
+        let ack1 = b.on_datagram(d);
+        let ack2 = b.on_datagram(re[0].clone());
+        assert_eq!(b.recv(), Some((1, b"ping".to_vec())));
+        assert_eq!(b.recv(), None, "duplicate suppressed");
+        assert_eq!(b.dup_drops, 1);
+        a.on_datagram(ack1[0].clone());
+        a.on_datagram(ack2[0].clone());
+        assert_eq!(a.unacked_count(), 0);
+        assert!(a.tick(5.0).is_empty(), "acked messages never resend");
+    }
+
+    #[test]
+    fn independent_peers_do_not_block_each_other() {
+        let mut a = GmpEndpoint::new(1, 1.0);
+        let mut b = GmpEndpoint::new(2, 1.0);
+        let mut c = GmpEndpoint::new(3, 1.0);
+        let to_b = a.send(0.0, 2, b"to-b".to_vec());
+        let _to_c_lost = a.send(0.0, 3, b"to-c".to_vec());
+        b.on_datagram(to_b);
+        assert_eq!(b.recv(), Some((1, b"to-b".to_vec())));
+        assert_eq!(c.recv(), None);
+    }
+}

@@ -1,0 +1,78 @@
+//! The networking layer (paper §5): UDT for bulk data, TCP as the
+//! baseline's transport, GMP for control messages, and the connection
+//! cache.  Sector keeps routing and transport behind narrow APIs so
+//! either can be swapped — mirrored here by `TransportKind` +
+//! `rate_cap_for` which the simulator calls for every flow.
+
+pub mod cache;
+pub mod gmp;
+pub mod tcp;
+pub mod udt;
+
+pub use cache::ConnectionCache;
+pub use gmp::{Datagram, DatagramKind, GmpEndpoint};
+pub use tcp::TcpModel;
+pub use udt::{UdtCc, UdtModel};
+
+use crate::config::TransportKind;
+
+/// Flow-level transport parameters for a simulated data channel.
+#[derive(Clone, Copy, Debug)]
+pub struct TransportModels {
+    pub udt: UdtModel,
+    pub tcp: TcpModel,
+}
+
+impl Default for TransportModels {
+    fn default() -> Self {
+        Self {
+            udt: UdtModel::default(),
+            tcp: TcpModel::default(),
+        }
+    }
+}
+
+impl TransportModels {
+    /// Rate cap (bytes/s) a bulk flow of `kind` sustains on a path whose
+    /// bottleneck link has `bottleneck_bps` and round-trip time `rtt`.
+    pub fn rate_cap_for(&self, kind: TransportKind, bottleneck_bps: f64, rtt_secs: f64) -> f64 {
+        match kind {
+            TransportKind::Udt => self.udt.rate_cap(bottleneck_bps),
+            TransportKind::Tcp => self.tcp.rate_cap(bottleneck_bps, rtt_secs),
+        }
+    }
+
+    /// Setup transient for a new logical transfer.
+    pub fn setup_secs_for(&self, kind: TransportKind, rtt_secs: f64, cached: bool) -> f64 {
+        match kind {
+            TransportKind::Udt => self.udt.setup_secs(rtt_secs, cached),
+            TransportKind::Tcp => self.tcp.setup_secs(rtt_secs, cached),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn udt_beats_tcp_on_wan_paths() {
+        let m = TransportModels::default();
+        let link = 1.25e9;
+        for rtt in [0.016, 0.055, 0.071] {
+            let udt = m.rate_cap_for(TransportKind::Udt, link, rtt);
+            let tcp = m.rate_cap_for(TransportKind::Tcp, link, rtt);
+            assert!(udt > 10.0 * tcp, "rtt={rtt}: udt={udt} tcp={tcp}");
+        }
+    }
+
+    #[test]
+    fn both_fill_lan_paths() {
+        let m = TransportModels::default();
+        let link = 1.25e9;
+        let udt = m.rate_cap_for(TransportKind::Udt, link, 0.0001);
+        let tcp = m.rate_cap_for(TransportKind::Tcp, link, 0.0001);
+        assert!(udt > 0.8 * link);
+        assert!(tcp > 0.8 * link);
+    }
+}

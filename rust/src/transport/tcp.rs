@@ -1,0 +1,150 @@
+//! TCP throughput model — the transport under Hadoop's shuffle and the
+//! contrast case for UDT (paper §5: "TCP flows ... use the bandwidth
+//! they require", but window growth limits them on long fat pipes).
+//!
+//! Per-stream steady-state throughput is the minimum of:
+//!   * the Mathis model  MSS/RTT * C/sqrt(p)   (loss-limited),
+//!   * the window limit  wnd_max/RTT           (buffer-limited; 2008-era
+//!     stacks shipped 64–256 KB default buffers, and Hadoop 0.16 did not
+//!     tune them),
+//!   * the link capacity.
+//!
+//! Aggregate transfers open several parallel streams (Hadoop's
+//! `parallel.copies`), which the flow model accounts for.
+
+/// Mathis constant for Reno-style AIMD: sqrt(3/2) ≈ 1.22.
+pub const MATHIS_C: f64 = 1.22;
+
+#[derive(Clone, Copy, Debug)]
+pub struct TcpModel {
+    /// Maximum segment size, bytes.
+    pub mss: f64,
+    /// Socket buffer / max congestion window, bytes.
+    pub wnd_max: f64,
+    /// Stationary loss probability on the path.
+    pub loss: f64,
+    /// Parallel streams per logical transfer.
+    pub parallel_streams: usize,
+    /// Handshake round trips (SYN/SYNACK).
+    pub handshake_rtts: f64,
+    /// Slow-start ramp, in RTTs, before steady state.
+    pub slowstart_rtts: f64,
+}
+
+impl Default for TcpModel {
+    fn default() -> Self {
+        Self {
+            mss: 1460.0,
+            wnd_max: 256.0 * 1024.0,
+            loss: 1.0e-6,
+            parallel_streams: 1,
+            handshake_rtts: 1.5,
+            slowstart_rtts: 12.0,
+        }
+    }
+}
+
+impl TcpModel {
+    /// Hadoop 0.16 shuffle fetcher defaults (mapred.reduce.parallel.copies
+    /// = 5; untuned 2008 socket buffers).
+    pub fn hadoop_shuffle() -> Self {
+        Self {
+            parallel_streams: 5,
+            ..Self::default()
+        }
+    }
+
+    /// Steady-state throughput of ONE stream in bytes/s.
+    pub fn stream_rate(&self, bottleneck_bps: f64, rtt_secs: f64) -> f64 {
+        if rtt_secs <= 0.0 {
+            return bottleneck_bps;
+        }
+        let mathis = self.mss / rtt_secs * MATHIS_C / self.loss.sqrt();
+        let window = self.wnd_max / rtt_secs;
+        mathis.min(window).min(bottleneck_bps)
+    }
+
+    /// Effective rate cap of a logical transfer using the configured
+    /// parallel streams (bytes/s).
+    pub fn rate_cap(&self, bottleneck_bps: f64, rtt_secs: f64) -> f64 {
+        (self.stream_rate(bottleneck_bps, rtt_secs) * self.parallel_streams as f64)
+            .min(bottleneck_bps)
+    }
+
+    /// Connection setup + slow-start transient, seconds.
+    pub fn setup_secs(&self, rtt_secs: f64, cached_connection: bool) -> f64 {
+        let hs = if cached_connection {
+            0.0
+        } else {
+            self.handshake_rtts * rtt_secs
+        };
+        hs + self.slowstart_rtts * rtt_secs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GBPS10: f64 = 1.25e9; // bytes/s
+
+    #[test]
+    fn lan_tcp_fills_the_pipe() {
+        let m = TcpModel::default();
+        // 0.1 ms rack RTT: window limit = 256 KiB / 1e-4 = 2.6 GB/s >> link
+        let r = m.rate_cap(GBPS10, 0.0001);
+        assert!(r > 0.9 * GBPS10, "rate {r}");
+    }
+
+    #[test]
+    fn wan_tcp_is_window_limited() {
+        let m = TcpModel::default();
+        // 55 ms RTT: window limit = 256 KiB / 0.055 ≈ 4.8 MB/s per stream.
+        let r = m.stream_rate(GBPS10, 0.055);
+        assert!(r < 5.0e6, "rate {r}");
+        assert!(r > 1.0e6);
+        // This is the paper's structural asymmetry: UDT ~0.87 * link vs
+        // TCP orders of magnitude below it on the same 10 Gb/s WAN path.
+        let udt = super::super::udt::UdtModel::default().rate_cap(GBPS10);
+        assert!(udt / r > 100.0);
+    }
+
+    #[test]
+    fn parallel_streams_multiply_until_link() {
+        let m = TcpModel {
+            parallel_streams: 8,
+            ..TcpModel::default()
+        };
+        let one = m.stream_rate(GBPS10, 0.016);
+        let agg = m.rate_cap(GBPS10, 0.016);
+        assert!((agg - (one * 8.0).min(GBPS10)).abs() < 1.0);
+        // On a LAN the aggregate saturates at the link, not 8x the link.
+        assert!(m.rate_cap(GBPS10, 0.00005) <= GBPS10);
+    }
+
+    #[test]
+    fn loss_limits_kick_in_when_loss_is_high() {
+        let lossy = TcpModel {
+            loss: 1e-2,
+            ..TcpModel::default()
+        };
+        let clean = TcpModel::default();
+        let r_lossy = lossy.stream_rate(GBPS10, 0.016);
+        let r_clean = clean.stream_rate(GBPS10, 0.016);
+        assert!(r_lossy < r_clean / 10.0);
+    }
+
+    #[test]
+    fn setup_scales_with_rtt_and_caching() {
+        let m = TcpModel::default();
+        assert!(m.setup_secs(0.055, false) > m.setup_secs(0.055, true));
+        assert!(m.setup_secs(0.071, false) > m.setup_secs(0.016, false));
+        assert_eq!(m.setup_secs(0.0, true), 0.0);
+    }
+
+    #[test]
+    fn zero_rtt_degenerates_to_link() {
+        let m = TcpModel::default();
+        assert_eq!(m.stream_rate(GBPS10, 0.0), GBPS10);
+    }
+}

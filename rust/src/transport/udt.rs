@@ -1,0 +1,196 @@
+//! UDT: UDP-based Data Transfer protocol (Gu & Grossman, Computer
+//! Networks 51(7), 2007) — Sector's data-channel transport.
+//!
+//! Two views of the protocol live here:
+//!
+//! 1. `UdtCc` — a faithful packet-level model of UDT's DAIMD rate
+//!    control (the published increase formula and the 1/9 multiplicative
+//!    decrease), stepped per SYN interval (10 ms).  Unit tests use it to
+//!    establish the property the paper relies on: UDT converges to near
+//!    link capacity *independent of RTT*, unlike TCP.
+//! 2. `UdtModel` — the flow-level abstraction the simulator consumes: an
+//!    effective rate cap for a bulk flow plus a startup transient, both
+//!    derived from `UdtCc`'s behaviour.
+
+/// UDT constants from the reference implementation.
+pub const SYN_SECS: f64 = 0.01;
+/// Packet size used for rate accounting (1500-byte MTU minus headers).
+pub const PACKET_BYTES: f64 = 1456.0;
+
+/// Packet-level DAIMD rate controller (one sender).
+#[derive(Clone, Debug)]
+pub struct UdtCc {
+    /// Estimated link capacity, packets/s (UDT probes this with packet
+    /// pairs; the model takes it as given).
+    pub link_pps: f64,
+    /// Current sending rate, packets/s.
+    pub rate_pps: f64,
+}
+
+impl UdtCc {
+    pub fn new(link_bps: f64) -> Self {
+        Self {
+            link_pps: link_bps / 8.0 / PACKET_BYTES * 8.0, // bytes/s -> pkt/s
+            rate_pps: 1.0 / SYN_SECS,                      // slow start floor
+        }
+    }
+
+    /// The UDT increase step per SYN when no loss was observed:
+    ///   inc = max( 10^(ceil(log10((L - C) * PS * 8))) * beta / PS, 1/PS )
+    /// packets per SYN, with beta = 1.5e-6, L the link capacity and C the
+    /// current rate (both in packets/s converted to bits/s via PS*8).
+    pub fn on_syn_no_loss(&mut self) {
+        let l_bps = self.link_pps * PACKET_BYTES * 8.0;
+        let c_bps = self.rate_pps * PACKET_BYTES * 8.0;
+        let spare = (l_bps - c_bps).max(1.0);
+        let beta = 1.5e-6;
+        let inc_pkts = ((10f64.powf(spare.log10().ceil()) * beta) / PACKET_BYTES)
+            .max(1.0 / PACKET_BYTES);
+        self.rate_pps += inc_pkts / SYN_SECS;
+        self.rate_pps = self.rate_pps.min(self.link_pps);
+    }
+
+    /// Multiplicative decrease on a loss event (NAK): rate *= 8/9.
+    pub fn on_loss(&mut self) {
+        self.rate_pps *= 1.0 - 1.0 / 9.0;
+    }
+
+    pub fn rate_bps(&self) -> f64 {
+        self.rate_pps * PACKET_BYTES // bytes/s
+    }
+
+    /// Step the controller for `secs` of simulated time with a Bernoulli
+    /// loss probability per SYN interval; returns mean achieved rate in
+    /// bytes/s. RTT intentionally does NOT appear: UDT's control loop is
+    /// clocked by SYN, not by RTT — this is the crux of its WAN advantage.
+    pub fn run(&mut self, secs: f64, loss_per_syn: f64, rng: &mut crate::util::rng::Pcg64) -> f64 {
+        let steps = (secs / SYN_SECS).ceil() as usize;
+        let mut acc = 0.0;
+        for _ in 0..steps {
+            if rng.next_f64() < loss_per_syn {
+                self.on_loss();
+            } else {
+                self.on_syn_no_loss();
+            }
+            acc += self.rate_bps() * SYN_SECS;
+        }
+        acc / secs
+    }
+}
+
+/// Flow-level UDT parameters consumed by the simulator.
+#[derive(Clone, Copy, Debug)]
+pub struct UdtModel {
+    /// Fraction of bottleneck capacity a bulk UDT flow sustains
+    /// (protocol efficiency; the paper measured ~8.1 Gb/s of 10 Gb/s
+    /// moving SDSS data => ~0.81, with 6 parallel servers; a single
+    /// tuned flow reaches ~0.9 — we default between the two).
+    pub efficiency: f64,
+    /// Connection handshake round trips (UDT uses one).
+    pub handshake_rtts: f64,
+    /// Effective seconds lost to rate ramp-up (SYN-clocked, so
+    /// RTT-independent; UdtCc reaches 90% of a 10 Gb/s link in ~7.5 s,
+    /// which costs a long bulk flow roughly half that in lost bytes).
+    pub startup_secs: f64,
+}
+
+impl Default for UdtModel {
+    fn default() -> Self {
+        Self {
+            efficiency: 0.87,
+            handshake_rtts: 1.0,
+            startup_secs: 3.5,
+        }
+    }
+}
+
+impl UdtModel {
+    /// Effective rate cap (bytes/s) for a bulk flow whose narrowest link
+    /// has `bottleneck_bps` capacity. RTT-independent by design.
+    pub fn rate_cap(&self, bottleneck_bps: f64) -> f64 {
+        self.efficiency * bottleneck_bps
+    }
+
+    /// One-time cost before the flow reaches steady state: handshake
+    /// (skipped on a cached connection) + rate ramp.
+    pub fn setup_secs(&self, rtt_secs: f64, cached_connection: bool) -> f64 {
+        let hs = if cached_connection {
+            0.0
+        } else {
+            self.handshake_rtts * rtt_secs
+        };
+        hs + self.startup_secs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn converges_near_capacity_lossless() {
+        let link = 1.25e9; // 10 Gb/s in bytes/s
+        let mut cc = UdtCc::new(link);
+        let mut rng = Pcg64::new(1);
+        cc.run(20.0, 0.0, &mut rng);
+        assert!(
+            cc.rate_bps() > 0.9 * link,
+            "rate {} of {link}",
+            cc.rate_bps()
+        );
+    }
+
+    #[test]
+    fn rtt_does_not_appear_in_control_loop() {
+        // The API has no RTT parameter at all (the DAIMD loop is clocked
+        // by the fixed 10 ms SYN); this test documents the convergence
+        // time on a 10 Gb/s link, ~7-8 s to 90% with the published
+        // increase formula — regardless of path RTT.
+        let link = 1.25e9;
+        let mut cc = UdtCc::new(link);
+        let mut rng = Pcg64::new(2);
+        let mut t = 0.0;
+        while cc.rate_bps() < 0.9 * link && t < 30.0 {
+            cc.run(0.1, 0.0, &mut rng);
+            t += 0.1;
+        }
+        assert!((5.0..12.0).contains(&t), "took {t} s to reach 90% of 10 Gb/s");
+    }
+
+    #[test]
+    fn loss_reduces_but_does_not_collapse_throughput() {
+        let link = 1.25e9;
+        let mut rng = Pcg64::new(3);
+        let mut cc = UdtCc::new(link);
+        cc.run(5.0, 0.0, &mut rng); // warm
+        let clean = cc.run(10.0, 0.0, &mut rng);
+        let mut cc2 = UdtCc::new(link);
+        cc2.run(5.0, 0.0, &mut rng);
+        let lossy = cc2.run(10.0, 0.02, &mut rng); // 2 losses/s
+        assert!(lossy < clean);
+        assert!(
+            lossy > 0.4 * clean,
+            "UDT should degrade gracefully: {lossy} vs {clean}"
+        );
+    }
+
+    #[test]
+    fn decrease_factor_is_one_ninth() {
+        let mut cc = UdtCc::new(1.25e9);
+        cc.rate_pps = 900.0;
+        cc.on_loss();
+        assert!((cc.rate_pps - 800.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn model_caps_and_setup() {
+        let m = UdtModel::default();
+        let cap = m.rate_cap(1.25e9);
+        assert!(cap > 1.0e9 && cap < 1.25e9);
+        let fresh = m.setup_secs(0.055, false);
+        let cached = m.setup_secs(0.055, true);
+        assert!(fresh > cached);
+        assert!((fresh - cached - 0.055).abs() < 1e-12);
+    }
+}

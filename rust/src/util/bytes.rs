@@ -1,0 +1,150 @@
+//! Byte/bit-rate quantities with human formatting and parsing.
+//!
+//! The paper mixes units freely (10 Gb/s links, 128 MB blocks, 10 GB per
+//! node, 440 Mb/s throughput); keeping them typed here prevents the
+//! classic factor-of-8 bugs in the simulator.
+
+pub const KB: u64 = 1_000;
+pub const MB: u64 = 1_000_000;
+pub const GB: u64 = 1_000_000_000;
+pub const TB: u64 = 1_000_000_000_000;
+pub const KIB: u64 = 1 << 10;
+pub const MIB: u64 = 1 << 20;
+pub const GIB: u64 = 1 << 30;
+
+/// Bits per second (link and protocol rates).
+#[derive(Clone, Copy, Debug, PartialEq, PartialOrd)]
+pub struct BitRate(pub f64);
+
+impl BitRate {
+    pub fn gbps(v: f64) -> Self {
+        BitRate(v * 1e9)
+    }
+
+    pub fn mbps(v: f64) -> Self {
+        BitRate(v * 1e6)
+    }
+
+    pub fn as_gbps(&self) -> f64 {
+        self.0 / 1e9
+    }
+
+    pub fn as_mbps(&self) -> f64 {
+        self.0 / 1e6
+    }
+
+    /// Bytes per second carried at this bit rate.
+    pub fn bytes_per_sec(&self) -> f64 {
+        self.0 / 8.0
+    }
+
+    /// Seconds to move `bytes` at this rate.
+    pub fn transfer_secs(&self, bytes: u64) -> f64 {
+        if self.0 <= 0.0 {
+            return f64::INFINITY;
+        }
+        bytes as f64 / self.bytes_per_sec()
+    }
+}
+
+/// Format a byte count for reports ("1.30 TB", "128 MB", "512 B").
+pub fn fmt_bytes(b: u64) -> String {
+    let bf = b as f64;
+    if b >= TB {
+        format!("{:.2} TB", bf / TB as f64)
+    } else if b >= GB {
+        format!("{:.2} GB", bf / GB as f64)
+    } else if b >= MB {
+        format!("{:.2} MB", bf / MB as f64)
+    } else if b >= KB {
+        format!("{:.2} KB", bf / KB as f64)
+    } else {
+        format!("{b} B")
+    }
+}
+
+/// Format a byte-per-second throughput as a bit rate ("1.10 Gb/s").
+pub fn fmt_rate_bytes_per_sec(bps: f64) -> String {
+    let bits = bps * 8.0;
+    if bits >= 1e9 {
+        format!("{:.2} Gb/s", bits / 1e9)
+    } else if bits >= 1e6 {
+        format!("{:.1} Mb/s", bits / 1e6)
+    } else {
+        format!("{:.0} Kb/s", bits / 1e3)
+    }
+}
+
+/// Parse "10GB", "128MB", "64kb", "512" (bytes). Decimal units.
+pub fn parse_bytes(s: &str) -> Result<u64, String> {
+    let s = s.trim();
+    let split = s
+        .find(|c: char| !c.is_ascii_digit() && c != '.')
+        .unwrap_or(s.len());
+    let (num, unit) = s.split_at(split);
+    let v: f64 = num
+        .parse()
+        .map_err(|_| format!("bad byte quantity: {s:?}"))?;
+    let mult = match unit.trim().to_ascii_lowercase().as_str() {
+        "" | "b" => 1.0,
+        "k" | "kb" => KB as f64,
+        "m" | "mb" => MB as f64,
+        "g" | "gb" => GB as f64,
+        "t" | "tb" => TB as f64,
+        "kib" => KIB as f64,
+        "mib" => MIB as f64,
+        "gib" => GIB as f64,
+        u => return Err(format!("unknown byte unit {u:?} in {s:?}")),
+    };
+    Ok((v * mult) as u64)
+}
+
+/// Format seconds for the tables ("905 s", "85 min", "178 h").
+pub fn fmt_duration_secs(secs: f64) -> String {
+    if secs < 0.1 {
+        format!("{:.1} ms", secs * 1e3)
+    } else if secs < 120.0 {
+        format!("{secs:.1} s")
+    } else if secs < 7200.0 {
+        format!("{:.1} min", secs / 60.0)
+    } else {
+        format!("{:.1} h", secs / 3600.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bitrate_roundtrips() {
+        let r = BitRate::gbps(10.0);
+        assert!((r.as_gbps() - 10.0).abs() < 1e-12);
+        assert!((r.bytes_per_sec() - 1.25e9).abs() < 1.0);
+        // 10 GB at 10 Gb/s = 8 seconds
+        assert!((r.transfer_secs(10 * GB) - 8.0).abs() < 1e-9);
+        assert_eq!(BitRate(0.0).transfer_secs(1), f64::INFINITY);
+    }
+
+    #[test]
+    fn parse_bytes_units() {
+        assert_eq!(parse_bytes("512").unwrap(), 512);
+        assert_eq!(parse_bytes("128MB").unwrap(), 128 * MB);
+        assert_eq!(parse_bytes("10 GB").unwrap(), 10 * GB);
+        assert_eq!(parse_bytes("1.5gb").unwrap(), 1_500_000_000);
+        assert_eq!(parse_bytes("64MiB").unwrap(), 64 * MIB);
+        assert!(parse_bytes("10 parsecs").is_err());
+        assert!(parse_bytes("x").is_err());
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_bytes(1_300_000_000_000), "1.30 TB");
+        assert_eq!(fmt_bytes(128 * MB), "128.00 MB");
+        assert_eq!(fmt_bytes(17), "17 B");
+        assert_eq!(fmt_rate_bytes_per_sec(137_500_000.0), "1.10 Gb/s");
+        assert_eq!(fmt_duration_secs(905.0), "15.1 min");
+        assert_eq!(fmt_duration_secs(12.0), "12.0 s");
+        assert_eq!(fmt_duration_secs(640_800.0), "178.0 h");
+    }
+}

@@ -1,0 +1,124 @@
+//! Fixed-bin histogram + ASCII series plotting used by the figure benches
+//! (Figs 5 and 6 are rendered as terminal plots of the δ_j series).
+
+/// A simple fixed-width-bin histogram over [lo, hi).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    lo: f64,
+    hi: f64,
+    bins: Vec<u64>,
+    underflow: u64,
+    overflow: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, nbins: usize) -> Self {
+        assert!(hi > lo && nbins > 0);
+        Self {
+            lo,
+            hi,
+            bins: vec![0; nbins],
+            underflow: 0,
+            overflow: 0,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        if x < self.lo {
+            self.underflow += 1;
+        } else if x >= self.hi {
+            self.overflow += 1;
+        } else {
+            let n = self.bins.len();
+            let w = (self.hi - self.lo) / n as f64;
+            let i = (((x - self.lo) / w) as usize).min(n - 1);
+            self.bins[i] += 1;
+        }
+    }
+
+    pub fn bins(&self) -> &[u64] {
+        &self.bins
+    }
+
+    pub fn total(&self) -> u64 {
+        self.bins.iter().sum::<u64>() + self.underflow + self.overflow
+    }
+
+    pub fn out_of_range(&self) -> (u64, u64) {
+        (self.underflow, self.overflow)
+    }
+}
+
+/// Render a series as a compact ASCII line plot (rows = height).
+/// Used to print Figs 5/6 in the bench output.
+pub fn ascii_plot(series: &[f64], width: usize, height: usize) -> String {
+    if series.is_empty() || width == 0 || height == 0 {
+        return String::new();
+    }
+    // Downsample (mean-pool) to `width` columns.
+    let cols: Vec<f64> = (0..width.min(series.len()))
+        .map(|c| {
+            let n = series.len();
+            let w = width.min(n);
+            let lo = c * n / w;
+            let hi = ((c + 1) * n / w).max(lo + 1);
+            series[lo..hi].iter().sum::<f64>() / (hi - lo) as f64
+        })
+        .collect();
+    let max = cols.iter().cloned().fold(f64::MIN, f64::max);
+    let min = cols.iter().cloned().fold(f64::MAX, f64::min);
+    let span = (max - min).max(1e-30);
+    let mut rows = vec![vec![b' '; cols.len()]; height];
+    for (c, &v) in cols.iter().enumerate() {
+        let h = (((v - min) / span) * (height - 1) as f64).round() as usize;
+        for (r, row) in rows.iter_mut().enumerate() {
+            let level = height - 1 - r;
+            row[c] = match level.cmp(&h) {
+                std::cmp::Ordering::Equal => b'*',
+                std::cmp::Ordering::Less => b'.',
+                std::cmp::Ordering::Greater => b' ',
+            };
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!("max={max:.4}\n"));
+    for row in rows {
+        out.push_str(std::str::from_utf8(&row).unwrap());
+        out.push('\n');
+    }
+    out.push_str(&format!("min={min:.4}\n"));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_bins_and_edges() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for i in 0..10 {
+            h.push(i as f64 + 0.5);
+        }
+        assert!(h.bins().iter().all(|&b| b == 1));
+        h.push(-1.0);
+        h.push(10.0); // hi edge is exclusive -> overflow
+        assert_eq!(h.out_of_range(), (1, 1));
+        assert_eq!(h.total(), 12);
+    }
+
+    #[test]
+    fn ascii_plot_shapes() {
+        let series: Vec<f64> = (0..100).map(|i| (i as f64 / 10.0).sin()).collect();
+        let plot = ascii_plot(&series, 40, 8);
+        assert!(plot.lines().count() == 10); // 8 rows + max + min labels
+        assert!(plot.contains('*'));
+        assert!(ascii_plot(&[], 40, 8).is_empty());
+    }
+
+    #[test]
+    fn ascii_plot_constant_series() {
+        let plot = ascii_plot(&[2.0; 10], 10, 4);
+        assert!(plot.contains('*')); // degenerate span must not panic
+    }
+}

@@ -1,0 +1,8 @@
+//! From-scratch substrate utilities (the offline environment has no access
+//! to the usual ecosystem crates, and the simulator needs determinism
+//! anyway): PRNGs, statistics, byte/rate quantities, histograms.
+
+pub mod bytes;
+pub mod hist;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,314 @@
+//! Property-based tests over the coordinator invariants (DESIGN.md §7),
+//! using the from-scratch `testkit` substrate.
+
+use sector_sphere::mining::terasort::{generate_records, key_bucket, RECORD_BYTES};
+use sector_sphere::routing::chord::ChordRing;
+use sector_sphere::sector::RecordIndex;
+use sector_sphere::sim::netsim::NetSim;
+use sector_sphere::sphere::{segment_stream, Scheduler, Segment, Stream, StreamFile};
+use sector_sphere::testkit::{forall, range_f64, range_u64, range_usize, vec_of, Gen};
+use sector_sphere::util::rng::Pcg64;
+
+// ---------------------------------------------------------------- netsim
+
+#[test]
+fn prop_netsim_capacity_and_pareto() {
+    // Random link/flow topologies: (1) no link over capacity;
+    // (2) every flow is bottlenecked by its cap or a saturated link;
+    // (3) all bytes are eventually delivered.
+    let gen = |rng: &mut Pcg64| {
+        let n_links = 1 + rng.gen_range(6) as usize;
+        let n_flows = 1 + rng.gen_range(12) as usize;
+        let caps: Vec<f64> = (0..n_links).map(|_| 10.0 + rng.next_f64() * 990.0).collect();
+        let flows: Vec<(Vec<usize>, f64, f64)> = (0..n_flows)
+            .map(|_| {
+                let path_len = 1 + rng.gen_range((n_links as u64).min(3)) as usize;
+                let path = rng.sample_indices(n_links, path_len);
+                (path, 10.0 + rng.next_f64() * 1000.0, 1.0 + rng.next_f64() * 500.0)
+            })
+            .collect();
+        (caps, flows)
+    };
+    forall("netsim capacity/pareto/conservation", 60, gen, |(caps, flows)| {
+        let mut net = NetSim::new();
+        let links: Vec<_> = caps.iter().map(|&c| net.add_link(c)).collect();
+        let mut total_bytes = 0.0;
+        let ids: Vec<_> = flows
+            .iter()
+            .map(|(path, bytes, cap)| {
+                total_bytes += bytes;
+                let p: Vec<_> = path.iter().map(|&i| links[i]).collect();
+                net.start_flow(&p, *bytes, *cap)
+            })
+            .collect();
+        // capacity invariant
+        for (i, l) in links.iter().enumerate() {
+            let load = net.link_load(*l);
+            if load > caps[i] * (1.0 + 1e-6) {
+                return Err(format!("link {i} over capacity: {load} > {}", caps[i]));
+            }
+        }
+        // pareto: every flow rate-capped or on a saturated link
+        for (fid, (path, _, cap)) in ids.iter().zip(flows) {
+            let rate = net.flow_rate(*fid);
+            let capped = rate >= cap * (1.0 - 1e-6);
+            let saturated = path.iter().any(|&i| {
+                net.link_load(links[i]) >= caps[i] * (1.0 - 1e-6)
+            });
+            if !capped && !saturated {
+                return Err(format!("flow {fid:?} at {rate} neither capped ({cap}) nor bottlenecked"));
+            }
+        }
+        // conservation
+        net.run_to_idle();
+        if (net.delivered_bytes - total_bytes).abs() > 1e-3 * total_bytes.max(1.0) {
+            return Err(format!(
+                "delivered {} of {total_bytes}",
+                net.delivered_bytes
+            ));
+        }
+        Ok(())
+    });
+}
+
+// ------------------------------------------------------------ chord ring
+
+#[test]
+fn prop_chord_lookup_equals_naive_successor() {
+    let gen = |rng: &mut Pcg64| {
+        let n = 2 + rng.gen_range(60) as usize;
+        let mut ids: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        let keys: Vec<u64> = (0..20).map(|_| rng.next_u64()).collect();
+        (ids, keys)
+    };
+    forall("chord lookup == naive successor", 80, gen, |(ids, keys)| {
+        if ids.len() < 2 {
+            return Ok(());
+        }
+        let ring = ChordRing::build(ids);
+        for &k in keys {
+            let (owner, hops) = ring.lookup(ids[0], k).ok_or("lookup failed")?;
+            let expect = ring.naive_successor(k).unwrap();
+            if owner != expect {
+                return Err(format!("key {k}: owner {owner} != successor {expect}"));
+            }
+            let bound = 2 * (ids.len() as f64).log2().ceil() as u32 + 4;
+            if hops > bound {
+                return Err(format!("{hops} hops > O(log n) bound {bound}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------- segmentation
+
+#[test]
+fn prop_segmentation_covers_exactly_once_within_bounds() {
+    let gen = |rng: &mut Pcg64| {
+        let files = 1 + rng.gen_range(8) as usize;
+        let sizes: Vec<(u64, u64)> = (0..files)
+            .map(|_| {
+                let recs = 1 + rng.gen_range(400);
+                let rec_size = 10 + rng.gen_range(190);
+                (recs * rec_size, recs)
+            })
+            .collect();
+        let n_spes = 1 + rng.gen_range(16) as usize;
+        let smin = 100 + rng.gen_range(2000);
+        let smax = smin + 1 + rng.gen_range(50_000);
+        (sizes, (n_spes as u64, smin, smax))
+    };
+    forall(
+        "segmentation covers stream exactly once",
+        80,
+        gen,
+        |(sizes, (n_spes, smin, smax))| {
+            let stream = Stream {
+                files: sizes
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &(size, recs))| StreamFile {
+                        name: format!("f{i}.dat"),
+                        size_bytes: size,
+                        n_records: recs,
+                        locations: vec![(i % 4) as u32],
+                    })
+                    .collect(),
+            };
+            let segs = segment_stream(&stream, *n_spes as usize, *smin, *smax, |name| {
+                stream
+                    .files
+                    .iter()
+                    .find(|f| f.name == name)
+                    .map(|f| RecordIndex::fixed(f.size_bytes / f.n_records, f.size_bytes))
+            });
+            // exactly-once coverage, contiguity per file
+            for f in &stream.files {
+                let mut next = 0u64;
+                let mut bytes = 0u64;
+                for s in segs.iter().filter(|s| s.file == f.name) {
+                    if s.first_record != next {
+                        return Err(format!("{}: gap at record {next}", f.name));
+                    }
+                    next += s.n_records;
+                    bytes += s.bytes;
+                }
+                if next != f.n_records || bytes != f.size_bytes {
+                    return Err(format!(
+                        "{}: covered {next}/{} records {bytes}/{} bytes",
+                        f.name, f.n_records, f.size_bytes
+                    ));
+                }
+            }
+            // bounds: every segment <= smax + one record slack; >= smin
+            // except per-file tails (and single-record oversize is legal)
+            for s in &segs {
+                let rec = s.bytes / s.n_records.max(1);
+                if s.bytes > smax + rec {
+                    return Err(format!("segment {} bytes {} > smax {smax}", s.id, s.bytes));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ------------------------------------------------------------- scheduler
+
+#[test]
+fn prop_scheduler_never_idles_spe_and_drains() {
+    let gen = |rng: &mut Pcg64| {
+        let n_segs = 1 + rng.gen_range(60) as usize;
+        let nodes = 1 + rng.gen_range(8) as u32;
+        let segs: Vec<(u64, u64)> = (0..n_segs)
+            .map(|_| (rng.gen_range(6), rng.gen_range(nodes as u64)))
+            .collect();
+        (segs, nodes as u64)
+    };
+    forall("scheduler drains, never refuses an idle SPE", 80, gen, |(segs, nodes)| {
+        let segments: Vec<Segment> = segs
+            .iter()
+            .enumerate()
+            .map(|(id, &(file, loc))| Segment {
+                id,
+                file: format!("f{file}"),
+                first_record: 0,
+                n_records: 10,
+                bytes: 1000,
+                locations: vec![loc as u32],
+                whole_file: false,
+            })
+            .collect();
+        let total = segments.len();
+        let mut sched = Scheduler::new(segments, true);
+        let mut done = 0usize;
+        let mut i = 0u64;
+        while done < total {
+            let node = (i % nodes) as u32;
+            i += 1;
+            // an idle SPE with pending work must get a segment
+            match sched.assign(node) {
+                Some(s) => {
+                    sched.complete(&s);
+                    done += 1;
+                }
+                None => {
+                    if sched.pending_count() > 0 {
+                        return Err(format!(
+                            "idle SPE on node {node} refused with {} pending",
+                            sched.pending_count()
+                        ));
+                    }
+                    break;
+                }
+            }
+        }
+        if done != total {
+            return Err(format!("drained {done}/{total}"));
+        }
+        Ok(())
+    });
+}
+
+// ------------------------------------------------------------- terasort
+
+#[test]
+fn prop_bucket_partition_preserves_key_order_and_mass() {
+    forall(
+        "bucket partition is order-preserving and lossless",
+        30,
+        |rng: &mut Pcg64| (rng.gen_range(5000) + 10, 1 + rng.gen_range(255)),
+        |&(n_records, buckets)| {
+            let data = generate_records(n_records as usize, n_records ^ buckets);
+            let buckets = buckets as u32;
+            let mut per_bucket: Vec<Vec<&[u8]>> = vec![Vec::new(); buckets as usize];
+            for rec in data.chunks_exact(RECORD_BYTES) {
+                per_bucket[key_bucket(&rec[..10], buckets) as usize].push(rec);
+            }
+            let total: usize = per_bucket.iter().map(Vec::len).sum();
+            if total != n_records as usize {
+                return Err(format!("lost records: {total}/{n_records}"));
+            }
+            // cross-bucket order: max key of bucket i <= min key of bucket j>i
+            let mut last_max: Option<&[u8]> = None;
+            for b in &per_bucket {
+                if b.is_empty() {
+                    continue;
+                }
+                let min = b.iter().map(|r| &r[..10]).min().unwrap();
+                let max = b.iter().map(|r| &r[..10]).max().unwrap();
+                if let Some(prev) = last_max {
+                    if prev > min {
+                        return Err("bucket ranges overlap".into());
+                    }
+                }
+                last_max = Some(max);
+            }
+            Ok(())
+        },
+    );
+}
+
+// ------------------------------------------------------------ rng extras
+
+#[test]
+fn prop_gen_range_uniformity_rough() {
+    forall(
+        "gen_range hits all residues",
+        20,
+        |rng: &mut Pcg64| (rng.next_u64(), 2 + rng.gen_range(14)),
+        |&(seed, bound)| {
+            let mut rng = Pcg64::new(seed);
+            let mut seen = vec![0u32; bound as usize];
+            for _ in 0..(bound * 300) {
+                seen[rng.gen_range(bound) as usize] += 1;
+            }
+            let expect = 300.0;
+            for (i, &c) in seen.iter().enumerate() {
+                if (c as f64) < expect * 0.5 || (c as f64) > expect * 1.6 {
+                    return Err(format!("residue {i}: {c} of expected ~{expect}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// A couple of generator-combinator smoke checks (testkit's own API).
+#[test]
+fn testkit_combinators_produce_in_range() {
+    let mut rng = Pcg64::new(1);
+    for _ in 0..100 {
+        let v = range_u64(5, 10).generate(&mut rng);
+        assert!((5..10).contains(&v));
+        let f = range_f64(-1.0, 1.0).generate(&mut rng);
+        assert!((-1.0..1.0).contains(&f));
+        let n = range_usize(0, 3).generate(&mut rng);
+        assert!(n < 3);
+        let xs = vec_of(range_u64(0, 4), 2, 5).generate(&mut rng);
+        assert!((2..=5).contains(&xs.len()));
+    }
+}

@@ -1,0 +1,303 @@
+//! Second property suite: transport models, replication, shuffle
+//! conservation, GMP delivery under loss/reorder, and Terasplit
+//! oracle agreement.
+
+use sector_sphere::config::TransportKind;
+use sector_sphere::mining::terasplit::{aggregate_labels, best_split_host};
+use sector_sphere::sector::{RecordIndex, ReplicationManager, SectorCloud};
+use sector_sphere::sphere::{bucket_home, ShuffleWriter};
+use sector_sphere::testkit::forall;
+use sector_sphere::transport::gmp::GmpEndpoint;
+use sector_sphere::transport::{TcpModel, TransportModels, UdtModel};
+use sector_sphere::util::rng::Pcg64;
+
+#[test]
+fn prop_transport_caps_bounded_and_monotone() {
+    forall(
+        "transport caps within [0, link]; tcp monotone in rtt",
+        100,
+        |rng: &mut Pcg64| {
+            (
+                1e6 + rng.next_f64() * 2e9,        // link bytes/s
+                1e-5 + rng.next_f64() * 0.2,       // rtt secs
+                rng.next_f64() * 0.19 + 0.001,     // extra rtt
+            )
+        },
+        |&(link, rtt, extra)| {
+            let m = TransportModels::default();
+            for kind in [TransportKind::Udt, TransportKind::Tcp] {
+                let cap = m.rate_cap_for(kind, link, rtt);
+                if cap <= 0.0 || cap > link * (1.0 + 1e-9) {
+                    return Err(format!("{kind:?} cap {cap} outside (0, {link}]"));
+                }
+            }
+            let t1 = m.rate_cap_for(TransportKind::Tcp, link, rtt);
+            let t2 = m.rate_cap_for(TransportKind::Tcp, link, rtt + extra);
+            if t2 > t1 * (1.0 + 1e-9) {
+                return Err(format!("tcp cap grew with rtt: {t1} -> {t2}"));
+            }
+            // UDT stays within 15% across the same rtt change (its
+            // control loop is SYN-clocked, only the loss model drifts)
+            let u1 = m.rate_cap_for(TransportKind::Udt, link, rtt);
+            let u2 = m.rate_cap_for(TransportKind::Udt, link, rtt + extra);
+            if u2 > u1 {
+                return Err("udt cap grew with rtt".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_udt_converges_under_any_seed() {
+    forall(
+        "UdtCc converges to >=85% of any link",
+        25,
+        |rng: &mut Pcg64| (rng.next_u64(), 1e8 + rng.next_f64() * 2e9),
+        |&(seed, link)| {
+            let mut cc = sector_sphere::transport::UdtCc::new(link);
+            let mut rng = Pcg64::new(seed);
+            cc.run(30.0, 0.0, &mut rng);
+            let frac = cc.rate_bps() / link;
+            if frac < 0.85 {
+                return Err(format!("converged to {frac:.2} of link"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_setup_secs_cached_never_slower() {
+    forall(
+        "cached connections never pay more setup",
+        100,
+        |rng: &mut Pcg64| rng.next_f64() * 0.2,
+        |&rtt| {
+            let udt = UdtModel::default();
+            let tcp = TcpModel::default();
+            if udt.setup_secs(rtt, true) > udt.setup_secs(rtt, false) + 1e-12 {
+                return Err("udt cached slower".into());
+            }
+            if tcp.setup_secs(rtt, true) > tcp.setup_secs(rtt, false) + 1e-12 {
+                return Err("tcp cached slower".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_replication_reaches_target_for_any_cloud_shape() {
+    forall(
+        "replication converges to min(target, nodes)",
+        25,
+        |rng: &mut Pcg64| {
+            (
+                2 + rng.gen_range(7),          // nodes
+                1 + rng.gen_range(5),          // target
+                1 + rng.gen_range(20) as usize, // files
+            )
+        },
+        |&(nodes, target, files)| {
+            let cloud = SectorCloud::builder()
+                .nodes(nodes as usize)
+                .replicas(target as usize)
+                .seed(nodes * 31 + target)
+                .build()
+                .map_err(|e| e.to_string())?;
+            let ip = "10.0.0.1".parse().unwrap();
+            for i in 0..files {
+                cloud
+                    .upload(ip, &format!("f{i}.dat"), &[1, 2, 3], None, None)
+                    .map_err(|e| e.to_string())?;
+            }
+            let mut mgr = ReplicationManager::new(1.0);
+            mgr.check_all(&cloud);
+            let expect = (target as usize).min(nodes as usize);
+            for name in cloud.list() {
+                let locs = cloud.stat(&name).unwrap().locations;
+                if locs.len() != expect {
+                    return Err(format!("{name}: {} replicas, want {expect}", locs.len()));
+                }
+                let mut dedup = locs.clone();
+                dedup.sort_unstable();
+                dedup.dedup();
+                if dedup.len() != locs.len() {
+                    return Err(format!("{name}: duplicate locations {locs:?}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_shuffle_writer_conserves_records_and_routes_home() {
+    forall(
+        "shuffle conserves records; buckets land on home nodes",
+        30,
+        |rng: &mut Pcg64| {
+            let nodes = 1 + rng.gen_range(8) as usize;
+            let buckets = 1 + rng.gen_range(32);
+            let recs: Vec<(u64, u64)> = (0..rng.gen_range(200))
+                .map(|_| (rng.gen_range(buckets), 1 + rng.gen_range(40)))
+                .collect();
+            (nodes, buckets, recs)
+        },
+        |(nodes, buckets, recs)| {
+            let cloud = SectorCloud::builder()
+                .nodes(*nodes)
+                .seed(42)
+                .build()
+                .map_err(|e| e.to_string())?;
+            let mut w = ShuffleWriter::new("out", *buckets as u32);
+            for (b, len) in recs {
+                w.add(*b as u32, &vec![7u8; *len as usize])
+                    .map_err(|e| e.to_string())?;
+            }
+            let files = w.finalize(&cloud).map_err(|e| e.to_string())?;
+            let total: u64 = files
+                .iter()
+                .map(|f| cloud.stat(f).unwrap().n_records)
+                .sum();
+            if total != recs.len() as u64 {
+                return Err(format!("{total} records out of {}", recs.len()));
+            }
+            for f in &files {
+                let meta = cloud.stat(f).unwrap();
+                // name is "out.NNNNN.dat"
+                let bucket: u32 = f[4..9].parse().unwrap();
+                let home = bucket_home(bucket, *nodes);
+                if meta.locations != vec![home] {
+                    return Err(format!("{f} on {:?}, home {home}", meta.locations));
+                }
+                // index must parse and cover the file
+                let idx = cloud.load_index(f).ok_or("missing idx")?;
+                if idx.total_bytes() != meta.size_bytes {
+                    return Err(format!("{f}: idx covers {} of {}", idx.total_bytes(), meta.size_bytes));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_gmp_delivers_in_order_under_loss_and_reorder() {
+    forall(
+        "GMP: lossy, reordering network still yields FIFO delivery",
+        30,
+        |rng: &mut Pcg64| (rng.next_u64(), 1 + rng.gen_range(40) as usize, rng.next_f64() * 0.4),
+        |&(seed, n_msgs, loss)| {
+            let mut rng = Pcg64::new(seed);
+            let mut a = GmpEndpoint::new(1, 0.05);
+            let mut b = GmpEndpoint::new(2, 0.05);
+            let mut wire: Vec<sector_sphere::transport::Datagram> = Vec::new();
+            for i in 0..n_msgs {
+                wire.push(a.send(0.0, 2, format!("m{i}").into_bytes()));
+            }
+            let mut now = 0.0;
+            for _round in 0..400 {
+                now += 0.06;
+                // random loss + reorder
+                rng.shuffle(&mut wire);
+                let mut next_wire = Vec::new();
+                for d in wire.drain(..) {
+                    if rng.next_f64() < loss {
+                        continue; // dropped
+                    }
+                    let replies = if d.dst == 2 {
+                        b.on_datagram(d)
+                    } else {
+                        a.on_datagram(d)
+                    };
+                    next_wire.extend(replies);
+                }
+                wire = next_wire;
+                wire.extend(a.tick(now));
+                if a.unacked_count() == 0 && b.delivered.len() == n_msgs {
+                    break;
+                }
+            }
+            if b.delivered.len() != n_msgs {
+                return Err(format!("delivered {} of {n_msgs}", b.delivered.len()));
+            }
+            for (i, (src, payload)) in b.delivered.iter().enumerate() {
+                if *src != 1 || payload != format!("m{i}").as_bytes() {
+                    return Err(format!("message {i} out of order: {payload:?}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_terasplit_aggregation_gain_close_to_exact() {
+    forall(
+        "pooled split gain within 20% of exact for structured streams",
+        25,
+        |rng: &mut Pcg64| (rng.next_u64(), 2000 + rng.gen_range(30_000) as usize),
+        |&(seed, n)| {
+            let mut rng = Pcg64::new(seed);
+            // structured stream: class depends on position with noise
+            let labels: Vec<u8> = (0..n)
+                .map(|i| {
+                    if rng.next_f64() < 0.15 {
+                        rng.gen_range(4) as u8
+                    } else if i < n / 2 {
+                        0
+                    } else {
+                        1
+                    }
+                })
+                .collect();
+            let (exact_gain, exact_idx) = best_split_host(&labels, 4);
+            let (pooled, factor) = aggregate_labels(&labels, 4, 1024);
+            let (pooled_gain, pooled_idx) = best_split_host(&pooled, 4);
+            // Majority pooling denoises, so the pooled gain may exceed
+            // the exact gain — but it must stay a valid entropy gain and
+            // must locate the same boundary (within one pooling window
+            // + 10% of the stream).
+            if !(0.0..=2.0 + 1e-9).contains(&pooled_gain) {
+                return Err(format!("pooled gain {pooled_gain} out of range"));
+            }
+            if exact_gain > 0.2 {
+                let exact_pos = exact_idx as f64;
+                let pooled_pos = (pooled_idx as f64 + 0.5) * factor as f64;
+                if (pooled_pos - exact_pos).abs() > factor as f64 + 0.1 * n as f64 {
+                    return Err(format!(
+                        "pooled split at {pooled_pos:.0} vs exact {exact_pos:.0} (n={n})"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_record_index_roundtrip_arbitrary_lengths() {
+    forall(
+        "RecordIndex wire format round-trips",
+        60,
+        |rng: &mut Pcg64| {
+            (0..rng.gen_range(200))
+                .map(|_| 1 + rng.gen_range(10_000))
+                .collect::<Vec<u64>>()
+        },
+        |lengths| {
+            let idx = RecordIndex::from_lengths(lengths);
+            let back = RecordIndex::from_bytes(&idx.to_bytes()).map_err(|e| e)?;
+            if back != idx {
+                return Err("round-trip mismatch".into());
+            }
+            let total: u64 = lengths.iter().sum();
+            if idx.total_bytes() != total {
+                return Err(format!("covers {} of {total}", idx.total_bytes()));
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,142 @@
+//! PJRT artifact correctness: the AOT-compiled JAX/Pallas executables
+//! must agree with the host oracles.  Requires `make artifacts`.
+//!
+//! One PJRT client per process (the CPU plugin dislikes repeated
+//! clients), so everything shares a lazily-loaded runtime.
+
+use sector_sphere::mining::emergent::{delta_host, score_host, EmergentCluster};
+use sector_sphere::mining::kmeans::{fit, step_host};
+use sector_sphere::mining::terasplit::best_split_host;
+use sector_sphere::runtime::Runtime;
+use sector_sphere::util::rng::Pcg64;
+
+// The PJRT client is not Send/Sync (Rc internals), so all checks share
+// one runtime inside a single #[test] running sequentially.
+#[test]
+fn pjrt_artifacts_match_host_oracles() {
+    let rt = &Runtime::load(&Runtime::default_dir())
+        .expect("run `make artifacts` before `cargo test`");
+    kmeans_step_matches_host_oracle(rt);
+    kmeans_fit_via_pjrt_matches_host_fit(rt);
+    split_gain_matches_host_oracle(rt);
+    split_gain_rejects_contract_violations(rt);
+    delta_stat_matches_host(rt);
+    score_matches_host(rt);
+    runtime_reports_platform(rt);
+}
+
+fn kmeans_step_matches_host_oracle(rt: &Runtime) {
+    let mut rng = Pcg64::new(1);
+    for (n, d, k) in [(100usize, 4usize, 3usize), (4096, 16, 32), (513, 8, 5)] {
+        let points: Vec<f32> = (0..n * d).map(|_| rng.next_gaussian() as f32).collect();
+        let centers: Vec<f32> = (0..k * d).map(|_| rng.next_gaussian() as f32).collect();
+        let (sums, counts, inertia) = rt.kmeans_step(&points, &centers, d, k).unwrap();
+        let (hs, hc, hi) = step_host(&points, &centers, d, k);
+        assert_eq!(counts.len(), k);
+        for (a, b) in sums.iter().zip(&hs) {
+            assert!((a - b).abs() < 1e-2, "sums {a} vs {b} (n={n},d={d},k={k})");
+        }
+        for (a, b) in counts.iter().zip(&hc) {
+            assert_eq!(*a, *b, "counts (n={n},d={d},k={k})");
+        }
+        assert!(
+            (inertia - hi).abs() / hi.max(1.0) < 1e-3,
+            "inertia {inertia} vs {hi}"
+        );
+    }
+}
+
+fn kmeans_fit_via_pjrt_matches_host_fit(rt: &Runtime) {
+    let mut rng = Pcg64::new(2);
+    // 3 separated blobs in 4-D
+    let mut points = Vec::new();
+    for blob in 0..3 {
+        for _ in 0..60 {
+            for j in 0..4 {
+                let center = if j == blob { 10.0 } else { 0.0 };
+                points.push(center + rng.next_gaussian() as f32 * 0.3);
+            }
+        }
+    }
+    let host = fit(&points, 4, 3, 25, 9, None).unwrap();
+    let pjrt = fit(&points, 4, 3, 25, 9, Some(rt)).unwrap();
+    assert_eq!(host.counts, pjrt.counts, "identical assignment history");
+    for (a, b) in host.centers.iter().zip(&pjrt.centers) {
+        assert!((a - b).abs() < 1e-3, "centers {a} vs {b}");
+    }
+    assert!((host.inertia - pjrt.inertia).abs() / host.inertia < 1e-3);
+}
+
+fn split_gain_matches_host_oracle(rt: &Runtime) {
+    let mut rng = Pcg64::new(3);
+    // sorted-ish labels with a planted boundary
+    for n in [500usize, 5000, 32768] {
+        let mut labels: Vec<u8> = (0..n)
+            .map(|i| if i < n / 3 { rng.gen_range(2) as u8 } else { 2 + rng.gen_range(3) as u8 })
+            .collect();
+        labels.sort_unstable(); // fully feature-sorted stream
+        let (gain, idx) = rt.split_gain(&labels).unwrap();
+        let (hg, hi) = best_split_host(&labels, 8);
+        assert!(
+            (gain as f64 - hg).abs() < 1e-3,
+            "n={n}: gain {gain} vs host {hg}"
+        );
+        // positions must agree up to gain ties
+        if idx != hi {
+            let labels_f: Vec<u8> = labels.clone();
+            let (g2, _) = best_split_host(&labels_f[..=idx.max(1)], 8);
+            assert!(g2.is_finite());
+        }
+    }
+}
+
+fn split_gain_rejects_contract_violations(rt: &Runtime) {
+    assert!(rt.split_gain(&vec![0u8; 40_000]).is_err(), "too long");
+    assert!(rt.split_gain(&[9u8; 10]).is_err(), "class out of range");
+}
+
+fn delta_stat_matches_host(rt: &Runtime) {
+    let mut rng = Pcg64::new(4);
+    for (d, ka, kb) in [(4usize, 3usize, 5usize), (16, 32, 32), (8, 1, 7)] {
+        let a: Vec<f32> = (0..ka * d).map(|_| rng.next_gaussian() as f32).collect();
+        let b: Vec<f32> = (0..kb * d).map(|_| rng.next_gaussian() as f32).collect();
+        let got = rt.delta_stat(&a, &b, d, ka, kb).unwrap() as f64;
+        let want = delta_host(&a, &b, d);
+        assert!(
+            (got - want).abs() / want.max(1e-9) < 1e-4,
+            "delta {got} vs {want} (d={d},ka={ka},kb={kb})"
+        );
+    }
+}
+
+fn score_matches_host(rt: &Runtime) {
+    let mut rng = Pcg64::new(5);
+    let d = 16;
+    let k = 3;
+    let clusters: Vec<EmergentCluster> = (0..k)
+        .map(|_| EmergentCluster {
+            center: (0..d).map(|_| rng.next_gaussian() as f32).collect(),
+            sigma2: 0.5 + rng.next_f32(),
+            theta: 1.0 / k as f32,
+            lambda: 1.0,
+        })
+        .collect();
+    let xs: Vec<f32> = (0..100 * d).map(|_| rng.next_gaussian() as f32).collect();
+    let centers: Vec<f32> = clusters.iter().flat_map(|c| c.center.clone()).collect();
+    let sigma2: Vec<f32> = clusters.iter().map(|c| c.sigma2).collect();
+    let theta: Vec<f32> = clusters.iter().map(|c| c.theta).collect();
+    let lam: Vec<f32> = clusters.iter().map(|c| c.lambda).collect();
+    let got = rt
+        .score(&xs, &centers, &sigma2, &theta, &lam, d, k)
+        .unwrap();
+    assert_eq!(got.len(), 100);
+    for (i, &g) in got.iter().enumerate() {
+        let h = score_host(&xs[i * d..(i + 1) * d], &clusters);
+        assert!((g - h).abs() < 1e-5, "x{i}: {g} vs {h}");
+    }
+}
+
+fn runtime_reports_platform(rt: &Runtime) {
+    assert!(rt.platform().to_lowercase().contains("cpu"));
+    assert_eq!(rt.shapes.n_points, 4096);
+}
