@@ -6,18 +6,24 @@
 //! (Figs 5-6), flags the emergent window, and scores sources with
 //! rho(x).
 //!
-//!     make artifacts && cargo run --release --offline --example angle_pipeline
+//!     cargo run --release --offline --example angle_pipeline
+//!     # optional PJRT path: make artifacts + a `--features pjrt` build
 
 use sector_sphere::cluster::Cluster;
 use sector_sphere::mining::{run_pipeline, AngleScenario, Regime};
 use sector_sphere::util::hist::ascii_plot;
 
 fn main() -> Result<(), String> {
-    let cluster = Cluster::builder()
-        .nodes(4)
-        .seed(20080824)
-        .with_runtime(true)
-        .build()?;
+    // Prefer the PJRT k-means artifact, fall back to the host oracles
+    // (identical models either way; DESIGN.md §8).
+    let builder = || Cluster::builder().nodes(4).seed(20080824);
+    let cluster = match builder().with_runtime(true).build() {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("note: PJRT unavailable, using host oracles ({e})");
+            builder().build()?
+        }
+    };
     let scenario = AngleScenario {
         sensors: 4,
         sources_per_sensor: 25,

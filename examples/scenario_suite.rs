@@ -1,0 +1,54 @@
+//! Scenario suite: run the TOML-described scenarios under
+//! config/scenarios/ end to end — the two paper testbeds plus the
+//! 128-node faulted scale-out — and assert that every run is
+//! deterministic (same spec, byte-identical report; DESIGN.md §4).
+//!
+//!     cargo run --release --example scenario_suite
+
+use std::path::PathBuf;
+
+use sector_sphere::scenario::{run_scenario, ScenarioSpec};
+
+/// Load a scenario TOML from config/scenarios/, falling back to the
+/// equivalent built-in preset when the file is not reachable (e.g. an
+/// installed binary running outside the repo).
+fn load_or(preset: ScenarioSpec, file: &str) -> ScenarioSpec {
+    let base = std::env::var("CARGO_MANIFEST_DIR")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("."));
+    let path = base.join("config/scenarios").join(file);
+    match std::fs::read_to_string(&path) {
+        Ok(text) => ScenarioSpec::from_toml(&text)
+            .unwrap_or_else(|e| panic!("{}: {e}", path.display())),
+        Err(_) => preset,
+    }
+}
+
+fn main() {
+    let specs = [
+        load_or(ScenarioSpec::paper_wan6(), "paper_wan6.toml"),
+        load_or(ScenarioSpec::paper_lan8(), "paper_lan8.toml"),
+        load_or(ScenarioSpec::scale128(), "scale128.toml"),
+    ];
+    println!(
+        "{:<28} {:>6} {:>6} {:>12} {:>9} {:>9} {:>7} {:>7}",
+        "scenario", "nodes", "racks", "makespan(s)", "events", "segments", "local%", "faults"
+    );
+    for spec in &specs {
+        let a = run_scenario(spec).expect("scenario runs");
+        let b = run_scenario(spec).expect("scenario reruns");
+        assert_eq!(a, b, "{}: same spec must give the same report", spec.name);
+        println!(
+            "{:<28} {:>6} {:>6} {:>12.1} {:>9} {:>9} {:>6.0}% {:>7}",
+            a.name,
+            a.nodes,
+            a.racks,
+            a.makespan_secs,
+            a.events,
+            a.segments,
+            a.locality_fraction * 100.0,
+            a.faults_injected
+        );
+    }
+    println!("\nall scenarios completed; each ran twice with byte-identical reports");
+}

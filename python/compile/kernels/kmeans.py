@@ -18,7 +18,7 @@ VMEM budget per grid step (f32, defaults TILE_N=512, d=16, k=32):
   X tile 512*16*4 = 32 KiB, centers 32*16*4 = 2 KiB, distances
   512*32*4 = 64 KiB, onehot 64 KiB, outputs ~2.3 KiB  ==>  ~165 KiB,
   comfortably inside a 16 MiB VMEM even at TILE_N=8192.  MXU utilisation
-  estimate in EXPERIMENTS.md (section Perf/L1).
+  estimate in DESIGN.md (section "Hardware-Adaptation").
 
 interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
 custom-calls; interpret mode lowers to plain HLO so the AOT artifact runs

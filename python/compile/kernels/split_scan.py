@@ -14,7 +14,7 @@ an output block pinned to (0, 0) that each grid step reads, extends with
 an in-block cumsum, and writes back.  The per-position entropy evaluation
 is fully vectorised on the VPU (8x128 lanes); there is no MXU work --
 this kernel is bandwidth-bound, and the roofline discussion in
-EXPERIMENTS.md treats it as such.
+DESIGN.md (section "Hardware-Adaptation") treats it as such.
 
 The kernel needs the *total* histogram before the scan starts; the L2
 wrapper computes it with one cheap jnp reduction and passes it in, keeping

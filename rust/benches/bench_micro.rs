@@ -1,7 +1,7 @@
 //! Hot-path microbenchmarks (the §Perf working set): segmentation,
 //! scheduler assignment, shuffle bucketing, record sort, Chord lookup,
 //! netsim event loop, GMP codec.  Used before/after every optimization
-//! (EXPERIMENTS.md §Perf).
+//! (experiment index: DESIGN.md §5).
 //!
 //!     cargo bench --bench bench_micro
 

@@ -1,0 +1,66 @@
+//! Scenario-engine scaling: wall-clock cost of simulating growing
+//! testbeds (DESIGN.md §4, §5).  Not a paper table — an engineering
+//! gate: per-event overhead must not dominate as scenarios grow past
+//! the paper's 8 nodes, or the "run any scenario you can describe"
+//! promise dies at 128.
+//!
+//!     cargo bench --bench bench_scale
+
+use sector_sphere::bench::time_fn;
+use sector_sphere::scenario::{run_scenario, ScenarioSpec};
+use sector_sphere::topology::TopologySpec;
+use sector_sphere::util::bytes::GB;
+
+/// Fault-free Terasort at 1 GB/node on a generated layout.
+fn spec_for(sites: usize, racks_per_site: usize, nodes_per_rack: usize) -> ScenarioSpec {
+    let mut spec = ScenarioSpec::paper_lan8();
+    spec.topology = TopologySpec::scale_out(sites, racks_per_site, nodes_per_rack);
+    spec.name = format!("scale-{}", spec.topology.nodes());
+    spec.workload.bytes_per_node = 1.0 * GB as f64;
+    spec
+}
+
+fn main() {
+    println!("scenario engine scaling (terasort, 1 GB/node):");
+    println!(
+        "{:>6} {:>9} {:>11} {:>12} {:>12}",
+        "nodes", "events", "wall ms", "events/sec", "makespan s"
+    );
+    let mut per_event_ms = Vec::new();
+    for (sites, racks, npr) in [(1, 2, 8), (2, 2, 8), (4, 2, 8), (4, 4, 8)] {
+        let spec = spec_for(sites, racks, npr);
+        let report = run_scenario(&spec).expect("scenario runs");
+        let t = time_fn(&spec.name, 1, 3, || run_scenario(&spec).unwrap());
+        let events_per_sec = report.events as f64 / t.secs.mean.max(1e-9);
+        per_event_ms.push(t.secs.mean * 1e3 / report.events as f64);
+        println!(
+            "{:>6} {:>9} {:>11.2} {:>12.0} {:>12.1}",
+            report.nodes,
+            report.events,
+            t.secs.mean * 1e3,
+            events_per_sec,
+            report.makespan_secs
+        );
+    }
+    // The gate: going 16 -> 128 nodes must not blow up per-event cost
+    // (quadratic coordination would show a ~64x jump here).
+    let growth = per_event_ms.last().unwrap() / per_event_ms.first().unwrap().max(1e-9);
+    println!("per-event cost growth 16->128 nodes: {growth:.1}x");
+    assert!(
+        growth < 40.0,
+        "per-event overhead grew {growth:.1}x from 16 to 128 nodes"
+    );
+
+    // The full faulted 128-node preset, plus the determinism contract.
+    let spec = ScenarioSpec::scale128();
+    let a = run_scenario(&spec).expect("scale128 runs");
+    let b = run_scenario(&spec).expect("scale128 reruns");
+    assert_eq!(a, b, "scale128 must be deterministic");
+    println!(
+        "\nscale128 with faults: makespan {:.1} s, {} events, {} reassignments, locality {:.0}%",
+        a.makespan_secs,
+        a.events,
+        a.reassignments,
+        a.locality_fraction * 100.0
+    );
+}

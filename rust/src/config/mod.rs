@@ -1,7 +1,7 @@
 //! Typed configuration for clusters, systems and benchmarks.
 //!
 //! A TOML-subset file (`config::toml`) can override any field; defaults
-//! are the calibrated constants described in EXPERIMENTS.md §Calibration.
+//! are the calibrated constants described in DESIGN.md §3.
 //! Calibration rule: hardware constants are fitted ONLY to the paper's
 //! single-node, single-site table cells; all scaling behaviour must
 //! emerge from the simulation.
@@ -71,7 +71,7 @@ impl HardwareSpec {
 }
 
 /// Per-core software processing rates (bytes/s) — the CPU side of the
-/// calibration (EXPERIMENTS.md §Calibration).  Fitted to the paper's
+/// calibration (DESIGN.md §3).  Fitted to the paper's
 /// single-node cells only.
 #[derive(Clone, Debug, PartialEq)]
 pub struct CpuRates {
@@ -256,6 +256,17 @@ impl SimConfig {
         }
     }
 
+    /// Look up a hardware generation by name — the `[hardware] profile`
+    /// key of scenario configs ("wan" = 2008 Opterons, "lan" = the newer
+    /// Xeon rack).
+    pub fn profile(name: &str) -> Result<Self, String> {
+        match name.to_ascii_lowercase().as_str() {
+            "wan" => Ok(Self::wan_default()),
+            "lan" => Ok(Self::lan_default()),
+            other => Err(format!("unknown hardware profile {other:?} (wan|lan)")),
+        }
+    }
+
     /// Apply overrides from a parsed config file.
     pub fn apply_table(mut self, t: &Table) -> Result<Self, String> {
         self.hardware = HardwareSpec::from_table(t, "hardware", self.hardware);
@@ -333,6 +344,13 @@ mod tests {
         assert_eq!(c.sphere.seg_min_bytes, 16 * MB);
         assert_eq!(c.sphere_transport, TransportKind::Tcp);
         assert_eq!(c.hadoop.block_bytes, 64 * MB);
+    }
+
+    #[test]
+    fn profiles_resolve_by_name() {
+        assert_eq!(SimConfig::profile("wan").unwrap().hardware.cores, 4);
+        assert_eq!(SimConfig::profile("LAN").unwrap().hardware.cores, 8);
+        assert!(SimConfig::profile("cloud9").is_err());
     }
 
     #[test]

@@ -162,6 +162,25 @@ impl Table {
             .filter(move |k| k.starts_with(&prefix))
             .map(String::as_str)
     }
+
+    /// Immediate child section names under `section`, sorted and
+    /// deduplicated.  `[faults.crash1]` / `[faults.slow2]` headers give
+    /// `subsections("faults") == ["crash1", "slow2"]` — how scenario
+    /// configs enumerate their fault plan (scenario::ScenarioSpec).
+    pub fn subsections(&self, section: &str) -> Vec<String> {
+        let prefix = format!("{section}.");
+        let mut out: Vec<String> = Vec::new();
+        for k in self.entries.keys() {
+            if let Some(rest) = k.strip_prefix(&prefix) {
+                if let Some((child, _)) = rest.split_once('.') {
+                    out.push(child.to_string());
+                }
+            }
+        }
+        // BTreeMap keys are sorted, so duplicates are adjacent.
+        out.dedup();
+        out
+    }
 }
 
 fn strip_comment(line: &str) -> &str {
@@ -309,5 +328,18 @@ names = ["chicago", "pasadena"]"#)
         let t = Table::parse("[a]\nx = 1\ny = 2\n[b]\nz = 3").unwrap();
         let keys: Vec<&str> = t.section_keys("a").collect();
         assert_eq!(keys, vec!["a.x", "a.y"]);
+    }
+
+    #[test]
+    fn subsections_enumerate_children() {
+        let t = Table::parse(
+            "[faults.crash1]\nkind = \"crash\"\nnode = 3\n\
+             [faults.slow2]\nkind = \"straggler\"\n\
+             [faults]\ncount = 2\n[other.x]\ny = 1",
+        )
+        .unwrap();
+        assert_eq!(t.subsections("faults"), vec!["crash1", "slow2"]);
+        assert_eq!(t.subsections("other"), vec!["x"]);
+        assert!(t.subsections("missing").is_empty());
     }
 }

@@ -24,6 +24,9 @@
 //!   request path without Python.
 //! * [`cluster`] — the in-process "real mode" cluster used by the
 //!   examples: real files, real threads, emulated network.
+//! * [`scenario`] — the scenario engine: TOML-described runs composing
+//!   a generated topology ([`topology`]), a workload and a fault plan
+//!   into one deterministic paper-scale experiment (DESIGN.md §4).
 //!
 //! The remaining modules are offline-environment substrates built from
 //! scratch: [`cli`], [`config`], [`bench`], [`testkit`], [`metrics`],
@@ -42,6 +45,7 @@ pub mod metrics;
 pub mod mining;
 pub mod routing;
 pub mod runtime;
+pub mod scenario;
 pub mod sector;
 pub mod sim;
 pub mod sphere;

@@ -17,6 +17,7 @@ const SUBCOMMANDS: &[(&str, &str)] = &[
     ("sort", "run real Terasort+Terasplit on an in-process cluster"),
     ("angle", "run the Angle anomaly-detection pipeline"),
     ("sim", "simulate a paper-scale Table 1/2 row (WAN or LAN)"),
+    ("scenario", "run a TOML-described scenario (topology+workload+faults)"),
     ("quickstart", "upload files and run a grep UDF"),
 ];
 
@@ -28,6 +29,8 @@ fn flag_spec() -> Vec<FlagSpec> {
         FlagSpec { name: "bytes-per-node", help: "sim data size, e.g. 10GB", takes_value: true },
         FlagSpec { name: "windows", help: "angle time windows", takes_value: true },
         FlagSpec { name: "seed", help: "deterministic seed", takes_value: true },
+        FlagSpec { name: "file", help: "scenario TOML (see config/scenarios/)", takes_value: true },
+        FlagSpec { name: "preset", help: "scenario preset: paper_wan6|paper_lan8|scale128", takes_value: true },
         FlagSpec { name: "disk", help: "back slaves with real files", takes_value: false },
         FlagSpec { name: "pjrt", help: "load AOT artifacts (needs `make artifacts`)", takes_value: false },
         FlagSpec { name: "help", help: "show usage", takes_value: false },
@@ -52,6 +55,7 @@ fn main() {
         "sort" => cmd_sort(&args),
         "angle" => cmd_angle(&args),
         "sim" => cmd_sim(&args),
+        "scenario" => cmd_scenario(&args),
         "quickstart" => cmd_quickstart(&args),
         other => Err(format!("unknown command {other:?}")),
     };
@@ -135,6 +139,42 @@ fn cmd_sim(args: &Args) -> Result<(), String> {
         hadoop.terasplit_secs / sphere.terasplit_secs,
         (hadoop.terasort_secs + hadoop.terasplit_secs)
             / (sphere.terasort_secs + sphere.terasplit_secs)
+    );
+    Ok(())
+}
+
+fn cmd_scenario(args: &Args) -> Result<(), String> {
+    use sector_sphere::scenario::{run_scenario, ScenarioSpec};
+    let spec = match args.get("file") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| format!("read scenario {path}: {e}"))?;
+            ScenarioSpec::from_toml(&text)?
+        }
+        None => match args.str_or("preset", "scale128") {
+            "paper_wan6" => ScenarioSpec::paper_wan6(),
+            "paper_lan8" => ScenarioSpec::paper_lan8(),
+            "scale128" => ScenarioSpec::scale128(),
+            other => {
+                return Err(format!(
+                    "unknown preset {other:?} (paper_wan6|paper_lan8|scale128) — or pass --file"
+                ))
+            }
+        },
+    };
+    let r = run_scenario(&spec)?;
+    println!(
+        "scenario {}: {} on {} nodes ({} racks, {} sites)",
+        r.name, r.workload, r.nodes, r.racks, r.sites
+    );
+    println!("  makespan       {}", fmt_duration_secs(r.makespan_secs));
+    println!("  events         {}", r.events);
+    println!("  segments       {}", r.segments);
+    println!("  locality       {:.0}%", r.locality_fraction * 100.0);
+    println!("  shuffled       {:.2} GB", r.shuffle_gbytes);
+    println!(
+        "  faults         {} injected, {} nodes crashed, {} reassignments",
+        r.faults_injected, r.nodes_crashed, r.reassignments
     );
     Ok(())
 }

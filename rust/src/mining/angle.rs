@@ -146,7 +146,7 @@ pub fn run_pipeline(
 /// Table 3 cost model: clustering time vs (records, Sector files).
 /// Dominated by per-file costs (lookup, connection, open, feature-file
 /// fetch) plus a per-record scan/cluster cost — fitted to the table's
-/// four cells (EXPERIMENTS.md §Calibration):
+/// four cells (DESIGN.md §3):
 ///   500 rec / 1 file = 1.9 s; 1e3 / 3 = 4.2 s;
 ///   1e6 / 2850 = 85 min; 1e8 / 300000 = 178 h.
 pub fn simulate_angle_clustering(n_records: f64, n_files: f64) -> f64 {

@@ -10,25 +10,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-/// The AOT shape contract — keep in sync with python/compile/model.py.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub struct ArtifactShapes {
-    pub n_points: usize,
-    pub n_dim: usize,
-    pub n_clusters: usize,
-    pub n_labels: usize,
-    pub n_classes: usize,
-    pub score_batch: usize,
-}
-
-pub const SHAPES: ArtifactShapes = ArtifactShapes {
-    n_points: 4096,
-    n_dim: 16,
-    n_clusters: 32,
-    n_labels: 32768,
-    n_classes: 8,
-    score_batch: 256,
-};
+use super::{ArtifactShapes, SHAPES};
 
 const ARTIFACT_NAMES: [&str; 4] = ["kmeans_step", "split_gain", "delta_stat", "score"];
 
@@ -44,14 +26,7 @@ impl Runtime {
     /// Locate the artifacts directory: explicit arg, `$SECTOR_ARTIFACTS`,
     /// or `./artifacts` relative to the workspace root.
     pub fn default_dir() -> PathBuf {
-        if let Ok(d) = std::env::var("SECTOR_ARTIFACTS") {
-            return PathBuf::from(d);
-        }
-        // CARGO_MANIFEST_DIR works for tests/benches; fall back to cwd.
-        let base = std::env::var("CARGO_MANIFEST_DIR")
-            .map(PathBuf::from)
-            .unwrap_or_else(|_| PathBuf::from("."));
-        base.join("artifacts")
+        super::default_artifact_dir()
     }
 
     /// Load + compile every artifact in `dir`.
@@ -270,26 +245,6 @@ impl Runtime {
     }
 }
 
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    // Runtime tests live in rust/tests/runtime_artifacts.rs (they need
-    // `make artifacts` to have run). Here: contract-level checks only.
-
-    #[test]
-    fn shape_contract_matches_python() {
-        assert_eq!(SHAPES.n_points, 4096);
-        assert_eq!(SHAPES.n_dim, 16);
-        assert_eq!(SHAPES.n_clusters, 32);
-        assert_eq!(SHAPES.n_labels, 32768);
-        assert_eq!(SHAPES.n_classes, 8);
-        assert_eq!(SHAPES.score_batch, 256);
-    }
-
-    #[test]
-    fn default_dir_resolves() {
-        let d = Runtime::default_dir();
-        assert!(d.ends_with("artifacts"));
-    }
-}
+// Runtime tests live in rust/tests/runtime_artifacts.rs (they need
+// `make artifacts` to have run); contract-level checks live in the
+// parent module so they run in both backend configurations.

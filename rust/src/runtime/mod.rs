@@ -6,7 +6,72 @@
 //!
 //! Shapes are the AOT contract from `python/compile/model.py`; inputs
 //! are padded (weight-0 / valid-0 rows) to fit.
+//!
+//! The xla-backed implementation (`artifact`) needs the vendored `xla`
+//! crate and is gated behind the `pjrt` cargo feature; the default
+//! offline build compiles the API-compatible `stub` whose `load` always
+//! fails, so every caller falls back to its host oracle (DESIGN.md §8).
 
+#[cfg(feature = "pjrt")]
 pub mod artifact;
+#[cfg(not(feature = "pjrt"))]
+pub mod stub;
 
-pub use artifact::{ArtifactShapes, Runtime};
+#[cfg(feature = "pjrt")]
+pub use artifact::Runtime;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::Runtime;
+
+/// The AOT shape contract — keep in sync with python/compile/model.py.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ArtifactShapes {
+    pub n_points: usize,
+    pub n_dim: usize,
+    pub n_clusters: usize,
+    pub n_labels: usize,
+    pub n_classes: usize,
+    pub score_batch: usize,
+}
+
+pub const SHAPES: ArtifactShapes = ArtifactShapes {
+    n_points: 4096,
+    n_dim: 16,
+    n_clusters: 32,
+    n_labels: 32768,
+    n_classes: 8,
+    score_batch: 256,
+};
+
+/// Locate the artifacts directory: explicit arg, `$SECTOR_ARTIFACTS`,
+/// or `./artifacts` relative to the workspace root.
+pub(crate) fn default_artifact_dir() -> std::path::PathBuf {
+    if let Ok(d) = std::env::var("SECTOR_ARTIFACTS") {
+        return std::path::PathBuf::from(d);
+    }
+    // CARGO_MANIFEST_DIR works for tests/benches; fall back to cwd.
+    let base = std::env::var("CARGO_MANIFEST_DIR")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("."));
+    base.join("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_contract_matches_python() {
+        assert_eq!(SHAPES.n_points, 4096);
+        assert_eq!(SHAPES.n_dim, 16);
+        assert_eq!(SHAPES.n_clusters, 32);
+        assert_eq!(SHAPES.n_labels, 32768);
+        assert_eq!(SHAPES.n_classes, 8);
+        assert_eq!(SHAPES.score_batch, 256);
+    }
+
+    #[test]
+    fn default_dir_resolves() {
+        let d = Runtime::default_dir();
+        assert!(d.ends_with("artifacts"));
+    }
+}

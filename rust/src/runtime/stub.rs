@@ -1,0 +1,118 @@
+//! API-compatible stand-in for the PJRT runtime, compiled when the
+//! `pjrt` feature is off (the default in the offline environment —
+//! the real backend needs the vendored `xla` crate; DESIGN.md §8).
+//!
+//! `load` always fails, so a `Runtime` value is never constructed and
+//! every caller (cluster, kmeans, emergent, terasplit) takes its host
+//! oracle path.  The methods still exist so the call sites typecheck
+//! identically under both configurations.
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+use super::ArtifactShapes;
+
+/// Error type mirroring the Display surface callers rely on
+/// (`format!("{e}")` / `format!("{e:#}")`).
+#[derive(Debug)]
+pub struct RuntimeError(pub String);
+
+impl fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+pub type Result<T> = std::result::Result<T, RuntimeError>;
+
+/// Stub runtime: same shape contract, no executables.
+pub struct Runtime {
+    pub shapes: ArtifactShapes,
+    pub artifact_dir: PathBuf,
+}
+
+impl Runtime {
+    /// Locate the artifacts directory: explicit arg, `$SECTOR_ARTIFACTS`,
+    /// or `./artifacts` relative to the workspace root.
+    pub fn default_dir() -> PathBuf {
+        super::default_artifact_dir()
+    }
+
+    /// Always fails: this build carries no PJRT backend.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        Err(RuntimeError(format!(
+            "built without the `pjrt` feature: cannot load PJRT artifacts \
+             from {dir:?}; enabling it needs vendored `xla`/`anyhow` path \
+             dependencies in Cargo.toml plus `make artifacts` (DESIGN.md \
+             §8) — or run without --pjrt to use the host oracles"
+        )))
+    }
+
+    fn unavailable(&self, what: &str) -> RuntimeError {
+        RuntimeError(format!("{what}: PJRT backend not compiled in"))
+    }
+
+    pub fn platform(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn kmeans_step(
+        &self,
+        _points: &[f32],
+        _centers: &[f32],
+        _d: usize,
+        _k: usize,
+    ) -> Result<(Vec<f32>, Vec<f32>, f32)> {
+        Err(self.unavailable("kmeans_step"))
+    }
+
+    pub fn split_gain(&self, _class_ids: &[u8]) -> Result<(f32, usize)> {
+        Err(self.unavailable("split_gain"))
+    }
+
+    pub fn delta_stat(
+        &self,
+        _a: &[f32],
+        _b: &[f32],
+        _d: usize,
+        _ka: usize,
+        _kb: usize,
+    ) -> Result<f32> {
+        Err(self.unavailable("delta_stat"))
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn score(
+        &self,
+        _x: &[f32],
+        _centers: &[f32],
+        _sigma2: &[f32],
+        _theta: &[f32],
+        _lam: &[f32],
+        _d: usize,
+        _k: usize,
+    ) -> Result<Vec<f32>> {
+        Err(self.unavailable("score"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_reports_missing_feature() {
+        let err = Runtime::load(&Runtime::default_dir()).err().unwrap();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("pjrt"), "{msg}");
+    }
+
+    #[test]
+    fn stub_shapes_match_contract() {
+        // The shape contract is shared with the real backend so code
+        // written against `rt.shapes` behaves the same either way.
+        assert_eq!(crate::runtime::SHAPES.n_points, 4096);
+    }
+}

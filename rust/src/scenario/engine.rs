@@ -1,0 +1,1006 @@
+//! Deterministic scenario execution (DESIGN.md §4).
+//!
+//! The engine runs a `ScenarioSpec` at *segment* granularity against
+//! the discrete-event substrate: an `EventQueue` carries segment
+//! completions and fault injections, a `NetSim` carries shuffle
+//! transfers, and the real `sphere::Scheduler` makes every placement
+//! decision (locality preference, rule-3 anti-affinity, re-assignment
+//! after failure) so scenario behaviour exercises the production
+//! coordination code.
+//!
+//! Modelling notes (the calibrated Table 1/2 generators remain
+//! `sphere::simjob` / `hadoop::simjob`; this engine trades their
+//! closed-form disk contention terms for event-level fault dynamics):
+//!
+//! * one flow per completed segment carries its remote fraction to a
+//!   deterministic partner, capped by the transport model;
+//! * a crashed node's queued and running segments re-enter the
+//!   scheduler; transfers toward it re-route to a live partner;
+//!   transfers already leaving it are assumed salvageable from the
+//!   replica without re-transfer (optimistic);
+//! * link degradation scales the site's WAN uplink capacity in place —
+//!   max-min fair sharing redistributes the loss immediately;
+//! * terasplit and kmeans have no shuffle stage: they run on the
+//!   analytic path with the same fault state (stragglers slow their
+//!   node, crashed nodes are served by their replica).
+//!
+//! Scale: queues and link tables are pre-sized from the topology, event
+//! waves are drained in batches (`EventQueue::pop_simultaneous`), and
+//! the flow table iterates in id order without hashing, which keeps a
+//! 128-node faulted Terasort scenario in the low milliseconds of wall
+//! time (benches/bench_scale.rs prints events/sec).
+
+use std::collections::BTreeMap;
+
+use crate::config::{SimConfig, TransportKind};
+use crate::mining::angle::simulate_angle_clustering;
+use crate::mining::pcap::PACKET_BYTES;
+use crate::sim::event::EventQueue;
+use crate::sim::netsim::{FlowId, NetSim};
+use crate::sphere::scheduler::Scheduler;
+use crate::sphere::segment::Segment;
+use crate::sphere::simjob::udt_efficiency;
+use crate::topology::{NetLinks, Testbed};
+use crate::transport::TransportModels;
+
+use super::{FaultSpec, ScenarioSpec, WorkloadKind};
+
+/// What a scenario run produced. Byte-identical across repeat runs of
+/// the same spec (the determinism contract the suite asserts).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScenarioReport {
+    pub name: String,
+    pub workload: &'static str,
+    pub nodes: usize,
+    pub racks: usize,
+    pub sites: usize,
+    pub makespan_secs: f64,
+    /// Discrete events processed (segment completions, flow
+    /// completions, fault injections).
+    pub events: u64,
+    pub segments: usize,
+    /// Segment re-assignments + transfer re-routes caused by faults.
+    pub reassignments: u64,
+    pub locality_fraction: f64,
+    pub shuffle_gbytes: f64,
+    pub faults_injected: usize,
+    pub nodes_crashed: usize,
+}
+
+/// Run one scenario to completion. Deterministic: no wall clock, no
+/// ambient randomness — the spec is the only input.
+pub fn run_scenario(spec: &ScenarioSpec) -> Result<ScenarioReport, String> {
+    spec.validate()?;
+    let testbed = spec.topology.generate()?;
+    let mut state = FaultState::new(&spec.faults, testbed.nodes());
+    let b = spec.workload.bytes_per_node;
+    let mut agg = Aggregate::default();
+
+    let makespan = match spec.workload.kind {
+        WorkloadKind::Terasort => {
+            let end_a = StageRun::new(&testbed, &spec.cfg, StageKind::TerasortA, b, 0.0, &mut state)?
+                .execute(&mut agg)?;
+            StageRun::new(&testbed, &spec.cfg, StageKind::TerasortB, b, end_a, &mut state)?
+                .execute(&mut agg)?
+        }
+        WorkloadKind::Filegen => {
+            StageRun::new(&testbed, &spec.cfg, StageKind::Filegen, b, 0.0, &mut state)?
+                .execute(&mut agg)?
+        }
+        WorkloadKind::Angle => {
+            let end = StageRun::new(&testbed, &spec.cfg, StageKind::AngleExtract, b, 0.0, &mut state)?
+                .execute(&mut agg)?;
+            // Client-side clustering tail at Table 3's cost structure.
+            let records = b * testbed.nodes() as f64 / PACKET_BYTES as f64;
+            end + simulate_angle_clustering(records, agg.segments as f64)
+        }
+        WorkloadKind::Terasplit => run_terasplit(&testbed, &spec.cfg, b, &mut state, &mut agg)?,
+        WorkloadKind::Kmeans => run_kmeans(
+            &testbed,
+            &spec.cfg,
+            b,
+            spec.workload.iterations,
+            &mut state,
+            &mut agg,
+        )?,
+    };
+
+    let assignments = agg.local_assignments + agg.remote_assignments;
+    Ok(ScenarioReport {
+        name: spec.name.clone(),
+        workload: spec.workload.kind.name(),
+        nodes: testbed.nodes(),
+        racks: testbed.racks(),
+        sites: testbed.site_names.len(),
+        makespan_secs: makespan,
+        events: agg.events,
+        segments: agg.segments,
+        reassignments: agg.reassignments,
+        locality_fraction: if assignments == 0 {
+            0.0
+        } else {
+            agg.local_assignments as f64 / assignments as f64
+        },
+        shuffle_gbytes: agg.shuffle_bytes / 1e9,
+        faults_injected: state.injected,
+        nodes_crashed: state.crashes,
+    })
+}
+
+// ------------------------------------------------------------ fault state
+
+/// Fault plan progress carried across workload stages.
+struct FaultState {
+    faults: Vec<FaultSpec>,
+    /// crash applied / degrade window fully elapsed.
+    consumed: Vec<bool>,
+    /// fault counted in `injected` (a degrade window can re-fire its
+    /// start event in a later stage; it must not count twice).
+    counted: Vec<bool>,
+    dead: Vec<bool>,
+    /// Live node ids in order — cached because the hot loop asks on
+    /// every segment completion and the set only changes on a crash.
+    alive_list: Vec<usize>,
+    /// Straggler speed multiplier per node (1.0 = nominal).
+    factor: Vec<f64>,
+    injected: usize,
+    crashes: usize,
+}
+
+impl FaultState {
+    fn new(faults: &[FaultSpec], nodes: usize) -> FaultState {
+        let mut s = FaultState {
+            faults: faults.to_vec(),
+            consumed: vec![false; faults.len()],
+            counted: vec![false; faults.len()],
+            dead: vec![false; nodes],
+            alive_list: (0..nodes).collect(),
+            factor: vec![1.0; nodes],
+            injected: 0,
+            crashes: 0,
+        };
+        for (i, f) in faults.iter().enumerate() {
+            if let FaultSpec::Straggler { node, factor } = f {
+                s.factor[*node] *= factor;
+                s.consumed[i] = true;
+                s.counted[i] = true;
+                s.injected += 1;
+            }
+        }
+        s
+    }
+
+    fn count_once(&mut self, fault: usize) {
+        if !self.counted[fault] {
+            self.counted[fault] = true;
+            self.injected += 1;
+        }
+    }
+
+    fn alive(&self) -> &[usize] {
+        &self.alive_list
+    }
+
+    fn crash(&mut self, node: usize) {
+        if !self.dead[node] {
+            self.dead[node] = true;
+            self.alive_list.retain(|&n| n != node);
+            self.crashes += 1;
+            self.injected += 1;
+        }
+    }
+
+    /// Apply every crash scheduled at or before `now` (analytic
+    /// workloads advance in rounds rather than per-event).
+    fn apply_crashes_due(&mut self, now: f64) {
+        for i in 0..self.faults.len() {
+            if self.consumed[i] {
+                continue;
+            }
+            if let FaultSpec::SlaveCrash { at_secs, node } = self.faults[i] {
+                if at_secs <= now {
+                    self.consumed[i] = true;
+                    self.crash(node);
+                }
+            }
+        }
+    }
+
+    /// WAN degradation factor applying to `site` at time `now`.
+    fn degrade_factor_at(&self, site: usize, now: f64) -> f64 {
+        let mut f = 1.0;
+        for fault in &self.faults {
+            if let FaultSpec::LinkDegrade {
+                at_secs,
+                duration_secs,
+                site: s,
+                factor,
+            } = fault
+            {
+                if *s == site && *at_secs <= now && now < at_secs + duration_secs {
+                    f *= factor;
+                }
+            }
+        }
+        f
+    }
+
+    /// Like `degrade_factor_at`, but records the matched windows in
+    /// `faults_injected` — the analytic workloads have no Degrade
+    /// events, so this is where their faults get counted.
+    fn degrade_factor_counting(&mut self, site: usize, now: f64) -> f64 {
+        let mut f = 1.0;
+        for i in 0..self.faults.len() {
+            if let FaultSpec::LinkDegrade {
+                at_secs,
+                duration_secs,
+                site: s,
+                factor,
+            } = self.faults[i]
+            {
+                if s == site && at_secs <= now && now < at_secs + duration_secs {
+                    f *= factor;
+                    self.count_once(i);
+                }
+            }
+        }
+        f
+    }
+}
+
+// ------------------------------------------------------------ aggregates
+
+#[derive(Default)]
+struct Aggregate {
+    events: u64,
+    segments: usize,
+    reassignments: u64,
+    local_assignments: u64,
+    remote_assignments: u64,
+    shuffle_bytes: f64,
+}
+
+// ------------------------------------------------------------ staged engine
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum StageKind {
+    /// Read + partition + write the incoming partition; shuffles.
+    TerasortA,
+    /// Local sort of the received partition (read/sort/write pipeline).
+    TerasortB,
+    /// Synthetic record generation to local disk.
+    Filegen,
+    /// Packet-trace scan + feature emission.
+    AngleExtract,
+}
+
+impl StageKind {
+    fn shuffles(self) -> bool {
+        self == StageKind::TerasortA
+    }
+
+    /// Nominal per-segment service time on one SPE (no straggler
+    /// factor, no coordination cost).
+    fn service_secs(self, cfg: &SimConfig, bytes: f64) -> f64 {
+        let eff = cfg.sphere.io_efficiency;
+        let read = cfg.hardware.disk_read_bps * eff;
+        let write = cfg.hardware.disk_write_bps * eff;
+        match self {
+            StageKind::TerasortA => bytes / read.min(cfg.cpu.partition_bps) + bytes / write,
+            StageKind::TerasortB => {
+                let io = bytes / read + bytes / write;
+                let cpu = bytes / cfg.cpu.sort_bps;
+                let o = cfg.sphere.io_overlap;
+                io.max(cpu) + (1.0 - o) * io.min(cpu)
+            }
+            StageKind::Filegen => bytes / write.min(cfg.cpu.partition_bps),
+            StageKind::AngleExtract => bytes / read.min(cfg.cpu.scan_bps),
+        }
+    }
+}
+
+/// Events in a staged run.
+enum Ev {
+    /// A segment finished on its SPE (stale if the generation is gone).
+    Seg { gen: u64 },
+    Crash { fault: usize },
+    DegradeStart { fault: usize },
+    DegradeEnd { fault: usize },
+}
+
+struct FlowOut {
+    src: usize,
+    dst: usize,
+}
+
+/// One event-driven stage over every node's `bytes_per_node`.
+struct StageRun<'a> {
+    testbed: &'a Testbed,
+    cfg: &'a SimConfig,
+    kind: StageKind,
+    start: f64,
+    state: &'a mut FaultState,
+    models: TransportModels,
+    sched: Scheduler,
+    net: NetSim,
+    links: NetLinks,
+    q: EventQueue<Ev>,
+    /// generation -> (node, segment) for in-flight work.
+    inflight: BTreeMap<u64, (usize, Segment)>,
+    next_gen: u64,
+    running: Vec<usize>,
+    flows: BTreeMap<FlowId, FlowOut>,
+    coord_secs: f64,
+    /// Link capacities at build time, indexed by LinkId. Transport rate
+    /// caps are computed against these NOMINAL rates so a degradation
+    /// window slows flows via link sharing (and lifts when the window
+    /// ends) instead of freezing a degraded cap into every flow that
+    /// happened to start inside it.
+    nominal_caps: Vec<f64>,
+}
+
+impl<'a> StageRun<'a> {
+    fn new(
+        testbed: &'a Testbed,
+        cfg: &'a SimConfig,
+        kind: StageKind,
+        bytes_per_node: f64,
+        start: f64,
+        state: &'a mut FaultState,
+    ) -> Result<StageRun<'a>, String> {
+        let n = testbed.nodes();
+        let spes = cfg.sphere.spes_per_node.max(1);
+        let n_links = 2 * n + 2 * testbed.racks() + 2 * testbed.site_names.len();
+        let mut net = NetSim::with_capacity(n_links);
+        let links = testbed.build_network(&mut net);
+        let nominal_caps = (0..n_links)
+            .map(|i| net.link_capacity(crate::sim::netsim::LinkId(i)))
+            .collect();
+        net.advance_to(start);
+        let q = EventQueue::with_capacity(n * spes + 2 * state.faults.len() + 8);
+        let coord_secs = coordination_secs(testbed);
+        StageRun {
+            testbed,
+            cfg,
+            kind,
+            start,
+            state,
+            models: TransportModels::default(),
+            sched: Scheduler::new(Vec::new(), cfg.sphere.locality_scheduling),
+            net,
+            links,
+            q,
+            inflight: BTreeMap::new(),
+            next_gen: 0,
+            running: vec![0; n],
+            flows: BTreeMap::new(),
+            coord_secs,
+            nominal_caps,
+        }
+        .with_segments(bytes_per_node, spes)
+    }
+
+    /// Build the stage's segment list: every node's data, owned by the
+    /// node itself or (when it is already dead) its rack-diverse
+    /// replica, split into S_min/S_max-clamped pieces.  Errors when a
+    /// home's whole replica chain is dead — the data is gone, and a
+    /// run that lost data must not report a normal makespan (matching
+    /// `run_terasplit`'s behaviour).
+    fn with_segments(mut self, bytes_per_node: f64, spes: usize) -> Result<StageRun<'a>, String> {
+        let n = self.testbed.nodes();
+        let target = (bytes_per_node / spes as f64).clamp(
+            self.cfg.sphere.seg_min_bytes as f64,
+            self.cfg.sphere.seg_max_bytes as f64,
+        );
+        let mut segments = Vec::new();
+        for home in 0..n {
+            // Walk the replica chain until a live owner is found.
+            let mut owner = home;
+            for _ in 0..n {
+                if !self.state.dead[owner] {
+                    break;
+                }
+                owner = replica_of(self.testbed, owner);
+            }
+            if self.state.dead[owner] {
+                return Err(format!(
+                    "node {home}'s data lost: its whole replica chain crashed"
+                ));
+            }
+            let replica = replica_of(self.testbed, owner);
+            let mut locations: Vec<u32> = [owner, replica]
+                .into_iter()
+                .filter(|&x| !self.state.dead[x])
+                .map(|x| x as u32)
+                .collect();
+            locations.dedup();
+            if locations.is_empty() {
+                locations.push(owner as u32);
+            }
+            let pieces = (bytes_per_node / target).ceil().max(1.0) as usize;
+            let piece_bytes = (bytes_per_node / pieces as f64) as u64;
+            for p in 0..pieces {
+                segments.push(Segment {
+                    id: segments.len(),
+                    file: format!("scenario/node{home:04}.dat"),
+                    first_record: p as u64,
+                    n_records: 1,
+                    bytes: piece_bytes,
+                    locations: locations.clone(),
+                    whole_file: false,
+                });
+            }
+        }
+        self.sched = Scheduler::new(segments, self.cfg.sphere.locality_scheduling);
+        Ok(self)
+    }
+
+    /// Schedule the not-yet-consumed fault plan into this stage's queue.
+    fn schedule_faults(&mut self) {
+        for (i, f) in self.state.faults.clone().into_iter().enumerate() {
+            if self.state.consumed[i] {
+                continue;
+            }
+            match f {
+                FaultSpec::SlaveCrash { at_secs, .. } => {
+                    self.q.push_at(at_secs.max(self.start), Ev::Crash { fault: i });
+                }
+                FaultSpec::LinkDegrade {
+                    at_secs,
+                    duration_secs,
+                    ..
+                } => {
+                    let end = at_secs + duration_secs;
+                    if end <= self.start {
+                        self.state.consumed[i] = true;
+                        continue;
+                    }
+                    self.q
+                        .push_at(at_secs.max(self.start), Ev::DegradeStart { fault: i });
+                    if end.is_finite() {
+                        self.q.push_at(end, Ev::DegradeEnd { fault: i });
+                    }
+                }
+                FaultSpec::Straggler { .. } => {}
+            }
+        }
+    }
+
+    /// Hand pending segments to every idle SPE slot.
+    fn pump(&mut self, now: f64) {
+        let spes = self.cfg.sphere.spes_per_node.max(1);
+        for node in 0..self.testbed.nodes() {
+            if self.state.dead[node] {
+                continue;
+            }
+            while self.running[node] < spes {
+                let Some(seg) = self.sched.assign(node as u32) else {
+                    break;
+                };
+                self.next_gen += 1;
+                let secs = self.kind.service_secs(self.cfg, seg.bytes as f64)
+                    / self.state.factor[node]
+                    + self.coord_secs;
+                self.q.push_at(now + secs, Ev::Seg { gen: self.next_gen });
+                self.inflight.insert(self.next_gen, (node, seg));
+                self.running[node] += 1;
+            }
+        }
+    }
+
+    fn start_shuffle_flow(&mut self, src: usize, dst: usize, bytes: f64) {
+        let path = self.testbed.path(&self.links, src, dst);
+        // Cap against NOMINAL link rates: degradation constrains flows
+        // through the (shared) reduced link capacity instead, so the
+        // slowdown lifts as soon as the window ends.
+        let bottleneck = path
+            .iter()
+            .map(|l| self.nominal_caps[l.0])
+            .fold(f64::INFINITY, f64::min)
+            .min(self.testbed.nic_bps);
+        let rtt = self.testbed.rtt_secs(src, dst);
+        let read = self.cfg.hardware.disk_read_bps * self.cfg.sphere.io_efficiency;
+        let cap = match self.cfg.sphere_transport {
+            TransportKind::Udt => udt_efficiency(self.models.udt.efficiency, rtt) * bottleneck,
+            TransportKind::Tcp => self.models.tcp.rate_cap(bottleneck, rtt),
+        }
+        .min(read * self.state.factor[src]);
+        let fid = self.net.start_flow(&path, bytes.max(1.0), cap.max(1.0));
+        self.flows.insert(fid, FlowOut { src, dst });
+    }
+
+    fn handle_crash(&mut self, fault: usize, agg: &mut Aggregate) -> Result<(), String> {
+        self.state.consumed[fault] = true;
+        let FaultSpec::SlaveCrash { node, .. } = self.state.faults[fault] else {
+            return Ok(());
+        };
+        if self.state.dead[node] {
+            return Ok(());
+        }
+        self.state.crash(node);
+        // Re-queue the dead node's running segments.
+        let stale: Vec<u64> = self
+            .inflight
+            .iter()
+            .filter(|(_, (nd, _))| *nd == node)
+            .map(|(&g, _)| g)
+            .collect();
+        for g in stale {
+            let (_, seg) = self.inflight.remove(&g).expect("stale gen exists");
+            if !self.sched.fail(seg) {
+                return Err(format!("segment retries exhausted after node {node} crash"));
+            }
+            agg.reassignments += 1;
+        }
+        self.running[node] = 0;
+        // Re-route transfers headed for the dead node: pick the new
+        // destinations under a scoped alive-list borrow, then act.
+        let redirect: Vec<(FlowId, usize, Option<usize>)> = {
+            let alive = self.state.alive();
+            self.flows
+                .iter()
+                .filter(|(_, fo)| fo.dst == node)
+                .map(|(&f, fo)| (f, fo.src, pick_dst_in(alive, fo.src, fo.dst + 1)))
+                .collect()
+        };
+        for (fid, src, new_dst) in redirect {
+            self.flows.remove(&fid);
+            let left = self.net.cancel_flow(fid);
+            if let Some(new_dst) = new_dst {
+                self.start_shuffle_flow(src, new_dst, left);
+            }
+            agg.reassignments += 1;
+        }
+        Ok(())
+    }
+
+    fn set_site_degrade(&mut self, site: usize, factor: f64) {
+        let cap = (self.testbed.wan_bps * factor).max(1.0);
+        let up = self.links.site_up[site];
+        let down = self.links.site_down[site];
+        self.net.set_link_capacity(up, cap);
+        self.net.set_link_capacity(down, cap);
+    }
+
+    /// Run the stage to completion; returns its end time.
+    fn execute(mut self, agg: &mut Aggregate) -> Result<f64, String> {
+        self.schedule_faults();
+        self.pump(self.start);
+        let mut now = self.start;
+        let mut batch: Vec<Ev> = Vec::new();
+        loop {
+            if self.sched.is_drained() && self.inflight.is_empty() && self.net.active_flows() == 0
+            {
+                break;
+            }
+            let tq = self.q.peek_time();
+            let tn = self.net.next_completion().map(|(t, _)| t);
+            let next = match (tq, tn) {
+                (None, None) => break,
+                (Some(a), None) => a,
+                (None, Some(b)) => b,
+                (Some(a), Some(b)) => a.min(b),
+            };
+            now = next;
+            for fid in self.net.advance_to(next) {
+                agg.events += 1;
+                self.flows.remove(&fid);
+            }
+            if self.q.peek_time() == Some(next) {
+                batch.clear();
+                self.q.pop_simultaneous(&mut batch);
+                for ev in batch.drain(..) {
+                    agg.events += 1;
+                    match ev {
+                        Ev::Seg { gen } => {
+                            let Some((node, seg)) = self.inflight.remove(&gen) else {
+                                continue; // pre-empted by a crash
+                            };
+                            self.running[node] -= 1;
+                            self.sched.complete(&seg);
+                            agg.segments += 1;
+                            if self.kind.shuffles() {
+                                // Scoped: `alive` borrows the fault
+                                // state, start_shuffle_flow needs &mut.
+                                let (n_alive, dst) = {
+                                    let alive = self.state.alive();
+                                    (alive.len(), pick_dst_in(alive, node, seg.id))
+                                };
+                                if let Some(dst) = dst {
+                                    let frac =
+                                        (n_alive - 1) as f64 / n_alive as f64;
+                                    let bytes = seg.bytes as f64 * frac;
+                                    self.start_shuffle_flow(node, dst, bytes);
+                                    agg.shuffle_bytes += bytes;
+                                }
+                            }
+                        }
+                        Ev::Crash { fault } => self.handle_crash(fault, agg)?,
+                        Ev::DegradeStart { fault } => {
+                            if let FaultSpec::LinkDegrade { site, .. } =
+                                self.state.faults[fault]
+                            {
+                                self.state.count_once(fault);
+                                // Combined factor of every window active
+                                // right now — overlapping degradations
+                                // compound instead of overwriting.
+                                let f = self.state.degrade_factor_at(site, now);
+                                self.set_site_degrade(site, f);
+                            }
+                        }
+                        Ev::DegradeEnd { fault } => {
+                            self.state.consumed[fault] = true;
+                            if let FaultSpec::LinkDegrade { site, .. } =
+                                self.state.faults[fault]
+                            {
+                                // Restore to whatever the *remaining*
+                                // windows dictate, not blindly to 1.0.
+                                let f = self.state.degrade_factor_at(site, now);
+                                self.set_site_degrade(site, f);
+                            }
+                        }
+                    }
+                }
+                self.pump(now);
+            }
+        }
+        agg.local_assignments += self.sched.local_assignments;
+        agg.remote_assignments += self.sched.remote_assignments;
+        Ok(now)
+    }
+}
+
+/// Deterministic shuffle partner: the `salt`-th live node after `src`
+/// in id order.  Takes the alive list by reference so hot-loop callers
+/// build it once per event, not per lookup.
+fn pick_dst_in(alive: &[usize], src: usize, salt: usize) -> Option<usize> {
+    if alive.len() < 2 {
+        return None;
+    }
+    let pos = alive.iter().position(|&x| x == src).unwrap_or(0);
+    Some(alive[(pos + 1 + salt % (alive.len() - 1)) % alive.len()])
+}
+
+/// Per-segment coordination cost: Chord lookup hops + GMP handshake +
+/// completion ack over the mean RTT (same shape as simjob).
+fn coordination_secs(testbed: &Testbed) -> f64 {
+    let n = testbed.nodes();
+    let hops = (n as f64).log2().ceil().max(1.0);
+    let mut acc = 0.0;
+    for a in 0..n {
+        for b in 0..n {
+            acc += testbed.rtt_secs(a, b);
+        }
+    }
+    let mean_rtt = acc / (n * n).max(1) as f64;
+    hops * mean_rtt + 2.0 * mean_rtt
+}
+
+/// Rack-diverse replica partner: the same-offset node in the next rack
+/// (wrapping over the global rack list), falling back to the next node
+/// when the testbed has a single rack.
+fn replica_of(testbed: &Testbed, node: usize) -> usize {
+    let n = testbed.nodes();
+    if testbed.racks() <= 1 {
+        return (node + 1) % n;
+    }
+    let rack = testbed.node_rack[node];
+    let members: Vec<usize> = (0..n).filter(|&x| testbed.node_rack[x] == rack).collect();
+    let offset = members.iter().position(|&x| x == node).unwrap_or(0);
+    let next_rack = (rack + 1) % testbed.racks();
+    let next_members: Vec<usize> = (0..n)
+        .filter(|&x| testbed.node_rack[x] == next_rack)
+        .collect();
+    if next_members.is_empty() {
+        (node + 1) % n
+    } else {
+        next_members[offset % next_members.len()]
+    }
+}
+
+// ------------------------------------------------------------ analytic paths
+
+/// Terasplit: one client streams every node's sorted data sequentially
+/// through the entropy scan (paper §6.2's "read ... into a single
+/// client").  Crashed sources are served by their replica; a transfer
+/// starting inside a degradation window pays its factor.
+fn run_terasplit(
+    testbed: &Testbed,
+    cfg: &SimConfig,
+    bytes_per_node: f64,
+    state: &mut FaultState,
+    agg: &mut Aggregate,
+) -> Result<f64, String> {
+    state.apply_crashes_due(0.0);
+    let models = TransportModels::default();
+    let read = cfg.hardware.disk_read_bps * cfg.sphere.io_efficiency;
+    let mut client = *state
+        .alive()
+        .first()
+        .ok_or("no live node to host the client")?;
+    let mut now = 0.0f64;
+    for home in 0..testbed.nodes() {
+        state.apply_crashes_due(now);
+        // The client itself can crash mid-run: the split job restarts
+        // on the next live node (the gathered scan resumes from there).
+        if state.dead[client] {
+            client = *state
+                .alive()
+                .first()
+                .ok_or("no live node to host the client")?;
+            agg.reassignments += 1;
+        }
+        let src = if state.dead[home] {
+            let r = replica_of(testbed, home);
+            if state.dead[r] {
+                return Err(format!("node {home} and its replica {r} both crashed"));
+            }
+            agg.reassignments += 1;
+            r
+        } else {
+            home
+        };
+        let scan = cfg.cpu.scan_bps * state.factor[client];
+        let rate = if src == client {
+            (read * state.factor[client]).min(scan)
+        } else {
+            let rtt = testbed.rtt_secs(client, src);
+            // WAN degradation only affects transfers that actually
+            // cross a site uplink (cf. Testbed::path); within a site
+            // the bottleneck of the two uplinks is what caps the flow.
+            let (ss, cs) = (testbed.node_site[src], testbed.node_site[client]);
+            let degrade = if ss == cs {
+                1.0
+            } else {
+                state
+                    .degrade_factor_counting(ss, now)
+                    .min(state.degrade_factor_counting(cs, now))
+            };
+            let net_cap = match cfg.sphere_transport {
+                TransportKind::Udt => {
+                    udt_efficiency(models.udt.efficiency, rtt) * testbed.nic_bps * degrade
+                }
+                TransportKind::Tcp => models.tcp.rate_cap(testbed.nic_bps * degrade, rtt),
+            };
+            (read * state.factor[src]).min(net_cap).min(scan)
+        };
+        let setup = models.setup_secs_for(
+            cfg.sphere_transport,
+            testbed.rtt_secs(client, src),
+            cfg.sector.connection_cache,
+        );
+        now += bytes_per_node / rate + setup;
+        agg.events += 1;
+        agg.segments += 1;
+    }
+    Ok(now)
+}
+
+/// Iterative distributed k-means: each round scans every live node's
+/// share (the slowest node gates the round) then synchronizes centers
+/// over Chord-hop RTTs.  Crashed nodes hand their share to survivors.
+fn run_kmeans(
+    testbed: &Testbed,
+    cfg: &SimConfig,
+    bytes_per_node: f64,
+    iterations: usize,
+    state: &mut FaultState,
+    agg: &mut Aggregate,
+) -> Result<f64, String> {
+    let total = bytes_per_node * testbed.nodes() as f64;
+    let read = cfg.hardware.disk_read_bps * cfg.sphere.io_efficiency;
+    let scan = read.min(cfg.cpu.scan_bps);
+    let sync = 2.0 * coordination_secs(testbed);
+    let mut now = 0.0f64;
+    for _round in 0..iterations {
+        state.apply_crashes_due(now);
+        let alive = state.alive();
+        if alive.is_empty() {
+            return Err("every node crashed".into());
+        }
+        let share = total / alive.len() as f64;
+        let slowest = alive
+            .iter()
+            .map(|&nd| share / (scan * state.factor[nd]))
+            .fold(0.0f64, f64::max);
+        now += slowest + sync;
+        agg.events += alive.len() as u64 + 1;
+        agg.segments += alive.len();
+    }
+    Ok(now)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::ScenarioSpec;
+    use crate::topology::TopologySpec;
+    use crate::util::bytes::GB;
+
+    fn lan_spec(nodes: usize, kind: WorkloadKind) -> ScenarioSpec {
+        let mut spec = ScenarioSpec::paper_lan8();
+        spec.topology = TopologySpec::paper_lan(nodes);
+        spec.workload.kind = kind;
+        spec.workload.bytes_per_node = 1.0 * GB as f64;
+        spec.name = format!("test-{}-{nodes}", kind.name());
+        spec
+    }
+
+    #[test]
+    fn terasort_runs_and_is_deterministic() {
+        let spec = lan_spec(4, WorkloadKind::Terasort);
+        let a = run_scenario(&spec).unwrap();
+        let b = run_scenario(&spec).unwrap();
+        assert_eq!(a, b, "same spec, same report");
+        assert!(a.makespan_secs > 0.0);
+        assert!(a.segments > 0);
+        assert!(a.shuffle_gbytes > 0.0);
+        assert_eq!(a.faults_injected, 0);
+        assert!(
+            a.locality_fraction > 0.9,
+            "fault-free run stays local (got {})",
+            a.locality_fraction
+        );
+    }
+
+    #[test]
+    fn all_workloads_complete() {
+        for kind in [
+            WorkloadKind::Terasort,
+            WorkloadKind::Terasplit,
+            WorkloadKind::Filegen,
+            WorkloadKind::Angle,
+            WorkloadKind::Kmeans,
+        ] {
+            let r = run_scenario(&lan_spec(4, kind)).unwrap();
+            assert!(r.makespan_secs > 0.0, "{}: empty makespan", kind.name());
+            assert!(r.events > 0, "{}: no events", kind.name());
+        }
+    }
+
+    #[test]
+    fn crash_reassigns_and_still_finishes() {
+        let mut spec = lan_spec(4, WorkloadKind::Terasort);
+        let baseline = run_scenario(&spec).unwrap();
+        spec.faults.push(FaultSpec::SlaveCrash {
+            at_secs: 2.0,
+            node: 1,
+        });
+        let r = run_scenario(&spec).unwrap();
+        assert_eq!(r.nodes_crashed, 1);
+        assert!(r.faults_injected >= 1);
+        assert!(r.reassignments > 0, "crash mid-run must reassign work");
+        assert!(
+            r.makespan_secs > baseline.makespan_secs,
+            "3 survivors absorb the 4th node's work: {} vs {}",
+            r.makespan_secs,
+            baseline.makespan_secs
+        );
+        assert_eq!(r.segments, baseline.segments, "no segment is lost");
+    }
+
+    #[test]
+    fn straggler_slows_the_run() {
+        let mut spec = lan_spec(4, WorkloadKind::Terasort);
+        let baseline = run_scenario(&spec).unwrap();
+        spec.faults.push(FaultSpec::Straggler {
+            node: 2,
+            factor: 0.25,
+        });
+        let r = run_scenario(&spec).unwrap();
+        assert!(r.makespan_secs > baseline.makespan_secs);
+    }
+
+    #[test]
+    fn wan_degradation_slows_the_shuffle() {
+        let mut spec = ScenarioSpec::paper_wan6();
+        spec.workload.bytes_per_node = 1.0 * GB as f64;
+        let baseline = run_scenario(&spec).unwrap();
+        spec.faults.push(FaultSpec::LinkDegrade {
+            at_secs: 0.0,
+            duration_secs: f64::INFINITY,
+            site: 0,
+            factor: 0.05,
+        });
+        let r = run_scenario(&spec).unwrap();
+        assert!(
+            r.makespan_secs > baseline.makespan_secs,
+            "choked Chicago uplink: {} vs {}",
+            r.makespan_secs,
+            baseline.makespan_secs
+        );
+    }
+
+    #[test]
+    fn losing_a_node_and_its_replica_fails_the_run() {
+        // scale_out(1,2,2): replica pairs are 0<->2 and 1<->3. Killing
+        // both ends of a pair destroys that data; the run must error
+        // like run_terasplit does, not report a normal makespan.
+        let mut spec = ScenarioSpec::paper_lan8();
+        spec.topology = TopologySpec::scale_out(1, 2, 2);
+        spec.workload.bytes_per_node = 1.0 * GB as f64;
+        spec.faults.push(FaultSpec::SlaveCrash { at_secs: 0.5, node: 0 });
+        spec.faults.push(FaultSpec::SlaveCrash { at_secs: 1.0, node: 2 });
+        let err = run_scenario(&spec).unwrap_err();
+        assert!(err.contains("data lost"), "{err}");
+    }
+
+    #[test]
+    fn degradation_lifts_when_the_window_ends() {
+        // Flows started inside the window must speed back up when it
+        // closes (their caps are nominal; the shared link capacity is
+        // what degrades), so a brief brown-out beats a permanent one.
+        let mut spec = ScenarioSpec::paper_wan6();
+        spec.workload.bytes_per_node = 1.0 * GB as f64;
+        spec.faults.push(FaultSpec::LinkDegrade {
+            at_secs: 0.0,
+            duration_secs: 10.0,
+            site: 0,
+            factor: 0.05,
+        });
+        let brief = run_scenario(&spec).unwrap();
+        spec.faults[0] = FaultSpec::LinkDegrade {
+            at_secs: 0.0,
+            duration_secs: f64::INFINITY,
+            site: 0,
+            factor: 0.05,
+        };
+        let forever = run_scenario(&spec).unwrap();
+        assert!(
+            brief.makespan_secs < forever.makespan_secs,
+            "brief window must recover: {} vs {}",
+            brief.makespan_secs,
+            forever.makespan_secs
+        );
+    }
+
+    #[test]
+    fn overlapping_degrade_windows_compound() {
+        let mut spec = ScenarioSpec::paper_wan6();
+        spec.workload.bytes_per_node = 1.0 * GB as f64;
+        spec.faults.push(FaultSpec::LinkDegrade {
+            at_secs: 0.0,
+            duration_secs: f64::INFINITY,
+            site: 0,
+            factor: 0.2,
+        });
+        let single = run_scenario(&spec).unwrap();
+        assert_eq!(single.faults_injected, 1, "one window counts once across stages");
+        spec.faults.push(FaultSpec::LinkDegrade {
+            at_secs: 0.0,
+            duration_secs: f64::INFINITY,
+            site: 0,
+            factor: 0.2,
+        });
+        let double = run_scenario(&spec).unwrap();
+        assert!(
+            double.makespan_secs > single.makespan_secs,
+            "stacked windows compound (0.04x): {} vs {}",
+            double.makespan_secs,
+            single.makespan_secs
+        );
+    }
+
+    #[test]
+    fn replica_partner_is_rack_diverse() {
+        let t = TopologySpec::scale_out(2, 2, 4).generate().unwrap();
+        for node in 0..t.nodes() {
+            let r = replica_of(&t, node);
+            assert_ne!(t.node_rack[node], t.node_rack[r], "node {node} -> {r}");
+        }
+        let single = TopologySpec::paper_lan(4).generate().unwrap();
+        assert_eq!(replica_of(&single, 3), 0, "single rack wraps to next node");
+    }
+
+    #[test]
+    fn scale128_preset_runs_deterministically() {
+        let spec = ScenarioSpec::scale128();
+        let a = run_scenario(&spec).unwrap();
+        let b = run_scenario(&spec).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.nodes, 128);
+        assert_eq!(a.nodes_crashed, 1);
+        assert!(a.faults_injected >= 2);
+        assert!(a.events > 1000, "segment waves at scale ({})", a.events);
+    }
+}

@@ -1,0 +1,448 @@
+//! Scenario engine — TOML-described, reproducible paper-scale runs
+//! (DESIGN.md §4).
+//!
+//! The paper evaluates Sector/Sphere on two fixed physical testbeds; the
+//! companion Open Cloud Testbed papers scale the same stack across a
+//! growing multi-site deployment.  A `ScenarioSpec` composes the three
+//! ingredients of such an experiment into one run description:
+//!
+//! * a topology — a `topology::TopologySpec` (paper presets or any
+//!   racks × nodes-per-rack × sites layout with three link tiers);
+//! * a workload — terasort, terasplit, filegen, angle or kmeans at a
+//!   chosen bytes-per-node, on a named hardware profile;
+//! * a fault plan — slave crashes, WAN link degradation windows and
+//!   stragglers, each at a virtual time.
+//!
+//! `engine::run_scenario` executes the description deterministically
+//! (same spec, same report — byte for byte) against the discrete-event
+//! substrate in `sim`, driving the real `sphere::Scheduler` for segment
+//! placement so locality and re-assignment behaviour come from the
+//! production code path, not a copy of it.
+//!
+//! Specs parse from TOML (`config/scenarios/*.toml` in the repo root)
+//! or come from the named presets used by `examples/scenario_suite.rs`
+//! and `benches/bench_scale.rs`.
+
+pub mod engine;
+
+pub use engine::{run_scenario, ScenarioReport};
+
+use crate::config::{SimConfig, Table};
+use crate::topology::TopologySpec;
+use crate::util::bytes::{parse_bytes, GB};
+
+/// Which workload the scenario runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WorkloadKind {
+    /// Two-stage distributed sort: partition + shuffle, then local sort.
+    Terasort,
+    /// Single client streams every node's data through the entropy scan.
+    Terasplit,
+    /// Every node writes synthetic records locally (§6.3).
+    Filegen,
+    /// Sphere feature extraction over packet traces + clustering tail (§7).
+    Angle,
+    /// Iterative distributed k-means: local scans + per-round synchronization.
+    Kmeans,
+}
+
+impl WorkloadKind {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "terasort" => Ok(WorkloadKind::Terasort),
+            "terasplit" => Ok(WorkloadKind::Terasplit),
+            "filegen" => Ok(WorkloadKind::Filegen),
+            "angle" => Ok(WorkloadKind::Angle),
+            "kmeans" => Ok(WorkloadKind::Kmeans),
+            other => Err(format!(
+                "unknown workload {other:?} (terasort|terasplit|filegen|angle|kmeans)"
+            )),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            WorkloadKind::Terasort => "terasort",
+            WorkloadKind::Terasplit => "terasplit",
+            WorkloadKind::Filegen => "filegen",
+            WorkloadKind::Angle => "angle",
+            WorkloadKind::Kmeans => "kmeans",
+        }
+    }
+}
+
+/// Workload parameters.
+#[derive(Clone, Debug)]
+pub struct WorkloadSpec {
+    pub kind: WorkloadKind,
+    pub bytes_per_node: f64,
+    /// Rounds for iterative workloads (kmeans); ignored otherwise.
+    pub iterations: usize,
+}
+
+/// One planned fault.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultSpec {
+    /// Slave `node` dies at `at_secs`: its queued and running segments
+    /// re-assign to survivors, transfers toward it re-route.
+    SlaveCrash { at_secs: f64, node: usize },
+    /// Site `site`'s WAN uplinks run at `factor` (< 1.0) capacity from
+    /// `at_secs` for `duration_secs`.
+    LinkDegrade {
+        at_secs: f64,
+        duration_secs: f64,
+        site: usize,
+        factor: f64,
+    },
+    /// `node` runs all local work at `factor` (< 1.0) speed throughout.
+    Straggler { node: usize, factor: f64 },
+}
+
+/// A complete, reproducible run description.
+#[derive(Clone, Debug)]
+pub struct ScenarioSpec {
+    pub name: String,
+    pub topology: TopologySpec,
+    pub cfg: SimConfig,
+    pub workload: WorkloadSpec,
+    pub faults: Vec<FaultSpec>,
+}
+
+impl ScenarioSpec {
+    /// Parse a scenario TOML document (see config/scenarios/ for the
+    /// format: `[topology]`, `[hardware] profile`, `[workload]`, and
+    /// `[faults.<label>]` sections; any `SimConfig` override also
+    /// applies).
+    pub fn from_toml(text: &str) -> Result<ScenarioSpec, String> {
+        let t = Table::parse(text).map_err(|e| e.to_string())?;
+        Self::from_table(&t)
+    }
+
+    pub fn from_table(t: &Table) -> Result<ScenarioSpec, String> {
+        let topology = TopologySpec::from_table(t)?;
+        let cfg = SimConfig::profile(t.str_or("hardware.profile", "lan"))?.apply_table(t)?;
+        let kind = WorkloadKind::parse(t.str_or("workload.kind", "terasort"))?;
+        let bytes_per_node = parse_bytes(t.str_or("workload.bytes_per_node", "10GB"))? as f64;
+        let iterations = t.int_or("workload.iterations", 10).max(1) as usize;
+        let mut faults = Vec::new();
+        for label in t.subsections("faults") {
+            let k = |field: &str| format!("faults.{label}.{field}");
+            let (fault, allowed): (FaultSpec, &[&str]) = match t.str_or(&k("kind"), "") {
+                "crash" => (
+                    FaultSpec::SlaveCrash {
+                        at_secs: t.float_or(&k("at_secs"), 0.0),
+                        node: t.int_or(&k("node"), 0) as usize,
+                    },
+                    &["kind", "at_secs", "node"],
+                ),
+                "link_degrade" => (
+                    FaultSpec::LinkDegrade {
+                        at_secs: t.float_or(&k("at_secs"), 0.0),
+                        duration_secs: t.float_or(&k("duration_secs"), f64::INFINITY),
+                        site: t.int_or(&k("site"), 0) as usize,
+                        factor: t.float_or(&k("factor"), 0.5),
+                    },
+                    &["kind", "at_secs", "duration_secs", "site", "factor"],
+                ),
+                "straggler" => (
+                    FaultSpec::Straggler {
+                        node: t.int_or(&k("node"), 0) as usize,
+                        factor: t.float_or(&k("factor"), 0.5),
+                    },
+                    &["kind", "node", "factor"],
+                ),
+                other => {
+                    return Err(format!(
+                        "fault {label:?}: unknown kind {other:?} \
+                         (crash|link_degrade|straggler)"
+                    ))
+                }
+            };
+            // A typo'd field name must not silently become a default
+            // value — reject anything this fault kind doesn't read.
+            let section = format!("faults.{label}");
+            for key in t.section_keys(&section) {
+                let field = key.rsplit('.').next().unwrap_or(key);
+                if !allowed.contains(&field) {
+                    return Err(format!(
+                        "fault {label:?} ({}): unknown field {field:?} \
+                         (expected one of {allowed:?})",
+                        t.str_or(&k("kind"), "?"),
+                    ));
+                }
+            }
+            faults.push(fault);
+        }
+        Ok(ScenarioSpec {
+            name: t.str_or("name", &topology.name).to_string(),
+            topology,
+            cfg,
+            workload: WorkloadSpec {
+                kind,
+                bytes_per_node,
+                iterations,
+            },
+            faults,
+        })
+    }
+
+    /// Check fault references against the topology before running.
+    pub fn validate(&self) -> Result<(), String> {
+        let nodes = self.topology.nodes();
+        let sites = self.topology.sites.len();
+        let mut crash_nodes: Vec<usize> = Vec::new();
+        for f in &self.faults {
+            match f {
+                FaultSpec::SlaveCrash { node, at_secs } => {
+                    if *node >= nodes {
+                        return Err(format!("crash fault: node {node} >= {nodes}"));
+                    }
+                    if !at_secs.is_finite() || *at_secs < 0.0 {
+                        return Err("crash fault: at_secs must be >= 0".into());
+                    }
+                    crash_nodes.push(*node);
+                }
+                FaultSpec::LinkDegrade { site, factor, .. } => {
+                    if sites < 2 {
+                        return Err(
+                            "link_degrade fault: single-site topology has no WAN uplink \
+                             in any path, the fault would be silently inert"
+                                .into(),
+                        );
+                    }
+                    if self.workload.kind == WorkloadKind::Kmeans {
+                        return Err(
+                            "link_degrade fault: kmeans is compute/latency-bound (its \
+                             center exchanges are tiny), a bandwidth fault would be \
+                             silently inert"
+                                .into(),
+                        );
+                    }
+                    if *site >= sites {
+                        return Err(format!("link_degrade fault: site {site} >= {sites}"));
+                    }
+                    if !(*factor > 0.0 && *factor <= 1.0) {
+                        return Err("link_degrade fault: factor must be in (0, 1]".into());
+                    }
+                }
+                FaultSpec::Straggler { node, factor } => {
+                    if *node >= nodes {
+                        return Err(format!("straggler fault: node {node} >= {nodes}"));
+                    }
+                    if !(*factor > 0.0 && *factor <= 1.0) {
+                        return Err("straggler fault: factor must be in (0, 1]".into());
+                    }
+                }
+            }
+        }
+        crash_nodes.sort_unstable();
+        crash_nodes.dedup();
+        if crash_nodes.len() >= nodes {
+            return Err(format!("fault plan crashes all {nodes} nodes"));
+        }
+        Ok(())
+    }
+
+    // ---------------------------------------------------- presets
+
+    /// The paper's Table 1 headline run: 6-node 3-site WAN Terasort at
+    /// 10 GB/node, no faults.
+    pub fn paper_wan6() -> ScenarioSpec {
+        ScenarioSpec {
+            name: "paper-wan6-terasort".into(),
+            topology: TopologySpec::paper_wan(),
+            cfg: SimConfig::wan_default(),
+            workload: WorkloadSpec {
+                kind: WorkloadKind::Terasort,
+                bytes_per_node: 10.0 * GB as f64,
+                iterations: 10,
+            },
+            faults: Vec::new(),
+        }
+    }
+
+    /// The paper's Table 2 headline run: 8-node rack Terasort at
+    /// 10 GB/node, no faults.
+    pub fn paper_lan8() -> ScenarioSpec {
+        ScenarioSpec {
+            name: "paper-lan8-terasort".into(),
+            topology: TopologySpec::paper_lan(8),
+            cfg: SimConfig::lan_default(),
+            workload: WorkloadSpec {
+                kind: WorkloadKind::Terasort,
+                bytes_per_node: 10.0 * GB as f64,
+                iterations: 10,
+            },
+            faults: Vec::new(),
+        }
+    }
+
+    /// Scale-out stress preset: 128 nodes (4 sites × 4 racks × 8 nodes)
+    /// running Terasort at 1 GB/node through a crash, a WAN brown-out
+    /// and a straggler — the scenario `examples/scenario_suite.rs` and
+    /// `benches/bench_scale.rs` exercise.
+    pub fn scale128() -> ScenarioSpec {
+        ScenarioSpec {
+            name: "scale128-terasort-faults".into(),
+            topology: TopologySpec::scale_out(4, 4, 8),
+            cfg: SimConfig::lan_default(),
+            workload: WorkloadSpec {
+                kind: WorkloadKind::Terasort,
+                bytes_per_node: 1.0 * GB as f64,
+                iterations: 10,
+            },
+            faults: vec![
+                FaultSpec::Straggler {
+                    node: 17,
+                    factor: 0.5,
+                },
+                FaultSpec::SlaveCrash {
+                    at_secs: 3.0,
+                    node: 40,
+                },
+                FaultSpec::LinkDegrade {
+                    at_secs: 5.0,
+                    duration_secs: 20.0,
+                    site: 2,
+                    factor: 0.25,
+                },
+            ],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_scenario_toml() {
+        let spec = ScenarioSpec::from_toml(
+            r#"
+            name = "toml-run"
+            [topology]
+            sites = 2
+            racks_per_site = 2
+            nodes_per_rack = 4
+            [hardware]
+            profile = "wan"
+            [workload]
+            kind = "terasort"
+            bytes_per_node = "2GB"
+            [faults.crash1]
+            kind = "crash"
+            at_secs = 10.0
+            node = 3
+            [faults.slow]
+            kind = "straggler"
+            node = 7
+            factor = 0.25
+            [faults.wanout]
+            kind = "link_degrade"
+            at_secs = 4.0
+            duration_secs = 8.0
+            site = 1
+            factor = 0.5
+            "#,
+        )
+        .unwrap();
+        assert_eq!(spec.name, "toml-run");
+        assert_eq!(spec.topology.nodes(), 16);
+        assert_eq!(spec.cfg.hardware.cores, 4, "wan profile");
+        assert_eq!(spec.workload.kind, WorkloadKind::Terasort);
+        assert!((spec.workload.bytes_per_node - 2.0e9).abs() < 1.0);
+        assert_eq!(spec.faults.len(), 3);
+        assert!(spec.validate().is_ok());
+        assert!(matches!(
+            spec.faults[0],
+            FaultSpec::SlaveCrash { node: 3, .. }
+        ));
+    }
+
+    #[test]
+    fn rejects_bad_faults_and_workloads() {
+        assert!(WorkloadKind::parse("sort-of").is_err());
+        let bad_kind =
+            ScenarioSpec::from_toml("[faults.x]\nkind = \"meteor\"").unwrap_err();
+        assert!(bad_kind.contains("meteor"), "{bad_kind}");
+        // A typo'd field must error, not silently fall back to defaults.
+        let typo = ScenarioSpec::from_toml(
+            "[faults.c]\nkind = \"crash\"\nat_secs = 10.0\nnodes = 3",
+        )
+        .unwrap_err();
+        assert!(typo.contains("nodes"), "{typo}");
+        let mut spec = ScenarioSpec::paper_lan8();
+        spec.faults.push(FaultSpec::SlaveCrash {
+            at_secs: 1.0,
+            node: 99,
+        });
+        assert!(spec.validate().is_err());
+        let mut spec = ScenarioSpec::paper_lan8();
+        spec.faults.push(FaultSpec::Straggler {
+            node: 0,
+            factor: 2.0,
+        });
+        assert!(spec.validate().is_err());
+        // A WAN brown-out on a single-site rack can never bite: reject
+        // it instead of reporting a fault that did nothing.
+        let mut spec = ScenarioSpec::paper_lan8();
+        spec.faults.push(FaultSpec::LinkDegrade {
+            at_secs: 0.0,
+            duration_secs: 10.0,
+            site: 0,
+            factor: 0.5,
+        });
+        let err = spec.validate().unwrap_err();
+        assert!(err.contains("single-site"), "{err}");
+    }
+
+    #[test]
+    fn presets_validate() {
+        for spec in [
+            ScenarioSpec::paper_wan6(),
+            ScenarioSpec::paper_lan8(),
+            ScenarioSpec::scale128(),
+        ] {
+            spec.validate().unwrap();
+            assert!(spec.topology.generate().is_ok());
+        }
+        assert_eq!(ScenarioSpec::scale128().topology.nodes(), 128);
+    }
+
+    #[test]
+    fn crashing_every_node_is_rejected() {
+        let mut spec = ScenarioSpec::from_toml(
+            "[topology]\nsites = 1\nracks_per_site = 1\nnodes_per_rack = 2",
+        )
+        .unwrap();
+        spec.faults = vec![
+            FaultSpec::SlaveCrash { at_secs: 1.0, node: 0 },
+            FaultSpec::SlaveCrash { at_secs: 2.0, node: 1 },
+        ];
+        assert!(spec.validate().is_err());
+        // ...but crashing the SAME node twice leaves a survivor: legal
+        // (distinct nodes are what count, not fault entries).
+        spec.faults = vec![
+            FaultSpec::SlaveCrash { at_secs: 1.0, node: 0 },
+            FaultSpec::SlaveCrash { at_secs: 2.0, node: 0 },
+        ];
+        assert!(spec.validate().is_ok());
+    }
+
+    #[test]
+    fn kmeans_rejects_inert_bandwidth_faults() {
+        let mut spec = ScenarioSpec::from_toml(
+            "[topology]\nsites = 2\nracks_per_site = 1\nnodes_per_rack = 2\n\
+             [workload]\nkind = \"kmeans\"",
+        )
+        .unwrap();
+        spec.faults.push(FaultSpec::LinkDegrade {
+            at_secs: 0.0,
+            duration_secs: 5.0,
+            site: 0,
+            factor: 0.5,
+        });
+        let err = spec.validate().unwrap_err();
+        assert!(err.contains("kmeans"), "{err}");
+    }
+}

@@ -32,6 +32,9 @@ pub struct SectorCloud {
     pub ring: ChordRing,
     /// Target replica count (paper: monitored, restored when below).
     pub replica_target: usize,
+    /// slave id -> rack id; all zero when no topology was given
+    /// (placement then degenerates to the paper's uniform-random rule).
+    node_rack: Vec<usize>,
     pub conn_cache: Mutex<ConnectionCache>,
     pub metrics: Metrics,
     rng: Mutex<Pcg64>,
@@ -45,6 +48,7 @@ pub struct CloudBuilder {
     replica_target: usize,
     seed: u64,
     acl_writers: Vec<String>,
+    node_racks: Option<Vec<usize>>,
     make_storage: Box<dyn Fn(SlaveId) -> Box<dyn Storage>>,
 }
 
@@ -55,6 +59,7 @@ impl Default for CloudBuilder {
             replica_target: 2,
             seed: 1,
             acl_writers: vec!["10.0.0.0/8".to_string()],
+            node_racks: None,
             make_storage: Box::new(|_| Box::new(MemStorage::new())),
         }
     }
@@ -83,6 +88,17 @@ impl CloudBuilder {
         self
     }
 
+    /// Describe the physical layout: `racks[i]` is slave i's rack id.
+    /// When given, replica placement prefers a rack no existing replica
+    /// occupies, so a whole-rack failure cannot take out every copy
+    /// (the scale-out testbeds of DESIGN.md §4; the paper's two
+    /// testbeds are single-rack-per-site so its uniform-random rule is
+    /// unchanged there).
+    pub fn racks(mut self, racks: &[usize]) -> Self {
+        self.node_racks = Some(racks.to_vec());
+        self
+    }
+
     pub fn storage_factory(
         mut self,
         f: impl Fn(SlaveId) -> Box<dyn Storage> + 'static,
@@ -92,6 +108,19 @@ impl CloudBuilder {
     }
 
     pub fn build(self) -> Result<SectorCloud, String> {
+        let node_rack = match self.node_racks {
+            Some(r) => {
+                if r.len() != self.n {
+                    return Err(format!(
+                        "racks() got {} entries for {} slaves",
+                        r.len(),
+                        self.n
+                    ));
+                }
+                r
+            }
+            None => vec![0; self.n],
+        };
         let mut rng = Pcg64::new(self.seed);
         let mut slaves = Vec::with_capacity(self.n);
         let mut ring_ids = Vec::with_capacity(self.n);
@@ -117,6 +146,7 @@ impl CloudBuilder {
             slaves,
             ring: ChordRing::build(&ring_ids),
             replica_target: self.replica_target,
+            node_rack,
             conn_cache: Mutex::new(ConnectionCache::new(1024, 600.0)),
             metrics: Metrics::new(),
             rng: Mutex::new(rng),
@@ -260,9 +290,17 @@ impl SectorCloud {
         names
     }
 
+    /// Slave id -> rack id (all zero without a configured layout).
+    pub fn rack_of(&self, id: SlaveId) -> usize {
+        self.node_rack[id as usize]
+    }
+
     /// Copy one replica of `name` to a random slave not yet holding it
     /// (the replication primitive; policy lives in `replica.rs`).
-    /// Returns the chosen slave or None if fully replicated already.
+    /// With a configured rack layout the random choice is restricted to
+    /// racks holding no replica yet, falling back to any candidate when
+    /// every rack is covered.  Returns the chosen slave or None if
+    /// fully replicated already.
     pub fn replicate_once(&self, name: &str) -> Result<Option<SlaveId>, String> {
         let meta = self
             .stat(name)
@@ -278,9 +316,20 @@ impl SectorCloud {
         if candidates.is_empty() {
             return Ok(None);
         }
+        let used_racks: Vec<usize> = meta
+            .locations
+            .iter()
+            .map(|&l| self.node_rack[l as usize])
+            .collect();
+        let diverse: Vec<SlaveId> = candidates
+            .iter()
+            .copied()
+            .filter(|&id| !used_racks.contains(&self.node_rack[id as usize]))
+            .collect();
+        let pool = if diverse.is_empty() { &candidates } else { &diverse };
         let pick = {
             let mut rng = self.rng.lock().unwrap();
-            candidates[rng.gen_range(candidates.len() as u64) as usize]
+            pool[rng.gen_range(pool.len() as u64) as usize]
         };
         let src = meta.locations[0];
         let data = self.slaves[src as usize].get_file(name)?;
@@ -418,6 +467,37 @@ mod tests {
         assert!(c.slave(added).has_file("r.dat"));
         assert_eq!(c.slave(added).get_index("r.dat").unwrap().len(), 5);
         assert_eq!(c.stat("r.dat").unwrap().locations.len(), 2);
+    }
+
+    #[test]
+    fn replica_placement_prefers_unused_racks() {
+        // Slaves 0-1 rack 0, slaves 2-3 rack 1: a file born in rack 0
+        // must get its first replica in rack 1, whatever the seed says.
+        for seed in 0..10 {
+            let c = SectorCloud::builder()
+                .nodes(4)
+                .seed(seed)
+                .racks(&[0, 0, 1, 1])
+                .build()
+                .unwrap();
+            let ip = CLIENT.parse().unwrap();
+            c.upload(ip, "r.dat", b"payload", None, Some(0)).unwrap();
+            let added = c.replicate_once("r.dat").unwrap().unwrap();
+            assert!(
+                c.rack_of(added) == 1,
+                "seed {seed}: replica landed on slave {added} (rack {})",
+                c.rack_of(added)
+            );
+        }
+    }
+
+    #[test]
+    fn rack_layout_must_cover_every_slave() {
+        assert!(SectorCloud::builder()
+            .nodes(4)
+            .racks(&[0, 1])
+            .build()
+            .is_err());
     }
 
     #[test]

@@ -61,6 +61,17 @@ impl<E> EventQueue<E> {
         }
     }
 
+    /// Pre-size the heap for a known event population (scenario engine:
+    /// one in-flight event per SPE plus the fault plan). Avoids
+    /// re-allocation churn in the hot loop at 128+ node scale.
+    pub fn with_capacity(cap: usize) -> Self {
+        Self {
+            heap: BinaryHeap::with_capacity(cap),
+            seq: 0,
+            now: 0.0,
+        }
+    }
+
     /// Current virtual time (the time of the last popped event).
     pub fn now(&self) -> f64 {
         self.now
@@ -104,6 +115,20 @@ impl<E> EventQueue<E> {
             (e.time, e.ev)
         })
     }
+
+    /// Drain every event sharing the earliest timestamp into `out`
+    /// (FIFO order preserved) and return that timestamp. Big scenarios
+    /// finish whole waves of segments at identical virtual times;
+    /// batching the wave into one heap drain lets the caller handle it
+    /// with a single scheduler pass instead of per-event bookkeeping.
+    pub fn pop_simultaneous(&mut self, out: &mut Vec<E>) -> Option<f64> {
+        let (t, first) = self.pop()?;
+        out.push(first);
+        while self.peek_time() == Some(t) {
+            out.push(self.pop().expect("peeked event exists").1);
+        }
+        Some(t)
+    }
 }
 
 #[cfg(test)]
@@ -140,6 +165,25 @@ mod tests {
         assert_eq!(q.now(), 2.5);
         q.push_after(1.5, ());
         assert_eq!(q.pop().unwrap().0, 4.0);
+    }
+
+    #[test]
+    fn pop_simultaneous_batches_ties() {
+        let mut q = EventQueue::with_capacity(8);
+        q.push_at(1.0, "early");
+        for i in 0..3 {
+            q.push_at(2.0, if i == 0 { "a" } else if i == 1 { "b" } else { "c" });
+        }
+        q.push_at(3.0, "late");
+        let mut batch = Vec::new();
+        assert_eq!(q.pop_simultaneous(&mut batch), Some(1.0));
+        assert_eq!(batch, vec!["early"]);
+        batch.clear();
+        assert_eq!(q.pop_simultaneous(&mut batch), Some(2.0));
+        assert_eq!(batch, vec!["a", "b", "c"], "FIFO within the wave");
+        batch.clear();
+        assert_eq!(q.pop_simultaneous(&mut batch), Some(3.0));
+        assert_eq!(q.pop_simultaneous(&mut batch), None);
     }
 
     #[test]

@@ -17,7 +17,7 @@
 //!     by either its cap or a saturated link;
 //!   * flow rates are monotone non-increasing in added contention.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 /// Directed link with a fixed capacity in bytes/second.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
@@ -42,10 +42,15 @@ struct Flow {
 
 /// The simulator. Time is advanced externally (`advance_to`); the owner
 /// interleaves it with an `EventQueue` via `next_completion`.
+///
+/// Flows live in a `BTreeMap` keyed by monotonically increasing ids:
+/// iteration order IS id order, so the allocator needs no per-query
+/// key sort (the old HashMap + sort cost dominated at 128-node
+/// scenario scale, where one shuffle wave is >10k flows).
 #[derive(Default)]
 pub struct NetSim {
     links: Vec<Link>,
-    flows: HashMap<FlowId, Flow>,
+    flows: BTreeMap<FlowId, Flow>,
     next_flow: u64,
     now: f64,
     rates_dirty: bool,
@@ -56,6 +61,15 @@ pub struct NetSim {
 impl NetSim {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Pre-size the link table for a known topology (scenario engine:
+    /// 2 links per node + 2 per rack + 2 per site).
+    pub fn with_capacity(links: usize) -> Self {
+        Self {
+            links: Vec::with_capacity(links),
+            ..Self::default()
+        }
     }
 
     pub fn now(&self) -> f64 {
@@ -72,6 +86,14 @@ impl NetSim {
 
     pub fn link_capacity(&self, l: LinkId) -> f64 {
         self.links[l.0].capacity
+    }
+
+    /// Change a link's capacity in place (fault injection: degradation
+    /// and repair). Active flows are re-allocated on the next query.
+    pub fn set_link_capacity(&mut self, l: LinkId, capacity_bytes_per_sec: f64) {
+        assert!(capacity_bytes_per_sec > 0.0);
+        self.links[l.0].capacity = capacity_bytes_per_sec;
+        self.rates_dirty = true;
     }
 
     pub fn active_flows(&self) -> usize {
@@ -109,9 +131,9 @@ impl NetSim {
         let mut remaining_cap: Vec<f64> = self.links.iter().map(|l| l.capacity).collect();
         let mut unfrozen_count: Vec<usize> = vec![0; nl];
 
-        let mut ids: Vec<FlowId> = self.flows.keys().copied().collect();
-        ids.sort_unstable(); // determinism over HashMap order
-        let mut frozen: HashMap<FlowId, bool> = ids.iter().map(|&i| (i, false)).collect();
+        // BTreeMap keys iterate in id order: deterministic without a sort.
+        let ids: Vec<FlowId> = self.flows.keys().copied().collect();
+        let mut frozen = vec![false; ids.len()];
         for id in &ids {
             for l in &self.flows[id].path {
                 unfrozen_count[l.0] += 1;
@@ -132,8 +154,8 @@ impl NetSim {
             // can't use their full fair share), else freeze the flows on
             // the bottleneck link(s) at the share.
             let mut froze_capped = false;
-            for id in &ids {
-                if frozen[id] {
+            for (k, id) in ids.iter().enumerate() {
+                if frozen[k] {
                     continue;
                 }
                 let cap = self.flows[id].rate_cap;
@@ -150,7 +172,7 @@ impl NetSim {
                         id,
                         cap,
                     );
-                    *frozen.get_mut(id).unwrap() = true;
+                    frozen[k] = true;
                     unfrozen -= 1;
                     froze_capped = true;
                 }
@@ -165,8 +187,8 @@ impl NetSim {
                 if unfrozen_count[i] > 0
                     && (remaining_cap[i] / unfrozen_count[i] as f64) <= min_share * (1.0 + 1e-12)
                 {
-                    for id in &ids {
-                        if !frozen[id] && self.flows[id].path.iter().any(|l| l.0 == i) {
+                    for (k, id) in ids.iter().enumerate() {
+                        if !frozen[k] && self.flows[id].path.iter().any(|l| l.0 == i) {
                             Self::freeze(
                                 &mut self.flows,
                                 &mut remaining_cap,
@@ -174,7 +196,7 @@ impl NetSim {
                                 id,
                                 min_share,
                             );
-                            *frozen.get_mut(id).unwrap() = true;
+                            frozen[k] = true;
                             unfrozen -= 1;
                             froze_any = true;
                         }
@@ -189,7 +211,7 @@ impl NetSim {
     }
 
     fn freeze(
-        flows: &mut HashMap<FlowId, Flow>,
+        flows: &mut BTreeMap<FlowId, Flow>,
         remaining_cap: &mut [f64],
         unfrozen_count: &mut [usize],
         id: &FlowId,
@@ -219,15 +241,21 @@ impl NetSim {
         self.flows[&id].remaining
     }
 
+    /// Abort an active flow (fault injection: a crashed receiver or
+    /// sender). Returns the undelivered byte count so the caller can
+    /// re-send it elsewhere.
+    pub fn cancel_flow(&mut self, id: FlowId) -> f64 {
+        let f = self.flows.remove(&id).expect("cancel of unknown flow");
+        self.rates_dirty = true;
+        f.remaining
+    }
+
     /// (time, flow) of the earliest completion among active flows, given
     /// current rates — or None if no flows are active.
     pub fn next_completion(&mut self) -> Option<(f64, FlowId)> {
         self.ensure_rates();
         let mut best: Option<(f64, FlowId)> = None;
-        let mut ids: Vec<FlowId> = self.flows.keys().copied().collect();
-        ids.sort_unstable();
-        for id in ids {
-            let f = &self.flows[&id];
+        for (&id, f) in &self.flows {
             if f.rate <= 0.0 {
                 continue;
             }
@@ -247,18 +275,19 @@ impl NetSim {
         let dt = (t - self.now).max(0.0);
         self.now = t;
         let mut done = Vec::new();
-        let mut ids: Vec<FlowId> = self.flows.keys().copied().collect();
-        ids.sort_unstable();
-        for id in ids {
-            let f = self.flows.get_mut(&id).unwrap();
+        for (&id, f) in self.flows.iter_mut() {
             let moved = (f.rate * dt).min(f.remaining);
             f.remaining -= moved;
             self.delivered_bytes += moved;
             if f.remaining <= 1e-6 {
                 self.delivered_bytes += f.remaining;
-                self.flows.remove(&id);
                 done.push(id);
-                self.rates_dirty = true;
+            }
+        }
+        if !done.is_empty() {
+            self.rates_dirty = true;
+            for id in &done {
+                self.flows.remove(id);
             }
         }
         done
@@ -372,6 +401,32 @@ mod tests {
         assert!((net.flow_rate(f1) - 30.0).abs() < 1e-9);
         assert!((net.flow_rate(f3) - 30.0).abs() < 1e-9);
         assert!((net.flow_rate(f2) - 70.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn link_degradation_reroutes_rates() {
+        let mut net = NetSim::new();
+        let l = net.add_link(100.0);
+        let f = net.start_flow(&[l], 1e6, 1e9);
+        assert!((net.flow_rate(f) - 100.0).abs() < 1e-9);
+        net.set_link_capacity(l, 25.0);
+        assert!((net.flow_rate(f) - 25.0).abs() < 1e-9, "degraded");
+        net.set_link_capacity(l, 100.0);
+        assert!((net.flow_rate(f) - 100.0).abs() < 1e-9, "repaired");
+    }
+
+    #[test]
+    fn cancel_flow_returns_undelivered_bytes() {
+        let mut net = NetSim::new();
+        let l = net.add_link(100.0);
+        let a = net.start_flow(&[l], 1000.0, 1e9);
+        let b = net.start_flow(&[l], 1000.0, 1e9);
+        net.advance_to(2.0); // each moved 100 bytes at 50 B/s
+        let left = net.cancel_flow(a);
+        assert!((left - 900.0).abs() < 1e-6);
+        // survivor reclaims the full link
+        assert!((net.flow_rate(b) - 100.0).abs() < 1e-9);
+        assert_eq!(net.active_flows(), 1);
     }
 
     #[test]

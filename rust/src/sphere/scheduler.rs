@@ -229,6 +229,77 @@ mod tests {
     }
 
     #[test]
+    fn delay_scheduling_declines_remote_work() {
+        // Only remote segments pending: a local_only request must come
+        // back empty (the SPE waits its patience out), while a plain
+        // assign hands the remote segment over.
+        let mut s = Scheduler::new(vec![seg(0, "a", &[5]), seg(1, "b", &[5])], true);
+        assert!(s.assign_filtered(1, true).is_none(), "declined while local_only");
+        assert_eq!(s.pending_count(), 2, "nothing was consumed by the refusal");
+        let got = s.assign_filtered(1, false).unwrap();
+        assert_eq!(got.id, 0);
+        assert_eq!(s.remote_assignments, 1);
+    }
+
+    #[test]
+    fn delay_scheduling_still_serves_local_segments() {
+        // A remote segment sits first in the queue; with local_only the
+        // node must skip it and take its own.
+        let mut s = Scheduler::new(vec![seg(0, "a", &[5]), seg(1, "b", &[1])], true);
+        let got = s.assign_filtered(1, true).unwrap();
+        assert_eq!(got.id, 1, "local segment wins under local_only");
+        assert_eq!(s.local_assignments, 1);
+    }
+
+    #[test]
+    fn delay_scheduling_is_inert_with_locality_disabled() {
+        // The ablation switch turns rule 2 off entirely: local_only
+        // must not starve the SPE when locality scheduling is disabled.
+        let mut s = Scheduler::new(vec![seg(0, "a", &[5])], false);
+        let got = s.assign_filtered(1, true).unwrap();
+        assert_eq!(got.id, 0);
+    }
+
+    #[test]
+    fn rule3_waiver_prefers_busy_local_over_clear_remote() {
+        // Rank order check: (local, file-in-flight) beats
+        // (remote, file-clear) — rule 3 is waived before rule 2 is.
+        let mut s = Scheduler::new(
+            vec![seg(0, "a", &[0]), seg(1, "a", &[0]), seg(2, "b", &[9])],
+            true,
+        );
+        let first = s.assign(0).unwrap();
+        assert_eq!(first.id, 0, "local + clear wins outright");
+        let second = s.assign(0).unwrap();
+        assert_eq!(
+            second.id, 1,
+            "file 'a' is in flight, but the local copy still beats remote 'b'"
+        );
+        assert_eq!(s.local_assignments, 2);
+        assert_eq!(s.remote_assignments, 0);
+    }
+
+    #[test]
+    fn rule3_waiver_releases_after_complete() {
+        // Once the in-flight segment completes, the same file is rank-0
+        // again: the waiver path must not leave the file marked busy.
+        let mut s = Scheduler::new(vec![seg(0, "a", &[0]), seg(1, "a", &[0])], true);
+        let first = s.assign(0).unwrap();
+        let second = s.assign(0).unwrap(); // waiver: same file, SPE would idle
+        s.complete(&first);
+        s.complete(&second);
+        let mut s2 = Scheduler::new(vec![seg(0, "a", &[0]), seg(1, "b", &[9])], true);
+        let a = s2.assign(0).unwrap();
+        assert_eq!(a.file, "a");
+        s2.complete(&a);
+        // "a" fully released: its fail() requeue re-enters at rank 0
+        // (local + clear) and beats the earlier-queued remote "b".
+        assert!(s2.fail(a.clone()), "requeue after release is accepted");
+        let next = s2.assign(0).unwrap();
+        assert_eq!(next.file, "a", "released file is clear again");
+    }
+
+    #[test]
     fn fail_requeues_until_attempts_exhausted() {
         let mut s = Scheduler::new(vec![seg(0, "a", &[0])], true);
         s.max_attempts = 2;

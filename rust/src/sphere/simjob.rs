@@ -7,7 +7,7 @@
 //! against the discrete-event testbed models.
 //!
 //! Mechanisms modelled (all physical; constants fitted only to the
-//! single-node table cells, see EXPERIMENTS.md §Calibration):
+//! single-node table cells, see DESIGN.md §3):
 //!
 //!   * disk: sequential read/write rates, serialized spindle ops, an
 //!     interleaving penalty when many network streams land on one disk

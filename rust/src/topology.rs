@@ -1,21 +1,276 @@
 //! Testbed topology descriptions + netsim wiring (substitution for the
 //! paper's physical testbeds; DESIGN.md §2).
 //!
-//! * `wan_testbed()` — the §6.1 wide-area testbed: 6 servers in 3 sites
-//!   (2× Chicago, 2× Pasadena, 2× Greenbelt), 10 Gb/s everywhere, RTTs
-//!   16 ms (CHI–GRB), 55 ms (CHI–PAS), 71 ms (GRB–PAS, routed through
-//!   Chicago).
-//! * `lan_testbed(n)` — the §6.1 rack: n ≤ 8 servers on one switch.
+//! Two layers:
 //!
-//! `build_network` instantiates per-node NIC links and per-site WAN
-//! uplinks in a `NetSim`; `path`/`rtt_secs` answer the per-pair questions
-//! job simulators ask.
+//! * `TopologySpec` — a parameterized generator: WAN sites × racks per
+//!   site × nodes per rack, with three link tiers (node NIC, rack
+//!   uplink, site/WAN uplink) and either a uniform or an explicit
+//!   site-to-site RTT matrix.  The paper's two physical layouts are
+//!   named presets (`paper_wan`, `paper_lan`), and `scale_out` builds
+//!   the arbitrary large configurations the scenario engine runs
+//!   (DESIGN.md §4).  Specs parse from the `[topology]` section of a
+//!   scenario TOML via `from_table`.
+//! * `Testbed` — a concrete (not yet instantiated) layout.
+//!   `wan_testbed()` is the §6.1 wide-area testbed: 6 servers in 3
+//!   sites (2× Chicago, 2× Pasadena, 2× Greenbelt), 10 Gb/s
+//!   everywhere, RTTs 16 ms (CHI–GRB), 55 ms (CHI–PAS), 71 ms
+//!   (GRB–PAS, routed through Chicago).  `lan_testbed(n)` is the §6.1
+//!   rack: n ≤ 8 servers on one switch.
+//!
+//! `build_network` instantiates per-node NIC links, per-rack uplinks
+//! and per-site WAN uplinks in a `NetSim`; `path`/`rtt_secs` answer the
+//! per-pair questions job simulators ask.  Sites with a single rack
+//! collapse the rack tier into the site switch (no extra hop), which
+//! keeps the paper presets byte-identical to their original models.
 
+use crate::config::Table;
 use crate::sim::netsim::{LinkId, NetSim};
 
 pub const SITE_CHICAGO: usize = 0;
 pub const SITE_PASADENA: usize = 1;
 pub const SITE_GREENBELT: usize = 2;
+
+const MS: f64 = 1e-3;
+const TEN_GBPS: f64 = 10.0e9 / 8.0;
+
+/// One site in a `TopologySpec`: `racks` racks of `nodes_per_rack`
+/// nodes each.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SiteSpec {
+    pub name: String,
+    pub racks: usize,
+    pub nodes_per_rack: usize,
+}
+
+/// Parameterized testbed generator.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TopologySpec {
+    pub name: String,
+    pub sites: Vec<SiteSpec>,
+    /// Explicit site × site RTT matrix in seconds (diagonal = cross-rack
+    /// intra-site RTT).  None derives a uniform matrix from
+    /// `wan_rtt_secs` / `intra_site_rtt_secs`.
+    pub site_rtt: Option<Vec<Vec<f64>>>,
+    /// Uniform inter-site RTT, seconds (ignored with explicit matrix).
+    pub wan_rtt_secs: f64,
+    /// Cross-rack, same-site RTT, seconds (matrix diagonal when derived).
+    pub intra_site_rtt_secs: f64,
+    /// Same-rack RTT, seconds.
+    pub intra_rack_rtt_secs: f64,
+    /// Per-node NIC rate, bytes/s.
+    pub nic_bps: f64,
+    /// Per-rack uplink rate, bytes/s.
+    pub rack_bps: f64,
+    /// Per-site WAN uplink rate, bytes/s.
+    pub wan_bps: f64,
+}
+
+impl TopologySpec {
+    /// The paper's 6-node, 3-site wide-area layout (§6.1) as a spec.
+    pub fn paper_wan() -> TopologySpec {
+        let site = |name: &str| SiteSpec {
+            name: name.into(),
+            racks: 1,
+            nodes_per_rack: 2,
+        };
+        TopologySpec {
+            name: "wan-6node".into(),
+            sites: vec![site("chicago"), site("pasadena"), site("greenbelt")],
+            site_rtt: Some(vec![
+                vec![0.1 * MS, 55.0 * MS, 16.0 * MS],
+                vec![55.0 * MS, 0.1 * MS, 71.0 * MS],
+                vec![16.0 * MS, 71.0 * MS, 0.1 * MS],
+            ]),
+            wan_rtt_secs: 71.0 * MS,
+            intra_site_rtt_secs: 0.1 * MS,
+            intra_rack_rtt_secs: 0.1 * MS,
+            nic_bps: TEN_GBPS,
+            rack_bps: TEN_GBPS,
+            wan_bps: TEN_GBPS,
+        }
+    }
+
+    /// The Table 1 sweep prefix of the WAN layout: `nodes` ∈ 1..=6,
+    /// filling Chicago, then Pasadena, then Greenbelt two nodes at a
+    /// time.  Unused sites are dropped (with their RTT matrix rows) so
+    /// the spec describes exactly the machines in play.
+    pub fn paper_wan_prefix(nodes: usize) -> Result<TopologySpec, String> {
+        if !(1..=6).contains(&nodes) {
+            return Err(format!("paper_wan supports 1..=6 nodes, got {nodes}"));
+        }
+        let mut spec = TopologySpec::paper_wan();
+        let counts = [
+            nodes.min(2),
+            nodes.saturating_sub(2).min(2),
+            nodes.saturating_sub(4).min(2),
+        ];
+        let used = counts.iter().filter(|&&c| c > 0).count();
+        spec.sites.truncate(used);
+        for (i, site) in spec.sites.iter_mut().enumerate() {
+            site.nodes_per_rack = counts[i];
+        }
+        if let Some(m) = &mut spec.site_rtt {
+            m.truncate(used);
+            for row in m.iter_mut() {
+                row.truncate(used);
+            }
+        }
+        spec.name = format!("wan-{nodes}node");
+        Ok(spec)
+    }
+
+    /// The paper's single-rack layout (§6.1) as a spec: `nodes` ≤ 8
+    /// servers on one switch.
+    pub fn paper_lan(nodes: usize) -> TopologySpec {
+        TopologySpec {
+            name: format!("lan-{nodes}node"),
+            sites: vec![SiteSpec {
+                name: "rack".into(),
+                racks: 1,
+                nodes_per_rack: nodes,
+            }],
+            site_rtt: Some(vec![vec![0.0001]]),
+            wan_rtt_secs: 0.0001,
+            intra_site_rtt_secs: 0.0001,
+            intra_rack_rtt_secs: 0.0001,
+            nic_bps: TEN_GBPS,
+            rack_bps: TEN_GBPS,
+            wan_bps: TEN_GBPS,
+        }
+    }
+
+    /// A uniform scale-out layout: `sites` WAN sites, each with
+    /// `racks_per_site` racks of `nodes_per_rack` nodes.  Defaults model
+    /// a 2008-era multi-site testbed: 10 Gb/s NICs, 40 Gb/s rack
+    /// uplinks, 10 Gb/s WAN uplinks, 40 ms WAN RTT.
+    pub fn scale_out(sites: usize, racks_per_site: usize, nodes_per_rack: usize) -> TopologySpec {
+        let nodes = sites * racks_per_site * nodes_per_rack;
+        TopologySpec {
+            name: format!("scale-{nodes}node"),
+            sites: (0..sites)
+                .map(|i| SiteSpec {
+                    name: format!("site{i:02}"),
+                    racks: racks_per_site,
+                    nodes_per_rack,
+                })
+                .collect(),
+            site_rtt: None,
+            wan_rtt_secs: 40.0 * MS,
+            intra_site_rtt_secs: 0.5 * MS,
+            intra_rack_rtt_secs: 0.1 * MS,
+            nic_bps: TEN_GBPS,
+            rack_bps: 4.0 * TEN_GBPS,
+            wan_bps: TEN_GBPS,
+        }
+    }
+
+    /// Parse the `[topology]` section of a scenario config.  Either a
+    /// preset (`preset = "paper_wan" | "paper_lan"`, optionally trimmed
+    /// with `nodes = n`) or a generated layout:
+    ///
+    /// sites / racks_per_site / nodes_per_rack (integers),
+    /// wan_rtt_ms / intra_site_rtt_ms / intra_rack_rtt_ms,
+    /// nic_gbps / rack_gbps / wan_gbps, name (string).
+    pub fn from_table(t: &Table) -> Result<TopologySpec, String> {
+        if let Some(v) = t.get("topology.preset") {
+            let preset = v.as_str().ok_or("topology.preset must be a string")?;
+            let nodes = t.int_or("topology.nodes", 0) as usize;
+            return match preset {
+                "paper_wan" => TopologySpec::paper_wan_prefix(if nodes == 0 { 6 } else { nodes }),
+                "paper_lan" => {
+                    let nodes = if nodes == 0 { 8 } else { nodes };
+                    if !(1..=8).contains(&nodes) {
+                        return Err(format!("paper_lan supports 1..=8 nodes, got {nodes}"));
+                    }
+                    Ok(TopologySpec::paper_lan(nodes))
+                }
+                other => Err(format!("unknown topology preset {other:?}")),
+            };
+        }
+        let sites = t.int_or("topology.sites", 1).max(1) as usize;
+        let racks = t.int_or("topology.racks_per_site", 1).max(1) as usize;
+        let npr = t.int_or("topology.nodes_per_rack", 1).max(1) as usize;
+        let mut spec = TopologySpec::scale_out(sites, racks, npr);
+        spec.wan_rtt_secs = t.float_or("topology.wan_rtt_ms", spec.wan_rtt_secs / MS) * MS;
+        spec.intra_site_rtt_secs =
+            t.float_or("topology.intra_site_rtt_ms", spec.intra_site_rtt_secs / MS) * MS;
+        spec.intra_rack_rtt_secs =
+            t.float_or("topology.intra_rack_rtt_ms", spec.intra_rack_rtt_secs / MS) * MS;
+        let gbps = 1.0e9 / 8.0;
+        spec.nic_bps = t.float_or("topology.nic_gbps", spec.nic_bps / gbps) * gbps;
+        spec.rack_bps = t.float_or("topology.rack_gbps", spec.rack_bps / gbps) * gbps;
+        spec.wan_bps = t.float_or("topology.wan_gbps", spec.wan_bps / gbps) * gbps;
+        spec.name = t.str_or("topology.name", &spec.name).to_string();
+        Ok(spec)
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.sites.iter().map(|s| s.racks * s.nodes_per_rack).sum()
+    }
+
+    /// Materialize the spec into a concrete `Testbed`.
+    pub fn generate(&self) -> Result<Testbed, String> {
+        if self.sites.is_empty() {
+            return Err("topology needs at least one site".into());
+        }
+        let ns = self.sites.len();
+        if let Some(m) = &self.site_rtt {
+            if m.len() != ns || m.iter().any(|row| row.len() != ns) {
+                return Err(format!("site_rtt must be {ns}x{ns}"));
+            }
+        }
+        if self.nic_bps <= 0.0 || self.rack_bps <= 0.0 || self.wan_bps <= 0.0 {
+            return Err("link rates must be positive".into());
+        }
+        let mut site_names = Vec::with_capacity(ns);
+        let mut node_site = Vec::new();
+        let mut node_rack = Vec::new();
+        let mut rack_site = Vec::new();
+        for (si, site) in self.sites.iter().enumerate() {
+            if site.racks == 0 || site.nodes_per_rack == 0 {
+                return Err(format!("site {:?} has no nodes", site.name));
+            }
+            site_names.push(site.name.clone());
+            for _ in 0..site.racks {
+                let rack_id = rack_site.len();
+                rack_site.push(si);
+                for _ in 0..site.nodes_per_rack {
+                    node_site.push(si);
+                    node_rack.push(rack_id);
+                }
+            }
+        }
+        let rtt = match &self.site_rtt {
+            Some(m) => m.clone(),
+            None => (0..ns)
+                .map(|a| {
+                    (0..ns)
+                        .map(|b| {
+                            if a == b {
+                                self.intra_site_rtt_secs
+                            } else {
+                                self.wan_rtt_secs
+                            }
+                        })
+                        .collect()
+                })
+                .collect(),
+        };
+        Ok(Testbed {
+            name: self.name.clone(),
+            site_names,
+            node_site,
+            rtt,
+            nic_bps: self.nic_bps,
+            wan_bps: self.wan_bps,
+            node_rack,
+            rack_site,
+            rack_bps: self.rack_bps,
+            intra_rack_rtt_secs: self.intra_rack_rtt_secs,
+        })
+    }
+}
 
 /// A described (not yet instantiated) testbed.
 #[derive(Clone, Debug)]
@@ -24,12 +279,20 @@ pub struct Testbed {
     pub site_names: Vec<String>,
     /// node index -> site index.
     pub node_site: Vec<usize>,
-    /// site × site RTT in seconds (diagonal = intra-site RTT).
+    /// site × site RTT in seconds (diagonal = intra-site, cross-rack RTT).
     pub rtt: Vec<Vec<f64>>,
     /// Per-node NIC rate, bytes/s.
     pub nic_bps: f64,
     /// Per-site WAN uplink rate, bytes/s (ignored for 1-site testbeds).
     pub wan_bps: f64,
+    /// node index -> global rack index.
+    pub node_rack: Vec<usize>,
+    /// rack index -> site index.
+    pub rack_site: Vec<usize>,
+    /// Per-rack uplink rate, bytes/s (only crossed in multi-rack sites).
+    pub rack_bps: f64,
+    /// RTT between two nodes in the same rack, seconds.
+    pub intra_rack_rtt_secs: f64,
 }
 
 /// Link handles produced by `build_network`.
@@ -37,6 +300,8 @@ pub struct Testbed {
 pub struct NetLinks {
     pub node_up: Vec<LinkId>,
     pub node_down: Vec<LinkId>,
+    pub rack_up: Vec<LinkId>,
+    pub rack_down: Vec<LinkId>,
     pub site_up: Vec<LinkId>,
     pub site_down: Vec<LinkId>,
 }
@@ -47,48 +312,29 @@ impl Testbed {
     /// 3-4 Pasadena, 5-6 Greenbelt.
     pub fn wan_testbed(nodes: usize) -> Testbed {
         assert!((1..=6).contains(&nodes));
-        let ms = 1e-3;
-        let node_site_full = [
-            SITE_CHICAGO,
-            SITE_CHICAGO,
-            SITE_PASADENA,
-            SITE_PASADENA,
-            SITE_GREENBELT,
-            SITE_GREENBELT,
-        ];
-        Testbed {
-            name: format!("wan-{nodes}node"),
-            site_names: vec![
-                "chicago".into(),
-                "pasadena".into(),
-                "greenbelt".into(),
-            ],
-            node_site: node_site_full[..nodes].to_vec(),
-            rtt: vec![
-                vec![0.1 * ms, 55.0 * ms, 16.0 * ms],
-                vec![55.0 * ms, 0.1 * ms, 71.0 * ms],
-                vec![16.0 * ms, 71.0 * ms, 0.1 * ms],
-            ],
-            nic_bps: 10.0e9 / 8.0,
-            wan_bps: 10.0e9 / 8.0,
-        }
+        let mut t = TopologySpec::paper_wan()
+            .generate()
+            .expect("paper preset is valid");
+        t.node_site.truncate(nodes);
+        t.node_rack.truncate(nodes);
+        t.name = format!("wan-{nodes}node");
+        t
     }
 
     /// The paper's single-rack testbed (§6.1): up to 8 nodes, one site.
     pub fn lan_testbed(nodes: usize) -> Testbed {
         assert!((1..=8).contains(&nodes));
-        Testbed {
-            name: format!("lan-{nodes}node"),
-            site_names: vec!["rack".into()],
-            node_site: vec![0; nodes],
-            rtt: vec![vec![0.0001]],
-            nic_bps: 10.0e9 / 8.0,
-            wan_bps: 10.0e9 / 8.0,
-        }
+        TopologySpec::paper_lan(nodes)
+            .generate()
+            .expect("paper preset is valid")
     }
 
     pub fn nodes(&self) -> usize {
         self.node_site.len()
+    }
+
+    pub fn racks(&self) -> usize {
+        self.rack_site.len()
     }
 
     pub fn sites_used(&self) -> usize {
@@ -99,9 +345,18 @@ impl Testbed {
         seen.iter().filter(|&&b| b).count()
     }
 
+    /// Number of racks belonging to `site`.
+    pub fn racks_in_site(&self, site: usize) -> usize {
+        self.rack_site.iter().filter(|&&s| s == site).count()
+    }
+
     /// RTT between two nodes, seconds.
     pub fn rtt_secs(&self, a: usize, b: usize) -> f64 {
-        self.rtt[self.node_site[a]][self.node_site[b]]
+        if self.node_rack[a] == self.node_rack[b] {
+            self.intra_rack_rtt_secs
+        } else {
+            self.rtt[self.node_site[a]][self.node_site[b]]
+        }
     }
 
     /// The maximum RTT any pair in the testbed sees (for reporting).
@@ -116,14 +371,21 @@ impl Testbed {
         max
     }
 
-    /// Instantiate links in `net`: a full-duplex NIC per node and a
-    /// full-duplex WAN uplink per site.
+    /// Instantiate links in `net`: a full-duplex NIC per node, a
+    /// full-duplex uplink per rack and a full-duplex WAN uplink per
+    /// site.
     pub fn build_network(&self, net: &mut NetSim) -> NetLinks {
         let node_up = (0..self.nodes())
             .map(|_| net.add_link(self.nic_bps))
             .collect();
         let node_down = (0..self.nodes())
             .map(|_| net.add_link(self.nic_bps))
+            .collect();
+        let rack_up = (0..self.racks())
+            .map(|_| net.add_link(self.rack_bps))
+            .collect();
+        let rack_down = (0..self.racks())
+            .map(|_| net.add_link(self.rack_bps))
             .collect();
         let site_up = (0..self.site_names.len())
             .map(|_| net.add_link(self.wan_bps))
@@ -134,29 +396,44 @@ impl Testbed {
         NetLinks {
             node_up,
             node_down,
+            rack_up,
+            rack_down,
             site_up,
             site_down,
         }
     }
 
-    /// Link path for a src -> dst transfer. Same node: empty (local copy,
-    /// disk-bound only). Same site: NIC up + NIC down. Cross-site: NIC up,
-    /// site uplink, site downlink, NIC down.
+    /// Link path for a src -> dst transfer.  Same node: empty (local
+    /// copy, disk-bound only).  Same rack: NIC up + NIC down.  Same
+    /// site, different rack: additionally the two rack uplinks.
+    /// Cross-site: the rack tier is crossed only where the site actually
+    /// has more than one rack (single-rack sites collapse the rack
+    /// switch into the site switch), then the two site uplinks.
     pub fn path(&self, links: &NetLinks, src: usize, dst: usize) -> Vec<LinkId> {
         if src == dst {
             return vec![];
         }
-        let (ss, ds) = (self.node_site[src], self.node_site[dst]);
-        if ss == ds {
-            vec![links.node_up[src], links.node_down[dst]]
-        } else {
-            vec![
-                links.node_up[src],
-                links.site_up[ss],
-                links.site_down[ds],
-                links.node_down[dst],
-            ]
+        let (sr, dr) = (self.node_rack[src], self.node_rack[dst]);
+        if sr == dr {
+            return vec![links.node_up[src], links.node_down[dst]];
         }
+        let (ss, ds) = (self.node_site[src], self.node_site[dst]);
+        let mut p = vec![links.node_up[src]];
+        if ss == ds {
+            p.push(links.rack_up[sr]);
+            p.push(links.rack_down[dr]);
+        } else {
+            if self.racks_in_site(ss) > 1 {
+                p.push(links.rack_up[sr]);
+            }
+            p.push(links.site_up[ss]);
+            p.push(links.site_down[ds]);
+            if self.racks_in_site(ds) > 1 {
+                p.push(links.rack_down[dr]);
+            }
+        }
+        p.push(links.node_down[dst]);
+        p
     }
 
     /// Bottleneck capacity along a path, bytes/s.
@@ -210,6 +487,7 @@ mod tests {
         assert!(t.path(&links, 2, 2).is_empty());
         let same_site = t.path(&links, 0, 1);
         assert_eq!(same_site.len(), 2);
+        // Single-rack sites: no rack hop, exactly the four-link WAN path.
         let cross = t.path(&links, 0, 2);
         assert_eq!(cross.len(), 4);
         assert_eq!(cross[1], links.site_up[SITE_CHICAGO]);
@@ -231,5 +509,133 @@ mod tests {
         let half = t.wan_bps / 2.0;
         assert!((net.flow_rate(f1) - half).abs() < 1.0);
         assert!((net.flow_rate(f2) - half).abs() < 1.0);
+    }
+
+    // ------------------------------------------------ generator layer
+
+    #[test]
+    fn generator_reproduces_paper_presets_exactly() {
+        // The §6.1 WAN layout, regenerated from its spec.
+        let t = TopologySpec::paper_wan().generate().unwrap();
+        assert_eq!(t.node_site, vec![0, 0, 1, 1, 2, 2]);
+        assert_eq!(t.node_rack, vec![0, 0, 1, 1, 2, 2]);
+        assert_eq!(
+            t.site_names,
+            vec!["chicago".to_string(), "pasadena".into(), "greenbelt".into()]
+        );
+        assert!((t.rtt_secs(0, 2) - 0.055).abs() < 1e-12);
+        assert!((t.rtt_secs(0, 4) - 0.016).abs() < 1e-12);
+        assert!((t.rtt_secs(2, 4) - 0.071).abs() < 1e-12);
+        assert!((t.nic_bps - 10.0e9 / 8.0).abs() < 1.0);
+        assert!((t.wan_bps - 10.0e9 / 8.0).abs() < 1.0);
+        // The §6.1 rack.
+        let l = TopologySpec::paper_lan(8).generate().unwrap();
+        assert_eq!(l.nodes(), 8);
+        assert_eq!(l.racks(), 1);
+        assert_eq!(l.sites_used(), 1);
+        assert!((l.rtt_secs(0, 7) - 0.0001).abs() < 1e-12);
+        assert_eq!(l.name, "lan-8node");
+    }
+
+    #[test]
+    fn scale_out_generates_racks_and_sites() {
+        let spec = TopologySpec::scale_out(4, 4, 8);
+        assert_eq!(spec.nodes(), 128);
+        let t = spec.generate().unwrap();
+        assert_eq!(t.nodes(), 128);
+        assert_eq!(t.racks(), 16);
+        assert_eq!(t.sites_used(), 4);
+        assert_eq!(t.racks_in_site(0), 4);
+        // node 0 and node 8 share a site but not a rack.
+        assert_eq!(t.node_site[0], t.node_site[8]);
+        assert_ne!(t.node_rack[0], t.node_rack[8]);
+        assert!((t.rtt_secs(0, 1) - 0.1e-3).abs() < 1e-12, "same rack");
+        assert!((t.rtt_secs(0, 8) - 0.5e-3).abs() < 1e-12, "cross rack");
+        assert!((t.rtt_secs(0, 127) - 40.0e-3).abs() < 1e-12, "cross site");
+    }
+
+    #[test]
+    fn multi_rack_paths_cross_rack_uplinks() {
+        let t = TopologySpec::scale_out(2, 2, 2).generate().unwrap();
+        let mut net = NetSim::new();
+        let links = t.build_network(&mut net);
+        // nodes 0,1 rack 0; nodes 2,3 rack 1 (site 0); nodes 4.. site 1.
+        assert_eq!(t.path(&links, 0, 1).len(), 2, "same rack: NICs only");
+        let cross_rack = t.path(&links, 0, 2);
+        assert_eq!(cross_rack.len(), 4);
+        assert_eq!(cross_rack[1], links.rack_up[0]);
+        assert_eq!(cross_rack[2], links.rack_down[1]);
+        let cross_site = t.path(&links, 0, 4);
+        assert_eq!(cross_site.len(), 6);
+        assert_eq!(cross_site[1], links.rack_up[0]);
+        assert_eq!(cross_site[2], links.site_up[0]);
+        assert_eq!(cross_site[3], links.site_down[1]);
+        assert_eq!(cross_site[4], links.rack_down[2]);
+    }
+
+    #[test]
+    fn rack_uplink_is_a_real_bottleneck() {
+        let mut spec = TopologySpec::scale_out(1, 2, 2);
+        spec.rack_bps = spec.nic_bps / 2.0; // oversubscribed rack uplink
+        let t = spec.generate().unwrap();
+        let mut net = NetSim::new();
+        let links = t.build_network(&mut net);
+        let p = t.path(&links, 0, 2);
+        let b = t.bottleneck_bps(&net, &p);
+        assert!((b - spec.rack_bps).abs() < 1.0);
+    }
+
+    #[test]
+    fn spec_parses_from_table() {
+        let t = Table::parse(
+            r#"
+            [topology]
+            sites = 2
+            racks_per_site = 3
+            nodes_per_rack = 4
+            wan_rtt_ms = 25.0
+            nic_gbps = 1.0
+            "#,
+        )
+        .unwrap();
+        let spec = TopologySpec::from_table(&t).unwrap();
+        assert_eq!(spec.nodes(), 24);
+        assert!((spec.wan_rtt_secs - 0.025).abs() < 1e-12);
+        assert!((spec.nic_bps - 1.0e9 / 8.0).abs() < 1.0);
+        let preset = Table::parse("[topology]\npreset = \"paper_wan\"").unwrap();
+        assert_eq!(TopologySpec::from_table(&preset).unwrap(), TopologySpec::paper_wan());
+        let bad = Table::parse("[topology]\npreset = \"mesh\"").unwrap();
+        assert!(TopologySpec::from_table(&bad).is_err());
+    }
+
+    #[test]
+    fn preset_nodes_trim_is_honored() {
+        // `nodes = 4` on the WAN preset gives the Table 1 4-node row:
+        // 2x Chicago + 2x Pasadena, Greenbelt dropped entirely.
+        let t = Table::parse("[topology]\npreset = \"paper_wan\"\nnodes = 4").unwrap();
+        let spec = TopologySpec::from_table(&t).unwrap();
+        assert_eq!(spec.nodes(), 4);
+        let tb = spec.generate().unwrap();
+        assert_eq!(tb.node_site, vec![0, 0, 1, 1]);
+        assert_eq!(tb.site_names.len(), 2);
+        assert!((tb.rtt_secs(0, 2) - 0.055).abs() < 1e-12, "CHI-PAS RTT survives the trim");
+        // Out-of-range trims are rejected for both presets.
+        let t = Table::parse("[topology]\npreset = \"paper_wan\"\nnodes = 9").unwrap();
+        assert!(TopologySpec::from_table(&t).is_err());
+        let t = Table::parse("[topology]\npreset = \"paper_lan\"\nnodes = 9").unwrap();
+        assert!(TopologySpec::from_table(&t).is_err());
+    }
+
+    #[test]
+    fn generate_rejects_bad_specs() {
+        let mut spec = TopologySpec::scale_out(1, 1, 1);
+        spec.sites.clear();
+        assert!(spec.generate().is_err());
+        let mut spec = TopologySpec::paper_wan();
+        spec.site_rtt = Some(vec![vec![0.0]]); // wrong shape for 3 sites
+        assert!(spec.generate().is_err());
+        let mut spec = TopologySpec::scale_out(1, 1, 2);
+        spec.nic_bps = 0.0;
+        assert!(spec.generate().is_err());
     }
 }

@@ -1,8 +1,11 @@
 //! PJRT artifact correctness: the AOT-compiled JAX/Pallas executables
-//! must agree with the host oracles.  Requires `make artifacts`.
+//! must agree with the host oracles.  Requires `make artifacts` and a
+//! `--features pjrt` build (DESIGN.md §8); without the feature this
+//! whole test target compiles to nothing.
 //!
 //! One PJRT client per process (the CPU plugin dislikes repeated
 //! clients), so everything shares a lazily-loaded runtime.
+#![cfg(feature = "pjrt")]
 
 use sector_sphere::mining::emergent::{delta_host, score_host, EmergentCluster};
 use sector_sphere::mining::kmeans::{fit, step_host};
