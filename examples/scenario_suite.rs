@@ -29,6 +29,7 @@ fn main() {
         load_or(ScenarioSpec::paper_wan6(), "paper_wan6.toml"),
         load_or(ScenarioSpec::paper_lan8(), "paper_lan8.toml"),
         load_or(ScenarioSpec::scale128(), "scale128.toml"),
+        load_or(ScenarioSpec::traffic_scale128(), "traffic_scale128.toml"),
     ];
     println!(
         "{:<28} {:>6} {:>6} {:>12} {:>9} {:>9} {:>7} {:>7}",
@@ -49,6 +50,15 @@ fn main() {
             a.locality_fraction * 100.0,
             a.faults_injected
         );
+        if let Some(t) = &a.traffic {
+            for slo in &t.tenants {
+                println!(
+                    "  `- {:<12} p50 {:>8.1} ms  p95 {:>8.1} ms  p99 {:>8.1} ms  \
+                     {:>6} done {:>5} rej",
+                    slo.name, slo.p50_ms, slo.p95_ms, slo.p99_ms, slo.completed, slo.rejected
+                );
+            }
+        }
     }
     println!("\nall scenarios completed; each ran twice with byte-identical reports");
 }

@@ -6,7 +6,7 @@
 //!
 //!     cargo bench --bench bench_scale
 
-use sector_sphere::bench::time_fn;
+use sector_sphere::bench::{time_fn, BenchJson};
 use sector_sphere::scenario::{run_scenario, ScenarioSpec};
 use sector_sphere::topology::TopologySpec;
 use sector_sphere::util::bytes::GB;
@@ -27,6 +27,8 @@ fn main() {
         "nodes", "events", "wall ms", "events/sec", "makespan s"
     );
     let mut per_event_ms = Vec::new();
+    let mut json = BenchJson::new("scale");
+    json.text("bench", "scale");
     for (sites, racks, npr) in [(1, 2, 8), (2, 2, 8), (4, 2, 8), (4, 4, 8)] {
         let spec = spec_for(sites, racks, npr);
         let report = run_scenario(&spec).expect("scenario runs");
@@ -41,6 +43,11 @@ fn main() {
             events_per_sec,
             report.makespan_secs
         );
+        let n = report.nodes;
+        json.num(&format!("wall_ms_{n}"), t.secs.mean * 1e3)
+            .int(&format!("events_{n}"), report.events)
+            .num(&format!("events_per_sec_{n}"), events_per_sec)
+            .num(&format!("makespan_secs_{n}"), report.makespan_secs);
     }
     // The gate: going 16 -> 128 nodes must not blow up per-event cost
     // (quadratic coordination would show a ~64x jump here).
@@ -63,4 +70,16 @@ fn main() {
         a.reassignments,
         a.locality_fraction * 100.0
     );
+    let t = time_fn("scale128-faults", 1, 3, || run_scenario(&spec).unwrap());
+    json.num("per_event_growth_16_to_128", growth)
+        .num("scale128_wall_ms", t.secs.mean * 1e3)
+        .num("scale128_wall_p99_ms", t.secs.p99 * 1e3)
+        .num("scale128_makespan_secs", a.makespan_secs)
+        .int("scale128_events", a.events)
+        .int("scale128_segments", a.segments as u64)
+        .int("scale128_reassignments", a.reassignments);
+    match json.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("BENCH_scale.json not written: {e}"),
+    }
 }

@@ -1,0 +1,102 @@
+//! Traffic-engine scaling: wall-clock cost of serving the flagship
+//! multi-tenant request stream (DESIGN.md §10).  An engineering gate,
+//! not a paper table: the "millions of users" north star dies if
+//! per-request overhead grows with the population, so this bench
+//! sweeps the client population at fixed request count, then runs the
+//! full 128-node faulted preset twice to assert the determinism
+//! contract and record the SLO headline numbers.
+//!
+//!     cargo bench --bench bench_traffic
+//!
+//! Emits BENCH_traffic.json at the repo root (wall clock, simulated
+//! makespan, per-tenant p99, completion/rejection counters).
+
+use sector_sphere::bench::{time_fn, BenchJson};
+use sector_sphere::scenario::{run_scenario, ScenarioSpec};
+
+fn main() {
+    let mut json = BenchJson::new("traffic");
+    json.text("bench", "traffic");
+
+    // Population sweep: same request count, growing client population
+    // (sessions are lazy, so cost must stay roughly flat).
+    println!("traffic engine, population sweep (20k requests, 128 nodes):");
+    println!(
+        "{:>10} {:>9} {:>11} {:>13} {:>11}",
+        "clients", "events", "wall ms", "requests/sec", "makespan s"
+    );
+    let mut wall_ms = Vec::new();
+    for clients in [10_000usize, 100_000, 1_000_000] {
+        let mut spec = ScenarioSpec::traffic_scale128();
+        {
+            let t = spec.traffic.as_mut().unwrap();
+            t.clients = clients;
+            t.requests = 20_000;
+        }
+        let report = run_scenario(&spec).expect("traffic scenario runs");
+        let t = time_fn(&spec.name, 1, 3, || run_scenario(&spec).unwrap());
+        let traffic = report.traffic.as_ref().expect("traffic report");
+        let rps_wall = traffic.requests as f64 / t.secs.mean.max(1e-9);
+        wall_ms.push(t.secs.mean * 1e3);
+        println!(
+            "{:>10} {:>9} {:>11.1} {:>13.0} {:>11.2}",
+            clients, report.events, t.secs.mean * 1e3, rps_wall, report.makespan_secs
+        );
+        json.num(&format!("sweep_wall_ms_{clients}"), t.secs.mean * 1e3)
+            .num(&format!("sweep_requests_per_wall_sec_{clients}"), rps_wall);
+    }
+    let growth = wall_ms.last().unwrap() / wall_ms.first().unwrap().max(1e-9);
+    println!("wall-clock growth 10k -> 1M clients: {growth:.2}x");
+    // Population-independent cost would be ~1x; O(clients) scaling
+    // would be ~100x. The bound leaves headroom for noisy shared CI
+    // runners while still catching accidental per-client work.
+    assert!(
+        growth < 20.0,
+        "per-request cost must not scale with the population ({growth:.2}x)"
+    );
+    json.num("population_growth_10k_to_1m", growth);
+
+    // The flagship: 150k requests, 200k clients, three tenants, the
+    // scale128 fault plan — plus the determinism contract.
+    let spec = ScenarioSpec::traffic_scale128();
+    let a = run_scenario(&spec).expect("traffic_scale128 runs");
+    let b = run_scenario(&spec).expect("traffic_scale128 reruns");
+    assert_eq!(a, b, "traffic_scale128 must be deterministic");
+    let t = time_fn("traffic_scale128", 1, 3, || run_scenario(&spec).unwrap());
+    let traffic = a.traffic.as_ref().expect("traffic report");
+    println!(
+        "\ntraffic_scale128: {} requests in {:.1} simulated s ({:.0} ms wall), \
+         {} completed, {} rejected, {} unavailable",
+        traffic.requests,
+        traffic.makespan_secs,
+        t.secs.mean * 1e3,
+        traffic.completed,
+        traffic.rejected,
+        traffic.unavailable
+    );
+    json.num("scale128_wall_ms", t.secs.mean * 1e3)
+        .num("scale128_wall_p99_ms", t.secs.p99 * 1e3)
+        .num("scale128_makespan_secs", traffic.makespan_secs)
+        .int("scale128_requests", traffic.requests)
+        .int("scale128_completed", traffic.completed)
+        .int("scale128_rejected", traffic.rejected)
+        .int("scale128_unavailable", traffic.unavailable)
+        .int("scale128_events", a.events)
+        .int("scale128_reassignments", traffic.reassignments)
+        .num("scale128_meta_hit_rate", traffic.meta_hit_rate)
+        .num("scale128_conn_hit_rate", traffic.conn_hit_rate);
+    for slo in &traffic.tenants {
+        println!(
+            "  {:<12} p50 {:>8.1} ms  p95 {:>8.1} ms  p99 {:>8.1} ms  {:>7.1} rps",
+            slo.name, slo.p50_ms, slo.p95_ms, slo.p99_ms, slo.throughput_rps
+        );
+        json.num(&format!("p50_ms_{}", slo.name), slo.p50_ms)
+            .num(&format!("p95_ms_{}", slo.name), slo.p95_ms)
+            .num(&format!("p99_ms_{}", slo.name), slo.p99_ms)
+            .num(&format!("rps_{}", slo.name), slo.throughput_rps);
+    }
+    match json.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("BENCH_traffic.json not written: {e}"),
+    }
+}

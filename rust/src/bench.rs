@@ -9,6 +9,7 @@
 //!     (shape must hold even when absolute numbers differ).
 
 use crate::util::stats::Summary;
+use std::path::PathBuf;
 use std::time::Instant;
 
 /// Result of timing one closure.
@@ -61,6 +62,69 @@ pub fn print_timing(t: &Timing) {
         t.secs.min * 1e3,
         t.secs.p99 * 1e3
     );
+}
+
+/// Machine-readable bench emission: a flat JSON object written to
+/// `BENCH_<name>.json` at the repo root, so the perf trajectory can be
+/// tracked across PRs (and uploaded as a CI artifact) without a serde
+/// dependency.  Keys keep insertion order; values are numbers or
+/// strings only.
+pub struct BenchJson {
+    name: String,
+    fields: Vec<(String, String)>,
+}
+
+impl BenchJson {
+    pub fn new(name: &str) -> BenchJson {
+        BenchJson {
+            name: name.to_string(),
+            fields: Vec::new(),
+        }
+    }
+
+    pub fn num(&mut self, key: &str, v: f64) -> &mut Self {
+        // f64 Display is shortest-roundtrip: stable and valid JSON for
+        // finite values; non-finite becomes null.
+        let rendered = if v.is_finite() {
+            format!("{v}")
+        } else {
+            "null".to_string()
+        };
+        self.fields.push((key.to_string(), rendered));
+        self
+    }
+
+    pub fn int(&mut self, key: &str, v: u64) -> &mut Self {
+        self.fields.push((key.to_string(), format!("{v}")));
+        self
+    }
+
+    pub fn text(&mut self, key: &str, v: &str) -> &mut Self {
+        let escaped = v.replace('\\', "\\\\").replace('"', "\\\"");
+        self.fields.push((key.to_string(), format!("\"{escaped}\"")));
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let body: Vec<String> = self
+            .fields
+            .iter()
+            .map(|(k, v)| format!("\"{k}\": {v}"))
+            .collect();
+        format!("{{{}}}\n", body.join(", "))
+    }
+
+    /// Write `BENCH_<name>.json` at the repo root (CARGO_MANIFEST_DIR
+    /// when run through cargo, the working directory otherwise) and
+    /// return the path.
+    pub fn write(&self) -> std::io::Result<PathBuf> {
+        let base = std::env::var("CARGO_MANIFEST_DIR")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("."));
+        let path = base.join(format!("BENCH_{}.json", self.name));
+        std::fs::write(&path, self.render())?;
+        Ok(path)
+    }
 }
 
 /// A paper-vs-measured comparison table.
@@ -197,6 +261,20 @@ mod tests {
         ok.row("r", vec![1.0]);
         ok.check_band("x", &[1.0], &[1.1], 0.25);
         assert!(ok.render().contains("within band"));
+    }
+
+    #[test]
+    fn bench_json_renders_flat_object() {
+        let mut j = BenchJson::new("unit");
+        j.int("events", 42)
+            .num("wall_ms", 1.5)
+            .num("bad", f64::INFINITY)
+            .text("name", "scale\"128\"");
+        assert_eq!(
+            j.render(),
+            "{\"events\": 42, \"wall_ms\": 1.5, \"bad\": null, \
+             \"name\": \"scale\\\"128\\\"\"}\n"
+        );
     }
 
     #[test]

@@ -132,6 +132,39 @@ impl Default for SectorParams {
     }
 }
 
+/// Service-layer parameters: how a slave admits and serves client
+/// traffic (DESIGN.md §10).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServiceParams {
+    /// Concurrent transfers one slave serves; beyond this, requests
+    /// queue (they share the disk link while active).
+    pub slots_per_slave: usize,
+    /// Bounded per-slave admission queue, all tenants combined.  A
+    /// request finding every live replica's queue full is rejected —
+    /// overload sheds instead of queueing without limit.
+    pub queue_capacity: usize,
+    /// Client-side metadata cache TTL, seconds (§4 step 2 short-cut).
+    pub meta_ttl_secs: f64,
+    /// Client-side metadata cache capacity, entries per session.
+    pub meta_cache_entries: usize,
+    /// Node-pair data-connection cache size and idle timeout (§4).
+    pub conn_cache_entries: usize,
+    pub conn_idle_secs: f64,
+}
+
+impl Default for ServiceParams {
+    fn default() -> Self {
+        Self {
+            slots_per_slave: 4,
+            queue_capacity: 64,
+            meta_ttl_secs: 60.0,
+            meta_cache_entries: 8,
+            conn_cache_entries: 4096,
+            conn_idle_secs: 600.0,
+        }
+    }
+}
+
 /// Sphere compute-cloud parameters (paper §3.2).
 #[derive(Clone, Debug, PartialEq)]
 pub struct SphereParams {
@@ -231,6 +264,7 @@ pub struct SimConfig {
     pub sector: SectorParams,
     pub sphere: SphereParams,
     pub hadoop: HadoopParams,
+    pub service: ServiceParams,
     pub sphere_transport: TransportKind,
     pub seed: u64,
 }
@@ -243,6 +277,7 @@ impl SimConfig {
             sector: SectorParams::default(),
             sphere: SphereParams::default(),
             hadoop: HadoopParams::default(),
+            service: ServiceParams::default(),
             sphere_transport: TransportKind::Udt,
             seed: 20080824, // KDD'08 began Aug 24 2008; any fixed seed works
         }
@@ -295,6 +330,22 @@ impl SimConfig {
             t.int_or("hadoop.replication_out", self.hadoop.replication_out as i64) as usize;
         self.hadoop.cores_used =
             t.int_or("hadoop.cores_used", self.hadoop.cores_used as i64) as usize;
+        self.service.slots_per_slave =
+            t.int_or("service.slots_per_slave", self.service.slots_per_slave as i64) as usize;
+        self.service.queue_capacity =
+            t.int_or("service.queue_capacity", self.service.queue_capacity as i64) as usize;
+        self.service.meta_ttl_secs =
+            t.float_or("service.meta_ttl_secs", self.service.meta_ttl_secs);
+        self.service.meta_cache_entries = t.int_or(
+            "service.meta_cache_entries",
+            self.service.meta_cache_entries as i64,
+        ) as usize;
+        self.service.conn_cache_entries = t.int_or(
+            "service.conn_cache_entries",
+            self.service.conn_cache_entries as i64,
+        ) as usize;
+        self.service.conn_idle_secs =
+            t.float_or("service.conn_idle_secs", self.service.conn_idle_secs);
         if let Some(v) = t.get("sphere.transport") {
             self.sphere_transport =
                 TransportKind::parse(v.as_str().ok_or("sphere.transport must be a string")?)?;
@@ -344,6 +395,22 @@ mod tests {
         assert_eq!(c.sphere.seg_min_bytes, 16 * MB);
         assert_eq!(c.sphere_transport, TransportKind::Tcp);
         assert_eq!(c.hadoop.block_bytes, 64 * MB);
+    }
+
+    #[test]
+    fn service_overrides_apply() {
+        let c = SimConfig::lan_default();
+        assert_eq!(c.service.slots_per_slave, 4);
+        assert_eq!(c.service.queue_capacity, 64);
+        let t = Table::parse(
+            "[service]\nslots_per_slave = 8\nqueue_capacity = 16\nmeta_ttl_secs = 5.0",
+        )
+        .unwrap();
+        let c = c.apply_table(&t).unwrap();
+        assert_eq!(c.service.slots_per_slave, 8);
+        assert_eq!(c.service.queue_capacity, 16);
+        assert_eq!(c.service.meta_ttl_secs, 5.0);
+        assert_eq!(c.service.meta_cache_entries, 8, "untouched fields keep defaults");
     }
 
     #[test]

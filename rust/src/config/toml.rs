@@ -163,6 +163,35 @@ impl Table {
             .map(String::as_str)
     }
 
+    /// Reject typo'd config: every key directly under `section` must
+    /// be in `allowed`, and every nested subsection must be named in
+    /// `allowed_subsections` (whose own keys are NOT checked here —
+    /// call again per subsection).  A misspelled key must error, not
+    /// silently become a default.
+    pub fn check_known_keys(
+        &self,
+        section: &str,
+        allowed: &[&str],
+        allowed_subsections: &[&str],
+    ) -> Result<(), String> {
+        let prefix = format!("{section}.");
+        for key in self.section_keys(section) {
+            let rest = key.strip_prefix(&prefix).unwrap_or(key);
+            if let Some((sub, _)) = rest.split_once('.') {
+                if allowed_subsections.contains(&sub) {
+                    continue;
+                }
+                return Err(format!("[{section}]: unknown subsection {sub:?}"));
+            }
+            if !allowed.contains(&rest) {
+                return Err(format!(
+                    "[{section}]: unknown field {rest:?} (expected one of {allowed:?})"
+                ));
+            }
+        }
+        Ok(())
+    }
+
     /// Immediate child section names under `section`, sorted and
     /// deduplicated.  `[faults.crash1]` / `[faults.slow2]` headers give
     /// `subsections("faults") == ["crash1", "slow2"]` — how scenario
@@ -328,6 +357,17 @@ names = ["chicago", "pasadena"]"#)
         let t = Table::parse("[a]\nx = 1\ny = 2\n[b]\nz = 3").unwrap();
         let keys: Vec<&str> = t.section_keys("a").collect();
         assert_eq!(keys, vec!["a.x", "a.y"]);
+    }
+
+    #[test]
+    fn check_known_keys_catches_typos() {
+        let t = Table::parse("[s]\ngood = 1\n[s.sub]\nx = 2").unwrap();
+        assert!(t.check_known_keys("s", &["good"], &["sub"]).is_ok());
+        let e = t.check_known_keys("s", &["other"], &["sub"]).unwrap_err();
+        assert!(e.contains("good"), "{e}");
+        let e = t.check_known_keys("s", &["good"], &[]).unwrap_err();
+        assert!(e.contains("sub"), "{e}");
+        assert!(t.check_known_keys("missing", &[], &[]).is_ok());
     }
 
     #[test]

@@ -27,6 +27,10 @@
 //! * [`scenario`] — the scenario engine: TOML-described runs composing
 //!   a generated topology ([`topology`]), a workload and a fault plan
 //!   into one deterministic paper-scale experiment (DESIGN.md §4).
+//! * [`service`] — the service layer: client sessions walking the §4
+//!   access flow and a multi-tenant traffic engine serving up to
+//!   millions of simulated clients with admission control and SLO
+//!   reporting (DESIGN.md §10).
 //!
 //! The remaining modules are offline-environment substrates built from
 //! scratch: [`cli`], [`config`], [`bench`], [`testkit`], [`metrics`],
@@ -47,6 +51,7 @@ pub mod routing;
 pub mod runtime;
 pub mod scenario;
 pub mod sector;
+pub mod service;
 pub mod sim;
 pub mod sphere;
 pub mod testkit;

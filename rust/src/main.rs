@@ -18,6 +18,7 @@ const SUBCOMMANDS: &[(&str, &str)] = &[
     ("angle", "run the Angle anomaly-detection pipeline"),
     ("sim", "simulate a paper-scale Table 1/2 row (WAN or LAN)"),
     ("scenario", "run a TOML-described scenario (topology+workload+faults)"),
+    ("traffic", "serve multi-tenant client traffic (SLO report)"),
     ("quickstart", "upload files and run a grep UDF"),
 ];
 
@@ -30,7 +31,11 @@ fn flag_spec() -> Vec<FlagSpec> {
         FlagSpec { name: "windows", help: "angle time windows", takes_value: true },
         FlagSpec { name: "seed", help: "deterministic seed", takes_value: true },
         FlagSpec { name: "file", help: "scenario TOML (see config/scenarios/)", takes_value: true },
-        FlagSpec { name: "preset", help: "scenario preset: paper_wan6|paper_lan8|scale128", takes_value: true },
+        FlagSpec { name: "preset", help: "scenario preset: paper_wan6|paper_lan8|scale128|traffic_scale128", takes_value: true },
+        FlagSpec { name: "requests", help: "traffic: total requests to drive", takes_value: true },
+        FlagSpec { name: "clients", help: "traffic: simulated client population", takes_value: true },
+        FlagSpec { name: "rps", help: "traffic: open-loop arrival rate", takes_value: true },
+        FlagSpec { name: "metrics", help: "traffic: also print the metrics registry", takes_value: false },
         FlagSpec { name: "disk", help: "back slaves with real files", takes_value: false },
         FlagSpec { name: "pjrt", help: "load AOT artifacts (needs `make artifacts`)", takes_value: false },
         FlagSpec { name: "help", help: "show usage", takes_value: false },
@@ -56,6 +61,7 @@ fn main() {
         "angle" => cmd_angle(&args),
         "sim" => cmd_sim(&args),
         "scenario" => cmd_scenario(&args),
+        "traffic" => cmd_traffic(&args),
         "quickstart" => cmd_quickstart(&args),
         other => Err(format!("unknown command {other:?}")),
     };
@@ -143,39 +149,130 @@ fn cmd_sim(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
-fn cmd_scenario(args: &Args) -> Result<(), String> {
-    use sector_sphere::scenario::{run_scenario, ScenarioSpec};
-    let spec = match args.get("file") {
+fn load_scenario_spec(
+    args: &Args,
+    default_preset: &str,
+) -> Result<sector_sphere::scenario::ScenarioSpec, String> {
+    use sector_sphere::scenario::ScenarioSpec;
+    match args.get("file") {
         Some(path) => {
             let text = std::fs::read_to_string(path)
                 .map_err(|e| format!("read scenario {path}: {e}"))?;
-            ScenarioSpec::from_toml(&text)?
+            ScenarioSpec::from_toml(&text)
         }
-        None => match args.str_or("preset", "scale128") {
-            "paper_wan6" => ScenarioSpec::paper_wan6(),
-            "paper_lan8" => ScenarioSpec::paper_lan8(),
-            "scale128" => ScenarioSpec::scale128(),
-            other => {
-                return Err(format!(
-                    "unknown preset {other:?} (paper_wan6|paper_lan8|scale128) — or pass --file"
-                ))
-            }
+        None => match args.str_or("preset", default_preset) {
+            "paper_wan6" => Ok(ScenarioSpec::paper_wan6()),
+            "paper_lan8" => Ok(ScenarioSpec::paper_lan8()),
+            "scale128" => Ok(ScenarioSpec::scale128()),
+            "traffic_scale128" => Ok(ScenarioSpec::traffic_scale128()),
+            other => Err(format!(
+                "unknown preset {other:?} \
+                 (paper_wan6|paper_lan8|scale128|traffic_scale128) — or pass --file"
+            )),
         },
-    };
-    let r = run_scenario(&spec)?;
+    }
+}
+
+fn print_scenario_report(r: &sector_sphere::scenario::ScenarioReport) {
     println!(
         "scenario {}: {} on {} nodes ({} racks, {} sites)",
         r.name, r.workload, r.nodes, r.racks, r.sites
     );
     println!("  makespan       {}", fmt_duration_secs(r.makespan_secs));
     println!("  events         {}", r.events);
-    println!("  segments       {}", r.segments);
-    println!("  locality       {:.0}%", r.locality_fraction * 100.0);
-    println!("  shuffled       {:.2} GB", r.shuffle_gbytes);
+    if let Some(t) = &r.traffic {
+        println!(
+            "  requests       {} issued: {} completed, {} rejected, {} unavailable",
+            t.requests, t.completed, t.rejected, t.unavailable
+        );
+        println!(
+            "  caches         metadata {:.1}% hit, connections {:.1}% hit",
+            t.meta_hit_rate * 100.0,
+            t.conn_hit_rate * 100.0
+        );
+        println!(
+            "  placement      {:.0}% served same-node/rack, peak queue {}, {:.2} GB replicated",
+            t.near_fraction * 100.0,
+            t.peak_queue,
+            t.replica_gbytes
+        );
+        println!(
+            "  {:<14} {:>8} {:>8} {:>6} {:>8} {:>9} {:>9} {:>9} {:>9} {:>8}",
+            "tenant", "reqs", "done", "rej", "unavail", "p50 ms", "p95 ms", "p99 ms", "rps", "GB"
+        );
+        for s in &t.tenants {
+            println!(
+                "  {:<14} {:>8} {:>8} {:>6} {:>8} {:>9.1} {:>9.1} {:>9.1} {:>9.1} {:>8.2}",
+                s.name,
+                s.requests,
+                s.completed,
+                s.rejected,
+                s.unavailable,
+                s.p50_ms,
+                s.p95_ms,
+                s.p99_ms,
+                s.throughput_rps,
+                s.gbytes
+            );
+        }
+    } else {
+        println!("  segments       {}", r.segments);
+        println!("  locality       {:.0}%", r.locality_fraction * 100.0);
+        println!("  shuffled       {:.2} GB", r.shuffle_gbytes);
+    }
     println!(
         "  faults         {} injected, {} nodes crashed, {} reassignments",
         r.faults_injected, r.nodes_crashed, r.reassignments
     );
+}
+
+fn cmd_scenario(args: &Args) -> Result<(), String> {
+    use sector_sphere::scenario::run_scenario;
+    let spec = load_scenario_spec(args, "scale128")?;
+    let r = run_scenario(&spec)?;
+    print_scenario_report(&r);
+    Ok(())
+}
+
+fn cmd_traffic(args: &Args) -> Result<(), String> {
+    use sector_sphere::metrics::Metrics;
+    use sector_sphere::scenario::run_scenario;
+    let mut spec = load_scenario_spec(args, "traffic_scale128")?;
+    let traffic = spec
+        .traffic
+        .as_mut()
+        .ok_or("the selected scenario has no [traffic] block")?;
+    if let Some(v) = args.get("requests") {
+        traffic.requests = v
+            .parse()
+            .map_err(|_| format!("--requests expects an integer, got {v:?}"))?;
+    }
+    if let Some(v) = args.get("clients") {
+        traffic.clients = v
+            .parse()
+            .map_err(|_| format!("--clients expects an integer, got {v:?}"))?;
+    }
+    if let Some(v) = args.get("rps") {
+        let rps: f64 = v
+            .parse()
+            .map_err(|_| format!("--rps expects a number, got {v:?}"))?;
+        traffic.arrival = sector_sphere::service::ArrivalProcess::Open { rps };
+    }
+    if let Some(seed) = args.get("seed") {
+        spec.cfg.seed = seed
+            .parse()
+            .map_err(|_| format!("--seed expects an integer, got {seed:?}"))?;
+    }
+    let r = run_scenario(&spec)?;
+    print_scenario_report(&r);
+    if args.has("metrics") {
+        let m = Metrics::new();
+        r.traffic
+            .as_ref()
+            .expect("traffic scenario produces a traffic report")
+            .record_into(&m);
+        print!("{}", m.report());
+    }
     Ok(())
 }
 

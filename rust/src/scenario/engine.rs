@@ -40,7 +40,7 @@ use crate::sim::netsim::{FlowId, NetSim};
 use crate::sphere::scheduler::Scheduler;
 use crate::sphere::segment::Segment;
 use crate::sphere::simjob::udt_efficiency;
-use crate::topology::{NetLinks, Testbed};
+use crate::topology::{NetLinks, Testbed, rack_diverse_replica};
 use crate::transport::TransportModels;
 
 use super::{FaultSpec, ScenarioSpec, WorkloadKind};
@@ -65,6 +65,9 @@ pub struct ScenarioReport {
     pub shuffle_gbytes: f64,
     pub faults_injected: usize,
     pub nodes_crashed: usize,
+    /// SLO report when the scenario ran the service-layer traffic
+    /// engine (`[traffic]` block) instead of a batch workload.
+    pub traffic: Option<crate::service::TrafficReport>,
 }
 
 /// Run one scenario to completion. Deterministic: no wall clock, no
@@ -72,6 +75,11 @@ pub struct ScenarioReport {
 pub fn run_scenario(spec: &ScenarioSpec) -> Result<ScenarioReport, String> {
     spec.validate()?;
     let testbed = spec.topology.generate()?;
+    if spec.traffic.is_some() {
+        // Service-layer scenario: the traffic engine replaces the batch
+        // workload, composing with the same fault plan.
+        return crate::service::run_traffic(spec, &testbed);
+    }
     let mut state = FaultState::new(&spec.faults, testbed.nodes());
     let b = spec.workload.bytes_per_node;
     let mut agg = Aggregate::default();
@@ -124,31 +132,34 @@ pub fn run_scenario(spec: &ScenarioSpec) -> Result<ScenarioReport, String> {
         shuffle_gbytes: agg.shuffle_bytes / 1e9,
         faults_injected: state.injected,
         nodes_crashed: state.crashes,
+        traffic: None,
     })
 }
 
 // ------------------------------------------------------------ fault state
 
-/// Fault plan progress carried across workload stages.
-struct FaultState {
-    faults: Vec<FaultSpec>,
+/// Fault plan progress carried across workload stages.  Shared with
+/// the service-layer traffic engine, which composes the same fault
+/// plan with a request stream instead of a batch job.
+pub(crate) struct FaultState {
+    pub(crate) faults: Vec<FaultSpec>,
     /// crash applied / degrade window fully elapsed.
-    consumed: Vec<bool>,
+    pub(crate) consumed: Vec<bool>,
     /// fault counted in `injected` (a degrade window can re-fire its
     /// start event in a later stage; it must not count twice).
     counted: Vec<bool>,
-    dead: Vec<bool>,
+    pub(crate) dead: Vec<bool>,
     /// Live node ids in order — cached because the hot loop asks on
     /// every segment completion and the set only changes on a crash.
     alive_list: Vec<usize>,
     /// Straggler speed multiplier per node (1.0 = nominal).
-    factor: Vec<f64>,
-    injected: usize,
-    crashes: usize,
+    pub(crate) factor: Vec<f64>,
+    pub(crate) injected: usize,
+    pub(crate) crashes: usize,
 }
 
 impl FaultState {
-    fn new(faults: &[FaultSpec], nodes: usize) -> FaultState {
+    pub(crate) fn new(faults: &[FaultSpec], nodes: usize) -> FaultState {
         let mut s = FaultState {
             faults: faults.to_vec(),
             consumed: vec![false; faults.len()],
@@ -170,18 +181,18 @@ impl FaultState {
         s
     }
 
-    fn count_once(&mut self, fault: usize) {
+    pub(crate) fn count_once(&mut self, fault: usize) {
         if !self.counted[fault] {
             self.counted[fault] = true;
             self.injected += 1;
         }
     }
 
-    fn alive(&self) -> &[usize] {
+    pub(crate) fn alive(&self) -> &[usize] {
         &self.alive_list
     }
 
-    fn crash(&mut self, node: usize) {
+    pub(crate) fn crash(&mut self, node: usize) {
         if !self.dead[node] {
             self.dead[node] = true;
             self.alive_list.retain(|&n| n != node);
@@ -207,7 +218,7 @@ impl FaultState {
     }
 
     /// WAN degradation factor applying to `site` at time `now`.
-    fn degrade_factor_at(&self, site: usize, now: f64) -> f64 {
+    pub(crate) fn degrade_factor_at(&self, site: usize, now: f64) -> f64 {
         let mut f = 1.0;
         for fault in &self.faults {
             if let FaultSpec::LinkDegrade {
@@ -676,26 +687,10 @@ fn coordination_secs(testbed: &Testbed) -> f64 {
     hops * mean_rtt + 2.0 * mean_rtt
 }
 
-/// Rack-diverse replica partner: the same-offset node in the next rack
-/// (wrapping over the global rack list), falling back to the next node
-/// when the testbed has a single rack.
+/// Rack-diverse replica partner — shared with the service layer's
+/// catalog placement (`crate::topology::rack_diverse_replica`).
 fn replica_of(testbed: &Testbed, node: usize) -> usize {
-    let n = testbed.nodes();
-    if testbed.racks() <= 1 {
-        return (node + 1) % n;
-    }
-    let rack = testbed.node_rack[node];
-    let members: Vec<usize> = (0..n).filter(|&x| testbed.node_rack[x] == rack).collect();
-    let offset = members.iter().position(|&x| x == node).unwrap_or(0);
-    let next_rack = (rack + 1) % testbed.racks();
-    let next_members: Vec<usize> = (0..n)
-        .filter(|&x| testbed.node_rack[x] == next_rack)
-        .collect();
-    if next_members.is_empty() {
-        (node + 1) % n
-    } else {
-        next_members[offset % next_members.len()]
-    }
+    rack_diverse_replica(testbed, node)
 }
 
 // ------------------------------------------------------------ analytic paths

@@ -28,6 +28,7 @@ pub mod engine;
 pub use engine::{run_scenario, ScenarioReport};
 
 use crate::config::{SimConfig, Table};
+use crate::service::{ArrivalProcess, TenantSpec, TrafficSpec};
 use crate::topology::TopologySpec;
 use crate::util::bytes::{parse_bytes, GB};
 
@@ -106,6 +107,9 @@ pub struct ScenarioSpec {
     pub cfg: SimConfig,
     pub workload: WorkloadSpec,
     pub faults: Vec<FaultSpec>,
+    /// When present, the service-layer traffic engine runs instead of
+    /// the batch workload (the `[traffic]` TOML block; DESIGN.md §10).
+    pub traffic: Option<TrafficSpec>,
 }
 
 impl ScenarioSpec {
@@ -173,6 +177,14 @@ impl ScenarioSpec {
             }
             faults.push(fault);
         }
+        let traffic = TrafficSpec::from_table(t)?;
+        if traffic.is_some() && t.section_keys("workload").next().is_some() {
+            return Err(
+                "[traffic] and [workload] are mutually exclusive: the traffic \
+                 engine replaces the batch workload"
+                    .into(),
+            );
+        }
         Ok(ScenarioSpec {
             name: t.str_or("name", &topology.name).to_string(),
             topology,
@@ -183,6 +195,7 @@ impl ScenarioSpec {
                 iterations,
             },
             faults,
+            traffic,
         })
     }
 
@@ -190,6 +203,9 @@ impl ScenarioSpec {
     pub fn validate(&self) -> Result<(), String> {
         let nodes = self.topology.nodes();
         let sites = self.topology.sites.len();
+        if let Some(traffic) = &self.traffic {
+            traffic.validate()?;
+        }
         let mut crash_nodes: Vec<usize> = Vec::new();
         for f in &self.faults {
             match f {
@@ -258,6 +274,7 @@ impl ScenarioSpec {
                 iterations: 10,
             },
             faults: Vec::new(),
+            traffic: None,
         }
     }
 
@@ -274,6 +291,7 @@ impl ScenarioSpec {
                 iterations: 10,
             },
             faults: Vec::new(),
+            traffic: None,
         }
     }
 
@@ -307,7 +325,46 @@ impl ScenarioSpec {
                     factor: 0.25,
                 },
             ],
+            traffic: None,
         }
+    }
+
+    /// Service-layer stress preset: the scale128 cloud serving 150k
+    /// requests from a 200k-client population across three tenants,
+    /// through the same fault plan (the straggler, crash and WAN
+    /// brown-out now show up as per-tenant p99 damage instead of
+    /// makespan).  Mirrors config/scenarios/traffic_scale128.toml.
+    pub fn traffic_scale128() -> ScenarioSpec {
+        let mut spec = ScenarioSpec::scale128();
+        spec.name = "traffic-scale128".into();
+        spec.traffic = Some(TrafficSpec {
+            clients: 200_000,
+            requests: 150_000,
+            files: 65_536,
+            zipf_theta: 0.9,
+            arrival: ArrivalProcess::Open { rps: 4_000.0 },
+            tenants: vec![
+                TenantSpec {
+                    name: "interactive".into(),
+                    weight: 0.70,
+                    write_fraction: 0.05,
+                    object_bytes: 1.0e6,
+                },
+                TenantSpec {
+                    name: "analytics".into(),
+                    weight: 0.25,
+                    write_fraction: 0.10,
+                    object_bytes: 8.0e6,
+                },
+                TenantSpec {
+                    name: "ingest".into(),
+                    weight: 0.05,
+                    write_fraction: 0.90,
+                    object_bytes: 16.0e6,
+                },
+            ],
+        });
+        spec
     }
 }
 
@@ -427,6 +484,68 @@ mod tests {
             FaultSpec::SlaveCrash { at_secs: 2.0, node: 0 },
         ];
         assert!(spec.validate().is_ok());
+    }
+
+    #[test]
+    fn traffic_block_parses_into_scenario() {
+        let spec = ScenarioSpec::from_toml(
+            r#"
+            [topology]
+            sites = 2
+            racks_per_site = 2
+            nodes_per_rack = 4
+            [traffic]
+            clients = 5000
+            requests = 2000
+            rps = 400.0
+            [traffic.tenants.web]
+            weight = 1.0
+            object_bytes = "2MB"
+            [faults.crash1]
+            kind = "crash"
+            at_secs = 1.0
+            node = 3
+            "#,
+        )
+        .unwrap();
+        let traffic = spec.traffic.as_ref().expect("traffic block parsed");
+        assert_eq!(traffic.clients, 5000);
+        assert_eq!(traffic.tenants[0].name, "web");
+        assert_eq!(spec.faults.len(), 1, "faults compose with traffic");
+        spec.validate().unwrap();
+    }
+
+    #[test]
+    fn traffic_and_workload_are_mutually_exclusive() {
+        let err = ScenarioSpec::from_toml(
+            "[workload]\nkind = \"terasort\"\n[traffic]\nrequests = 10",
+        )
+        .unwrap_err();
+        assert!(err.contains("mutually exclusive"), "{err}");
+        // Any [workload] key conflicts, not just `kind` — sizing must
+        // not be silently discarded by the traffic engine.
+        let err = ScenarioSpec::from_toml(
+            "[workload]\nbytes_per_node = \"50GB\"\n[traffic]\nrequests = 10",
+        )
+        .unwrap_err();
+        assert!(err.contains("mutually exclusive"), "{err}");
+    }
+
+    #[test]
+    fn traffic_preset_validates() {
+        let spec = ScenarioSpec::traffic_scale128();
+        spec.validate().unwrap();
+        assert_eq!(spec.topology.nodes(), 128);
+        let traffic = spec.traffic.unwrap();
+        assert!(traffic.requests >= 100_000, "acceptance floor");
+        assert_eq!(traffic.tenants.len(), 3);
+    }
+
+    #[test]
+    fn invalid_traffic_fails_scenario_validation() {
+        let mut spec = ScenarioSpec::traffic_scale128();
+        spec.traffic.as_mut().unwrap().tenants.clear();
+        assert!(spec.validate().is_err());
     }
 
     #[test]

@@ -238,18 +238,31 @@ impl SectorCloud {
     }
 
     /// Download a whole file, preferring a replica co-located with
-    /// `near` when one exists (the routing layer "can use information
-    /// involving network bandwidth and latency", §4).
+    /// `near`, then one in `near`'s rack (the routing layer "can use
+    /// information involving network bandwidth and latency", §4).
+    /// Slaves in the `dead` set are never read, even if a stale
+    /// location list still names them.
     pub fn download(&self, near: SlaveId, name: &str) -> Result<Vec<u8>, String> {
         let meta = self
             .stat(name)
             .ok_or_else(|| format!("no such file: {name}"))?;
-        let &src = meta
+        let dead = self.dead.lock().unwrap();
+        let live: Vec<SlaveId> = meta
             .locations
             .iter()
+            .copied()
+            .filter(|l| !dead.contains(l))
+            .collect();
+        drop(dead);
+        let near_rack = self.node_rack[near as usize];
+        let &src = live
+            .iter()
             .find(|&&l| l == near)
-            .or_else(|| meta.locations.first())
-            .ok_or_else(|| format!("file {name} has no replicas"))?;
+            .or_else(|| {
+                live.iter()
+                    .min_by_key(|&&l| (self.node_rack[l as usize] != near_rack, l))
+            })
+            .ok_or_else(|| format!("file {name} has no live replicas"))?;
         self.conn_cache
             .lock()
             .unwrap()
@@ -489,6 +502,98 @@ mod tests {
                 c.rack_of(added)
             );
         }
+    }
+
+    #[test]
+    fn replica_chain_covers_distinct_racks() {
+        // Three racks: growing a file to three replicas must land each
+        // copy on its own rack before any rack is reused.
+        for seed in 0..10 {
+            let c = SectorCloud::builder()
+                .nodes(6)
+                .seed(seed)
+                .racks(&[0, 0, 1, 1, 2, 2])
+                .build()
+                .unwrap();
+            let ip = CLIENT.parse().unwrap();
+            c.upload(ip, "r.dat", b"payload", None, Some(0)).unwrap();
+            c.replicate_once("r.dat").unwrap().unwrap();
+            c.replicate_once("r.dat").unwrap().unwrap();
+            let mut racks: Vec<usize> = c
+                .stat("r.dat")
+                .unwrap()
+                .locations
+                .iter()
+                .map(|&l| c.rack_of(l))
+                .collect();
+            racks.sort_unstable();
+            assert_eq!(racks, vec![0, 1, 2], "seed {seed}: racks reused early");
+        }
+    }
+
+    #[test]
+    fn reads_route_around_dead_slaves() {
+        let c = SectorCloud::builder()
+            .nodes(4)
+            .seed(3)
+            .racks(&[0, 0, 1, 1])
+            .build()
+            .unwrap();
+        let ip = CLIENT.parse().unwrap();
+        c.upload(ip, "f.dat", b"abc", None, Some(0)).unwrap();
+        let added = c.replicate_once("f.dat").unwrap().unwrap();
+        assert_eq!(c.rack_of(added), 1, "replica is rack-diverse");
+        // Kill the original holder: a read from its rack-mate must be
+        // served by the surviving replica, not the dead slave.
+        c.fail_slave(0);
+        assert!(c.is_dead(0));
+        assert_eq!(c.download(1, "f.dat").unwrap(), b"abc");
+        // The dead-set filter proper: a location registered while its
+        // slave is in the dead set (a write through a stale target)
+        // must never be read, even though the metadata names it.
+        c.fail_slave(added);
+        c.upload(ip, "g.dat", b"stale", None, Some(added)).unwrap();
+        assert_eq!(c.stat("g.dat").unwrap().locations, vec![added]);
+        let err = c.download(1, "g.dat").unwrap_err();
+        assert!(err.contains("no live replicas"), "{err}");
+        // Revival brings the copy back into rotation.
+        c.revive_slave(added);
+        assert_eq!(c.download(1, "g.dat").unwrap(), b"stale");
+    }
+
+    #[test]
+    fn download_prefers_rack_local_replica() {
+        let c = SectorCloud::builder()
+            .nodes(4)
+            .seed(5)
+            .racks(&[0, 0, 1, 1])
+            .build()
+            .unwrap();
+        let ip = CLIENT.parse().unwrap();
+        c.upload(ip, "f.dat", b"xyz", None, Some(3)).unwrap();
+        let added = c.replicate_once("f.dat").unwrap().unwrap();
+        assert_eq!(c.rack_of(added), 0);
+        // Reader in rack 0 (not holding a copy): the rack-0 replica
+        // wins over the rack-1 original.  Which slave served is
+        // observable through the connection cache: download records
+        // the (client, src) pair it opened.
+        let reader = if added == 0 { 1 } else { 0 };
+        assert_eq!(c.download(reader, "f.dat").unwrap(), b"xyz");
+        {
+            let mut cache = c.conn_cache.lock().unwrap();
+            assert!(
+                cache.acquire(0.0, u32::MAX, added),
+                "the rack-local replica must have served the read"
+            );
+            assert!(
+                !cache.acquire(0.0, u32::MAX, 3),
+                "the cross-rack original must not have been touched"
+            );
+        }
+        // And killing the rack-local copy still leaves the read
+        // serveable from the original.
+        c.fail_slave(added);
+        assert_eq!(c.download(reader, "f.dat").unwrap(), b"xyz");
     }
 
     #[test]

@@ -1,0 +1,1231 @@
+//! The traffic engine — deterministic, event-driven service of client
+//! requests against a simulated Sector cloud (DESIGN.md §10).
+//!
+//! Every request walks the §4 access flow:
+//!
+//!   1. the client's session checks its metadata cache; on a miss the
+//!      lookup routes through the real [`ChordRing`] (hop count × mean
+//!      overlay RTT + the response RTT), and the answer is cached with
+//!      a TTL;
+//!   2. replicas are ranked same-node > same-rack > same-site > WAN
+//!      and the request is admitted at the first replica with a free
+//!      service slot, queued at the first with queue room, or rejected
+//!      when every live replica is saturated (bounded queues: overload
+//!      degrades by shedding, not by queueing without limit);
+//!   3. a (cached) data connection is acquired — a cache miss pays one
+//!      handshake RTT (§4: "frequent data transfers between the same
+//!      pair of nodes do not need to set up a data connection every
+//!      time");
+//!   4. the bytes ride a `sim::netsim` flow whose path includes the
+//!      slave's disk (a per-node link, so concurrent slots share the
+//!      spindle), the node NICs and any rack/site uplinks — WAN
+//!      brown-outs and stragglers therefore squeeze exactly the flows
+//!      that cross them.
+//!
+//! Fair scheduling: each slave drains its bounded queue round-robin
+//! across tenants, so a backlogged bulk tenant cannot starve an
+//! interactive one.  Faults compose with the stream: a crash cancels
+//! the dead slave's flows and re-dispatches its requests to surviving
+//! replicas (clients' edge attachment outlives the storage process —
+//! the NIC and switch ports are still there), and the Chord ring drops
+//! the node so later lookups route to its successor.
+//!
+//! Determinism contract: same spec, same report, byte for byte — all
+//! randomness flows from the spec seed through forked [`Pcg64`]
+//! streams, and every container iterated during the run is ordered.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::config::{SimConfig, TransportKind};
+use crate::metrics::Metrics;
+use crate::routing::chord::{ChordRing, hash_name};
+use crate::scenario::engine::FaultState;
+use crate::scenario::{FaultSpec, ScenarioReport, ScenarioSpec};
+use crate::sim::event::EventQueue;
+use crate::sim::netsim::{FlowId, LinkId, NetSim};
+use crate::sphere::simjob::udt_efficiency;
+use crate::topology::{NetLinks, Proximity, Testbed, rack_diverse_replica};
+use crate::transport::{ConnectionCache, TransportModels};
+use crate::util::rng::{Pcg64, SplitMix64};
+use crate::util::stats::Summary;
+
+use super::session::{ClientSession, rank_replicas};
+use super::{ArrivalProcess, TrafficSpec};
+
+/// Re-dispatch budget per request (crash re-routes).
+const MAX_ATTEMPTS: u8 = 4;
+
+/// Per-tenant service-level objective measurements.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TenantSlo {
+    pub name: String,
+    pub requests: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub unavailable: u64,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    /// Completed requests per simulated second.
+    pub throughput_rps: f64,
+    pub gbytes: f64,
+}
+
+/// What a traffic run produced (the SLO report).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrafficReport {
+    pub tenants: Vec<TenantSlo>,
+    pub requests: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub unavailable: u64,
+    pub makespan_secs: f64,
+    /// Client-side metadata cache hit rate (§4 step 2 short-circuit).
+    pub meta_hit_rate: f64,
+    /// Node-pair data-connection cache hit rate (§4).
+    pub conn_hit_rate: f64,
+    /// Requests re-dispatched after a slave crash.
+    pub reassignments: u64,
+    /// Background write-replication volume (not client-visible).
+    pub replica_gbytes: f64,
+    /// Fraction of completed requests served same-node or same-rack.
+    pub near_fraction: f64,
+    /// Deepest any slave's admission queue got.
+    pub peak_queue: usize,
+}
+
+impl TrafficReport {
+    /// Record the report into a shared metrics registry (counters for
+    /// totals, gauges for the per-tenant percentiles in ms).
+    pub fn record_into(&self, m: &Metrics) {
+        m.add("service.requests", self.requests);
+        m.add("service.completed", self.completed);
+        m.add("service.rejected", self.rejected);
+        m.add("service.unavailable", self.unavailable);
+        m.add("service.reassignments", self.reassignments);
+        m.gauge_set("service.peak_queue", self.peak_queue as i64);
+        m.gauge_set(
+            "service.meta_hit_pct",
+            (self.meta_hit_rate * 100.0).round() as i64,
+        );
+        m.gauge_set(
+            "service.conn_hit_pct",
+            (self.conn_hit_rate * 100.0).round() as i64,
+        );
+        for t in &self.tenants {
+            m.add(&format!("service.{}.completed", t.name), t.completed);
+            m.add(&format!("service.{}.rejected", t.name), t.rejected);
+            m.gauge_set(
+                &format!("service.{}.p99_ms", t.name),
+                t.p99_ms.round() as i64,
+            );
+        }
+    }
+}
+
+/// Run a traffic scenario to completion.  Deterministic: no wall
+/// clock, no ambient randomness — the spec is the only input.
+pub fn run_traffic(spec: &ScenarioSpec, testbed: &Testbed) -> Result<ScenarioReport, String> {
+    let tspec = spec
+        .traffic
+        .as_ref()
+        .ok_or("run_traffic called without a [traffic] block")?;
+    tspec.validate()?;
+    let mut engine = Engine::new(spec, tspec, testbed)?;
+    engine.run()?;
+    let mut report = engine.into_report();
+    report.name = spec.name.clone();
+    Ok(report)
+}
+
+// ------------------------------------------------------------ events
+
+enum Ev {
+    /// Open-loop arrival tick: issue one request, schedule the next.
+    Arrive,
+    /// Closed-loop client finished thinking.
+    ClientWake { client: u32 },
+    /// Metadata resolved: admit the request at a replica.
+    Dispatch { req: u32 },
+    Crash { fault: usize },
+    DegradeStart { fault: usize },
+    DegradeEnd { fault: usize },
+}
+
+enum FlowKind {
+    /// A client-visible request transfer.
+    Service { req: u32 },
+    /// Background write replication between the recorded endpoints.
+    Replicate { src: u32, dst: u32 },
+}
+
+// ------------------------------------------------------------ catalog
+
+/// The object catalog: placement and popularity, fixed at build time.
+struct Catalog {
+    /// FNV hash of each object's name (the Chord lookup key).
+    hash: Vec<u64>,
+    primary: Vec<u32>,
+    replica: Vec<u32>,
+    /// Normalized popularity CDF over key ids (Zipf ranks scattered
+    /// over the id space by a seeded shuffle, so hot keys spread
+    /// across slaves instead of clustering at id 0).
+    cdf: Vec<f64>,
+}
+
+impl Catalog {
+    fn build(
+        files: usize,
+        theta: f64,
+        nodes: usize,
+        testbed: &Testbed,
+        rng: &mut Pcg64,
+    ) -> Catalog {
+        // The replica partner depends only on the primary node:
+        // precompute it per node instead of re-deriving it per file.
+        let partner: Vec<u32> = (0..nodes)
+            .map(|n| rack_diverse_replica(testbed, n) as u32)
+            .collect();
+        let mut hash = Vec::with_capacity(files);
+        let mut primary = Vec::with_capacity(files);
+        let mut replica = Vec::with_capacity(files);
+        for k in 0..files {
+            hash.push(hash_name(&format!("svc/obj{k:08}.dat")));
+            let p = rng.gen_range(nodes as u64) as u32;
+            primary.push(p);
+            replica.push(partner[p as usize]);
+        }
+        let mut perm: Vec<u32> = (0..files as u32).collect();
+        rng.shuffle(&mut perm);
+        let mut weight = vec![0.0f64; files];
+        for (rank, &key) in perm.iter().enumerate() {
+            weight[key as usize] = 1.0 / ((rank + 1) as f64).powf(theta);
+        }
+        let total: f64 = weight.iter().sum();
+        let mut acc = 0.0;
+        let mut cdf = Vec::with_capacity(files);
+        for w in &weight {
+            acc += w / total;
+            cdf.push(acc);
+        }
+        if let Some(last) = cdf.last_mut() {
+            *last = 1.0;
+        }
+        Catalog {
+            hash,
+            primary,
+            replica,
+            cdf,
+        }
+    }
+
+    fn sample_key(&self, rng: &mut Pcg64) -> u32 {
+        let u = rng.next_f64();
+        self.cdf.partition_point(|&c| c <= u) as u32
+    }
+}
+
+// ------------------------------------------------------------ sessions
+
+/// Client-session store: dense for closed-loop populations (every
+/// client participates), lazy for open-loop ones (only clients the
+/// arrival process actually picks get a session).
+enum Sessions {
+    Dense(Vec<ClientSession>),
+    Sparse(BTreeMap<u32, ClientSession>),
+}
+
+impl Sessions {
+    fn get_or_create(&mut self, id: u32, node: u32) -> &mut ClientSession {
+        match self {
+            Sessions::Dense(v) => &mut v[id as usize],
+            Sessions::Sparse(m) => m
+                .entry(id)
+                .or_insert_with(|| ClientSession::new(id, node)),
+        }
+    }
+}
+
+// ------------------------------------------------------------ requests
+
+struct Request {
+    client: u32,
+    tenant: u16,
+    key: u32,
+    write: bool,
+    arrived: f64,
+    /// Latency components not simulated as events (connection setup).
+    overhead: f64,
+    /// Slave currently serving or queueing this request.
+    slave: u32,
+    attempts: u8,
+    /// Served same-node or same-rack (set at service start).
+    near: bool,
+    /// Lookup missed: fill the session's metadata cache when the
+    /// resolution completes (at dispatch), not at issue — a concurrent
+    /// request for the same key must not hit metadata still in flight.
+    fill_meta: bool,
+}
+
+struct SlaveState {
+    active: usize,
+    /// Per-tenant admission queues, drained round-robin.
+    queues: Vec<VecDeque<u32>>,
+    queued: usize,
+    /// Round-robin pointer over tenants.
+    rr: usize,
+}
+
+// ------------------------------------------------------------ engine
+
+struct Engine<'a> {
+    tspec: &'a TrafficSpec,
+    testbed: &'a Testbed,
+    cfg: &'a SimConfig,
+    state: FaultState,
+    models: TransportModels,
+    net: NetSim,
+    links: NetLinks,
+    /// One link per node modelling its read/write spindle: concurrent
+    /// service slots share the disk via max-min fairness, and a
+    /// straggler is simply a slower disk link.
+    disk_read: Vec<LinkId>,
+    disk_write: Vec<LinkId>,
+    /// Nominal link capacities (rate caps are computed against these so
+    /// a degradation window squeezes flows through the shared link and
+    /// lifts when it ends).
+    nominal_caps: Vec<f64>,
+    q: EventQueue<Ev>,
+    ring: ChordRing,
+    ring_ids: Vec<u64>,
+    ring_to_node: BTreeMap<u64, u32>,
+    catalog: Catalog,
+    sessions: Sessions,
+    conn: ConnectionCache,
+    rng: Pcg64,
+    seed: u64,
+    mean_rtt: f64,
+    requests: Vec<Request>,
+    slaves: Vec<SlaveState>,
+    flows: BTreeMap<FlowId, FlowKind>,
+    // ---- counters
+    issued: u64,
+    outstanding: u64,
+    completed: u64,
+    rejected: u64,
+    unavailable: u64,
+    events: u64,
+    reassignments: u64,
+    near_served: u64,
+    meta_hits: u64,
+    meta_misses: u64,
+    served_bytes: f64,
+    replica_bytes: f64,
+    peak_queue: usize,
+    makespan: f64,
+    // ---- per tenant
+    t_requests: Vec<u64>,
+    t_completed: Vec<u64>,
+    t_rejected: Vec<u64>,
+    t_unavailable: Vec<u64>,
+    t_bytes: Vec<f64>,
+    t_lat_ms: Vec<Vec<f64>>,
+    tenant_cdf: Vec<f64>,
+}
+
+impl<'a> Engine<'a> {
+    fn new(
+        spec: &'a ScenarioSpec,
+        tspec: &'a TrafficSpec,
+        testbed: &'a Testbed,
+    ) -> Result<Engine<'a>, String> {
+        let cfg = &spec.cfg;
+        let n = testbed.nodes();
+        let state = FaultState::new(&spec.faults, n);
+        let mut rng = Pcg64::new(cfg.seed);
+        let mut ring_rng = rng.fork(1);
+        let mut catalog_rng = rng.fork(2);
+        let traffic_rng = rng.fork(3);
+
+        let ring_ids: Vec<u64> = (0..n).map(|_| ring_rng.next_u64()).collect();
+        let ring = ChordRing::build(&ring_ids);
+        let ring_to_node: BTreeMap<u64, u32> = ring_ids
+            .iter()
+            .enumerate()
+            .map(|(i, &id)| (id, i as u32))
+            .collect();
+        let catalog = Catalog::build(tspec.files, tspec.zipf_theta, n, testbed, &mut catalog_rng);
+
+        // Network: topology links + one read and one write disk link
+        // per node (straggler factors are static, so they bake into
+        // the disk capacity).
+        let mut net =
+            NetSim::with_capacity(4 * n + 2 * testbed.racks() + 2 * testbed.site_names.len());
+        let links = testbed.build_network(&mut net);
+        let read_eff = cfg.hardware.disk_read_bps * cfg.sphere.io_efficiency;
+        let write_eff = cfg.hardware.disk_write_bps * cfg.sphere.io_efficiency;
+        let disk_read: Vec<LinkId> = (0..n)
+            .map(|i| net.add_link((read_eff * state.factor[i]).max(1.0)))
+            .collect();
+        let disk_write: Vec<LinkId> = (0..n)
+            .map(|i| net.add_link((write_eff * state.factor[i]).max(1.0)))
+            .collect();
+        let nominal_caps: Vec<f64> = (0..net.link_count())
+            .map(|i| net.link_capacity(LinkId(i)))
+            .collect();
+
+        let mut acc = 0.0;
+        for a in 0..n {
+            for b in 0..n {
+                acc += testbed.rtt_secs(a, b);
+            }
+        }
+        let mean_rtt = acc / (n * n).max(1) as f64;
+
+        let tenants = tspec.tenants.len();
+        let total_weight: f64 = tspec.tenants.iter().map(|t| t.weight).sum();
+        let mut tenant_cdf = Vec::with_capacity(tenants);
+        let mut tacc = 0.0;
+        for t in &tspec.tenants {
+            tacc += t.weight / total_weight;
+            tenant_cdf.push(tacc);
+        }
+        if let Some(last) = tenant_cdf.last_mut() {
+            *last = 1.0;
+        }
+
+        let sessions = match tspec.arrival {
+            ArrivalProcess::Closed { .. } => {
+                let mut v = Vec::with_capacity(tspec.clients);
+                for id in 0..tspec.clients as u32 {
+                    v.push(ClientSession::new(id, client_node(cfg.seed, id, n)));
+                }
+                Sessions::Dense(v)
+            }
+            ArrivalProcess::Open { .. } => Sessions::Sparse(BTreeMap::new()),
+        };
+
+        let slaves = (0..n)
+            .map(|_| SlaveState {
+                active: 0,
+                queues: (0..tenants).map(|_| VecDeque::new()).collect(),
+                queued: 0,
+                rr: 0,
+            })
+            .collect();
+
+        Ok(Engine {
+            tspec,
+            testbed,
+            cfg,
+            state,
+            models: TransportModels::default(),
+            net,
+            links,
+            disk_read,
+            disk_write,
+            nominal_caps,
+            q: EventQueue::with_capacity(4096),
+            ring,
+            ring_ids,
+            ring_to_node,
+            catalog,
+            sessions,
+            conn: ConnectionCache::new(
+                cfg.service.conn_cache_entries,
+                cfg.service.conn_idle_secs,
+            ),
+            rng: traffic_rng,
+            seed: cfg.seed,
+            mean_rtt,
+            requests: Vec::with_capacity(tspec.requests.min(1 << 22) as usize),
+            slaves,
+            flows: BTreeMap::new(),
+            issued: 0,
+            outstanding: 0,
+            completed: 0,
+            rejected: 0,
+            unavailable: 0,
+            events: 0,
+            reassignments: 0,
+            near_served: 0,
+            meta_hits: 0,
+            meta_misses: 0,
+            served_bytes: 0.0,
+            replica_bytes: 0.0,
+            peak_queue: 0,
+            makespan: 0.0,
+            t_requests: vec![0; tenants],
+            t_completed: vec![0; tenants],
+            t_rejected: vec![0; tenants],
+            t_unavailable: vec![0; tenants],
+            t_bytes: vec![0.0; tenants],
+            t_lat_ms: (0..tenants).map(|_| Vec::new()).collect(),
+            tenant_cdf,
+        })
+    }
+
+    // ---------------------------------------------------- scheduling
+
+    fn schedule_faults(&mut self) {
+        for (i, f) in self.state.faults.clone().into_iter().enumerate() {
+            if self.state.consumed[i] {
+                continue;
+            }
+            match f {
+                FaultSpec::SlaveCrash { at_secs, .. } => {
+                    self.q.push_at(at_secs.max(0.0), Ev::Crash { fault: i });
+                }
+                FaultSpec::LinkDegrade {
+                    at_secs,
+                    duration_secs,
+                    ..
+                } => {
+                    self.q
+                        .push_at(at_secs.max(0.0), Ev::DegradeStart { fault: i });
+                    let end = at_secs + duration_secs;
+                    if end.is_finite() {
+                        self.q.push_at(end, Ev::DegradeEnd { fault: i });
+                    }
+                }
+                FaultSpec::Straggler { .. } => {}
+            }
+        }
+    }
+
+    fn schedule_arrivals(&mut self) {
+        match self.tspec.arrival {
+            ArrivalProcess::Open { rps } => {
+                let dt = self.rng.next_exp(rps);
+                self.q.push_at(dt, Ev::Arrive);
+            }
+            ArrivalProcess::Closed { think_secs } => {
+                for client in 0..self.tspec.clients as u32 {
+                    let dt = if think_secs > 0.0 {
+                        self.rng.next_exp(1.0 / think_secs)
+                    } else {
+                        0.0
+                    };
+                    self.q.push_at(dt, Ev::ClientWake { client });
+                }
+            }
+        }
+    }
+
+    // ---------------------------------------------------- request intake
+
+    /// Weighted tenant pick from the engine's main stream (open loop:
+    /// the mix is a property of the aggregate arrival process).
+    fn sample_tenant(&mut self) -> u16 {
+        let u = self.rng.next_f64();
+        self.tenant_cdf.partition_point(|&c| c <= u) as u16
+    }
+
+    /// Closed loop: a client belongs to one tenant for its whole life,
+    /// picked from a per-client hash stream so the assignment does not
+    /// depend on arrival interleaving.
+    fn tenant_of_client(&self, client: u32) -> u16 {
+        let mut sm = SplitMix64::new(self.seed.rotate_left(17) ^ client as u64);
+        let u = (sm.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        self.tenant_cdf.partition_point(|&c| c <= u) as u16
+    }
+
+    fn issue_request(&mut self, client: u32, tenant: u16, now: f64) {
+        let key = self.catalog.sample_key(&mut self.rng);
+        let write = self.rng.next_f64() < self.tspec.tenants[tenant as usize].write_fraction;
+        let lookup_secs = self.resolve_meta(client, key, now);
+        let req = self.requests.len() as u32;
+        self.requests.push(Request {
+            client,
+            tenant,
+            key,
+            write,
+            arrived: now,
+            overhead: 0.0,
+            slave: u32::MAX,
+            attempts: 0,
+            near: false,
+            fill_meta: lookup_secs > 0.0,
+        });
+        self.issued += 1;
+        self.outstanding += 1;
+        self.t_requests[tenant as usize] += 1;
+        self.q.push_at(now + lookup_secs, Ev::Dispatch { req });
+    }
+
+    /// §4 step 2: resolve the object's locations — from the session's
+    /// metadata cache when fresh, else through the Chord ring.  Returns
+    /// the lookup latency.
+    fn resolve_meta(&mut self, client: u32, key: u32, now: f64) -> f64 {
+        let n = self.testbed.nodes();
+        let node = client_node(self.seed, client, n);
+        let (home, hit) = {
+            let s = self.sessions.get_or_create(client, node);
+            (s.node as usize, s.meta_lookup(key as u64, now))
+        };
+        if hit {
+            self.meta_hits += 1;
+            return 0.0;
+        }
+        self.meta_misses += 1;
+        // A crashed home node's clients re-enter the overlay through
+        // the first live node.
+        let start = if self.state.dead[home] {
+            *self.state.alive().first().unwrap_or(&home)
+        } else {
+            home
+        };
+        let (owner_id, hops) = self
+            .ring
+            .lookup(self.ring_ids[start], self.catalog.hash[key as usize])
+            .expect("non-empty ring");
+        let owner = self.ring_to_node[&owner_id] as usize;
+        // The cache entry is written when the resolution lands
+        // (dispatch time), via Request::fill_meta — not here.
+        hops as f64 * self.mean_rtt + self.testbed.rtt_secs(home, owner)
+    }
+
+    // ---------------------------------------------------- admission
+
+    /// Live candidate slaves for a request, in the client's preference
+    /// order.  Writes must land on the primary (or the surviving
+    /// replica when the primary is down); reads take any live copy.
+    fn candidates(&self, req: u32) -> Vec<u32> {
+        let r = &self.requests[req as usize];
+        let primary = self.catalog.primary[r.key as usize];
+        let replica = self.catalog.replica[r.key as usize];
+        if r.write {
+            for cand in [primary, replica] {
+                if !self.state.dead[cand as usize] {
+                    return vec![cand];
+                }
+            }
+            return Vec::new();
+        }
+        let mut cands: Vec<u32> = [primary, replica]
+            .into_iter()
+            .filter(|&c| !self.state.dead[c as usize])
+            .collect();
+        cands.dedup();
+        let home = client_node(self.seed, r.client, self.testbed.nodes()) as usize;
+        rank_replicas(self.testbed, home, &mut cands);
+        cands
+    }
+
+    fn dispatch(&mut self, req: u32, now: f64) {
+        // A missed lookup has now resolved: fill the session's
+        // metadata cache, TTL clocked from the resolution.
+        if self.requests[req as usize].fill_meta {
+            self.requests[req as usize].fill_meta = false;
+            let (client, key) = {
+                let r = &self.requests[req as usize];
+                (r.client, r.key)
+            };
+            let node = client_node(self.seed, client, self.testbed.nodes());
+            let ttl = self.cfg.service.meta_ttl_secs;
+            let cap = self.cfg.service.meta_cache_entries;
+            self.sessions
+                .get_or_create(client, node)
+                .meta_insert(key as u64, now + ttl, cap);
+        }
+        let cands = self.candidates(req);
+        if cands.is_empty() || self.requests[req as usize].attempts >= MAX_ATTEMPTS {
+            self.finish_non_served(req, now, false);
+            return;
+        }
+        self.requests[req as usize].attempts += 1;
+        let slots = self.cfg.service.slots_per_slave.max(1);
+        // Pass 1: an idle slot anywhere beats queueing at the nearest.
+        for &cand in &cands {
+            if self.slaves[cand as usize].active < slots {
+                self.start_service(req, cand, now);
+                return;
+            }
+        }
+        // Pass 2: queue room, in preference order.
+        let tenant = self.requests[req as usize].tenant as usize;
+        for &cand in &cands {
+            let ss = &mut self.slaves[cand as usize];
+            if ss.queued < self.cfg.service.queue_capacity {
+                ss.queues[tenant].push_back(req);
+                ss.queued += 1;
+                self.peak_queue = self.peak_queue.max(ss.queued);
+                self.requests[req as usize].slave = cand;
+                return;
+            }
+        }
+        // Every live replica saturated: shed the request.
+        self.finish_non_served(req, now, true);
+    }
+
+    /// Terminal non-success: `rejected` (admission shed) or
+    /// `unavailable` (no live replica / retries exhausted).
+    fn finish_non_served(&mut self, req: u32, now: f64, is_rejection: bool) {
+        let tenant = self.requests[req as usize].tenant as usize;
+        if is_rejection {
+            self.rejected += 1;
+            self.t_rejected[tenant] += 1;
+        } else {
+            self.unavailable += 1;
+            self.t_unavailable[tenant] += 1;
+        }
+        self.outstanding -= 1;
+        self.makespan = self.makespan.max(now);
+        let client = self.requests[req as usize].client;
+        self.client_think(client, now);
+    }
+
+    /// Closed loop only: schedule the client's next cycle.
+    fn client_think(&mut self, client: u32, now: f64) {
+        if let ArrivalProcess::Closed { think_secs } = self.tspec.arrival {
+            let dt = if think_secs > 0.0 {
+                self.rng.next_exp(1.0 / think_secs)
+            } else {
+                0.0
+            };
+            self.q.push_at(now + dt, Ev::ClientWake { client });
+        }
+    }
+
+    /// Start a byte transfer from `from` to `to`: the network route
+    /// between them, plus the reading/writing disk links of whichever
+    /// ends touch a spindle.  The rate cap comes from the transport
+    /// protocol against NOMINAL link rates (degradation constrains the
+    /// shared links instead, so it lifts when the window ends).
+    fn start_transfer(
+        &mut self,
+        from: usize,
+        to: usize,
+        bytes: f64,
+        read_disk: Option<usize>,
+        write_disk: Option<usize>,
+        kind: FlowKind,
+    ) {
+        let net_path = self.testbed.path(&self.links, from, to);
+        let bottleneck = net_path
+            .iter()
+            .map(|l| self.nominal_caps[l.0])
+            .fold(f64::INFINITY, f64::min)
+            .min(self.testbed.nic_bps);
+        let rtt = self.testbed.rtt_secs(from, to);
+        let proto_cap = match self.cfg.sphere_transport {
+            TransportKind::Udt => udt_efficiency(self.models.udt.efficiency, rtt) * bottleneck,
+            TransportKind::Tcp => self.models.tcp.rate_cap(bottleneck, rtt),
+        };
+        let mut path = Vec::with_capacity(net_path.len() + 2);
+        if let Some(node) = read_disk {
+            path.push(self.disk_read[node]);
+        }
+        path.extend_from_slice(&net_path);
+        if let Some(node) = write_disk {
+            path.push(self.disk_write[node]);
+        }
+        let fid = self.net.start_flow(&path, bytes.max(1.0), proto_cap.max(1.0));
+        self.flows.insert(fid, kind);
+    }
+
+    fn start_service(&mut self, req: u32, slave: u32, now: f64) {
+        let n = self.testbed.nodes();
+        let (write, tenant, client) = {
+            let r = &self.requests[req as usize];
+            (r.write, r.tenant as usize, r.client)
+        };
+        let home = client_node(self.seed, client, n) as usize;
+        let s = slave as usize;
+        self.slaves[s].active += 1;
+
+        // §4 connection cache: one handshake RTT on a miss, free reuse
+        // on a hit.  Keyed by the (server, client-edge) node pair.
+        let rtt = self.testbed.rtt_secs(s, home);
+        let (a, b) = if write {
+            (home as u32, slave)
+        } else {
+            (slave, home as u32)
+        };
+        let cached = self.conn.acquire(now, a, b);
+        let setup = if cached { 0.0 } else { rtt };
+
+        let bytes = self.tspec.tenants[tenant].object_bytes;
+        if write {
+            self.start_transfer(home, s, bytes, None, Some(s), FlowKind::Service { req });
+        } else {
+            self.start_transfer(s, home, bytes, Some(s), None, FlowKind::Service { req });
+        }
+
+        let r = &mut self.requests[req as usize];
+        r.slave = slave;
+        r.overhead += setup;
+        r.near = self.testbed.proximity(s, home) <= Proximity::SameRack;
+    }
+
+    /// A slot freed at `slave`: serve the next queued request, fair
+    /// round-robin across tenants.
+    fn dequeue_next(&mut self, slave: u32, now: f64) {
+        let slots = self.cfg.service.slots_per_slave.max(1);
+        let s = slave as usize;
+        if self.slaves[s].active >= slots || self.slaves[s].queued == 0 {
+            return;
+        }
+        let tenants = self.slaves[s].queues.len();
+        for i in 1..=tenants {
+            let idx = (self.slaves[s].rr + i) % tenants;
+            if let Some(req) = self.slaves[s].queues[idx].pop_front() {
+                self.slaves[s].rr = idx;
+                self.slaves[s].queued -= 1;
+                self.start_service(req, slave, now);
+                return;
+            }
+        }
+    }
+
+    // ---------------------------------------------------- completion
+
+    fn flow_done(&mut self, fid: FlowId, now: f64) {
+        let Some(kind) = self.flows.remove(&fid) else {
+            return;
+        };
+        let FlowKind::Service { req } = kind else {
+            return; // background replication landed; bytes already counted
+        };
+        let (slave, tenant, write, key, near, latency_ms, client) = {
+            let r = &self.requests[req as usize];
+            (
+                r.slave,
+                r.tenant as usize,
+                r.write,
+                r.key,
+                r.near,
+                (now - r.arrived + r.overhead) * 1e3,
+                r.client,
+            )
+        };
+        self.slaves[slave as usize].active -= 1;
+        self.completed += 1;
+        self.outstanding -= 1;
+        self.t_completed[tenant] += 1;
+        let bytes = self.tspec.tenants[tenant].object_bytes;
+        self.t_bytes[tenant] += bytes;
+        self.served_bytes += bytes;
+        self.t_lat_ms[tenant].push(latency_ms);
+        self.near_served += near as u64;
+        self.makespan = self.makespan.max(now);
+
+        // A completed write replicates to the rack-diverse partner in
+        // the background (paper §4: replicas restored to target count).
+        if write {
+            let primary = self.catalog.primary[key as usize] as usize;
+            let partner = self.catalog.replica[key as usize] as usize;
+            let (src, dst) = if slave as usize == primary {
+                (primary, partner)
+            } else {
+                (partner, primary)
+            };
+            if !self.state.dead[dst] && src != dst {
+                self.start_transfer(
+                    src,
+                    dst,
+                    bytes,
+                    Some(src),
+                    Some(dst),
+                    FlowKind::Replicate {
+                        src: src as u32,
+                        dst: dst as u32,
+                    },
+                );
+                self.replica_bytes += bytes;
+            }
+        }
+
+        self.dequeue_next(slave, now);
+        self.client_think(client, now);
+    }
+
+    // ---------------------------------------------------- faults
+
+    fn handle_crash(&mut self, fault: usize, now: f64) {
+        self.state.consumed[fault] = true;
+        let FaultSpec::SlaveCrash { node, .. } = self.state.faults[fault] else {
+            return;
+        };
+        if self.state.dead[node] {
+            return;
+        }
+        self.state.crash(node);
+        // The overlay drops the node: later lookups route to its
+        // successor (metadata is replicated there in deployed Sector).
+        self.ring.leave(self.ring_ids[node]);
+
+        // Cancel transfers served by the dead slave and re-dispatch
+        // their requests; background replications touching it are
+        // simply dropped (the copy is lost with the node).
+        let doomed: Vec<(FlowId, Option<u32>)> = self
+            .flows
+            .iter()
+            .filter_map(|(&fid, kind)| match kind {
+                FlowKind::Service { req }
+                    if self.requests[*req as usize].slave as usize == node =>
+                {
+                    Some((fid, Some(*req)))
+                }
+                FlowKind::Replicate { src, dst }
+                    if *src as usize == node || *dst as usize == node =>
+                {
+                    Some((fid, None))
+                }
+                _ => None,
+            })
+            .collect();
+        for (fid, req) in doomed {
+            self.flows.remove(&fid);
+            self.net.cancel_flow(fid);
+            if let Some(req) = req {
+                self.reassignments += 1;
+                self.q.push_at(now, Ev::Dispatch { req });
+            }
+        }
+        // Re-dispatch everything queued at the dead slave.
+        let tenants = self.slaves[node].queues.len();
+        for tq in 0..tenants {
+            while let Some(req) = self.slaves[node].queues[tq].pop_front() {
+                self.reassignments += 1;
+                self.q.push_at(now, Ev::Dispatch { req });
+            }
+        }
+        self.slaves[node].queued = 0;
+        self.slaves[node].active = 0;
+    }
+
+    fn set_site_degrade(&mut self, site: usize, factor: f64) {
+        let cap = (self.testbed.wan_bps * factor).max(1.0);
+        let up = self.links.site_up[site];
+        let down = self.links.site_down[site];
+        self.net.set_link_capacity(up, cap);
+        self.net.set_link_capacity(down, cap);
+    }
+
+    // ---------------------------------------------------- main loop
+
+    fn run(&mut self) -> Result<(), String> {
+        self.schedule_faults();
+        self.schedule_arrivals();
+        let total = self.tspec.requests;
+        let mut batch: Vec<Ev> = Vec::new();
+        let mut now = 0.0f64;
+        loop {
+            if self.issued >= total && self.outstanding == 0 && self.net.active_flows() == 0 {
+                break;
+            }
+            let tq = self.q.peek_time();
+            let tn = self.net.next_completion().map(|(t, _)| t);
+            let next = match (tq, tn) {
+                (None, None) => break,
+                (Some(a), None) => a,
+                (None, Some(b)) => b,
+                (Some(a), Some(b)) => a.min(b),
+            };
+            now = next;
+            for fid in self.net.advance_to(next) {
+                self.events += 1;
+                self.flow_done(fid, now);
+            }
+            if self.q.peek_time() == Some(next) {
+                batch.clear();
+                self.q.pop_simultaneous(&mut batch);
+                for ev in batch.drain(..) {
+                    self.events += 1;
+                    match ev {
+                        Ev::Arrive => {
+                            if self.issued < total {
+                                let tenant = self.sample_tenant();
+                                let client =
+                                    self.rng.gen_range(self.tspec.clients as u64) as u32;
+                                self.issue_request(client, tenant, now);
+                                if let ArrivalProcess::Open { rps } = self.tspec.arrival {
+                                    let dt = self.rng.next_exp(rps);
+                                    self.q.push_at(now + dt, Ev::Arrive);
+                                }
+                            }
+                        }
+                        Ev::ClientWake { client } => {
+                            if self.issued < total {
+                                let tenant = self.tenant_of_client(client);
+                                self.issue_request(client, tenant, now);
+                            }
+                        }
+                        Ev::Dispatch { req } => self.dispatch(req, now),
+                        Ev::Crash { fault } => self.handle_crash(fault, now),
+                        Ev::DegradeStart { fault } => {
+                            if let FaultSpec::LinkDegrade { site, .. } = self.state.faults[fault]
+                            {
+                                self.state.count_once(fault);
+                                let f = self.state.degrade_factor_at(site, now);
+                                self.set_site_degrade(site, f);
+                            }
+                        }
+                        Ev::DegradeEnd { fault } => {
+                            self.state.consumed[fault] = true;
+                            if let FaultSpec::LinkDegrade { site, .. } = self.state.faults[fault]
+                            {
+                                let f = self.state.degrade_factor_at(site, now);
+                                self.set_site_degrade(site, f);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    // ---------------------------------------------------- reporting
+
+    fn into_report(mut self) -> ScenarioReport {
+        let span = self.makespan.max(1e-9);
+        let mut tenants = Vec::with_capacity(self.tspec.tenants.len());
+        for (i, t) in self.tspec.tenants.iter().enumerate() {
+            let lat = std::mem::take(&mut self.t_lat_ms[i]);
+            let (mean, p50, p95, p99) = match Summary::of(&lat) {
+                Some(s) => (s.mean, s.p50, s.p95, s.p99),
+                None => (0.0, 0.0, 0.0, 0.0),
+            };
+            tenants.push(TenantSlo {
+                name: t.name.clone(),
+                requests: self.t_requests[i],
+                completed: self.t_completed[i],
+                rejected: self.t_rejected[i],
+                unavailable: self.t_unavailable[i],
+                mean_ms: mean,
+                p50_ms: p50,
+                p95_ms: p95,
+                p99_ms: p99,
+                throughput_rps: self.t_completed[i] as f64 / span,
+                gbytes: self.t_bytes[i] / 1e9,
+            });
+        }
+        let meta_total = self.meta_hits + self.meta_misses;
+        let traffic = TrafficReport {
+            tenants,
+            requests: self.issued,
+            completed: self.completed,
+            rejected: self.rejected,
+            unavailable: self.unavailable,
+            makespan_secs: self.makespan,
+            meta_hit_rate: if meta_total == 0 {
+                0.0
+            } else {
+                self.meta_hits as f64 / meta_total as f64
+            },
+            conn_hit_rate: self.conn.hit_rate(),
+            reassignments: self.reassignments,
+            replica_gbytes: self.replica_bytes / 1e9,
+            near_fraction: if self.completed == 0 {
+                0.0
+            } else {
+                self.near_served as f64 / self.completed as f64
+            },
+            peak_queue: self.peak_queue,
+        };
+        ScenarioReport {
+            name: String::new(), // filled by run_traffic from the spec
+            workload: "traffic",
+            nodes: self.testbed.nodes(),
+            racks: self.testbed.racks(),
+            sites: self.testbed.site_names.len(),
+            makespan_secs: self.makespan,
+            events: self.events,
+            segments: self.completed as usize,
+            reassignments: self.reassignments,
+            locality_fraction: traffic.near_fraction,
+            shuffle_gbytes: self.served_bytes / 1e9,
+            faults_injected: self.state.injected,
+            nodes_crashed: self.state.crashes,
+            traffic: Some(traffic),
+        }
+    }
+}
+
+/// Deterministic client -> attachment-node assignment, spread by a
+/// per-client hash so populations cover the cloud evenly.
+fn client_node(seed: u64, client: u32, nodes: usize) -> u32 {
+    let mut sm = SplitMix64::new(seed ^ 0x5ec7_0a5e ^ client as u64);
+    (sm.next_u64() % nodes.max(1) as u64) as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::run_scenario;
+    use crate::service::TenantSpec;
+    use crate::topology::TopologySpec;
+
+    /// 8-node, 2-site traffic scenario small enough for test time.
+    fn small_spec(requests: u64, rps: f64) -> ScenarioSpec {
+        let mut spec = ScenarioSpec::paper_lan8();
+        spec.topology = TopologySpec::scale_out(2, 2, 2);
+        spec.name = "traffic-test".into();
+        spec.traffic = Some(TrafficSpec {
+            clients: 1000,
+            requests,
+            files: 64,
+            zipf_theta: 0.9,
+            arrival: ArrivalProcess::Open { rps },
+            tenants: vec![
+                TenantSpec {
+                    name: "web".into(),
+                    weight: 0.8,
+                    write_fraction: 0.1,
+                    object_bytes: 1.0e6,
+                },
+                TenantSpec {
+                    name: "bulk".into(),
+                    weight: 0.2,
+                    write_fraction: 0.5,
+                    object_bytes: 8.0e6,
+                },
+            ],
+        });
+        spec
+    }
+
+    fn traffic(r: &ScenarioReport) -> &TrafficReport {
+        r.traffic.as_ref().expect("traffic report present")
+    }
+
+    #[test]
+    fn open_loop_completes_and_is_deterministic() {
+        let spec = small_spec(2000, 400.0);
+        let a = run_scenario(&spec).unwrap();
+        let b = run_scenario(&spec).unwrap();
+        assert_eq!(a, b, "same spec, same report");
+        let t = traffic(&a);
+        assert_eq!(t.requests, 2000);
+        assert_eq!(t.completed + t.rejected + t.unavailable, 2000);
+        assert!(t.completed > 0);
+        assert_eq!(t.unavailable, 0, "no faults: nothing unavailable");
+        assert!(a.makespan_secs > 0.0);
+        for slo in &t.tenants {
+            if slo.completed > 0 {
+                assert!(slo.p50_ms > 0.0);
+                assert!(slo.p99_ms >= slo.p95_ms && slo.p95_ms >= slo.p50_ms);
+            }
+        }
+    }
+
+    #[test]
+    fn closed_loop_self_clocks_without_rejections() {
+        // 20 clients x ~75 requests each: enough re-visits for the
+        // per-session metadata cache to warm past its cold start.
+        let mut spec = small_spec(1500, 0.0);
+        spec.traffic.as_mut().unwrap().clients = 20;
+        spec.traffic.as_mut().unwrap().arrival = ArrivalProcess::Closed { think_secs: 0.02 };
+        let r = run_scenario(&spec).unwrap();
+        let t = traffic(&r);
+        assert_eq!(t.completed, 1500, "closed loop self-clocks: no shedding");
+        assert_eq!(t.rejected, 0);
+        assert!(
+            t.meta_hit_rate > 0.1,
+            "small population over a small catalog re-hits its metadata \
+             cache (got {})",
+            t.meta_hit_rate
+        );
+        assert!(t.conn_hit_rate > 0.5, "node-pair connections get reused");
+    }
+
+    #[test]
+    fn overload_sheds_but_serves_every_tenant() {
+        // 8 nodes cannot serve 50k rps of multi-MB objects: bounded
+        // queues must shed, and round-robin service must keep both
+        // tenants progressing.
+        let spec = small_spec(3000, 50_000.0);
+        let r = run_scenario(&spec).unwrap();
+        let t = traffic(&r);
+        assert!(t.rejected > 0, "overload must shed");
+        for slo in &t.tenants {
+            assert!(slo.completed > 0, "tenant {} starved", slo.name);
+        }
+        assert!(t.peak_queue > 0);
+    }
+
+    #[test]
+    fn crash_reroutes_to_surviving_replicas() {
+        let mut spec = small_spec(2000, 400.0);
+        spec.faults.push(FaultSpec::SlaveCrash {
+            at_secs: 1.0,
+            node: 1,
+        });
+        let a = run_scenario(&spec).unwrap();
+        let b = run_scenario(&spec).unwrap();
+        assert_eq!(a, b, "faulted runs stay deterministic");
+        let t = traffic(&a);
+        assert_eq!(a.nodes_crashed, 1);
+        assert!(t.reassignments > 0, "in-flight work must re-route");
+        assert_eq!(t.completed + t.rejected + t.unavailable, 2000);
+        assert!(
+            t.completed > 1500,
+            "rack-diverse replicas keep most data serveable ({})",
+            t.completed
+        );
+        assert_eq!(t.unavailable, 0, "one crash never exhausts the retry budget");
+    }
+
+    #[test]
+    fn brownout_raises_latency() {
+        let mut spec = small_spec(1500, 300.0);
+        let clean = run_scenario(&spec).unwrap();
+        spec.faults.push(FaultSpec::LinkDegrade {
+            at_secs: 0.0,
+            duration_secs: f64::INFINITY,
+            site: 0,
+            factor: 0.02,
+        });
+        let braked = run_scenario(&spec).unwrap();
+        let (c, d) = (traffic(&clean), traffic(&braked));
+        assert!(
+            d.tenants[0].p99_ms > c.tenants[0].p99_ms,
+            "choked uplink must show in p99: {} vs {}",
+            d.tenants[0].p99_ms,
+            c.tenants[0].p99_ms
+        );
+    }
+
+    #[test]
+    fn writes_replicate_in_background() {
+        let mut spec = small_spec(500, 200.0);
+        spec.traffic.as_mut().unwrap().tenants = vec![TenantSpec {
+            name: "ingest".into(),
+            weight: 1.0,
+            write_fraction: 1.0,
+            object_bytes: 2.0e6,
+        }];
+        let r = run_scenario(&spec).unwrap();
+        let t = traffic(&r);
+        assert!(t.completed > 0);
+        assert!(
+            t.replica_gbytes > 0.0,
+            "completed writes must copy to the partner replica"
+        );
+    }
+
+    #[test]
+    fn straggler_slows_its_slaves_service() {
+        let mut spec = small_spec(1500, 300.0);
+        let clean = run_scenario(&spec).unwrap();
+        for node in 0..4 {
+            spec.faults.push(FaultSpec::Straggler { node, factor: 0.1 });
+        }
+        let slowed = run_scenario(&spec).unwrap();
+        assert!(
+            traffic(&slowed).tenants[0].p99_ms > traffic(&clean).tenants[0].p99_ms,
+            "slow disks must show in tail latency"
+        );
+    }
+
+    #[test]
+    fn scenario_name_is_preserved() {
+        let spec = small_spec(200, 100.0);
+        let r = run_scenario(&spec).unwrap();
+        assert_eq!(r.name, "traffic-test");
+        assert_eq!(r.workload, "traffic");
+    }
+}

@@ -1,0 +1,301 @@
+//! Service layer — multi-tenant client traffic against the storage
+//! cloud (DESIGN.md §10).
+//!
+//! The paper evaluates Sector/Sphere as a *batch* system, but the
+//! companion papers describe Sector's production role: a storage cloud
+//! serving wide-area download traffic to many concurrent clients
+//! (arXiv:0808.1802) across a growing multi-site testbed
+//! (arXiv:0907.4810).  This module models that service side:
+//!
+//! * [`session::ClientSession`] — per-client state for the §4 access
+//!   flow: a metadata lookup through the real Chord ring (short-cut by
+//!   a TTL'd client-side metadata cache), replica selection preferring
+//!   same-node / same-rack / same-site sources, a (cached) data
+//!   connection, then a flow-level bulk transfer through `sim::netsim`.
+//! * [`TrafficSpec`] — the workload description: an open-loop (Poisson
+//!   arrival) or closed-loop (think-time) request stream over a Zipfian
+//!   key catalog, mixed across named tenants with per-tenant request
+//!   sizes and read/write ratios, from a population of up to millions
+//!   of simulated clients.
+//! * [`engine::run_traffic`] — the deterministic traffic engine:
+//!   per-slave admission control (bounded queues, spill to the next
+//!   replica, reject when every replica is saturated) with per-tenant
+//!   round-robin fair scheduling, composed with the scenario fault
+//!   plan (crashes re-route in-flight requests, WAN brown-outs squeeze
+//!   cross-site transfers, stragglers slow their slave's disks).
+//!
+//! The output is an SLO report ([`TrafficReport`]): per-tenant
+//! p50/p95/p99 latency, throughput, cache hit rates and
+//! rejected/unavailable counts, wired into [`crate::metrics`].
+//!
+//! Specs parse from the `[traffic]` block of a scenario TOML
+//! (`config/scenarios/traffic_*.toml`); the presence of that block
+//! switches `scenario::run_scenario` from the batch engine to this one.
+
+pub mod engine;
+pub mod session;
+
+pub use engine::{run_traffic, TenantSlo, TrafficReport};
+pub use session::ClientSession;
+
+use crate::config::Table;
+use crate::util::bytes::parse_bytes;
+
+/// One tenant sharing the cloud.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TenantSpec {
+    pub name: String,
+    /// Relative share of the request mix (normalized over all tenants).
+    pub weight: f64,
+    /// Fraction of this tenant's requests that are writes (uploads).
+    pub write_fraction: f64,
+    /// Bytes moved per request.
+    pub object_bytes: f64,
+}
+
+/// How requests arrive.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ArrivalProcess {
+    /// Open loop: a Poisson stream at `rps` aggregate requests/second,
+    /// each arrival drawn from the client population.  Load does not
+    /// slow down when the cloud does — the overload regime.
+    Open { rps: f64 },
+    /// Closed loop: every client cycles request -> response -> think
+    /// (exponential with mean `think_secs`).  Load self-clocks to the
+    /// cloud's service rate — the saturation regime.
+    Closed { think_secs: f64 },
+}
+
+/// A complete traffic workload description (the `[traffic]` block).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrafficSpec {
+    /// Simulated client population (10^5..10^6 is the design range).
+    pub clients: usize,
+    /// Total requests to drive before draining.
+    pub requests: u64,
+    /// Distinct objects in the catalog.
+    pub files: usize,
+    /// Zipf popularity exponent over the catalog (0 = uniform).
+    pub zipf_theta: f64,
+    pub arrival: ArrivalProcess,
+    pub tenants: Vec<TenantSpec>,
+}
+
+impl TrafficSpec {
+    /// Parse the `[traffic]` block (plus `[traffic.tenants.<name>]`
+    /// subsections) of a scenario TOML.  Returns `None` when the
+    /// document has no traffic block at all.  Unknown fields are an
+    /// error — a typo'd key must not silently become a default.
+    pub fn from_table(t: &Table) -> Result<Option<TrafficSpec>, String> {
+        if t.section_keys("traffic").next().is_none() {
+            return Ok(None);
+        }
+        t.check_known_keys(
+            "traffic",
+            &[
+                "clients",
+                "requests",
+                "files",
+                "zipf_theta",
+                "arrival",
+                "rps",
+                "think_secs",
+            ],
+            &["tenants"],
+        )?;
+        let arrival = match t.str_or("traffic.arrival", "open") {
+            "open" => ArrivalProcess::Open {
+                rps: t.float_or("traffic.rps", 1000.0),
+            },
+            "closed" => ArrivalProcess::Closed {
+                think_secs: t.float_or("traffic.think_secs", 1.0),
+            },
+            other => {
+                return Err(format!(
+                    "traffic.arrival: unknown process {other:?} (open|closed)"
+                ))
+            }
+        };
+        let mut tenants = Vec::new();
+        for label in t.subsections("traffic.tenants") {
+            let k = |field: &str| format!("traffic.tenants.{label}.{field}");
+            t.check_known_keys(
+                &format!("traffic.tenants.{label}"),
+                &["weight", "write_fraction", "object_bytes"],
+                &[],
+            )?;
+            tenants.push(TenantSpec {
+                name: label.clone(),
+                weight: t.float_or(&k("weight"), 1.0),
+                write_fraction: t.float_or(&k("write_fraction"), 0.0),
+                object_bytes: parse_bytes(t.str_or(&k("object_bytes"), "4MB"))? as f64,
+            });
+        }
+        if tenants.is_empty() {
+            tenants.push(TenantSpec::default_tenant());
+        }
+        Ok(Some(TrafficSpec {
+            clients: t.int_or("traffic.clients", 100_000).max(1) as usize,
+            requests: t.int_or("traffic.requests", 100_000).max(1) as u64,
+            files: t.int_or("traffic.files", 65_536).max(1) as usize,
+            zipf_theta: t.float_or("traffic.zipf_theta", 0.9),
+            arrival,
+            tenants,
+        }))
+    }
+
+    /// Sanity-check a spec before running it.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.clients == 0 {
+            return Err("traffic: clients must be >= 1".into());
+        }
+        if self.requests == 0 {
+            return Err("traffic: requests must be >= 1".into());
+        }
+        if self.files == 0 {
+            return Err("traffic: files must be >= 1".into());
+        }
+        if self.tenants.is_empty() {
+            return Err("traffic: at least one tenant required".into());
+        }
+        let total: f64 = self.tenants.iter().map(|t| t.weight).sum();
+        if !(total > 0.0) {
+            return Err("traffic: tenant weights must sum to > 0".into());
+        }
+        for t in &self.tenants {
+            if !(t.weight >= 0.0) {
+                return Err(format!("tenant {:?}: weight must be >= 0", t.name));
+            }
+            if !(0.0..=1.0).contains(&t.write_fraction) {
+                return Err(format!(
+                    "tenant {:?}: write_fraction must be in [0, 1]",
+                    t.name
+                ));
+            }
+            if !(t.object_bytes > 0.0) {
+                return Err(format!("tenant {:?}: object_bytes must be > 0", t.name));
+            }
+        }
+        if !(self.zipf_theta >= 0.0) {
+            return Err("traffic: zipf_theta must be >= 0".into());
+        }
+        match self.arrival {
+            ArrivalProcess::Open { rps } => {
+                if !(rps > 0.0) {
+                    return Err("traffic: open-loop rps must be > 0".into());
+                }
+            }
+            ArrivalProcess::Closed { think_secs } => {
+                if !(think_secs >= 0.0) {
+                    return Err("traffic: think_secs must be >= 0".into());
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl TenantSpec {
+    /// The implicit single tenant when a `[traffic]` block names none.
+    pub fn default_tenant() -> TenantSpec {
+        TenantSpec {
+            name: "default".into(),
+            weight: 1.0,
+            write_fraction: 0.1,
+            object_bytes: 4.0e6,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_traffic_block() {
+        let t = Table::parse(
+            r#"
+            [traffic]
+            clients = 1000
+            requests = 5000
+            files = 256
+            zipf_theta = 0.8
+            arrival = "open"
+            rps = 500.0
+            [traffic.tenants.fast]
+            weight = 0.75
+            write_fraction = 0.1
+            object_bytes = "1MB"
+            [traffic.tenants.bulk]
+            weight = 0.25
+            object_bytes = "16MB"
+            "#,
+        )
+        .unwrap();
+        let spec = TrafficSpec::from_table(&t).unwrap().unwrap();
+        assert_eq!(spec.clients, 1000);
+        assert_eq!(spec.requests, 5000);
+        assert_eq!(spec.tenants.len(), 2);
+        assert_eq!(spec.tenants[0].name, "bulk", "subsections sort by name");
+        assert!((spec.tenants[1].object_bytes - 1.0e6).abs() < 1.0);
+        assert_eq!(spec.arrival, ArrivalProcess::Open { rps: 500.0 });
+        spec.validate().unwrap();
+    }
+
+    #[test]
+    fn absent_block_is_none() {
+        let t = Table::parse("[workload]\nkind = \"terasort\"").unwrap();
+        assert_eq!(TrafficSpec::from_table(&t).unwrap(), None);
+    }
+
+    #[test]
+    fn default_tenant_fills_in() {
+        let t = Table::parse("[traffic]\nrequests = 10").unwrap();
+        let spec = TrafficSpec::from_table(&t).unwrap().unwrap();
+        assert_eq!(spec.tenants.len(), 1);
+        assert_eq!(spec.tenants[0].name, "default");
+        spec.validate().unwrap();
+    }
+
+    #[test]
+    fn rejects_typos_and_bad_values() {
+        let typo = Table::parse("[traffic]\nrequets = 10").unwrap();
+        let err = TrafficSpec::from_table(&typo).unwrap_err();
+        assert!(err.contains("requets"), "{err}");
+        let tenant_typo =
+            Table::parse("[traffic]\nrequests = 10\n[traffic.tenants.a]\nwieght = 1.0").unwrap();
+        let err = TrafficSpec::from_table(&tenant_typo).unwrap_err();
+        assert!(err.contains("wieght"), "{err}");
+        let bad_arrival = Table::parse("[traffic]\narrival = \"psychic\"").unwrap();
+        assert!(TrafficSpec::from_table(&bad_arrival).is_err());
+
+        let t = Table::parse("[traffic]\nrequests = 10").unwrap();
+        let mut spec = TrafficSpec::from_table(&t).unwrap().unwrap();
+        spec.tenants[0].write_fraction = 1.5;
+        assert!(spec.validate().is_err());
+        spec.tenants[0].write_fraction = 0.5;
+        spec.tenants[0].object_bytes = 0.0;
+        assert!(spec.validate().is_err());
+        spec.tenants[0].object_bytes = 1.0e6;
+        spec.arrival = ArrivalProcess::Open { rps: 0.0 };
+        assert!(spec.validate().is_err());
+        // Zero-sized populations must fail validation, not panic in
+        // the engine (the CLI writes raw values past the parse clamp).
+        spec.arrival = ArrivalProcess::Open { rps: 100.0 };
+        spec.clients = 0;
+        assert!(spec.validate().is_err());
+        spec.clients = 10;
+        spec.requests = 0;
+        assert!(spec.validate().is_err());
+        spec.requests = 10;
+        spec.files = 0;
+        assert!(spec.validate().is_err());
+    }
+
+    #[test]
+    fn closed_loop_parses() {
+        let t = Table::parse("[traffic]\narrival = \"closed\"\nthink_secs = 2.0").unwrap();
+        let spec = TrafficSpec::from_table(&t).unwrap().unwrap();
+        assert_eq!(spec.arrival, ArrivalProcess::Closed { think_secs: 2.0 });
+    }
+}

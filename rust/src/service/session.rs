@@ -1,0 +1,123 @@
+//! Client sessions — per-client state for the §4 access flow.
+//!
+//! Each simulated client holds the two things the paper gives a Sector
+//! client: a small TTL'd cache of recently resolved metadata (step 2
+//! short-circuit: a repeat request needs no Chord lookup while the
+//! entry is fresh) and a preference order over a file's replicas
+//! ("the routing layer can use information involving network bandwidth
+//! and latency", §4 — modeled as same-node > same-rack > same-site >
+//! anywhere).  Sessions are deliberately tiny: the engine materializes
+//! up to a million of them.
+
+use crate::topology::Testbed;
+
+/// One simulated client.
+#[derive(Clone, Debug)]
+pub struct ClientSession {
+    pub id: u32,
+    /// Attachment node: the edge server the client connects through.
+    /// Stays a valid network endpoint even if the node's storage role
+    /// crashes (the NIC and switch ports outlive the slave process).
+    pub node: u32,
+    /// Metadata cache: (key, expires_at) in LRU order, most recent
+    /// last.  Lazily allocated — idle members of a million-client
+    /// population cost only the struct itself.
+    meta: Vec<(u64, f64)>,
+}
+
+impl ClientSession {
+    pub fn new(id: u32, node: u32) -> ClientSession {
+        ClientSession {
+            id,
+            node,
+            meta: Vec::new(),
+        }
+    }
+
+    /// §4 step 2 short-circuit: does this session hold a fresh metadata
+    /// entry for `key` at time `now`?  A hit refreshes the entry's LRU
+    /// position but NOT its expiry — cached metadata goes stale on the
+    /// original resolution's clock.
+    pub fn meta_lookup(&mut self, key: u64, now: f64) -> bool {
+        if let Some(pos) = self.meta.iter().position(|&(k, _)| k == key) {
+            if self.meta[pos].1 > now {
+                let entry = self.meta.remove(pos);
+                self.meta.push(entry);
+                return true;
+            }
+            self.meta.remove(pos);
+        }
+        false
+    }
+
+    /// Record a resolved lookup, evicting the least-recently-used entry
+    /// beyond `capacity`.
+    pub fn meta_insert(&mut self, key: u64, expires_at: f64, capacity: usize) {
+        if capacity == 0 {
+            return;
+        }
+        self.meta.retain(|&(k, _)| k != key);
+        while self.meta.len() >= capacity {
+            self.meta.remove(0);
+        }
+        self.meta.push((key, expires_at));
+    }
+
+    pub fn meta_len(&self) -> usize {
+        self.meta.len()
+    }
+}
+
+/// Order candidate replicas by the client's network preference:
+/// same node, then same rack, then same site, then anywhere — ties
+/// broken by the lower node id so the order is deterministic.
+pub fn rank_replicas(testbed: &Testbed, home: usize, replicas: &mut [u32]) {
+    replicas.sort_by_key(|&r| (testbed.proximity(home, r as usize), r));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::TopologySpec;
+
+    #[test]
+    fn meta_cache_hits_within_ttl() {
+        let mut s = ClientSession::new(0, 3);
+        assert!(!s.meta_lookup(42, 0.0), "cold cache misses");
+        s.meta_insert(42, 10.0, 4);
+        assert!(s.meta_lookup(42, 5.0));
+        assert!(!s.meta_lookup(42, 10.0), "expiry is exclusive");
+        assert_eq!(s.meta_len(), 0, "expired entry is dropped on lookup");
+    }
+
+    #[test]
+    fn meta_cache_is_lru_bounded() {
+        let mut s = ClientSession::new(0, 0);
+        for k in 0..4u64 {
+            s.meta_insert(k, 100.0, 2);
+        }
+        assert_eq!(s.meta_len(), 2);
+        assert!(!s.meta_lookup(0, 1.0), "old entries evicted");
+        assert!(s.meta_lookup(2, 1.0));
+        assert!(s.meta_lookup(3, 1.0));
+        // A hit refreshes recency: inserting one more evicts key 3,
+        // not the just-touched key 2.
+        s.meta_lookup(2, 1.0);
+        s.meta_insert(9, 100.0, 2);
+        assert!(s.meta_lookup(2, 1.0));
+        assert!(!s.meta_lookup(3, 1.0));
+    }
+
+    #[test]
+    fn replica_ranking_prefers_proximity() {
+        // scale_out(2, 2, 2): nodes 0-1 rack 0, 2-3 rack 1 (site 0),
+        // 4-7 site 1.
+        let t = TopologySpec::scale_out(2, 2, 2).generate().unwrap();
+        let mut replicas = vec![6, 2, 0, 1];
+        rank_replicas(&t, 0, &mut replicas);
+        assert_eq!(replicas, vec![0, 1, 2, 6], "local, rack, site, wan");
+        let mut replicas = vec![5, 3];
+        rank_replicas(&t, 4, &mut replicas);
+        assert_eq!(replicas, vec![5, 3], "same-site beats cross-site");
+    }
+}

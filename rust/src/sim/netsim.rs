@@ -54,6 +54,13 @@ pub struct NetSim {
     next_flow: u64,
     now: f64,
     rates_dirty: bool,
+    /// Memoized `next_completion` answer.  Completion times are
+    /// absolute and rates only change when the flow/link set does, so
+    /// the answer stays valid across `advance_to` calls that complete
+    /// nothing — which is every event-loop iteration driven by a
+    /// non-network event (the traffic engine's arrivals/dispatches).
+    /// `None` = stale; recomputed on demand.
+    completion_cache: Option<Option<(f64, FlowId)>>,
     /// Total bytes delivered, for throughput reporting.
     pub delivered_bytes: f64,
 }
@@ -88,12 +95,23 @@ impl NetSim {
         self.links[l.0].capacity
     }
 
+    /// Number of links added so far (ids are dense: 0..link_count()).
+    pub fn link_count(&self) -> usize {
+        self.links.len()
+    }
+
     /// Change a link's capacity in place (fault injection: degradation
     /// and repair). Active flows are re-allocated on the next query.
     pub fn set_link_capacity(&mut self, l: LinkId, capacity_bytes_per_sec: f64) {
         assert!(capacity_bytes_per_sec > 0.0);
         self.links[l.0].capacity = capacity_bytes_per_sec;
+        self.mark_dirty();
+    }
+
+    /// Rates (and therefore completion times) must be recomputed.
+    fn mark_dirty(&mut self) {
         self.rates_dirty = true;
+        self.completion_cache = None;
     }
 
     pub fn active_flows(&self) -> usize {
@@ -120,7 +138,7 @@ impl NetSim {
                 rate: 0.0,
             },
         );
-        self.rates_dirty = true;
+        self.mark_dirty();
         id
     }
 
@@ -246,14 +264,18 @@ impl NetSim {
     /// re-send it elsewhere.
     pub fn cancel_flow(&mut self, id: FlowId) -> f64 {
         let f = self.flows.remove(&id).expect("cancel of unknown flow");
-        self.rates_dirty = true;
+        self.mark_dirty();
         f.remaining
     }
 
     /// (time, flow) of the earliest completion among active flows, given
-    /// current rates — or None if no flows are active.
+    /// current rates — or None if no flows are active.  Memoized: the
+    /// linear scan only reruns after the flow/link set changed.
     pub fn next_completion(&mut self) -> Option<(f64, FlowId)> {
         self.ensure_rates();
+        if let Some(cached) = self.completion_cache {
+            return cached;
+        }
         let mut best: Option<(f64, FlowId)> = None;
         for (&id, f) in &self.flows {
             if f.rate <= 0.0 {
@@ -264,6 +286,7 @@ impl NetSim {
                 best = Some((t, id));
             }
         }
+        self.completion_cache = Some(best);
         best
     }
 
@@ -285,7 +308,7 @@ impl NetSim {
             }
         }
         if !done.is_empty() {
-            self.rates_dirty = true;
+            self.mark_dirty();
             for id in &done {
                 self.flows.remove(id);
             }
@@ -427,6 +450,28 @@ mod tests {
         // survivor reclaims the full link
         assert!((net.flow_rate(b) - 100.0).abs() < 1e-9);
         assert_eq!(net.active_flows(), 1);
+    }
+
+    #[test]
+    fn next_completion_memo_survives_idle_advances_and_invalidates() {
+        let mut net = NetSim::new();
+        let l = net.add_link(100.0);
+        let f = net.start_flow(&[l], 1000.0, 1e9); // completes at t=10
+        let first = net.next_completion().unwrap();
+        assert_eq!(first.1, f);
+        // Advancing without completing anything must not change the
+        // answer (this is the memoized path).
+        net.advance_to(3.0);
+        assert_eq!(net.next_completion().unwrap(), first);
+        // A new flow invalidates: it shares the link, finishes first.
+        let short = net.start_flow(&[l], 10.0, 1e9);
+        let (t, id) = net.next_completion().unwrap();
+        assert_eq!(id, short);
+        assert!((t - 3.2).abs() < 1e-9, "50 B/s share, 10 bytes: {t}");
+        // Capacity changes invalidate too.
+        net.set_link_capacity(l, 50.0);
+        let (t, _) = net.next_completion().unwrap();
+        assert!((t - 3.4).abs() < 1e-9, "25 B/s share after degrade: {t}");
     }
 
     #[test]

@@ -295,6 +295,40 @@ pub struct Testbed {
     pub intra_rack_rtt_secs: f64,
 }
 
+/// Network distance classes between two nodes, nearest first.  The
+/// derive order makes `Ord` sort by preference, which is what replica
+/// selection in the service layer keys on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Proximity {
+    Local,
+    SameRack,
+    SameSite,
+    Wan,
+}
+
+/// Rack-diverse replica partner: the same-offset node in the next rack
+/// (wrapping over the global rack list), falling back to the next node
+/// when the testbed has a single rack.  Shared by the scenario engine's
+/// data placement and the service layer's catalog.
+pub fn rack_diverse_replica(testbed: &Testbed, node: usize) -> usize {
+    let n = testbed.nodes();
+    if testbed.racks() <= 1 {
+        return (node + 1) % n;
+    }
+    let rack = testbed.node_rack[node];
+    let members: Vec<usize> = (0..n).filter(|&x| testbed.node_rack[x] == rack).collect();
+    let offset = members.iter().position(|&x| x == node).unwrap_or(0);
+    let next_rack = (rack + 1) % testbed.racks();
+    let next_members: Vec<usize> = (0..n)
+        .filter(|&x| testbed.node_rack[x] == next_rack)
+        .collect();
+    if next_members.is_empty() {
+        (node + 1) % n
+    } else {
+        next_members[offset % next_members.len()]
+    }
+}
+
 /// Link handles produced by `build_network`.
 #[derive(Clone, Debug)]
 pub struct NetLinks {
@@ -348,6 +382,19 @@ impl Testbed {
     /// Number of racks belonging to `site`.
     pub fn racks_in_site(&self, site: usize) -> usize {
         self.rack_site.iter().filter(|&&s| s == site).count()
+    }
+
+    /// Network distance class between two nodes.
+    pub fn proximity(&self, a: usize, b: usize) -> Proximity {
+        if a == b {
+            Proximity::Local
+        } else if self.node_rack[a] == self.node_rack[b] {
+            Proximity::SameRack
+        } else if self.node_site[a] == self.node_site[b] {
+            Proximity::SameSite
+        } else {
+            Proximity::Wan
+        }
     }
 
     /// RTT between two nodes, seconds.
@@ -624,6 +671,33 @@ mod tests {
         assert!(TopologySpec::from_table(&t).is_err());
         let t = Table::parse("[topology]\npreset = \"paper_lan\"\nnodes = 9").unwrap();
         assert!(TopologySpec::from_table(&t).is_err());
+    }
+
+    #[test]
+    fn proximity_classes_and_ordering() {
+        let t = TopologySpec::scale_out(2, 2, 2).generate().unwrap();
+        assert_eq!(t.proximity(0, 0), Proximity::Local);
+        assert_eq!(t.proximity(0, 1), Proximity::SameRack);
+        assert_eq!(t.proximity(0, 2), Proximity::SameSite);
+        assert_eq!(t.proximity(0, 4), Proximity::Wan);
+        assert!(Proximity::Local < Proximity::SameRack);
+        assert!(Proximity::SameRack < Proximity::SameSite);
+        assert!(Proximity::SameSite < Proximity::Wan);
+    }
+
+    #[test]
+    fn rack_diverse_replica_crosses_racks() {
+        let t = TopologySpec::scale_out(2, 2, 4).generate().unwrap();
+        for node in 0..t.nodes() {
+            let r = rack_diverse_replica(&t, node);
+            assert_ne!(t.node_rack[node], t.node_rack[r], "node {node} -> {r}");
+        }
+        let single = TopologySpec::paper_lan(4).generate().unwrap();
+        assert_eq!(
+            rack_diverse_replica(&single, 3),
+            0,
+            "single rack wraps to next node"
+        );
     }
 
     #[test]

@@ -80,10 +80,15 @@ impl ConnectionCache {
         hit
     }
 
-    fn evict_if_full(&mut self, now: f64) {
-        // Drop expired entries first, then LRU if still at capacity.
+    /// Drop every entry idle past the timeout as of `now`.
+    pub fn purge_expired(&mut self, now: f64) {
         self.entries
             .retain(|_, e| now - e.last_used <= self.idle_timeout);
+    }
+
+    fn evict_if_full(&mut self, now: f64) {
+        // Drop expired entries first, then LRU if still at capacity.
+        self.purge_expired(now);
         while self.entries.len() >= self.capacity {
             let lru = self
                 .entries
@@ -100,7 +105,12 @@ impl ConnectionCache {
         }
     }
 
-    pub fn live_connections(&self) -> usize {
+    /// Connections still live at time `now`.  Expired entries are
+    /// purged first: they used to linger until the next miss-path
+    /// eviction, so this over-reported between misses (a node's FD
+    /// budget looked consumed by connections that were already gone).
+    pub fn live_connections(&mut self, now: f64) -> usize {
+        self.purge_expired(now);
         self.entries.len()
     }
 
@@ -143,9 +153,22 @@ mod tests {
         c.acquire(0.0, 1, 10);
         c.acquire(1.0, 1, 11);
         c.acquire(2.0, 1, 12); // evicts (1,10)
-        assert!(c.live_connections() <= 2);
+        assert!(c.live_connections(2.0) <= 2);
         assert!(!c.acquire(3.0, 1, 10), "evicted pair must reconnect");
         assert!(c.acquire(4.0, 1, 12));
+    }
+
+    #[test]
+    fn live_connections_purges_expired_entries() {
+        // Regression: expired entries were only purged on the miss
+        // path, so live_connections over-reported between misses.
+        let mut c = ConnectionCache::new(8, 10.0);
+        c.acquire(0.0, 1, 2);
+        c.acquire(1.0, 3, 4);
+        assert_eq!(c.live_connections(1.0), 2);
+        assert_eq!(c.live_connections(50.0), 0, "both idled out");
+        assert!(!c.acquire(51.0, 1, 2), "expired pair must reconnect");
+        assert_eq!(c.live_connections(51.0), 1);
     }
 
     #[test]

@@ -53,6 +53,7 @@ pub struct Summary {
     pub max: f64,
     pub p50: f64,
     pub p90: f64,
+    pub p95: f64,
     pub p99: f64,
 }
 
@@ -75,6 +76,7 @@ impl Summary {
             max: *sorted.last().unwrap(),
             p50: percentile_sorted(&sorted, 0.50),
             p90: percentile_sorted(&sorted, 0.90),
+            p95: percentile_sorted(&sorted, 0.95),
             p99: percentile_sorted(&sorted, 0.99),
         })
     }
@@ -148,6 +150,7 @@ mod tests {
         let s = Summary::of(&[5.0; 10]).unwrap();
         assert_eq!(s.mean, 5.0);
         assert_eq!(s.std_dev, 0.0);
+        assert_eq!(s.p95, 5.0);
         assert_eq!(s.p99, 5.0);
         assert!(Summary::of(&[]).is_none());
     }
