@@ -30,6 +30,7 @@ fn main() {
         load_or(ScenarioSpec::paper_lan8(), "paper_lan8.toml"),
         load_or(ScenarioSpec::scale128(), "scale128.toml"),
         load_or(ScenarioSpec::traffic_scale128(), "traffic_scale128.toml"),
+        load_or(ScenarioSpec::colocate_scale128(), "colocate_scale128.toml"),
     ];
     println!(
         "{:<28} {:>6} {:>6} {:>12} {:>9} {:>9} {:>7} {:>7}",
@@ -58,6 +59,12 @@ fn main() {
                     slo.name, slo.p50_ms, slo.p95_ms, slo.p99_ms, slo.completed, slo.rejected
                 );
             }
+        }
+        if let Some(co) = &a.colocation {
+            println!(
+                "  `- job done in {:>8.1} s; speculation {} launched / {} won",
+                co.job_makespan_secs, a.speculative_launched, a.speculative_won
+            );
         }
     }
     println!("\nall scenarios completed; each ran twice with byte-identical reports");

@@ -1,0 +1,113 @@
+//! Colocation engine gate (DESIGN.md §11): the flagship colocated
+//! preset — 128-node Terasort sharing disks and WAN tiers with a
+//! three-tenant client stream through the scale128-class fault plan —
+//! run twice for the determinism contract (byte-identical serialized
+//! reports), then once with speculation disabled to gate the
+//! acceptance property: under the straggler fault plan, speculative
+//! re-execution must REDUCE the terasort makespan.
+//!
+//!     cargo bench --bench bench_colocate
+//!
+//! Emits BENCH_colocate.json at the repo root (wall clock, job
+//! makespan with/without speculation, speculation counters, per-tenant
+//! p99 and colocation deltas).
+
+use sector_sphere::bench::{time_fn, BenchJson};
+use sector_sphere::scenario::{run_scenario, ScenarioSpec};
+
+fn main() {
+    let mut json = BenchJson::new("colocate");
+    json.text("bench", "colocate");
+
+    // Determinism gate: same spec, byte-identical serialized report.
+    let spec = ScenarioSpec::colocate_scale128();
+    let a = run_scenario(&spec).expect("colocate_scale128 runs");
+    let b = run_scenario(&spec).expect("colocate_scale128 reruns");
+    assert_eq!(a, b, "colocate_scale128 must be deterministic");
+    assert_eq!(
+        format!("{a:?}"),
+        format!("{b:?}"),
+        "serialized reports must be byte-identical"
+    );
+    let t = time_fn("colocate_scale128", 1, 3, || run_scenario(&spec).unwrap());
+
+    let co = a.colocation.as_ref().expect("joint view present");
+    let traffic = a.traffic.as_ref().expect("SLO table present");
+    println!(
+        "colocate_scale128: job {} in {:.1} simulated s, traffic {} reqs in {:.1} s \
+         ({:.0} ms wall)",
+        a.workload,
+        co.job_makespan_secs,
+        traffic.requests,
+        traffic.makespan_secs,
+        t.secs.mean * 1e3
+    );
+    for (name, end) in &co.stage_ends {
+        println!("  stage {name:<18} ended {end:>8.1} s");
+    }
+    for slo in &traffic.tenants {
+        println!(
+            "  {:<12} p50 {:>8.1} ms  p95 {:>8.1} ms  p99 {:>8.1} ms  {:>7.1} rps",
+            slo.name, slo.p50_ms, slo.p95_ms, slo.p99_ms, slo.throughput_rps
+        );
+        json.num(&format!("p50_ms_{}", slo.name), slo.p50_ms)
+            .num(&format!("p95_ms_{}", slo.name), slo.p95_ms)
+            .num(&format!("p99_ms_{}", slo.name), slo.p99_ms);
+    }
+    for d in &co.tenant_deltas {
+        println!(
+            "  colo cost {:<12} p50 {:+8.1} ms  p95 {:+8.1} ms  p99 {:+8.1} ms",
+            d.name, d.p50_delta_ms, d.p95_delta_ms, d.p99_delta_ms
+        );
+        json.num(&format!("p99_delta_ms_{}", d.name), d.p99_delta_ms);
+    }
+    json.num("wall_ms", t.secs.mean * 1e3)
+        .num("wall_p99_ms", t.secs.p99 * 1e3)
+        .num("job_makespan_secs", co.job_makespan_secs)
+        .num("traffic_makespan_secs", traffic.makespan_secs)
+        .int("events", a.events)
+        .int("segments", a.segments as u64)
+        .int("requests", traffic.requests)
+        .int("completed", traffic.completed)
+        .int("rejected", traffic.rejected)
+        .int("unavailable", traffic.unavailable)
+        .int("reassignments", a.reassignments)
+        .int("speculative_launched", a.speculative_launched)
+        .int("speculative_won", a.speculative_won);
+
+    // Acceptance gate: with the straggler fault plan enabled,
+    // speculation must cut the terasort makespan vs speculative=off.
+    let mut off_spec = ScenarioSpec::colocate_scale128();
+    off_spec.colocation.speculative = false;
+    let off_a = run_scenario(&off_spec).expect("speculation-off run");
+    let off_b = run_scenario(&off_spec).expect("speculation-off rerun");
+    assert_eq!(off_a, off_b, "speculation-off runs stay deterministic");
+    let off_co = off_a.colocation.as_ref().expect("joint view present");
+    println!(
+        "speculation: {} launched, {} won; job makespan {:.1} s (on) vs {:.1} s (off)",
+        a.speculative_launched,
+        a.speculative_won,
+        co.job_makespan_secs,
+        off_co.job_makespan_secs
+    );
+    assert!(a.speculative_launched > 0, "the 4x straggler must trigger backups");
+    assert!(a.speculative_won > 0, "backups must win against the 4x straggler");
+    assert_eq!(off_a.speculative_launched, 0, "knob off means no backups");
+    assert!(
+        co.job_makespan_secs < off_co.job_makespan_secs,
+        "speculative execution must reduce terasort makespan under the \
+         straggler plan: {:.2} s (on) vs {:.2} s (off)",
+        co.job_makespan_secs,
+        off_co.job_makespan_secs
+    );
+    json.num("job_makespan_secs_spec_off", off_co.job_makespan_secs)
+        .num(
+            "speculation_makespan_gain_secs",
+            off_co.job_makespan_secs - co.job_makespan_secs,
+        );
+
+    match json.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("BENCH_colocate.json not written: {e}"),
+    }
+}

@@ -16,7 +16,7 @@ fn spec_for(sites: usize, racks_per_site: usize, nodes_per_rack: usize) -> Scena
     let mut spec = ScenarioSpec::paper_lan8();
     spec.topology = TopologySpec::scale_out(sites, racks_per_site, nodes_per_rack);
     spec.name = format!("scale-{}", spec.topology.nodes());
-    spec.workload.bytes_per_node = 1.0 * GB as f64;
+    spec.workload.as_mut().unwrap().bytes_per_node = 1.0 * GB as f64;
     spec
 }
 

@@ -182,6 +182,10 @@ pub struct SphereParams {
     pub io_efficiency: f64,
     /// Enable locality-aware segment assignment (ablation lever).
     pub locality_scheduling: bool,
+    /// Segment retry budget (assignments + speculative backups); a
+    /// segment exhausting it is an explicit job failure (§3.2 fault
+    /// handling).
+    pub max_attempts: u32,
 }
 
 impl Default for SphereParams {
@@ -193,6 +197,7 @@ impl Default for SphereParams {
             io_overlap: 0.55,
             io_efficiency: 0.92,
             locality_scheduling: true,
+            max_attempts: 4,
         }
     }
 }
@@ -322,6 +327,8 @@ impl SimConfig {
             t.int_or("sphere.spes_per_node", self.sphere.spes_per_node as i64) as usize;
         self.sphere.locality_scheduling =
             t.bool_or("sphere.locality_scheduling", self.sphere.locality_scheduling);
+        self.sphere.max_attempts =
+            t.int_or("sphere.max_attempts", self.sphere.max_attempts as i64).max(1) as u32;
         if let Some(v) = t.get("hadoop.block") {
             self.hadoop.block_bytes =
                 parse_bytes(v.as_str().ok_or("hadoop.block must be a string")?)?;
@@ -411,6 +418,18 @@ mod tests {
         assert_eq!(c.service.queue_capacity, 16);
         assert_eq!(c.service.meta_ttl_secs, 5.0);
         assert_eq!(c.service.meta_cache_entries, 8, "untouched fields keep defaults");
+    }
+
+    #[test]
+    fn max_attempts_overrides_and_clamps() {
+        assert_eq!(SimConfig::lan_default().sphere.max_attempts, 4);
+        let t = Table::parse("[sphere]\nmax_attempts = 2").unwrap();
+        let c = SimConfig::lan_default().apply_table(&t).unwrap();
+        assert_eq!(c.sphere.max_attempts, 2);
+        // Zero would make every segment an instant job failure.
+        let t = Table::parse("[sphere]\nmax_attempts = 0").unwrap();
+        let c = SimConfig::lan_default().apply_table(&t).unwrap();
+        assert_eq!(c.sphere.max_attempts, 1, "clamped to >= 1");
     }
 
     #[test]

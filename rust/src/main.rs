@@ -31,7 +31,7 @@ fn flag_spec() -> Vec<FlagSpec> {
         FlagSpec { name: "windows", help: "angle time windows", takes_value: true },
         FlagSpec { name: "seed", help: "deterministic seed", takes_value: true },
         FlagSpec { name: "file", help: "scenario TOML (see config/scenarios/)", takes_value: true },
-        FlagSpec { name: "preset", help: "scenario preset: paper_wan6|paper_lan8|scale128|traffic_scale128", takes_value: true },
+        FlagSpec { name: "preset", help: "scenario preset: paper_wan6|paper_lan8|scale128|traffic_scale128|colocate_scale128", takes_value: true },
         FlagSpec { name: "requests", help: "traffic: total requests to drive", takes_value: true },
         FlagSpec { name: "clients", help: "traffic: simulated client population", takes_value: true },
         FlagSpec { name: "rps", help: "traffic: open-loop arrival rate", takes_value: true },
@@ -165,9 +165,11 @@ fn load_scenario_spec(
             "paper_lan8" => Ok(ScenarioSpec::paper_lan8()),
             "scale128" => Ok(ScenarioSpec::scale128()),
             "traffic_scale128" => Ok(ScenarioSpec::traffic_scale128()),
+            "colocate_scale128" => Ok(ScenarioSpec::colocate_scale128()),
             other => Err(format!(
                 "unknown preset {other:?} \
-                 (paper_wan6|paper_lan8|scale128|traffic_scale128) — or pass --file"
+                 (paper_wan6|paper_lan8|scale128|traffic_scale128|colocate_scale128) \
+                 — or pass --file"
             )),
         },
     }
@@ -219,6 +221,30 @@ fn print_scenario_report(r: &sector_sphere::scenario::ScenarioReport) {
         println!("  segments       {}", r.segments);
         println!("  locality       {:.0}%", r.locality_fraction * 100.0);
         println!("  shuffled       {:.2} GB", r.shuffle_gbytes);
+    }
+    if let Some(co) = &r.colocation {
+        println!(
+            "  job            {} done in {} ({} segments, {:.0}% local, {:.2} GB shuffled)",
+            r.workload,
+            fmt_duration_secs(co.job_makespan_secs),
+            r.segments,
+            r.locality_fraction * 100.0,
+            r.shuffle_gbytes
+        );
+        for (name, end) in &co.stage_ends {
+            println!("    stage {:<18} ended {}", name, fmt_duration_secs(*end));
+        }
+        println!(
+            "  speculation    {} backups launched, {} won",
+            r.speculative_launched, r.speculative_won
+        );
+        for d in &co.tenant_deltas {
+            println!(
+                "  colo cost      {:<12} p50 {:+8.1} ms  p95 {:+8.1} ms  p99 {:+8.1} ms \
+                 (vs uncolocated)",
+                d.name, d.p50_delta_ms, d.p95_delta_ms, d.p99_delta_ms
+            );
+        }
     }
     println!(
         "  faults         {} injected, {} nodes crashed, {} reassignments",

@@ -1,0 +1,958 @@
+//! Colocated compute + serving engine (DESIGN.md §11).
+//!
+//! The paper's thesis is ONE cloud that simultaneously archives,
+//! analyzes and mines large data sets (§1); the companion papers
+//! (arXiv:0809.1181, arXiv:0907.4810) describe exactly this shared
+//! deployment: Sphere jobs contending with wide-area client traffic on
+//! the same disks and links.  This engine makes that scenario class
+//! expressible: a `ScenarioSpec` carrying BOTH a `[workload]` and a
+//! `[traffic]` block runs here, on ONE shared substrate —
+//!
+//! * one `NetSim` holds the topology links AND the per-node disk
+//!   links, so batch segment I/O, shuffle transfers, client reads and
+//!   background replication all share spindles and WAN tiers through
+//!   max-min fairness;
+//! * one `EventQueue<CoEv>` interleaves both sides' events (the
+//!   service engine is generic over any event type convertible from
+//!   its own, so it pushes into the joint queue unchanged);
+//! * one `FaultState` applies the fault plan to both sides: a crash
+//!   re-queues segments AND re-dispatches requests, a WAN brown-out
+//!   squeezes shuffles AND cross-site reads.
+//!
+//! The job side models a segment as a flow through its node's disk
+//! links whose rate cap is the stage's nominal pipeline rate (so an
+//! uncontended run reproduces the staged batch engine's shape, and
+//! tenant I/O on the same spindle slows it) — throttled to
+//! `colocation.job_share` of the disk when a reservation for tenant
+//! I/O is configured.
+//!
+//! **Speculative re-execution** (§3.2's slow-node handling, the
+//! mechanism behind Hadoop-style speculation): when a running
+//! attempt's elapsed time exceeds `colocation.threshold` × the running
+//! median segment duration, a backup attempt is dispatched to another
+//! live replica holder with a free SPE.  First finisher wins
+//! (`Scheduler::complete` is first-finisher-wins per segment id), the
+//! loser's flow is cancelled, and the `speculative_launched` /
+//! `speculative_won` counters surface in the report.
+//!
+//! The report is a joint view: job makespan + per-stage breakdown,
+//! the full per-tenant SLO table, and per-tenant percentile *deltas*
+//! against an uncolocated baseline (the same traffic run alone on an
+//! identical substrate — computed here, deterministically, as part of
+//! the run).
+
+use std::collections::{BTreeMap, HashSet};
+
+use crate::config::SimConfig;
+use crate::mining::angle::simulate_angle_clustering;
+use crate::mining::pcap::PACKET_BYTES;
+use crate::service::engine::{Engine as TrafficEngine, Ev as SvcEv};
+use crate::sim::event::EventQueue;
+use crate::sim::netsim::{FlowId, LinkId, NetSim};
+use crate::sphere::scheduler::Scheduler;
+use crate::sphere::segment::Segment;
+use crate::topology::{NetLinks, Testbed};
+use crate::transport::TransportModels;
+
+use super::engine::{
+    FaultState, ScenarioReport, StageKind, build_stage_segments, coordination_secs,
+    handle_degrade_end, handle_degrade_start, pick_dst_in, shuffle_rate_cap,
+};
+use super::{FaultSpec, ScenarioSpec, WorkloadKind, WorkloadSpec};
+
+/// Minimum completed segments before the running median is trusted.
+const SPEC_MIN_SAMPLES: usize = 5;
+
+/// Per-tenant SLO damage of colocation: colocated minus uncolocated
+/// percentile latency, in milliseconds (positive = colocation hurt).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TenantSloDelta {
+    pub name: String,
+    pub p50_delta_ms: f64,
+    pub p95_delta_ms: f64,
+    pub p99_delta_ms: f64,
+}
+
+/// The joint view a colocated run adds to [`ScenarioReport`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct ColocationReport {
+    /// When the batch job finished (client traffic may run longer).
+    pub job_makespan_secs: f64,
+    /// (stage name, end time) in execution order.
+    pub stage_ends: Vec<(String, f64)>,
+    /// Colocated-vs-baseline percentile deltas, one entry per tenant.
+    pub tenant_deltas: Vec<TenantSloDelta>,
+}
+
+// ------------------------------------------------------------ events
+
+/// Joint event type: either side's events ride one queue.
+enum CoEv {
+    Job(JobEv),
+    Svc(SvcEv),
+}
+
+enum JobEv {
+    /// Coordination delay elapsed: start the attempt's disk flow.
+    SegStart { gen: u64 },
+    /// Re-scan in-flight attempts for speculation candidates.
+    SpecCheck,
+}
+
+impl From<SvcEv> for CoEv {
+    fn from(e: SvcEv) -> CoEv {
+        CoEv::Svc(e)
+    }
+}
+
+impl From<JobEv> for CoEv {
+    fn from(e: JobEv) -> CoEv {
+        CoEv::Job(e)
+    }
+}
+
+// ------------------------------------------------------------ job side
+
+/// One running (or coordinating) attempt of a segment.
+struct Attempt {
+    node: usize,
+    seg: Segment,
+    started: f64,
+    /// None while the coordination handshake is in flight.
+    fid: Option<FlowId>,
+    speculative: bool,
+}
+
+enum JobFlow {
+    /// A segment's disk I/O pipeline on its executing node.
+    Service { gen: u64 },
+    /// Stage-A shuffle transfer between nodes.
+    Shuffle { src: usize, dst: usize },
+}
+
+/// The batch job half of a colocated run: the staged segment engine
+/// re-expressed over the shared substrate, plus speculation.
+struct JobSide<'a> {
+    testbed: &'a Testbed,
+    cfg: &'a SimConfig,
+    kinds: &'static [StageKind],
+    stage: usize,
+    bytes_per_node: f64,
+    links: NetLinks,
+    disk_read: Vec<LinkId>,
+    disk_write: Vec<LinkId>,
+    nominal_caps: Vec<f64>,
+    models: TransportModels,
+    sched: Scheduler,
+    inflight: BTreeMap<u64, Attempt>,
+    /// Live attempt gens per segment id (speculation bookkeeping).
+    by_seg: BTreeMap<usize, Vec<u64>>,
+    /// Segments that already got their one backup this stage.
+    speculated: HashSet<usize>,
+    /// Completed attempt durations this stage, sorted ascending.
+    durations: Vec<f64>,
+    next_gen: u64,
+    running: Vec<usize>,
+    flows: BTreeMap<FlowId, JobFlow>,
+    coord_secs: f64,
+    // colocation knobs
+    speculative: bool,
+    threshold: f64,
+    job_share: f64,
+    /// Earliest pending SpecCheck (dedup so scans don't flood the queue).
+    spec_check_at: Option<f64>,
+    // counters
+    segments: usize,
+    reassignments: u64,
+    shuffle_bytes: f64,
+    local_assignments: u64,
+    remote_assignments: u64,
+    spec_launched: u64,
+    spec_won: u64,
+    stage_ends: Vec<(String, f64)>,
+    done: bool,
+    makespan: f64,
+}
+
+impl<'a> JobSide<'a> {
+    #[allow(clippy::too_many_arguments)]
+    fn new(
+        spec: &'a ScenarioSpec,
+        workload: &WorkloadSpec,
+        testbed: &'a Testbed,
+        links: NetLinks,
+        disk_read: Vec<LinkId>,
+        disk_write: Vec<LinkId>,
+        nominal_caps: Vec<f64>,
+        state: &FaultState,
+    ) -> Result<JobSide<'a>, String> {
+        let kinds = StageKind::stages_of(workload.kind)
+            .ok_or("colocation: analytic workloads have no event stream to colocate")?;
+        let cfg = &spec.cfg;
+        let spes = cfg.sphere.spes_per_node.max(1);
+        let segments = build_stage_segments(testbed, cfg, state, workload.bytes_per_node, spes)?;
+        let mut sched = Scheduler::new(segments, cfg.sphere.locality_scheduling);
+        sched.max_attempts = cfg.sphere.max_attempts;
+        Ok(JobSide {
+            testbed,
+            cfg,
+            kinds,
+            stage: 0,
+            bytes_per_node: workload.bytes_per_node,
+            links,
+            disk_read,
+            disk_write,
+            nominal_caps,
+            models: TransportModels::default(),
+            sched,
+            inflight: BTreeMap::new(),
+            by_seg: BTreeMap::new(),
+            speculated: HashSet::new(),
+            durations: Vec::new(),
+            next_gen: 0,
+            running: vec![0; testbed.nodes()],
+            flows: BTreeMap::new(),
+            coord_secs: coordination_secs(testbed),
+            speculative: spec.colocation.speculative,
+            threshold: spec.colocation.threshold,
+            job_share: spec.colocation.job_share,
+            spec_check_at: None,
+            segments: 0,
+            reassignments: 0,
+            shuffle_bytes: 0.0,
+            local_assignments: 0,
+            remote_assignments: 0,
+            spec_launched: 0,
+            spec_won: 0,
+            stage_ends: Vec::new(),
+            done: false,
+            makespan: 0.0,
+        })
+    }
+
+    fn spes(&self) -> usize {
+        self.cfg.sphere.spes_per_node.max(1)
+    }
+
+    /// Hand pending segments to every idle SPE slot.
+    fn pump(&mut self, now: f64, q: &mut EventQueue<CoEv>, state: &FaultState) {
+        let spes = self.spes();
+        for node in 0..self.testbed.nodes() {
+            if state.dead[node] {
+                continue;
+            }
+            while self.running[node] < spes {
+                let Some(seg) = self.sched.assign(node as u32) else {
+                    break;
+                };
+                self.next_gen += 1;
+                let gen = self.next_gen;
+                self.by_seg.entry(seg.id).or_default().push(gen);
+                self.inflight.insert(
+                    gen,
+                    Attempt {
+                        node,
+                        seg,
+                        started: now,
+                        fid: None,
+                        speculative: false,
+                    },
+                );
+                self.running[node] += 1;
+                q.push_at(now + self.coord_secs, JobEv::SegStart { gen }.into());
+            }
+        }
+    }
+
+    /// Start the attempt's disk-I/O flow: the stage's pipeline as one
+    /// flow through the node's (shared) disk links, rate-capped at the
+    /// nominal pipeline rate × the straggler factor, and at
+    /// `job_share` of the disk when tenant I/O has a reservation.
+    fn start_segment_flow(&mut self, gen: u64, net: &mut NetSim, state: &FaultState) {
+        let Some(att) = self.inflight.get_mut(&gen) else {
+            return; // pre-empted by a crash or a speculation win
+        };
+        let kind = self.kinds[self.stage];
+        let bytes = att.seg.bytes as f64;
+        let nominal_secs = kind.service_secs(self.cfg, bytes).max(1e-9);
+        let mut cap = (bytes / nominal_secs) * state.factor[att.node];
+        let (reads, writes) = kind.touches_disk();
+        let mut path = Vec::with_capacity(2);
+        let mut disk_cap = f64::INFINITY;
+        if reads {
+            let l = self.disk_read[att.node];
+            path.push(l);
+            disk_cap = disk_cap.min(self.nominal_caps[l.0]);
+        }
+        if writes {
+            let l = self.disk_write[att.node];
+            path.push(l);
+            disk_cap = disk_cap.min(self.nominal_caps[l.0]);
+        }
+        if self.job_share < 1.0 && disk_cap.is_finite() {
+            cap = cap.min(self.job_share * disk_cap);
+        }
+        let fid = net.start_flow(&path, bytes.max(1.0), cap.max(1.0));
+        att.fid = Some(fid);
+        self.flows.insert(fid, JobFlow::Service { gen });
+    }
+
+    fn start_shuffle_flow(
+        &mut self,
+        src: usize,
+        dst: usize,
+        bytes: f64,
+        net: &mut NetSim,
+        state: &FaultState,
+    ) {
+        let path = self.testbed.path(&self.links, src, dst);
+        let cap = shuffle_rate_cap(
+            self.cfg,
+            &self.models,
+            &self.nominal_caps,
+            &path,
+            self.testbed.nic_bps,
+            self.testbed.rtt_secs(src, dst),
+            state.factor[src],
+        );
+        let fid = net.start_flow(&path, bytes.max(1.0), cap.max(1.0));
+        self.flows.insert(fid, JobFlow::Shuffle { src, dst });
+    }
+
+    /// A network flow landed.  Returns `true` when it was job-side.
+    fn flow_done(
+        &mut self,
+        fid: FlowId,
+        now: f64,
+        net: &mut NetSim,
+        q: &mut EventQueue<CoEv>,
+        state: &FaultState,
+    ) -> bool {
+        let Some(flow) = self.flows.remove(&fid) else {
+            return false;
+        };
+        let JobFlow::Service { gen } = flow else {
+            return true; // shuffle landed; nothing to bookkeep
+        };
+        let Some(att) = self.inflight.remove(&gen) else {
+            return true;
+        };
+        self.running[att.node] -= 1;
+        let first = self.sched.complete(&att.seg);
+        // First-finisher-wins: cancel every sibling attempt (the
+        // speculation loser, or the original when the backup won).
+        let losers: Vec<u64> = self
+            .by_seg
+            .remove(&att.seg.id)
+            .map(|gens| gens.into_iter().filter(|&g| g != gen).collect())
+            .unwrap_or_default();
+        for g in losers {
+            if let Some(loser) = self.inflight.remove(&g) {
+                self.running[loser.node] -= 1;
+                if let Some(lfid) = loser.fid {
+                    self.flows.remove(&lfid);
+                    net.try_cancel_flow(lfid);
+                }
+                self.sched.cancel_attempt(&loser.seg);
+            }
+        }
+        if first {
+            if att.speculative {
+                self.sched.record_speculative_win();
+            }
+            self.segments += 1;
+            let d = (now - att.started).max(0.0);
+            let pos = self.durations.partition_point(|&x| x <= d);
+            self.durations.insert(pos, d);
+            if self.kinds[self.stage].shuffles() {
+                let (n_alive, dst) = {
+                    let alive = state.alive();
+                    (alive.len(), pick_dst_in(alive, att.node, att.seg.id))
+                };
+                if let Some(dst) = dst {
+                    let frac = (n_alive - 1) as f64 / n_alive as f64;
+                    let bytes = att.seg.bytes as f64 * frac;
+                    self.start_shuffle_flow(att.node, dst, bytes, net, state);
+                    self.shuffle_bytes += bytes;
+                }
+            }
+        }
+        // Pending work first (an idle slot prefers real segments),
+        // speculation takes whatever slots are left over.
+        self.pump(now, q, state);
+        self.maybe_speculate(now, q, state);
+        true
+    }
+
+    /// Scan in-flight attempts: launch a backup for any attempt past
+    /// `threshold` × the running median, and schedule a re-check at
+    /// the earliest future crossing so a stage whose only remaining
+    /// work is straggling still speculates without new completions.
+    fn maybe_speculate(&mut self, now: f64, q: &mut EventQueue<CoEv>, state: &FaultState) {
+        if !self.speculative || self.durations.len() < SPEC_MIN_SAMPLES {
+            return;
+        }
+        let median = self.durations[self.durations.len() / 2];
+        if !(median > 0.0) {
+            return;
+        }
+        let cutoff = self.threshold * median;
+        let mut launch: Vec<u64> = Vec::new();
+        let mut earliest_cross: Option<f64> = None;
+        for (&gen, att) in &self.inflight {
+            if att.speculative
+                || self.speculated.contains(&att.seg.id)
+                || self.by_seg.get(&att.seg.id).map_or(0, Vec::len) > 1
+            {
+                continue;
+            }
+            if now - att.started >= cutoff {
+                launch.push(gen);
+            } else {
+                let t = att.started + cutoff;
+                earliest_cross = Some(earliest_cross.map_or(t, |e: f64| e.min(t)));
+            }
+        }
+        for gen in launch {
+            self.launch_backup(gen, now, q, state);
+        }
+        if let Some(t) = earliest_cross {
+            let t = t.max(now);
+            let stale = match self.spec_check_at {
+                None => true,
+                Some(at) => at <= now || t < at,
+            };
+            if stale {
+                self.spec_check_at = Some(t);
+                q.push_at(t, JobEv::SpecCheck.into());
+            }
+        }
+    }
+
+    /// Dispatch a backup attempt of `gen`'s segment to another live
+    /// replica holder with a free SPE slot (no holder free: skip — a
+    /// later scan will retry).
+    fn launch_backup(&mut self, gen: u64, now: f64, q: &mut EventQueue<CoEv>, state: &FaultState) {
+        let (seg, primary_node) = {
+            let att = &self.inflight[&gen];
+            (att.seg.clone(), att.node)
+        };
+        let spes = self.spes();
+        let backup = seg
+            .locations
+            .iter()
+            .map(|&l| l as usize)
+            .find(|&l| l != primary_node && !state.dead[l] && self.running[l] < spes);
+        let Some(backup) = backup else {
+            return;
+        };
+        if !self.sched.speculate(&seg, backup as u32) {
+            return;
+        }
+        self.speculated.insert(seg.id);
+        self.next_gen += 1;
+        let bgen = self.next_gen;
+        self.by_seg.entry(seg.id).or_default().push(bgen);
+        self.inflight.insert(
+            bgen,
+            Attempt {
+                node: backup,
+                seg,
+                started: now,
+                fid: None,
+                speculative: true,
+            },
+        );
+        self.running[backup] += 1;
+        q.push_at(now + self.coord_secs, JobEv::SegStart { gen: bgen }.into());
+    }
+
+    /// The driving loop applied a crash to the shared state: cancel
+    /// this node's attempts (re-queue the segment unless a sibling
+    /// attempt survives elsewhere — its attempt count is preserved in
+    /// the scheduler's id-keyed map) and re-route transfers toward it.
+    fn on_crash(
+        &mut self,
+        node: usize,
+        now: f64,
+        net: &mut NetSim,
+        q: &mut EventQueue<CoEv>,
+        state: &FaultState,
+    ) -> Result<(), String> {
+        let stale: Vec<u64> = self
+            .inflight
+            .iter()
+            .filter(|(_, a)| a.node == node)
+            .map(|(&g, _)| g)
+            .collect();
+        for g in stale {
+            let att = self.inflight.remove(&g).expect("stale gen exists");
+            if let Some(fid) = att.fid {
+                self.flows.remove(&fid);
+                net.try_cancel_flow(fid);
+            }
+            let siblings = {
+                let v = self.by_seg.entry(att.seg.id).or_default();
+                v.retain(|&x| x != g);
+                v.len()
+            };
+            if siblings > 0 {
+                // The other attempt (primary or backup) lives on: no
+                // re-assignment happens, so none is counted.
+                self.sched.cancel_attempt(&att.seg);
+            } else {
+                self.by_seg.remove(&att.seg.id);
+                let id = att.seg.id;
+                if !self.sched.fail(att.seg) {
+                    return Err(format!(
+                        "job failed: segment {id} exhausted its {} attempts \
+                         after node {node} crashed",
+                        self.sched.max_attempts
+                    ));
+                }
+                self.reassignments += 1;
+            }
+        }
+        self.running[node] = 0;
+        // Re-route shuffle transfers headed for the dead node.
+        let redirect: Vec<(FlowId, usize, usize)> = self
+            .flows
+            .iter()
+            .filter_map(|(&f, fl)| match fl {
+                JobFlow::Shuffle { src, dst } if *dst == node => Some((f, *src, *dst)),
+                _ => None,
+            })
+            .collect();
+        for (fid, src, dst) in redirect {
+            self.flows.remove(&fid);
+            let left = net.cancel_flow(fid);
+            let new_dst = {
+                let alive = state.alive();
+                pick_dst_in(alive, src, dst + 1)
+            };
+            if let Some(nd) = new_dst {
+                self.start_shuffle_flow(src, nd, left, net, state);
+            }
+            self.reassignments += 1;
+        }
+        self.pump(now, q, state);
+        Ok(())
+    }
+
+    /// Stage fully drained (segments, attempts and shuffle flows)?
+    fn stage_idle(&self) -> bool {
+        !self.done
+            && self.sched.is_drained()
+            && self.inflight.is_empty()
+            && self.flows.is_empty()
+    }
+
+    /// Close the current stage; open the next (or finish the job).
+    fn finish_stage(
+        &mut self,
+        now: f64,
+        q: &mut EventQueue<CoEv>,
+        state: &FaultState,
+    ) -> Result<(), String> {
+        debug_assert!(self.sched.exhausted().is_empty(), "exhaustion aborts earlier");
+        self.local_assignments += self.sched.local_assignments;
+        self.remote_assignments += self.sched.remote_assignments;
+        self.spec_launched += self.sched.speculative_launched;
+        self.spec_won += self.sched.speculative_won;
+        self.stage_ends
+            .push((self.kinds[self.stage].name().to_string(), now));
+        self.stage += 1;
+        if self.stage >= self.kinds.len() {
+            self.done = true;
+            self.makespan = now;
+            return Ok(());
+        }
+        let spes = self.spes();
+        let segments =
+            build_stage_segments(self.testbed, self.cfg, state, self.bytes_per_node, spes)?;
+        let mut sched = Scheduler::new(segments, self.cfg.sphere.locality_scheduling);
+        sched.max_attempts = self.sched.max_attempts;
+        self.sched = sched;
+        self.durations.clear();
+        self.speculated.clear();
+        self.spec_check_at = None;
+        self.pump(now, q, state);
+        Ok(())
+    }
+}
+
+// ------------------------------------------------------------ driver
+
+/// Run a colocated scenario to completion.  Deterministic: the spec is
+/// the only input — including the embedded uncolocated baseline run.
+pub(crate) fn run_colocated(
+    spec: &ScenarioSpec,
+    testbed: &Testbed,
+) -> Result<ScenarioReport, String> {
+    let workload = spec
+        .workload
+        .as_ref()
+        .ok_or("colocated run requires a [workload] block")?;
+    let tspec = spec
+        .traffic
+        .as_ref()
+        .ok_or("colocated run requires a [traffic] block")?;
+    tspec.validate()?;
+
+    // Uncolocated baseline: the identical traffic alone on an identical
+    // substrate, so the report can state what colocation cost each
+    // tenant.  Deterministic, so the joint report stays byte-stable.
+    let baseline = {
+        let mut solo = spec.clone();
+        solo.workload = None;
+        crate::service::run_traffic(&solo, testbed)?
+    };
+    let baseline_traffic = baseline.traffic.expect("traffic-only run reports SLOs");
+
+    let n = testbed.nodes();
+    let mut state = FaultState::new(&spec.faults, n);
+    let mut net =
+        NetSim::with_capacity(4 * n + 2 * testbed.racks() + 2 * testbed.site_names.len());
+    let links = testbed.build_network(&mut net);
+    let mut q: EventQueue<CoEv> = EventQueue::with_capacity(4096);
+    let mut svc = TrafficEngine::new(spec, tspec, testbed, &mut net, links.clone(), &state)?;
+    let mut job = JobSide::new(
+        spec,
+        workload,
+        testbed,
+        links.clone(),
+        svc.disk_read.clone(),
+        svc.disk_write.clone(),
+        svc.nominal_caps.clone(),
+        &state,
+    )?;
+
+    svc.schedule_fault_events(&state, &mut q);
+    svc.schedule_arrivals(&mut q);
+    job.pump(0.0, &mut q, &state);
+
+    let mut events: u64 = 0;
+    let mut now = 0.0f64;
+    let mut batch: Vec<CoEv> = Vec::new();
+    loop {
+        if job.done && svc.done() && net.active_flows() == 0 {
+            break;
+        }
+        let tq = q.peek_time();
+        let tn = net.next_completion().map(|(t, _)| t);
+        let next = match (tq, tn) {
+            (None, None) => break,
+            (Some(a), None) => a,
+            (None, Some(b)) => b,
+            (Some(a), Some(b)) => a.min(b),
+        };
+        now = next;
+        for fid in net.advance_to(next) {
+            events += 1;
+            if !job.flow_done(fid, now, &mut net, &mut q, &state) {
+                svc.flow_done(fid, now, &mut net, &mut q, &state);
+            }
+        }
+        if q.peek_time() == Some(next) {
+            batch.clear();
+            q.pop_simultaneous(&mut batch);
+            for ev in batch.drain(..) {
+                events += 1;
+                match ev {
+                    CoEv::Svc(SvcEv::Crash { fault }) => {
+                        state.consumed[fault] = true;
+                        if let FaultSpec::SlaveCrash { node, .. } = state.faults[fault] {
+                            if !state.dead[node] {
+                                state.crash(node);
+                                svc.on_crash(node, now, &mut net, &mut q);
+                                job.on_crash(node, now, &mut net, &mut q, &state)?;
+                            }
+                        }
+                    }
+                    CoEv::Svc(SvcEv::DegradeStart { fault }) => {
+                        handle_degrade_start(&mut state, &mut net, &links, testbed, fault, now)
+                    }
+                    CoEv::Svc(SvcEv::DegradeEnd { fault }) => {
+                        handle_degrade_end(&mut state, &mut net, &links, testbed, fault, now)
+                    }
+                    CoEv::Svc(other) => svc.handle_event(other, now, &mut net, &mut q, &state),
+                    CoEv::Job(JobEv::SegStart { gen }) => {
+                        job.start_segment_flow(gen, &mut net, &state)
+                    }
+                    CoEv::Job(JobEv::SpecCheck) => {
+                        job.spec_check_at = None;
+                        job.maybe_speculate(now, &mut q, &state);
+                    }
+                }
+            }
+        }
+        if job.stage_idle() {
+            job.finish_stage(now, &mut q, &state)?;
+        }
+    }
+
+    let mut job_makespan = job.makespan;
+    if workload.kind == WorkloadKind::Angle {
+        // Client-side clustering tail at Table 3's cost structure,
+        // matching the batch engine's Angle path.
+        let records = workload.bytes_per_node * testbed.nodes() as f64 / PACKET_BYTES as f64;
+        job_makespan += simulate_angle_clustering(records, job.segments as f64);
+    }
+    let traffic = svc.traffic_report();
+    let tenant_deltas: Vec<TenantSloDelta> = traffic
+        .tenants
+        .iter()
+        .zip(&baseline_traffic.tenants)
+        .map(|(c, b)| TenantSloDelta {
+            name: c.name.clone(),
+            p50_delta_ms: c.p50_ms - b.p50_ms,
+            p95_delta_ms: c.p95_ms - b.p95_ms,
+            p99_delta_ms: c.p99_ms - b.p99_ms,
+        })
+        .collect();
+    let assignments = job.local_assignments + job.remote_assignments;
+    Ok(ScenarioReport {
+        name: spec.name.clone(),
+        workload: colocated_name(workload.kind),
+        nodes: testbed.nodes(),
+        racks: testbed.racks(),
+        sites: testbed.site_names.len(),
+        makespan_secs: job_makespan.max(traffic.makespan_secs),
+        events,
+        segments: job.segments,
+        reassignments: job.reassignments + svc.reassignments,
+        locality_fraction: if assignments == 0 {
+            0.0
+        } else {
+            job.local_assignments as f64 / assignments as f64
+        },
+        shuffle_gbytes: job.shuffle_bytes / 1e9,
+        faults_injected: state.injected,
+        nodes_crashed: state.crashes,
+        speculative_launched: job.spec_launched,
+        speculative_won: job.spec_won,
+        traffic: Some(traffic),
+        colocation: Some(ColocationReport {
+            job_makespan_secs: job_makespan,
+            stage_ends: job.stage_ends,
+            tenant_deltas,
+        }),
+    })
+}
+
+fn colocated_name(kind: WorkloadKind) -> &'static str {
+    match kind {
+        WorkloadKind::Terasort => "terasort+traffic",
+        WorkloadKind::Filegen => "filegen+traffic",
+        WorkloadKind::Angle => "angle+traffic",
+        WorkloadKind::Terasplit | WorkloadKind::Kmeans => {
+            unreachable!("analytic workloads are rejected before a colocated run")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::{ColocationSpec, run_scenario};
+    use crate::service::{ArrivalProcess, TenantSpec, TrafficSpec};
+    use crate::topology::TopologySpec;
+    use crate::util::bytes::GB;
+
+    /// Small colocated scenario: 8 nodes, 2 sites, terasort + 2 tenants.
+    fn co_spec(requests: u64, rps: f64) -> ScenarioSpec {
+        let mut spec = ScenarioSpec::paper_lan8();
+        spec.topology = TopologySpec::scale_out(2, 2, 2);
+        spec.name = "colocate-test".into();
+        spec.workload.as_mut().unwrap().bytes_per_node = 0.5 * GB as f64;
+        spec.traffic = Some(TrafficSpec {
+            clients: 1000,
+            requests,
+            files: 64,
+            zipf_theta: 0.9,
+            arrival: ArrivalProcess::Open { rps },
+            tenants: vec![
+                TenantSpec {
+                    name: "web".into(),
+                    weight: 0.8,
+                    write_fraction: 0.1,
+                    object_bytes: 1.0e6,
+                },
+                TenantSpec {
+                    name: "bulk".into(),
+                    weight: 0.2,
+                    write_fraction: 0.5,
+                    object_bytes: 8.0e6,
+                },
+            ],
+        });
+        spec
+    }
+
+    #[test]
+    fn colocated_run_completes_and_is_deterministic() {
+        let spec = co_spec(1500, 400.0);
+        let a = run_scenario(&spec).unwrap();
+        let b = run_scenario(&spec).unwrap();
+        assert_eq!(a, b, "same spec, same joint report");
+        assert_eq!(a.workload, "terasort+traffic");
+        let t = a.traffic.as_ref().expect("SLO table present");
+        assert_eq!(t.requests, 1500);
+        assert_eq!(t.completed + t.rejected + t.unavailable, 1500);
+        let co = a.colocation.as_ref().expect("joint view present");
+        assert!(co.job_makespan_secs > 0.0);
+        assert_eq!(co.stage_ends.len(), 2, "terasort reports both stages");
+        assert!(co.stage_ends[0].1 <= co.stage_ends[1].1);
+        assert_eq!(co.tenant_deltas.len(), 2);
+        assert!(a.segments > 0, "job segments completed");
+        assert!(a.shuffle_gbytes > 0.0, "stage A shuffled");
+        assert!(
+            a.makespan_secs >= co.job_makespan_secs,
+            "joint makespan covers the job"
+        );
+    }
+
+    #[test]
+    fn colocation_slows_the_job_and_the_tenants() {
+        // The same job alone (batch engine), then colocated with heavy
+        // traffic: contention must show on BOTH sides of the report.
+        let spec = co_spec(2500, 1200.0);
+        let mut solo = spec.clone();
+        solo.traffic = None;
+        let solo_r = run_scenario(&solo).unwrap();
+        let co_r = run_scenario(&spec).unwrap();
+        let co = co_r.colocation.as_ref().unwrap();
+        assert!(
+            co.job_makespan_secs > solo_r.makespan_secs,
+            "tenant I/O on the same disks must slow the job: {} vs {}",
+            co.job_makespan_secs,
+            solo_r.makespan_secs
+        );
+        assert!(
+            co.tenant_deltas.iter().any(|d| d.p99_delta_ms > 0.0),
+            "the job must damage some tenant p99 vs the uncolocated \
+             baseline: {:?}",
+            co.tenant_deltas
+        );
+    }
+
+    #[test]
+    fn speculation_beats_a_straggler() {
+        let mut spec = co_spec(1000, 300.0);
+        spec.faults.push(FaultSpec::Straggler {
+            node: 1,
+            factor: 0.25,
+        });
+        spec.colocation = ColocationSpec {
+            speculative: true,
+            threshold: 1.75,
+            job_share: 1.0,
+        };
+        let with = run_scenario(&spec).unwrap();
+        spec.colocation.speculative = false;
+        let without = run_scenario(&spec).unwrap();
+        assert!(with.speculative_launched > 0, "straggler must trigger backups");
+        assert!(
+            with.speculative_won > 0,
+            "a backup on a healthy node must beat the 4x-slow primary"
+        );
+        assert_eq!(without.speculative_launched, 0, "knob off means no backups");
+        assert!(
+            with.colocation.as_ref().unwrap().job_makespan_secs
+                < without.colocation.as_ref().unwrap().job_makespan_secs,
+            "speculation must cut the straggler's tail: {} vs {}",
+            with.colocation.as_ref().unwrap().job_makespan_secs,
+            without.colocation.as_ref().unwrap().job_makespan_secs
+        );
+    }
+
+    #[test]
+    fn job_share_throttles_the_job() {
+        let mut spec = co_spec(800, 200.0);
+        spec.colocation.job_share = 0.25;
+        let throttled = run_scenario(&spec).unwrap();
+        spec.colocation.job_share = 1.0;
+        let full = run_scenario(&spec).unwrap();
+        assert!(
+            throttled.colocation.as_ref().unwrap().job_makespan_secs
+                > full.colocation.as_ref().unwrap().job_makespan_secs,
+            "a 25% disk reservation must slow the job: {} vs {}",
+            throttled.colocation.as_ref().unwrap().job_makespan_secs,
+            full.colocation.as_ref().unwrap().job_makespan_secs
+        );
+    }
+
+    #[test]
+    fn crash_recovers_on_both_sides() {
+        let mut spec = co_spec(1500, 400.0);
+        spec.faults.push(FaultSpec::SlaveCrash {
+            at_secs: 2.0,
+            node: 1,
+        });
+        let a = run_scenario(&spec).unwrap();
+        let b = run_scenario(&spec).unwrap();
+        assert_eq!(a, b, "faulted colocated runs stay deterministic");
+        assert_eq!(a.nodes_crashed, 1);
+        assert!(a.reassignments > 0, "both sides re-route off the dead node");
+        let t = a.traffic.as_ref().unwrap();
+        assert_eq!(t.completed + t.rejected + t.unavailable, 1500);
+        assert!(a.segments > 0, "job still completes every segment");
+    }
+
+    #[test]
+    fn exhausted_retries_fail_the_colocated_job() {
+        // Same regression as the batch engine: a crash past the
+        // attempt budget is an explicit failure on the colocated path.
+        let mut spec = co_spec(300, 100.0);
+        spec.cfg.sphere.max_attempts = 1;
+        spec.faults.push(FaultSpec::SlaveCrash {
+            at_secs: 2.0,
+            node: 1,
+        });
+        let err = run_scenario(&spec).unwrap_err();
+        assert!(err.contains("exhausted"), "{err}");
+    }
+
+    #[test]
+    fn filegen_colocates_single_stage() {
+        let mut spec = co_spec(500, 150.0);
+        spec.workload.as_mut().unwrap().kind = WorkloadKind::Filegen;
+        let r = run_scenario(&spec).unwrap();
+        assert_eq!(r.workload, "filegen+traffic");
+        let co = r.colocation.as_ref().unwrap();
+        assert_eq!(co.stage_ends.len(), 1);
+        assert_eq!(r.shuffle_gbytes, 0.0, "filegen has no shuffle stage");
+    }
+
+    #[test]
+    fn colocate_preset_smoke() {
+        // The full colocate_scale128 preset is exercised (twice) by
+        // benches/bench_colocate.rs and the golden determinism suite;
+        // here just check a scaled-down clone completes with both
+        // halves reported.
+        let mut spec = ScenarioSpec::colocate_scale128();
+        spec.topology = TopologySpec::scale_out(2, 2, 4);
+        spec.workload.as_mut().unwrap().bytes_per_node = 0.25 * GB as f64;
+        {
+            let t = spec.traffic.as_mut().unwrap();
+            t.requests = 2_000;
+            t.clients = 5_000;
+            t.arrival = ArrivalProcess::Open { rps: 600.0 };
+        }
+        // scale the fault plan's node ids into the smaller topology
+        spec.faults = vec![
+            FaultSpec::Straggler { node: 3, factor: 0.25 },
+            FaultSpec::SlaveCrash { at_secs: 3.0, node: 9 },
+            FaultSpec::LinkDegrade {
+                at_secs: 5.0,
+                duration_secs: 20.0,
+                site: 1,
+                factor: 0.25,
+            },
+        ];
+        let r = run_scenario(&spec).unwrap();
+        assert!(r.colocation.is_some());
+        assert!(r.traffic.is_some());
+        assert_eq!(r.nodes_crashed, 1);
+    }
+}

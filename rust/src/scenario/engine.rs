@@ -36,7 +36,7 @@ use crate::config::{SimConfig, TransportKind};
 use crate::mining::angle::simulate_angle_clustering;
 use crate::mining::pcap::PACKET_BYTES;
 use crate::sim::event::EventQueue;
-use crate::sim::netsim::{FlowId, NetSim};
+use crate::sim::netsim::{FlowId, LinkId, NetSim};
 use crate::sphere::scheduler::Scheduler;
 use crate::sphere::segment::Segment;
 use crate::sphere::simjob::udt_efficiency;
@@ -65,9 +65,16 @@ pub struct ScenarioReport {
     pub shuffle_gbytes: f64,
     pub faults_injected: usize,
     pub nodes_crashed: usize,
+    /// Speculative backup attempts launched / won (colocated runs with
+    /// `colocation.speculative`; zero elsewhere).  DESIGN.md §11.
+    pub speculative_launched: u64,
+    pub speculative_won: u64,
     /// SLO report when the scenario ran the service-layer traffic
-    /// engine (`[traffic]` block) instead of a batch workload.
+    /// engine (`[traffic]` block), alone or colocated.
     pub traffic: Option<crate::service::TrafficReport>,
+    /// Joint view of a colocated run: job makespan/stage breakdown plus
+    /// per-tenant SLO deltas versus the uncolocated baseline.
+    pub colocation: Option<super::colocate::ColocationReport>,
 }
 
 /// Run one scenario to completion. Deterministic: no wall clock, no
@@ -75,16 +82,22 @@ pub struct ScenarioReport {
 pub fn run_scenario(spec: &ScenarioSpec) -> Result<ScenarioReport, String> {
     spec.validate()?;
     let testbed = spec.topology.generate()?;
-    if spec.traffic.is_some() {
-        // Service-layer scenario: the traffic engine replaces the batch
+    match (&spec.workload, &spec.traffic) {
+        // Colocated scenario: batch job + client traffic share one
+        // substrate (DESIGN.md §11).
+        (Some(_), Some(_)) => return super::colocate::run_colocated(spec, &testbed),
+        // Service-only scenario: the traffic engine replaces the batch
         // workload, composing with the same fault plan.
-        return crate::service::run_traffic(spec, &testbed);
+        (None, Some(_)) => return crate::service::run_traffic(spec, &testbed),
+        (None, None) => return Err("scenario has neither workload nor traffic".into()),
+        (Some(_), None) => {}
     }
+    let workload = spec.workload.as_ref().expect("batch path has a workload");
     let mut state = FaultState::new(&spec.faults, testbed.nodes());
-    let b = spec.workload.bytes_per_node;
+    let b = workload.bytes_per_node;
     let mut agg = Aggregate::default();
 
-    let makespan = match spec.workload.kind {
+    let makespan = match workload.kind {
         WorkloadKind::Terasort => {
             let end_a = StageRun::new(&testbed, &spec.cfg, StageKind::TerasortA, b, 0.0, &mut state)?
                 .execute(&mut agg)?;
@@ -107,7 +120,7 @@ pub fn run_scenario(spec: &ScenarioSpec) -> Result<ScenarioReport, String> {
             &testbed,
             &spec.cfg,
             b,
-            spec.workload.iterations,
+            workload.iterations,
             &mut state,
             &mut agg,
         )?,
@@ -116,7 +129,7 @@ pub fn run_scenario(spec: &ScenarioSpec) -> Result<ScenarioReport, String> {
     let assignments = agg.local_assignments + agg.remote_assignments;
     Ok(ScenarioReport {
         name: spec.name.clone(),
-        workload: spec.workload.kind.name(),
+        workload: workload.kind.name(),
         nodes: testbed.nodes(),
         racks: testbed.racks(),
         sites: testbed.site_names.len(),
@@ -132,7 +145,10 @@ pub fn run_scenario(spec: &ScenarioSpec) -> Result<ScenarioReport, String> {
         shuffle_gbytes: agg.shuffle_bytes / 1e9,
         faults_injected: state.injected,
         nodes_crashed: state.crashes,
+        speculative_launched: 0,
+        speculative_won: 0,
         traffic: None,
+        colocation: None,
     })
 }
 
@@ -274,7 +290,7 @@ struct Aggregate {
 // ------------------------------------------------------------ staged engine
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
-enum StageKind {
+pub(crate) enum StageKind {
     /// Read + partition + write the incoming partition; shuffles.
     TerasortA,
     /// Local sort of the received partition (read/sort/write pipeline).
@@ -286,13 +302,44 @@ enum StageKind {
 }
 
 impl StageKind {
-    fn shuffles(self) -> bool {
+    pub(crate) fn shuffles(self) -> bool {
         self == StageKind::TerasortA
+    }
+
+    /// Stage names for the colocation report's per-stage breakdown.
+    pub(crate) fn name(self) -> &'static str {
+        match self {
+            StageKind::TerasortA => "partition+shuffle",
+            StageKind::TerasortB => "local sort",
+            StageKind::Filegen => "filegen",
+            StageKind::AngleExtract => "angle extract",
+        }
+    }
+
+    /// The stage sequence of an event-driven workload (the analytic
+    /// workloads — terasplit, kmeans — have none).
+    pub(crate) fn stages_of(kind: WorkloadKind) -> Option<&'static [StageKind]> {
+        match kind {
+            WorkloadKind::Terasort => Some(&[StageKind::TerasortA, StageKind::TerasortB]),
+            WorkloadKind::Filegen => Some(&[StageKind::Filegen]),
+            WorkloadKind::Angle => Some(&[StageKind::AngleExtract]),
+            WorkloadKind::Terasplit | WorkloadKind::Kmeans => None,
+        }
+    }
+
+    /// Whether the stage reads from / writes to the local spindle —
+    /// which disk links a colocated segment flow crosses.
+    pub(crate) fn touches_disk(self) -> (bool, bool) {
+        match self {
+            StageKind::TerasortA | StageKind::TerasortB => (true, true),
+            StageKind::Filegen => (false, true),
+            StageKind::AngleExtract => (true, false),
+        }
     }
 
     /// Nominal per-segment service time on one SPE (no straggler
     /// factor, no coordination cost).
-    fn service_secs(self, cfg: &SimConfig, bytes: f64) -> f64 {
+    pub(crate) fn service_secs(self, cfg: &SimConfig, bytes: f64) -> f64 {
         let eff = cfg.sphere.io_efficiency;
         let read = cfg.hardware.disk_read_bps * eff;
         let write = cfg.hardware.disk_write_bps * eff;
@@ -391,58 +438,12 @@ impl<'a> StageRun<'a> {
         .with_segments(bytes_per_node, spes)
     }
 
-    /// Build the stage's segment list: every node's data, owned by the
-    /// node itself or (when it is already dead) its rack-diverse
-    /// replica, split into S_min/S_max-clamped pieces.  Errors when a
-    /// home's whole replica chain is dead — the data is gone, and a
-    /// run that lost data must not report a normal makespan (matching
-    /// `run_terasplit`'s behaviour).
+    /// Build the stage's segment list (`build_stage_segments`) and hand
+    /// it to a fresh scheduler.
     fn with_segments(mut self, bytes_per_node: f64, spes: usize) -> Result<StageRun<'a>, String> {
-        let n = self.testbed.nodes();
-        let target = (bytes_per_node / spes as f64).clamp(
-            self.cfg.sphere.seg_min_bytes as f64,
-            self.cfg.sphere.seg_max_bytes as f64,
-        );
-        let mut segments = Vec::new();
-        for home in 0..n {
-            // Walk the replica chain until a live owner is found.
-            let mut owner = home;
-            for _ in 0..n {
-                if !self.state.dead[owner] {
-                    break;
-                }
-                owner = replica_of(self.testbed, owner);
-            }
-            if self.state.dead[owner] {
-                return Err(format!(
-                    "node {home}'s data lost: its whole replica chain crashed"
-                ));
-            }
-            let replica = replica_of(self.testbed, owner);
-            let mut locations: Vec<u32> = [owner, replica]
-                .into_iter()
-                .filter(|&x| !self.state.dead[x])
-                .map(|x| x as u32)
-                .collect();
-            locations.dedup();
-            if locations.is_empty() {
-                locations.push(owner as u32);
-            }
-            let pieces = (bytes_per_node / target).ceil().max(1.0) as usize;
-            let piece_bytes = (bytes_per_node / pieces as f64) as u64;
-            for p in 0..pieces {
-                segments.push(Segment {
-                    id: segments.len(),
-                    file: format!("scenario/node{home:04}.dat"),
-                    first_record: p as u64,
-                    n_records: 1,
-                    bytes: piece_bytes,
-                    locations: locations.clone(),
-                    whole_file: false,
-                });
-            }
-        }
+        let segments = build_stage_segments(self.testbed, self.cfg, self.state, bytes_per_node, spes)?;
         self.sched = Scheduler::new(segments, self.cfg.sphere.locality_scheduling);
+        self.sched.max_attempts = self.cfg.sphere.max_attempts;
         Ok(self)
     }
 
@@ -501,21 +502,15 @@ impl<'a> StageRun<'a> {
 
     fn start_shuffle_flow(&mut self, src: usize, dst: usize, bytes: f64) {
         let path = self.testbed.path(&self.links, src, dst);
-        // Cap against NOMINAL link rates: degradation constrains flows
-        // through the (shared) reduced link capacity instead, so the
-        // slowdown lifts as soon as the window ends.
-        let bottleneck = path
-            .iter()
-            .map(|l| self.nominal_caps[l.0])
-            .fold(f64::INFINITY, f64::min)
-            .min(self.testbed.nic_bps);
-        let rtt = self.testbed.rtt_secs(src, dst);
-        let read = self.cfg.hardware.disk_read_bps * self.cfg.sphere.io_efficiency;
-        let cap = match self.cfg.sphere_transport {
-            TransportKind::Udt => udt_efficiency(self.models.udt.efficiency, rtt) * bottleneck,
-            TransportKind::Tcp => self.models.tcp.rate_cap(bottleneck, rtt),
-        }
-        .min(read * self.state.factor[src]);
+        let cap = shuffle_rate_cap(
+            self.cfg,
+            &self.models,
+            &self.nominal_caps,
+            &path,
+            self.testbed.nic_bps,
+            self.testbed.rtt_secs(src, dst),
+            self.state.factor[src],
+        );
         let fid = self.net.start_flow(&path, bytes.max(1.0), cap.max(1.0));
         self.flows.insert(fid, FlowOut { src, dst });
     }
@@ -538,8 +533,16 @@ impl<'a> StageRun<'a> {
             .collect();
         for g in stale {
             let (_, seg) = self.inflight.remove(&g).expect("stale gen exists");
+            let id = seg.id;
             if !self.sched.fail(seg) {
-                return Err(format!("segment retries exhausted after node {node} crash"));
+                // Explicit job failure — never a silent drop from
+                // pending (the exhausted id is also recorded in the
+                // scheduler for the property suite).
+                return Err(format!(
+                    "job failed: segment {id} exhausted its {} attempts \
+                     after node {node} crashed",
+                    self.sched.max_attempts
+                ));
             }
             agg.reassignments += 1;
         }
@@ -563,14 +566,6 @@ impl<'a> StageRun<'a> {
             agg.reassignments += 1;
         }
         Ok(())
-    }
-
-    fn set_site_degrade(&mut self, site: usize, factor: f64) {
-        let cap = (self.testbed.wan_bps * factor).max(1.0);
-        let up = self.links.site_up[site];
-        let down = self.links.site_down[site];
-        self.net.set_link_capacity(up, cap);
-        self.net.set_link_capacity(down, cap);
     }
 
     /// Run the stage to completion; returns its end time.
@@ -627,29 +622,22 @@ impl<'a> StageRun<'a> {
                             }
                         }
                         Ev::Crash { fault } => self.handle_crash(fault, agg)?,
-                        Ev::DegradeStart { fault } => {
-                            if let FaultSpec::LinkDegrade { site, .. } =
-                                self.state.faults[fault]
-                            {
-                                self.state.count_once(fault);
-                                // Combined factor of every window active
-                                // right now — overlapping degradations
-                                // compound instead of overwriting.
-                                let f = self.state.degrade_factor_at(site, now);
-                                self.set_site_degrade(site, f);
-                            }
-                        }
-                        Ev::DegradeEnd { fault } => {
-                            self.state.consumed[fault] = true;
-                            if let FaultSpec::LinkDegrade { site, .. } =
-                                self.state.faults[fault]
-                            {
-                                // Restore to whatever the *remaining*
-                                // windows dictate, not blindly to 1.0.
-                                let f = self.state.degrade_factor_at(site, now);
-                                self.set_site_degrade(site, f);
-                            }
-                        }
+                        Ev::DegradeStart { fault } => handle_degrade_start(
+                            self.state,
+                            &mut self.net,
+                            &self.links,
+                            self.testbed,
+                            fault,
+                            now,
+                        ),
+                        Ev::DegradeEnd { fault } => handle_degrade_end(
+                            self.state,
+                            &mut self.net,
+                            &self.links,
+                            self.testbed,
+                            fault,
+                            now,
+                        ),
                     }
                 }
                 self.pump(now);
@@ -661,10 +649,71 @@ impl<'a> StageRun<'a> {
     }
 }
 
+/// Build a stage's segment list: every node's data, owned by the node
+/// itself or (when it is already dead) its rack-diverse replica, split
+/// into S_min/S_max-clamped pieces.  Errors when a home's whole
+/// replica chain is dead — the data is gone, and a run that lost data
+/// must not report a normal makespan (matching `run_terasplit`'s
+/// behaviour).  Shared by the staged batch engine and the colocation
+/// engine (DESIGN.md §11).
+pub(crate) fn build_stage_segments(
+    testbed: &Testbed,
+    cfg: &SimConfig,
+    state: &FaultState,
+    bytes_per_node: f64,
+    spes: usize,
+) -> Result<Vec<Segment>, String> {
+    let n = testbed.nodes();
+    let target = (bytes_per_node / spes as f64).clamp(
+        cfg.sphere.seg_min_bytes as f64,
+        cfg.sphere.seg_max_bytes as f64,
+    );
+    let mut segments = Vec::new();
+    for home in 0..n {
+        // Walk the replica chain until a live owner is found.
+        let mut owner = home;
+        for _ in 0..n {
+            if !state.dead[owner] {
+                break;
+            }
+            owner = replica_of(testbed, owner);
+        }
+        if state.dead[owner] {
+            return Err(format!(
+                "node {home}'s data lost: its whole replica chain crashed"
+            ));
+        }
+        let replica = replica_of(testbed, owner);
+        let mut locations: Vec<u32> = [owner, replica]
+            .into_iter()
+            .filter(|&x| !state.dead[x])
+            .map(|x| x as u32)
+            .collect();
+        locations.dedup();
+        if locations.is_empty() {
+            locations.push(owner as u32);
+        }
+        let pieces = (bytes_per_node / target).ceil().max(1.0) as usize;
+        let piece_bytes = (bytes_per_node / pieces as f64) as u64;
+        for p in 0..pieces {
+            segments.push(Segment {
+                id: segments.len(),
+                file: format!("scenario/node{home:04}.dat"),
+                first_record: p as u64,
+                n_records: 1,
+                bytes: piece_bytes,
+                locations: locations.clone(),
+                whole_file: false,
+            });
+        }
+    }
+    Ok(segments)
+}
+
 /// Deterministic shuffle partner: the `salt`-th live node after `src`
 /// in id order.  Takes the alive list by reference so hot-loop callers
 /// build it once per event, not per lookup.
-fn pick_dst_in(alive: &[usize], src: usize, salt: usize) -> Option<usize> {
+pub(crate) fn pick_dst_in(alive: &[usize], src: usize, salt: usize) -> Option<usize> {
     if alive.len() < 2 {
         return None;
     }
@@ -674,7 +723,7 @@ fn pick_dst_in(alive: &[usize], src: usize, salt: usize) -> Option<usize> {
 
 /// Per-segment coordination cost: Chord lookup hops + GMP handshake +
 /// completion ack over the mean RTT (same shape as simjob).
-fn coordination_secs(testbed: &Testbed) -> f64 {
+pub(crate) fn coordination_secs(testbed: &Testbed) -> f64 {
     let n = testbed.nodes();
     let hops = (n as f64).log2().ceil().max(1.0);
     let mut acc = 0.0;
@@ -689,8 +738,87 @@ fn coordination_secs(testbed: &Testbed) -> f64 {
 
 /// Rack-diverse replica partner — shared with the service layer's
 /// catalog placement (`crate::topology::rack_diverse_replica`).
-fn replica_of(testbed: &Testbed, node: usize) -> usize {
+pub(crate) fn replica_of(testbed: &Testbed, node: usize) -> usize {
     rack_diverse_replica(testbed, node)
+}
+
+/// Apply a WAN degradation factor to a site's full-duplex uplink —
+/// shared by the batch, traffic and colocation engines so a brown-out
+/// is one capacity change no matter which engine owns the links.
+pub(crate) fn apply_site_degrade(
+    net: &mut NetSim,
+    links: &NetLinks,
+    testbed: &Testbed,
+    site: usize,
+    factor: f64,
+) {
+    let cap = (testbed.wan_bps * factor).max(1.0);
+    net.set_link_capacity(links.site_up[site], cap);
+    net.set_link_capacity(links.site_down[site], cap);
+}
+
+/// A degradation window opened: count it once and squeeze the site's
+/// uplinks to the combined factor of every window active at `now`
+/// (overlapping degradations compound instead of overwriting).  One
+/// implementation for every engine's event loop.
+pub(crate) fn handle_degrade_start(
+    state: &mut FaultState,
+    net: &mut NetSim,
+    links: &NetLinks,
+    testbed: &Testbed,
+    fault: usize,
+    now: f64,
+) {
+    if let FaultSpec::LinkDegrade { site, .. } = state.faults[fault] {
+        state.count_once(fault);
+        let f = state.degrade_factor_at(site, now);
+        apply_site_degrade(net, links, testbed, site, f);
+    }
+}
+
+/// A degradation window closed: restore the site's uplinks to whatever
+/// the *remaining* windows dictate, not blindly to 1.0.
+pub(crate) fn handle_degrade_end(
+    state: &mut FaultState,
+    net: &mut NetSim,
+    links: &NetLinks,
+    testbed: &Testbed,
+    fault: usize,
+    now: f64,
+) {
+    state.consumed[fault] = true;
+    if let FaultSpec::LinkDegrade { site, .. } = state.faults[fault] {
+        let f = state.degrade_factor_at(site, now);
+        apply_site_degrade(net, links, testbed, site, f);
+    }
+}
+
+/// Transport-model rate cap for a shuffle transfer along `path`,
+/// against NOMINAL link rates (degradation constrains the shared link
+/// capacity instead, so a brown-out's slowdown lifts when the window
+/// ends), bounded by the source disk at its straggler factor.  Shared
+/// by the batch and colocation engines so a calibration change lands
+/// in both.
+pub(crate) fn shuffle_rate_cap(
+    cfg: &SimConfig,
+    models: &TransportModels,
+    nominal_caps: &[f64],
+    path: &[LinkId],
+    nic_bps: f64,
+    rtt: f64,
+    src_factor: f64,
+) -> f64 {
+    let bottleneck = path
+        .iter()
+        .map(|l| nominal_caps[l.0])
+        .fold(f64::INFINITY, f64::min)
+        .min(nic_bps);
+    let read = cfg.hardware.disk_read_bps * cfg.sphere.io_efficiency;
+    match cfg.sphere_transport {
+        TransportKind::Udt => udt_efficiency(models.udt.efficiency, rtt) * bottleneck,
+        TransportKind::Tcp => models.tcp.rate_cap(bottleneck, rtt),
+    }
+    .min(read * src_factor)
 }
 
 // ------------------------------------------------------------ analytic paths
@@ -815,8 +943,9 @@ mod tests {
     fn lan_spec(nodes: usize, kind: WorkloadKind) -> ScenarioSpec {
         let mut spec = ScenarioSpec::paper_lan8();
         spec.topology = TopologySpec::paper_lan(nodes);
-        spec.workload.kind = kind;
-        spec.workload.bytes_per_node = 1.0 * GB as f64;
+        let w = spec.workload.as_mut().unwrap();
+        w.kind = kind;
+        w.bytes_per_node = 1.0 * GB as f64;
         spec.name = format!("test-{}-{nodes}", kind.name());
         spec
     }
@@ -875,6 +1004,25 @@ mod tests {
     }
 
     #[test]
+    fn exhausted_retries_surface_as_explicit_job_failure() {
+        // Regression: with a 1-attempt budget, a crash that kills a
+        // running segment must FAIL the run naming the segment — never
+        // complete with the segment silently dropped from pending.
+        let mut spec = lan_spec(4, WorkloadKind::Terasort);
+        spec.cfg.sphere.max_attempts = 1;
+        spec.faults.push(FaultSpec::SlaveCrash {
+            at_secs: 2.0,
+            node: 1,
+        });
+        let err = run_scenario(&spec).unwrap_err();
+        assert!(err.contains("exhausted"), "{err}");
+        assert!(err.contains("segment"), "{err}");
+        // With the default budget the same crash recovers.
+        spec.cfg.sphere.max_attempts = 4;
+        run_scenario(&spec).unwrap();
+    }
+
+    #[test]
     fn straggler_slows_the_run() {
         let mut spec = lan_spec(4, WorkloadKind::Terasort);
         let baseline = run_scenario(&spec).unwrap();
@@ -889,7 +1037,7 @@ mod tests {
     #[test]
     fn wan_degradation_slows_the_shuffle() {
         let mut spec = ScenarioSpec::paper_wan6();
-        spec.workload.bytes_per_node = 1.0 * GB as f64;
+        spec.workload.as_mut().unwrap().bytes_per_node = 1.0 * GB as f64;
         let baseline = run_scenario(&spec).unwrap();
         spec.faults.push(FaultSpec::LinkDegrade {
             at_secs: 0.0,
@@ -913,7 +1061,7 @@ mod tests {
         // like run_terasplit does, not report a normal makespan.
         let mut spec = ScenarioSpec::paper_lan8();
         spec.topology = TopologySpec::scale_out(1, 2, 2);
-        spec.workload.bytes_per_node = 1.0 * GB as f64;
+        spec.workload.as_mut().unwrap().bytes_per_node = 1.0 * GB as f64;
         spec.faults.push(FaultSpec::SlaveCrash { at_secs: 0.5, node: 0 });
         spec.faults.push(FaultSpec::SlaveCrash { at_secs: 1.0, node: 2 });
         let err = run_scenario(&spec).unwrap_err();
@@ -926,7 +1074,7 @@ mod tests {
         // closes (their caps are nominal; the shared link capacity is
         // what degrades), so a brief brown-out beats a permanent one.
         let mut spec = ScenarioSpec::paper_wan6();
-        spec.workload.bytes_per_node = 1.0 * GB as f64;
+        spec.workload.as_mut().unwrap().bytes_per_node = 1.0 * GB as f64;
         spec.faults.push(FaultSpec::LinkDegrade {
             at_secs: 0.0,
             duration_secs: 10.0,
@@ -952,7 +1100,7 @@ mod tests {
     #[test]
     fn overlapping_degrade_windows_compound() {
         let mut spec = ScenarioSpec::paper_wan6();
-        spec.workload.bytes_per_node = 1.0 * GB as f64;
+        spec.workload.as_mut().unwrap().bytes_per_node = 1.0 * GB as f64;
         spec.faults.push(FaultSpec::LinkDegrade {
             at_secs: 0.0,
             duration_secs: f64::INFINITY,

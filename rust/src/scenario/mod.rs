@@ -17,14 +17,19 @@
 //! (same spec, same report — byte for byte) against the discrete-event
 //! substrate in `sim`, driving the real `sphere::Scheduler` for segment
 //! placement so locality and re-assignment behaviour come from the
-//! production code path, not a copy of it.
+//! production code path, not a copy of it.  A `[traffic]` block runs
+//! the service engine instead (DESIGN.md §10); `[workload]` +
+//! `[traffic]` together run colocated on one shared substrate with
+//! speculative re-execution (`colocate`, DESIGN.md §11).
 //!
 //! Specs parse from TOML (`config/scenarios/*.toml` in the repo root)
 //! or come from the named presets used by `examples/scenario_suite.rs`
 //! and `benches/bench_scale.rs`.
 
+pub mod colocate;
 pub mod engine;
 
+pub use colocate::{ColocationReport, TenantSloDelta};
 pub use engine::{run_scenario, ScenarioReport};
 
 use crate::config::{SimConfig, Table};
@@ -99,17 +104,79 @@ pub enum FaultSpec {
     Straggler { node: usize, factor: f64 },
 }
 
+/// Colocation knobs (the `[colocation]` TOML block; DESIGN.md §11).
+/// Only read when a scenario carries BOTH a `[workload]` and a
+/// `[traffic]` block — the colocated engine runs them on one shared
+/// network/disk/event substrate.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ColocationSpec {
+    /// Launch backup attempts for straggling segments (§3.2 fault
+    /// handling generalized to slow nodes — speculative execution).
+    pub speculative: bool,
+    /// A segment speculates once its elapsed time exceeds this multiple
+    /// of the running median segment duration.  Must be > 1.
+    pub threshold: f64,
+    /// Fraction of each node's disk bandwidth the batch job may use
+    /// while tenants contend (1.0 = pure max-min fair sharing, no
+    /// reservation for tenant I/O).  In (0, 1].
+    pub job_share: f64,
+}
+
+impl Default for ColocationSpec {
+    fn default() -> Self {
+        ColocationSpec {
+            speculative: true,
+            threshold: 2.0,
+            job_share: 1.0,
+        }
+    }
+}
+
+impl ColocationSpec {
+    fn from_table(t: &Table) -> Result<ColocationSpec, String> {
+        t.check_known_keys("colocation", &["speculative", "threshold", "job_share"], &[])?;
+        Ok(ColocationSpec {
+            speculative: t.bool_or("colocation.speculative", true),
+            threshold: t.float_or("colocation.threshold", 2.0),
+            job_share: t.float_or("colocation.job_share", 1.0),
+        })
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if !(self.threshold > 1.0) {
+            return Err(format!(
+                "colocation: threshold must be > 1 (a backup at <= 1x the \
+                 median would speculate on healthy segments), got {}",
+                self.threshold
+            ));
+        }
+        if !(self.job_share > 0.0 && self.job_share <= 1.0) {
+            return Err(format!(
+                "colocation: job_share must be in (0, 1], got {}",
+                self.job_share
+            ));
+        }
+        Ok(())
+    }
+}
+
 /// A complete, reproducible run description.
 #[derive(Clone, Debug)]
 pub struct ScenarioSpec {
     pub name: String,
     pub topology: TopologySpec,
     pub cfg: SimConfig,
-    pub workload: WorkloadSpec,
+    /// The batch workload (the `[workload]` TOML block).  `None` for
+    /// service-only scenarios.
+    pub workload: Option<WorkloadSpec>,
     pub faults: Vec<FaultSpec>,
-    /// When present, the service-layer traffic engine runs instead of
-    /// the batch workload (the `[traffic]` TOML block; DESIGN.md §10).
+    /// The service-layer traffic stream (the `[traffic]` TOML block;
+    /// DESIGN.md §10).  Alone it replaces the batch workload; together
+    /// with `[workload]` the two colocate on one shared substrate
+    /// (DESIGN.md §11).
     pub traffic: Option<TrafficSpec>,
+    /// Colocation knobs; only read when both blocks are present.
+    pub colocation: ColocationSpec,
 }
 
 impl ScenarioSpec {
@@ -128,6 +195,8 @@ impl ScenarioSpec {
         let kind = WorkloadKind::parse(t.str_or("workload.kind", "terasort"))?;
         let bytes_per_node = parse_bytes(t.str_or("workload.bytes_per_node", "10GB"))? as f64;
         let iterations = t.int_or("workload.iterations", 10).max(1) as usize;
+        let has_workload_block = t.section_keys("workload").next().is_some();
+        let has_colocation_block = t.section_keys("colocation").next().is_some();
         let mut faults = Vec::new();
         for label in t.subsections("faults") {
             let k = |field: &str| format!("faults.{label}.{field}");
@@ -178,10 +247,24 @@ impl ScenarioSpec {
             faults.push(fault);
         }
         let traffic = TrafficSpec::from_table(t)?;
-        if traffic.is_some() && t.section_keys("workload").next().is_some() {
+        // [traffic] + [workload] used to be mutually exclusive; since
+        // the colocation engine (DESIGN.md §11) the combination runs
+        // both on one shared substrate.  A [traffic]-only document
+        // still means "service scenario, no batch job".
+        let workload = if has_workload_block || traffic.is_none() {
+            Some(WorkloadSpec {
+                kind,
+                bytes_per_node,
+                iterations,
+            })
+        } else {
+            None
+        };
+        let colocation = ColocationSpec::from_table(t)?;
+        if has_colocation_block && (workload.is_none() || traffic.is_none()) {
             return Err(
-                "[traffic] and [workload] are mutually exclusive: the traffic \
-                 engine replaces the batch workload"
+                "[colocation] only applies when both [workload] and [traffic] \
+                 are present — it tunes how the two share the cloud"
                     .into(),
             );
         }
@@ -189,13 +272,10 @@ impl ScenarioSpec {
             name: t.str_or("name", &topology.name).to_string(),
             topology,
             cfg,
-            workload: WorkloadSpec {
-                kind,
-                bytes_per_node,
-                iterations,
-            },
+            workload,
             faults,
             traffic,
+            colocation,
         })
     }
 
@@ -203,8 +283,27 @@ impl ScenarioSpec {
     pub fn validate(&self) -> Result<(), String> {
         let nodes = self.topology.nodes();
         let sites = self.topology.sites.len();
+        if self.workload.is_none() && self.traffic.is_none() {
+            return Err("scenario has neither a workload nor a traffic stream".into());
+        }
         if let Some(traffic) = &self.traffic {
             traffic.validate()?;
+        }
+        self.colocation.validate()?;
+        if self.traffic.is_some() {
+            if let Some(w) = &self.workload {
+                // The colocated engine is event-driven end to end; the
+                // analytic workloads (closed-form round models) have no
+                // event stream to interleave with client traffic.
+                if matches!(w.kind, WorkloadKind::Terasplit | WorkloadKind::Kmeans) {
+                    return Err(format!(
+                        "colocation: {} is an analytic workload and cannot share \
+                         the event substrate with [traffic] \
+                         (terasort|filegen|angle colocate)",
+                        w.kind.name()
+                    ));
+                }
+            }
         }
         let mut crash_nodes: Vec<usize> = Vec::new();
         for f in &self.faults {
@@ -226,7 +325,7 @@ impl ScenarioSpec {
                                 .into(),
                         );
                     }
-                    if self.workload.kind == WorkloadKind::Kmeans {
+                    if self.workload.as_ref().map(|w| w.kind) == Some(WorkloadKind::Kmeans) {
                         return Err(
                             "link_degrade fault: kmeans is compute/latency-bound (its \
                              center exchanges are tiny), a bandwidth fault would be \
@@ -268,13 +367,14 @@ impl ScenarioSpec {
             name: "paper-wan6-terasort".into(),
             topology: TopologySpec::paper_wan(),
             cfg: SimConfig::wan_default(),
-            workload: WorkloadSpec {
+            workload: Some(WorkloadSpec {
                 kind: WorkloadKind::Terasort,
                 bytes_per_node: 10.0 * GB as f64,
                 iterations: 10,
-            },
+            }),
             faults: Vec::new(),
             traffic: None,
+            colocation: ColocationSpec::default(),
         }
     }
 
@@ -285,13 +385,14 @@ impl ScenarioSpec {
             name: "paper-lan8-terasort".into(),
             topology: TopologySpec::paper_lan(8),
             cfg: SimConfig::lan_default(),
-            workload: WorkloadSpec {
+            workload: Some(WorkloadSpec {
                 kind: WorkloadKind::Terasort,
                 bytes_per_node: 10.0 * GB as f64,
                 iterations: 10,
-            },
+            }),
             faults: Vec::new(),
             traffic: None,
+            colocation: ColocationSpec::default(),
         }
     }
 
@@ -304,11 +405,11 @@ impl ScenarioSpec {
             name: "scale128-terasort-faults".into(),
             topology: TopologySpec::scale_out(4, 4, 8),
             cfg: SimConfig::lan_default(),
-            workload: WorkloadSpec {
+            workload: Some(WorkloadSpec {
                 kind: WorkloadKind::Terasort,
                 bytes_per_node: 1.0 * GB as f64,
                 iterations: 10,
-            },
+            }),
             faults: vec![
                 FaultSpec::Straggler {
                     node: 17,
@@ -326,6 +427,7 @@ impl ScenarioSpec {
                 },
             ],
             traffic: None,
+            colocation: ColocationSpec::default(),
         }
     }
 
@@ -337,6 +439,8 @@ impl ScenarioSpec {
     pub fn traffic_scale128() -> ScenarioSpec {
         let mut spec = ScenarioSpec::scale128();
         spec.name = "traffic-scale128".into();
+        // Service-only: the batch workload is replaced, not colocated.
+        spec.workload = None;
         spec.traffic = Some(TrafficSpec {
             clients: 200_000,
             requests: 150_000,
@@ -364,6 +468,70 @@ impl ScenarioSpec {
                 },
             ],
         });
+        spec
+    }
+
+    /// The paper's headline deployment class (§1: one cloud that
+    /// archives, analyzes AND serves): the scale128 Terasort — same
+    /// fault plan, straggler included — colocated with a three-tenant
+    /// client request stream on the same disks and WAN tiers, with
+    /// speculative re-execution enabled.  Mirrors
+    /// config/scenarios/colocate_scale128.toml.
+    pub fn colocate_scale128() -> ScenarioSpec {
+        let mut spec = ScenarioSpec::scale128();
+        spec.name = "colocate-scale128".into();
+        // Same plan as scale128 but a harsher straggler (4x slow): at
+        // 2x a backup finishes in a dead heat with the primary; at 4x
+        // speculation visibly cuts the makespan tail, which is the
+        // preset's acceptance property (bench_colocate gates it).
+        spec.faults = vec![
+            FaultSpec::Straggler {
+                node: 17,
+                factor: 0.25,
+            },
+            FaultSpec::SlaveCrash {
+                at_secs: 3.0,
+                node: 40,
+            },
+            FaultSpec::LinkDegrade {
+                at_secs: 5.0,
+                duration_secs: 20.0,
+                site: 2,
+                factor: 0.25,
+            },
+        ];
+        spec.traffic = Some(TrafficSpec {
+            clients: 100_000,
+            requests: 30_000,
+            files: 65_536,
+            zipf_theta: 0.9,
+            arrival: ArrivalProcess::Open { rps: 2_500.0 },
+            tenants: vec![
+                TenantSpec {
+                    name: "interactive".into(),
+                    weight: 0.75,
+                    write_fraction: 0.05,
+                    object_bytes: 1.0e6,
+                },
+                TenantSpec {
+                    name: "analytics".into(),
+                    weight: 0.20,
+                    write_fraction: 0.10,
+                    object_bytes: 8.0e6,
+                },
+                TenantSpec {
+                    name: "ingest".into(),
+                    weight: 0.05,
+                    write_fraction: 0.90,
+                    object_bytes: 16.0e6,
+                },
+            ],
+        });
+        spec.colocation = ColocationSpec {
+            speculative: true,
+            threshold: 1.75,
+            job_share: 0.8,
+        };
         spec
     }
 }
@@ -406,8 +574,9 @@ mod tests {
         assert_eq!(spec.name, "toml-run");
         assert_eq!(spec.topology.nodes(), 16);
         assert_eq!(spec.cfg.hardware.cores, 4, "wan profile");
-        assert_eq!(spec.workload.kind, WorkloadKind::Terasort);
-        assert!((spec.workload.bytes_per_node - 2.0e9).abs() < 1.0);
+        let workload = spec.workload.as_ref().expect("workload block parsed");
+        assert_eq!(workload.kind, WorkloadKind::Terasort);
+        assert!((workload.bytes_per_node - 2.0e9).abs() < 1.0);
         assert_eq!(spec.faults.len(), 3);
         assert!(spec.validate().is_ok());
         assert!(matches!(
@@ -511,24 +680,84 @@ mod tests {
         let traffic = spec.traffic.as_ref().expect("traffic block parsed");
         assert_eq!(traffic.clients, 5000);
         assert_eq!(traffic.tenants[0].name, "web");
+        assert!(spec.workload.is_none(), "traffic-only spec has no workload");
         assert_eq!(spec.faults.len(), 1, "faults compose with traffic");
         spec.validate().unwrap();
     }
 
     #[test]
-    fn traffic_and_workload_are_mutually_exclusive() {
+    fn traffic_and_workload_now_colocate() {
+        // The old mutual-exclusion error is gone: both blocks in one
+        // document describe a colocated run (DESIGN.md §11).
+        let spec = ScenarioSpec::from_toml(
+            "[topology]\nsites = 2\nracks_per_site = 2\nnodes_per_rack = 2\n\
+             [workload]\nkind = \"terasort\"\nbytes_per_node = \"1GB\"\n\
+             [traffic]\nrequests = 10",
+        )
+        .unwrap();
+        assert!(spec.workload.is_some(), "workload survives alongside traffic");
+        assert!(spec.traffic.is_some());
+        assert_eq!(spec.colocation, ColocationSpec::default(), "knobs default");
+        spec.validate().unwrap();
+    }
+
+    #[test]
+    fn colocation_block_parses_and_rejects_typos() {
+        let base = "[topology]\nsites = 2\nracks_per_site = 2\nnodes_per_rack = 2\n\
+                    [workload]\nkind = \"terasort\"\n[traffic]\nrequests = 10\n";
+        let spec = ScenarioSpec::from_toml(&format!(
+            "{base}[colocation]\nspeculative = false\nthreshold = 3.0\njob_share = 0.5"
+        ))
+        .unwrap();
+        assert!(!spec.colocation.speculative);
+        assert_eq!(spec.colocation.threshold, 3.0);
+        assert_eq!(spec.colocation.job_share, 0.5);
+        spec.validate().unwrap();
+        // Unknown keys error via check_known_keys, never silently default.
+        let err = ScenarioSpec::from_toml(&format!("{base}[colocation]\nthreshhold = 2.0"))
+            .unwrap_err();
+        assert!(err.contains("threshhold"), "{err}");
+    }
+
+    #[test]
+    fn colocation_rejects_bad_values_and_lonely_blocks() {
+        let base = "[topology]\nsites = 2\nracks_per_site = 2\nnodes_per_rack = 2\n\
+                    [workload]\nkind = \"terasort\"\n[traffic]\nrequests = 10\n";
+        // threshold <= 1 would speculate on healthy segments.
+        let spec = ScenarioSpec::from_toml(&format!("{base}[colocation]\nthreshold = 1.0"))
+            .unwrap();
+        let err = spec.validate().unwrap_err();
+        assert!(err.contains("threshold"), "{err}");
+        let spec = ScenarioSpec::from_toml(&format!("{base}[colocation]\njob_share = 0.0"))
+            .unwrap();
+        assert!(spec.validate().unwrap_err().contains("job_share"));
+        let spec = ScenarioSpec::from_toml(&format!("{base}[colocation]\njob_share = 1.5"))
+            .unwrap();
+        assert!(spec.validate().unwrap_err().contains("job_share"));
+        // A [colocation] block without both workloads is a mistake.
         let err = ScenarioSpec::from_toml(
-            "[workload]\nkind = \"terasort\"\n[traffic]\nrequests = 10",
+            "[traffic]\nrequests = 10\n[colocation]\nthreshold = 2.0",
         )
         .unwrap_err();
-        assert!(err.contains("mutually exclusive"), "{err}");
-        // Any [workload] key conflicts, not just `kind` — sizing must
-        // not be silently discarded by the traffic engine.
+        assert!(err.contains("[colocation]"), "{err}");
         let err = ScenarioSpec::from_toml(
-            "[workload]\nbytes_per_node = \"50GB\"\n[traffic]\nrequests = 10",
+            "[workload]\nkind = \"terasort\"\n[colocation]\nthreshold = 2.0",
         )
         .unwrap_err();
-        assert!(err.contains("mutually exclusive"), "{err}");
+        assert!(err.contains("[colocation]"), "{err}");
+    }
+
+    #[test]
+    fn analytic_workloads_refuse_to_colocate() {
+        for kind in ["terasplit", "kmeans"] {
+            let spec = ScenarioSpec::from_toml(&format!(
+                "[topology]\nsites = 2\nracks_per_site = 2\nnodes_per_rack = 2\n\
+                 [workload]\nkind = \"{kind}\"\n[traffic]\nrequests = 10"
+            ))
+            .unwrap();
+            let err = spec.validate().unwrap_err();
+            assert!(err.contains(kind), "{err}");
+        }
     }
 
     #[test]
@@ -536,9 +765,24 @@ mod tests {
         let spec = ScenarioSpec::traffic_scale128();
         spec.validate().unwrap();
         assert_eq!(spec.topology.nodes(), 128);
+        assert!(spec.workload.is_none(), "service-only preset");
         let traffic = spec.traffic.unwrap();
         assert!(traffic.requests >= 100_000, "acceptance floor");
         assert_eq!(traffic.tenants.len(), 3);
+    }
+
+    #[test]
+    fn colocate_preset_validates() {
+        let spec = ScenarioSpec::colocate_scale128();
+        spec.validate().unwrap();
+        assert_eq!(spec.topology.nodes(), 128);
+        assert!(spec.workload.is_some(), "carries the batch job");
+        assert!(spec.traffic.is_some(), "…and the client stream");
+        assert!(spec.colocation.speculative);
+        assert!(
+            spec.faults.iter().any(|f| matches!(f, FaultSpec::Straggler { .. })),
+            "the straggler is what speculation must beat"
+        );
     }
 
     #[test]

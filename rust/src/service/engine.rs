@@ -33,13 +33,19 @@
 //! Determinism contract: same spec, same report, byte for byte — all
 //! randomness flows from the spec seed through forked [`Pcg64`]
 //! streams, and every container iterated during the run is ordered.
+//!
+//! Substrate sharing: the engine does NOT own its network, event queue
+//! or fault state — every method borrows them from the driving loop.
+//! `run_traffic` is the standalone driver (service-only scenarios);
+//! `scenario::colocate` drives the same engine interleaved with a
+//! batch Sphere job on one shared substrate (DESIGN.md §11).
 
 use std::collections::{BTreeMap, VecDeque};
 
 use crate::config::{SimConfig, TransportKind};
 use crate::metrics::Metrics;
 use crate::routing::chord::{ChordRing, hash_name};
-use crate::scenario::engine::FaultState;
+use crate::scenario::engine::{FaultState, handle_degrade_end, handle_degrade_start};
 use crate::scenario::{FaultSpec, ScenarioReport, ScenarioSpec};
 use crate::sim::event::EventQueue;
 use crate::sim::netsim::{FlowId, LinkId, NetSim};
@@ -124,24 +130,100 @@ impl TrafficReport {
     }
 }
 
-/// Run a traffic scenario to completion.  Deterministic: no wall
-/// clock, no ambient randomness — the spec is the only input.
+/// Run a service-only traffic scenario to completion.  Deterministic:
+/// no wall clock, no ambient randomness — the spec is the only input.
+/// This is the standalone driver; colocated scenarios drive the same
+/// [`Engine`] from `scenario::colocate` instead.
 pub fn run_traffic(spec: &ScenarioSpec, testbed: &Testbed) -> Result<ScenarioReport, String> {
     let tspec = spec
         .traffic
         .as_ref()
         .ok_or("run_traffic called without a [traffic] block")?;
     tspec.validate()?;
-    let mut engine = Engine::new(spec, tspec, testbed)?;
-    engine.run()?;
-    let mut report = engine.into_report();
-    report.name = spec.name.clone();
-    Ok(report)
+    let n = testbed.nodes();
+    let mut state = FaultState::new(&spec.faults, n);
+    let mut net =
+        NetSim::with_capacity(4 * n + 2 * testbed.racks() + 2 * testbed.site_names.len());
+    let links = testbed.build_network(&mut net);
+    let mut q: EventQueue<Ev> = EventQueue::with_capacity(4096);
+    let mut engine = Engine::new(spec, tspec, testbed, &mut net, links.clone(), &state)?;
+    engine.schedule_fault_events(&state, &mut q);
+    engine.schedule_arrivals(&mut q);
+
+    let mut now = 0.0f64;
+    let mut batch: Vec<Ev> = Vec::new();
+    loop {
+        if engine.done() && net.active_flows() == 0 {
+            break;
+        }
+        let tq = q.peek_time();
+        let tn = net.next_completion().map(|(t, _)| t);
+        let next = match (tq, tn) {
+            (None, None) => break,
+            (Some(a), None) => a,
+            (None, Some(b)) => b,
+            (Some(a), Some(b)) => a.min(b),
+        };
+        now = next;
+        for fid in net.advance_to(next) {
+            engine.events += 1;
+            engine.flow_done(fid, now, &mut net, &mut q, &state);
+        }
+        if q.peek_time() == Some(next) {
+            batch.clear();
+            q.pop_simultaneous(&mut batch);
+            for ev in batch.drain(..) {
+                engine.events += 1;
+                match ev {
+                    Ev::Crash { fault } => {
+                        state.consumed[fault] = true;
+                        if let FaultSpec::SlaveCrash { node, .. } = state.faults[fault] {
+                            if !state.dead[node] {
+                                state.crash(node);
+                                engine.on_crash(node, now, &mut net, &mut q);
+                            }
+                        }
+                    }
+                    Ev::DegradeStart { fault } => {
+                        handle_degrade_start(&mut state, &mut net, &links, testbed, fault, now)
+                    }
+                    Ev::DegradeEnd { fault } => {
+                        handle_degrade_end(&mut state, &mut net, &links, testbed, fault, now)
+                    }
+                    other => engine.handle_event(other, now, &mut net, &mut q, &state),
+                }
+            }
+        }
+    }
+
+    let traffic = engine.traffic_report();
+    Ok(ScenarioReport {
+        name: spec.name.clone(),
+        workload: "traffic",
+        nodes: testbed.nodes(),
+        racks: testbed.racks(),
+        sites: testbed.site_names.len(),
+        makespan_secs: traffic.makespan_secs,
+        events: engine.events,
+        segments: engine.completed as usize,
+        reassignments: engine.reassignments,
+        locality_fraction: traffic.near_fraction,
+        shuffle_gbytes: engine.served_bytes / 1e9,
+        faults_injected: state.injected,
+        nodes_crashed: state.crashes,
+        speculative_launched: 0,
+        speculative_won: 0,
+        traffic: Some(traffic),
+        colocation: None,
+    })
 }
 
 // ------------------------------------------------------------ events
 
-enum Ev {
+/// Service-side events.  The fault variants are scheduled and handled
+/// by the DRIVING loop (standalone above, or `scenario::colocate`);
+/// the engine itself only ever emits the first three.
+pub(crate) enum Ev {
     /// Open-loop arrival tick: issue one request, schedule the next.
     Arrive,
     /// Closed-loop client finished thinking.
@@ -279,24 +361,26 @@ struct SlaveState {
 
 // ------------------------------------------------------------ engine
 
-struct Engine<'a> {
+/// The traffic engine's state.  Borrows its substrate (network, event
+/// queue, fault state) per call so a driving loop can share that
+/// substrate with other workloads; fields the colocation driver reads
+/// for its joint report are `pub(crate)`.
+pub(crate) struct Engine<'a> {
     tspec: &'a TrafficSpec,
     testbed: &'a Testbed,
     cfg: &'a SimConfig,
-    state: FaultState,
     models: TransportModels,
-    net: NetSim,
     links: NetLinks,
     /// One link per node modelling its read/write spindle: concurrent
     /// service slots share the disk via max-min fairness, and a
-    /// straggler is simply a slower disk link.
-    disk_read: Vec<LinkId>,
-    disk_write: Vec<LinkId>,
+    /// straggler is simply a slower disk link.  Shared with the batch
+    /// job's segment I/O in colocated runs.
+    pub(crate) disk_read: Vec<LinkId>,
+    pub(crate) disk_write: Vec<LinkId>,
     /// Nominal link capacities (rate caps are computed against these so
     /// a degradation window squeezes flows through the shared link and
     /// lifts when it ends).
-    nominal_caps: Vec<f64>,
-    q: EventQueue<Ev>,
+    pub(crate) nominal_caps: Vec<f64>,
     ring: ChordRing,
     ring_ids: Vec<u64>,
     ring_to_node: BTreeMap<u64, u32>,
@@ -312,15 +396,15 @@ struct Engine<'a> {
     // ---- counters
     issued: u64,
     outstanding: u64,
-    completed: u64,
+    pub(crate) completed: u64,
     rejected: u64,
     unavailable: u64,
-    events: u64,
-    reassignments: u64,
+    pub(crate) events: u64,
+    pub(crate) reassignments: u64,
     near_served: u64,
     meta_hits: u64,
     meta_misses: u64,
-    served_bytes: f64,
+    pub(crate) served_bytes: f64,
     replica_bytes: f64,
     peak_queue: usize,
     makespan: f64,
@@ -335,14 +419,20 @@ struct Engine<'a> {
 }
 
 impl<'a> Engine<'a> {
-    fn new(
+    /// Build the engine against an externally-owned network that
+    /// already carries the topology links (`links`).  Adds the
+    /// per-node disk links to `net`; `state` supplies the static
+    /// straggler factors baked into those disk capacities.
+    pub(crate) fn new(
         spec: &'a ScenarioSpec,
         tspec: &'a TrafficSpec,
         testbed: &'a Testbed,
+        net: &mut NetSim,
+        links: NetLinks,
+        state: &FaultState,
     ) -> Result<Engine<'a>, String> {
         let cfg = &spec.cfg;
         let n = testbed.nodes();
-        let state = FaultState::new(&spec.faults, n);
         let mut rng = Pcg64::new(cfg.seed);
         let mut ring_rng = rng.fork(1);
         let mut catalog_rng = rng.fork(2);
@@ -357,12 +447,9 @@ impl<'a> Engine<'a> {
             .collect();
         let catalog = Catalog::build(tspec.files, tspec.zipf_theta, n, testbed, &mut catalog_rng);
 
-        // Network: topology links + one read and one write disk link
-        // per node (straggler factors are static, so they bake into
-        // the disk capacity).
-        let mut net =
-            NetSim::with_capacity(4 * n + 2 * testbed.racks() + 2 * testbed.site_names.len());
-        let links = testbed.build_network(&mut net);
+        // Disk links: one read and one write spindle link per node
+        // (straggler factors are static, so they bake into the disk
+        // capacity).
         let read_eff = cfg.hardware.disk_read_bps * cfg.sphere.io_efficiency;
         let write_eff = cfg.hardware.disk_write_bps * cfg.sphere.io_efficiency;
         let disk_read: Vec<LinkId> = (0..n)
@@ -419,14 +506,11 @@ impl<'a> Engine<'a> {
             tspec,
             testbed,
             cfg,
-            state,
             models: TransportModels::default(),
-            net,
             links,
             disk_read,
             disk_write,
             nominal_caps,
-            q: EventQueue::with_capacity(4096),
             ring,
             ring_ids,
             ring_to_node,
@@ -468,25 +552,30 @@ impl<'a> Engine<'a> {
 
     // ---------------------------------------------------- scheduling
 
-    fn schedule_faults(&mut self) {
-        for (i, f) in self.state.faults.clone().into_iter().enumerate() {
-            if self.state.consumed[i] {
+    /// Schedule the fault plan into `q` (standalone driver only — a
+    /// colocated driver owns fault scheduling itself).
+    pub(crate) fn schedule_fault_events<E: From<Ev>>(
+        &self,
+        state: &FaultState,
+        q: &mut EventQueue<E>,
+    ) {
+        for (i, f) in state.faults.iter().enumerate() {
+            if state.consumed[i] {
                 continue;
             }
-            match f {
+            match *f {
                 FaultSpec::SlaveCrash { at_secs, .. } => {
-                    self.q.push_at(at_secs.max(0.0), Ev::Crash { fault: i });
+                    q.push_at(at_secs.max(0.0), Ev::Crash { fault: i }.into());
                 }
                 FaultSpec::LinkDegrade {
                     at_secs,
                     duration_secs,
                     ..
                 } => {
-                    self.q
-                        .push_at(at_secs.max(0.0), Ev::DegradeStart { fault: i });
+                    q.push_at(at_secs.max(0.0), Ev::DegradeStart { fault: i }.into());
                     let end = at_secs + duration_secs;
                     if end.is_finite() {
-                        self.q.push_at(end, Ev::DegradeEnd { fault: i });
+                        q.push_at(end, Ev::DegradeEnd { fault: i }.into());
                     }
                 }
                 FaultSpec::Straggler { .. } => {}
@@ -494,11 +583,11 @@ impl<'a> Engine<'a> {
         }
     }
 
-    fn schedule_arrivals(&mut self) {
+    pub(crate) fn schedule_arrivals<E: From<Ev>>(&mut self, q: &mut EventQueue<E>) {
         match self.tspec.arrival {
             ArrivalProcess::Open { rps } => {
                 let dt = self.rng.next_exp(rps);
-                self.q.push_at(dt, Ev::Arrive);
+                q.push_at(dt, Ev::Arrive.into());
             }
             ArrivalProcess::Closed { think_secs } => {
                 for client in 0..self.tspec.clients as u32 {
@@ -507,10 +596,16 @@ impl<'a> Engine<'a> {
                     } else {
                         0.0
                     };
-                    self.q.push_at(dt, Ev::ClientWake { client });
+                    q.push_at(dt, Ev::ClientWake { client }.into());
                 }
             }
         }
+    }
+
+    /// All requests issued and none outstanding (flows are the driving
+    /// loop's to check — it owns the network).
+    pub(crate) fn done(&self) -> bool {
+        self.issued >= self.tspec.requests && self.outstanding == 0
     }
 
     // ---------------------------------------------------- request intake
@@ -531,10 +626,17 @@ impl<'a> Engine<'a> {
         self.tenant_cdf.partition_point(|&c| c <= u) as u16
     }
 
-    fn issue_request(&mut self, client: u32, tenant: u16, now: f64) {
+    fn issue_request<E: From<Ev>>(
+        &mut self,
+        client: u32,
+        tenant: u16,
+        now: f64,
+        state: &FaultState,
+        q: &mut EventQueue<E>,
+    ) {
         let key = self.catalog.sample_key(&mut self.rng);
         let write = self.rng.next_f64() < self.tspec.tenants[tenant as usize].write_fraction;
-        let lookup_secs = self.resolve_meta(client, key, now);
+        let lookup_secs = self.resolve_meta(client, key, now, state);
         let req = self.requests.len() as u32;
         self.requests.push(Request {
             client,
@@ -551,13 +653,13 @@ impl<'a> Engine<'a> {
         self.issued += 1;
         self.outstanding += 1;
         self.t_requests[tenant as usize] += 1;
-        self.q.push_at(now + lookup_secs, Ev::Dispatch { req });
+        q.push_at(now + lookup_secs, Ev::Dispatch { req }.into());
     }
 
     /// §4 step 2: resolve the object's locations — from the session's
     /// metadata cache when fresh, else through the Chord ring.  Returns
     /// the lookup latency.
-    fn resolve_meta(&mut self, client: u32, key: u32, now: f64) -> f64 {
+    fn resolve_meta(&mut self, client: u32, key: u32, now: f64, state: &FaultState) -> f64 {
         let n = self.testbed.nodes();
         let node = client_node(self.seed, client, n);
         let (home, hit) = {
@@ -571,8 +673,8 @@ impl<'a> Engine<'a> {
         self.meta_misses += 1;
         // A crashed home node's clients re-enter the overlay through
         // the first live node.
-        let start = if self.state.dead[home] {
-            *self.state.alive().first().unwrap_or(&home)
+        let start = if state.dead[home] {
+            *state.alive().first().unwrap_or(&home)
         } else {
             home
         };
@@ -591,13 +693,13 @@ impl<'a> Engine<'a> {
     /// Live candidate slaves for a request, in the client's preference
     /// order.  Writes must land on the primary (or the surviving
     /// replica when the primary is down); reads take any live copy.
-    fn candidates(&self, req: u32) -> Vec<u32> {
+    fn candidates(&self, req: u32, state: &FaultState) -> Vec<u32> {
         let r = &self.requests[req as usize];
         let primary = self.catalog.primary[r.key as usize];
         let replica = self.catalog.replica[r.key as usize];
         if r.write {
             for cand in [primary, replica] {
-                if !self.state.dead[cand as usize] {
+                if !state.dead[cand as usize] {
                     return vec![cand];
                 }
             }
@@ -605,7 +707,7 @@ impl<'a> Engine<'a> {
         }
         let mut cands: Vec<u32> = [primary, replica]
             .into_iter()
-            .filter(|&c| !self.state.dead[c as usize])
+            .filter(|&c| !state.dead[c as usize])
             .collect();
         cands.dedup();
         let home = client_node(self.seed, r.client, self.testbed.nodes()) as usize;
@@ -613,7 +715,14 @@ impl<'a> Engine<'a> {
         cands
     }
 
-    fn dispatch(&mut self, req: u32, now: f64) {
+    fn dispatch<E: From<Ev>>(
+        &mut self,
+        req: u32,
+        now: f64,
+        net: &mut NetSim,
+        q: &mut EventQueue<E>,
+        state: &FaultState,
+    ) {
         // A missed lookup has now resolved: fill the session's
         // metadata cache, TTL clocked from the resolution.
         if self.requests[req as usize].fill_meta {
@@ -629,9 +738,9 @@ impl<'a> Engine<'a> {
                 .get_or_create(client, node)
                 .meta_insert(key as u64, now + ttl, cap);
         }
-        let cands = self.candidates(req);
+        let cands = self.candidates(req, state);
         if cands.is_empty() || self.requests[req as usize].attempts >= MAX_ATTEMPTS {
-            self.finish_non_served(req, now, false);
+            self.finish_non_served(req, now, false, q);
             return;
         }
         self.requests[req as usize].attempts += 1;
@@ -639,7 +748,7 @@ impl<'a> Engine<'a> {
         // Pass 1: an idle slot anywhere beats queueing at the nearest.
         for &cand in &cands {
             if self.slaves[cand as usize].active < slots {
-                self.start_service(req, cand, now);
+                self.start_service(req, cand, now, net);
                 return;
             }
         }
@@ -656,12 +765,18 @@ impl<'a> Engine<'a> {
             }
         }
         // Every live replica saturated: shed the request.
-        self.finish_non_served(req, now, true);
+        self.finish_non_served(req, now, true, q);
     }
 
     /// Terminal non-success: `rejected` (admission shed) or
     /// `unavailable` (no live replica / retries exhausted).
-    fn finish_non_served(&mut self, req: u32, now: f64, is_rejection: bool) {
+    fn finish_non_served<E: From<Ev>>(
+        &mut self,
+        req: u32,
+        now: f64,
+        is_rejection: bool,
+        q: &mut EventQueue<E>,
+    ) {
         let tenant = self.requests[req as usize].tenant as usize;
         if is_rejection {
             self.rejected += 1;
@@ -673,18 +788,18 @@ impl<'a> Engine<'a> {
         self.outstanding -= 1;
         self.makespan = self.makespan.max(now);
         let client = self.requests[req as usize].client;
-        self.client_think(client, now);
+        self.client_think(client, now, q);
     }
 
     /// Closed loop only: schedule the client's next cycle.
-    fn client_think(&mut self, client: u32, now: f64) {
+    fn client_think<E: From<Ev>>(&mut self, client: u32, now: f64, q: &mut EventQueue<E>) {
         if let ArrivalProcess::Closed { think_secs } = self.tspec.arrival {
             let dt = if think_secs > 0.0 {
                 self.rng.next_exp(1.0 / think_secs)
             } else {
                 0.0
             };
-            self.q.push_at(now + dt, Ev::ClientWake { client });
+            q.push_at(now + dt, Ev::ClientWake { client }.into());
         }
     }
 
@@ -693,6 +808,7 @@ impl<'a> Engine<'a> {
     /// ends touch a spindle.  The rate cap comes from the transport
     /// protocol against NOMINAL link rates (degradation constrains the
     /// shared links instead, so it lifts when the window ends).
+    #[allow(clippy::too_many_arguments)]
     fn start_transfer(
         &mut self,
         from: usize,
@@ -701,6 +817,7 @@ impl<'a> Engine<'a> {
         read_disk: Option<usize>,
         write_disk: Option<usize>,
         kind: FlowKind,
+        net: &mut NetSim,
     ) {
         let net_path = self.testbed.path(&self.links, from, to);
         let bottleneck = net_path
@@ -721,11 +838,11 @@ impl<'a> Engine<'a> {
         if let Some(node) = write_disk {
             path.push(self.disk_write[node]);
         }
-        let fid = self.net.start_flow(&path, bytes.max(1.0), proto_cap.max(1.0));
+        let fid = net.start_flow(&path, bytes.max(1.0), proto_cap.max(1.0));
         self.flows.insert(fid, kind);
     }
 
-    fn start_service(&mut self, req: u32, slave: u32, now: f64) {
+    fn start_service(&mut self, req: u32, slave: u32, now: f64, net: &mut NetSim) {
         let n = self.testbed.nodes();
         let (write, tenant, client) = {
             let r = &self.requests[req as usize];
@@ -748,9 +865,9 @@ impl<'a> Engine<'a> {
 
         let bytes = self.tspec.tenants[tenant].object_bytes;
         if write {
-            self.start_transfer(home, s, bytes, None, Some(s), FlowKind::Service { req });
+            self.start_transfer(home, s, bytes, None, Some(s), FlowKind::Service { req }, net);
         } else {
-            self.start_transfer(s, home, bytes, Some(s), None, FlowKind::Service { req });
+            self.start_transfer(s, home, bytes, Some(s), None, FlowKind::Service { req }, net);
         }
 
         let r = &mut self.requests[req as usize];
@@ -761,7 +878,7 @@ impl<'a> Engine<'a> {
 
     /// A slot freed at `slave`: serve the next queued request, fair
     /// round-robin across tenants.
-    fn dequeue_next(&mut self, slave: u32, now: f64) {
+    fn dequeue_next(&mut self, slave: u32, now: f64, net: &mut NetSim) {
         let slots = self.cfg.service.slots_per_slave.max(1);
         let s = slave as usize;
         if self.slaves[s].active >= slots || self.slaves[s].queued == 0 {
@@ -773,7 +890,7 @@ impl<'a> Engine<'a> {
             if let Some(req) = self.slaves[s].queues[idx].pop_front() {
                 self.slaves[s].rr = idx;
                 self.slaves[s].queued -= 1;
-                self.start_service(req, slave, now);
+                self.start_service(req, slave, now, net);
                 return;
             }
         }
@@ -781,12 +898,22 @@ impl<'a> Engine<'a> {
 
     // ---------------------------------------------------- completion
 
-    fn flow_done(&mut self, fid: FlowId, now: f64) {
+    /// A network flow landed.  Returns `true` when the flow belonged to
+    /// this engine (so a colocated driver can offer each completion to
+    /// both sides and count it once).
+    pub(crate) fn flow_done<E: From<Ev>>(
+        &mut self,
+        fid: FlowId,
+        now: f64,
+        net: &mut NetSim,
+        q: &mut EventQueue<E>,
+        state: &FaultState,
+    ) -> bool {
         let Some(kind) = self.flows.remove(&fid) else {
-            return;
+            return false;
         };
         let FlowKind::Service { req } = kind else {
-            return; // background replication landed; bytes already counted
+            return true; // background replication landed; bytes already counted
         };
         let (slave, tenant, write, key, near, latency_ms, client) = {
             let r = &self.requests[req as usize];
@@ -821,7 +948,7 @@ impl<'a> Engine<'a> {
             } else {
                 (partner, primary)
             };
-            if !self.state.dead[dst] && src != dst {
+            if !state.dead[dst] && src != dst {
                 self.start_transfer(
                     src,
                     dst,
@@ -832,26 +959,29 @@ impl<'a> Engine<'a> {
                         src: src as u32,
                         dst: dst as u32,
                     },
+                    net,
                 );
                 self.replica_bytes += bytes;
             }
         }
 
-        self.dequeue_next(slave, now);
-        self.client_think(client, now);
+        self.dequeue_next(slave, now, net);
+        self.client_think(client, now, q);
+        true
     }
 
     // ---------------------------------------------------- faults
 
-    fn handle_crash(&mut self, fault: usize, now: f64) {
-        self.state.consumed[fault] = true;
-        let FaultSpec::SlaveCrash { node, .. } = self.state.faults[fault] else {
-            return;
-        };
-        if self.state.dead[node] {
-            return;
-        }
-        self.state.crash(node);
+    /// React to a crash the driving loop already applied to the shared
+    /// `FaultState`: drop the node from the overlay, cancel its
+    /// transfers and re-dispatch its requests.
+    pub(crate) fn on_crash<E: From<Ev>>(
+        &mut self,
+        node: usize,
+        now: f64,
+        net: &mut NetSim,
+        q: &mut EventQueue<E>,
+    ) {
         // The overlay drops the node: later lookups route to its
         // successor (metadata is replicated there in deployed Sector).
         self.ring.leave(self.ring_ids[node]);
@@ -878,10 +1008,10 @@ impl<'a> Engine<'a> {
             .collect();
         for (fid, req) in doomed {
             self.flows.remove(&fid);
-            self.net.cancel_flow(fid);
+            net.cancel_flow(fid);
             if let Some(req) = req {
                 self.reassignments += 1;
-                self.q.push_at(now, Ev::Dispatch { req });
+                q.push_at(now, Ev::Dispatch { req }.into());
             }
         }
         // Re-dispatch everything queued at the dead slave.
@@ -889,101 +1019,59 @@ impl<'a> Engine<'a> {
         for tq in 0..tenants {
             while let Some(req) = self.slaves[node].queues[tq].pop_front() {
                 self.reassignments += 1;
-                self.q.push_at(now, Ev::Dispatch { req });
+                q.push_at(now, Ev::Dispatch { req }.into());
             }
         }
         self.slaves[node].queued = 0;
         self.slaves[node].active = 0;
     }
 
-    fn set_site_degrade(&mut self, site: usize, factor: f64) {
-        let cap = (self.testbed.wan_bps * factor).max(1.0);
-        let up = self.links.site_up[site];
-        let down = self.links.site_down[site];
-        self.net.set_link_capacity(up, cap);
-        self.net.set_link_capacity(down, cap);
-    }
+    // ---------------------------------------------------- event entry
 
-    // ---------------------------------------------------- main loop
-
-    fn run(&mut self) -> Result<(), String> {
-        self.schedule_faults();
-        self.schedule_arrivals();
+    /// Handle one service-side event.  Fault events are the driving
+    /// loop's responsibility (it owns the `FaultState` and the shared
+    /// links) and are ignored here.
+    pub(crate) fn handle_event<E: From<Ev>>(
+        &mut self,
+        ev: Ev,
+        now: f64,
+        net: &mut NetSim,
+        q: &mut EventQueue<E>,
+        state: &FaultState,
+    ) {
         let total = self.tspec.requests;
-        let mut batch: Vec<Ev> = Vec::new();
-        let mut now = 0.0f64;
-        loop {
-            if self.issued >= total && self.outstanding == 0 && self.net.active_flows() == 0 {
-                break;
-            }
-            let tq = self.q.peek_time();
-            let tn = self.net.next_completion().map(|(t, _)| t);
-            let next = match (tq, tn) {
-                (None, None) => break,
-                (Some(a), None) => a,
-                (None, Some(b)) => b,
-                (Some(a), Some(b)) => a.min(b),
-            };
-            now = next;
-            for fid in self.net.advance_to(next) {
-                self.events += 1;
-                self.flow_done(fid, now);
-            }
-            if self.q.peek_time() == Some(next) {
-                batch.clear();
-                self.q.pop_simultaneous(&mut batch);
-                for ev in batch.drain(..) {
-                    self.events += 1;
-                    match ev {
-                        Ev::Arrive => {
-                            if self.issued < total {
-                                let tenant = self.sample_tenant();
-                                let client =
-                                    self.rng.gen_range(self.tspec.clients as u64) as u32;
-                                self.issue_request(client, tenant, now);
-                                if let ArrivalProcess::Open { rps } = self.tspec.arrival {
-                                    let dt = self.rng.next_exp(rps);
-                                    self.q.push_at(now + dt, Ev::Arrive);
-                                }
-                            }
-                        }
-                        Ev::ClientWake { client } => {
-                            if self.issued < total {
-                                let tenant = self.tenant_of_client(client);
-                                self.issue_request(client, tenant, now);
-                            }
-                        }
-                        Ev::Dispatch { req } => self.dispatch(req, now),
-                        Ev::Crash { fault } => self.handle_crash(fault, now),
-                        Ev::DegradeStart { fault } => {
-                            if let FaultSpec::LinkDegrade { site, .. } = self.state.faults[fault]
-                            {
-                                self.state.count_once(fault);
-                                let f = self.state.degrade_factor_at(site, now);
-                                self.set_site_degrade(site, f);
-                            }
-                        }
-                        Ev::DegradeEnd { fault } => {
-                            self.state.consumed[fault] = true;
-                            if let FaultSpec::LinkDegrade { site, .. } = self.state.faults[fault]
-                            {
-                                let f = self.state.degrade_factor_at(site, now);
-                                self.set_site_degrade(site, f);
-                            }
-                        }
+        match ev {
+            Ev::Arrive => {
+                if self.issued < total {
+                    let tenant = self.sample_tenant();
+                    let client = self.rng.gen_range(self.tspec.clients as u64) as u32;
+                    self.issue_request(client, tenant, now, state, q);
+                    if let ArrivalProcess::Open { rps } = self.tspec.arrival {
+                        let dt = self.rng.next_exp(rps);
+                        q.push_at(now + dt, Ev::Arrive.into());
                     }
                 }
             }
+            Ev::ClientWake { client } => {
+                if self.issued < total {
+                    let tenant = self.tenant_of_client(client);
+                    self.issue_request(client, tenant, now, state, q);
+                }
+            }
+            Ev::Dispatch { req } => self.dispatch(req, now, net, q, state),
+            Ev::Crash { .. } | Ev::DegradeStart { .. } | Ev::DegradeEnd { .. } => {}
         }
-        Ok(())
     }
 
     // ---------------------------------------------------- reporting
 
-    fn into_report(mut self) -> ScenarioReport {
+    /// Fold the per-tenant samples into the SLO report.  Consumes the
+    /// latency vectors; call once, at the end of the run.
+    pub(crate) fn traffic_report(&mut self) -> TrafficReport {
         let span = self.makespan.max(1e-9);
-        let mut tenants = Vec::with_capacity(self.tspec.tenants.len());
-        for (i, t) in self.tspec.tenants.iter().enumerate() {
+        let tspec = self.tspec;
+        let mut tenants = Vec::with_capacity(tspec.tenants.len());
+        for (i, t) in tspec.tenants.iter().enumerate() {
             let lat = std::mem::take(&mut self.t_lat_ms[i]);
             let (mean, p50, p95, p99) = match Summary::of(&lat) {
                 Some(s) => (s.mean, s.p50, s.p95, s.p99),
@@ -1004,7 +1092,7 @@ impl<'a> Engine<'a> {
             });
         }
         let meta_total = self.meta_hits + self.meta_misses;
-        let traffic = TrafficReport {
+        TrafficReport {
             tenants,
             requests: self.issued,
             completed: self.completed,
@@ -1025,22 +1113,6 @@ impl<'a> Engine<'a> {
                 self.near_served as f64 / self.completed as f64
             },
             peak_queue: self.peak_queue,
-        };
-        ScenarioReport {
-            name: String::new(), // filled by run_traffic from the spec
-            workload: "traffic",
-            nodes: self.testbed.nodes(),
-            racks: self.testbed.racks(),
-            sites: self.testbed.site_names.len(),
-            makespan_secs: self.makespan,
-            events: self.events,
-            segments: self.completed as usize,
-            reassignments: self.reassignments,
-            locality_fraction: traffic.near_fraction,
-            shuffle_gbytes: self.served_bytes / 1e9,
-            faults_injected: self.state.injected,
-            nodes_crashed: self.state.crashes,
-            traffic: Some(traffic),
         }
     }
 }
@@ -1064,6 +1136,9 @@ mod tests {
         let mut spec = ScenarioSpec::paper_lan8();
         spec.topology = TopologySpec::scale_out(2, 2, 2);
         spec.name = "traffic-test".into();
+        // Service-only: with a workload present the colocation engine
+        // would run instead (it has its own tests).
+        spec.workload = None;
         spec.traffic = Some(TrafficSpec {
             clients: 1000,
             requests,

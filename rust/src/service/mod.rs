@@ -29,8 +29,10 @@
 //! rejected/unavailable counts, wired into [`crate::metrics`].
 //!
 //! Specs parse from the `[traffic]` block of a scenario TOML
-//! (`config/scenarios/traffic_*.toml`); the presence of that block
-//! switches `scenario::run_scenario` from the batch engine to this one.
+//! (`config/scenarios/traffic_*.toml`); a `[traffic]` block alone
+//! switches `scenario::run_scenario` from the batch engine to this
+//! one, and together with a `[workload]` block the two run colocated
+//! on one shared substrate (`scenario::colocate`, DESIGN.md §11).
 
 pub mod engine;
 pub mod session;

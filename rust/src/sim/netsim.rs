@@ -263,9 +263,17 @@ impl NetSim {
     /// sender). Returns the undelivered byte count so the caller can
     /// re-send it elsewhere.
     pub fn cancel_flow(&mut self, id: FlowId) -> f64 {
-        let f = self.flows.remove(&id).expect("cancel of unknown flow");
+        self.try_cancel_flow(id).expect("cancel of unknown flow")
+    }
+
+    /// Like `cancel_flow`, but tolerates an id that is no longer
+    /// active — e.g. a speculation loser that completed in the same
+    /// `advance_to` batch as the winner cancelling it.  Returns the
+    /// undelivered bytes, or `None` when the flow is gone.
+    pub fn try_cancel_flow(&mut self, id: FlowId) -> Option<f64> {
+        let f = self.flows.remove(&id)?;
         self.mark_dirty();
-        f.remaining
+        Some(f.remaining)
     }
 
     /// (time, flow) of the earliest completion among active flows, given
@@ -450,6 +458,18 @@ mod tests {
         // survivor reclaims the full link
         assert!((net.flow_rate(b) - 100.0).abs() < 1e-9);
         assert_eq!(net.active_flows(), 1);
+    }
+
+    #[test]
+    fn try_cancel_tolerates_finished_flows() {
+        let mut net = NetSim::new();
+        let l = net.add_link(100.0);
+        let a = net.start_flow(&[l], 100.0, 1e9);
+        let b = net.start_flow(&[l], 1000.0, 1e9);
+        assert!(net.try_cancel_flow(a).is_some(), "active flow cancels");
+        assert!(net.try_cancel_flow(a).is_none(), "second cancel is a no-op");
+        net.run_to_idle();
+        assert!(net.try_cancel_flow(b).is_none(), "completed flow is gone");
     }
 
     #[test]

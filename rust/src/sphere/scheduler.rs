@@ -6,7 +6,17 @@
 //!      time, unless not doing so would result in an idle SPE."
 //!
 //! The scheduler also re-queues segments whose SPE failed (fault
-//! handling) and tracks locality statistics for the benches.
+//! handling), grants *speculative* backup attempts for straggling
+//! segments (§3.2's slow-node handling, the mechanism behind
+//! Hadoop-style speculative execution — DESIGN.md §11), and tracks
+//! locality statistics for the benches.
+//!
+//! Completion is idempotent per segment: with speculation two attempts
+//! of one segment can be in flight, the first finisher wins
+//! (`complete` returns `true` exactly once per segment id) and the
+//! loser is released with `cancel_attempt`.  Segments that exhaust
+//! `max_attempts` are recorded in `exhausted` so the driving engine can
+//! surface an explicit job failure instead of silently losing work.
 
 use std::collections::{HashMap, HashSet};
 
@@ -19,12 +29,21 @@ pub struct Scheduler {
     pending: Vec<Segment>,
     /// files currently being processed by some SPE (rule 3).
     in_flight_files: HashMap<String, usize>,
-    /// segment id -> attempt count (fault handling).
+    /// segment id -> attempt count (fault handling + speculation).
     attempts: HashMap<usize, u32>,
+    /// segment ids that finished at least once (first-finisher-wins).
+    completed: HashSet<usize>,
+    /// segment ids that ran out of attempts — an explicit job failure
+    /// the engine must report, never a silent drop.
+    exhausted: Vec<usize>,
     pub locality_enabled: bool,
     pub max_attempts: u32,
     pub local_assignments: u64,
     pub remote_assignments: u64,
+    /// Speculative backup attempts granted (`speculate`).
+    pub speculative_launched: u64,
+    /// Segments whose *backup* attempt finished first.
+    pub speculative_won: u64,
 }
 
 impl Scheduler {
@@ -33,10 +52,14 @@ impl Scheduler {
             pending: segments,
             in_flight_files: HashMap::new(),
             attempts: HashMap::new(),
+            completed: HashSet::new(),
+            exhausted: Vec::new(),
             locality_enabled,
             max_attempts: 4,
             local_assignments: 0,
             remote_assignments: 0,
+            speculative_launched: 0,
+            speculative_won: 0,
         }
     }
 
@@ -46,6 +69,21 @@ impl Scheduler {
 
     pub fn is_drained(&self) -> bool {
         self.pending.is_empty()
+    }
+
+    /// Attempts consumed so far by segment `id`.
+    pub fn attempts_of(&self, id: usize) -> u32 {
+        *self.attempts.get(&id).unwrap_or(&0)
+    }
+
+    /// Segment ids that exhausted their retry budget, in failure order.
+    pub fn exhausted(&self) -> &[usize] {
+        &self.exhausted
+    }
+
+    /// Segments completed exactly once so far.
+    pub fn completed_count(&self) -> usize {
+        self.completed.len()
     }
 
     /// Pick the next segment for an idle SPE on `node`.
@@ -113,8 +151,37 @@ impl Scheduler {
         Some(seg)
     }
 
-    /// An SPE finished a segment (success path).
-    pub fn complete(&mut self, seg: &Segment) {
+    /// Grant a speculative backup attempt for an already-running
+    /// segment (DESIGN.md §11): the engine noticed the primary attempt
+    /// straggling and wants a second copy on `node`.  Refused when the
+    /// segment already finished or its attempt budget is spent — the
+    /// speculation policy may be eager, the budget is still law.
+    pub fn speculate(&mut self, seg: &Segment, node: SlaveId) -> bool {
+        if self.completed.contains(&seg.id) {
+            return false;
+        }
+        if self.attempts_of(seg.id) >= self.max_attempts {
+            return false;
+        }
+        *self.in_flight_files.entry(seg.file.clone()).or_insert(0) += 1;
+        *self.attempts.entry(seg.id).or_insert(0) += 1;
+        if seg.locations.contains(&node) {
+            self.local_assignments += 1;
+        } else {
+            self.remote_assignments += 1;
+        }
+        self.speculative_launched += 1;
+        true
+    }
+
+    /// Release the rule-3 file hold of one attempt without completing
+    /// the segment (a cancelled speculation loser, or a crashed attempt
+    /// whose sibling is still running).
+    pub fn cancel_attempt(&mut self, seg: &Segment) {
+        self.release_file(seg);
+    }
+
+    fn release_file(&mut self, seg: &Segment) {
         if let Some(n) = self.in_flight_files.get_mut(&seg.file) {
             *n -= 1;
             if *n == 0 {
@@ -123,12 +190,31 @@ impl Scheduler {
         }
     }
 
+    /// An SPE finished a segment. Returns `true` iff this is the first
+    /// completion of the segment id — with speculation, the first
+    /// finisher wins and later finishers of the same segment are
+    /// no-ops the caller must discard.
+    pub fn complete(&mut self, seg: &Segment) -> bool {
+        self.release_file(seg);
+        self.completed.insert(seg.id)
+    }
+
+    /// Record that the winning attempt of `id` was the speculative
+    /// backup, not the original (counter surfaced in ScenarioReport).
+    pub fn record_speculative_win(&mut self) {
+        self.speculative_won += 1;
+    }
+
     /// An SPE died processing `seg`: re-queue unless attempts exhausted.
-    /// Returns false when the job must abort.
+    /// The attempt count is carried in the `attempts` map keyed by
+    /// segment id, so a crash-time re-queue preserves it.  Returns
+    /// false when the job must abort — the id is also recorded in
+    /// `exhausted()` so the failure is reportable, never silent.
     pub fn fail(&mut self, seg: Segment) -> bool {
-        self.complete(&seg);
-        let attempts = *self.attempts.get(&seg.id).unwrap_or(&0);
+        self.release_file(&seg);
+        let attempts = self.attempts_of(seg.id);
         if attempts >= self.max_attempts {
+            self.exhausted.push(seg.id);
             return false;
         }
         self.pending.push(seg);
@@ -222,7 +308,7 @@ mod tests {
     fn complete_releases_file() {
         let mut s = Scheduler::new(vec![seg(0, "a", &[0]), seg(1, "a", &[0])], true);
         let first = s.assign(0).unwrap();
-        s.complete(&first);
+        assert!(s.complete(&first), "first completion wins");
         let second = s.assign(0).unwrap();
         assert_eq!(second.file, "a");
         assert_eq!(s.pending_count(), 0);
@@ -308,5 +394,74 @@ mod tests {
         assert_eq!(s.pending_count(), 1);
         let a2 = s.assign(0).unwrap();
         assert!(!s.fail(a2), "attempts exhausted aborts the job");
+        assert_eq!(s.exhausted(), &[0], "exhaustion is recorded, not silent");
+    }
+
+    #[test]
+    fn requeue_preserves_attempt_count() {
+        // Regression: a crash-time re-queue must not reset the budget —
+        // the attempt count lives in the id-keyed map, not the segment.
+        let mut s = Scheduler::new(vec![seg(0, "a", &[0])], true);
+        s.max_attempts = 3;
+        let a1 = s.assign(0).unwrap();
+        assert_eq!(s.attempts_of(0), 1);
+        assert!(s.fail(a1));
+        let a2 = s.assign(0).unwrap();
+        assert_eq!(s.attempts_of(0), 2, "requeue kept the first attempt");
+        assert!(s.fail(a2));
+        let a3 = s.assign(0).unwrap();
+        assert_eq!(s.attempts_of(0), 3);
+        assert!(!s.fail(a3), "third failure exhausts max_attempts = 3");
+    }
+
+    #[test]
+    fn speculation_first_finisher_wins() {
+        let mut s = Scheduler::new(vec![seg(0, "a", &[0, 3])], true);
+        let primary = s.assign(0).unwrap();
+        assert!(s.speculate(&primary, 3), "backup granted on the replica");
+        assert_eq!(s.speculative_launched, 1);
+        assert_eq!(s.attempts_of(0), 2, "speculation consumes an attempt");
+        // Backup finishes first: it wins...
+        assert!(s.complete(&primary), "first finisher wins");
+        s.record_speculative_win();
+        // ...and the loser is a cancelled attempt, then a late no-op.
+        s.cancel_attempt(&primary);
+        assert!(!s.complete(&primary), "second completion is discarded");
+        assert_eq!(s.completed_count(), 1, "segment completed exactly once");
+        assert_eq!(s.speculative_won, 1);
+    }
+
+    #[test]
+    fn speculation_respects_budget_and_completion() {
+        let mut s = Scheduler::new(vec![seg(0, "a", &[0, 3])], true);
+        s.max_attempts = 2;
+        let primary = s.assign(0).unwrap();
+        assert!(s.speculate(&primary, 3));
+        assert!(
+            !s.speculate(&primary, 3),
+            "budget spent: a third attempt is refused"
+        );
+        s.complete(&primary);
+        s.cancel_attempt(&primary);
+        assert!(!s.speculate(&primary, 3), "completed segments never respeculate");
+    }
+
+    #[test]
+    fn speculation_releases_rule3_holds() {
+        // Two attempts of "a" in flight hold the file twice; both the
+        // win and the cancel must release, or "a"'s sibling segment
+        // would see a stale in-flight mark forever.
+        let mut s = Scheduler::new(
+            vec![seg(0, "a", &[0, 3]), seg(1, "a", &[0]), seg(2, "b", &[0])],
+            true,
+        );
+        let primary = s.assign(0).unwrap();
+        assert_eq!(primary.id, 0);
+        assert!(s.speculate(&primary, 3));
+        s.complete(&primary);
+        s.cancel_attempt(&primary);
+        // "a" is clear again: segment 1 (file a, local) outranks "b".
+        let next = s.assign(0).unwrap();
+        assert_eq!(next.id, 1, "file hold fully released after win+cancel");
     }
 }

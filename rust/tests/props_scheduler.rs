@@ -1,0 +1,260 @@
+//! Scheduler invariants under crash/speculation interleavings
+//! (DESIGN.md §11), via the from-scratch `testkit::forall` harness:
+//!
+//!   * every segment completes exactly once, no matter how crashes and
+//!     speculative backups interleave (first-finisher-wins);
+//!   * attempts never exceed `max_attempts`, and an exhausted segment
+//!     is recorded — an explicit job failure, never a silent drop;
+//!   * rule 3 (same-file exclusion) is only waived when the SPE would
+//!     otherwise idle on something worse (rank minimality).
+
+use std::collections::HashMap;
+
+use sector_sphere::sphere::{Scheduler, Segment};
+use sector_sphere::testkit::forall;
+use sector_sphere::util::rng::Pcg64;
+
+fn make_seg(id: usize, file: usize, locations: Vec<u32>) -> Segment {
+    Segment {
+        id,
+        file: format!("f{file:02}"),
+        first_record: 0,
+        n_records: 1,
+        bytes: 1000,
+        locations,
+        whole_file: false,
+    }
+}
+
+/// Randomized driver: assign / complete / crash / speculate in any
+/// order, mirroring what the colocation engine does, and check the
+/// exactly-once + attempt-budget invariants at every step.
+fn drive_chaos(seed: u64, n_segs: usize, n_nodes: usize) -> Result<(), String> {
+    let mut rng = Pcg64::new(seed);
+    let files = (n_segs / 3).max(1);
+    let segs: Vec<Segment> = (0..n_segs)
+        .map(|i| {
+            let a = (i % n_nodes) as u32;
+            let b = ((i + 1) % n_nodes) as u32;
+            let locs = if a == b { vec![a] } else { vec![a, b] };
+            make_seg(i, i % files, locs)
+        })
+        .collect();
+    let mut sched = Scheduler::new(segs, true);
+    sched.max_attempts = 3;
+    // (segment, executing node) per live attempt.
+    let mut inflight: Vec<(Segment, u32)> = Vec::new();
+    let mut completions: HashMap<usize, u32> = HashMap::new();
+    let mut aborted = false;
+    for _step in 0..20_000 {
+        if aborted || (sched.is_drained() && inflight.is_empty()) {
+            break;
+        }
+        match rng.gen_range(10) {
+            // Bias toward assign + complete so every run drains.
+            0..=3 => {
+                let node = rng.gen_range(n_nodes as u64) as u32;
+                if let Some(s) = sched.assign(node) {
+                    if sched.attempts_of(s.id) > sched.max_attempts {
+                        return Err(format!("segment {} over budget at assign", s.id));
+                    }
+                    inflight.push((s, node));
+                }
+            }
+            4..=7 => {
+                // Complete a random attempt; its siblings lose.
+                if inflight.is_empty() {
+                    continue;
+                }
+                let k = rng.gen_range(inflight.len() as u64) as usize;
+                let (s, _) = inflight.remove(k);
+                let first = sched.complete(&s);
+                let mut i = 0;
+                while i < inflight.len() {
+                    if inflight[i].0.id == s.id {
+                        let (loser, _) = inflight.remove(i);
+                        sched.cancel_attempt(&loser);
+                    } else {
+                        i += 1;
+                    }
+                }
+                if !first {
+                    return Err(format!("segment {} completed twice", s.id));
+                }
+                *completions.entry(s.id).or_insert(0) += 1;
+            }
+            8 => {
+                // Crash the attempt's node: re-queue unless a sibling
+                // (speculative backup) survives elsewhere.
+                if inflight.is_empty() {
+                    continue;
+                }
+                let k = rng.gen_range(inflight.len() as u64) as usize;
+                let (s, _) = inflight.remove(k);
+                if inflight.iter().any(|(o, _)| o.id == s.id) {
+                    sched.cancel_attempt(&s);
+                } else {
+                    let id = s.id;
+                    let attempts = sched.attempts_of(id);
+                    if !sched.fail(s) {
+                        if attempts < sched.max_attempts {
+                            return Err(format!(
+                                "segment {id} aborted early at {attempts} attempts"
+                            ));
+                        }
+                        if !sched.exhausted().contains(&id) {
+                            return Err(format!(
+                                "segment {id}: abort not recorded in exhausted()"
+                            ));
+                        }
+                        aborted = true;
+                    }
+                }
+            }
+            _ => {
+                // Speculate a backup for a random single-attempt segment.
+                if inflight.is_empty() {
+                    continue;
+                }
+                let k = rng.gen_range(inflight.len() as u64) as usize;
+                let (s, node) = inflight[k].clone();
+                if inflight.iter().filter(|(o, _)| o.id == s.id).count() > 1 {
+                    continue;
+                }
+                let backup = s
+                    .locations
+                    .iter()
+                    .copied()
+                    .find(|&l| l != node)
+                    .unwrap_or((node + 1) % n_nodes as u32);
+                if sched.speculate(&s, backup) {
+                    if sched.attempts_of(s.id) > sched.max_attempts {
+                        return Err(format!("segment {} over budget at speculate", s.id));
+                    }
+                    inflight.push((s, backup));
+                }
+            }
+        }
+    }
+    if !aborted {
+        if !(sched.is_drained() && inflight.is_empty()) {
+            return Err("driver did not drain in 20k steps".into());
+        }
+        for id in 0..n_segs {
+            let got = completions.get(&id).copied().unwrap_or(0);
+            if got != 1 {
+                return Err(format!("segment {id} completed {got} times (want 1)"));
+            }
+        }
+    }
+    for id in 0..n_segs {
+        if sched.attempts_of(id) > sched.max_attempts {
+            return Err(format!("segment {id}: attempts exceed max_attempts"));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_exactly_once_and_budget_under_chaos() {
+    forall(
+        "segments complete exactly once; attempts never exceed the budget",
+        120,
+        |rng: &mut Pcg64| {
+            (
+                rng.next_u64(),
+                1 + rng.gen_range(20) as usize,
+                1 + rng.gen_range(6) as usize,
+            )
+        },
+        |&(seed, n_segs, n_nodes)| drive_chaos(seed, n_segs.max(1), n_nodes.max(1)),
+    );
+}
+
+fn rank(s: &Segment, node: u32, busy: &HashMap<String, usize>) -> u32 {
+    let local = s.locations.contains(&node);
+    let clear = !busy.contains_key(&s.file);
+    match (local, clear) {
+        (true, true) => 0,
+        (true, false) => 1,
+        (false, true) => 2,
+        (false, false) => 3,
+    }
+}
+
+/// Rule-3 formalization: a segment whose file is in flight (rank 1/3)
+/// is assigned only when nothing of better rank was pending — i.e. the
+/// same-file exclusion is waived exactly when the SPE would otherwise
+/// idle on that preference level.
+fn drive_rule3(seed: u64, n_segs: usize, n_nodes: usize) -> Result<(), String> {
+    let mut rng = Pcg64::new(seed);
+    let n_files = 1 + n_segs / 2;
+    let segs: Vec<Segment> = (0..n_segs)
+        .map(|i| {
+            let file = rng.gen_range(n_files as u64) as usize;
+            let loc = rng.gen_range(n_nodes as u64) as u32;
+            make_seg(i, file, vec![loc])
+        })
+        .collect();
+    let mut pending_mirror: Vec<Segment> = segs.clone();
+    let mut busy: HashMap<String, usize> = HashMap::new();
+    let mut inflight: Vec<Segment> = Vec::new();
+    let mut sched = Scheduler::new(segs, true);
+    for _ in 0..(4 * n_segs) {
+        if sched.is_drained() {
+            break;
+        }
+        let node = rng.gen_range(n_nodes as u64) as u32;
+        let Some(got) = sched.assign(node) else {
+            return Err("plain assign declined with segments pending".into());
+        };
+        let got_rank = rank(&got, node, &busy);
+        let best = pending_mirror
+            .iter()
+            .map(|s| rank(s, node, &busy))
+            .min()
+            .expect("mirror tracks pending");
+        if got_rank != best {
+            return Err(format!(
+                "segment {} assigned at rank {got_rank}, but rank {best} was \
+                 pending (file {:?} busy: {}) — rule 3 waived while a better \
+                 choice existed",
+                got.id,
+                got.file,
+                busy.contains_key(&got.file),
+            ));
+        }
+        pending_mirror.retain(|s| s.id != got.id);
+        *busy.entry(got.file.clone()).or_insert(0) += 1;
+        inflight.push(got);
+        // Randomly complete an in-flight segment to release its file.
+        if !inflight.is_empty() && rng.next_f64() < 0.5 {
+            let k = rng.gen_range(inflight.len() as u64) as usize;
+            let s = inflight.remove(k);
+            sched.complete(&s);
+            if let Some(n) = busy.get_mut(&s.file) {
+                *n -= 1;
+                if *n == 0 {
+                    busy.remove(&s.file);
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_rule3_waived_only_when_spe_would_idle() {
+    forall(
+        "same-file exclusion waived only when the SPE would idle",
+        150,
+        |rng: &mut Pcg64| {
+            (
+                rng.next_u64(),
+                1 + rng.gen_range(16) as usize,
+                1 + rng.gen_range(4) as usize,
+            )
+        },
+        |&(seed, n_segs, n_nodes)| drive_rule3(seed, n_segs.max(1), n_nodes.max(1)),
+    );
+}

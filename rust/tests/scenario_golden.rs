@@ -1,0 +1,86 @@
+//! Golden determinism suite: each scenario preset runs twice and the
+//! serialized (Debug-formatted) report must be byte-identical — the
+//! determinism contract stated in DESIGN.md §4/§10/§11, checked at the
+//! serialization level so even float formatting drift would trip it.
+//!
+//! The paper presets and the batch scale128 run at full size.  The
+//! request-heavy service presets run here as scaled-down clones (these
+//! tests run in debug builds); their full-size determinism is gated in
+//! release builds by benches/bench_traffic.rs, benches/bench_colocate.rs
+//! and examples/scenario_suite.rs.
+
+use sector_sphere::scenario::{run_scenario, ScenarioSpec};
+use sector_sphere::service::ArrivalProcess;
+use sector_sphere::util::bytes::GB;
+
+fn assert_golden(spec: &ScenarioSpec) {
+    let a = run_scenario(spec).unwrap_or_else(|e| panic!("{}: {e}", spec.name));
+    let b = run_scenario(spec).unwrap_or_else(|e| panic!("{}: {e}", spec.name));
+    assert_eq!(
+        format!("{a:?}"),
+        format!("{b:?}"),
+        "{}: serialized reports must be byte-identical",
+        spec.name
+    );
+}
+
+#[test]
+fn golden_paper_wan6() {
+    assert_golden(&ScenarioSpec::paper_wan6());
+}
+
+#[test]
+fn golden_paper_lan8() {
+    assert_golden(&ScenarioSpec::paper_lan8());
+}
+
+#[test]
+fn golden_scale128() {
+    assert_golden(&ScenarioSpec::scale128());
+}
+
+#[test]
+fn golden_traffic_scale128_scaled() {
+    let mut spec = ScenarioSpec::traffic_scale128();
+    let t = spec.traffic.as_mut().expect("traffic preset");
+    t.requests = 4_000;
+    t.clients = 20_000;
+    t.arrival = ArrivalProcess::Open { rps: 2_000.0 };
+    assert_golden(&spec);
+}
+
+#[test]
+fn golden_colocate_scale128_scaled() {
+    let mut spec = ScenarioSpec::colocate_scale128();
+    spec.workload.as_mut().expect("workload preset").bytes_per_node = 0.25 * GB as f64;
+    let t = spec.traffic.as_mut().expect("traffic preset");
+    t.requests = 3_000;
+    t.clients = 20_000;
+    t.arrival = ArrivalProcess::Open { rps: 1_500.0 };
+    assert_golden(&spec);
+}
+
+#[test]
+fn golden_colocate_toml_matches_preset_shape() {
+    // The shipped TOML must stay in sync with the built-in preset:
+    // same topology, fault plan, colocation knobs and tenant mix.
+    let text = std::fs::read_to_string(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/config/scenarios/colocate_scale128.toml"
+    ))
+    .expect("preset TOML readable");
+    let from_toml = ScenarioSpec::from_toml(&text).expect("preset TOML parses");
+    let preset = ScenarioSpec::colocate_scale128();
+    assert_eq!(from_toml.name, preset.name);
+    assert_eq!(from_toml.topology.nodes(), preset.topology.nodes());
+    // TOML fault subsections parse in name order; compare as a set.
+    assert_eq!(from_toml.faults.len(), preset.faults.len());
+    for f in &preset.faults {
+        assert!(from_toml.faults.contains(f), "TOML missing fault {f:?}");
+    }
+    assert_eq!(from_toml.colocation, preset.colocation);
+    assert_eq!(
+        from_toml.traffic.as_ref().map(|t| (t.requests, t.clients, t.tenants.len())),
+        preset.traffic.as_ref().map(|t| (t.requests, t.clients, t.tenants.len())),
+    );
+}
