@@ -31,6 +31,8 @@ fn main() {
         load_or(ScenarioSpec::scale128(), "scale128.toml"),
         load_or(ScenarioSpec::traffic_scale128(), "traffic_scale128.toml"),
         load_or(ScenarioSpec::colocate_scale128(), "colocate_scale128.toml"),
+        load_or(ScenarioSpec::compare_wan4(), "compare_wan4.toml"),
+        load_or(ScenarioSpec::compare_scale128(), "compare_scale128.toml"),
     ];
     println!(
         "{:<28} {:>6} {:>6} {:>12} {:>9} {:>9} {:>7} {:>7}",
@@ -64,6 +66,18 @@ fn main() {
             println!(
                 "  `- job done in {:>8.1} s; speculation {} launched / {} won",
                 co.job_makespan_secs, a.speculative_launched, a.speculative_won
+            );
+        }
+        if let Some(cmp) = &a.comparison {
+            println!(
+                "  `- sphere {:>8.1} s vs hadoop {:>8.1} s -> speedup {:.2}x \
+                 (hadoop wan {:.2} GB, spec {}/{})",
+                cmp.sphere.makespan_secs,
+                cmp.hadoop.makespan_secs,
+                cmp.speedup,
+                cmp.hadoop.tier.wan / 1e9,
+                cmp.hadoop.speculative_won,
+                cmp.hadoop.speculative_launched,
             );
         }
     }

@@ -1,0 +1,158 @@
+//! Head-to-head gate (DESIGN.md §12): run the two compare presets —
+//! the paper's 4-node WAN Terasort and the 128-node faulted scale-out
+//! — through BOTH engines, twice each for the determinism contract,
+//! then check the Sphere/Hadoop speedup ratio and the determinism hash
+//! against the committed baseline in `BENCH_compare.json` at the repo
+//! root.  Any drift fails the bench (and therefore CI's
+//! bench-trajectory job); an intentional recalibration re-runs with
+//! `BENCH_COMPARE_UPDATE=1` and commits the rewritten JSON.
+//!
+//!     cargo bench --bench bench_compare
+//!
+//! The emitted JSON carries ONLY deterministic simulation outputs (no
+//! wall clock), so the file is byte-stable across runs of one build:
+//! per-preset makespans for both systems, speedups, per-tier WAN
+//! bytes, speculation counters, and an FNV hash of each serialized
+//! report.  Wall-clock timings are printed to stdout instead.
+
+use sector_sphere::bench::{time_fn, BenchJson};
+use sector_sphere::routing::hash_name;
+use sector_sphere::scenario::{run_scenario, ScenarioReport, ScenarioSpec};
+
+/// Marker a bootstrap baseline carries before the first real run.
+const UNSET: &str = "UNSET";
+
+fn baseline_path() -> std::path::PathBuf {
+    let base = std::env::var("CARGO_MANIFEST_DIR")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("."));
+    base.join("BENCH_compare.json")
+}
+
+/// Pull `"key": value` out of the flat baseline JSON without serde.
+fn field<'a>(json: &'a str, key: &str) -> Option<&'a str> {
+    let tag = format!("\"{key}\": ");
+    let start = json.find(&tag)? + tag.len();
+    let rest = &json[start..];
+    let end = rest.find(&[',', '}'][..])?;
+    Some(rest[..end].trim().trim_matches('"'))
+}
+
+fn run_preset(name: &str, spec: &ScenarioSpec, json: &mut BenchJson) -> (ScenarioReport, u64) {
+    let a = run_scenario(spec).unwrap_or_else(|e| panic!("{name}: {e}"));
+    let b = run_scenario(spec).unwrap_or_else(|e| panic!("{name} rerun: {e}"));
+    assert_eq!(
+        format!("{a:?}"),
+        format!("{b:?}"),
+        "{name}: serialized reports must be byte-identical"
+    );
+    let hash = hash_name(&format!("{a:?}"));
+    let t = time_fn(name, 1, 3, || run_scenario(spec).unwrap());
+    let cmp = a.comparison.clone().expect("compare preset reports both systems");
+    println!(
+        "{name}: sphere {:.1} s vs hadoop {:.1} s -> speedup {:.2}x ({:.0} ms wall)",
+        cmp.sphere.makespan_secs,
+        cmp.hadoop.makespan_secs,
+        cmp.speedup,
+        t.secs.mean * 1e3
+    );
+    for s in [&cmp.sphere, &cmp.hadoop] {
+        println!(
+            "  {:<7} tasks {:>5}  local {:>3.0}%  nic {:>7.2} GB  rack {:>7.2} GB  \
+             wan {:>7.2} GB  spec {}/{}",
+            s.system,
+            s.tasks,
+            s.locality_fraction * 100.0,
+            s.tier.nic / 1e9,
+            s.tier.rack / 1e9,
+            s.tier.wan / 1e9,
+            s.speculative_won,
+            s.speculative_launched,
+        );
+    }
+    assert!(
+        cmp.speedup > 1.0,
+        "{name}: the paper's headline must hold — Sphere beats Hadoop \
+         (got {:.2}x)",
+        cmp.speedup
+    );
+    json.num(&format!("{name}_sphere_makespan_secs"), cmp.sphere.makespan_secs)
+        .num(&format!("{name}_hadoop_makespan_secs"), cmp.hadoop.makespan_secs)
+        .num(&format!("{name}_speedup"), cmp.speedup)
+        .num(&format!("{name}_sphere_wan_gbytes"), cmp.sphere.tier.wan / 1e9)
+        .num(&format!("{name}_hadoop_wan_gbytes"), cmp.hadoop.tier.wan / 1e9)
+        .int(&format!("{name}_hadoop_spec_launched"), cmp.hadoop.speculative_launched)
+        .int(&format!("{name}_hadoop_spec_won"), cmp.hadoop.speculative_won)
+        .int(&format!("{name}_events"), a.events);
+    (a, hash)
+}
+
+fn main() {
+    let mut json = BenchJson::new("compare");
+    json.text("bench", "compare");
+
+    let (_, h_wan4) = run_preset("compare_wan4", &ScenarioSpec::compare_wan4(), &mut json);
+    let (s128, h_s128) =
+        run_preset("compare_scale128", &ScenarioSpec::compare_scale128(), &mut json);
+    assert_eq!(s128.nodes_crashed, 1, "the scale128 fault plan fired");
+    assert!(
+        s128.comparison.as_ref().unwrap().hadoop.speculative_launched > 0,
+        "the 2x straggler must trip Hadoop's speculation rule"
+    );
+
+    let hash = format!("{:016x}-{:016x}", h_wan4, h_s128);
+    json.text("determinism_hash", &hash);
+
+    // ---- regression gate against the committed baseline ----
+    // Read the committed file BEFORE overwriting it, and write the new
+    // numbers BEFORE any drift panic — the CI artifact must carry the
+    // new values even when the gate trips, or the failure is only
+    // diagnosable from the job log.
+    let committed = std::fs::read_to_string(baseline_path());
+    match json.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("BENCH_compare.json not written: {e}"),
+    }
+    let update = std::env::var("BENCH_COMPARE_UPDATE").is_ok();
+    match committed {
+        Ok(committed) => {
+            let base_hash = field(&committed, "determinism_hash").unwrap_or(UNSET);
+            if base_hash == UNSET {
+                println!(
+                    "baseline is a bootstrap placeholder: commit the rewritten \
+                     BENCH_compare.json to arm the drift gate"
+                );
+            } else if update {
+                println!("BENCH_COMPARE_UPDATE set: accepting new baseline {hash}");
+            } else {
+                let mut drift = Vec::new();
+                if base_hash != hash {
+                    drift.push(format!("determinism hash {base_hash} -> {hash}"));
+                }
+                for key in ["compare_wan4_speedup", "compare_scale128_speedup"] {
+                    let old: f64 = field(&committed, key)
+                        .and_then(|v| v.parse().ok())
+                        .unwrap_or(f64::NAN);
+                    let new: f64 = field(&json.render(), key)
+                        .and_then(|v| v.parse().ok())
+                        .unwrap_or(f64::NAN);
+                    if !(old.is_finite() && (old - new).abs() <= 1e-9 * old.abs().max(1.0)) {
+                        drift.push(format!("{key} {old} -> {new}"));
+                    }
+                }
+                if !drift.is_empty() {
+                    for d in &drift {
+                        eprintln!("DRIFT: {d}");
+                    }
+                    panic!(
+                        "bench_compare drifted from the committed baseline — if \
+                         intentional, rerun with BENCH_COMPARE_UPDATE=1 and commit \
+                         the rewritten BENCH_compare.json"
+                    );
+                }
+                println!("baseline check: speedups and determinism hash match");
+            }
+        }
+        Err(_) => println!("no committed baseline found; wrote a fresh one"),
+    }
+}

@@ -207,8 +207,18 @@ impl Default for SphereParams {
 pub struct HadoopParams {
     /// HDFS block size (paper used 128 MB, up from the 64 MB default).
     pub block_bytes: u64,
+    /// Input-data replication for the baseline engine's block map.
+    /// Stock HDFS defaults to 3; the head-to-head keeps 2 so both
+    /// systems carry the same redundancy as the Sector deployment and
+    /// survive the same crash plans (DESIGN.md §12).
+    pub replication_in: usize,
     /// Output replication during job writes (dfs.replication).
     pub replication_out: usize,
+    /// Concurrent map tasks per TaskTracker
+    /// (mapred.tasktracker.map.tasks.maximum; 0.16 default 2).
+    pub map_slots: usize,
+    /// Concurrent reduce tasks per TaskTracker (0.16 default 2).
+    pub reduce_slots: usize,
     /// Per-task JVM startup + scheduling latency, seconds.
     pub task_startup_secs: f64,
     /// Effective fraction of raw disk bandwidth through the Java stream
@@ -232,7 +242,10 @@ impl Default for HadoopParams {
     fn default() -> Self {
         Self {
             block_bytes: 128 * MB,
+            replication_in: 2,
             replication_out: 1,
+            map_slots: 2,
+            reduce_slots: 2,
             task_startup_secs: 1.2,
             io_efficiency: 0.48,
             hdfs_write_efficiency: 0.32,
@@ -333,8 +346,14 @@ impl SimConfig {
             self.hadoop.block_bytes =
                 parse_bytes(v.as_str().ok_or("hadoop.block must be a string")?)?;
         }
+        self.hadoop.replication_in =
+            t.int_or("hadoop.replication_in", self.hadoop.replication_in as i64).max(1) as usize;
         self.hadoop.replication_out =
             t.int_or("hadoop.replication_out", self.hadoop.replication_out as i64) as usize;
+        self.hadoop.map_slots =
+            t.int_or("hadoop.map_slots", self.hadoop.map_slots as i64).max(1) as usize;
+        self.hadoop.reduce_slots =
+            t.int_or("hadoop.reduce_slots", self.hadoop.reduce_slots as i64).max(1) as usize;
         self.hadoop.cores_used =
             t.int_or("hadoop.cores_used", self.hadoop.cores_used as i64) as usize;
         self.service.slots_per_slave =
@@ -372,6 +391,9 @@ mod tests {
         assert_eq!(c.hardware.cores, 4);
         assert!(c.sphere.seg_min_bytes < c.sphere.seg_max_bytes);
         assert_eq!(c.hadoop.block_bytes, 128 * MB);
+        assert_eq!(c.hadoop.map_slots, 2, "0.16 TaskTracker defaults");
+        assert_eq!(c.hadoop.reduce_slots, 2);
+        assert_eq!(c.hadoop.replication_in, 2, "matched to Sector's replica count");
         assert_eq!(c.sphere_transport, TransportKind::Udt);
         let l = SimConfig::lan_default();
         assert_eq!(l.hardware.cores, 8);
@@ -392,6 +414,8 @@ mod tests {
             transport = "tcp"
             [hadoop]
             block = "64MB"
+            map_slots = 4
+            replication_in = 3
             "#,
         )
         .unwrap();
@@ -402,6 +426,8 @@ mod tests {
         assert_eq!(c.sphere.seg_min_bytes, 16 * MB);
         assert_eq!(c.sphere_transport, TransportKind::Tcp);
         assert_eq!(c.hadoop.block_bytes, 64 * MB);
+        assert_eq!(c.hadoop.map_slots, 4);
+        assert_eq!(c.hadoop.replication_in, 3);
     }
 
     #[test]

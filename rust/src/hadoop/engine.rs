@@ -1,0 +1,1325 @@
+//! Event-driven Hadoop 0.16 baseline on the shared scenario substrate
+//! (DESIGN.md §12).
+//!
+//! Before this engine the `hadoop` module held a byte-level MapReduce
+//! (threads + real bytes, for correctness cross-checks) and a
+//! closed-form cost model (`simjob`, the Table 1/2 columns) — neither
+//! reachable from the scenario layer, so every fault scenario was
+//! Sphere-only.  This engine runs the baseline on the EXACT substrate
+//! the Sphere scenario engine uses: a `TopologySpec`-derived `NetSim`
+//! (topology links plus per-node disk links), one `EventQueue`, and
+//! the scenario `FaultState` — so a crash, WAN brown-out or straggler
+//! hits Hadoop at the same virtual time, on the same node or site, as
+//! it hits Sphere in a `[compare]` run.
+//!
+//! Model (0.16 structure, event granularity):
+//!
+//! * **HDFS block map** — `hdfs::Placement` scatters
+//!   `bytes_per_node / hadoop.block` blocks per node with the NameNode
+//!   placement rule (write-local first replica, off-rack second).  A
+//!   DataNode death triggers re-replication flows that contend with
+//!   the job on the same links; a block losing its last replica fails
+//!   the run (matching the Sphere engine's data-loss semantics).
+//! * **Map** — one task per block, `hadoop.map_slots` concurrent per
+//!   TaskTracker, a JVM fork (`task_startup_secs`) before each, I/O at
+//!   `hadoop.io_efficiency` through the node's shared disk links
+//!   (read + spill).  Placement is the real `sphere::Scheduler` with
+//!   locality on — Hadoop's JobTracker also preferred data-local maps.
+//! * **Shuffle** — a completed map's output rides TCP with untuned
+//!   2008 socket buffers (64 KB windows; §6.3: "Hadoop may not have
+//!   been [tested] using 10 Gb/s NICs") from the mapper's spill disk
+//!   to a reducer's disk — MATERIALIZED intermediates, so shuffles and
+//!   maps contend for spindles.  Fetches overlap the map tail; the
+//!   map → reduce BARRIER waits for every map AND every fetch.
+//! * **Reduce** — one partition per live node, `reduce_slots` per
+//!   node: multi-pass merge, reduce CPU, then the job output through
+//!   the HDFS client write pipeline (`hdfs_write_efficiency`).
+//! * **Speculative execution** — per Hadoop's rule: once enough tasks
+//!   completed, an attempt running [`SPEC_SLOWDOWN`]× past the mean
+//!   completed-task duration gets a backup on another live holder with
+//!   a free slot (first finisher wins, via the scheduler's
+//!   first-completion contract — parity with Sphere's PR-3
+//!   speculation).
+//! * **Crash semantics** — the famous asymmetry: map outputs are NOT
+//!   replicated, so a crash that kills a mapper mid-fetch forces the
+//!   map to RE-EXECUTE from a surviving input replica (`map_reruns`),
+//!   while Sphere re-reads the replicated stage output.  Fetches
+//!   toward the dead node re-route; its queued/running tasks re-enter
+//!   the scheduler under the shared `max_attempts` budget.
+//!
+//! Terasplit maps the same machinery to a map-only scan streaming
+//! every block through one client's entropy scanner (a dedicated scan
+//! link serializes the client side); Filegen is a write-only job
+//! through the HDFS client pipeline.  Deterministic end to end: the
+//! spec is the only input.
+
+use std::collections::{BTreeMap, HashSet};
+
+use crate::config::SimConfig;
+use crate::scenario::engine::{
+    handle_degrade_end, handle_degrade_start, pick_dst_in, FaultState, TierBytes,
+};
+use crate::scenario::{FaultSpec, ScenarioSpec, WorkloadKind};
+use crate::sim::event::EventQueue;
+use crate::sim::netsim::{FlowId, LinkId, NetSim};
+use crate::sphere::scheduler::Scheduler;
+use crate::sphere::segment::Segment;
+use crate::topology::{rack_diverse_replica, NetLinks, Testbed};
+use crate::transport::TcpModel;
+
+use super::hdfs::Placement;
+
+/// Hadoop's speculation rule: a task whose elapsed time exceeds this
+/// multiple of the mean completed-task duration gets one backup
+/// attempt (0.16's "20% behind the average progress" rule).
+const SPEC_SLOWDOWN: f64 = 1.2;
+
+/// Completed tasks before the running mean is trusted.
+const SPEC_MIN_SAMPLES: usize = 5;
+
+/// What one Hadoop baseline run produced (the `hadoop` half of a
+/// `scenario::ComparisonReport`).
+#[derive(Clone, Debug)]
+pub struct HadoopRun {
+    pub makespan_secs: f64,
+    /// (stage name, end time): map / shuffle / reduce for terasort,
+    /// scan for terasplit, write for filegen.
+    pub stage_ends: Vec<(String, f64)>,
+    pub events: u64,
+    pub map_tasks: usize,
+    pub reduce_tasks: usize,
+    /// Tasks completed exactly once (reruns and speculation losers not
+    /// double-counted).
+    pub tasks_completed: usize,
+    /// Fraction of scheduler assignments that were data-local.
+    pub local_fraction: f64,
+    pub shuffle_gbytes: f64,
+    /// Bytes moved between nodes, by deepest link tier crossed.
+    pub tier: TierBytes,
+    pub speculative_launched: u64,
+    pub speculative_won: u64,
+    pub reassignments: u64,
+    /// Map tasks re-executed because their spilled output died with
+    /// its node (Hadoop intermediates are not replicated).
+    pub map_reruns: u64,
+    /// NameNode re-replication traffic after DataNode deaths.
+    pub re_replicated_gbytes: f64,
+    pub faults_injected: usize,
+    pub nodes_crashed: usize,
+}
+
+// ------------------------------------------------------------ events
+
+enum HEv {
+    /// JVM fork finished: start the attempt's I/O flow.
+    TaskStart { gen: u64 },
+    /// Re-scan in-flight attempts for speculation candidates.
+    SpecCheck,
+    Crash { fault: usize },
+    DegradeStart { fault: usize },
+    DegradeEnd { fault: usize },
+}
+
+#[derive(Clone, Copy)]
+enum HFlow {
+    /// A task attempt's I/O pipeline.
+    Task { gen: u64 },
+    /// Map-output fetch toward a reducer node; `block` identifies the
+    /// producing map so a source crash can re-execute it.
+    Shuffle { src: usize, dst: usize, block: usize },
+    /// Job-output replication (dfs.replication > 1); blocks the phase.
+    Output { dst: usize },
+    /// NameNode re-replication restoring `block` onto `dst`; becomes a
+    /// usable replica only when it lands.  Does NOT block the barrier.
+    ReRep { block: usize, src: usize, dst: usize },
+}
+
+/// One running (or JVM-forking) attempt.
+struct Attempt {
+    node: usize,
+    seg: Segment,
+    started: f64,
+    fid: Option<FlowId>,
+    speculative: bool,
+    /// Map re-execution after output loss — tracked outside the
+    /// scheduler, whose first completion is already recorded.
+    rerun: bool,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Phase {
+    Map,
+    Reduce,
+    Scan,
+    Write,
+}
+
+impl Phase {
+    fn name(self) -> &'static str {
+        match self {
+            Phase::Map => "map",
+            Phase::Reduce => "reduce",
+            Phase::Scan => "scan",
+            Phase::Write => "write",
+        }
+    }
+
+    fn shuffles(self) -> bool {
+        self == Phase::Map
+    }
+
+    /// Phases whose tasks read HDFS input blocks (block ids = seg ids).
+    fn reads_blocks(self) -> bool {
+        matches!(self, Phase::Map | Phase::Scan)
+    }
+}
+
+// ------------------------------------------------------------ engine
+
+struct HadoopEngine<'a> {
+    testbed: &'a Testbed,
+    cfg: &'a SimConfig,
+    phases: &'static [Phase],
+    phase_idx: usize,
+    bytes_per_node: f64,
+    block_bytes: f64,
+    placement: Placement,
+    links: NetLinks,
+    disk_read: Vec<LinkId>,
+    disk_write: Vec<LinkId>,
+    /// Terasplit only: the client's scan stage, shared by every stream.
+    scan_link: Option<LinkId>,
+    client: usize,
+    nominal_caps: Vec<f64>,
+    tcp_shuffle: TcpModel,
+    tcp_bulk: TcpModel,
+    sched: Scheduler,
+    inflight: BTreeMap<u64, Attempt>,
+    /// Live attempt gens per task id (speculation bookkeeping).
+    by_seg: BTreeMap<usize, Vec<u64>>,
+    /// Tasks that already got their one backup this phase.
+    speculated: HashSet<usize>,
+    /// Maps awaiting re-execution after output loss.
+    rerun_queue: Vec<Segment>,
+    dur_sum: f64,
+    dur_n: usize,
+    next_gen: u64,
+    running: Vec<usize>,
+    flows: BTreeMap<FlowId, HFlow>,
+    speculative_enabled: bool,
+    spec_check_at: Option<f64>,
+    // ---- counters
+    tasks_completed: usize,
+    reduce_tasks: usize,
+    reassignments: u64,
+    map_reruns: u64,
+    shuffle_bytes: f64,
+    re_rep_bytes: f64,
+    tier: TierBytes,
+    acc_local: u64,
+    acc_remote: u64,
+    acc_spec_launched: u64,
+    acc_spec_won: u64,
+    stage_ends: Vec<(String, f64)>,
+    last_task_done: f64,
+    done: bool,
+    makespan: f64,
+}
+
+/// Run the Hadoop baseline to completion on a substrate built from
+/// `testbed` under the spec's fault plan.  Deterministic: the spec is
+/// the only input.
+pub fn run_hadoop(spec: &ScenarioSpec, testbed: &Testbed) -> Result<HadoopRun, String> {
+    let workload = spec
+        .workload
+        .as_ref()
+        .ok_or("hadoop baseline requires a [workload] block")?;
+    let phases: &'static [Phase] = match workload.kind {
+        WorkloadKind::Terasort => &[Phase::Map, Phase::Reduce],
+        WorkloadKind::Terasplit => &[Phase::Scan],
+        WorkloadKind::Filegen => &[Phase::Write],
+        other => {
+            return Err(format!(
+                "hadoop baseline does not run {} (terasort|terasplit|filegen)",
+                other.name()
+            ))
+        }
+    };
+    let cfg = &spec.cfg;
+    let h = &cfg.hadoop;
+    let n = testbed.nodes();
+    let mut state = FaultState::new(&spec.faults, n);
+
+    let mut net = NetSim::with_capacity(
+        4 * n + 2 * testbed.racks() + 2 * testbed.site_names.len() + 1,
+    );
+    let links = testbed.build_network(&mut net);
+    // Per-node disk links with the straggler factor baked in (same
+    // construction as the service/colocation engines).
+    let read_eff = cfg.hardware.disk_read_bps * h.io_efficiency;
+    let write_eff = cfg.hardware.disk_write_bps * h.io_efficiency;
+    let disk_read: Vec<LinkId> = (0..n)
+        .map(|i| net.add_link((read_eff * state.factor[i]).max(1.0)))
+        .collect();
+    let disk_write: Vec<LinkId> = (0..n)
+        .map(|i| net.add_link((write_eff * state.factor[i]).max(1.0)))
+        .collect();
+    let client = *state.alive().first().ok_or("no live node for the client")?;
+    let scan_link = if phases[0] == Phase::Scan {
+        // The Java client scans slower than the native one (§6.2
+        // calibration); one shared link serializes the client side.
+        let scan = (cfg.cpu.scan_bps * 0.75 * state.factor[client]).max(1.0);
+        Some(net.add_link(scan))
+    } else {
+        None
+    };
+    let nominal_caps: Vec<f64> = (0..net.link_count())
+        .map(|i| net.link_capacity(LinkId(i)))
+        .collect();
+
+    let blocks_per_node = (workload.bytes_per_node / h.block_bytes as f64).ceil().max(1.0);
+    let block_bytes = workload.bytes_per_node / blocks_per_node;
+    let placement = Placement::build(
+        &testbed.node_rack,
+        blocks_per_node as usize,
+        h.replication_in.min(n),
+        cfg.seed,
+    );
+
+    let map_segments = block_segments(&placement, block_bytes, &state);
+    let mut sched = Scheduler::new(map_segments, true);
+    sched.max_attempts = cfg.sphere.max_attempts;
+
+    let mut eng = HadoopEngine {
+        testbed,
+        cfg,
+        phases,
+        phase_idx: 0,
+        bytes_per_node: workload.bytes_per_node,
+        block_bytes,
+        placement,
+        links,
+        disk_read,
+        disk_write,
+        scan_link,
+        client,
+        nominal_caps,
+        tcp_shuffle: TcpModel {
+            wnd_max: 64.0 * 1024.0, // untuned 2008 defaults
+            ..TcpModel::hadoop_shuffle()
+        },
+        tcp_bulk: TcpModel::default(),
+        sched,
+        inflight: BTreeMap::new(),
+        by_seg: BTreeMap::new(),
+        speculated: HashSet::new(),
+        rerun_queue: Vec::new(),
+        dur_sum: 0.0,
+        dur_n: 0,
+        next_gen: 0,
+        running: vec![0; n],
+        flows: BTreeMap::new(),
+        speculative_enabled: match spec.compare {
+            Some(c) => c.hadoop_speculative,
+            None => true,
+        },
+        spec_check_at: None,
+        tasks_completed: 0,
+        reduce_tasks: 0,
+        reassignments: 0,
+        map_reruns: 0,
+        shuffle_bytes: 0.0,
+        re_rep_bytes: 0.0,
+        tier: TierBytes::default(),
+        acc_local: 0,
+        acc_remote: 0,
+        acc_spec_launched: 0,
+        acc_spec_won: 0,
+        stage_ends: Vec::new(),
+        last_task_done: 0.0,
+        done: false,
+        makespan: 0.0,
+    };
+
+    let mut q: EventQueue<HEv> =
+        EventQueue::with_capacity(n * h.map_slots.max(1) + 2 * state.faults.len() + 8);
+    schedule_faults(&state, &mut q);
+    eng.pump(0.0, &mut q, &state);
+
+    let mut events: u64 = 0;
+    let mut batch: Vec<HEv> = Vec::new();
+    loop {
+        if eng.done {
+            break;
+        }
+        let tq = q.peek_time();
+        let tn = net.next_completion().map(|(t, _)| t);
+        let next = match (tq, tn) {
+            (None, None) => break,
+            (Some(a), None) => a,
+            (None, Some(b)) => b,
+            (Some(a), Some(b)) => a.min(b),
+        };
+        let now = next;
+        for fid in net.advance_to(next) {
+            events += 1;
+            eng.flow_done(fid, now, &mut net, &mut q, &state);
+        }
+        if q.peek_time() == Some(next) {
+            batch.clear();
+            q.pop_simultaneous(&mut batch);
+            for ev in batch.drain(..) {
+                events += 1;
+                match ev {
+                    HEv::TaskStart { gen } => eng.start_task_flow(gen, &mut net, &state)?,
+                    HEv::SpecCheck => {
+                        eng.spec_check_at = None;
+                        eng.maybe_speculate(now, &mut q, &state);
+                    }
+                    HEv::Crash { fault } => {
+                        state.consumed[fault] = true;
+                        if let FaultSpec::SlaveCrash { node, .. } = state.faults[fault] {
+                            if !state.dead[node] {
+                                state.crash(node);
+                                eng.on_crash(node, now, &mut net, &mut q, &state)?;
+                            }
+                        }
+                    }
+                    HEv::DegradeStart { fault } => handle_degrade_start(
+                        &mut state,
+                        &mut net,
+                        &eng.links,
+                        testbed,
+                        fault,
+                        now,
+                    ),
+                    HEv::DegradeEnd { fault } => handle_degrade_end(
+                        &mut state,
+                        &mut net,
+                        &eng.links,
+                        testbed,
+                        fault,
+                        now,
+                    ),
+                }
+            }
+        }
+        if eng.phase_idle() {
+            eng.finish_phase(now, &mut q, &state)?;
+        }
+    }
+    if !eng.done {
+        return Err("hadoop engine stalled with work pending".into());
+    }
+
+    Ok(HadoopRun {
+        makespan_secs: eng.makespan,
+        stage_ends: eng.stage_ends,
+        events,
+        map_tasks: eng.placement.blocks(),
+        reduce_tasks: eng.reduce_tasks,
+        tasks_completed: eng.tasks_completed,
+        local_fraction: if eng.acc_local + eng.acc_remote == 0 {
+            0.0
+        } else {
+            eng.acc_local as f64 / (eng.acc_local + eng.acc_remote) as f64
+        },
+        shuffle_gbytes: eng.shuffle_bytes / 1e9,
+        tier: eng.tier,
+        speculative_launched: eng.acc_spec_launched,
+        speculative_won: eng.acc_spec_won,
+        reassignments: eng.reassignments,
+        map_reruns: eng.map_reruns,
+        re_replicated_gbytes: eng.re_rep_bytes / 1e9,
+        faults_injected: state.injected,
+        nodes_crashed: state.crashes,
+    })
+}
+
+/// One block's task segment, located at the block's LIVE replica
+/// holders.  Each block is its own "file" — Hadoop has no same-file
+/// anti-affinity, so Sphere's rule 3 must stay inert in the reused
+/// scheduler.  The single builder serves both the initial task list
+/// and crash-time re-executions, so the two can never drift apart.
+fn block_segment(
+    placement: &Placement,
+    block: usize,
+    block_bytes: f64,
+    state: &FaultState,
+) -> Segment {
+    let locations: Vec<u32> = placement
+        .replicas_of(block)
+        .iter()
+        .copied()
+        .filter(|&r| !state.dead[r as usize])
+        .collect();
+    Segment {
+        id: block,
+        file: format!("hdfs/block{block:06}"),
+        first_record: 0,
+        n_records: 1,
+        bytes: block_bytes as u64,
+        locations,
+        whole_file: false,
+    }
+}
+
+/// The full map-task list: one segment per HDFS block.
+fn block_segments(placement: &Placement, block_bytes: f64, state: &FaultState) -> Vec<Segment> {
+    (0..placement.blocks())
+        .map(|b| block_segment(placement, b, block_bytes, state))
+        .collect()
+}
+
+fn schedule_faults(state: &FaultState, q: &mut EventQueue<HEv>) {
+    for (i, f) in state.faults.iter().enumerate() {
+        if state.consumed[i] {
+            continue;
+        }
+        match *f {
+            FaultSpec::SlaveCrash { at_secs, .. } => {
+                q.push_at(at_secs.max(0.0), HEv::Crash { fault: i });
+            }
+            FaultSpec::LinkDegrade {
+                at_secs,
+                duration_secs,
+                ..
+            } => {
+                q.push_at(at_secs.max(0.0), HEv::DegradeStart { fault: i });
+                let end = at_secs + duration_secs;
+                if end.is_finite() {
+                    q.push_at(end.max(0.0), HEv::DegradeEnd { fault: i });
+                }
+            }
+            FaultSpec::Straggler { .. } => {}
+        }
+    }
+}
+
+impl<'a> HadoopEngine<'a> {
+    fn phase(&self) -> Phase {
+        self.phases[self.phase_idx]
+    }
+
+    fn slots(&self) -> usize {
+        match self.phase() {
+            Phase::Reduce => self.cfg.hadoop.reduce_slots.max(1),
+            _ => self.cfg.hadoop.map_slots.max(1),
+        }
+    }
+
+    /// Nominal single-task pipeline time for `bytes` of this phase's
+    /// work on an unloaded node (the flow's rate cap derives from it).
+    fn service_secs(&self, phase: Phase, bytes: f64) -> f64 {
+        let cfg = self.cfg;
+        let h = &cfg.hadoop;
+        let read = cfg.hardware.disk_read_bps * h.io_efficiency;
+        let write = cfg.hardware.disk_write_bps * h.io_efficiency;
+        match phase {
+            Phase::Map => {
+                let io = bytes / read + bytes / write;
+                let cpu = bytes / cfg.cpu.hadoop_map_bps;
+                io.max(cpu)
+            }
+            Phase::Reduce => {
+                let merge = h.merge_passes.max(1.0) * (bytes / read + bytes / write);
+                let cpu = bytes / cfg.cpu.hadoop_sort_bps;
+                let hdfs_write = cfg.hardware.disk_write_bps * h.hdfs_write_efficiency;
+                let out = h.replication_out.max(1) as f64 * bytes / hdfs_write;
+                merge.max(cpu) + out
+            }
+            // The client-side scan link enforces the aggregate limit.
+            Phase::Scan => bytes / read,
+            Phase::Write => {
+                let hdfs_write = cfg.hardware.disk_write_bps * h.hdfs_write_efficiency;
+                h.replication_out.max(1) as f64 * bytes / hdfs_write
+            }
+        }
+    }
+
+    fn net_bottleneck(&self, path: &[LinkId]) -> f64 {
+        path.iter()
+            .map(|l| self.nominal_caps[l.0])
+            .fold(f64::INFINITY, f64::min)
+            .min(self.testbed.nic_bps)
+    }
+
+    /// Hand pending tasks to every idle slot (re-executions first —
+    /// they block the barrier).
+    fn pump(&mut self, now: f64, q: &mut EventQueue<HEv>, state: &FaultState) {
+        let slots = self.slots();
+        for node in 0..self.testbed.nodes() {
+            if state.dead[node] {
+                continue;
+            }
+            while self.running[node] < slots {
+                if let Some(seg) = self.take_rerun(node as u32) {
+                    self.launch(node, seg, false, true, now, q);
+                    continue;
+                }
+                let Some(seg) = self.sched.assign(node as u32) else {
+                    break;
+                };
+                self.launch(node, seg, false, false, now, q);
+            }
+        }
+    }
+
+    /// Pull a map re-execution for `node`, preferring blocks it holds.
+    fn take_rerun(&mut self, node: u32) -> Option<Segment> {
+        if self.rerun_queue.is_empty() {
+            return None;
+        }
+        let pos = self
+            .rerun_queue
+            .iter()
+            .position(|s| s.locations.contains(&node))
+            .unwrap_or(0);
+        Some(self.rerun_queue.remove(pos))
+    }
+
+    fn launch(
+        &mut self,
+        node: usize,
+        seg: Segment,
+        speculative: bool,
+        rerun: bool,
+        now: f64,
+        q: &mut EventQueue<HEv>,
+    ) {
+        self.next_gen += 1;
+        let gen = self.next_gen;
+        if !rerun {
+            self.by_seg.entry(seg.id).or_default().push(gen);
+        }
+        self.inflight.insert(
+            gen,
+            Attempt {
+                node,
+                seg,
+                started: now,
+                fid: None,
+                speculative,
+                rerun,
+            },
+        );
+        self.running[node] += 1;
+        // The per-task JVM fork (Hadoop 0.16 forked one per task).
+        q.push_at(now + self.cfg.hadoop.task_startup_secs, HEv::TaskStart { gen });
+    }
+
+    /// JVM up: start the attempt's I/O flow on the shared substrate.
+    fn start_task_flow(
+        &mut self,
+        gen: u64,
+        net: &mut NetSim,
+        state: &FaultState,
+    ) -> Result<(), String> {
+        let Some((node, block, bytes)) = self
+            .inflight
+            .get(&gen)
+            .map(|a| (a.node, a.seg.id, a.seg.bytes as f64))
+        else {
+            return Ok(()); // pre-empted by a crash or a speculation win
+        };
+        let phase = self.phase();
+        let nominal = self.service_secs(phase, bytes).max(1e-9);
+        let mut cap = (bytes / nominal) * state.factor[node];
+        let mut path: Vec<LinkId> = Vec::with_capacity(6);
+        match phase {
+            Phase::Map => {
+                let local = self
+                    .placement
+                    .replicas_of(block)
+                    .iter()
+                    .any(|&r| r as usize == node);
+                if local {
+                    path.push(self.disk_read[node]);
+                } else {
+                    // Remote map: stream the block from a live holder.
+                    let src = self
+                        .placement
+                        .replicas_of(block)
+                        .iter()
+                        .copied()
+                        .find(|&r| !state.dead[r as usize])
+                        .ok_or_else(|| {
+                            format!("job failed: block {block} has no live replica")
+                        })? as usize;
+                    let net_path = self.testbed.path(&self.links, src, node);
+                    let rtt = self.testbed.rtt_secs(src, node);
+                    cap = cap.min(self.tcp_bulk.rate_cap(self.net_bottleneck(&net_path), rtt));
+                    path.push(self.disk_read[src]);
+                    path.extend_from_slice(&net_path);
+                    self.tier.add(self.testbed, src, node, bytes);
+                }
+                path.push(self.disk_write[node]);
+            }
+            Phase::Reduce => {
+                path.push(self.disk_read[node]);
+                path.push(self.disk_write[node]);
+            }
+            Phase::Scan => {
+                let net_path = self.testbed.path(&self.links, node, self.client);
+                if node != self.client {
+                    let rtt = self.testbed.rtt_secs(node, self.client);
+                    cap = cap.min(self.tcp_bulk.rate_cap(self.net_bottleneck(&net_path), rtt));
+                }
+                path.push(self.disk_read[node]);
+                path.extend_from_slice(&net_path);
+                path.push(self.scan_link.expect("scan phase built its link"));
+                self.tier.add(self.testbed, node, self.client, bytes);
+            }
+            Phase::Write => {
+                path.push(self.disk_write[node]);
+            }
+        }
+        let fid = net.start_flow(&path, bytes.max(1.0), cap.max(1.0));
+        self.flows.insert(fid, HFlow::Task { gen });
+        if let Some(att) = self.inflight.get_mut(&gen) {
+            att.fid = Some(fid);
+        }
+        Ok(())
+    }
+
+    /// A flow landed.
+    fn flow_done(
+        &mut self,
+        fid: FlowId,
+        now: f64,
+        net: &mut NetSim,
+        q: &mut EventQueue<HEv>,
+        state: &FaultState,
+    ) {
+        let Some(flow) = self.flows.remove(&fid) else {
+            return;
+        };
+        let gen = match flow {
+            HFlow::Task { gen } => gen,
+            HFlow::ReRep { block, dst, .. } => {
+                // The rescue copy landed: the target now serves reads.
+                self.placement.add_replica(block, dst as u32);
+                return;
+            }
+            HFlow::Shuffle { .. } | HFlow::Output { .. } => return,
+        };
+        let Some(att) = self.inflight.remove(&gen) else {
+            return;
+        };
+        self.running[att.node] -= 1;
+        if att.rerun {
+            // Lost map output restored: re-shuffle the whole output.
+            self.last_task_done = now;
+            if self.phase().shuffles() {
+                self.start_shuffle(att.node, att.seg.id, att.seg.bytes as f64, net, state);
+            }
+            self.pump(now, q, state);
+            return;
+        }
+        let first = self.sched.complete(&att.seg);
+        // First-finisher-wins: cancel the speculation sibling.
+        let losers: Vec<u64> = self
+            .by_seg
+            .remove(&att.seg.id)
+            .map(|gens| gens.into_iter().filter(|&g| g != gen).collect())
+            .unwrap_or_default();
+        for g in losers {
+            if let Some(loser) = self.inflight.remove(&g) {
+                self.running[loser.node] -= 1;
+                if let Some(lfid) = loser.fid {
+                    self.flows.remove(&lfid);
+                    net.try_cancel_flow(lfid);
+                }
+                self.sched.cancel_attempt(&loser.seg);
+            }
+        }
+        if first {
+            if att.speculative {
+                self.sched.record_speculative_win();
+            }
+            self.tasks_completed += 1;
+            self.last_task_done = now;
+            self.dur_sum += (now - att.started).max(0.0);
+            self.dur_n += 1;
+            if self.phase().shuffles() {
+                self.start_shuffle(att.node, att.seg.id, att.seg.bytes as f64, net, state);
+            }
+            let repl_out = self.cfg.hadoop.replication_out;
+            if matches!(self.phase(), Phase::Reduce | Phase::Write) && repl_out >= 2 {
+                // dfs.replication > 1: the output pipeline also crosses
+                // the network to the rack-diverse partner.
+                let partner = rack_diverse_replica(self.testbed, att.node);
+                if partner != att.node && !state.dead[partner] {
+                    let bytes = att.seg.bytes as f64 * (repl_out - 1) as f64;
+                    let mut path = self.testbed.path(&self.links, att.node, partner);
+                    path.push(self.disk_write[partner]);
+                    let hdfs_write =
+                        self.cfg.hardware.disk_write_bps * self.cfg.hadoop.hdfs_write_efficiency;
+                    let fid = net.start_flow(&path, bytes.max(1.0), hdfs_write.max(1.0));
+                    self.flows.insert(fid, HFlow::Output { dst: partner });
+                    self.tier.add(self.testbed, att.node, partner, bytes);
+                }
+            }
+        }
+        self.pump(now, q, state);
+        self.maybe_speculate(now, q, state);
+    }
+
+    /// Fetch a completed map's output toward its reducer-to-be: the
+    /// remote fraction to a deterministic partner, over 2008-default
+    /// TCP, spill disk to merge disk.
+    fn start_shuffle(
+        &mut self,
+        src: usize,
+        block: usize,
+        out_bytes: f64,
+        net: &mut NetSim,
+        state: &FaultState,
+    ) {
+        let (n_alive, dst) = {
+            let alive = state.alive();
+            (alive.len(), pick_dst_in(alive, src, block))
+        };
+        let Some(dst) = dst else {
+            return; // single live node: everything is already local
+        };
+        let bytes = out_bytes * (n_alive - 1) as f64 / n_alive as f64;
+        self.shuffle_bytes += bytes;
+        // Counted once at first send; a crash-time reroute re-sends a
+        // remainder without re-counting (matching `shuffle_bytes`).
+        self.tier.add(self.testbed, src, dst, bytes);
+        self.start_shuffle_to(src, dst, block, bytes, net, state);
+    }
+
+    fn start_shuffle_to(
+        &mut self,
+        src: usize,
+        dst: usize,
+        block: usize,
+        bytes: f64,
+        net: &mut NetSim,
+        state: &FaultState,
+    ) {
+        let net_path = self.testbed.path(&self.links, src, dst);
+        let rtt = self.testbed.rtt_secs(src, dst);
+        let read = self.cfg.hardware.disk_read_bps * self.cfg.hadoop.io_efficiency;
+        let cap = self
+            .tcp_shuffle
+            .rate_cap(self.net_bottleneck(&net_path), rtt)
+            .min(read * state.factor[src]);
+        let mut path = Vec::with_capacity(net_path.len() + 2);
+        path.push(self.disk_read[src]);
+        path.extend_from_slice(&net_path);
+        path.push(self.disk_write[dst]);
+        let fid = net.start_flow(&path, bytes.max(1.0), cap.max(1.0));
+        self.flows.insert(fid, HFlow::Shuffle { src, dst, block });
+    }
+
+    /// Launch backups for attempts running past Hadoop's slowdown rule,
+    /// scheduling a re-check at the earliest future crossing.
+    fn maybe_speculate(&mut self, now: f64, q: &mut EventQueue<HEv>, state: &FaultState) {
+        if !self.speculative_enabled || self.dur_n < SPEC_MIN_SAMPLES {
+            return;
+        }
+        let mean = self.dur_sum / self.dur_n as f64;
+        if !(mean > 0.0) {
+            return;
+        }
+        let cutoff = SPEC_SLOWDOWN * mean;
+        let mut launch: Vec<u64> = Vec::new();
+        let mut earliest_cross: Option<f64> = None;
+        for (&gen, att) in &self.inflight {
+            if att.speculative
+                || att.rerun
+                || self.speculated.contains(&att.seg.id)
+                || self.by_seg.get(&att.seg.id).map_or(0, Vec::len) > 1
+                || !self.sched.speculatable(att.seg.id)
+            {
+                continue;
+            }
+            if now - att.started >= cutoff {
+                launch.push(gen);
+            } else {
+                let t = att.started + cutoff;
+                earliest_cross = Some(earliest_cross.map_or(t, |e: f64| e.min(t)));
+            }
+        }
+        for gen in launch {
+            self.launch_backup(gen, now, q, state);
+        }
+        if let Some(t) = earliest_cross {
+            let t = t.max(now);
+            let stale = match self.spec_check_at {
+                None => true,
+                Some(at) => at <= now || t < at,
+            };
+            if stale {
+                self.spec_check_at = Some(t);
+                q.push_at(t, HEv::SpecCheck);
+            }
+        }
+    }
+
+    /// Dispatch a backup attempt to another live node with a free slot
+    /// (preferring an input-replica holder for block-reading phases).
+    fn launch_backup(&mut self, gen: u64, now: f64, q: &mut EventQueue<HEv>, state: &FaultState) {
+        let (seg, primary) = {
+            let att = &self.inflight[&gen];
+            (att.seg.clone(), att.node)
+        };
+        let slots = self.slots();
+        let free = |l: usize| l != primary && !state.dead[l] && self.running[l] < slots;
+        let backup = if self.phase().reads_blocks() {
+            self.placement
+                .replicas_of(seg.id)
+                .iter()
+                .map(|&l| l as usize)
+                .find(|&l| free(l))
+                .or_else(|| (0..self.testbed.nodes()).find(|&l| free(l)))
+        } else {
+            (0..self.testbed.nodes()).find(|&l| free(l))
+        };
+        let Some(backup) = backup else {
+            return; // no free slot anywhere; a later scan retries
+        };
+        if !self.sched.speculate(&seg, backup as u32) {
+            return;
+        }
+        self.speculated.insert(seg.id);
+        self.launch(backup, seg, true, false, now, q);
+    }
+
+    /// The driver applied a crash to the shared fault state: unwind the
+    /// dead node's tasks, re-execute lost map outputs, re-route fetches
+    /// and re-replicate its HDFS blocks.
+    fn on_crash(
+        &mut self,
+        node: usize,
+        now: f64,
+        net: &mut NetSim,
+        q: &mut EventQueue<HEv>,
+        state: &FaultState,
+    ) -> Result<(), String> {
+        // Attempts running on the dead TaskTracker.
+        let stale: Vec<u64> = self
+            .inflight
+            .iter()
+            .filter(|(_, a)| a.node == node)
+            .map(|(&g, _)| g)
+            .collect();
+        for g in stale {
+            let att = self.inflight.remove(&g).expect("stale gen exists");
+            if let Some(fid) = att.fid {
+                self.flows.remove(&fid);
+                net.try_cancel_flow(fid);
+            }
+            if att.rerun {
+                self.rerun_queue.push(self.block_segment(att.seg.id, state));
+                self.reassignments += 1;
+                continue;
+            }
+            let siblings = {
+                let v = self.by_seg.entry(att.seg.id).or_default();
+                v.retain(|&x| x != g);
+                v.len()
+            };
+            if siblings > 0 {
+                self.sched.cancel_attempt(&att.seg);
+            } else {
+                self.by_seg.remove(&att.seg.id);
+                let id = att.seg.id;
+                if !self.sched.fail(att.seg) {
+                    return Err(format!(
+                        "job failed: {} task {id} exhausted its {} attempts \
+                         after node {node} crashed",
+                        self.phase().name(),
+                        self.sched.max_attempts
+                    ));
+                }
+                self.reassignments += 1;
+            }
+        }
+        self.running[node] = 0;
+
+        // NameNode pass first: drop the dead DataNode's copies so every
+        // decision below sees the surviving replica map.
+        let rescue = if self.phase().reads_blocks() {
+            self.placement.re_replicate(node as u32, &state.dead)
+        } else {
+            Default::default()
+        };
+
+        // Flow triage: spills on the dead node are GONE (the map
+        // re-execution penalty Sphere's replicated stage outputs
+        // avoid); fetches toward it re-route; interrupted rescue
+        // copies restart from another live holder.
+        let doomed: Vec<(FlowId, HFlow)> = self
+            .flows
+            .iter()
+            .filter(|(_, fl)| match fl {
+                HFlow::Shuffle { src, dst, .. } => *src == node || *dst == node,
+                HFlow::Output { dst } => *dst == node,
+                HFlow::ReRep { src, dst, .. } => *src == node || *dst == node,
+                HFlow::Task { .. } => false,
+            })
+            .map(|(&f, &fl)| (f, fl))
+            .collect();
+        for (fid, fl) in doomed {
+            self.flows.remove(&fid);
+            let left = net.try_cancel_flow(fid).unwrap_or(0.0);
+            match fl {
+                HFlow::Shuffle { src, dst, block } => {
+                    if src == node {
+                        // Spill lost with its node: the map re-executes
+                        // on a surviving input replica, re-shuffles.
+                        self.rerun_queue.push(self.block_segment(block, state));
+                        self.map_reruns += 1;
+                    } else {
+                        let new_dst = {
+                            let alive = state.alive();
+                            pick_dst_in(alive, src, block + 1)
+                        };
+                        if let Some(nd) = new_dst {
+                            self.start_shuffle_to(src, nd, block, left.max(1.0), net, state);
+                        }
+                    }
+                    self.reassignments += 1;
+                }
+                HFlow::ReRep { block, .. } => {
+                    // Retry the rescue from another live holder.
+                    if let Some((src, dst)) = self.placement.propose_copy(block, &state.dead) {
+                        self.start_rerep(block, src as usize, dst as usize, net);
+                    } else if self.block_needed(block) {
+                        return Err(format!(
+                            "job failed: block {block} lost its last replica when \
+                             node {node} crashed mid-rescue"
+                        ));
+                    }
+                }
+                HFlow::Output { .. } | HFlow::Task { .. } => {}
+            }
+        }
+
+        // Blocks whose whole replica set is dead: fatal if still needed
+        // (matching the Sphere engine's data-loss semantics).
+        for &b in &rescue.lost {
+            if self.block_needed(b) {
+                return Err(format!(
+                    "job failed: block {b} lost its last replica when node \
+                     {node} crashed"
+                ));
+            }
+        }
+        for (block, src, dst) in rescue.moved {
+            self.start_rerep(block, src as usize, dst as usize, net);
+        }
+
+        // Terasplit: the scan client itself died — the job restarts the
+        // gather on the next live node and re-streams in-flight blocks.
+        if self.phase() == Phase::Scan && node == self.client {
+            self.client = *state
+                .alive()
+                .first()
+                .ok_or("no live node to host the scan client")?;
+            // The scan stage now runs on the new client's hardware:
+            // re-rate the shared scan link (the dead client may have
+            // been a straggler — its factor must not outlive it).
+            let link = self.scan_link.expect("scan phase built its link");
+            let scan = (self.cfg.cpu.scan_bps * 0.75 * state.factor[self.client]).max(1.0);
+            net.set_link_capacity(link, scan);
+            let restart: Vec<u64> = self.inflight.keys().copied().collect();
+            for gen in restart {
+                if let Some(att) = self.inflight.get_mut(&gen) {
+                    if let Some(fid) = att.fid.take() {
+                        self.flows.remove(&fid);
+                        net.try_cancel_flow(fid);
+                        q.push_at(now, HEv::TaskStart { gen });
+                        self.reassignments += 1;
+                    }
+                }
+            }
+        }
+        self.pump(now, q, state);
+        Ok(())
+    }
+
+    /// Is any not-yet-finished work still going to read `block`?
+    fn block_needed(&self, block: usize) -> bool {
+        self.phase().reads_blocks()
+            && (self.sched.pending_ids().contains(&block)
+                || self.by_seg.contains_key(&block)
+                || self.rerun_queue.iter().any(|s| s.id == block))
+    }
+
+    /// Start one NameNode rescue copy (background: does not gate the
+    /// map → reduce barrier, but contends on disks and uplinks).
+    fn start_rerep(&mut self, block: usize, src: usize, dst: usize, net: &mut NetSim) {
+        let bytes = self.block_bytes;
+        let net_path = self.testbed.path(&self.links, src, dst);
+        let rtt = self.testbed.rtt_secs(src, dst);
+        let cap = self.tcp_bulk.rate_cap(self.net_bottleneck(&net_path), rtt);
+        let mut path = Vec::with_capacity(net_path.len() + 2);
+        path.push(self.disk_read[src]);
+        path.extend_from_slice(&net_path);
+        path.push(self.disk_write[dst]);
+        let fid = net.start_flow(&path, bytes.max(1.0), cap.max(1.0));
+        self.flows.insert(fid, HFlow::ReRep { block, src, dst });
+        self.re_rep_bytes += bytes;
+        self.tier.add(self.testbed, src, dst, bytes);
+    }
+
+    /// Rebuild a block's segment with its current live holders.
+    fn block_segment(&self, block: usize, state: &FaultState) -> Segment {
+        block_segment(&self.placement, block, self.block_bytes, state)
+    }
+
+    /// Flows that gate the map → reduce barrier (background
+    /// re-replication does not).
+    fn blocking_flows(&self) -> usize {
+        self.flows
+            .values()
+            .filter(|f| !matches!(f, HFlow::ReRep { .. }))
+            .count()
+    }
+
+    fn phase_idle(&self) -> bool {
+        !self.done
+            && self.sched.is_drained()
+            && self.inflight.is_empty()
+            && self.rerun_queue.is_empty()
+            && self.blocking_flows() == 0
+    }
+
+    /// Close the current phase; open the next (or finish the job).
+    fn finish_phase(
+        &mut self,
+        now: f64,
+        q: &mut EventQueue<HEv>,
+        state: &FaultState,
+    ) -> Result<(), String> {
+        self.acc_local += self.sched.local_assignments;
+        self.acc_remote += self.sched.remote_assignments;
+        self.acc_spec_launched += self.sched.speculative_launched;
+        self.acc_spec_won += self.sched.speculative_won;
+        if self.phase() == Phase::Map {
+            // The map tail and the fetch tail end at different times;
+            // report both (the barrier released at `now`).
+            self.stage_ends.push(("map".to_string(), self.last_task_done));
+            self.stage_ends.push(("shuffle".to_string(), now));
+        } else {
+            self.stage_ends.push((self.phase().name().to_string(), now));
+        }
+        self.phase_idx += 1;
+        if self.phase_idx >= self.phases.len() {
+            self.done = true;
+            self.makespan = now;
+            return Ok(());
+        }
+        debug_assert_eq!(self.phase(), Phase::Reduce, "only terasort is two-phase");
+        // One reduce partition per live node, served where its fetched
+        // data sits.
+        let alive = state.alive().to_vec();
+        let r = alive.len().max(1);
+        self.reduce_tasks = r;
+        let total = self.bytes_per_node * self.testbed.nodes() as f64;
+        let part_bytes = total / r as f64;
+        let segments: Vec<Segment> = alive
+            .iter()
+            .enumerate()
+            .map(|(i, &node)| Segment {
+                id: self.placement.blocks() + i,
+                file: format!("hdfs/part{i:05}"),
+                first_record: 0,
+                n_records: 1,
+                bytes: part_bytes as u64,
+                locations: vec![node as u32],
+                whole_file: false,
+            })
+            .collect();
+        let mut sched = Scheduler::new(segments, true);
+        sched.max_attempts = self.sched.max_attempts;
+        self.sched = sched;
+        self.by_seg.clear();
+        self.speculated.clear();
+        self.dur_sum = 0.0;
+        self.dur_n = 0;
+        self.spec_check_at = None;
+        self.pump(now, q, state);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::{CompareSpec, ScenarioSpec};
+    use crate::topology::TopologySpec;
+    use crate::util::bytes::GB;
+
+    fn spec(kind: WorkloadKind, sites: usize, racks: usize, npr: usize) -> ScenarioSpec {
+        let mut spec = ScenarioSpec::paper_lan8();
+        spec.topology = TopologySpec::scale_out(sites, racks, npr);
+        spec.name = format!("hadoop-test-{}", kind.name());
+        let w = spec.workload.as_mut().unwrap();
+        w.kind = kind;
+        w.bytes_per_node = 0.5 * GB as f64;
+        spec.compare = Some(CompareSpec::default());
+        spec
+    }
+
+    fn run(spec: &ScenarioSpec) -> HadoopRun {
+        let testbed = spec.topology.generate().unwrap();
+        run_hadoop(spec, &testbed).unwrap()
+    }
+
+    #[test]
+    fn terasort_runs_all_three_stages_deterministically() {
+        let s = spec(WorkloadKind::Terasort, 2, 2, 2);
+        let a = run(&s);
+        let b = run(&s);
+        assert_eq!(format!("{a:?}"), format!("{b:?}"), "same spec, same run");
+        assert!(a.makespan_secs > 0.0);
+        assert_eq!(a.map_tasks, 8 * 4, "0.5 GB / 128 MB = 4 blocks per node");
+        assert_eq!(a.reduce_tasks, 8);
+        assert_eq!(a.tasks_completed, a.map_tasks + a.reduce_tasks);
+        let names: Vec<&str> = a.stage_ends.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, vec!["map", "shuffle", "reduce"]);
+        assert!(a.stage_ends[0].1 <= a.stage_ends[1].1);
+        assert!(a.stage_ends[1].1 <= a.stage_ends[2].1);
+        assert!(a.shuffle_gbytes > 0.0);
+        assert!(a.tier.total() > 0.0);
+        assert!(
+            a.local_fraction > 0.8,
+            "block placement keeps maps data-local ({})",
+            a.local_fraction
+        );
+    }
+
+    #[test]
+    fn crash_forces_map_reruns_and_re_replication() {
+        let mut s = spec(WorkloadKind::Terasort, 1, 2, 3);
+        let clean = run(&s);
+        s.faults.push(crate::scenario::FaultSpec::SlaveCrash {
+            at_secs: 6.0,
+            node: 1,
+        });
+        let faulted = run(&s);
+        assert_eq!(faulted.nodes_crashed, 1);
+        assert!(faulted.reassignments > 0, "work must move off the dead node");
+        assert!(
+            faulted.re_replicated_gbytes > 0.0,
+            "the NameNode must restore the dead DataNode's blocks"
+        );
+        assert!(
+            faulted.makespan_secs > clean.makespan_secs,
+            "the crash must cost time: {} vs {}",
+            faulted.makespan_secs,
+            clean.makespan_secs
+        );
+        assert_eq!(
+            faulted.tasks_completed,
+            faulted.map_tasks + faulted.reduce_tasks,
+            "every task still completes exactly once"
+        );
+    }
+
+    #[test]
+    fn straggler_triggers_hadoop_speculation() {
+        let mut s = spec(WorkloadKind::Terasort, 1, 2, 3);
+        s.faults.push(crate::scenario::FaultSpec::Straggler {
+            node: 1,
+            factor: 0.2,
+        });
+        let with = run(&s);
+        assert!(
+            with.speculative_launched > 0,
+            "a 5x straggler must trip the 1.2x-mean rule"
+        );
+        assert!(with.speculative_won > 0, "backups on healthy nodes win");
+        let mut off = s.clone();
+        off.compare = Some(CompareSpec {
+            hadoop_speculative: false,
+        });
+        let without = run(&off);
+        assert_eq!(without.speculative_launched, 0, "knob off means no backups");
+        assert!(
+            with.makespan_secs < without.makespan_secs,
+            "speculation must cut the straggler tail: {} vs {}",
+            with.makespan_secs,
+            without.makespan_secs
+        );
+    }
+
+    #[test]
+    fn terasplit_streams_through_one_client() {
+        let s = spec(WorkloadKind::Terasplit, 2, 1, 2);
+        let a = run(&s);
+        assert_eq!(a.stage_ends.len(), 1);
+        assert_eq!(a.stage_ends[0].0, "scan");
+        assert_eq!(a.reduce_tasks, 0);
+        assert!(a.shuffle_gbytes == 0.0, "scan jobs do not shuffle");
+        assert!(a.tier.wan > 0.0, "remote sites stream to the client");
+        // The single scan client gates the aggregate: makespan is at
+        // least total bytes / client scan rate.
+        let total = 4.0 * 0.5 * GB as f64;
+        let scan = s.cfg.cpu.scan_bps * 0.75;
+        assert!(a.makespan_secs > total / scan * 0.9);
+    }
+
+    #[test]
+    fn filegen_pays_the_hdfs_write_pipeline() {
+        let s = spec(WorkloadKind::Filegen, 1, 1, 4);
+        let a = run(&s);
+        assert_eq!(a.stage_ends[0].0, "write");
+        // §6.3's contrast: the HDFS client pipeline lands far below the
+        // raw spindle (paper: 440 Mb/s on a ~1.2 Gb/s disk).
+        let b = 0.5 * GB as f64;
+        let raw = s.cfg.hardware.disk_write_bps;
+        assert!(
+            a.makespan_secs > 2.0 * b / raw,
+            "writes must pay the pipeline overhead ({} vs raw {})",
+            a.makespan_secs,
+            b / raw
+        );
+    }
+
+    #[test]
+    fn losing_every_replica_fails_the_run() {
+        // With 4 nodes at R=2, killing 3 of them faster than a 128 MB
+        // rescue copy can land (the source disk alone needs >1 s)
+        // guarantees some block's whole replica set dies while work
+        // still needs it — the run must error, not report a makespan.
+        let mut s = spec(WorkloadKind::Terasort, 1, 2, 2);
+        for (i, node) in [0usize, 2, 1].into_iter().enumerate() {
+            s.faults.push(crate::scenario::FaultSpec::SlaveCrash {
+                at_secs: 0.5 + i as f64 * 0.1,
+                node,
+            });
+        }
+        let testbed = s.topology.generate().unwrap();
+        let err = run_hadoop(&s, &testbed).unwrap_err();
+        assert!(
+            err.contains("lost") || err.contains("exhausted") || err.contains("replica"),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn brownout_slows_the_cross_site_shuffle() {
+        let mut s = spec(WorkloadKind::Terasort, 2, 1, 2);
+        let clean = run(&s);
+        s.faults.push(crate::scenario::FaultSpec::LinkDegrade {
+            at_secs: 0.0,
+            duration_secs: f64::INFINITY,
+            site: 0,
+            factor: 0.02,
+        });
+        let braked = run(&s);
+        assert!(
+            braked.makespan_secs > clean.makespan_secs,
+            "a choked uplink must slow the shuffle: {} vs {}",
+            braked.makespan_secs,
+            clean.makespan_secs
+        );
+    }
+}

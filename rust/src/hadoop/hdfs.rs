@@ -202,6 +202,179 @@ impl Hdfs {
     }
 }
 
+/// Scenario-scale block placement — the NameNode's placement policy
+/// (first replica on the writer, second off-rack, third on the
+/// second's rack) lifted out of the byte-level [`Hdfs`] store so the
+/// event-driven baseline engine (`hadoop::engine`, DESIGN.md §12) can
+/// place thousands of simulated blocks without materializing bytes,
+/// and re-replicate them when a DataNode dies.  Deterministic: all
+/// randomness flows from the seed.
+#[derive(Clone, Debug)]
+pub struct Placement {
+    pub replication: usize,
+    node_rack: Vec<usize>,
+    /// block -> replica holders, first entry = the writer's local copy.
+    replicas: Vec<Vec<u32>>,
+    /// block -> writer (home) node.
+    pub home: Vec<u32>,
+    rng: Pcg64,
+}
+
+/// What a NameNode re-replication pass produced.  The proposed copies
+/// are NOT yet replicas: the engine starts a transfer per entry and
+/// calls [`Placement::add_replica`] only when it lands — a block whose
+/// rescue copy is still in flight when its last holder dies is lost,
+/// exactly like a real under-replicated HDFS block.
+#[derive(Clone, Debug, Default)]
+pub struct ReReplication {
+    /// (block, copy source, proposed new holder) transfers to start.
+    pub moved: Vec<(usize, u32, u32)>,
+    /// Blocks whose every replica sat on dead nodes — the data is gone.
+    pub lost: Vec<usize>,
+}
+
+impl Placement {
+    /// Place `blocks_per_node` blocks written by every node.  Block ids
+    /// are dense: node `h` wrote blocks `h*blocks_per_node ..`.
+    pub fn build(
+        node_rack: &[usize],
+        blocks_per_node: usize,
+        replication: usize,
+        seed: u64,
+    ) -> Placement {
+        assert!(replication >= 1 && !node_rack.is_empty());
+        let mut p = Placement {
+            replication: replication.min(node_rack.len()),
+            node_rack: node_rack.to_vec(),
+            replicas: Vec::with_capacity(node_rack.len() * blocks_per_node),
+            home: Vec::with_capacity(node_rack.len() * blocks_per_node),
+            rng: Pcg64::new(seed ^ 0x4ad0_0b10),
+        };
+        for writer in 0..node_rack.len() as u32 {
+            for _ in 0..blocks_per_node {
+                let r = p.place(writer);
+                p.home.push(writer);
+                p.replicas.push(r);
+            }
+        }
+        p
+    }
+
+    pub fn blocks(&self) -> usize {
+        self.replicas.len()
+    }
+
+    pub fn replicas_of(&self, block: usize) -> &[u32] {
+        &self.replicas[block]
+    }
+
+    /// HDFS default placement: first replica on the writer, second on
+    /// a different rack, further replicas on the second's rack when it
+    /// has room, anywhere distinct otherwise.
+    fn place(&mut self, writer: u32) -> Vec<u32> {
+        let n = self.node_rack.len();
+        let mut chosen = vec![writer];
+        let writer_rack = self.node_rack[writer as usize];
+        if self.replication >= 2 {
+            let off_rack: Vec<u32> = (0..n as u32)
+                .filter(|&i| self.node_rack[i as usize] != writer_rack && i != writer)
+                .collect();
+            let pool: Vec<u32> = if off_rack.is_empty() {
+                (0..n as u32).filter(|&i| i != writer).collect()
+            } else {
+                off_rack
+            };
+            if !pool.is_empty() {
+                chosen.push(pool[self.rng.gen_range(pool.len() as u64) as usize]);
+            }
+        }
+        while chosen.len() < self.replication {
+            let second_rack = chosen.get(1).map(|&s| self.node_rack[s as usize]);
+            let mut pool: Vec<u32> = (0..n as u32)
+                .filter(|&i| {
+                    !chosen.contains(&i)
+                        && second_rack
+                            .map(|r| self.node_rack[i as usize] == r)
+                            .unwrap_or(true)
+                })
+                .collect();
+            if pool.is_empty() {
+                pool = (0..n as u32).filter(|&i| !chosen.contains(&i)).collect();
+            }
+            if pool.is_empty() {
+                break;
+            }
+            chosen.push(pool[self.rng.gen_range(pool.len() as u64) as usize]);
+        }
+        chosen
+    }
+
+    /// A DataNode died: drop every copy it held (and any copy on other
+    /// already-dead nodes) and propose a rescue transfer per
+    /// under-replicated block from a surviving holder, preferring a
+    /// target in a rack no surviving replica occupies.  Proposals
+    /// become replicas via [`Self::add_replica`] when their transfers
+    /// land.
+    pub fn re_replicate(&mut self, dead_node: u32, dead: &[bool]) -> ReReplication {
+        let mut out = ReReplication::default();
+        for b in 0..self.replicas.len() {
+            if !self.replicas[b].contains(&dead_node) {
+                continue;
+            }
+            self.replicas[b].retain(|&r| !dead[r as usize]);
+            if self.replicas[b].is_empty() {
+                out.lost.push(b);
+                continue;
+            }
+            if self.replicas[b].len() >= self.replication {
+                continue;
+            }
+            if let Some((src, dst)) = self.propose_copy(b, dead) {
+                out.moved.push((b, src, dst));
+            }
+        }
+        out
+    }
+
+    /// Pick a (source holder, new target) pair restoring block `b`'s
+    /// replica count: source = any live holder, target = a live
+    /// non-holder off every surviving replica's rack when possible.
+    /// `None` when no live holder or no eligible target exists.
+    pub fn propose_copy(&mut self, b: usize, dead: &[bool]) -> Option<(u32, u32)> {
+        let n = self.node_rack.len();
+        let &src = self.replicas[b].iter().find(|&&r| !dead[r as usize])?;
+        let used_racks: Vec<usize> = self.replicas[b]
+            .iter()
+            .filter(|&&r| !dead[r as usize])
+            .map(|&r| self.node_rack[r as usize])
+            .collect();
+        let mut pool: Vec<u32> = (0..n as u32)
+            .filter(|&x| {
+                !dead[x as usize]
+                    && !self.replicas[b].contains(&x)
+                    && !used_racks.contains(&self.node_rack[x as usize])
+            })
+            .collect();
+        if pool.is_empty() {
+            pool = (0..n as u32)
+                .filter(|&x| !dead[x as usize] && !self.replicas[b].contains(&x))
+                .collect();
+        }
+        if pool.is_empty() {
+            return None;
+        }
+        let dst = pool[self.rng.gen_range(pool.len() as u64) as usize];
+        Some((src, dst))
+    }
+
+    /// A rescue transfer landed: the target now holds block `b`.
+    pub fn add_replica(&mut self, b: usize, node: u32) {
+        if !self.replicas[b].contains(&node) {
+            self.replicas[b].push(node);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -248,6 +421,108 @@ mod tests {
         assert_eq!(h.stat("tera.dat").unwrap().blocks.len(), 8);
         let counts = h.blocks_per_node();
         assert_eq!(counts.iter().sum::<usize>(), 24, "8 blocks x 3 replicas");
+    }
+
+    // ------------------------------------------- scenario-scale placement
+
+    /// Two racks of three nodes each.
+    fn racks2x3() -> Vec<usize> {
+        vec![0, 0, 0, 1, 1, 1]
+    }
+
+    #[test]
+    fn placement_is_rack_aware_and_write_local() {
+        let p = Placement::build(&racks2x3(), 4, 2, 7);
+        assert_eq!(p.blocks(), 24);
+        for b in 0..p.blocks() {
+            let r = p.replicas_of(b);
+            assert_eq!(r.len(), 2);
+            assert_eq!(r[0], p.home[b], "first replica on the writer");
+            assert_ne!(
+                racks2x3()[r[0] as usize],
+                racks2x3()[r[1] as usize],
+                "second replica off-rack (block {b}: {r:?})"
+            );
+        }
+        // Deterministic: same seed, same placement.
+        let q = Placement::build(&racks2x3(), 4, 2, 7);
+        for b in 0..p.blocks() {
+            assert_eq!(p.replicas_of(b), q.replicas_of(b));
+        }
+    }
+
+    #[test]
+    fn placement_third_replica_prefers_seconds_rack() {
+        let p = Placement::build(&racks2x3(), 8, 3, 11);
+        let mut on_seconds_rack = 0;
+        for b in 0..p.blocks() {
+            let r = p.replicas_of(b);
+            assert_eq!(r.len(), 3);
+            let racks = racks2x3();
+            if racks[r[2] as usize] == racks[r[1] as usize] {
+                on_seconds_rack += 1;
+            }
+        }
+        assert_eq!(
+            on_seconds_rack,
+            p.blocks(),
+            "with room in the second's rack, the third lands there"
+        );
+    }
+
+    #[test]
+    fn re_replication_restores_count_off_dead_node() {
+        let mut p = Placement::build(&racks2x3(), 4, 2, 13);
+        let mut dead = vec![false; 6];
+        dead[0] = true;
+        let rr = p.re_replicate(0, &dead);
+        assert!(rr.lost.is_empty(), "a single death loses nothing at R=2");
+        assert!(!rr.moved.is_empty(), "node 0 held copies that must move");
+        for &(b, src, dst) in &rr.moved {
+            assert!(!dead[src as usize] && !dead[dst as usize]);
+            let r = p.replicas_of(b);
+            assert_eq!(r.len(), 1, "a proposal is not yet a replica");
+            assert!(!r.contains(&0), "dead node dropped from block {b}");
+            // The transfer lands: now the count is restored and the
+            // pair stays rack-diverse.
+            p.add_replica(b, dst);
+            let r = p.replicas_of(b);
+            assert_eq!(r.len(), 2, "count restored for block {b}");
+            assert_ne!(racks2x3()[r[0] as usize], racks2x3()[r[1] as usize]);
+        }
+        // Blocks untouched by the death keep their placement.
+        for b in 0..p.blocks() {
+            assert!(!p.replicas_of(b).is_empty());
+        }
+        // add_replica is idempotent.
+        let (b, _, dst) = rr.moved[0];
+        p.add_replica(b, dst);
+        assert_eq!(p.replicas_of(b).len(), 2);
+    }
+
+    #[test]
+    fn re_replication_reports_lost_blocks() {
+        let mut p = Placement::build(&racks2x3(), 2, 2, 17);
+        // Kill nodes until some block's whole replica set is gone:
+        // killing an entire rack guarantees it (every pair is split
+        // across the two racks, so kill one rack + one partner).
+        let mut dead = vec![false; 6];
+        for node in [0u32, 1, 2, 3] {
+            dead[node as usize] = true;
+        }
+        let mut lost = Vec::new();
+        for node in [0u32, 1, 2, 3] {
+            lost.extend(p.re_replicate(node, &dead).lost);
+        }
+        // Survivors are 4 and 5 (rack 1): any block whose pair lived
+        // entirely on {0,1,2,3} is lost; blocks with a copy on 4/5
+        // survive with a restored count capped by live-rack choices.
+        for b in lost {
+            assert!(
+                p.replicas_of(b).is_empty(),
+                "lost block {b} must have no live replica"
+            );
+        }
     }
 
     #[test]

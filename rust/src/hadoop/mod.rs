@@ -1,14 +1,19 @@
 //! Hadoop 0.16 baseline (paper §2, §6): an HDFS-like block store and a
 //! MapReduce engine, implemented so the comparison in Tables 1–2 runs
-//! against a real competitor rather than a strawman.  `hdfs` and
-//! `mapreduce` are runnable (threads + bytes); `simjob` carries the
-//! cost structure to paper scale.
+//! against a real competitor rather than a strawman.  Three layers:
+//! `hdfs` and `mapreduce` are runnable (threads + bytes); `simjob`
+//! carries the closed-form cost structure to paper scale; `engine` is
+//! the event-driven baseline that runs on the SAME scenario substrate
+//! as the Sphere scheduler (shared topology, fault plan, disk links)
+//! for the `[compare]` head-to-head (DESIGN.md §12).
 
+pub mod engine;
 pub mod hdfs;
 pub mod mapreduce;
 pub mod simjob;
 
-pub use hdfs::{BlockId, BlockMeta, DataNodeId, Hdfs, HdfsFileMeta};
+pub use engine::{run_hadoop, HadoopRun};
+pub use hdfs::{BlockId, BlockMeta, DataNodeId, Hdfs, HdfsFileMeta, Placement, ReReplication};
 pub use mapreduce::{run_mapreduce, JobStats, Kv, MapReduceJob};
 pub use simjob::{
     simulate_hadoop_filegen, simulate_hadoop_row, simulate_hadoop_terasort,

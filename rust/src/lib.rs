@@ -13,8 +13,11 @@
 //! * [`transport`] / [`routing`] — the networking layer: UDT rate-based
 //!   transport, the Group Messaging Protocol, connection caching, and
 //!   Chord routing (paper §5).
-//! * [`hadoop`] — the comparison baseline: an HDFS-like block store and
-//!   a MapReduce engine with Hadoop 0.16's cost structure (paper §6).
+//! * [`hadoop`] — the comparison baseline: an HDFS-like block store, a
+//!   MapReduce engine with Hadoop 0.16's cost structure (paper §6),
+//!   and an event-driven baseline engine that runs on the same
+//!   scenario substrate as Sphere for the `[compare]` head-to-head
+//!   (DESIGN.md §12).
 //! * [`mining`] — the evaluation workloads: Terasort, Terasplit, and
 //!   the Angle anomaly-detection application (paper §6–7).
 //! * [`sim`] — the discrete-event testbed simulator standing in for the

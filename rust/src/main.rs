@@ -19,6 +19,7 @@ const SUBCOMMANDS: &[(&str, &str)] = &[
     ("sim", "simulate a paper-scale Table 1/2 row (WAN or LAN)"),
     ("scenario", "run a TOML-described scenario (topology+workload+faults)"),
     ("traffic", "serve multi-tenant client traffic (SLO report)"),
+    ("compare", "run the same job through Sphere AND Hadoop (head-to-head)"),
     ("quickstart", "upload files and run a grep UDF"),
 ];
 
@@ -31,7 +32,7 @@ fn flag_spec() -> Vec<FlagSpec> {
         FlagSpec { name: "windows", help: "angle time windows", takes_value: true },
         FlagSpec { name: "seed", help: "deterministic seed", takes_value: true },
         FlagSpec { name: "file", help: "scenario TOML (see config/scenarios/)", takes_value: true },
-        FlagSpec { name: "preset", help: "scenario preset: paper_wan6|paper_lan8|scale128|traffic_scale128|colocate_scale128", takes_value: true },
+        FlagSpec { name: "preset", help: "scenario preset: paper_wan6|paper_lan8|scale128|traffic_scale128|colocate_scale128|compare_wan4|compare_scale128", takes_value: true },
         FlagSpec { name: "requests", help: "traffic: total requests to drive", takes_value: true },
         FlagSpec { name: "clients", help: "traffic: simulated client population", takes_value: true },
         FlagSpec { name: "rps", help: "traffic: open-loop arrival rate", takes_value: true },
@@ -62,6 +63,7 @@ fn main() {
         "sim" => cmd_sim(&args),
         "scenario" => cmd_scenario(&args),
         "traffic" => cmd_traffic(&args),
+        "compare" => cmd_compare(&args),
         "quickstart" => cmd_quickstart(&args),
         other => Err(format!("unknown command {other:?}")),
     };
@@ -166,10 +168,12 @@ fn load_scenario_spec(
             "scale128" => Ok(ScenarioSpec::scale128()),
             "traffic_scale128" => Ok(ScenarioSpec::traffic_scale128()),
             "colocate_scale128" => Ok(ScenarioSpec::colocate_scale128()),
+            "compare_wan4" => Ok(ScenarioSpec::compare_wan4()),
+            "compare_scale128" => Ok(ScenarioSpec::compare_scale128()),
             other => Err(format!(
                 "unknown preset {other:?} \
-                 (paper_wan6|paper_lan8|scale128|traffic_scale128|colocate_scale128) \
-                 — or pass --file"
+                 (paper_wan6|paper_lan8|scale128|traffic_scale128|colocate_scale128|\
+                 compare_wan4|compare_scale128) — or pass --file"
             )),
         },
     }
@@ -246,6 +250,34 @@ fn print_scenario_report(r: &sector_sphere::scenario::ScenarioReport) {
             );
         }
     }
+    if let Some(cmp) = &r.comparison {
+        println!(
+            "  {:<8} {:>12} {:>7} {:>7} {:>9} {:>9} {:>9} {:>9} {:>6}",
+            "system", "makespan(s)", "tasks", "local%", "nic GB", "rack GB", "wan GB", "reassign", "spec"
+        );
+        for s in [&cmp.sphere, &cmp.hadoop] {
+            println!(
+                "  {:<8} {:>12.1} {:>7} {:>6.0}% {:>9.2} {:>9.2} {:>9.2} {:>9} {:>3}/{}",
+                s.system,
+                s.makespan_secs,
+                s.tasks,
+                s.locality_fraction * 100.0,
+                s.tier.nic / 1e9,
+                s.tier.rack / 1e9,
+                s.tier.wan / 1e9,
+                s.reassignments,
+                s.speculative_won,
+                s.speculative_launched,
+            );
+            for (name, end) in &s.stage_ends {
+                println!("    `- stage {:<18} ended {}", name, fmt_duration_secs(*end));
+            }
+        }
+        println!(
+            "  speedup        {:.2}x (Hadoop / Sphere makespan; paper §7: 2.4-2.6x WAN sort)",
+            cmp.speedup
+        );
+    }
     println!(
         "  faults         {} injected, {} nodes crashed, {} reassignments",
         r.faults_injected, r.nodes_crashed, r.reassignments
@@ -299,6 +331,19 @@ fn cmd_traffic(args: &Args) -> Result<(), String> {
             .record_into(&m);
         print!("{}", m.report());
     }
+    Ok(())
+}
+
+fn cmd_compare(args: &Args) -> Result<(), String> {
+    use sector_sphere::scenario::{run_scenario, CompareSpec};
+    let mut spec = load_scenario_spec(args, "compare_wan4")?;
+    // Any batch scenario can be compared: `compare --preset scale128`
+    // promotes a Sphere-only preset into a head-to-head.
+    if spec.compare.is_none() {
+        spec.compare = Some(CompareSpec::default());
+    }
+    let r = run_scenario(&spec)?;
+    print_scenario_report(&r);
     Ok(())
 }
 

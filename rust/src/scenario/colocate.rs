@@ -632,7 +632,6 @@ pub(crate) fn run_colocated(
     job.pump(0.0, &mut q, &state);
 
     let mut events: u64 = 0;
-    let mut now = 0.0f64;
     let mut batch: Vec<CoEv> = Vec::new();
     loop {
         if job.done && svc.done() && net.active_flows() == 0 {
@@ -646,7 +645,7 @@ pub(crate) fn run_colocated(
             (None, Some(b)) => b,
             (Some(a), Some(b)) => a.min(b),
         };
-        now = next;
+        let now = next;
         for fid in net.advance_to(next) {
             events += 1;
             if !job.flow_done(fid, now, &mut net, &mut q, &state) {
@@ -737,6 +736,7 @@ pub(crate) fn run_colocated(
             stage_ends: job.stage_ends,
             tenant_deltas,
         }),
+        comparison: None,
     })
 }
 

@@ -1,0 +1,277 @@
+//! Sphere-vs-Hadoop head-to-head driver (DESIGN.md §12).
+//!
+//! The paper's closing claim (§7) is an experimental comparison:
+//! Terasort and Terasplit on the SAME physical testbed, first under
+//! Sector/Sphere, then under Hadoop 0.16, with the ratio of makespans
+//! as the headline.  The companion papers (arXiv:0809.1181, the Open
+//! Cloud Testbed report arXiv:0907.4810) center the same methodology.
+//!
+//! A `ScenarioSpec` carrying a `[compare]` block runs here: the
+//! `[workload]` goes through the Sphere batch engine
+//! (`engine::run_batch`) AND the event-driven Hadoop baseline
+//! (`hadoop::engine::run_hadoop`), each on a substrate built from the
+//! SAME `TopologySpec`-derived testbed with the SAME fault plan — a
+//! crash, WAN brown-out or straggler hits both systems at the same
+//! virtual time on the same node/site.  This mirrors the paper's
+//! procedure (back-to-back runs on one testbed); the two systems do
+//! not contend with each other — for that deployment class see the
+//! colocation engine (DESIGN.md §11).
+//!
+//! The joint [`ComparisonReport`] carries, per system: makespan, stage
+//! breakdown, task counts, locality fraction, bytes moved per link
+//! tier (node NIC / rack uplink / site WAN), speculation counters and
+//! fault re-assignments, plus the Sphere/Hadoop speedup ratio.
+//! Deterministic end to end: same spec, byte-identical report — the
+//! contract `benches/bench_compare.rs` and the golden suite gate.
+
+use crate::hadoop::engine::run_hadoop;
+use crate::topology::Testbed;
+
+use super::engine::{run_batch, ScenarioReport, TierBytes};
+use super::{ScenarioSpec, WorkloadKind};
+
+/// One system's half of the head-to-head.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SystemOutcome {
+    pub system: &'static str,
+    pub makespan_secs: f64,
+    /// (stage name, end time) in execution order.
+    pub stage_ends: Vec<(String, f64)>,
+    pub events: u64,
+    /// Sphere segments / Hadoop map+reduce tasks completed.
+    pub tasks: usize,
+    pub locality_fraction: f64,
+    pub shuffle_gbytes: f64,
+    /// Bytes moved between nodes, by deepest link tier crossed.
+    pub tier: TierBytes,
+    pub speculative_launched: u64,
+    pub speculative_won: u64,
+    pub reassignments: u64,
+}
+
+/// The head-to-head view a `[compare]` scenario adds to
+/// [`ScenarioReport`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct ComparisonReport {
+    pub sphere: SystemOutcome,
+    pub hadoop: SystemOutcome,
+    /// Hadoop makespan / Sphere makespan (> 1: Sphere finished first —
+    /// the paper reports 2.4–2.6× on the WAN sort).
+    pub speedup: f64,
+}
+
+/// Run the head-to-head to completion.  Deterministic: the spec is the
+/// only input to both engine runs.
+pub(crate) fn run_compare(
+    spec: &ScenarioSpec,
+    testbed: &Testbed,
+) -> Result<ScenarioReport, String> {
+    let workload = spec
+        .workload
+        .as_ref()
+        .ok_or("[compare] requires a [workload] block")?;
+
+    let sphere_run = run_batch(spec, testbed)?;
+    let hadoop_run = run_hadoop(spec, testbed)?;
+
+    let sphere = SystemOutcome {
+        system: "sphere",
+        makespan_secs: sphere_run.makespan,
+        stage_ends: sphere_run.agg.stage_ends.clone(),
+        events: sphere_run.agg.events,
+        tasks: sphere_run.agg.segments,
+        locality_fraction: sphere_run.agg.locality_fraction(),
+        shuffle_gbytes: sphere_run.agg.shuffle_bytes / 1e9,
+        tier: sphere_run.agg.tier,
+        speculative_launched: 0,
+        speculative_won: 0,
+        reassignments: sphere_run.agg.reassignments,
+    };
+    let hadoop = SystemOutcome {
+        system: "hadoop",
+        makespan_secs: hadoop_run.makespan_secs,
+        stage_ends: hadoop_run.stage_ends,
+        events: hadoop_run.events,
+        tasks: hadoop_run.tasks_completed,
+        locality_fraction: hadoop_run.local_fraction,
+        shuffle_gbytes: hadoop_run.shuffle_gbytes,
+        tier: hadoop_run.tier,
+        speculative_launched: hadoop_run.speculative_launched,
+        speculative_won: hadoop_run.speculative_won,
+        reassignments: hadoop_run.reassignments,
+    };
+    let speedup = hadoop.makespan_secs / sphere.makespan_secs.max(1e-9);
+
+    Ok(ScenarioReport {
+        name: spec.name.clone(),
+        workload: compared_name(workload.kind),
+        nodes: testbed.nodes(),
+        racks: testbed.racks(),
+        sites: testbed.site_names.len(),
+        // The headline row stays the Sphere run; the Hadoop half lives
+        // in `comparison`.
+        makespan_secs: sphere.makespan_secs,
+        events: sphere.events + hadoop.events,
+        segments: sphere.tasks,
+        reassignments: sphere.reassignments + hadoop.reassignments,
+        locality_fraction: sphere.locality_fraction,
+        shuffle_gbytes: sphere.shuffle_gbytes,
+        faults_injected: sphere_run.state.injected,
+        nodes_crashed: sphere_run.state.crashes,
+        speculative_launched: 0,
+        speculative_won: 0,
+        traffic: None,
+        colocation: None,
+        comparison: Some(ComparisonReport {
+            sphere,
+            hadoop,
+            speedup,
+        }),
+    })
+}
+
+fn compared_name(kind: WorkloadKind) -> &'static str {
+    match kind {
+        WorkloadKind::Terasort => "terasort vs hadoop",
+        WorkloadKind::Terasplit => "terasplit vs hadoop",
+        WorkloadKind::Filegen => "filegen vs hadoop",
+        WorkloadKind::Angle | WorkloadKind::Kmeans => {
+            unreachable!("off-paper workloads are rejected before a compare run")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::{run_scenario, CompareSpec, FaultSpec};
+    use crate::topology::TopologySpec;
+    use crate::util::bytes::GB;
+
+    /// Small head-to-head: 8 nodes across 2 sites, 0.5 GB/node.
+    fn cmp_spec(kind: WorkloadKind) -> ScenarioSpec {
+        let mut spec = ScenarioSpec::paper_lan8();
+        spec.topology = TopologySpec::scale_out(2, 2, 2);
+        spec.name = format!("compare-test-{}", kind.name());
+        let w = spec.workload.as_mut().unwrap();
+        w.kind = kind;
+        w.bytes_per_node = 0.5 * GB as f64;
+        spec.compare = Some(CompareSpec::default());
+        spec
+    }
+
+    #[test]
+    fn compare_runs_both_engines_deterministically() {
+        let spec = cmp_spec(WorkloadKind::Terasort);
+        let a = run_scenario(&spec).unwrap();
+        let b = run_scenario(&spec).unwrap();
+        assert_eq!(a, b, "same spec, same joint report");
+        assert_eq!(a.workload, "terasort vs hadoop");
+        let cmp = a.comparison.as_ref().expect("head-to-head present");
+        assert_eq!(cmp.sphere.system, "sphere");
+        assert_eq!(cmp.hadoop.system, "hadoop");
+        assert!(cmp.sphere.tasks > 0 && cmp.hadoop.tasks > 0);
+        assert!(cmp.sphere.makespan_secs > 0.0 && cmp.hadoop.makespan_secs > 0.0);
+        assert!(
+            (cmp.speedup - cmp.hadoop.makespan_secs / cmp.sphere.makespan_secs).abs() < 1e-9
+        );
+        assert_eq!(cmp.sphere.stage_ends.len(), 2, "terasort: two Sphere stages");
+        assert_eq!(
+            cmp.hadoop.stage_ends.len(),
+            3,
+            "hadoop terasort: map, shuffle, reduce"
+        );
+        assert!(cmp.hadoop.tier.total() > 0.0, "hadoop moved bytes");
+        assert!(cmp.sphere.tier.total() > 0.0, "sphere moved bytes");
+    }
+
+    #[test]
+    fn sphere_wins_the_paper_workloads() {
+        // The paper's headline (§7): Sphere beats Hadoop on sort and
+        // split, on LAN and WAN alike.  Gate the sign, not the exact
+        // factor (benches record the trajectory).
+        for kind in [WorkloadKind::Terasort, WorkloadKind::Terasplit] {
+            let r = run_scenario(&cmp_spec(kind)).unwrap();
+            let cmp = r.comparison.unwrap();
+            assert!(
+                cmp.speedup > 1.0,
+                "{}: hadoop {:.1}s vs sphere {:.1}s",
+                kind.name(),
+                cmp.hadoop.makespan_secs,
+                cmp.sphere.makespan_secs
+            );
+        }
+    }
+
+    #[test]
+    fn wan_widens_the_gap() {
+        // §7: the Sphere advantage grows on the wide area (UDT holds
+        // the long fat pipe, Hadoop's 64 KB TCP windows do not).
+        let mut lan = cmp_spec(WorkloadKind::Terasort);
+        lan.topology = TopologySpec::scale_out(1, 2, 4);
+        let mut wan = cmp_spec(WorkloadKind::Terasort);
+        wan.topology = TopologySpec::scale_out(4, 1, 2);
+        let lan_cmp = run_scenario(&lan).unwrap().comparison.unwrap();
+        let wan_cmp = run_scenario(&wan).unwrap().comparison.unwrap();
+        assert!(
+            wan_cmp.speedup > lan_cmp.speedup,
+            "WAN speedup {:.2} must exceed LAN speedup {:.2}",
+            wan_cmp.speedup,
+            lan_cmp.speedup
+        );
+        assert!(wan_cmp.hadoop.tier.wan > 0.0, "hadoop crossed the WAN");
+    }
+
+    #[test]
+    fn faults_hit_both_systems() {
+        let mut spec = cmp_spec(WorkloadKind::Terasort);
+        spec.faults.push(FaultSpec::SlaveCrash {
+            at_secs: 2.0,
+            node: 1,
+        });
+        let clean = run_scenario(&cmp_spec(WorkloadKind::Terasort)).unwrap();
+        let faulted = run_scenario(&spec).unwrap();
+        assert_eq!(faulted, run_scenario(&spec).unwrap(), "faulted runs stay deterministic");
+        assert_eq!(faulted.nodes_crashed, 1);
+        let (c, f) = (
+            clean.comparison.as_ref().unwrap(),
+            faulted.comparison.as_ref().unwrap(),
+        );
+        assert!(
+            f.sphere.makespan_secs > c.sphere.makespan_secs,
+            "the crash must cost Sphere time"
+        );
+        assert!(
+            f.hadoop.makespan_secs > c.hadoop.makespan_secs,
+            "the crash must cost Hadoop time"
+        );
+        assert!(f.hadoop.reassignments > 0, "hadoop re-ran work off the dead node");
+    }
+
+    #[test]
+    fn filegen_compares_write_pipelines() {
+        // §6.3: Sphere wrote 10 GB in 68 s, Hadoop's HDFS client
+        // pipeline took 212 s on the same disks.
+        let r = run_scenario(&cmp_spec(WorkloadKind::Filegen)).unwrap();
+        let cmp = r.comparison.unwrap();
+        assert_eq!(r.workload, "filegen vs hadoop");
+        assert!(
+            cmp.speedup > 1.5,
+            "HDFS write pipeline must lag well behind Sphere: {:.2}",
+            cmp.speedup
+        );
+    }
+
+    #[test]
+    fn compare_presets_run() {
+        let r = run_scenario(&ScenarioSpec::compare_wan4()).unwrap();
+        let cmp = r.comparison.unwrap();
+        assert_eq!(r.nodes, 4);
+        assert!(
+            cmp.speedup > 1.0,
+            "Table 1 reproduction: Sphere wins ({:.2}x)",
+            cmp.speedup
+        );
+        assert!(cmp.hadoop.tier.wan > 0.0, "the 4-node row spans two sites");
+    }
+}

@@ -40,7 +40,7 @@ use crate::sim::netsim::{FlowId, LinkId, NetSim};
 use crate::sphere::scheduler::Scheduler;
 use crate::sphere::segment::Segment;
 use crate::sphere::simjob::udt_efficiency;
-use crate::topology::{NetLinks, Testbed, rack_diverse_replica};
+use crate::topology::{NetLinks, Proximity, Testbed, rack_diverse_replica};
 use crate::transport::TransportModels;
 
 use super::{FaultSpec, ScenarioSpec, WorkloadKind};
@@ -75,6 +75,40 @@ pub struct ScenarioReport {
     /// Joint view of a colocated run: job makespan/stage breakdown plus
     /// per-tenant SLO deltas versus the uncolocated baseline.
     pub colocation: Option<super::colocate::ColocationReport>,
+    /// Sphere-vs-Hadoop head-to-head when the scenario carried a
+    /// `[compare]` block (DESIGN.md §12).
+    pub comparison: Option<super::compare::ComparisonReport>,
+}
+
+/// Bytes moved between nodes, bucketed by the deepest link tier the
+/// transfer crossed (the `Proximity` of its endpoints).  The compare
+/// mode reports this per system so "Hadoop shuffled 3x the WAN bytes"
+/// is a read-off, not an inference.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TierBytes {
+    /// Same-node moves: disk links only, no NIC crossed.
+    pub local: f64,
+    /// Same-rack transfers: the two node NICs.
+    pub nic: f64,
+    /// Cross-rack, same-site transfers: the rack uplinks.
+    pub rack: f64,
+    /// Cross-site transfers: the WAN uplinks.
+    pub wan: f64,
+}
+
+impl TierBytes {
+    pub(crate) fn add(&mut self, testbed: &Testbed, src: usize, dst: usize, bytes: f64) {
+        match testbed.proximity(src, dst) {
+            Proximity::Local => self.local += bytes,
+            Proximity::SameRack => self.nic += bytes,
+            Proximity::SameSite => self.rack += bytes,
+            Proximity::Wan => self.wan += bytes,
+        }
+    }
+
+    pub fn total(&self) -> f64 {
+        self.local + self.nic + self.rack + self.wan
+    }
 }
 
 /// Run one scenario to completion. Deterministic: no wall clock, no
@@ -82,6 +116,11 @@ pub struct ScenarioReport {
 pub fn run_scenario(spec: &ScenarioSpec) -> Result<ScenarioReport, String> {
     spec.validate()?;
     let testbed = spec.topology.generate()?;
+    if spec.compare.is_some() {
+        // Head-to-head scenario: the same workload through the Sphere
+        // engine AND the Hadoop baseline engine (DESIGN.md §12).
+        return super::compare::run_compare(spec, &testbed);
+    }
     match (&spec.workload, &spec.traffic) {
         // Colocated scenario: batch job + client traffic share one
         // substrate (DESIGN.md §11).
@@ -92,32 +131,80 @@ pub fn run_scenario(spec: &ScenarioSpec) -> Result<ScenarioReport, String> {
         (None, None) => return Err("scenario has neither workload nor traffic".into()),
         (Some(_), None) => {}
     }
-    let workload = spec.workload.as_ref().expect("batch path has a workload");
+    let out = run_batch(spec, &testbed)?;
+    Ok(out.into_report(spec, &testbed))
+}
+
+/// Raw outcome of the Sphere batch half of the engine — what the
+/// compare driver consumes directly (it builds one joint report from
+/// two system runs instead of two `ScenarioReport`s).
+pub(crate) struct BatchOutcome {
+    pub(crate) makespan: f64,
+    pub(crate) agg: Aggregate,
+    pub(crate) state: FaultState,
+}
+
+impl BatchOutcome {
+    pub(crate) fn into_report(self, spec: &ScenarioSpec, testbed: &Testbed) -> ScenarioReport {
+        let workload = spec.workload.as_ref().expect("batch outcome has a workload");
+        ScenarioReport {
+            name: spec.name.clone(),
+            workload: workload.kind.name(),
+            nodes: testbed.nodes(),
+            racks: testbed.racks(),
+            sites: testbed.site_names.len(),
+            makespan_secs: self.makespan,
+            events: self.agg.events,
+            segments: self.agg.segments,
+            reassignments: self.agg.reassignments,
+            locality_fraction: self.agg.locality_fraction(),
+            shuffle_gbytes: self.agg.shuffle_bytes / 1e9,
+            faults_injected: self.state.injected,
+            nodes_crashed: self.state.crashes,
+            speculative_launched: 0,
+            speculative_won: 0,
+            traffic: None,
+            colocation: None,
+            comparison: None,
+        }
+    }
+}
+
+/// Run the `[workload]` block to completion on a fresh substrate built
+/// from `testbed`.  Shared by the plain batch path of [`run_scenario`]
+/// and the Sphere side of the compare driver (DESIGN.md §12).
+pub(crate) fn run_batch(spec: &ScenarioSpec, testbed: &Testbed) -> Result<BatchOutcome, String> {
+    let workload = spec
+        .workload
+        .as_ref()
+        .ok_or("batch run requires a [workload] block")?;
     let mut state = FaultState::new(&spec.faults, testbed.nodes());
     let b = workload.bytes_per_node;
     let mut agg = Aggregate::default();
 
     let makespan = match workload.kind {
         WorkloadKind::Terasort => {
-            let end_a = StageRun::new(&testbed, &spec.cfg, StageKind::TerasortA, b, 0.0, &mut state)?
+            let end_a = StageRun::new(testbed, &spec.cfg, StageKind::TerasortA, b, 0.0, &mut state)?
                 .execute(&mut agg)?;
-            StageRun::new(&testbed, &spec.cfg, StageKind::TerasortB, b, end_a, &mut state)?
+            StageRun::new(testbed, &spec.cfg, StageKind::TerasortB, b, end_a, &mut state)?
                 .execute(&mut agg)?
         }
         WorkloadKind::Filegen => {
-            StageRun::new(&testbed, &spec.cfg, StageKind::Filegen, b, 0.0, &mut state)?
+            StageRun::new(testbed, &spec.cfg, StageKind::Filegen, b, 0.0, &mut state)?
                 .execute(&mut agg)?
         }
         WorkloadKind::Angle => {
-            let end = StageRun::new(&testbed, &spec.cfg, StageKind::AngleExtract, b, 0.0, &mut state)?
+            let end = StageRun::new(testbed, &spec.cfg, StageKind::AngleExtract, b, 0.0, &mut state)?
                 .execute(&mut agg)?;
             // Client-side clustering tail at Table 3's cost structure.
             let records = b * testbed.nodes() as f64 / PACKET_BYTES as f64;
-            end + simulate_angle_clustering(records, agg.segments as f64)
+            let total = end + simulate_angle_clustering(records, agg.segments as f64);
+            agg.stage_ends.push(("clustering".to_string(), total));
+            total
         }
-        WorkloadKind::Terasplit => run_terasplit(&testbed, &spec.cfg, b, &mut state, &mut agg)?,
+        WorkloadKind::Terasplit => run_terasplit(testbed, &spec.cfg, b, &mut state, &mut agg)?,
         WorkloadKind::Kmeans => run_kmeans(
-            &testbed,
+            testbed,
             &spec.cfg,
             b,
             workload.iterations,
@@ -126,29 +213,10 @@ pub fn run_scenario(spec: &ScenarioSpec) -> Result<ScenarioReport, String> {
         )?,
     };
 
-    let assignments = agg.local_assignments + agg.remote_assignments;
-    Ok(ScenarioReport {
-        name: spec.name.clone(),
-        workload: workload.kind.name(),
-        nodes: testbed.nodes(),
-        racks: testbed.racks(),
-        sites: testbed.site_names.len(),
-        makespan_secs: makespan,
-        events: agg.events,
-        segments: agg.segments,
-        reassignments: agg.reassignments,
-        locality_fraction: if assignments == 0 {
-            0.0
-        } else {
-            agg.local_assignments as f64 / assignments as f64
-        },
-        shuffle_gbytes: agg.shuffle_bytes / 1e9,
-        faults_injected: state.injected,
-        nodes_crashed: state.crashes,
-        speculative_launched: 0,
-        speculative_won: 0,
-        traffic: None,
-        colocation: None,
+    Ok(BatchOutcome {
+        makespan,
+        agg,
+        state,
     })
 }
 
@@ -278,13 +346,28 @@ impl FaultState {
 // ------------------------------------------------------------ aggregates
 
 #[derive(Default)]
-struct Aggregate {
-    events: u64,
-    segments: usize,
-    reassignments: u64,
-    local_assignments: u64,
-    remote_assignments: u64,
-    shuffle_bytes: f64,
+pub(crate) struct Aggregate {
+    pub(crate) events: u64,
+    pub(crate) segments: usize,
+    pub(crate) reassignments: u64,
+    pub(crate) local_assignments: u64,
+    pub(crate) remote_assignments: u64,
+    pub(crate) shuffle_bytes: f64,
+    /// Bytes moved between nodes, by link tier crossed.
+    pub(crate) tier: TierBytes,
+    /// (stage name, end time) in execution order.
+    pub(crate) stage_ends: Vec<(String, f64)>,
+}
+
+impl Aggregate {
+    pub(crate) fn locality_fraction(&self) -> f64 {
+        let assignments = self.local_assignments + self.remote_assignments;
+        if assignments == 0 {
+            0.0
+        } else {
+            self.local_assignments as f64 / assignments as f64
+        }
+    }
 }
 
 // ------------------------------------------------------------ staged engine
@@ -557,6 +640,8 @@ impl<'a> StageRun<'a> {
                 .map(|(&f, fo)| (f, fo.src, pick_dst_in(alive, fo.src, fo.dst + 1)))
                 .collect()
         };
+        // The rerouted remainder is not re-counted in tier/shuffle
+        // byte totals — those count each payload once, at first send.
         for (fid, src, new_dst) in redirect {
             self.flows.remove(&fid);
             let left = self.net.cancel_flow(fid);
@@ -618,6 +703,7 @@ impl<'a> StageRun<'a> {
                                     let bytes = seg.bytes as f64 * frac;
                                     self.start_shuffle_flow(node, dst, bytes);
                                     agg.shuffle_bytes += bytes;
+                                    agg.tier.add(self.testbed, node, dst, bytes);
                                 }
                             }
                         }
@@ -645,6 +731,7 @@ impl<'a> StageRun<'a> {
         }
         agg.local_assignments += self.sched.local_assignments;
         agg.remote_assignments += self.sched.remote_assignments;
+        agg.stage_ends.push((self.kind.name().to_string(), now));
         Ok(now)
     }
 }
@@ -895,7 +982,9 @@ fn run_terasplit(
         now += bytes_per_node / rate + setup;
         agg.events += 1;
         agg.segments += 1;
+        agg.tier.add(testbed, src, client, bytes_per_node);
     }
+    agg.stage_ends.push(("gather scan".to_string(), now));
     Ok(now)
 }
 
@@ -930,6 +1019,7 @@ fn run_kmeans(
         agg.events += alive.len() as u64 + 1;
         agg.segments += alive.len();
     }
+    agg.stage_ends.push(("kmeans rounds".to_string(), now));
     Ok(now)
 }
 

@@ -20,17 +20,22 @@
 //! production code path, not a copy of it.  A `[traffic]` block runs
 //! the service engine instead (DESIGN.md §10); `[workload]` +
 //! `[traffic]` together run colocated on one shared substrate with
-//! speculative re-execution (`colocate`, DESIGN.md §11).
+//! speculative re-execution (`colocate`, DESIGN.md §11); a `[compare]`
+//! block runs the workload through BOTH the Sphere engine and the
+//! Hadoop baseline engine under the same fault plan and reports the
+//! speedup ratio (`compare`, DESIGN.md §12).
 //!
 //! Specs parse from TOML (`config/scenarios/*.toml` in the repo root)
 //! or come from the named presets used by `examples/scenario_suite.rs`
 //! and `benches/bench_scale.rs`.
 
 pub mod colocate;
+pub mod compare;
 pub mod engine;
 
 pub use colocate::{ColocationReport, TenantSloDelta};
-pub use engine::{run_scenario, ScenarioReport};
+pub use compare::{ComparisonReport, SystemOutcome};
+pub use engine::{run_scenario, ScenarioReport, TierBytes};
 
 use crate::config::{SimConfig, Table};
 use crate::service::{ArrivalProcess, TenantSpec, TrafficSpec};
@@ -160,6 +165,28 @@ impl ColocationSpec {
     }
 }
 
+/// Head-to-head knobs (the `[compare]` TOML block; DESIGN.md §12).
+/// When present, the scenario's `[workload]` runs through BOTH the
+/// Sphere engine and the Hadoop baseline engine on substrates built
+/// from the same topology under the same fault plan, and the report
+/// carries a [`ComparisonReport`].  Note: the TOML parser only sees
+/// sections that carry at least one key, so write `enabled = true`
+/// rather than a bare `[compare]` header.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CompareSpec {
+    /// Hadoop's speculative execution (mapred.speculative.execution;
+    /// on by default in 0.16 — parity with Sphere's PR-3 speculation).
+    pub hadoop_speculative: bool,
+}
+
+impl Default for CompareSpec {
+    fn default() -> Self {
+        CompareSpec {
+            hadoop_speculative: true,
+        }
+    }
+}
+
 /// A complete, reproducible run description.
 #[derive(Clone, Debug)]
 pub struct ScenarioSpec {
@@ -177,6 +204,9 @@ pub struct ScenarioSpec {
     pub traffic: Option<TrafficSpec>,
     /// Colocation knobs; only read when both blocks are present.
     pub colocation: ColocationSpec,
+    /// The Sphere-vs-Hadoop head-to-head (the `[compare]` TOML block;
+    /// DESIGN.md §12).  Mutually exclusive with `[traffic]`.
+    pub compare: Option<CompareSpec>,
 }
 
 impl ScenarioSpec {
@@ -268,6 +298,18 @@ impl ScenarioSpec {
                     .into(),
             );
         }
+        let compare = if t.section_keys("compare").next().is_some() {
+            t.check_known_keys("compare", &["enabled", "hadoop_speculative"], &[])?;
+            if t.bool_or("compare.enabled", true) {
+                Some(CompareSpec {
+                    hadoop_speculative: t.bool_or("compare.hadoop_speculative", true),
+                })
+            } else {
+                None
+            }
+        } else {
+            None
+        };
         Ok(ScenarioSpec {
             name: t.str_or("name", &topology.name).to_string(),
             topology,
@@ -276,6 +318,7 @@ impl ScenarioSpec {
             faults,
             traffic,
             colocation,
+            compare,
         })
     }
 
@@ -290,6 +333,29 @@ impl ScenarioSpec {
             traffic.validate()?;
         }
         self.colocation.validate()?;
+        if self.compare.is_some() {
+            if self.traffic.is_some() {
+                return Err(
+                    "[compare] runs the batch workload through both engines; it \
+                     cannot combine with [traffic] (drop one of the blocks)"
+                        .into(),
+                );
+            }
+            let w = self
+                .workload
+                .as_ref()
+                .ok_or("[compare] requires a [workload] block")?;
+            if !matches!(
+                w.kind,
+                WorkloadKind::Terasort | WorkloadKind::Terasplit | WorkloadKind::Filegen
+            ) {
+                return Err(format!(
+                    "compare: {} is not part of the paper's Sphere-vs-Hadoop \
+                     head-to-head (terasort|terasplit|filegen)",
+                    w.kind.name()
+                ));
+            }
+        }
         if self.traffic.is_some() {
             if let Some(w) = &self.workload {
                 // The colocated engine is event-driven end to end; the
@@ -375,6 +441,7 @@ impl ScenarioSpec {
             faults: Vec::new(),
             traffic: None,
             colocation: ColocationSpec::default(),
+            compare: None,
         }
     }
 
@@ -393,6 +460,7 @@ impl ScenarioSpec {
             faults: Vec::new(),
             traffic: None,
             colocation: ColocationSpec::default(),
+            compare: None,
         }
     }
 
@@ -428,6 +496,7 @@ impl ScenarioSpec {
             ],
             traffic: None,
             colocation: ColocationSpec::default(),
+            compare: None,
         }
     }
 
@@ -532,6 +601,32 @@ impl ScenarioSpec {
             threshold: 1.75,
             job_share: 0.8,
         };
+        spec
+    }
+
+    /// The paper's §7 multi-site head-to-head: Terasort at 10 GB/node
+    /// on the Table 1 four-node row (2× Chicago + 2× Pasadena, 55 ms
+    /// RTT between them) through BOTH the Sphere engine and the Hadoop
+    /// baseline engine on identically built substrates, no faults —
+    /// the clean reproduction of the 1-site-vs-multi-site comparison.
+    /// Mirrors config/scenarios/compare_wan4.toml.
+    pub fn compare_wan4() -> ScenarioSpec {
+        let mut spec = ScenarioSpec::paper_wan6();
+        spec.name = "compare-wan4".into();
+        spec.topology =
+            TopologySpec::paper_wan_prefix(4).expect("4 nodes is a valid Table 1 prefix");
+        spec.compare = Some(CompareSpec::default());
+        spec
+    }
+
+    /// The scale-out head-to-head: the scale128 Terasort (128 nodes,
+    /// 1 GB/node) with its full fault plan — straggler, crash, WAN
+    /// brown-out — hitting both engines identically, Hadoop speculation
+    /// enabled.  Mirrors config/scenarios/compare_scale128.toml.
+    pub fn compare_scale128() -> ScenarioSpec {
+        let mut spec = ScenarioSpec::scale128();
+        spec.name = "compare-scale128".into();
+        spec.compare = Some(CompareSpec::default());
         spec
     }
 }
@@ -807,5 +902,73 @@ mod tests {
         });
         let err = spec.validate().unwrap_err();
         assert!(err.contains("kmeans"), "{err}");
+    }
+
+    #[test]
+    fn compare_block_parses_and_defaults_workload() {
+        // A [compare] document without [workload] defaults to terasort,
+        // exactly like a bare batch scenario.
+        let spec = ScenarioSpec::from_toml(
+            "[topology]\nsites = 2\nracks_per_site = 1\nnodes_per_rack = 2\n\
+             [compare]\nenabled = true",
+        )
+        .unwrap();
+        let cmp = spec.compare.expect("compare block parsed");
+        assert!(cmp.hadoop_speculative, "0.16 default: speculation on");
+        assert_eq!(
+            spec.workload.as_ref().map(|w| w.kind),
+            Some(WorkloadKind::Terasort)
+        );
+        spec.validate().unwrap();
+        // enabled = false switches the head-to-head off.
+        let spec = ScenarioSpec::from_toml(
+            "[topology]\nsites = 2\nracks_per_site = 1\nnodes_per_rack = 2\n\
+             [compare]\nenabled = false",
+        )
+        .unwrap();
+        assert!(spec.compare.is_none());
+        // Typo'd keys error, never silently default.
+        let err = ScenarioSpec::from_toml("[compare]\nspeculative = true").unwrap_err();
+        assert!(err.contains("speculative"), "{err}");
+    }
+
+    #[test]
+    fn compare_rejects_traffic_and_offpaper_workloads() {
+        let err = ScenarioSpec::from_toml(
+            "[topology]\nsites = 2\nracks_per_site = 1\nnodes_per_rack = 2\n\
+             [compare]\nenabled = true\n[traffic]\nrequests = 10",
+        )
+        .unwrap()
+        .validate()
+        .unwrap_err();
+        assert!(err.contains("[compare]"), "{err}");
+        for kind in ["angle", "kmeans"] {
+            let err = ScenarioSpec::from_toml(&format!(
+                "[topology]\nsites = 2\nracks_per_site = 1\nnodes_per_rack = 2\n\
+                 [workload]\nkind = \"{kind}\"\n[compare]\nenabled = true"
+            ))
+            .unwrap()
+            .validate()
+            .unwrap_err();
+            assert!(err.contains(kind), "{err}");
+        }
+    }
+
+    #[test]
+    fn compare_presets_validate() {
+        let wan4 = ScenarioSpec::compare_wan4();
+        wan4.validate().unwrap();
+        assert_eq!(wan4.topology.nodes(), 4);
+        assert_eq!(wan4.topology.sites.len(), 2, "Chicago + Pasadena");
+        assert!(wan4.compare.is_some());
+        assert!(wan4.faults.is_empty(), "the paper's tables are fault-free");
+        let s128 = ScenarioSpec::compare_scale128();
+        s128.validate().unwrap();
+        assert_eq!(s128.topology.nodes(), 128);
+        assert_eq!(
+            s128.faults.len(),
+            3,
+            "both engines face the scale128 fault plan"
+        );
     }
 }

@@ -150,7 +150,6 @@ pub fn run_traffic(spec: &ScenarioSpec, testbed: &Testbed) -> Result<ScenarioRep
     engine.schedule_fault_events(&state, &mut q);
     engine.schedule_arrivals(&mut q);
 
-    let mut now = 0.0f64;
     let mut batch: Vec<Ev> = Vec::new();
     loop {
         if engine.done() && net.active_flows() == 0 {
@@ -164,7 +163,7 @@ pub fn run_traffic(spec: &ScenarioSpec, testbed: &Testbed) -> Result<ScenarioRep
             (None, Some(b)) => b,
             (Some(a), Some(b)) => a.min(b),
         };
-        now = next;
+        let now = next;
         for fid in net.advance_to(next) {
             engine.events += 1;
             engine.flow_done(fid, now, &mut net, &mut q, &state);
@@ -215,6 +214,7 @@ pub fn run_traffic(spec: &ScenarioSpec, testbed: &Testbed) -> Result<ScenarioRep
         speculative_won: 0,
         traffic: Some(traffic),
         colocation: None,
+        comparison: None,
     })
 }
 

@@ -151,6 +151,15 @@ impl Scheduler {
         Some(seg)
     }
 
+    /// Would [`Self::speculate`] grant a backup for segment `id` right
+    /// now?  Lets an engine skip the backup-node search for segments
+    /// that already finished or spent their budget (the Hadoop baseline
+    /// engine scans its whole in-flight set on every check — DESIGN.md
+    /// §12).
+    pub fn speculatable(&self, id: usize) -> bool {
+        !self.completed.contains(&id) && self.attempts_of(id) < self.max_attempts
+    }
+
     /// Grant a speculative backup attempt for an already-running
     /// segment (DESIGN.md §11): the engine noticed the primary attempt
     /// straggling and wants a second copy on `node`.  Refused when the
@@ -436,13 +445,16 @@ mod tests {
         let mut s = Scheduler::new(vec![seg(0, "a", &[0, 3])], true);
         s.max_attempts = 2;
         let primary = s.assign(0).unwrap();
+        assert!(s.speculatable(0), "one attempt used, budget allows a backup");
         assert!(s.speculate(&primary, 3));
+        assert!(!s.speculatable(0), "budget spent");
         assert!(
             !s.speculate(&primary, 3),
             "budget spent: a third attempt is refused"
         );
         s.complete(&primary);
         s.cancel_attempt(&primary);
+        assert!(!s.speculatable(0), "completed segments never respeculate");
         assert!(!s.speculate(&primary, 3), "completed segments never respeculate");
     }
 

@@ -61,6 +61,45 @@ fn golden_colocate_scale128_scaled() {
 }
 
 #[test]
+fn golden_compare_wan4() {
+    assert_golden(&ScenarioSpec::compare_wan4());
+}
+
+#[test]
+fn golden_compare_scale128() {
+    // Full size: both engines are event-driven and finish a 128-node
+    // faulted run in debug-build milliseconds (like golden_scale128).
+    assert_golden(&ScenarioSpec::compare_scale128());
+}
+
+#[test]
+fn golden_compare_toml_matches_preset_shape() {
+    // The shipped TOMLs must stay in sync with the built-in presets.
+    for (file, preset) in [
+        ("compare_wan4.toml", ScenarioSpec::compare_wan4()),
+        ("compare_scale128.toml", ScenarioSpec::compare_scale128()),
+    ] {
+        let text = std::fs::read_to_string(format!(
+            "{}/config/scenarios/{file}",
+            env!("CARGO_MANIFEST_DIR")
+        ))
+        .expect("preset TOML readable");
+        let from_toml = ScenarioSpec::from_toml(&text).expect("preset TOML parses");
+        assert_eq!(from_toml.name, preset.name);
+        assert_eq!(from_toml.topology.nodes(), preset.topology.nodes());
+        assert_eq!(from_toml.compare, preset.compare, "{file}");
+        assert_eq!(from_toml.faults.len(), preset.faults.len(), "{file}");
+        for f in &preset.faults {
+            assert!(from_toml.faults.contains(f), "{file} missing fault {f:?}");
+        }
+        assert_eq!(
+            from_toml.workload.as_ref().map(|w| w.kind),
+            preset.workload.as_ref().map(|w| w.kind),
+        );
+    }
+}
+
+#[test]
 fn golden_colocate_toml_matches_preset_shape() {
     // The shipped TOML must stay in sync with the built-in preset:
     // same topology, fault plan, colocation knobs and tenant mix.
