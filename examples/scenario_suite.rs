@@ -33,6 +33,8 @@ fn main() {
         load_or(ScenarioSpec::colocate_scale128(), "colocate_scale128.toml"),
         load_or(ScenarioSpec::compare_wan4(), "compare_wan4.toml"),
         load_or(ScenarioSpec::compare_scale128(), "compare_scale128.toml"),
+        load_or(ScenarioSpec::angle_wan4(), "angle_wan4.toml"),
+        load_or(ScenarioSpec::angle_scale128(), "angle_scale128.toml"),
     ];
     println!(
         "{:<28} {:>6} {:>6} {:>12} {:>9} {:>9} {:>7} {:>7}",
@@ -67,6 +69,20 @@ fn main() {
                 "  `- job done in {:>8.1} s; speculation {} launched / {} won",
                 co.job_makespan_secs, a.speculative_launched, a.speculative_won
             );
+        }
+        if let Some(an) = &a.angle {
+            println!(
+                "  `- angle {} windows / {} files: recall {:.2} \
+                 (found {:?}), models {:.1} KB cross-tier, spec {}/{}",
+                an.windows,
+                an.files,
+                an.recall,
+                an.emergent_found,
+                an.model_tier.total() / 1e3,
+                a.speculative_won,
+                a.speculative_launched,
+            );
+            assert_eq!(an.recall, 1.0, "{}: planted shifts must be found", a.name);
         }
         if let Some(cmp) = &a.comparison {
             println!(

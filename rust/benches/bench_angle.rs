@@ -1,0 +1,135 @@
+//! Angle pipeline gate (DESIGN.md §13): run both staged-Angle presets
+//! — the paper's four-sensor-site WAN deployment and Table 3's
+//! 300,000-file scale under the full fault plan — twice each for the
+//! determinism contract, then gate the acceptance properties:
+//!
+//!   * recall 1.0 on the planted §7.1 scan/exfil regime shifts, in the
+//!     fault-free preset AND under the crash/straggler plan;
+//!   * the staged mining cost within the documented band of the
+//!     retained Table 3 oracle at the 300k-file point;
+//!   * the fault plan costs makespan (faulted vs fault-free clone) and
+//!     the 4x straggler's window is rescued by speculation.
+//!
+//!     cargo bench --bench bench_angle
+//!
+//! Emits BENCH_angle.json at the repo root: an FNV determinism hash of
+//! each serialized report, recalls, makespans, per-tier model bytes
+//! and speculation counters (wall clock printed to stdout only).
+
+use sector_sphere::bench::{time_fn, BenchJson};
+use sector_sphere::routing::hash_name;
+use sector_sphere::scenario::{run_scenario, ScenarioReport, ScenarioSpec};
+
+fn run_preset(name: &str, spec: &ScenarioSpec, json: &mut BenchJson) -> (ScenarioReport, u64) {
+    let a = run_scenario(spec).unwrap_or_else(|e| panic!("{name}: {e}"));
+    let b = run_scenario(spec).unwrap_or_else(|e| panic!("{name} rerun: {e}"));
+    assert_eq!(
+        format!("{a:?}"),
+        format!("{b:?}"),
+        "{name}: serialized reports must be byte-identical"
+    );
+    let hash = hash_name(&format!("{a:?}"));
+    let t = time_fn(name, 1, 3, || run_scenario(spec).unwrap());
+    let an = a.angle.clone().expect("angle preset reports the mining side");
+    println!(
+        "{name}: {} windows / {} files in {:.1} simulated s ({:.0} ms wall), \
+         recall {:.2}, spec {}/{}",
+        an.windows,
+        an.files,
+        a.makespan_secs,
+        t.secs.mean * 1e3,
+        an.recall,
+        a.speculative_won,
+        a.speculative_launched,
+    );
+    println!(
+        "  emergent found {:?} vs planted {:?}; features {:.3} GB; models \
+         nic {:.1} / rack {:.1} / wan {:.1} KB; staged {:.0} s vs oracle {:.0} s",
+        an.emergent_found,
+        an.emergent_planted,
+        an.feature_gbytes,
+        an.model_tier.nic / 1e3,
+        an.model_tier.rack / 1e3,
+        an.model_tier.wan / 1e3,
+        an.staged_work_secs,
+        an.oracle_secs,
+    );
+    assert_eq!(
+        an.recall, 1.0,
+        "{name}: every planted regime shift must be detected (found {:?})",
+        an.emergent_found
+    );
+    assert!(a.makespan_secs > 0.0, "{name}: empty makespan");
+    json.num(&format!("{name}_makespan_secs"), a.makespan_secs)
+        .num(&format!("{name}_recall"), an.recall)
+        .num(&format!("{name}_staged_work_secs"), an.staged_work_secs)
+        .num(&format!("{name}_oracle_secs"), an.oracle_secs)
+        .num(&format!("{name}_feature_gbytes"), an.feature_gbytes)
+        .num(&format!("{name}_model_wan_kbytes"), an.model_tier.wan / 1e3)
+        .int(&format!("{name}_events"), a.events)
+        .int(&format!("{name}_segments"), a.segments as u64)
+        .int(&format!("{name}_spec_launched"), a.speculative_launched)
+        .int(&format!("{name}_spec_won"), a.speculative_won);
+    (a, hash)
+}
+
+fn main() {
+    let mut json = BenchJson::new("angle");
+    json.text("bench", "angle");
+
+    let (wan4, h_wan4) = run_preset("angle_wan4", &ScenarioSpec::angle_wan4(), &mut json);
+    assert_eq!(wan4.faults_injected, 0, "the wan4 preset is fault-free");
+
+    let (s128, h_s128) =
+        run_preset("angle_scale128", &ScenarioSpec::angle_scale128(), &mut json);
+    assert_eq!(s128.nodes_crashed, 1, "the scale128 crash fired");
+    assert!(
+        s128.speculative_launched > 0 && s128.speculative_won > 0,
+        "the 4x straggler hosts a window: its cluster task must be rescued \
+         by a winning backup ({} launched, {} won)",
+        s128.speculative_launched,
+        s128.speculative_won
+    );
+
+    // Calibration gate at Table 3's 300k-file point: the staged model's
+    // serialized mining work stays within the documented band of the
+    // oracle (DESIGN.md §13 — per-file term identical, per-record term
+    // scaled by observed k-means iterations, so the ratio sits in
+    // [0.75, 1.25] where the file term dominates).
+    let an = s128.angle.as_ref().unwrap();
+    let ratio = an.staged_work_secs / an.oracle_secs;
+    println!("calibration at 300k files: staged/oracle = {ratio:.3}");
+    assert!(
+        (0.75..=1.25).contains(&ratio),
+        "staged/oracle = {ratio:.3} left the documented [0.75, 1.25] band"
+    );
+    json.num("calibration_ratio_300k", ratio);
+
+    // Makespan gate: the fault plan must cost time against a fault-free
+    // clone of the same workload (crash re-homing + the straggler's
+    // window, even speculated, are not free).
+    let mut clean = ScenarioSpec::angle_scale128();
+    clean.name = "angle-scale128-clean".into();
+    clean.faults.clear();
+    let clean_run = run_scenario(&clean).expect("fault-free clone runs");
+    println!(
+        "fault plan cost: {:.1} s faulted vs {:.1} s clean",
+        s128.makespan_secs, clean_run.makespan_secs
+    );
+    assert!(
+        s128.makespan_secs > clean_run.makespan_secs,
+        "faults must cost makespan: {:.1} vs {:.1}",
+        s128.makespan_secs,
+        clean_run.makespan_secs
+    );
+    json.num("angle_scale128_clean_makespan_secs", clean_run.makespan_secs);
+
+    json.text(
+        "determinism_hash",
+        &format!("{h_wan4:016x}-{h_s128:016x}"),
+    );
+    match json.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("BENCH_angle.json not written: {e}"),
+    }
+}

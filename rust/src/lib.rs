@@ -2,38 +2,63 @@
 //!
 //! A full reproduction of *"Data Mining Using High Performance Data
 //! Clouds: Experimental Studies Using Sector and Sphere"* (Grossman &
-//! Gu, KDD 2008) as a three-layer Rust + JAX + Pallas stack:
+//! Gu, KDD 2008) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! ## Architecture map
+//!
+//! Production stack (the system under study):
 //!
 //! * [`sector`] — the storage cloud: distributed, replicated, indexed
 //!   files located through a peer-to-peer routing layer, with ACL-gated
 //!   writes (paper §4).
 //! * [`sphere`] — the compute cloud: Sphere Processing Elements apply
 //!   user-defined functions to stream segments with locality-aware
-//!   scheduling and shuffled output streams (paper §3).
+//!   scheduling ([`sphere::scheduler`], rules 2–3), shuffled output
+//!   streams, crash re-queue and speculative re-execution (paper §3).
 //! * [`transport`] / [`routing`] — the networking layer: UDT rate-based
 //!   transport, the Group Messaging Protocol, connection caching, and
 //!   Chord routing (paper §5).
+//! * [`service`] — the service layer: client sessions walking the §4
+//!   access flow and a multi-tenant traffic engine serving up to
+//!   millions of simulated clients with admission control and SLO
+//!   reporting (DESIGN.md §10).
+//! * [`cluster`] — the in-process "real mode" cluster used by the
+//!   examples: real files, real threads, emulated network.
+//!
+//! Workloads and baselines (what the paper measures):
+//!
+//! * [`mining`] — the evaluation workloads on real bytes: Terasort
+//!   ([`mining::terasort`]), Terasplit ([`mining::terasplit`]), and
+//!   the Angle application (paper §6–7) — synthetic sensor traces
+//!   ([`mining::pcap`]), feature extraction ([`mining::features`]),
+//!   windowed k-means ([`mining::kmeans`]) and emergent-cluster
+//!   detection/scoring ([`mining::emergent`]), tied together by
+//!   [`mining::angle`].
 //! * [`hadoop`] — the comparison baseline: an HDFS-like block store, a
 //!   MapReduce engine with Hadoop 0.16's cost structure (paper §6),
 //!   and an event-driven baseline engine that runs on the same
 //!   scenario substrate as Sphere for the `[compare]` head-to-head
 //!   (DESIGN.md §12).
-//! * [`mining`] — the evaluation workloads: Terasort, Terasplit, and
-//!   the Angle anomaly-detection application (paper §6–7).
-//! * [`sim`] — the discrete-event testbed simulator standing in for the
-//!   paper's 6-node WAN and 8-node rack (substitutions: DESIGN.md §2).
+//!
+//! Experiment substrate (how paper-scale runs are produced):
+//!
+//! * [`sim`] — the discrete-event substrate: max-min fair flow network
+//!   ([`sim::netsim`]), virtual clock ([`sim::event`]), disk and CPU
+//!   models — standing in for the paper's physical testbeds
+//!   (substitutions: DESIGN.md §2).
+//! * [`topology`] — parameterized testbeds: sites × racks × nodes with
+//!   three link tiers, paper presets included.
+//! * [`scenario`] — the scenario engine (DESIGN.md §4): TOML-described
+//!   runs composing a topology, a workload and a fault plan into one
+//!   deterministic experiment.  Sub-drivers: [`scenario::colocate`]
+//!   (compute + serving on one substrate, DESIGN.md §11),
+//!   [`scenario::compare`] (Sphere vs Hadoop head-to-head, §12) and
+//!   [`scenario::angle`] (the five-stage Angle pipeline — ingest,
+//!   extract, aggregate, cluster, score — fault-visible end to end,
+//!   §13).
 //! * [`runtime`] — the PJRT bridge that loads the AOT-compiled JAX/
 //!   Pallas artifacts (`artifacts/*.hlo.txt`) and executes them on the
-//!   request path without Python.
-//! * [`cluster`] — the in-process "real mode" cluster used by the
-//!   examples: real files, real threads, emulated network.
-//! * [`scenario`] — the scenario engine: TOML-described runs composing
-//!   a generated topology ([`topology`]), a workload and a fault plan
-//!   into one deterministic paper-scale experiment (DESIGN.md §4).
-//! * [`service`] — the service layer: client sessions walking the §4
-//!   access flow and a multi-tenant traffic engine serving up to
-//!   millions of simulated clients with admission control and SLO
-//!   reporting (DESIGN.md §10).
+//!   request path without Python (DESIGN.md §8).
 //!
 //! The remaining modules are offline-environment substrates built from
 //! scratch: [`cli`], [`config`], [`bench`], [`testkit`], [`metrics`],
@@ -41,7 +66,8 @@
 //!
 //! See `examples/` for runnable end-to-end drivers and `rust/benches/`
 //! for the reproduction of every table and figure in the paper
-//! (experiment index: DESIGN.md §5).
+//! (experiment index: DESIGN.md §5; README "Reproducing the paper"
+//! for the preset/CLI/bench matrix).
 
 pub mod bench;
 pub mod cli;

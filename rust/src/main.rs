@@ -15,7 +15,7 @@ use sector_sphere::util::bytes::{fmt_duration_secs, parse_bytes};
 
 const SUBCOMMANDS: &[(&str, &str)] = &[
     ("sort", "run real Terasort+Terasplit on an in-process cluster"),
-    ("angle", "run the Angle anomaly-detection pipeline"),
+    ("angle", "run the Angle pipeline (in-process; --preset/--file: staged scenario)"),
     ("sim", "simulate a paper-scale Table 1/2 row (WAN or LAN)"),
     ("scenario", "run a TOML-described scenario (topology+workload+faults)"),
     ("traffic", "serve multi-tenant client traffic (SLO report)"),
@@ -32,7 +32,7 @@ fn flag_spec() -> Vec<FlagSpec> {
         FlagSpec { name: "windows", help: "angle time windows", takes_value: true },
         FlagSpec { name: "seed", help: "deterministic seed", takes_value: true },
         FlagSpec { name: "file", help: "scenario TOML (see config/scenarios/)", takes_value: true },
-        FlagSpec { name: "preset", help: "scenario preset: paper_wan6|paper_lan8|scale128|traffic_scale128|colocate_scale128|compare_wan4|compare_scale128", takes_value: true },
+        FlagSpec { name: "preset", help: "scenario preset: paper_wan6|paper_lan8|scale128|traffic_scale128|colocate_scale128|compare_wan4|compare_scale128|angle_wan4|angle_scale128", takes_value: true },
         FlagSpec { name: "requests", help: "traffic: total requests to drive", takes_value: true },
         FlagSpec { name: "clients", help: "traffic: simulated client population", takes_value: true },
         FlagSpec { name: "rps", help: "traffic: open-loop arrival rate", takes_value: true },
@@ -106,6 +106,49 @@ fn cmd_sort(args: &Args) -> Result<(), String> {
 }
 
 fn cmd_angle(args: &Args) -> Result<(), String> {
+    // With a scenario file or preset, run the staged five-stage Angle
+    // pipeline on the scenario substrate (DESIGN.md §13)...
+    if args.get("file").is_some() || args.get("preset").is_some() {
+        use sector_sphere::scenario::run_scenario;
+        let mut spec = load_scenario_spec(args, "angle_wan4")?;
+        // The user asked for Angle: a terasort/compare TOML slipping
+        // through here would silently run the wrong pipeline.
+        match spec.workload.as_ref().map(|w| w.kind.name()) {
+            Some("angle") => {}
+            other => {
+                return Err(format!(
+                    "angle: the selected scenario runs {:?}, not the Angle \
+                     pipeline (use the `scenario` subcommand for it)",
+                    other.unwrap_or("no workload")
+                ))
+            }
+        }
+        if spec.traffic.is_some() {
+            // angle + [traffic] is the legacy colocated model, not the
+            // staged pipeline — run it via `scenario`, not `angle`.
+            return Err(
+                "angle: the selected scenario colocates with [traffic] and \
+                 would run the legacy extract+clustering-tail model (use the \
+                 `scenario` subcommand for it)"
+                    .into(),
+            );
+        }
+        if let Some(v) = args.get("windows") {
+            let windows: usize = v
+                .parse()
+                .map_err(|_| format!("--windows expects an integer, got {v:?}"))?;
+            spec.angle.get_or_insert_with(Default::default).windows = windows;
+        }
+        if let Some(seed) = args.get("seed") {
+            spec.cfg.seed = seed
+                .parse()
+                .map_err(|_| format!("--seed expects an integer, got {seed:?}"))?;
+        }
+        let r = run_scenario(&spec)?;
+        print_scenario_report(&r);
+        return Ok(());
+    }
+    // ...otherwise the in-process real-mode pipeline on actual bytes.
     let cluster = build_cluster(args)?;
     let scenario = AngleScenario {
         windows: args.u64_or("windows", 8)?,
@@ -170,10 +213,12 @@ fn load_scenario_spec(
             "colocate_scale128" => Ok(ScenarioSpec::colocate_scale128()),
             "compare_wan4" => Ok(ScenarioSpec::compare_wan4()),
             "compare_scale128" => Ok(ScenarioSpec::compare_scale128()),
+            "angle_wan4" => Ok(ScenarioSpec::angle_wan4()),
+            "angle_scale128" => Ok(ScenarioSpec::angle_scale128()),
             other => Err(format!(
                 "unknown preset {other:?} \
                  (paper_wan6|paper_lan8|scale128|traffic_scale128|colocate_scale128|\
-                 compare_wan4|compare_scale128) — or pass --file"
+                 compare_wan4|compare_scale128|angle_wan4|angle_scale128) — or pass --file"
             )),
         },
     }
@@ -277,6 +322,44 @@ fn print_scenario_report(r: &sector_sphere::scenario::ScenarioReport) {
             "  speedup        {:.2}x (Hadoop / Sphere makespan; paper §7: 2.4-2.6x WAN sort)",
             cmp.speedup
         );
+    }
+    if let Some(an) = &r.angle {
+        println!(
+            "  angle          {} temporal windows over {} Sector files",
+            an.windows, an.files
+        );
+        let rounded: Vec<f64> = an
+            .deltas
+            .iter()
+            .map(|d| (d * 100.0).round() / 100.0)
+            .collect();
+        println!("  delta_j        {rounded:?}");
+        println!(
+            "  emergent       found {:?} vs planted {:?} -> recall {:.2}",
+            an.emergent_found, an.emergent_planted, an.recall
+        );
+        println!(
+            "  features       {:.3} GB shuffled into windows; models {:.1} KB \
+             (nic {:.1} / rack {:.1} / wan {:.1})",
+            an.feature_gbytes,
+            an.model_tier.total() / 1e3,
+            an.model_tier.nic / 1e3,
+            an.model_tier.rack / 1e3,
+            an.model_tier.wan / 1e3
+        );
+        println!(
+            "  calibration    staged mining work {:.0} s vs Table 3 oracle {:.0} s \
+             ({:.2}x)",
+            an.staged_work_secs,
+            an.oracle_secs,
+            an.staged_work_secs / an.oracle_secs.max(1e-9)
+        );
+        if r.speculative_launched > 0 {
+            println!(
+                "  speculation    {} cluster backups launched, {} won",
+                r.speculative_launched, r.speculative_won
+            );
+        }
     }
     println!(
         "  faults         {} injected, {} nodes crashed, {} reassignments",

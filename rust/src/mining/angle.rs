@@ -5,7 +5,10 @@
 //!
 //! `run_pipeline` is the real end-to-end path (examples/angle_pipeline
 //! drives it, optionally through PJRT); `simulate_angle_clustering`
-//! carries the cost model to Table 3's 300,000-file scale.
+//! carries the cost model to Table 3's 300,000-file scale and serves
+//! as the calibration oracle for the staged scenario pipeline
+//! (`crate::scenario::angle`, DESIGN.md §13), which runs the same
+//! mining machinery fault-visibly on the scenario substrate.
 
 use crate::mining::emergent::{
     analyze_windows, emergent_clusters, emergent_windows, score_batch, EmergentCluster,
@@ -143,15 +146,27 @@ pub fn run_pipeline(
     })
 }
 
+/// Per-file cost of the Table 3 model: Sector lookup + GMP handshake +
+/// UDT open + feature-file read.  Shared with the staged scenario
+/// pipeline (`scenario::angle`), which pays it in the window-aggregate
+/// stage, so the two models stay calibrated to the same constant.
+pub const PER_FILE_SECS: f64 = 1.45;
+/// Per-record cost of the Table 3 model: aggregation + the cluster
+/// iterations of a fully-spent k-means budget.
+pub const PER_RECORD_SECS: f64 = 0.55e-3;
+
 /// Table 3 cost model: clustering time vs (records, Sector files).
 /// Dominated by per-file costs (lookup, connection, open, feature-file
 /// fetch) plus a per-record scan/cluster cost — fitted to the table's
 /// four cells (DESIGN.md §3):
 ///   500 rec / 1 file = 1.9 s; 1e3 / 3 = 4.2 s;
 ///   1e6 / 2850 = 85 min; 1e8 / 300000 = 178 h.
+///
+/// Retained as the *calibration oracle* for the staged substrate
+/// pipeline (DESIGN.md §13): `scenario::angle` reports its serialized
+/// mining work next to this formula at the same (records, files)
+/// point, and a regression test pins the ratio.
 pub fn simulate_angle_clustering(n_records: f64, n_files: f64) -> f64 {
-    const PER_FILE_SECS: f64 = 1.45; // lookup + GMP + UDT open + read
-    const PER_RECORD_SECS: f64 = 0.55e-3; // aggregate + cluster iterations
     n_files * PER_FILE_SECS + n_records * PER_RECORD_SECS
 }
 

@@ -3,6 +3,25 @@
 //! machinery they share.  All are real implementations — the Sphere
 //! operators run on actual bytes — with simulation cost models carrying
 //! them to paper scale.
+//!
+//! The Angle chain (paper §7.1) reads left to right:
+//!
+//! * [`pcap`] generates each sensor site's anonymized packet windows
+//!   with plantable regime shifts (scan, exfiltration);
+//! * [`features`] aggregates packets into per-source 16-D feature
+//!   vectors (the [`features::AngleFeatureOp`] Sphere operator);
+//! * [`kmeans`] clusters each temporal window (host oracle, optionally
+//!   the PJRT Pallas kernel);
+//! * [`emergent`] computes the delta_j series, flags emergent windows
+//!   and scores feature vectors against the new clusters;
+//! * [`angle`] ties them into the end-to-end pipeline
+//!   ([`angle::run_pipeline`] on the in-process cloud) and retains the
+//!   Table 3 cost oracle ([`angle::simulate_angle_clustering`]).
+//!
+//! The same machinery drives the *staged* Angle scenario workload
+//! ([`crate::scenario::angle`], DESIGN.md §13), where the five
+//! pipeline stages run event-driven on the fault-injected scenario
+//! substrate.
 
 pub mod angle;
 pub mod emergent;

@@ -8,6 +8,11 @@
 //! stable flow statistics, plus *injected regime shifts* (port-scan and
 //! exfiltration behaviours switching on at known times) so the
 //! emergent-cluster detector has planted ground truth to find.
+//!
+//! Consumed by both Angle drivers: the in-process pipeline
+//! (`crate::mining::angle::run_pipeline`) and the staged scenario
+//! workload (`crate::scenario::angle`, DESIGN.md §13), whose recall
+//! gate measures detection against the planted shifts.
 
 use crate::util::rng::Pcg64;
 

@@ -1,0 +1,1332 @@
+//! The Angle pipeline as a first-class scenario workload (DESIGN.md
+//! §13).
+//!
+//! The paper's headline application (§7) is a four-stage wide-area
+//! pipeline: sensors at each site stream anonymized pcap windows into
+//! Sector, Sphere extracts per-source feature vectors, feature files
+//! are aggregated into temporal windows and clustered, and the
+//! emergent-cluster models are pushed back out to the sensor sites to
+//! score live traffic.  Earlier revisions ran only the extraction
+//! stage on the substrate and priced the entire mining half with the
+//! Table 3 scalar (`mining::angle::simulate_angle_clustering`) — so a
+//! crash, WAN brown-out or straggler could never touch clustering.
+//!
+//! This driver runs all five stages event-driven on the shared
+//! substrate (one `FaultState`, per-stage `NetSim` links built once,
+//! one `EventQueue`):
+//!
+//! 1. **sensor ingest** — each node's pcap share streams from its
+//!    site's sensor head through the network and the node's disk-write
+//!    link (per-node disk links, like the colocation engine's);
+//! 2. **angle extract** — `StageKind::AngleExtract` segments placed by
+//!    the real `sphere::Scheduler` (locality rules, crash re-queue);
+//! 3. **window aggregate** — every node's feature slice shuffles to a
+//!    deterministic window-home node over real `NetSim` flows (bytes
+//!    accounted per link tier in `TierBytes`), then the home pays the
+//!    per-file open/fetch cost of its window's Sector files;
+//! 4. **window cluster** — one k-means task per temporal window,
+//!    placed via a fresh `Scheduler` on the window's home/replica, with
+//!    crash re-queue AND speculative backup attempts for straggling
+//!    windows (first finisher wins, `Scheduler::complete` semantics);
+//! 5. **model score** — the fitted cluster models replicate cross-site
+//!    (write-local, one copy per other sensor site — the storage
+//!    cloud's site-diverse placement) and each site representative
+//!    scores its share, with model bytes reported per link tier.
+//!
+//! The *content* of the mining — delta_j series, emergent windows,
+//! recall against the planted §7.1 regime shifts — is computed by the
+//! real machinery (`TraceGen` → `extract_features` → windowed
+//! `kmeans::fit` → `emergent_windows`) at the spec's model scale.
+//! Faults perturb timing and placement, never the mined content: data
+//! survives on replicas, and a run that actually loses a replica chain
+//! errors out rather than reporting a normal makespan.  The staged
+//! cost model is calibrated against the retained Table 3 oracle
+//! (`staged_work_secs` vs `oracle_secs`; DESIGN.md §13).
+
+use std::collections::{BTreeMap, HashSet};
+
+use crate::config::SimConfig;
+use crate::mining::angle::{simulate_angle_clustering, PER_FILE_SECS, PER_RECORD_SECS};
+use crate::mining::emergent::{analyze_windows, emergent_windows};
+use crate::mining::features::{
+    extract_features, normalize, FeatureVector, FEATURE_DIM, FEATURE_RECORD_BYTES,
+};
+use crate::mining::pcap::{Regime, TraceGen, PACKET_BYTES};
+use crate::sim::event::EventQueue;
+use crate::sim::netsim::{FlowId, LinkId, NetSim};
+use crate::sphere::scheduler::Scheduler;
+use crate::sphere::segment::Segment;
+use crate::topology::{NetLinks, Testbed};
+use crate::transport::TransportModels;
+
+use super::engine::{
+    build_stage_segments, coordination_secs, handle_degrade_end, handle_degrade_start,
+    live_owner as walk_live_owner, replica_of, shuffle_rate_cap, Aggregate, BatchOutcome,
+    FaultState, StageKind, TierBytes,
+};
+use super::{AngleSpec, FaultSpec, ScenarioSpec};
+
+/// k-means iteration budget `analyze_windows` runs with; the oracle's
+/// per-record constant prices a fully-spent budget, so the staged
+/// cluster cost scales with the *observed* iteration count against it.
+const NOMINAL_ITERS: f64 = 30.0;
+
+/// A cluster attempt speculates once its nominal service time is
+/// exceeded by this factor (a slow node shows up as elapsed > nominal).
+const SPEC_THRESHOLD: f64 = 2.0;
+
+/// What the Angle scenario adds to `ScenarioReport` (DESIGN.md §13).
+#[derive(Clone, Debug, PartialEq)]
+pub struct AngleReport {
+    /// Temporal windows clustered.
+    pub windows: usize,
+    /// Sector files the run accounts (Table 3's x-axis).
+    pub files: usize,
+    /// delta_j series from the real windowed k-means (len = windows-1).
+    pub deltas: Vec<f64>,
+    /// Windows the detector flagged as emergent.
+    pub emergent_found: Vec<usize>,
+    /// Windows where regime shifts were planted (ground truth).
+    pub emergent_planted: Vec<usize>,
+    /// Fraction of planted windows flagged (1.0 = every shift found).
+    pub recall: f64,
+    /// Feature bytes shuffled into temporal windows (stage 3).
+    pub feature_gbytes: f64,
+    /// Cluster-model distribution bytes, by link tier crossed (stage 5).
+    pub model_tier: TierBytes,
+    /// Serialized staged mining work (per-file opens + cluster
+    /// iterations) — the quantity calibrated against the oracle.
+    pub staged_work_secs: f64,
+    /// `simulate_angle_clustering` at the same (records, files) point.
+    pub oracle_secs: f64,
+}
+
+// ------------------------------------------------------------ mining
+
+/// The real mining result at model scale: deterministic in (spec,
+/// seed), independent of the fault plan (replicas preserve content).
+struct Mined {
+    deltas: Vec<f64>,
+    found: Vec<usize>,
+    planted: Vec<usize>,
+    recall: f64,
+    /// Lloyd's iterations each window's fit actually spent.
+    iterations: Vec<usize>,
+}
+
+/// Generate every sensor site's windows, extract features, cluster
+/// each temporal window and flag emergent ones — the same machinery
+/// `mining::angle::run_pipeline` drives, minus the in-process cloud.
+fn mine(a: &AngleSpec, sensors: usize, seed: u64) -> Result<Mined, String> {
+    let mut windows: Vec<Vec<FeatureVector>> = vec![Vec::new(); a.windows];
+    for sensor in 0..sensors {
+        let mut gen = TraceGen::new(sensor as u32, a.sources_per_sensor, seed);
+        for (w, slot) in windows.iter_mut().enumerate() {
+            let anomalous: Vec<(usize, Regime)> = a
+                .anomalies
+                .iter()
+                .filter(|an| an.window == w)
+                .map(|an| (an.source, an.regime))
+                .collect();
+            let pkts = gen.window(w as u64, a.packets_per_source, &anomalous);
+            let mut feats = extract_features(&pkts, w as u64);
+            normalize(&mut feats);
+            slot.extend(feats);
+        }
+    }
+    for w in windows.iter_mut() {
+        // Cross-sensor deterministic order (each sensor's slice arrives
+        // pre-sorted; the pooled window must be too).
+        w.sort_by_key(|f| f.src);
+    }
+    let analysis = analyze_windows(&windows, a.k, seed, None)?;
+    let found = emergent_windows(&analysis.deltas, a.warmup, a.z_thresh);
+    let mut planted: Vec<usize> = a.anomalies.iter().map(|an| an.window).collect();
+    planted.sort_unstable();
+    planted.dedup();
+    let hit = planted.iter().filter(|w| found.contains(w)).count();
+    let recall = if planted.is_empty() {
+        1.0
+    } else {
+        hit as f64 / planted.len() as f64
+    };
+    Ok(Mined {
+        deltas: analysis.deltas,
+        found,
+        planted,
+        recall,
+        iterations: analysis.models.iter().map(|m| m.iterations).collect(),
+    })
+}
+
+// ------------------------------------------------------------ driver
+
+/// Run the staged Angle pipeline.  Called from `engine::run_batch` for
+/// `WorkloadKind::Angle`; deterministic — the spec is the only input.
+pub(crate) fn run_angle(spec: &ScenarioSpec, testbed: &Testbed) -> Result<BatchOutcome, String> {
+    let workload = spec
+        .workload
+        .as_ref()
+        .ok_or("angle run requires a [workload] block")?;
+    let default_a = AngleSpec::default();
+    let a = spec.angle.as_ref().unwrap_or(&default_a);
+    let sensors = testbed.site_names.len().max(1);
+    a.validate(sensors)?;
+    let mined = mine(a, sensors, spec.cfg.seed)?;
+
+    let n = testbed.nodes();
+    let mut state = FaultState::new(&spec.faults, n);
+    let mut run = AngleRun::new(testbed, &spec.cfg, a, workload.bytes_per_node, &mined, &mut state)?;
+    run.execute()?;
+
+    let files = run.files;
+    let records = workload.bytes_per_node * n as f64 / PACKET_BYTES as f64;
+    let report = AngleReport {
+        windows: a.windows,
+        files,
+        deltas: mined.deltas,
+        emergent_found: mined.found,
+        emergent_planted: mined.planted,
+        recall: mined.recall,
+        feature_gbytes: run.feature_total / 1e9,
+        model_tier: run.model_tier,
+        staged_work_secs: run.staged_work,
+        oracle_secs: simulate_angle_clustering(records, files as f64),
+    };
+    let makespan = run.makespan;
+    let agg = std::mem::take(&mut run.agg);
+    drop(run);
+    Ok(BatchOutcome {
+        makespan,
+        agg,
+        state,
+        angle: Some(report),
+    })
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Stage {
+    Ingest,
+    Extract,
+    Aggregate,
+    Cluster,
+    Score,
+    Done,
+}
+
+enum AEv {
+    /// An extract or cluster attempt finished its service time.
+    Seg { gen: u64 },
+    /// Re-check a cluster attempt for speculation.
+    SpecCheck { gen: u64 },
+    /// A window home finished its per-file open/fetch work.
+    Open { window: usize, gen: u64 },
+    /// A site representative finished scoring its share.
+    Scored { site: usize, gen: u64 },
+    Crash { fault: usize },
+    DegradeStart { fault: usize },
+    DegradeEnd { fault: usize },
+}
+
+enum AFlow {
+    /// Sensor stream toward `dst`'s spindle.
+    Ingest { dst: usize },
+    /// A node's feature slice for one temporal window.
+    Feature { src: usize, window: usize },
+    /// A window's cluster model toward a site representative.
+    Model { src: usize, site: usize },
+}
+
+/// One running attempt (extract segment or cluster window task).
+struct Attempt {
+    node: usize,
+    seg: Segment,
+    speculative: bool,
+}
+
+struct AngleRun<'a> {
+    testbed: &'a Testbed,
+    cfg: &'a SimConfig,
+    a: &'a AngleSpec,
+    state: &'a mut FaultState,
+    bytes_per_node: f64,
+    models: TransportModels,
+    net: NetSim,
+    links: NetLinks,
+    disk_read: Vec<LinkId>,
+    disk_write: Vec<LinkId>,
+    nominal_caps: Vec<f64>,
+    q: EventQueue<AEv>,
+    flows: BTreeMap<FlowId, AFlow>,
+    stage: Stage,
+    coord_secs: f64,
+    // scheduler-driven stages (extract, cluster)
+    sched: Scheduler,
+    inflight: BTreeMap<u64, Attempt>,
+    by_seg: BTreeMap<usize, Vec<u64>>,
+    speculated: HashSet<usize>,
+    next_gen: u64,
+    running: Vec<usize>,
+    // ingest
+    ingest_pending: usize,
+    // windows
+    files: usize,
+    win_home: Vec<usize>,
+    win_inbound: Vec<usize>,
+    win_files: Vec<usize>,
+    win_bytes: Vec<f64>,
+    win_secs: Vec<f64>,
+    win_opened: Vec<bool>,
+    open_gen: Vec<Option<u64>>,
+    /// Current replica set of each window's feature file (home +
+    /// rack-diverse replica, shrinking as nodes crash).
+    win_locs: Vec<Vec<u32>>,
+    /// Node whose attempt won each window's cluster task.
+    win_node: Vec<usize>,
+    // score
+    site_rep: Vec<Option<usize>>,
+    score_inbound: Vec<usize>,
+    score_gen: Vec<Option<u64>>,
+    scored: Vec<bool>,
+    score_pending: usize,
+    /// Per-site scoring share, fixed when the score stage opens.
+    score_share: f64,
+    // outputs
+    feature_total: f64,
+    model_tier: TierBytes,
+    staged_work: f64,
+    agg: Aggregate,
+    makespan: f64,
+}
+
+impl<'a> AngleRun<'a> {
+    fn new(
+        testbed: &'a Testbed,
+        cfg: &'a SimConfig,
+        a: &'a AngleSpec,
+        bytes_per_node: f64,
+        mined: &Mined,
+        state: &'a mut FaultState,
+    ) -> Result<AngleRun<'a>, String> {
+        let n = testbed.nodes();
+        let w = a.windows;
+        let n_links = 4 * n + 2 * testbed.racks() + 2 * testbed.site_names.len();
+        let mut net = NetSim::with_capacity(n_links);
+        let links = testbed.build_network(&mut net);
+        // Per-node disk links, straggler factors baked into capacity
+        // (static for the whole run) — the colocation engine's model.
+        let read_eff = cfg.hardware.disk_read_bps * cfg.sphere.io_efficiency;
+        let write_eff = cfg.hardware.disk_write_bps * cfg.sphere.io_efficiency;
+        let disk_read: Vec<LinkId> = (0..n)
+            .map(|i| net.add_link((read_eff * state.factor[i]).max(1.0)))
+            .collect();
+        let disk_write: Vec<LinkId> = (0..n)
+            .map(|i| net.add_link((write_eff * state.factor[i]).max(1.0)))
+            .collect();
+        let nominal_caps: Vec<f64> = (0..net.link_count())
+            .map(|i| net.link_capacity(LinkId(i)))
+            .collect();
+        let sites = testbed.site_names.len();
+        let sensors = sites.max(1);
+        let files = if a.files > 0 { a.files } else { sensors * w };
+        // Feature bytes: one FEATURE_RECORD per packets_per_source
+        // packets — the extraction's compression ratio.
+        let feature_total = bytes_per_node * n as f64 * FEATURE_RECORD_BYTES as f64
+            / (PACKET_BYTES as f64 * a.packets_per_source as f64);
+        let records = bytes_per_node * n as f64 / PACKET_BYTES as f64;
+        let win_files: Vec<usize> = (0..w)
+            .map(|i| files / w + usize::from(i < files % w))
+            .collect();
+        // Per-window cluster cost: the oracle's per-record constant,
+        // half fixed (aggregation/scan) and half scaled by the
+        // iterations the real fit spent against its 30-iteration
+        // budget — so converging early is cheaper, like the real code.
+        let win_secs: Vec<f64> = (0..w)
+            .map(|i| {
+                let iters = mined.iterations[i] as f64;
+                (records / w as f64)
+                    * PER_RECORD_SECS
+                    * (0.5 + 0.5 * (iters / NOMINAL_ITERS).min(1.0))
+            })
+            .collect();
+        let staged_work: f64 = win_files
+            .iter()
+            .map(|&f| f as f64 * PER_FILE_SECS)
+            .sum::<f64>()
+            + win_secs.iter().sum::<f64>();
+        Ok(AngleRun {
+            testbed,
+            cfg,
+            a,
+            state,
+            bytes_per_node,
+            models: TransportModels::default(),
+            net,
+            links,
+            disk_read,
+            disk_write,
+            nominal_caps,
+            q: EventQueue::with_capacity(2 * n + 4 * w + 16),
+            flows: BTreeMap::new(),
+            stage: Stage::Ingest,
+            coord_secs: coordination_secs(testbed),
+            sched: Scheduler::new(Vec::new(), cfg.sphere.locality_scheduling),
+            inflight: BTreeMap::new(),
+            by_seg: BTreeMap::new(),
+            speculated: HashSet::new(),
+            next_gen: 0,
+            running: vec![0; n],
+            ingest_pending: 0,
+            files,
+            win_home: vec![0; w],
+            win_inbound: vec![0; w],
+            win_files,
+            win_bytes: vec![feature_total / w as f64; w],
+            win_secs,
+            win_opened: vec![false; w],
+            open_gen: vec![None; w],
+            win_locs: vec![Vec::new(); w],
+            win_node: vec![0; w],
+            site_rep: vec![None; sites],
+            score_inbound: vec![0; sites],
+            score_gen: vec![None; sites],
+            scored: vec![false; sites],
+            score_pending: 0,
+            score_share: 0.0,
+            feature_total,
+            model_tier: TierBytes::default(),
+            staged_work,
+            agg: Aggregate::default(),
+            makespan: 0.0,
+        })
+    }
+
+    fn spes(&self) -> usize {
+        self.cfg.sphere.spes_per_node.max(1)
+    }
+
+    /// Schedule the full fault plan (the run owns the whole timeline,
+    /// unlike the per-stage batch engine).
+    fn schedule_faults(&mut self) {
+        for (i, f) in self.state.faults.clone().into_iter().enumerate() {
+            if self.state.consumed[i] {
+                continue;
+            }
+            match f {
+                FaultSpec::SlaveCrash { at_secs, .. } => {
+                    self.q.push_at(at_secs.max(0.0), AEv::Crash { fault: i });
+                }
+                FaultSpec::LinkDegrade {
+                    at_secs,
+                    duration_secs,
+                    ..
+                } => {
+                    self.q
+                        .push_at(at_secs.max(0.0), AEv::DegradeStart { fault: i });
+                    let end = at_secs + duration_secs;
+                    if end.is_finite() {
+                        self.q.push_at(end, AEv::DegradeEnd { fault: i });
+                    }
+                }
+                FaultSpec::Straggler { .. } => {}
+            }
+        }
+    }
+
+    /// Walk a node's replica chain to a live owner (the shared
+    /// `engine::live_owner`, bound to this run's fault state).
+    fn live_owner(&self, home: usize) -> Result<usize, String> {
+        walk_live_owner(self.testbed, self.state, home)
+    }
+
+    /// First live node of a site, if any.
+    fn site_head(&self, site: usize) -> Option<usize> {
+        (0..self.testbed.nodes())
+            .find(|&nd| self.testbed.node_site[nd] == site && !self.state.dead[nd])
+    }
+
+    /// Wire size of one window's fitted cluster model: k centers of
+    /// FEATURE_DIM f32s plus a header — used by both the initial
+    /// distribution and the crash-path re-replication.
+    fn model_bytes(&self) -> f64 {
+        (self.a.k * FEATURE_DIM * 4 + 64) as f64
+    }
+
+    fn transfer_cap(&self, path: &[LinkId], src: usize, dst: usize, src_factor: f64) -> f64 {
+        shuffle_rate_cap(
+            self.cfg,
+            &self.models,
+            &self.nominal_caps,
+            path,
+            self.testbed.nic_bps,
+            self.testbed.rtt_secs(src, dst),
+            src_factor,
+        )
+    }
+
+    // -------------------------------------------------- stage 1: ingest
+
+    /// Every node's pcap share streams from its site's sensor head
+    /// through the network into the node's disk-write link.
+    fn start_ingest(&mut self) -> Result<(), String> {
+        for home in 0..self.testbed.nodes() {
+            let owner = self.live_owner(home)?;
+            let head = self
+                .site_head(self.testbed.node_site[owner])
+                .expect("owner is alive, so its site has a live node");
+            self.start_ingest_flow(head, owner, self.bytes_per_node);
+            self.agg
+                .tier
+                .add(self.testbed, head, owner, self.bytes_per_node);
+        }
+        Ok(())
+    }
+
+    fn start_ingest_flow(&mut self, head: usize, dst: usize, bytes: f64) {
+        let mut path = if head == dst {
+            Vec::with_capacity(1)
+        } else {
+            self.testbed.path(&self.links, head, dst)
+        };
+        path.push(self.disk_write[dst]);
+        // The sensor stream is not disk-bound at the source; the
+        // destination spindle (straggler factor baked into its link)
+        // and the transport cap bound it.
+        let cap = self.transfer_cap(&path, head, dst, 1.0);
+        let fid = self.net.start_flow(&path, bytes.max(1.0), cap.max(1.0));
+        self.flows.insert(fid, AFlow::Ingest { dst });
+        self.ingest_pending += 1;
+    }
+
+    // -------------------------------------------------- stage 2: extract
+
+    fn start_extract(&mut self, now: f64) -> Result<(), String> {
+        let segments = build_stage_segments(
+            self.testbed,
+            self.cfg,
+            self.state,
+            self.bytes_per_node,
+            self.spes(),
+        )?;
+        self.sched = Scheduler::new(segments, self.cfg.sphere.locality_scheduling);
+        self.sched.max_attempts = self.cfg.sphere.max_attempts;
+        self.pump_extract(now);
+        Ok(())
+    }
+
+    fn pump_extract(&mut self, now: f64) {
+        let spes = self.spes();
+        for node in 0..self.testbed.nodes() {
+            if self.state.dead[node] {
+                continue;
+            }
+            while self.running[node] < spes {
+                let Some(seg) = self.sched.assign(node as u32) else {
+                    break;
+                };
+                let secs = StageKind::AngleExtract.service_secs(self.cfg, seg.bytes as f64)
+                    / self.state.factor[node]
+                    + self.coord_secs;
+                self.next_gen += 1;
+                self.inflight.insert(
+                    self.next_gen,
+                    Attempt {
+                        node,
+                        seg,
+                        speculative: false,
+                    },
+                );
+                self.running[node] += 1;
+                self.q.push_at(now + secs, AEv::Seg { gen: self.next_gen });
+            }
+        }
+    }
+
+    // ------------------------------------------------ stage 3: aggregate
+
+    /// Pick window homes among the live nodes (spread across racks) and
+    /// start every node's per-window feature flow.
+    fn start_aggregate(&mut self, now: f64) {
+        let alive = self.state.alive().to_vec();
+        let w_count = self.a.windows;
+        let spread = (alive.len() / w_count).max(1);
+        for w in 0..w_count {
+            let home = alive[(w * spread) % alive.len()];
+            self.win_home[w] = home;
+            let share = self.win_bytes[w] / alive.len() as f64;
+            for &src in &alive {
+                self.agg.tier.add(self.testbed, src, home, share);
+                if src == home {
+                    continue;
+                }
+                self.start_feature_flow(src, w, share);
+                self.agg.shuffle_bytes += share;
+            }
+            if self.win_inbound[w] == 0 {
+                self.schedule_open(w, now);
+            }
+        }
+    }
+
+    fn start_feature_flow(&mut self, src: usize, window: usize, bytes: f64) {
+        let home = self.win_home[window];
+        let mut path = Vec::with_capacity(8);
+        path.push(self.disk_read[src]);
+        path.extend(self.testbed.path(&self.links, src, home));
+        path.push(self.disk_write[home]);
+        let cap = self.transfer_cap(&path, src, home, self.state.factor[src]);
+        let fid = self.net.start_flow(&path, bytes.max(1.0), cap.max(1.0));
+        self.flows.insert(fid, AFlow::Feature { src, window });
+        self.win_inbound[window] += 1;
+    }
+
+    /// All of a window's feature slices landed: the home pays the
+    /// per-file lookup + connection + open + read cost of the window's
+    /// Sector files (Table 3's dominant term).  Deliberately NOT scaled
+    /// by the straggler factor: the per-file cost is RTT/connection
+    /// dominated, and no speculation exists for opens — a 4x-scaled
+    /// open on one slow home would stall the whole aggregate barrier
+    /// (DESIGN.md §13).
+    fn schedule_open(&mut self, window: usize, now: f64) {
+        let secs = self.win_files[window] as f64 * PER_FILE_SECS;
+        self.next_gen += 1;
+        self.open_gen[window] = Some(self.next_gen);
+        self.q.push_at(
+            now + secs,
+            AEv::Open {
+                window,
+                gen: self.next_gen,
+            },
+        );
+    }
+
+    // -------------------------------------------------- stage 4: cluster
+
+    fn start_cluster(&mut self, now: f64) -> Result<(), String> {
+        let mut segments = Vec::with_capacity(self.a.windows);
+        for w in 0..self.a.windows {
+            let home = self.win_home[w];
+            let replica = replica_of(self.testbed, home);
+            let mut locations: Vec<u32> = [home, replica]
+                .into_iter()
+                .filter(|&x| !self.state.dead[x])
+                .map(|x| x as u32)
+                .collect();
+            locations.dedup();
+            self.win_locs[w] = locations.clone();
+            segments.push(Segment {
+                id: w,
+                file: format!("angle/w{w:04}.feat"),
+                first_record: 0,
+                n_records: 1,
+                bytes: self.win_bytes[w].max(1.0) as u64,
+                locations,
+                whole_file: true,
+            });
+        }
+        self.sched = Scheduler::new(segments, self.cfg.sphere.locality_scheduling);
+        self.sched.max_attempts = self.cfg.sphere.max_attempts;
+        self.pump_cluster(now)
+    }
+
+    /// Cluster tasks run where their window's feature file lives
+    /// (`assign_filtered(_, true)` — the delay-scheduling knob), so a
+    /// 128-node cloud does not steal 16 window tasks onto random nodes.
+    fn pump_cluster(&mut self, now: f64) -> Result<(), String> {
+        let spes = self.spes();
+        for node in 0..self.testbed.nodes() {
+            if self.state.dead[node] {
+                continue;
+            }
+            while self.running[node] < spes {
+                let Some(seg) = self.sched.assign_filtered(node as u32, true) else {
+                    break;
+                };
+                self.dispatch_cluster(seg, node, false, now);
+            }
+        }
+        // A pending window whose whole replica set is dead can never be
+        // assigned under locality — that data is gone, and the run must
+        // say so (matching `build_stage_segments`).  Sorted so the
+        // reported window is deterministic when several die at once.
+        let mut pending: Vec<usize> = self.sched.pending_ids().into_iter().collect();
+        pending.sort_unstable();
+        for id in pending {
+            if self.win_locs[id].iter().all(|&l| self.state.dead[l as usize]) {
+                return Err(format!(
+                    "window {id}'s feature data lost: home and replica both crashed"
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    fn dispatch_cluster(&mut self, seg: Segment, node: usize, speculative: bool, now: f64) {
+        let id = seg.id;
+        let secs = self.win_secs[id] / self.state.factor[node] + self.coord_secs;
+        self.next_gen += 1;
+        let gen = self.next_gen;
+        self.by_seg.entry(id).or_default().push(gen);
+        self.inflight.insert(
+            gen,
+            Attempt {
+                node,
+                seg,
+                speculative,
+            },
+        );
+        self.running[node] += 1;
+        self.q.push_at(now + secs, AEv::Seg { gen });
+        if !speculative {
+            let nominal = self.win_secs[id] + self.coord_secs;
+            self.q
+                .push_at(now + SPEC_THRESHOLD * nominal, AEv::SpecCheck { gen });
+        }
+    }
+
+    /// The primary attempt outlived `SPEC_THRESHOLD` × its nominal
+    /// service time (it is on a straggler, or a degraded path): grant
+    /// one backup on another live holder of the window's feature file
+    /// and let the first finisher win.  A node WITHOUT the data is
+    /// never picked — running there would be free, unpriced I/O; if no
+    /// holder has a free SPE right now, re-check while the attempt is
+    /// still running.
+    fn spec_check(&mut self, gen: u64, now: f64) {
+        let Some(att) = self.inflight.get(&gen) else {
+            return; // completed or pre-empted: nothing to speculate on
+        };
+        let id = att.seg.id;
+        let primary = att.node;
+        if self.speculated.contains(&id)
+            || self.by_seg.get(&id).map_or(0, Vec::len) > 1
+            || !self.sched.speculatable(id)
+        {
+            return;
+        }
+        let spes = self.spes();
+        let backup = att
+            .seg
+            .locations
+            .iter()
+            .map(|&l| l as usize)
+            .find(|&l| l != primary && !self.state.dead[l] && self.running[l] < spes);
+        let Some(backup) = backup else {
+            let retry = 0.25 * (self.win_secs[id] + self.coord_secs);
+            self.q.push_at(now + retry, AEv::SpecCheck { gen });
+            return;
+        };
+        let seg = att.seg.clone();
+        if !self.sched.speculate(&seg, backup as u32) {
+            return;
+        }
+        self.speculated.insert(id);
+        self.dispatch_cluster(seg, backup, true, now);
+    }
+
+    /// An extract or cluster attempt finished its service time.
+    fn seg_done(&mut self, gen: u64, now: f64) -> Result<(), String> {
+        let Some(att) = self.inflight.remove(&gen) else {
+            return Ok(()); // pre-empted by a crash or a speculation win
+        };
+        self.running[att.node] -= 1;
+        let first = self.sched.complete(&att.seg);
+        if self.stage == Stage::Extract {
+            debug_assert!(first, "extract never speculates");
+            self.agg.segments += 1;
+            self.pump_extract(now);
+            return Ok(());
+        }
+        // Cluster: first finisher wins, siblings are cancelled.
+        let losers: Vec<u64> = self
+            .by_seg
+            .remove(&att.seg.id)
+            .map(|gens| gens.into_iter().filter(|&g| g != gen).collect())
+            .unwrap_or_default();
+        for g in losers {
+            if let Some(loser) = self.inflight.remove(&g) {
+                self.running[loser.node] -= 1;
+                self.sched.cancel_attempt(&loser.seg);
+            }
+        }
+        if first {
+            if att.speculative {
+                self.sched.record_speculative_win();
+            }
+            self.win_node[att.seg.id] = att.node;
+            self.agg.segments += 1;
+        } else {
+            self.sched.cancel_attempt(&att.seg);
+        }
+        self.pump_cluster(now)
+    }
+
+    // ---------------------------------------------------- stage 5: score
+
+    /// Replicate every window's fitted model to one representative per
+    /// sensor site (write-local at the winner, one copy per other site
+    /// — the storage cloud's site-diverse placement), then each site
+    /// scores its share of the feature stream.
+    fn start_score(&mut self, now: f64) -> Result<(), String> {
+        let model_bytes = self.model_bytes();
+        let sites = self.testbed.site_names.len();
+        for s in 0..sites {
+            self.site_rep[s] = self.site_head(s);
+            if self.site_rep[s].is_some() {
+                self.score_pending += 1;
+            } else {
+                self.scored[s] = true; // site fully offline: nothing to score
+            }
+        }
+        self.score_share = self.feature_total / self.score_pending.max(1) as f64;
+        for w in 0..self.a.windows {
+            // The cluster winner may have crashed since its attempt
+            // completed: the model ships from its surviving replica
+            // copy, and a fully-dead chain is data loss.
+            let src = self.live_owner(self.win_node[w])?;
+            for s in 0..sites {
+                let Some(rep) = self.site_rep[s] else { continue };
+                self.model_tier.add(self.testbed, src, rep, model_bytes);
+                self.agg.tier.add(self.testbed, src, rep, model_bytes);
+                if rep == src {
+                    continue;
+                }
+                self.start_model_flow(src, rep, s, model_bytes);
+            }
+        }
+        for s in 0..sites {
+            if self.site_rep[s].is_some() && self.score_inbound[s] == 0 && !self.scored[s] {
+                self.schedule_scored(s, now);
+            }
+        }
+        Ok(())
+    }
+
+    fn start_model_flow(&mut self, src: usize, rep: usize, site: usize, bytes: f64) {
+        let path = self.testbed.path(&self.links, src, rep);
+        let cap = self.transfer_cap(&path, src, rep, self.state.factor[src]);
+        let fid = self.net.start_flow(&path, bytes.max(1.0), cap.max(1.0));
+        self.flows.insert(fid, AFlow::Model { src, site });
+        self.score_inbound[site] += 1;
+    }
+
+    fn schedule_scored(&mut self, site: usize, now: f64) {
+        let rep = self.site_rep[site].expect("scored sites have a representative");
+        // Fixed per-site share set once at score start — a scan
+        // rescheduled after other sites finished must not be charged
+        // their shares too.
+        let secs = self.score_share / (self.cfg.cpu.scan_bps * self.state.factor[rep]);
+        self.next_gen += 1;
+        self.score_gen[site] = Some(self.next_gen);
+        self.q.push_at(
+            now + secs,
+            AEv::Scored {
+                site,
+                gen: self.next_gen,
+            },
+        );
+    }
+
+    // ------------------------------------------------------------ faults
+
+    fn handle_crash(&mut self, fault: usize, now: f64) -> Result<(), String> {
+        self.state.consumed[fault] = true;
+        let FaultSpec::SlaveCrash { node, .. } = self.state.faults[fault] else {
+            return Ok(());
+        };
+        if self.state.dead[node] {
+            return Ok(());
+        }
+        self.state.crash(node);
+
+        // Attempts running on the dead node: re-queue unless a sibling
+        // attempt survives (its attempt count is preserved by the
+        // scheduler's id-keyed map).
+        let stale: Vec<u64> = self
+            .inflight
+            .iter()
+            .filter(|(_, a)| a.node == node)
+            .map(|(&g, _)| g)
+            .collect();
+        for g in stale {
+            let mut att = self.inflight.remove(&g).expect("stale gen exists");
+            let siblings = {
+                let v = self.by_seg.entry(att.seg.id).or_default();
+                v.retain(|&x| x != g);
+                v.len()
+            };
+            if self.stage == Stage::Cluster && siblings > 0 {
+                self.sched.cancel_attempt(&att.seg);
+                if att.speculative {
+                    // The BACKUP died, not the primary: lift the
+                    // one-backup-per-window latch and re-check the
+                    // surviving attempt immediately, so a straggling
+                    // window is not stranded by its rescuer's crash
+                    // (the scheduler's attempt budget still applies).
+                    self.speculated.remove(&att.seg.id);
+                    if let Some(&survivor) =
+                        self.by_seg.get(&att.seg.id).and_then(|v| v.first())
+                    {
+                        self.q.push_at(now, AEv::SpecCheck { gen: survivor });
+                    }
+                }
+                continue;
+            }
+            self.by_seg.remove(&att.seg.id);
+            if self.stage == Stage::Cluster {
+                // Refresh the segment's replica set: the re-queued task
+                // must be assignable to the surviving holder.
+                self.win_locs[att.seg.id].retain(|&l| !self.state.dead[l as usize]);
+                att.seg.locations = self.win_locs[att.seg.id].clone();
+            }
+            let id = att.seg.id;
+            if !self.sched.fail(att.seg) {
+                return Err(format!(
+                    "job failed: segment {id} exhausted its {} attempts \
+                     after node {node} crashed",
+                    self.sched.max_attempts
+                ));
+            }
+            self.agg.reassignments += 1;
+        }
+        self.running[node] = 0;
+        // Shrink every window's surviving replica set.
+        for locs in self.win_locs.iter_mut() {
+            locs.retain(|&l| !self.state.dead[l as usize]);
+        }
+
+        // Transfers toward the dead node re-route (transfers leaving it
+        // are assumed salvageable from the replica, like the batch
+        // engine); ingest redirects to the replica chain, feature flows
+        // follow their window's new home, model flows follow the new
+        // site representative.
+        let toward: Vec<(FlowId, AFlowInfo)> = self
+            .flows
+            .iter()
+            .filter_map(|(&f, fl)| match fl {
+                AFlow::Ingest { dst } if *dst == node => Some((f, AFlowInfo::Ingest)),
+                AFlow::Feature { src, window } if self.win_home[*window] == node => {
+                    Some((f, AFlowInfo::Feature { src: *src, window: *window }))
+                }
+                AFlow::Model { src, site } if self.site_rep[*site] == Some(node) => {
+                    Some((f, AFlowInfo::Model { src: *src, site: *site }))
+                }
+                _ => None,
+            })
+            .collect();
+
+        // Re-home windows and site representatives before restarting
+        // the redirected remainders.
+        if matches!(self.stage, Stage::Aggregate) {
+            for w in 0..self.a.windows {
+                if self.win_home[w] == node && !self.win_opened[w] {
+                    let new_home = self.live_owner(replica_of(self.testbed, node))?;
+                    self.win_home[w] = new_home;
+                    self.agg.reassignments += 1;
+                    // A pending per-file Open at the dead home restarts
+                    // in full at the new home (pessimistic; §13).
+                    if self.open_gen[w].take().is_some() && self.win_inbound[w] == 0 {
+                        self.schedule_open(w, now);
+                    }
+                }
+            }
+        }
+        let mut resent_sites: Vec<usize> = Vec::new();
+        if matches!(self.stage, Stage::Score) {
+            let sites = self.testbed.site_names.len();
+            for s in 0..sites {
+                if self.site_rep[s] == Some(node) && !self.scored[s] {
+                    match self.site_head(s) {
+                        Some(new_rep) => {
+                            self.site_rep[s] = Some(new_rep);
+                            self.score_gen[s] = None;
+                            self.agg.reassignments += 1;
+                            // The dead representative took its delivered
+                            // models with it: re-replicate every window's
+                            // model from its surviving copy to the new
+                            // rep (real, counted re-distribution traffic)
+                            // — the scan restarts once they land.
+                            let model_bytes = self.model_bytes();
+                            for w in 0..self.a.windows {
+                                let src = self.live_owner(self.win_node[w])?;
+                                self.model_tier
+                                    .add(self.testbed, src, new_rep, model_bytes);
+                                self.agg
+                                    .tier
+                                    .add(self.testbed, src, new_rep, model_bytes);
+                                if src != new_rep {
+                                    self.start_model_flow(src, new_rep, s, model_bytes);
+                                }
+                            }
+                            resent_sites.push(s);
+                            if self.score_inbound[s] == 0 {
+                                // Every surviving model copy was already
+                                // local to the new rep.
+                                self.schedule_scored(s, now);
+                            }
+                        }
+                        None => {
+                            // The whole sensor site is offline.
+                            self.site_rep[s] = None;
+                            self.score_gen[s] = None;
+                            self.scored[s] = true;
+                            self.score_pending -= 1;
+                            self.agg.reassignments += 1;
+                        }
+                    }
+                }
+            }
+        }
+
+        // The rerouted remainders are not re-counted in tier/shuffle
+        // byte totals — those count each payload once, at its first
+        // send (the batch engine's convention); only the score-stage
+        // model RE-replication above is new traffic and counted.
+        for (fid, info) in toward {
+            self.flows.remove(&fid);
+            let left = self.net.cancel_flow(fid);
+            match info {
+                AFlowInfo::Ingest => {
+                    self.ingest_pending -= 1;
+                    let owner = self.live_owner(replica_of(self.testbed, node))?;
+                    let head = self
+                        .site_head(self.testbed.node_site[owner])
+                        .expect("owner is alive");
+                    self.start_ingest_flow(head, owner, left);
+                }
+                AFlowInfo::Feature { src, window } => {
+                    self.win_inbound[window] -= 1;
+                    if !self.state.dead[src] {
+                        self.start_feature_flow(src, window, left);
+                    } else if self.win_inbound[window] == 0 && !self.win_opened[window] {
+                        self.schedule_open(window, now);
+                    }
+                }
+                AFlowInfo::Model { src, site } => {
+                    self.score_inbound[site] -= 1;
+                    if resent_sites.contains(&site) {
+                        // The full model set was already re-replicated
+                        // to the replacement rep: drop the stale
+                        // remainder, and start the scan if this was the
+                        // last outstanding flow.
+                        if self.score_inbound[site] == 0 && !self.scored[site] {
+                            self.schedule_scored(site, now);
+                        }
+                    } else if let Some(rep) = self.site_rep[site] {
+                        if !self.scored[site] {
+                            // Resend from the model's surviving copy
+                            // (the winner node, or its replica).
+                            let src = self.live_owner(src)?;
+                            self.start_model_flow(src, rep, site, left);
+                        }
+                    }
+                }
+            }
+            self.agg.reassignments += 1;
+        }
+
+        match self.stage {
+            Stage::Extract => self.pump_extract(now),
+            Stage::Cluster => self.pump_cluster(now)?,
+            _ => {}
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------------ loop
+
+    /// Advance the stage machine whenever the current stage drained.
+    fn advance(&mut self, now: f64) -> Result<(), String> {
+        loop {
+            match self.stage {
+                Stage::Ingest if self.ingest_pending == 0 => {
+                    self.agg.stage_ends.push(("sensor ingest".to_string(), now));
+                    self.stage = Stage::Extract;
+                    self.start_extract(now)?;
+                }
+                Stage::Extract if self.sched.is_drained() && self.inflight.is_empty() => {
+                    self.harvest_sched();
+                    self.agg.stage_ends.push(("angle extract".to_string(), now));
+                    self.stage = Stage::Aggregate;
+                    self.start_aggregate(now);
+                }
+                Stage::Aggregate if self.win_opened.iter().all(|&o| o) => {
+                    self.agg
+                        .stage_ends
+                        .push(("window aggregate".to_string(), now));
+                    self.stage = Stage::Cluster;
+                    self.start_cluster(now)?;
+                }
+                Stage::Cluster if self.sched.is_drained() && self.inflight.is_empty() => {
+                    self.harvest_sched();
+                    self.agg.stage_ends.push(("window cluster".to_string(), now));
+                    self.stage = Stage::Score;
+                    self.start_score(now)?;
+                }
+                Stage::Score if self.score_pending == 0 => {
+                    self.agg.stage_ends.push(("model score".to_string(), now));
+                    self.stage = Stage::Done;
+                    self.makespan = now;
+                }
+                _ => return Ok(()),
+            }
+        }
+    }
+
+    fn harvest_sched(&mut self) {
+        self.agg.local_assignments += self.sched.local_assignments;
+        self.agg.remote_assignments += self.sched.remote_assignments;
+        self.agg.speculative_launched += self.sched.speculative_launched;
+        self.agg.speculative_won += self.sched.speculative_won;
+    }
+
+    fn flow_done(&mut self, fid: FlowId, now: f64) {
+        let Some(flow) = self.flows.remove(&fid) else {
+            return;
+        };
+        match flow {
+            AFlow::Ingest { .. } => self.ingest_pending -= 1,
+            AFlow::Feature { window, .. } => {
+                self.win_inbound[window] -= 1;
+                if self.win_inbound[window] == 0 && !self.win_opened[window] {
+                    self.schedule_open(window, now);
+                }
+            }
+            AFlow::Model { site, .. } => {
+                self.score_inbound[site] -= 1;
+                if self.score_inbound[site] == 0
+                    && !self.scored[site]
+                    && self.site_rep[site].is_some()
+                {
+                    self.schedule_scored(site, now);
+                }
+            }
+        }
+    }
+
+    fn execute(&mut self) -> Result<(), String> {
+        self.schedule_faults();
+        self.start_ingest()?;
+        self.advance(0.0)?;
+        let mut batch: Vec<AEv> = Vec::new();
+        loop {
+            if self.stage == Stage::Done {
+                break;
+            }
+            let tq = self.q.peek_time();
+            let tn = self.net.next_completion().map(|(t, _)| t);
+            let next = match (tq, tn) {
+                (None, None) => {
+                    return Err("angle pipeline stalled before completing".into());
+                }
+                (Some(a), None) => a,
+                (None, Some(b)) => b,
+                (Some(a), Some(b)) => a.min(b),
+            };
+            let now = next;
+            for fid in self.net.advance_to(next) {
+                self.agg.events += 1;
+                self.flow_done(fid, now);
+            }
+            if self.q.peek_time() == Some(next) {
+                batch.clear();
+                self.q.pop_simultaneous(&mut batch);
+                for ev in batch.drain(..) {
+                    self.agg.events += 1;
+                    match ev {
+                        AEv::Seg { gen } => self.seg_done(gen, now)?,
+                        AEv::SpecCheck { gen } => self.spec_check(gen, now),
+                        AEv::Open { window, gen } => {
+                            if self.open_gen[window] == Some(gen) {
+                                self.open_gen[window] = None;
+                                self.win_opened[window] = true;
+                            }
+                        }
+                        AEv::Scored { site, gen } => {
+                            if self.score_gen[site] == Some(gen) {
+                                self.score_gen[site] = None;
+                                self.scored[site] = true;
+                                self.score_pending -= 1;
+                            }
+                        }
+                        AEv::Crash { fault } => self.handle_crash(fault, now)?,
+                        AEv::DegradeStart { fault } => handle_degrade_start(
+                            self.state,
+                            &mut self.net,
+                            &self.links,
+                            self.testbed,
+                            fault,
+                            now,
+                        ),
+                        AEv::DegradeEnd { fault } => handle_degrade_end(
+                            self.state,
+                            &mut self.net,
+                            &self.links,
+                            self.testbed,
+                            fault,
+                            now,
+                        ),
+                    }
+                }
+            }
+            self.advance(now)?;
+        }
+        Ok(())
+    }
+}
+
+/// Redirect bookkeeping captured before mutating the flow table.
+enum AFlowInfo {
+    Ingest,
+    Feature { src: usize, window: usize },
+    Model { src: usize, site: usize },
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::{run_scenario, ScenarioSpec, WorkloadKind};
+    use crate::topology::TopologySpec;
+    use crate::util::bytes::GB;
+
+    /// Four sensor sites (the proven detection shape: 4 sensors x 25
+    /// sources = 100 points per window) x `nodes_per_rack` nodes each.
+    fn angle_spec(nodes_per_rack: usize) -> ScenarioSpec {
+        let mut spec = ScenarioSpec::paper_lan8();
+        spec.topology = TopologySpec::scale_out(4, 1, nodes_per_rack);
+        spec.name = "angle-test".into();
+        let w = spec.workload.as_mut().unwrap();
+        w.kind = WorkloadKind::Angle;
+        w.bytes_per_node = 0.25 * GB as f64;
+        spec.angle = Some(AngleSpec::default());
+        spec
+    }
+
+    #[test]
+    fn staged_pipeline_runs_all_five_stages() {
+        let spec = angle_spec(2);
+        let a = run_scenario(&spec).unwrap();
+        let b = run_scenario(&spec).unwrap();
+        assert_eq!(a, b, "same spec, same report");
+        let an = a.angle.as_ref().expect("angle report present");
+        assert_eq!(an.windows, 8);
+        assert_eq!(an.deltas.len(), 7);
+        assert!(an.feature_gbytes > 0.0);
+        assert!(an.staged_work_secs > 0.0);
+        assert!(an.oracle_secs > 0.0);
+        assert!(a.segments > spec.topology.nodes(), "extract + cluster tasks");
+        assert!(a.shuffle_gbytes > 0.0, "feature shuffle crossed the network");
+        assert!(an.model_tier.total() > 0.0, "models were distributed");
+        assert!(an.model_tier.wan > 0.0, "models crossed sites");
+        // Every stage ran on the substrate, in order.
+        let testbed = spec.topology.generate().unwrap();
+        let out = run_angle(&spec, &testbed).unwrap();
+        let names: Vec<&str> = out.agg.stage_ends.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(
+            names,
+            vec![
+                "sensor ingest",
+                "angle extract",
+                "window aggregate",
+                "window cluster",
+                "model score"
+            ]
+        );
+        let ends: Vec<f64> = out.agg.stage_ends.iter().map(|(_, t)| *t).collect();
+        assert!(ends.windows(2).all(|p| p[0] <= p[1]), "stages end in order");
+        assert!((out.makespan - ends[4]).abs() < 1e-9, "score ends the run");
+    }
+
+    #[test]
+    fn detection_finds_planted_scan_and_exfil() {
+        let spec = angle_spec(2);
+        let r = run_scenario(&spec).unwrap();
+        let an = r.angle.unwrap();
+        assert_eq!(an.emergent_planted, vec![4, 6], "scan at 4, exfil at 6");
+        assert_eq!(an.recall, 1.0, "found {:?}", an.emergent_found);
+    }
+
+    #[test]
+    fn crash_rehomes_windows_and_still_detects() {
+        let mut spec = angle_spec(2);
+        let baseline = run_scenario(&spec).unwrap();
+        // Crash mid-run: late enough to land after ingest on this size.
+        spec.faults.push(crate::scenario::FaultSpec::SlaveCrash {
+            at_secs: 2.0,
+            node: 1,
+        });
+        let r = run_scenario(&spec).unwrap();
+        assert_eq!(r, run_scenario(&spec).unwrap(), "faulted run stays deterministic");
+        assert_eq!(r.nodes_crashed, 1);
+        assert!(r.reassignments > 0, "the crash re-assigned work");
+        let an = r.angle.unwrap();
+        assert_eq!(an.recall, 1.0, "content survives on replicas");
+        assert_eq!(
+            an.deltas,
+            baseline.angle.as_ref().unwrap().deltas,
+            "faults perturb timing, never the mined content"
+        );
+    }
+
+    #[test]
+    fn straggler_triggers_speculation_on_its_window() {
+        // 16 nodes, 8 windows -> spread 2: homes 0,2,4,...  Node 2
+        // hosts a window; make it 4x slow so its cluster task crosses
+        // the 2x-nominal speculation threshold and the backup wins.
+        let mut spec = angle_spec(4);
+        spec.faults.push(crate::scenario::FaultSpec::Straggler {
+            node: 2,
+            factor: 0.25,
+        });
+        let r = run_scenario(&spec).unwrap();
+        assert!(
+            r.speculative_launched >= 1,
+            "the 4x straggler must trigger a backup"
+        );
+        assert!(r.speculative_won >= 1, "the backup must win");
+        let no_straggler = run_scenario(&angle_spec(4)).unwrap();
+        assert!(
+            r.makespan_secs >= no_straggler.makespan_secs,
+            "a straggler never speeds the run up"
+        );
+    }
+
+    #[test]
+    fn staged_work_tracks_the_oracle() {
+        let r = run_scenario(&angle_spec(2)).unwrap();
+        let an = r.angle.unwrap();
+        let ratio = an.staged_work_secs / an.oracle_secs;
+        assert!(
+            (0.5..=1.25).contains(&ratio),
+            "staged/oracle = {ratio:.3} outside the documented band"
+        );
+    }
+
+    #[test]
+    fn single_site_runs_without_wan() {
+        let mut spec = angle_spec(2);
+        spec.topology = TopologySpec::paper_lan(4);
+        let r = run_scenario(&spec).unwrap();
+        let an = r.angle.unwrap();
+        assert_eq!(an.model_tier.wan, 0.0, "one site, no WAN crossing");
+        assert!(r.makespan_secs > 0.0);
+    }
+
+    #[test]
+    fn losing_a_window_replica_chain_fails_the_run() {
+        // scale_out(1,2,2): replica pairs 0<->2, 1<->3.  Crashing both
+        // ends of a pair during the long cluster stage destroys that
+        // window data; the run must error, not report a makespan.
+        let mut spec = angle_spec(2);
+        spec.topology = TopologySpec::scale_out(1, 2, 2);
+        spec.faults.push(crate::scenario::FaultSpec::SlaveCrash {
+            at_secs: 10.0,
+            node: 0,
+        });
+        spec.faults.push(crate::scenario::FaultSpec::SlaveCrash {
+            at_secs: 11.0,
+            node: 2,
+        });
+        let err = run_scenario(&spec).unwrap_err();
+        assert!(err.contains("lost"), "{err}");
+    }
+}

@@ -692,8 +692,10 @@ pub(crate) fn run_colocated(
 
     let mut job_makespan = job.makespan;
     if workload.kind == WorkloadKind::Angle {
-        // Client-side clustering tail at Table 3's cost structure,
-        // matching the batch engine's Angle path.
+        // Legacy colocated Angle: extraction on the substrate plus the
+        // Table 3 clustering scalar.  The staged five-stage pipeline
+        // (DESIGN.md §13) does not colocate yet — `[angle]` + `[traffic]`
+        // is rejected at validation so the difference stays explicit.
         let records = workload.bytes_per_node * testbed.nodes() as f64 / PACKET_BYTES as f64;
         job_makespan += simulate_angle_clustering(records, job.segments as f64);
     }
@@ -737,6 +739,7 @@ pub(crate) fn run_colocated(
             tenant_deltas,
         }),
         comparison: None,
+        angle: None,
     })
 }
 

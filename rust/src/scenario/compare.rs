@@ -127,6 +127,7 @@ pub(crate) fn run_compare(
             hadoop,
             speedup,
         }),
+        angle: None,
     })
 }
 

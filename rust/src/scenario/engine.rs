@@ -33,8 +33,6 @@
 use std::collections::BTreeMap;
 
 use crate::config::{SimConfig, TransportKind};
-use crate::mining::angle::simulate_angle_clustering;
-use crate::mining::pcap::PACKET_BYTES;
 use crate::sim::event::EventQueue;
 use crate::sim::netsim::{FlowId, LinkId, NetSim};
 use crate::sphere::scheduler::Scheduler;
@@ -78,6 +76,10 @@ pub struct ScenarioReport {
     /// Sphere-vs-Hadoop head-to-head when the scenario carried a
     /// `[compare]` block (DESIGN.md §12).
     pub comparison: Option<super::compare::ComparisonReport>,
+    /// Mining-side view of a staged Angle run: delta series, emergent
+    /// windows vs planted ground truth, model-distribution bytes per
+    /// link tier (DESIGN.md §13).
+    pub angle: Option<super::angle::AngleReport>,
 }
 
 /// Bytes moved between nodes, bucketed by the deepest link tier the
@@ -142,6 +144,9 @@ pub(crate) struct BatchOutcome {
     pub(crate) makespan: f64,
     pub(crate) agg: Aggregate,
     pub(crate) state: FaultState,
+    /// Mining-side report when the workload was the staged Angle
+    /// pipeline (DESIGN.md §13); `None` for every other workload.
+    pub(crate) angle: Option<super::angle::AngleReport>,
 }
 
 impl BatchOutcome {
@@ -161,11 +166,12 @@ impl BatchOutcome {
             shuffle_gbytes: self.agg.shuffle_bytes / 1e9,
             faults_injected: self.state.injected,
             nodes_crashed: self.state.crashes,
-            speculative_launched: 0,
-            speculative_won: 0,
+            speculative_launched: self.agg.speculative_launched,
+            speculative_won: self.agg.speculative_won,
             traffic: None,
             colocation: None,
             comparison: None,
+            angle: self.angle,
         }
     }
 }
@@ -193,15 +199,11 @@ pub(crate) fn run_batch(spec: &ScenarioSpec, testbed: &Testbed) -> Result<BatchO
             StageRun::new(testbed, &spec.cfg, StageKind::Filegen, b, 0.0, &mut state)?
                 .execute(&mut agg)?
         }
-        WorkloadKind::Angle => {
-            let end = StageRun::new(testbed, &spec.cfg, StageKind::AngleExtract, b, 0.0, &mut state)?
-                .execute(&mut agg)?;
-            // Client-side clustering tail at Table 3's cost structure.
-            let records = b * testbed.nodes() as f64 / PACKET_BYTES as f64;
-            let total = end + simulate_angle_clustering(records, agg.segments as f64);
-            agg.stage_ends.push(("clustering".to_string(), total));
-            total
-        }
+        // The staged Angle pipeline owns its whole substrate — ingest,
+        // extract, aggregate, cluster and score all run event-driven
+        // (DESIGN.md §13; the old off-substrate clustering scalar
+        // survives only as its calibration oracle).
+        WorkloadKind::Angle => return super::angle::run_angle(spec, testbed),
         WorkloadKind::Terasplit => run_terasplit(testbed, &spec.cfg, b, &mut state, &mut agg)?,
         WorkloadKind::Kmeans => run_kmeans(
             testbed,
@@ -217,6 +219,7 @@ pub(crate) fn run_batch(spec: &ScenarioSpec, testbed: &Testbed) -> Result<BatchO
         makespan,
         agg,
         state,
+        angle: None,
     })
 }
 
@@ -357,6 +360,10 @@ pub(crate) struct Aggregate {
     pub(crate) tier: TierBytes,
     /// (stage name, end time) in execution order.
     pub(crate) stage_ends: Vec<(String, f64)>,
+    /// Speculative backup attempts launched / won (the staged Angle
+    /// pipeline's cluster stage; zero for the other batch workloads).
+    pub(crate) speculative_launched: u64,
+    pub(crate) speculative_won: u64,
 }
 
 impl Aggregate {
@@ -757,19 +764,7 @@ pub(crate) fn build_stage_segments(
     );
     let mut segments = Vec::new();
     for home in 0..n {
-        // Walk the replica chain until a live owner is found.
-        let mut owner = home;
-        for _ in 0..n {
-            if !state.dead[owner] {
-                break;
-            }
-            owner = replica_of(testbed, owner);
-        }
-        if state.dead[owner] {
-            return Err(format!(
-                "node {home}'s data lost: its whole replica chain crashed"
-            ));
-        }
+        let owner = live_owner(testbed, state, home)?;
         let replica = replica_of(testbed, owner);
         let mut locations: Vec<u32> = [owner, replica]
             .into_iter()
@@ -827,6 +822,27 @@ pub(crate) fn coordination_secs(testbed: &Testbed) -> f64 {
 /// catalog placement (`crate::topology::rack_diverse_replica`).
 pub(crate) fn replica_of(testbed: &Testbed, node: usize) -> usize {
     rack_diverse_replica(testbed, node)
+}
+
+/// Walk `home`'s replica chain to a live owner; error when the whole
+/// chain is dead — the data is gone, and a run that lost data must not
+/// report a normal makespan.  Shared by the staged batch engine's
+/// segment builder and the Angle pipeline's flow routing.
+pub(crate) fn live_owner(
+    testbed: &Testbed,
+    state: &FaultState,
+    home: usize,
+) -> Result<usize, String> {
+    let mut owner = home;
+    for _ in 0..testbed.nodes() {
+        if !state.dead[owner] {
+            return Ok(owner);
+        }
+        owner = replica_of(testbed, owner);
+    }
+    Err(format!(
+        "node {home}'s data lost: its whole replica chain crashed"
+    ))
 }
 
 /// Apply a WAN degradation factor to a site's full-duplex uplink —

@@ -23,24 +23,30 @@
 //! speculative re-execution (`colocate`, DESIGN.md §11); a `[compare]`
 //! block runs the workload through BOTH the Sphere engine and the
 //! Hadoop baseline engine under the same fault plan and reports the
-//! speedup ratio (`compare`, DESIGN.md §12).
+//! speedup ratio (`compare`, DESIGN.md §12); an angle workload runs
+//! the full five-stage Angle pipeline — ingest, extract, aggregate,
+//! cluster, score — event-driven on the substrate, parameterized by
+//! the `[angle]` block (`angle`, DESIGN.md §13).
 //!
 //! Specs parse from TOML (`config/scenarios/*.toml` in the repo root)
 //! or come from the named presets used by `examples/scenario_suite.rs`
 //! and `benches/bench_scale.rs`.
 
+pub mod angle;
 pub mod colocate;
 pub mod compare;
 pub mod engine;
 
+pub use angle::AngleReport;
 pub use colocate::{ColocationReport, TenantSloDelta};
 pub use compare::{ComparisonReport, SystemOutcome};
 pub use engine::{run_scenario, ScenarioReport, TierBytes};
 
 use crate::config::{SimConfig, Table};
+use crate::mining::pcap::Regime;
 use crate::service::{ArrivalProcess, TenantSpec, TrafficSpec};
 use crate::topology::TopologySpec;
-use crate::util::bytes::{parse_bytes, GB};
+use crate::util::bytes::{parse_bytes, GB, MB};
 
 /// Which workload the scenario runs.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -165,6 +171,208 @@ impl ColocationSpec {
     }
 }
 
+/// One planted regime shift: every sensor site's source `source`
+/// switches to `regime` inside window `window` — the ground truth the
+/// emergent-cluster detector must find (paper §7.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AnomalySpec {
+    pub window: usize,
+    pub source: usize,
+    pub regime: Regime,
+}
+
+/// The `[angle]` TOML block (DESIGN.md §13): parameters of the staged
+/// Angle pipeline.  Only read when `[workload] kind = "angle"` — the
+/// temporal-window structure, the model-scale detection stream fed to
+/// the real mining machinery, and the Table 3 file-count accounting.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AngleSpec {
+    /// Temporal windows w_1..w_j the feature stream aggregates into.
+    pub windows: usize,
+    /// Monitored sources per sensor site (model-scale stream).
+    pub sources_per_sensor: usize,
+    /// Packets per source per window in the model-scale stream; also
+    /// sets the extraction compression ratio (one feature record per
+    /// `packets_per_source` packets).
+    pub packets_per_source: usize,
+    /// k-means cluster count per window.
+    pub k: usize,
+    /// Sector file count for the cost accounting (Table 3's x-axis);
+    /// 0 = one file per (sensor site, window).
+    pub files: usize,
+    /// Emergent-window z-score threshold (paper Figs 5–6).
+    pub z_thresh: f64,
+    /// Delta samples the detector's trailing baseline needs first.
+    pub warmup: usize,
+    /// Planted regime shifts; defaults plant a §7.1 port scan and an
+    /// exfiltration so recall has ground truth to measure against.
+    pub anomalies: Vec<AnomalySpec>,
+}
+
+impl Default for AngleSpec {
+    fn default() -> Self {
+        AngleSpec {
+            windows: 8,
+            sources_per_sensor: 25,
+            packets_per_source: 40,
+            k: 6,
+            files: 0,
+            z_thresh: 3.0,
+            warmup: 2,
+            anomalies: vec![
+                AnomalySpec { window: 4, source: 3, regime: Regime::Scan },
+                AnomalySpec { window: 4, source: 7, regime: Regime::Scan },
+                AnomalySpec { window: 6, source: 11, regime: Regime::Exfil },
+                AnomalySpec { window: 6, source: 19, regime: Regime::Exfil },
+            ],
+        }
+    }
+}
+
+impl AngleSpec {
+    fn from_table(t: &Table) -> Result<AngleSpec, String> {
+        t.check_known_keys(
+            "angle",
+            &[
+                "windows",
+                "sources_per_sensor",
+                "packets_per_source",
+                "k",
+                "files",
+                "z_thresh",
+                "warmup",
+            ],
+            &["anomalies"],
+        )?;
+        let mut anomalies = Vec::new();
+        for label in t.subsections("angle.anomalies") {
+            let key = |field: &str| format!("angle.anomalies.{label}.{field}");
+            let section = format!("angle.anomalies.{label}");
+            for k in t.section_keys(&section) {
+                let field = k.rsplit('.').next().unwrap_or(k);
+                if !["window", "source", "regime"].contains(&field) {
+                    return Err(format!(
+                        "anomaly {label:?}: unknown field {field:?} \
+                         (expected window|source|regime)"
+                    ));
+                }
+            }
+            // Every anomaly field must be explicit AND well-typed: a
+            // forgotten or mistyped window silently planting the shift
+            // at window 0 (undetectable before warmup), or a regime
+            // silently becoming a scan, would corrupt the ground truth
+            // without a hint.
+            for required in ["window", "source", "regime"] {
+                if t.get(&key(required)).is_none() {
+                    return Err(format!(
+                        "anomaly {label:?}: missing required field {required:?}"
+                    ));
+                }
+            }
+            let int_field = |field: &str| -> Result<usize, String> {
+                t.get(&key(field))
+                    .and_then(crate::config::Value::as_int)
+                    .filter(|&v| v >= 0)
+                    .map(|v| v as usize)
+                    .ok_or_else(|| {
+                        format!(
+                            "anomaly {label:?}: {field} must be a non-negative integer"
+                        )
+                    })
+            };
+            let regime = match t.get(&key("regime")).and_then(crate::config::Value::as_str)
+            {
+                Some("scan") => Regime::Scan,
+                Some("exfil") => Regime::Exfil,
+                other => {
+                    return Err(format!(
+                        "anomaly {label:?}: regime must be \"scan\" or \"exfil\", \
+                         got {other:?}"
+                    ))
+                }
+            };
+            anomalies.push(AnomalySpec {
+                window: int_field("window")?,
+                source: int_field("source")?,
+                regime,
+            });
+        }
+        let d = AngleSpec::default();
+        // No [angle.anomalies.*] sections: keep the default plants so a
+        // minimal [angle] block still has recall ground truth.
+        let anomalies = if anomalies.is_empty() { d.anomalies } else { anomalies };
+        Ok(AngleSpec {
+            windows: t.int_or("angle.windows", d.windows as i64).max(0) as usize,
+            sources_per_sensor: t
+                .int_or("angle.sources_per_sensor", d.sources_per_sensor as i64)
+                .max(0) as usize,
+            packets_per_source: t
+                .int_or("angle.packets_per_source", d.packets_per_source as i64)
+                .max(0) as usize,
+            k: t.int_or("angle.k", d.k as i64).max(0) as usize,
+            files: t.int_or("angle.files", 0).max(0) as usize,
+            z_thresh: t.float_or("angle.z_thresh", d.z_thresh),
+            warmup: t.int_or("angle.warmup", d.warmup as i64).max(0) as usize,
+            anomalies,
+        })
+    }
+
+    /// Check internal consistency; `sensors` is the sensor-site count
+    /// (one sensor per topology site).
+    pub fn validate(&self, sensors: usize) -> Result<(), String> {
+        if self.windows < self.warmup + 2 {
+            return Err(format!(
+                "angle: windows ({}) must exceed warmup + 1 ({}) — the detector \
+                 needs a trailing baseline before any window can flag",
+                self.windows,
+                self.warmup + 1
+            ));
+        }
+        if self.k < 2 {
+            return Err("angle: k must be >= 2 (one cluster has no emergent structure)".into());
+        }
+        if self.sources_per_sensor * sensors.max(1) < self.k {
+            return Err(format!(
+                "angle: {} sources across {} sensor sites cannot fill k = {} clusters",
+                self.sources_per_sensor, sensors, self.k
+            ));
+        }
+        if self.packets_per_source == 0 {
+            return Err("angle: packets_per_source must be >= 1".into());
+        }
+        if !self.z_thresh.is_finite() || self.z_thresh <= 0.0 {
+            return Err("angle: z_thresh must be > 0".into());
+        }
+        for an in &self.anomalies {
+            if an.window >= self.windows {
+                return Err(format!(
+                    "angle: anomaly window {} >= windows {}",
+                    an.window, self.windows
+                ));
+            }
+            // The detector needs `warmup` baseline deltas before any
+            // window can flag, so a shift planted at or before window
+            // `warmup` is mathematically undetectable — the run would
+            // silently report recall < 1.0.
+            if an.window <= self.warmup {
+                return Err(format!(
+                    "angle: anomaly window {} is undetectable — the first \
+                     flaggable window is warmup + 1 = {}",
+                    an.window,
+                    self.warmup + 1
+                ));
+            }
+            if an.source >= self.sources_per_sensor {
+                return Err(format!(
+                    "angle: anomaly source {} >= sources_per_sensor {}",
+                    an.source, self.sources_per_sensor
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
 /// Head-to-head knobs (the `[compare]` TOML block; DESIGN.md §12).
 /// When present, the scenario's `[workload]` runs through BOTH the
 /// Sphere engine and the Hadoop baseline engine on substrates built
@@ -207,6 +415,11 @@ pub struct ScenarioSpec {
     /// The Sphere-vs-Hadoop head-to-head (the `[compare]` TOML block;
     /// DESIGN.md §12).  Mutually exclusive with `[traffic]`.
     pub compare: Option<CompareSpec>,
+    /// Staged Angle pipeline parameters (the `[angle]` TOML block;
+    /// DESIGN.md §13).  Only legal with `[workload] kind = "angle"`;
+    /// an angle workload without the block runs with
+    /// `AngleSpec::default()`.
+    pub angle: Option<AngleSpec>,
 }
 
 impl ScenarioSpec {
@@ -310,6 +523,11 @@ impl ScenarioSpec {
         } else {
             None
         };
+        let angle = if t.section_keys("angle").next().is_some() {
+            Some(AngleSpec::from_table(t)?)
+        } else {
+            None
+        };
         Ok(ScenarioSpec {
             name: t.str_or("name", &topology.name).to_string(),
             topology,
@@ -319,6 +537,7 @@ impl ScenarioSpec {
             traffic,
             colocation,
             compare,
+            angle,
         })
     }
 
@@ -333,6 +552,25 @@ impl ScenarioSpec {
             traffic.validate()?;
         }
         self.colocation.validate()?;
+        if let Some(angle) = &self.angle {
+            if self.workload.as_ref().map(|w| w.kind) != Some(WorkloadKind::Angle) {
+                return Err(
+                    "[angle] only applies to [workload] kind = \"angle\" — it \
+                     parameterizes the staged Angle pipeline"
+                        .into(),
+                );
+            }
+            if self.traffic.is_some() {
+                return Err(
+                    "[angle] does not colocate with [traffic] yet: the staged \
+                     pipeline owns its substrate end to end (a bare angle \
+                     [workload] still colocates via the legacy extract + \
+                     clustering-tail model)"
+                        .into(),
+                );
+            }
+            angle.validate(sites)?;
+        }
         if self.compare.is_some() {
             if self.traffic.is_some() {
                 return Err(
@@ -442,6 +680,7 @@ impl ScenarioSpec {
             traffic: None,
             colocation: ColocationSpec::default(),
             compare: None,
+            angle: None,
         }
     }
 
@@ -461,6 +700,7 @@ impl ScenarioSpec {
             traffic: None,
             colocation: ColocationSpec::default(),
             compare: None,
+            angle: None,
         }
     }
 
@@ -497,6 +737,7 @@ impl ScenarioSpec {
             traffic: None,
             colocation: ColocationSpec::default(),
             compare: None,
+            angle: None,
         }
     }
 
@@ -628,6 +869,80 @@ impl ScenarioSpec {
         spec.name = "compare-scale128".into();
         spec.compare = Some(CompareSpec::default());
         spec
+    }
+
+    /// The paper's §7 deployment: Angle across four sensor sites on the
+    /// wide area, fault-free — the clean run whose planted scan and
+    /// exfiltration shifts must be detected with recall 1.0 (the
+    /// acceptance gate `benches/bench_angle.rs` enforces).  Mirrors
+    /// config/scenarios/angle_wan4.toml.
+    pub fn angle_wan4() -> ScenarioSpec {
+        ScenarioSpec {
+            name: "angle-wan4".into(),
+            topology: TopologySpec::scale_out(4, 1, 2),
+            cfg: SimConfig::wan_default(),
+            workload: Some(WorkloadSpec {
+                kind: WorkloadKind::Angle,
+                bytes_per_node: 250.0 * MB as f64,
+                iterations: 10,
+            }),
+            faults: Vec::new(),
+            traffic: None,
+            colocation: ColocationSpec::default(),
+            compare: None,
+            angle: Some(AngleSpec::default()),
+        }
+    }
+
+    /// Table 3's 300,000-file scale on the 128-node cloud under the
+    /// full scale128-class fault plan: 10^8 packet records (25 MB/node)
+    /// aggregated into 16 temporal windows, a 4x straggler hosting one
+    /// window (node 16 is a window home, so its cluster task must be
+    /// rescued by speculation), a crash at t = 30 s — safely inside the
+    /// hours-long aggregate stage — that re-homes window 5, and a WAN
+    /// brown-out squeezing the feature shuffle.  Mirrors
+    /// config/scenarios/angle_scale128.toml.
+    pub fn angle_scale128() -> ScenarioSpec {
+        ScenarioSpec {
+            name: "angle-scale128".into(),
+            topology: TopologySpec::scale_out(4, 4, 8),
+            cfg: SimConfig::lan_default(),
+            workload: Some(WorkloadSpec {
+                kind: WorkloadKind::Angle,
+                bytes_per_node: 25.0 * MB as f64,
+                iterations: 10,
+            }),
+            faults: vec![
+                FaultSpec::Straggler {
+                    node: 16,
+                    factor: 0.25,
+                },
+                FaultSpec::SlaveCrash {
+                    at_secs: 30.0,
+                    node: 40,
+                },
+                FaultSpec::LinkDegrade {
+                    at_secs: 5.0,
+                    duration_secs: 20.0,
+                    site: 2,
+                    factor: 0.25,
+                },
+            ],
+            traffic: None,
+            colocation: ColocationSpec::default(),
+            compare: None,
+            angle: Some(AngleSpec {
+                windows: 16,
+                files: 300_000,
+                anomalies: vec![
+                    AnomalySpec { window: 5, source: 3, regime: Regime::Scan },
+                    AnomalySpec { window: 5, source: 7, regime: Regime::Scan },
+                    AnomalySpec { window: 11, source: 11, regime: Regime::Exfil },
+                    AnomalySpec { window: 11, source: 19, regime: Regime::Exfil },
+                ],
+                ..AngleSpec::default()
+            }),
+        }
     }
 }
 
@@ -970,5 +1285,136 @@ mod tests {
             3,
             "both engines face the scale128 fault plan"
         );
+    }
+
+    #[test]
+    fn angle_block_parses_and_rejects_typos() {
+        let base = "[topology]\nsites = 2\nracks_per_site = 2\nnodes_per_rack = 2\n\
+                    [workload]\nkind = \"angle\"\n";
+        let spec = ScenarioSpec::from_toml(&format!(
+            "{base}[angle]\nwindows = 12\nk = 4\nfiles = 4800\n\
+             [angle.anomalies.scan]\nwindow = 6\nsource = 2\nregime = \"scan\"\n\
+             [angle.anomalies.exfil]\nwindow = 9\nsource = 5\nregime = \"exfil\""
+        ))
+        .unwrap();
+        let a = spec.angle.as_ref().expect("angle block parsed");
+        assert_eq!(a.windows, 12);
+        assert_eq!(a.k, 4);
+        assert_eq!(a.files, 4800);
+        assert_eq!(a.anomalies.len(), 2);
+        assert_eq!(a.anomalies[1].regime, Regime::Scan, "sorted by label");
+        spec.validate().unwrap();
+        // Unknown keys error, never silently default.
+        let err =
+            ScenarioSpec::from_toml(&format!("{base}[angle]\nwindos = 8")).unwrap_err();
+        assert!(err.contains("windos"), "{err}");
+        let err = ScenarioSpec::from_toml(&format!(
+            "{base}[angle]\nwindows = 8\n[angle.anomalies.a]\nwndow = 3"
+        ))
+        .unwrap_err();
+        assert!(err.contains("wndow"), "{err}");
+        let err = ScenarioSpec::from_toml(&format!(
+            "{base}[angle]\nwindows = 8\n\
+             [angle.anomalies.a]\nwindow = 3\nsource = 1\nregime = \"meteor\""
+        ))
+        .unwrap_err();
+        assert!(err.contains("meteor"), "{err}");
+        // A forgotten field must error, not silently plant the shift at
+        // window 0 (undetectable before warmup) or default to a scan.
+        let err = ScenarioSpec::from_toml(&format!(
+            "{base}[angle]\nwindows = 8\n[angle.anomalies.a]\nsource = 3\nregime = \"scan\""
+        ))
+        .unwrap_err();
+        assert!(err.contains("window"), "{err}");
+        let err = ScenarioSpec::from_toml(&format!(
+            "{base}[angle]\nwindows = 8\n[angle.anomalies.a]\nwindow = 3\nsource = 1"
+        ))
+        .unwrap_err();
+        assert!(err.contains("regime"), "{err}");
+    }
+
+    #[test]
+    fn angle_block_requires_angle_workload_and_no_traffic() {
+        // [angle] next to a terasort workload is a mistake.
+        let err = ScenarioSpec::from_toml(
+            "[topology]\nsites = 2\nracks_per_site = 1\nnodes_per_rack = 2\n\
+             [workload]\nkind = \"terasort\"\n[angle]\nwindows = 8",
+        )
+        .unwrap()
+        .validate()
+        .unwrap_err();
+        assert!(err.contains("[angle]"), "{err}");
+        // The staged pipeline does not colocate (a bare angle workload
+        // with [traffic] still runs the legacy colocated model).
+        let err = ScenarioSpec::from_toml(
+            "[topology]\nsites = 2\nracks_per_site = 1\nnodes_per_rack = 2\n\
+             [workload]\nkind = \"angle\"\n[angle]\nwindows = 8\n\
+             [traffic]\nrequests = 10",
+        )
+        .unwrap()
+        .validate()
+        .unwrap_err();
+        assert!(err.contains("[angle]"), "{err}");
+        let legacy = ScenarioSpec::from_toml(
+            "[topology]\nsites = 2\nracks_per_site = 1\nnodes_per_rack = 2\n\
+             [workload]\nkind = \"angle\"\n[traffic]\nrequests = 10",
+        )
+        .unwrap();
+        legacy.validate().unwrap();
+    }
+
+    #[test]
+    fn angle_spec_validates_shape() {
+        let mut a = AngleSpec::default();
+        a.validate(4).unwrap();
+        a.windows = 3;
+        assert!(a.validate(4).unwrap_err().contains("windows"));
+        let mut a = AngleSpec { k: 1, ..AngleSpec::default() };
+        assert!(a.validate(4).unwrap_err().contains("k must be"));
+        a.k = 60;
+        a.sources_per_sensor = 10;
+        a.anomalies.clear();
+        assert!(a.validate(1).unwrap_err().contains("clusters"));
+        let a = AngleSpec {
+            anomalies: vec![AnomalySpec { window: 99, source: 0, regime: Regime::Scan }],
+            ..AngleSpec::default()
+        };
+        assert!(a.validate(4).unwrap_err().contains("anomaly window"));
+        let a = AngleSpec {
+            anomalies: vec![AnomalySpec { window: 4, source: 99, regime: Regime::Scan }],
+            ..AngleSpec::default()
+        };
+        assert!(a.validate(4).unwrap_err().contains("anomaly source"));
+    }
+
+    #[test]
+    fn angle_presets_validate() {
+        let wan4 = ScenarioSpec::angle_wan4();
+        wan4.validate().unwrap();
+        assert_eq!(wan4.topology.sites.len(), 4, "the paper's four sensor sites");
+        assert!(wan4.faults.is_empty(), "the recall gate runs fault-free");
+        let a = wan4.angle.as_ref().expect("angle block present");
+        assert!(
+            a.anomalies.iter().any(|an| an.regime == Regime::Scan)
+                && a.anomalies.iter().any(|an| an.regime == Regime::Exfil),
+            "both §7.1 regime shifts are planted"
+        );
+        let s128 = ScenarioSpec::angle_scale128();
+        s128.validate().unwrap();
+        assert_eq!(s128.topology.nodes(), 128);
+        assert_eq!(s128.faults.len(), 3, "full fault plan");
+        let a = s128.angle.as_ref().unwrap();
+        assert_eq!(a.files, 300_000, "Table 3's file count");
+        // The straggler must host a window so speculation is exercised:
+        // 128 alive / 16 windows = spread 8 -> homes 0, 8, 16, ...
+        assert!(
+            s128.faults
+                .iter()
+                .any(|f| matches!(f, FaultSpec::Straggler { node: 16, .. })),
+            "node 16 is a window home"
+        );
+        let records =
+            s128.workload.as_ref().unwrap().bytes_per_node * 128.0 / 32.0;
+        assert!((records - 1.0e8).abs() < 1.0, "Table 3's 10^8 records");
     }
 }

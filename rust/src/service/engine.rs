@@ -215,6 +215,7 @@ pub fn run_traffic(spec: &ScenarioSpec, testbed: &Testbed) -> Result<ScenarioRep
         traffic: Some(traffic),
         colocation: None,
         comparison: None,
+        angle: None,
     })
 }
 

@@ -73,6 +73,115 @@ fn golden_compare_scale128() {
 }
 
 #[test]
+fn golden_angle_wan4() {
+    assert_golden(&ScenarioSpec::angle_wan4());
+}
+
+#[test]
+fn golden_angle_scale128() {
+    // Full size: the staged pipeline is event-driven end to end and the
+    // 128-node faulted run stays in debug-build seconds (the cluster
+    // stage is 16 tasks, the feature shuffle ~2k flows).
+    assert_golden(&ScenarioSpec::angle_scale128());
+}
+
+#[test]
+fn angle_recall_holds_under_the_fault_plan() {
+    // The §7.1 regime shifts (scan at window 5, exfiltration at 11)
+    // must still be detected while the crash re-homes a window, the 4x
+    // straggler's cluster task gets speculated, and the WAN brown-out
+    // squeezes the feature shuffle: faults perturb timing and
+    // placement, never the mined content (data survives on replicas).
+    let spec = ScenarioSpec::angle_scale128();
+    let r = run_scenario(&spec).unwrap();
+    let an = r.angle.as_ref().expect("angle report present");
+    assert_eq!(an.emergent_planted, vec![5, 11]);
+    assert_eq!(
+        an.recall, 1.0,
+        "planted shifts missed: found {:?}, deltas {:?}",
+        an.emergent_found, an.deltas
+    );
+    assert_eq!(r.nodes_crashed, 1, "the crash fired");
+    assert!(r.faults_injected >= 3, "all three faults counted");
+    assert!(r.reassignments > 0, "the crash re-assigned mining work");
+    assert!(
+        r.speculative_launched > 0 && r.speculative_won > 0,
+        "node 16 hosts a window: its 4x-slow cluster task must be rescued \
+         ({} launched, {} won)",
+        r.speculative_launched,
+        r.speculative_won
+    );
+    // The whole mining half ran on the substrate: five stages' worth of
+    // segments (extract 128 + cluster 16) and real cross-tier traffic.
+    assert_eq!(r.segments, 128 + 16, "extract segments + window tasks");
+    assert!(an.model_tier.wan > 0.0, "models crossed the WAN to sensor sites");
+    // And the fault-free wan4 preset detects with recall 1.0 too.
+    let clean = run_scenario(&ScenarioSpec::angle_wan4()).unwrap();
+    assert_eq!(clean.angle.as_ref().unwrap().recall, 1.0);
+    assert_eq!(clean.faults_injected, 0);
+}
+
+#[test]
+fn angle_staged_model_tracks_the_table3_oracle_at_300k_files() {
+    // `simulate_angle_clustering` stays the calibration oracle
+    // (DESIGN.md §13): at Table 3's 300,000-file / 10^8-record cell the
+    // staged pipeline's serialized mining work (per-file opens + the
+    // iteration-scaled cluster cost) must sit within the documented
+    // [0.75, 1.25] band of the oracle.
+    use sector_sphere::mining::simulate_angle_clustering;
+    let r = run_scenario(&ScenarioSpec::angle_scale128()).unwrap();
+    let an = r.angle.as_ref().expect("angle report present");
+    assert_eq!(an.files, 300_000);
+    let oracle = simulate_angle_clustering(1.0e8, 300_000.0);
+    assert!(
+        (an.oracle_secs - oracle).abs() < 1e-6 * oracle,
+        "report must embed the oracle at its own (records, files) point: \
+         {} vs {}",
+        an.oracle_secs,
+        oracle
+    );
+    let ratio = an.staged_work_secs / an.oracle_secs;
+    assert!(
+        (0.75..=1.25).contains(&ratio),
+        "staged/oracle = {ratio:.3} left the documented [0.75, 1.25] band \
+         (staged {:.0} s, oracle {:.0} s)",
+        an.staged_work_secs,
+        an.oracle_secs
+    );
+}
+
+#[test]
+fn golden_angle_toml_matches_preset_shape() {
+    for (file, preset) in [
+        ("angle_wan4.toml", ScenarioSpec::angle_wan4()),
+        ("angle_scale128.toml", ScenarioSpec::angle_scale128()),
+    ] {
+        let text = std::fs::read_to_string(format!(
+            "{}/config/scenarios/{file}",
+            env!("CARGO_MANIFEST_DIR")
+        ))
+        .expect("preset TOML readable");
+        let from_toml = ScenarioSpec::from_toml(&text).expect("preset TOML parses");
+        assert_eq!(from_toml.name, preset.name);
+        assert_eq!(from_toml.topology.nodes(), preset.topology.nodes());
+        assert_eq!(from_toml.angle, preset.angle, "{file}");
+        assert_eq!(
+            from_toml.workload.as_ref().map(|w| w.kind.name()),
+            preset.workload.as_ref().map(|w| w.kind.name()),
+        );
+        let (a, b) = (
+            from_toml.workload.as_ref().unwrap().bytes_per_node,
+            preset.workload.as_ref().unwrap().bytes_per_node,
+        );
+        assert!((a - b).abs() < 1.0, "{file}: bytes_per_node {a} vs {b}");
+        assert_eq!(from_toml.faults.len(), preset.faults.len(), "{file}");
+        for f in &preset.faults {
+            assert!(from_toml.faults.contains(f), "{file} missing fault {f:?}");
+        }
+    }
+}
+
+#[test]
 fn golden_compare_toml_matches_preset_shape() {
     // The shipped TOMLs must stay in sync with the built-in presets.
     for (file, preset) in [
