@@ -1,0 +1,197 @@
+//! Engine-core hot-path gate (DESIGN.md §14): a synthetic 128-node
+//! churn workload driven directly over the NetSim + EventQueue
+//! substrate — the inner loop every scenario engine now shares — run
+//! once with incremental component-scoped fair-share recomputation and
+//! once with the retained `set_full_recompute` baseline (the
+//! pre-optimization behavior), in the same process.  The speedup is a
+//! machine-independent ratio and must be >= 10x; the completion-order
+//! determinism hash must be identical across two incremental runs and
+//! match the committed baseline in `BENCH_engine.json` at the repo
+//! root.  Intentional recalibration: rerun with `BENCH_ENGINE_UPDATE=1`
+//! and commit the rewritten JSON.
+//!
+//!     cargo bench --bench bench_engine
+//!
+//! The workload is 32 racks x 4 nodes; each node streams a sequence of
+//! rack-local flows (next starts when the previous completes), so the
+//! allocator sees constant churn but every connected component stays
+//! rack-sized — exactly the structure the incremental path exploits,
+//! and exactly what a scenario shuffle wave looks like.  Wall-clock
+//! throughput is printed and emitted for trajectory tracking but not
+//! gated; the gate is the in-process ratio and the hash.
+
+use std::collections::BTreeMap;
+
+use sector_sphere::bench::{time_fn, BenchJson};
+use sector_sphere::routing::hash_name;
+use sector_sphere::sim::event::EventQueue;
+use sector_sphere::sim::netsim::{FlowId, LinkId, NetSim};
+use sector_sphere::util::rng::Pcg64;
+
+const RACKS: usize = 32;
+const NODES_PER_RACK: usize = 4;
+const NODES: usize = RACKS * NODES_PER_RACK;
+const FLOWS_PER_NODE: usize = 40;
+
+/// Marker a bootstrap baseline carries before the first real run.
+const UNSET: &str = "UNSET";
+
+fn baseline_path() -> std::path::PathBuf {
+    let base = std::env::var("CARGO_MANIFEST_DIR")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("."));
+    base.join("BENCH_engine.json")
+}
+
+/// Pull `"key": value` out of the flat baseline JSON without serde.
+fn field<'a>(json: &'a str, key: &str) -> Option<&'a str> {
+    let tag = format!("\"{key}\": ");
+    let start = json.find(&tag)? + tag.len();
+    let rest = &json[start..];
+    let end = rest.find(&[',', '}'][..])?;
+    Some(rest[..end].trim().trim_matches('"'))
+}
+
+struct Churn {
+    events: u64,
+    digest: String,
+}
+
+/// One full churn run: every node pushes `FLOWS_PER_NODE` rack-local
+/// flows back to back through the min(queue, network) interleave the
+/// engine core uses.  Deterministic in the fixed seed; `with_digest`
+/// records (flow id, completion time) for the determinism hash.
+fn churn(full: bool, with_digest: bool) -> Churn {
+    let mut net = NetSim::with_capacity(2 * NODES + RACKS);
+    net.set_full_recompute(full);
+    let up: Vec<LinkId> = (0..NODES).map(|_| net.add_link(1e9)).collect();
+    let down: Vec<LinkId> = (0..NODES).map(|_| net.add_link(1e9)).collect();
+    let rack: Vec<LinkId> = (0..RACKS).map(|_| net.add_link(10e9)).collect();
+    let mut rng = Pcg64::new(0xE27_61B5);
+    let mut q: EventQueue<usize> = EventQueue::with_capacity(NODES + 8);
+    for src in 0..NODES {
+        q.push_at(rng.gen_range_f64(0.0, 1e-3), src);
+    }
+    let mut left = vec![FLOWS_PER_NODE; NODES];
+    let mut by_flow: BTreeMap<FlowId, usize> = BTreeMap::new();
+    let mut events: u64 = 0;
+    let mut digest = String::new();
+    let mut batch: Vec<usize> = Vec::new();
+    loop {
+        let tq = q.peek_time();
+        let tn = net.next_completion().map(|(t, _)| t);
+        let next = match (tq, tn) {
+            (None, None) => break,
+            (Some(a), None) => a,
+            (None, Some(b)) => b,
+            (Some(a), Some(b)) => a.min(b),
+        };
+        for fid in net.advance_to(next) {
+            events += 1;
+            let src = by_flow.remove(&fid).expect("tracked flow");
+            if with_digest {
+                digest.push_str(&format!("{}:{next:.6};", fid.0));
+            }
+            if left[src] > 0 {
+                q.push_at(next, src);
+            }
+        }
+        if q.peek_time() == Some(next) {
+            batch.clear();
+            q.pop_simultaneous(&mut batch);
+            for src in batch.drain(..) {
+                events += 1;
+                if left[src] == 0 {
+                    continue;
+                }
+                left[src] -= 1;
+                let r = src / NODES_PER_RACK;
+                let dst = r * NODES_PER_RACK + rng.gen_range(NODES_PER_RACK as u64) as usize;
+                let path = [up[src], rack[r], down[dst]];
+                let fid = net.start_flow(
+                    &path,
+                    rng.gen_range_f64(1e6, 64e6),
+                    rng.gen_range_f64(0.2e9, 2.0e9),
+                );
+                by_flow.insert(fid, src);
+            }
+        }
+    }
+    assert_eq!(net.active_flows(), 0, "churn drained");
+    Churn { events, digest }
+}
+
+fn main() {
+    // Determinism: two incremental runs, identical completion digests.
+    let a = churn(false, true);
+    let b = churn(false, true);
+    assert_eq!(a.digest, b.digest, "completion order must replay exactly");
+    let hash = format!("{:016x}", hash_name(&a.digest));
+    let events = a.events;
+    assert_eq!(
+        events,
+        (NODES * FLOWS_PER_NODE * 2) as u64,
+        "every start and every completion counted once"
+    );
+
+    // Throughput: incremental vs the retained full-recompute baseline.
+    let t_inc = time_fn("engine_incremental", 1, 3, || churn(false, false).events);
+    let t_full = time_fn("engine_full_recompute", 1, 2, || churn(true, false).events);
+    let inc_eps = events as f64 / t_inc.secs.mean;
+    let full_eps = events as f64 / t_full.secs.mean;
+    let speedup = inc_eps / full_eps;
+    println!(
+        "engine churn ({NODES} nodes, {events} events): incremental {:.0} ev/s, \
+         full-recompute {:.0} ev/s -> {speedup:.1}x",
+        inc_eps, full_eps
+    );
+    assert!(
+        speedup >= 10.0,
+        "incremental fair-share recomputation must beat the pre-refactor \
+         full recompute by >= 10x on the rack-component churn workload \
+         (got {speedup:.1}x)"
+    );
+
+    let mut json = BenchJson::new("engine");
+    json.text("bench", "engine")
+        .int("nodes", NODES as u64)
+        .int("events", events)
+        .num("incremental_events_per_sec", inc_eps)
+        .num("full_recompute_events_per_sec", full_eps)
+        .num("speedup_vs_full_recompute", speedup)
+        .text("determinism_hash", &hash);
+
+    // ---- regression gate against the committed baseline ----
+    // Read the committed file BEFORE overwriting it, and write the new
+    // numbers BEFORE any drift panic, so the CI artifact carries the
+    // new values even when the gate trips.
+    let committed = std::fs::read_to_string(baseline_path());
+    match json.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("BENCH_engine.json not written: {e}"),
+    }
+    let update = std::env::var("BENCH_ENGINE_UPDATE").is_ok();
+    match committed {
+        Ok(committed) => {
+            let base_hash = field(&committed, "determinism_hash").unwrap_or(UNSET);
+            if base_hash == UNSET {
+                println!(
+                    "baseline is a bootstrap placeholder: commit the rewritten \
+                     BENCH_engine.json to arm the drift gate"
+                );
+            } else if update {
+                println!("BENCH_ENGINE_UPDATE set: accepting new baseline {hash}");
+            } else if base_hash != hash {
+                eprintln!("DRIFT: determinism hash {base_hash} -> {hash}");
+                panic!(
+                    "bench_engine drifted from the committed baseline — if \
+                     intentional, rerun with BENCH_ENGINE_UPDATE=1 and commit \
+                     the rewritten BENCH_engine.json"
+                );
+            } else {
+                println!("baseline check: determinism hash matches");
+            }
+        }
+        Err(_) => println!("no committed baseline found; wrote a fresh one"),
+    }
+}

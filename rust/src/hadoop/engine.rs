@@ -53,13 +53,12 @@
 //! through the HDFS client pipeline.  Deterministic end to end: the
 //! spec is the only input.
 
-use std::collections::{BTreeMap, HashSet};
+use std::collections::BTreeMap;
 
 use crate::config::SimConfig;
-use crate::scenario::engine::{
-    handle_degrade_end, handle_degrade_start, pick_dst_in, FaultState, TierBytes,
-};
-use crate::scenario::{FaultSpec, ScenarioSpec, WorkloadKind};
+use crate::scenario::core::{self, CoreEv, FaultEv, Harness, SpecCand, Speculation};
+use crate::scenario::engine::{pick_dst_in, FaultState, TierBytes};
+use crate::scenario::{ScenarioSpec, WorkloadKind};
 use crate::sim::event::EventQueue;
 use crate::sim::netsim::{FlowId, LinkId, NetSim};
 use crate::sphere::scheduler::Scheduler;
@@ -115,9 +114,21 @@ enum HEv {
     TaskStart { gen: u64 },
     /// Re-scan in-flight attempts for speculation candidates.
     SpecCheck,
-    Crash { fault: usize },
-    DegradeStart { fault: usize },
-    DegradeEnd { fault: usize },
+    /// The fault plan's shared events (intercepted by the core).
+    Fault(FaultEv),
+}
+
+impl CoreEv for HEv {
+    fn from_fault(f: FaultEv) -> HEv {
+        HEv::Fault(f)
+    }
+
+    fn to_fault(&self) -> Option<FaultEv> {
+        match self {
+            HEv::Fault(f) => Some(*f),
+            _ => None,
+        }
+    }
 }
 
 #[derive(Clone, Copy)]
@@ -195,10 +206,8 @@ struct HadoopEngine<'a> {
     tcp_bulk: TcpModel,
     sched: Scheduler,
     inflight: BTreeMap<u64, Attempt>,
-    /// Live attempt gens per task id (speculation bookkeeping).
-    by_seg: BTreeMap<usize, Vec<u64>>,
-    /// Tasks that already got their one backup this phase.
-    speculated: HashSet<usize>,
+    /// Sibling-attempt bookkeeping (core-owned; engine keeps policy).
+    spec: Speculation,
     /// Maps awaiting re-execution after output loss.
     rerun_queue: Vec<Segment>,
     dur_sum: f64,
@@ -207,7 +216,6 @@ struct HadoopEngine<'a> {
     running: Vec<usize>,
     flows: BTreeMap<FlowId, HFlow>,
     speculative_enabled: bool,
-    spec_check_at: Option<f64>,
     // ---- counters
     tasks_completed: usize,
     reduce_tasks: usize,
@@ -298,7 +306,7 @@ pub fn run_hadoop(spec: &ScenarioSpec, testbed: &Testbed) -> Result<HadoopRun, S
         bytes_per_node: workload.bytes_per_node,
         block_bytes,
         placement,
-        links,
+        links: links.clone(),
         disk_read,
         disk_write,
         scan_link,
@@ -311,8 +319,7 @@ pub fn run_hadoop(spec: &ScenarioSpec, testbed: &Testbed) -> Result<HadoopRun, S
         tcp_bulk: TcpModel::default(),
         sched,
         inflight: BTreeMap::new(),
-        by_seg: BTreeMap::new(),
-        speculated: HashSet::new(),
+        spec: Speculation::new(),
         rerun_queue: Vec::new(),
         dur_sum: 0.0,
         dur_n: 0,
@@ -323,7 +330,6 @@ pub fn run_hadoop(spec: &ScenarioSpec, testbed: &Testbed) -> Result<HadoopRun, S
             Some(c) => c.hadoop_speculative,
             None => true,
         },
-        spec_check_at: None,
         tasks_completed: 0,
         reduce_tasks: 0,
         reassignments: 0,
@@ -343,79 +349,18 @@ pub fn run_hadoop(spec: &ScenarioSpec, testbed: &Testbed) -> Result<HadoopRun, S
 
     let mut q: EventQueue<HEv> =
         EventQueue::with_capacity(n * h.map_slots.max(1) + 2 * state.faults.len() + 8);
-    schedule_faults(&state, &mut q);
+    core::schedule_faults(&mut state, &mut q, 0.0);
     eng.pump(0.0, &mut q, &state);
 
-    let mut events: u64 = 0;
-    let mut batch: Vec<HEv> = Vec::new();
-    loop {
-        if eng.done {
-            break;
-        }
-        let tq = q.peek_time();
-        let tn = net.next_completion().map(|(t, _)| t);
-        let next = match (tq, tn) {
-            (None, None) => break,
-            (Some(a), None) => a,
-            (None, Some(b)) => b,
-            (Some(a), Some(b)) => a.min(b),
-        };
-        let now = next;
-        for fid in net.advance_to(next) {
-            events += 1;
-            eng.flow_done(fid, now, &mut net, &mut q, &state);
-        }
-        if q.peek_time() == Some(next) {
-            batch.clear();
-            q.pop_simultaneous(&mut batch);
-            for ev in batch.drain(..) {
-                events += 1;
-                match ev {
-                    HEv::TaskStart { gen } => eng.start_task_flow(gen, &mut net, &state)?,
-                    HEv::SpecCheck => {
-                        eng.spec_check_at = None;
-                        eng.maybe_speculate(now, &mut q, &state);
-                    }
-                    HEv::Crash { fault } => {
-                        state.consumed[fault] = true;
-                        if let FaultSpec::SlaveCrash { node, .. } = state.faults[fault] {
-                            if !state.dead[node] {
-                                state.crash(node);
-                                eng.on_crash(node, now, &mut net, &mut q, &state)?;
-                            }
-                        }
-                    }
-                    HEv::DegradeStart { fault } => handle_degrade_start(
-                        &mut state,
-                        &mut net,
-                        &eng.links,
-                        testbed,
-                        fault,
-                        now,
-                    ),
-                    HEv::DegradeEnd { fault } => handle_degrade_end(
-                        &mut state,
-                        &mut net,
-                        &eng.links,
-                        testbed,
-                        fault,
-                        now,
-                    ),
-                }
-            }
-        }
-        if eng.phase_idle() {
-            eng.finish_phase(now, &mut q, &state)?;
-        }
-    }
-    if !eng.done {
-        return Err("hadoop engine stalled with work pending".into());
-    }
+    let out = {
+        let mut har = HadoopHarness { eng: &mut eng };
+        core::drive(&mut har, &mut net, &mut q, &mut state, &links, testbed)?
+    };
 
     Ok(HadoopRun {
         makespan_secs: eng.makespan,
         stage_ends: eng.stage_ends,
-        events,
+        events: out.events,
         map_tasks: eng.placement.blocks(),
         reduce_tasks: eng.reduce_tasks,
         tasks_completed: eng.tasks_completed,
@@ -471,28 +416,79 @@ fn block_segments(placement: &Placement, block_bytes: f64, state: &FaultState) -
         .collect()
 }
 
-fn schedule_faults(state: &FaultState, q: &mut EventQueue<HEv>) {
-    for (i, f) in state.faults.iter().enumerate() {
-        if state.consumed[i] {
-            continue;
-        }
-        match *f {
-            FaultSpec::SlaveCrash { at_secs, .. } => {
-                q.push_at(at_secs.max(0.0), HEv::Crash { fault: i });
+/// The Hadoop engine plugged into the shared core loop: the exit test
+/// is the phase machine alone (every flow the barrier waits on is in
+/// `phase_idle`), a stall with work pending is an error, and the
+/// post-wave hook releases phase barriers.
+struct HadoopHarness<'e, 'a> {
+    eng: &'e mut HadoopEngine<'a>,
+}
+
+impl<'e, 'a> Harness for HadoopHarness<'e, 'a> {
+    type Ev = HEv;
+
+    fn finished(&self, _net: &NetSim) -> bool {
+        self.eng.done
+    }
+
+    fn on_stall(&mut self) -> Result<(), String> {
+        Err("hadoop engine stalled with work pending".into())
+    }
+
+    fn flow_done(
+        &mut self,
+        fid: FlowId,
+        now: f64,
+        net: &mut NetSim,
+        q: &mut EventQueue<HEv>,
+        state: &mut FaultState,
+    ) -> Result<(), String> {
+        self.eng.flow_done(fid, now, net, q, state);
+        Ok(())
+    }
+
+    fn handle(
+        &mut self,
+        ev: HEv,
+        now: f64,
+        net: &mut NetSim,
+        q: &mut EventQueue<HEv>,
+        state: &mut FaultState,
+    ) -> Result<(), String> {
+        match ev {
+            HEv::TaskStart { gen } => self.eng.start_task_flow(gen, net, state),
+            HEv::SpecCheck => {
+                self.eng.spec.recheck_fired();
+                self.eng.maybe_speculate(now, q, state);
+                Ok(())
             }
-            FaultSpec::LinkDegrade {
-                at_secs,
-                duration_secs,
-                ..
-            } => {
-                q.push_at(at_secs.max(0.0), HEv::DegradeStart { fault: i });
-                let end = at_secs + duration_secs;
-                if end.is_finite() {
-                    q.push_at(end.max(0.0), HEv::DegradeEnd { fault: i });
-                }
-            }
-            FaultSpec::Straggler { .. } => {}
+            HEv::Fault(_) => Ok(()), // intercepted by the core
         }
+    }
+
+    fn on_crash(
+        &mut self,
+        node: usize,
+        now: f64,
+        net: &mut NetSim,
+        q: &mut EventQueue<HEv>,
+        state: &mut FaultState,
+    ) -> Result<(), String> {
+        self.eng.on_crash(node, now, net, q, state)
+    }
+
+    fn after_wave(
+        &mut self,
+        now: f64,
+        _drained: bool,
+        _net: &mut NetSim,
+        q: &mut EventQueue<HEv>,
+        state: &mut FaultState,
+    ) -> Result<(), String> {
+        if self.eng.phase_idle() {
+            self.eng.finish_phase(now, q, state)?;
+        }
+        Ok(())
     }
 }
 
@@ -590,7 +586,7 @@ impl<'a> HadoopEngine<'a> {
         self.next_gen += 1;
         let gen = self.next_gen;
         if !rerun {
-            self.by_seg.entry(seg.id).or_default().push(gen);
+            self.spec.register(seg.id, gen);
         }
         self.inflight.insert(
             gen,
@@ -718,12 +714,7 @@ impl<'a> HadoopEngine<'a> {
         }
         let first = self.sched.complete(&att.seg);
         // First-finisher-wins: cancel the speculation sibling.
-        let losers: Vec<u64> = self
-            .by_seg
-            .remove(&att.seg.id)
-            .map(|gens| gens.into_iter().filter(|&g| g != gen).collect())
-            .unwrap_or_default();
-        for g in losers {
+        for g in self.spec.take_losers(att.seg.id, gen) {
             if let Some(loser) = self.inflight.remove(&g) {
                 self.running[loser.node] -= 1;
                 if let Some(lfid) = loser.fid {
@@ -826,38 +817,25 @@ impl<'a> HadoopEngine<'a> {
             return;
         }
         let cutoff = SPEC_SLOWDOWN * mean;
-        let mut launch: Vec<u64> = Vec::new();
-        let mut earliest_cross: Option<f64> = None;
-        for (&gen, att) in &self.inflight {
-            if att.speculative
-                || att.rerun
-                || self.speculated.contains(&att.seg.id)
-                || self.by_seg.get(&att.seg.id).map_or(0, Vec::len) > 1
-                || !self.sched.speculatable(att.seg.id)
-            {
-                continue;
-            }
-            if now - att.started >= cutoff {
-                launch.push(gen);
-            } else {
-                let t = att.started + cutoff;
-                earliest_cross = Some(earliest_cross.map_or(t, |e: f64| e.min(t)));
-            }
-        }
+        // Re-executions and scheduler-retired tasks never speculate;
+        // the core scan skips siblinged/latched/backup attempts.
+        let (launch, cross) = self.spec.scan(
+            now,
+            cutoff,
+            self.inflight
+                .iter()
+                .filter(|(_, att)| !att.rerun && self.sched.speculatable(att.seg.id))
+                .map(|(&gen, att)| SpecCand {
+                    gen,
+                    unit: att.seg.id,
+                    started: att.started,
+                    speculative: att.speculative,
+                }),
+        );
         for gen in launch {
             self.launch_backup(gen, now, q, state);
         }
-        if let Some(t) = earliest_cross {
-            let t = t.max(now);
-            let stale = match self.spec_check_at {
-                None => true,
-                Some(at) => at <= now || t < at,
-            };
-            if stale {
-                self.spec_check_at = Some(t);
-                q.push_at(t, HEv::SpecCheck);
-            }
-        }
+        self.spec.schedule_recheck(cross, now, q, || HEv::SpecCheck);
     }
 
     /// Dispatch a backup attempt to another live node with a free slot
@@ -885,7 +863,7 @@ impl<'a> HadoopEngine<'a> {
         if !self.sched.speculate(&seg, backup as u32) {
             return;
         }
-        self.speculated.insert(seg.id);
+        self.spec.mark_speculated(seg.id);
         self.launch(backup, seg, true, false, now, q);
     }
 
@@ -918,15 +896,10 @@ impl<'a> HadoopEngine<'a> {
                 self.reassignments += 1;
                 continue;
             }
-            let siblings = {
-                let v = self.by_seg.entry(att.seg.id).or_default();
-                v.retain(|&x| x != g);
-                v.len()
-            };
+            let siblings = self.spec.drop_attempt(att.seg.id, g);
             if siblings > 0 {
                 self.sched.cancel_attempt(&att.seg);
             } else {
-                self.by_seg.remove(&att.seg.id);
                 let id = att.seg.id;
                 if !self.sched.fail(att.seg) {
                     return Err(format!(
@@ -1047,7 +1020,7 @@ impl<'a> HadoopEngine<'a> {
     fn block_needed(&self, block: usize) -> bool {
         self.phase().reads_blocks()
             && (self.sched.pending_ids().contains(&block)
-                || self.by_seg.contains_key(&block)
+                || self.spec.attempts(block) > 0
                 || self.rerun_queue.iter().any(|s| s.id == block))
     }
 
@@ -1139,11 +1112,9 @@ impl<'a> HadoopEngine<'a> {
         let mut sched = Scheduler::new(segments, true);
         sched.max_attempts = self.sched.max_attempts;
         self.sched = sched;
-        self.by_seg.clear();
-        self.speculated.clear();
+        self.spec.clear_stage();
         self.dur_sum = 0.0;
         self.dur_n = 0;
-        self.spec_check_at = None;
         self.pump(now, q, state);
         Ok(())
     }

@@ -43,7 +43,7 @@
 //! cost model is calibrated against the retained Table 3 oracle
 //! (`staged_work_secs` vs `oracle_secs`; DESIGN.md §13).
 
-use std::collections::{BTreeMap, HashSet};
+use std::collections::BTreeMap;
 
 use crate::config::SimConfig;
 use crate::mining::angle::{simulate_angle_clustering, PER_FILE_SECS, PER_RECORD_SECS};
@@ -59,12 +59,12 @@ use crate::sphere::segment::Segment;
 use crate::topology::{NetLinks, Testbed};
 use crate::transport::TransportModels;
 
+use super::core::{self, CoreEv, FaultEv, Harness, Speculation};
 use super::engine::{
-    build_stage_segments, coordination_secs, handle_degrade_end, handle_degrade_start,
-    live_owner as walk_live_owner, replica_of, shuffle_rate_cap, Aggregate, BatchOutcome,
-    FaultState, StageKind, TierBytes,
+    build_stage_segments, coordination_secs, live_owner as walk_live_owner, replica_of,
+    shuffle_rate_cap, Aggregate, BatchOutcome, FaultState, StageKind, TierBytes,
 };
-use super::{AngleSpec, FaultSpec, ScenarioSpec};
+use super::{AngleSpec, ScenarioSpec};
 
 /// k-means iteration budget `analyze_windows` runs with; the oracle's
 /// per-record constant prices a fully-spent budget, so the staged
@@ -176,8 +176,9 @@ pub(crate) fn run_angle(spec: &ScenarioSpec, testbed: &Testbed) -> Result<BatchO
 
     let n = testbed.nodes();
     let mut state = FaultState::new(&spec.faults, n);
-    let mut run = AngleRun::new(testbed, &spec.cfg, a, workload.bytes_per_node, &mined, &mut state)?;
-    run.execute()?;
+    let (mut run, mut net, mut q) =
+        AngleRun::new(testbed, &spec.cfg, a, workload.bytes_per_node, &mined, &state)?;
+    run.execute(&mut net, &mut q, &mut state)?;
 
     let files = run.files;
     let records = workload.bytes_per_node * n as f64 / PACKET_BYTES as f64;
@@ -223,9 +224,21 @@ enum AEv {
     Open { window: usize, gen: u64 },
     /// A site representative finished scoring its share.
     Scored { site: usize, gen: u64 },
-    Crash { fault: usize },
-    DegradeStart { fault: usize },
-    DegradeEnd { fault: usize },
+    /// The fault plan's shared events (intercepted by the core).
+    Fault(FaultEv),
+}
+
+impl CoreEv for AEv {
+    fn from_fault(f: FaultEv) -> AEv {
+        AEv::Fault(f)
+    }
+
+    fn to_fault(&self) -> Option<FaultEv> {
+        match self {
+            AEv::Fault(f) => Some(*f),
+            _ => None,
+        }
+    }
 }
 
 enum AFlow {
@@ -248,23 +261,20 @@ struct AngleRun<'a> {
     testbed: &'a Testbed,
     cfg: &'a SimConfig,
     a: &'a AngleSpec,
-    state: &'a mut FaultState,
     bytes_per_node: f64,
     models: TransportModels,
-    net: NetSim,
     links: NetLinks,
     disk_read: Vec<LinkId>,
     disk_write: Vec<LinkId>,
     nominal_caps: Vec<f64>,
-    q: EventQueue<AEv>,
     flows: BTreeMap<FlowId, AFlow>,
     stage: Stage,
     coord_secs: f64,
     // scheduler-driven stages (extract, cluster)
     sched: Scheduler,
     inflight: BTreeMap<u64, Attempt>,
-    by_seg: BTreeMap<usize, Vec<u64>>,
-    speculated: HashSet<usize>,
+    /// Sibling-attempt bookkeeping (core-owned; engine keeps policy).
+    spec: Speculation,
     next_gen: u64,
     running: Vec<usize>,
     // ingest
@@ -306,8 +316,8 @@ impl<'a> AngleRun<'a> {
         a: &'a AngleSpec,
         bytes_per_node: f64,
         mined: &Mined,
-        state: &'a mut FaultState,
-    ) -> Result<AngleRun<'a>, String> {
+        state: &FaultState,
+    ) -> Result<(AngleRun<'a>, NetSim, EventQueue<AEv>), String> {
         let n = testbed.nodes();
         let w = a.windows;
         let n_links = 4 * n + 2 * testbed.racks() + 2 * testbed.site_names.len();
@@ -354,26 +364,23 @@ impl<'a> AngleRun<'a> {
             .map(|&f| f as f64 * PER_FILE_SECS)
             .sum::<f64>()
             + win_secs.iter().sum::<f64>();
-        Ok(AngleRun {
+        let q: EventQueue<AEv> = EventQueue::with_capacity(2 * n + 4 * w + 16);
+        let run = AngleRun {
             testbed,
             cfg,
             a,
-            state,
             bytes_per_node,
             models: TransportModels::default(),
-            net,
             links,
             disk_read,
             disk_write,
             nominal_caps,
-            q: EventQueue::with_capacity(2 * n + 4 * w + 16),
             flows: BTreeMap::new(),
             stage: Stage::Ingest,
             coord_secs: coordination_secs(testbed),
             sched: Scheduler::new(Vec::new(), cfg.sphere.locality_scheduling),
             inflight: BTreeMap::new(),
-            by_seg: BTreeMap::new(),
-            speculated: HashSet::new(),
+            spec: Speculation::new(),
             next_gen: 0,
             running: vec![0; n],
             ingest_pending: 0,
@@ -398,51 +405,24 @@ impl<'a> AngleRun<'a> {
             staged_work,
             agg: Aggregate::default(),
             makespan: 0.0,
-        })
+        };
+        Ok((run, net, q))
     }
 
     fn spes(&self) -> usize {
         self.cfg.sphere.spes_per_node.max(1)
     }
 
-    /// Schedule the full fault plan (the run owns the whole timeline,
-    /// unlike the per-stage batch engine).
-    fn schedule_faults(&mut self) {
-        for (i, f) in self.state.faults.clone().into_iter().enumerate() {
-            if self.state.consumed[i] {
-                continue;
-            }
-            match f {
-                FaultSpec::SlaveCrash { at_secs, .. } => {
-                    self.q.push_at(at_secs.max(0.0), AEv::Crash { fault: i });
-                }
-                FaultSpec::LinkDegrade {
-                    at_secs,
-                    duration_secs,
-                    ..
-                } => {
-                    self.q
-                        .push_at(at_secs.max(0.0), AEv::DegradeStart { fault: i });
-                    let end = at_secs + duration_secs;
-                    if end.is_finite() {
-                        self.q.push_at(end, AEv::DegradeEnd { fault: i });
-                    }
-                }
-                FaultSpec::Straggler { .. } => {}
-            }
-        }
-    }
-
     /// Walk a node's replica chain to a live owner (the shared
     /// `engine::live_owner`, bound to this run's fault state).
-    fn live_owner(&self, home: usize) -> Result<usize, String> {
-        walk_live_owner(self.testbed, self.state, home)
+    fn live_owner(&self, state: &FaultState, home: usize) -> Result<usize, String> {
+        walk_live_owner(self.testbed, state, home)
     }
 
     /// First live node of a site, if any.
-    fn site_head(&self, site: usize) -> Option<usize> {
+    fn site_head(&self, state: &FaultState, site: usize) -> Option<usize> {
         (0..self.testbed.nodes())
-            .find(|&nd| self.testbed.node_site[nd] == site && !self.state.dead[nd])
+            .find(|&nd| self.testbed.node_site[nd] == site && !state.dead[nd])
     }
 
     /// Wire size of one window's fitted cluster model: k centers of
@@ -468,13 +448,13 @@ impl<'a> AngleRun<'a> {
 
     /// Every node's pcap share streams from its site's sensor head
     /// through the network into the node's disk-write link.
-    fn start_ingest(&mut self) -> Result<(), String> {
+    fn start_ingest(&mut self, net: &mut NetSim, state: &FaultState) -> Result<(), String> {
         for home in 0..self.testbed.nodes() {
-            let owner = self.live_owner(home)?;
+            let owner = self.live_owner(state, home)?;
             let head = self
-                .site_head(self.testbed.node_site[owner])
+                .site_head(state, self.testbed.node_site[owner])
                 .expect("owner is alive, so its site has a live node");
-            self.start_ingest_flow(head, owner, self.bytes_per_node);
+            self.start_ingest_flow(head, owner, self.bytes_per_node, net);
             self.agg
                 .tier
                 .add(self.testbed, head, owner, self.bytes_per_node);
@@ -482,7 +462,7 @@ impl<'a> AngleRun<'a> {
         Ok(())
     }
 
-    fn start_ingest_flow(&mut self, head: usize, dst: usize, bytes: f64) {
+    fn start_ingest_flow(&mut self, head: usize, dst: usize, bytes: f64, net: &mut NetSim) {
         let mut path = if head == dst {
             Vec::with_capacity(1)
         } else {
@@ -493,31 +473,36 @@ impl<'a> AngleRun<'a> {
         // destination spindle (straggler factor baked into its link)
         // and the transport cap bound it.
         let cap = self.transfer_cap(&path, head, dst, 1.0);
-        let fid = self.net.start_flow(&path, bytes.max(1.0), cap.max(1.0));
+        let fid = net.start_flow(&path, bytes.max(1.0), cap.max(1.0));
         self.flows.insert(fid, AFlow::Ingest { dst });
         self.ingest_pending += 1;
     }
 
     // -------------------------------------------------- stage 2: extract
 
-    fn start_extract(&mut self, now: f64) -> Result<(), String> {
+    fn start_extract(
+        &mut self,
+        now: f64,
+        q: &mut EventQueue<AEv>,
+        state: &FaultState,
+    ) -> Result<(), String> {
         let segments = build_stage_segments(
             self.testbed,
             self.cfg,
-            self.state,
+            state,
             self.bytes_per_node,
             self.spes(),
         )?;
         self.sched = Scheduler::new(segments, self.cfg.sphere.locality_scheduling);
         self.sched.max_attempts = self.cfg.sphere.max_attempts;
-        self.pump_extract(now);
+        self.pump_extract(now, q, state);
         Ok(())
     }
 
-    fn pump_extract(&mut self, now: f64) {
+    fn pump_extract(&mut self, now: f64, q: &mut EventQueue<AEv>, state: &FaultState) {
         let spes = self.spes();
         for node in 0..self.testbed.nodes() {
-            if self.state.dead[node] {
+            if state.dead[node] {
                 continue;
             }
             while self.running[node] < spes {
@@ -525,7 +510,7 @@ impl<'a> AngleRun<'a> {
                     break;
                 };
                 let secs = StageKind::AngleExtract.service_secs(self.cfg, seg.bytes as f64)
-                    / self.state.factor[node]
+                    / state.factor[node]
                     + self.coord_secs;
                 self.next_gen += 1;
                 self.inflight.insert(
@@ -537,7 +522,7 @@ impl<'a> AngleRun<'a> {
                     },
                 );
                 self.running[node] += 1;
-                self.q.push_at(now + secs, AEv::Seg { gen: self.next_gen });
+                q.push_at(now + secs, AEv::Seg { gen: self.next_gen });
             }
         }
     }
@@ -546,8 +531,14 @@ impl<'a> AngleRun<'a> {
 
     /// Pick window homes among the live nodes (spread across racks) and
     /// start every node's per-window feature flow.
-    fn start_aggregate(&mut self, now: f64) {
-        let alive = self.state.alive().to_vec();
+    fn start_aggregate(
+        &mut self,
+        now: f64,
+        net: &mut NetSim,
+        q: &mut EventQueue<AEv>,
+        state: &FaultState,
+    ) {
+        let alive = state.alive().to_vec();
         let w_count = self.a.windows;
         let spread = (alive.len() / w_count).max(1);
         for w in 0..w_count {
@@ -559,23 +550,30 @@ impl<'a> AngleRun<'a> {
                 if src == home {
                     continue;
                 }
-                self.start_feature_flow(src, w, share);
+                self.start_feature_flow(src, w, share, net, state);
                 self.agg.shuffle_bytes += share;
             }
             if self.win_inbound[w] == 0 {
-                self.schedule_open(w, now);
+                self.schedule_open(w, now, q);
             }
         }
     }
 
-    fn start_feature_flow(&mut self, src: usize, window: usize, bytes: f64) {
+    fn start_feature_flow(
+        &mut self,
+        src: usize,
+        window: usize,
+        bytes: f64,
+        net: &mut NetSim,
+        state: &FaultState,
+    ) {
         let home = self.win_home[window];
         let mut path = Vec::with_capacity(8);
         path.push(self.disk_read[src]);
         path.extend(self.testbed.path(&self.links, src, home));
         path.push(self.disk_write[home]);
-        let cap = self.transfer_cap(&path, src, home, self.state.factor[src]);
-        let fid = self.net.start_flow(&path, bytes.max(1.0), cap.max(1.0));
+        let cap = self.transfer_cap(&path, src, home, state.factor[src]);
+        let fid = net.start_flow(&path, bytes.max(1.0), cap.max(1.0));
         self.flows.insert(fid, AFlow::Feature { src, window });
         self.win_inbound[window] += 1;
     }
@@ -587,11 +585,11 @@ impl<'a> AngleRun<'a> {
     /// dominated, and no speculation exists for opens — a 4x-scaled
     /// open on one slow home would stall the whole aggregate barrier
     /// (DESIGN.md §13).
-    fn schedule_open(&mut self, window: usize, now: f64) {
+    fn schedule_open(&mut self, window: usize, now: f64, q: &mut EventQueue<AEv>) {
         let secs = self.win_files[window] as f64 * PER_FILE_SECS;
         self.next_gen += 1;
         self.open_gen[window] = Some(self.next_gen);
-        self.q.push_at(
+        q.push_at(
             now + secs,
             AEv::Open {
                 window,
@@ -602,14 +600,19 @@ impl<'a> AngleRun<'a> {
 
     // -------------------------------------------------- stage 4: cluster
 
-    fn start_cluster(&mut self, now: f64) -> Result<(), String> {
+    fn start_cluster(
+        &mut self,
+        now: f64,
+        q: &mut EventQueue<AEv>,
+        state: &FaultState,
+    ) -> Result<(), String> {
         let mut segments = Vec::with_capacity(self.a.windows);
         for w in 0..self.a.windows {
             let home = self.win_home[w];
             let replica = replica_of(self.testbed, home);
             let mut locations: Vec<u32> = [home, replica]
                 .into_iter()
-                .filter(|&x| !self.state.dead[x])
+                .filter(|&x| !state.dead[x])
                 .map(|x| x as u32)
                 .collect();
             locations.dedup();
@@ -626,23 +629,28 @@ impl<'a> AngleRun<'a> {
         }
         self.sched = Scheduler::new(segments, self.cfg.sphere.locality_scheduling);
         self.sched.max_attempts = self.cfg.sphere.max_attempts;
-        self.pump_cluster(now)
+        self.pump_cluster(now, q, state)
     }
 
     /// Cluster tasks run where their window's feature file lives
     /// (`assign_filtered(_, true)` — the delay-scheduling knob), so a
     /// 128-node cloud does not steal 16 window tasks onto random nodes.
-    fn pump_cluster(&mut self, now: f64) -> Result<(), String> {
+    fn pump_cluster(
+        &mut self,
+        now: f64,
+        q: &mut EventQueue<AEv>,
+        state: &FaultState,
+    ) -> Result<(), String> {
         let spes = self.spes();
         for node in 0..self.testbed.nodes() {
-            if self.state.dead[node] {
+            if state.dead[node] {
                 continue;
             }
             while self.running[node] < spes {
                 let Some(seg) = self.sched.assign_filtered(node as u32, true) else {
                     break;
                 };
-                self.dispatch_cluster(seg, node, false, now);
+                self.dispatch_cluster(seg, node, false, now, q, state);
             }
         }
         // A pending window whose whole replica set is dead can never be
@@ -652,7 +660,7 @@ impl<'a> AngleRun<'a> {
         let mut pending: Vec<usize> = self.sched.pending_ids().into_iter().collect();
         pending.sort_unstable();
         for id in pending {
-            if self.win_locs[id].iter().all(|&l| self.state.dead[l as usize]) {
+            if self.win_locs[id].iter().all(|&l| state.dead[l as usize]) {
                 return Err(format!(
                     "window {id}'s feature data lost: home and replica both crashed"
                 ));
@@ -661,12 +669,20 @@ impl<'a> AngleRun<'a> {
         Ok(())
     }
 
-    fn dispatch_cluster(&mut self, seg: Segment, node: usize, speculative: bool, now: f64) {
+    fn dispatch_cluster(
+        &mut self,
+        seg: Segment,
+        node: usize,
+        speculative: bool,
+        now: f64,
+        q: &mut EventQueue<AEv>,
+        state: &FaultState,
+    ) {
         let id = seg.id;
-        let secs = self.win_secs[id] / self.state.factor[node] + self.coord_secs;
+        let secs = self.win_secs[id] / state.factor[node] + self.coord_secs;
         self.next_gen += 1;
         let gen = self.next_gen;
-        self.by_seg.entry(id).or_default().push(gen);
+        self.spec.register(id, gen);
         self.inflight.insert(
             gen,
             Attempt {
@@ -676,11 +692,10 @@ impl<'a> AngleRun<'a> {
             },
         );
         self.running[node] += 1;
-        self.q.push_at(now + secs, AEv::Seg { gen });
+        q.push_at(now + secs, AEv::Seg { gen });
         if !speculative {
             let nominal = self.win_secs[id] + self.coord_secs;
-            self.q
-                .push_at(now + SPEC_THRESHOLD * nominal, AEv::SpecCheck { gen });
+            q.push_at(now + SPEC_THRESHOLD * nominal, AEv::SpecCheck { gen });
         }
     }
 
@@ -691,15 +706,13 @@ impl<'a> AngleRun<'a> {
     /// never picked — running there would be free, unpriced I/O; if no
     /// holder has a free SPE right now, re-check while the attempt is
     /// still running.
-    fn spec_check(&mut self, gen: u64, now: f64) {
+    fn spec_check(&mut self, gen: u64, now: f64, q: &mut EventQueue<AEv>, state: &FaultState) {
         let Some(att) = self.inflight.get(&gen) else {
             return; // completed or pre-empted: nothing to speculate on
         };
         let id = att.seg.id;
         let primary = att.node;
-        if self.speculated.contains(&id)
-            || self.by_seg.get(&id).map_or(0, Vec::len) > 1
-            || !self.sched.speculatable(id)
+        if self.spec.is_speculated(id) || self.spec.attempts(id) > 1 || !self.sched.speculatable(id)
         {
             return;
         }
@@ -709,22 +722,28 @@ impl<'a> AngleRun<'a> {
             .locations
             .iter()
             .map(|&l| l as usize)
-            .find(|&l| l != primary && !self.state.dead[l] && self.running[l] < spes);
+            .find(|&l| l != primary && !state.dead[l] && self.running[l] < spes);
         let Some(backup) = backup else {
             let retry = 0.25 * (self.win_secs[id] + self.coord_secs);
-            self.q.push_at(now + retry, AEv::SpecCheck { gen });
+            q.push_at(now + retry, AEv::SpecCheck { gen });
             return;
         };
         let seg = att.seg.clone();
         if !self.sched.speculate(&seg, backup as u32) {
             return;
         }
-        self.speculated.insert(id);
-        self.dispatch_cluster(seg, backup, true, now);
+        self.spec.mark_speculated(id);
+        self.dispatch_cluster(seg, backup, true, now, q, state);
     }
 
     /// An extract or cluster attempt finished its service time.
-    fn seg_done(&mut self, gen: u64, now: f64) -> Result<(), String> {
+    fn seg_done(
+        &mut self,
+        gen: u64,
+        now: f64,
+        q: &mut EventQueue<AEv>,
+        state: &FaultState,
+    ) -> Result<(), String> {
         let Some(att) = self.inflight.remove(&gen) else {
             return Ok(()); // pre-empted by a crash or a speculation win
         };
@@ -733,16 +752,11 @@ impl<'a> AngleRun<'a> {
         if self.stage == Stage::Extract {
             debug_assert!(first, "extract never speculates");
             self.agg.segments += 1;
-            self.pump_extract(now);
+            self.pump_extract(now, q, state);
             return Ok(());
         }
         // Cluster: first finisher wins, siblings are cancelled.
-        let losers: Vec<u64> = self
-            .by_seg
-            .remove(&att.seg.id)
-            .map(|gens| gens.into_iter().filter(|&g| g != gen).collect())
-            .unwrap_or_default();
-        for g in losers {
+        for g in self.spec.take_losers(att.seg.id, gen) {
             if let Some(loser) = self.inflight.remove(&g) {
                 self.running[loser.node] -= 1;
                 self.sched.cancel_attempt(&loser.seg);
@@ -757,7 +771,7 @@ impl<'a> AngleRun<'a> {
         } else {
             self.sched.cancel_attempt(&att.seg);
         }
-        self.pump_cluster(now)
+        self.pump_cluster(now, q, state)
     }
 
     // ---------------------------------------------------- stage 5: score
@@ -766,11 +780,17 @@ impl<'a> AngleRun<'a> {
     /// sensor site (write-local at the winner, one copy per other site
     /// — the storage cloud's site-diverse placement), then each site
     /// scores its share of the feature stream.
-    fn start_score(&mut self, now: f64) -> Result<(), String> {
+    fn start_score(
+        &mut self,
+        now: f64,
+        net: &mut NetSim,
+        q: &mut EventQueue<AEv>,
+        state: &FaultState,
+    ) -> Result<(), String> {
         let model_bytes = self.model_bytes();
         let sites = self.testbed.site_names.len();
         for s in 0..sites {
-            self.site_rep[s] = self.site_head(s);
+            self.site_rep[s] = self.site_head(state, s);
             if self.site_rep[s].is_some() {
                 self.score_pending += 1;
             } else {
@@ -782,7 +802,7 @@ impl<'a> AngleRun<'a> {
             // The cluster winner may have crashed since its attempt
             // completed: the model ships from its surviving replica
             // copy, and a fully-dead chain is data loss.
-            let src = self.live_owner(self.win_node[w])?;
+            let src = self.live_owner(state, self.win_node[w])?;
             for s in 0..sites {
                 let Some(rep) = self.site_rep[s] else { continue };
                 self.model_tier.add(self.testbed, src, rep, model_bytes);
@@ -790,34 +810,48 @@ impl<'a> AngleRun<'a> {
                 if rep == src {
                     continue;
                 }
-                self.start_model_flow(src, rep, s, model_bytes);
+                self.start_model_flow(src, rep, s, model_bytes, net, state);
             }
         }
         for s in 0..sites {
             if self.site_rep[s].is_some() && self.score_inbound[s] == 0 && !self.scored[s] {
-                self.schedule_scored(s, now);
+                self.schedule_scored(s, now, q, state);
             }
         }
         Ok(())
     }
 
-    fn start_model_flow(&mut self, src: usize, rep: usize, site: usize, bytes: f64) {
+    fn start_model_flow(
+        &mut self,
+        src: usize,
+        rep: usize,
+        site: usize,
+        bytes: f64,
+        net: &mut NetSim,
+        state: &FaultState,
+    ) {
         let path = self.testbed.path(&self.links, src, rep);
-        let cap = self.transfer_cap(&path, src, rep, self.state.factor[src]);
-        let fid = self.net.start_flow(&path, bytes.max(1.0), cap.max(1.0));
+        let cap = self.transfer_cap(&path, src, rep, state.factor[src]);
+        let fid = net.start_flow(&path, bytes.max(1.0), cap.max(1.0));
         self.flows.insert(fid, AFlow::Model { src, site });
         self.score_inbound[site] += 1;
     }
 
-    fn schedule_scored(&mut self, site: usize, now: f64) {
+    fn schedule_scored(
+        &mut self,
+        site: usize,
+        now: f64,
+        q: &mut EventQueue<AEv>,
+        state: &FaultState,
+    ) {
         let rep = self.site_rep[site].expect("scored sites have a representative");
         // Fixed per-site share set once at score start — a scan
         // rescheduled after other sites finished must not be charged
         // their shares too.
-        let secs = self.score_share / (self.cfg.cpu.scan_bps * self.state.factor[rep]);
+        let secs = self.score_share / (self.cfg.cpu.scan_bps * state.factor[rep]);
         self.next_gen += 1;
         self.score_gen[site] = Some(self.next_gen);
-        self.q.push_at(
+        q.push_at(
             now + secs,
             AEv::Scored {
                 site,
@@ -828,16 +862,16 @@ impl<'a> AngleRun<'a> {
 
     // ------------------------------------------------------------ faults
 
-    fn handle_crash(&mut self, fault: usize, now: f64) -> Result<(), String> {
-        self.state.consumed[fault] = true;
-        let FaultSpec::SlaveCrash { node, .. } = self.state.faults[fault] else {
-            return Ok(());
-        };
-        if self.state.dead[node] {
-            return Ok(());
-        }
-        self.state.crash(node);
-
+    /// A crash fault named a live node (the core already applied the
+    /// shared prologue: fault consumed, node marked dead).
+    fn on_crash(
+        &mut self,
+        node: usize,
+        now: f64,
+        net: &mut NetSim,
+        q: &mut EventQueue<AEv>,
+        state: &FaultState,
+    ) -> Result<(), String> {
         // Attempts running on the dead node: re-queue unless a sibling
         // attempt survives (its attempt count is preserved by the
         // scheduler's id-keyed map).
@@ -849,11 +883,7 @@ impl<'a> AngleRun<'a> {
             .collect();
         for g in stale {
             let mut att = self.inflight.remove(&g).expect("stale gen exists");
-            let siblings = {
-                let v = self.by_seg.entry(att.seg.id).or_default();
-                v.retain(|&x| x != g);
-                v.len()
-            };
+            let siblings = self.spec.drop_attempt(att.seg.id, g);
             if self.stage == Stage::Cluster && siblings > 0 {
                 self.sched.cancel_attempt(&att.seg);
                 if att.speculative {
@@ -862,20 +892,17 @@ impl<'a> AngleRun<'a> {
                     // surviving attempt immediately, so a straggling
                     // window is not stranded by its rescuer's crash
                     // (the scheduler's attempt budget still applies).
-                    self.speculated.remove(&att.seg.id);
-                    if let Some(&survivor) =
-                        self.by_seg.get(&att.seg.id).and_then(|v| v.first())
-                    {
-                        self.q.push_at(now, AEv::SpecCheck { gen: survivor });
+                    self.spec.unmark_speculated(att.seg.id);
+                    if let Some(survivor) = self.spec.first_attempt(att.seg.id) {
+                        q.push_at(now, AEv::SpecCheck { gen: survivor });
                     }
                 }
                 continue;
             }
-            self.by_seg.remove(&att.seg.id);
             if self.stage == Stage::Cluster {
                 // Refresh the segment's replica set: the re-queued task
                 // must be assignable to the surviving holder.
-                self.win_locs[att.seg.id].retain(|&l| !self.state.dead[l as usize]);
+                self.win_locs[att.seg.id].retain(|&l| !state.dead[l as usize]);
                 att.seg.locations = self.win_locs[att.seg.id].clone();
             }
             let id = att.seg.id;
@@ -891,7 +918,7 @@ impl<'a> AngleRun<'a> {
         self.running[node] = 0;
         // Shrink every window's surviving replica set.
         for locs in self.win_locs.iter_mut() {
-            locs.retain(|&l| !self.state.dead[l as usize]);
+            locs.retain(|&l| !state.dead[l as usize]);
         }
 
         // Transfers toward the dead node re-route (transfers leaving it
@@ -919,13 +946,13 @@ impl<'a> AngleRun<'a> {
         if matches!(self.stage, Stage::Aggregate) {
             for w in 0..self.a.windows {
                 if self.win_home[w] == node && !self.win_opened[w] {
-                    let new_home = self.live_owner(replica_of(self.testbed, node))?;
+                    let new_home = self.live_owner(state, replica_of(self.testbed, node))?;
                     self.win_home[w] = new_home;
                     self.agg.reassignments += 1;
                     // A pending per-file Open at the dead home restarts
                     // in full at the new home (pessimistic; §13).
                     if self.open_gen[w].take().is_some() && self.win_inbound[w] == 0 {
-                        self.schedule_open(w, now);
+                        self.schedule_open(w, now, q);
                     }
                 }
             }
@@ -935,7 +962,7 @@ impl<'a> AngleRun<'a> {
             let sites = self.testbed.site_names.len();
             for s in 0..sites {
                 if self.site_rep[s] == Some(node) && !self.scored[s] {
-                    match self.site_head(s) {
+                    match self.site_head(state, s) {
                         Some(new_rep) => {
                             self.site_rep[s] = Some(new_rep);
                             self.score_gen[s] = None;
@@ -947,21 +974,28 @@ impl<'a> AngleRun<'a> {
                             // — the scan restarts once they land.
                             let model_bytes = self.model_bytes();
                             for w in 0..self.a.windows {
-                                let src = self.live_owner(self.win_node[w])?;
+                                let src = self.live_owner(state, self.win_node[w])?;
                                 self.model_tier
                                     .add(self.testbed, src, new_rep, model_bytes);
                                 self.agg
                                     .tier
                                     .add(self.testbed, src, new_rep, model_bytes);
                                 if src != new_rep {
-                                    self.start_model_flow(src, new_rep, s, model_bytes);
+                                    self.start_model_flow(
+                                        src,
+                                        new_rep,
+                                        s,
+                                        model_bytes,
+                                        net,
+                                        state,
+                                    );
                                 }
                             }
                             resent_sites.push(s);
                             if self.score_inbound[s] == 0 {
                                 // Every surviving model copy was already
                                 // local to the new rep.
-                                self.schedule_scored(s, now);
+                                self.schedule_scored(s, now, q, state);
                             }
                         }
                         None => {
@@ -983,22 +1017,22 @@ impl<'a> AngleRun<'a> {
         // model RE-replication above is new traffic and counted.
         for (fid, info) in toward {
             self.flows.remove(&fid);
-            let left = self.net.cancel_flow(fid);
+            let left = net.cancel_flow(fid);
             match info {
                 AFlowInfo::Ingest => {
                     self.ingest_pending -= 1;
-                    let owner = self.live_owner(replica_of(self.testbed, node))?;
+                    let owner = self.live_owner(state, replica_of(self.testbed, node))?;
                     let head = self
-                        .site_head(self.testbed.node_site[owner])
+                        .site_head(state, self.testbed.node_site[owner])
                         .expect("owner is alive");
-                    self.start_ingest_flow(head, owner, left);
+                    self.start_ingest_flow(head, owner, left, net);
                 }
                 AFlowInfo::Feature { src, window } => {
                     self.win_inbound[window] -= 1;
-                    if !self.state.dead[src] {
-                        self.start_feature_flow(src, window, left);
+                    if !state.dead[src] {
+                        self.start_feature_flow(src, window, left, net, state);
                     } else if self.win_inbound[window] == 0 && !self.win_opened[window] {
-                        self.schedule_open(window, now);
+                        self.schedule_open(window, now, q);
                     }
                 }
                 AFlowInfo::Model { src, site } => {
@@ -1009,14 +1043,14 @@ impl<'a> AngleRun<'a> {
                         // remainder, and start the scan if this was the
                         // last outstanding flow.
                         if self.score_inbound[site] == 0 && !self.scored[site] {
-                            self.schedule_scored(site, now);
+                            self.schedule_scored(site, now, q, state);
                         }
                     } else if let Some(rep) = self.site_rep[site] {
                         if !self.scored[site] {
                             // Resend from the model's surviving copy
                             // (the winner node, or its replica).
-                            let src = self.live_owner(src)?;
-                            self.start_model_flow(src, rep, site, left);
+                            let src = self.live_owner(state, src)?;
+                            self.start_model_flow(src, rep, site, left, net, state);
                         }
                     }
                 }
@@ -1025,8 +1059,8 @@ impl<'a> AngleRun<'a> {
         }
 
         match self.stage {
-            Stage::Extract => self.pump_extract(now),
-            Stage::Cluster => self.pump_cluster(now)?,
+            Stage::Extract => self.pump_extract(now, q, state),
+            Stage::Cluster => self.pump_cluster(now, q, state)?,
             _ => {}
         }
         Ok(())
@@ -1035,32 +1069,38 @@ impl<'a> AngleRun<'a> {
     // ------------------------------------------------------------ loop
 
     /// Advance the stage machine whenever the current stage drained.
-    fn advance(&mut self, now: f64) -> Result<(), String> {
+    fn advance(
+        &mut self,
+        now: f64,
+        net: &mut NetSim,
+        q: &mut EventQueue<AEv>,
+        state: &FaultState,
+    ) -> Result<(), String> {
         loop {
             match self.stage {
                 Stage::Ingest if self.ingest_pending == 0 => {
                     self.agg.stage_ends.push(("sensor ingest".to_string(), now));
                     self.stage = Stage::Extract;
-                    self.start_extract(now)?;
+                    self.start_extract(now, q, state)?;
                 }
                 Stage::Extract if self.sched.is_drained() && self.inflight.is_empty() => {
                     self.harvest_sched();
                     self.agg.stage_ends.push(("angle extract".to_string(), now));
                     self.stage = Stage::Aggregate;
-                    self.start_aggregate(now);
+                    self.start_aggregate(now, net, q, state);
                 }
                 Stage::Aggregate if self.win_opened.iter().all(|&o| o) => {
                     self.agg
                         .stage_ends
                         .push(("window aggregate".to_string(), now));
                     self.stage = Stage::Cluster;
-                    self.start_cluster(now)?;
+                    self.start_cluster(now, q, state)?;
                 }
                 Stage::Cluster if self.sched.is_drained() && self.inflight.is_empty() => {
                     self.harvest_sched();
                     self.agg.stage_ends.push(("window cluster".to_string(), now));
                     self.stage = Stage::Score;
-                    self.start_score(now)?;
+                    self.start_score(now, net, q, state)?;
                 }
                 Stage::Score if self.score_pending == 0 => {
                     self.agg.stage_ends.push(("model score".to_string(), now));
@@ -1079,7 +1119,7 @@ impl<'a> AngleRun<'a> {
         self.agg.speculative_won += self.sched.speculative_won;
     }
 
-    fn flow_done(&mut self, fid: FlowId, now: f64) {
+    fn flow_done(&mut self, fid: FlowId, now: f64, q: &mut EventQueue<AEv>, state: &FaultState) {
         let Some(flow) = self.flows.remove(&fid) else {
             return;
         };
@@ -1088,7 +1128,7 @@ impl<'a> AngleRun<'a> {
             AFlow::Feature { window, .. } => {
                 self.win_inbound[window] -= 1;
                 if self.win_inbound[window] == 0 && !self.win_opened[window] {
-                    self.schedule_open(window, now);
+                    self.schedule_open(window, now, q);
                 }
             }
             AFlow::Model { site, .. } => {
@@ -1097,80 +1137,111 @@ impl<'a> AngleRun<'a> {
                     && !self.scored[site]
                     && self.site_rep[site].is_some()
                 {
-                    self.schedule_scored(site, now);
+                    self.schedule_scored(site, now, q, state);
                 }
             }
         }
     }
 
-    fn execute(&mut self) -> Result<(), String> {
-        self.schedule_faults();
-        self.start_ingest()?;
-        self.advance(0.0)?;
-        let mut batch: Vec<AEv> = Vec::new();
-        loop {
-            if self.stage == Stage::Done {
-                break;
-            }
-            let tq = self.q.peek_time();
-            let tn = self.net.next_completion().map(|(t, _)| t);
-            let next = match (tq, tn) {
-                (None, None) => {
-                    return Err("angle pipeline stalled before completing".into());
+    fn execute(
+        &mut self,
+        net: &mut NetSim,
+        q: &mut EventQueue<AEv>,
+        state: &mut FaultState,
+    ) -> Result<(), String> {
+        core::schedule_faults(state, q, 0.0);
+        self.start_ingest(net, state)?;
+        self.advance(0.0, net, q, state)?;
+        let links = self.links.clone();
+        let testbed = self.testbed;
+        let out = {
+            let mut h = AngleHarness { run: self };
+            core::drive(&mut h, net, q, state, &links, testbed)?
+        };
+        self.agg.events += out.events;
+        Ok(())
+    }
+}
+
+/// Plugs the staged pipeline into the shared engine core: the stage
+/// machine decides when the run is finished, and a drained queue before
+/// `Stage::Done` is a bug, not an exit.
+struct AngleHarness<'r, 'a> {
+    run: &'r mut AngleRun<'a>,
+}
+
+impl<'r, 'a> Harness for AngleHarness<'r, 'a> {
+    type Ev = AEv;
+
+    fn finished(&self, _net: &NetSim) -> bool {
+        self.run.stage == Stage::Done
+    }
+
+    fn on_stall(&mut self) -> Result<(), String> {
+        Err("angle pipeline stalled before completing".into())
+    }
+
+    fn flow_done(
+        &mut self,
+        fid: FlowId,
+        now: f64,
+        _net: &mut NetSim,
+        q: &mut EventQueue<AEv>,
+        state: &mut FaultState,
+    ) -> Result<(), String> {
+        self.run.flow_done(fid, now, q, state);
+        Ok(())
+    }
+
+    fn handle(
+        &mut self,
+        ev: AEv,
+        now: f64,
+        _net: &mut NetSim,
+        q: &mut EventQueue<AEv>,
+        state: &mut FaultState,
+    ) -> Result<(), String> {
+        match ev {
+            AEv::Seg { gen } => self.run.seg_done(gen, now, q, state)?,
+            AEv::SpecCheck { gen } => self.run.spec_check(gen, now, q, state),
+            AEv::Open { window, gen } => {
+                if self.run.open_gen[window] == Some(gen) {
+                    self.run.open_gen[window] = None;
+                    self.run.win_opened[window] = true;
                 }
-                (Some(a), None) => a,
-                (None, Some(b)) => b,
-                (Some(a), Some(b)) => a.min(b),
-            };
-            let now = next;
-            for fid in self.net.advance_to(next) {
-                self.agg.events += 1;
-                self.flow_done(fid, now);
             }
-            if self.q.peek_time() == Some(next) {
-                batch.clear();
-                self.q.pop_simultaneous(&mut batch);
-                for ev in batch.drain(..) {
-                    self.agg.events += 1;
-                    match ev {
-                        AEv::Seg { gen } => self.seg_done(gen, now)?,
-                        AEv::SpecCheck { gen } => self.spec_check(gen, now),
-                        AEv::Open { window, gen } => {
-                            if self.open_gen[window] == Some(gen) {
-                                self.open_gen[window] = None;
-                                self.win_opened[window] = true;
-                            }
-                        }
-                        AEv::Scored { site, gen } => {
-                            if self.score_gen[site] == Some(gen) {
-                                self.score_gen[site] = None;
-                                self.scored[site] = true;
-                                self.score_pending -= 1;
-                            }
-                        }
-                        AEv::Crash { fault } => self.handle_crash(fault, now)?,
-                        AEv::DegradeStart { fault } => handle_degrade_start(
-                            self.state,
-                            &mut self.net,
-                            &self.links,
-                            self.testbed,
-                            fault,
-                            now,
-                        ),
-                        AEv::DegradeEnd { fault } => handle_degrade_end(
-                            self.state,
-                            &mut self.net,
-                            &self.links,
-                            self.testbed,
-                            fault,
-                            now,
-                        ),
-                    }
+            AEv::Scored { site, gen } => {
+                if self.run.score_gen[site] == Some(gen) {
+                    self.run.score_gen[site] = None;
+                    self.run.scored[site] = true;
+                    self.run.score_pending -= 1;
                 }
             }
-            self.advance(now)?;
+            AEv::Fault(_) => {} // intercepted by the core
         }
         Ok(())
+    }
+
+    fn on_crash(
+        &mut self,
+        node: usize,
+        now: f64,
+        net: &mut NetSim,
+        q: &mut EventQueue<AEv>,
+        state: &mut FaultState,
+    ) -> Result<(), String> {
+        self.run.on_crash(node, now, net, q, state)
+    }
+
+    fn after_wave(
+        &mut self,
+        now: f64,
+        _drained: bool,
+        net: &mut NetSim,
+        q: &mut EventQueue<AEv>,
+        state: &mut FaultState,
+    ) -> Result<(), String> {
+        self.run.advance(now, net, q, state)
     }
 }
 

@@ -19,6 +19,10 @@
 //!   re-queues segments AND re-dispatches requests, a WAN brown-out
 //!   squeezes shuffles AND cross-site reads.
 //!
+//! The event loop itself is the shared engine core (`scenario::core`,
+//! DESIGN.md §14): both sides plug in as one [`core::Harness`], so
+//! fault application and dispatch order are the core's, not copies.
+//!
 //! The job side models a segment as a flow through its node's disk
 //! links whose rate cap is the stage's nominal pipeline rate (so an
 //! uncontended run reproduces the staged batch engine's shape, and
@@ -41,7 +45,7 @@
 //! identical substrate — computed here, deterministically, as part of
 //! the run).
 
-use std::collections::{BTreeMap, HashSet};
+use std::collections::BTreeMap;
 
 use crate::config::SimConfig;
 use crate::mining::angle::simulate_angle_clustering;
@@ -54,11 +58,12 @@ use crate::sphere::segment::Segment;
 use crate::topology::{NetLinks, Testbed};
 use crate::transport::TransportModels;
 
+use super::core::{self, CoreEv, FaultEv, Harness, SpecCand, Speculation};
 use super::engine::{
-    FaultState, ScenarioReport, StageKind, build_stage_segments, coordination_secs,
-    handle_degrade_end, handle_degrade_start, pick_dst_in, shuffle_rate_cap,
+    FaultState, ScenarioReport, StageKind, build_stage_segments, coordination_secs, pick_dst_in,
+    shuffle_rate_cap,
 };
-use super::{FaultSpec, ScenarioSpec, WorkloadKind, WorkloadSpec};
+use super::{ScenarioSpec, WorkloadKind, WorkloadSpec};
 
 /// Minimum completed segments before the running median is trusted.
 const SPEC_MIN_SAMPLES: usize = 5;
@@ -111,6 +116,19 @@ impl From<JobEv> for CoEv {
     }
 }
 
+impl CoreEv for CoEv {
+    fn from_fault(f: FaultEv) -> CoEv {
+        CoEv::Svc(SvcEv::from_fault(f))
+    }
+
+    fn to_fault(&self) -> Option<FaultEv> {
+        match self {
+            CoEv::Svc(e) => e.to_fault(),
+            CoEv::Job(_) => None,
+        }
+    }
+}
+
 // ------------------------------------------------------------ job side
 
 /// One running (or coordinating) attempt of a segment.
@@ -145,10 +163,8 @@ struct JobSide<'a> {
     models: TransportModels,
     sched: Scheduler,
     inflight: BTreeMap<u64, Attempt>,
-    /// Live attempt gens per segment id (speculation bookkeeping).
-    by_seg: BTreeMap<usize, Vec<u64>>,
-    /// Segments that already got their one backup this stage.
-    speculated: HashSet<usize>,
+    /// Sibling-attempt bookkeeping (core-owned; engine keeps policy).
+    spec: Speculation,
     /// Completed attempt durations this stage, sorted ascending.
     durations: Vec<f64>,
     next_gen: u64,
@@ -159,8 +175,6 @@ struct JobSide<'a> {
     speculative: bool,
     threshold: f64,
     job_share: f64,
-    /// Earliest pending SpecCheck (dedup so scans don't flood the queue).
-    spec_check_at: Option<f64>,
     // counters
     segments: usize,
     reassignments: u64,
@@ -206,8 +220,7 @@ impl<'a> JobSide<'a> {
             models: TransportModels::default(),
             sched,
             inflight: BTreeMap::new(),
-            by_seg: BTreeMap::new(),
-            speculated: HashSet::new(),
+            spec: Speculation::new(),
             durations: Vec::new(),
             next_gen: 0,
             running: vec![0; testbed.nodes()],
@@ -216,7 +229,6 @@ impl<'a> JobSide<'a> {
             speculative: spec.colocation.speculative,
             threshold: spec.colocation.threshold,
             job_share: spec.colocation.job_share,
-            spec_check_at: None,
             segments: 0,
             reassignments: 0,
             shuffle_bytes: 0.0,
@@ -247,7 +259,7 @@ impl<'a> JobSide<'a> {
                 };
                 self.next_gen += 1;
                 let gen = self.next_gen;
-                self.by_seg.entry(seg.id).or_default().push(gen);
+                self.spec.register(seg.id, gen);
                 self.inflight.insert(
                     gen,
                     Attempt {
@@ -341,12 +353,7 @@ impl<'a> JobSide<'a> {
         let first = self.sched.complete(&att.seg);
         // First-finisher-wins: cancel every sibling attempt (the
         // speculation loser, or the original when the backup won).
-        let losers: Vec<u64> = self
-            .by_seg
-            .remove(&att.seg.id)
-            .map(|gens| gens.into_iter().filter(|&g| g != gen).collect())
-            .unwrap_or_default();
-        for g in losers {
+        for g in self.spec.take_losers(att.seg.id, gen) {
             if let Some(loser) = self.inflight.remove(&g) {
                 self.running[loser.node] -= 1;
                 if let Some(lfid) = loser.fid {
@@ -397,36 +404,21 @@ impl<'a> JobSide<'a> {
             return;
         }
         let cutoff = self.threshold * median;
-        let mut launch: Vec<u64> = Vec::new();
-        let mut earliest_cross: Option<f64> = None;
-        for (&gen, att) in &self.inflight {
-            if att.speculative
-                || self.speculated.contains(&att.seg.id)
-                || self.by_seg.get(&att.seg.id).map_or(0, Vec::len) > 1
-            {
-                continue;
-            }
-            if now - att.started >= cutoff {
-                launch.push(gen);
-            } else {
-                let t = att.started + cutoff;
-                earliest_cross = Some(earliest_cross.map_or(t, |e: f64| e.min(t)));
-            }
-        }
+        let (launch, cross) = self.spec.scan(
+            now,
+            cutoff,
+            self.inflight.iter().map(|(&gen, att)| SpecCand {
+                gen,
+                unit: att.seg.id,
+                started: att.started,
+                speculative: att.speculative,
+            }),
+        );
         for gen in launch {
             self.launch_backup(gen, now, q, state);
         }
-        if let Some(t) = earliest_cross {
-            let t = t.max(now);
-            let stale = match self.spec_check_at {
-                None => true,
-                Some(at) => at <= now || t < at,
-            };
-            if stale {
-                self.spec_check_at = Some(t);
-                q.push_at(t, JobEv::SpecCheck.into());
-            }
-        }
+        self.spec
+            .schedule_recheck(cross, now, q, || JobEv::SpecCheck.into());
     }
 
     /// Dispatch a backup attempt of `gen`'s segment to another live
@@ -449,10 +441,10 @@ impl<'a> JobSide<'a> {
         if !self.sched.speculate(&seg, backup as u32) {
             return;
         }
-        self.speculated.insert(seg.id);
+        self.spec.mark_speculated(seg.id);
         self.next_gen += 1;
         let bgen = self.next_gen;
-        self.by_seg.entry(seg.id).or_default().push(bgen);
+        self.spec.register(seg.id, bgen);
         self.inflight.insert(
             bgen,
             Attempt {
@@ -491,17 +483,12 @@ impl<'a> JobSide<'a> {
                 self.flows.remove(&fid);
                 net.try_cancel_flow(fid);
             }
-            let siblings = {
-                let v = self.by_seg.entry(att.seg.id).or_default();
-                v.retain(|&x| x != g);
-                v.len()
-            };
+            let siblings = self.spec.drop_attempt(att.seg.id, g);
             if siblings > 0 {
                 // The other attempt (primary or backup) lives on: no
                 // re-assignment happens, so none is counted.
                 self.sched.cancel_attempt(&att.seg);
             } else {
-                self.by_seg.remove(&att.seg.id);
                 let id = att.seg.id;
                 if !self.sched.fail(att.seg) {
                     return Err(format!(
@@ -574,14 +561,89 @@ impl<'a> JobSide<'a> {
         sched.max_attempts = self.sched.max_attempts;
         self.sched = sched;
         self.durations.clear();
-        self.speculated.clear();
-        self.spec_check_at = None;
+        self.spec.clear_stage();
         self.pump(now, q, state);
         Ok(())
     }
 }
 
 // ------------------------------------------------------------ driver
+
+/// Both halves of a colocated run plugged into the shared engine core:
+/// flow completions try the job side first (its flow map answers), a
+/// crash hits the service THEN the job (the job's recovery may abort),
+/// and the post-wave hook closes a drained batch stage.
+struct CoHarness<'r, 'a> {
+    job: &'r mut JobSide<'a>,
+    svc: &'r mut TrafficEngine<'a>,
+}
+
+impl<'r, 'a> Harness for CoHarness<'r, 'a> {
+    type Ev = CoEv;
+
+    fn finished(&self, net: &NetSim) -> bool {
+        self.job.done && self.svc.done() && net.active_flows() == 0
+    }
+
+    fn flow_done(
+        &mut self,
+        fid: FlowId,
+        now: f64,
+        net: &mut NetSim,
+        q: &mut EventQueue<CoEv>,
+        state: &mut FaultState,
+    ) -> Result<(), String> {
+        if !self.job.flow_done(fid, now, net, q, state) {
+            self.svc.flow_done(fid, now, net, q, state);
+        }
+        Ok(())
+    }
+
+    fn handle(
+        &mut self,
+        ev: CoEv,
+        now: f64,
+        net: &mut NetSim,
+        q: &mut EventQueue<CoEv>,
+        state: &mut FaultState,
+    ) -> Result<(), String> {
+        match ev {
+            CoEv::Svc(other) => self.svc.handle_event(other, now, net, q, state),
+            CoEv::Job(JobEv::SegStart { gen }) => self.job.start_segment_flow(gen, net, state),
+            CoEv::Job(JobEv::SpecCheck) => {
+                self.job.spec.recheck_fired();
+                self.job.maybe_speculate(now, q, state);
+            }
+        }
+        Ok(())
+    }
+
+    fn on_crash(
+        &mut self,
+        node: usize,
+        now: f64,
+        net: &mut NetSim,
+        q: &mut EventQueue<CoEv>,
+        state: &mut FaultState,
+    ) -> Result<(), String> {
+        self.svc.on_crash(node, now, net, q);
+        self.job.on_crash(node, now, net, q, state)
+    }
+
+    fn after_wave(
+        &mut self,
+        now: f64,
+        _drained: bool,
+        _net: &mut NetSim,
+        q: &mut EventQueue<CoEv>,
+        state: &mut FaultState,
+    ) -> Result<(), String> {
+        if self.job.stage_idle() {
+            self.job.finish_stage(now, q, state)?;
+        }
+        Ok(())
+    }
+}
 
 /// Run a colocated scenario to completion.  Deterministic: the spec is
 /// the only input — including the embedded uncolocated baseline run.
@@ -627,68 +689,18 @@ pub(crate) fn run_colocated(
         &state,
     )?;
 
-    svc.schedule_fault_events(&state, &mut q);
+    core::schedule_faults(&mut state, &mut q, 0.0);
     svc.schedule_arrivals(&mut q);
     job.pump(0.0, &mut q, &state);
 
-    let mut events: u64 = 0;
-    let mut batch: Vec<CoEv> = Vec::new();
-    loop {
-        if job.done && svc.done() && net.active_flows() == 0 {
-            break;
-        }
-        let tq = q.peek_time();
-        let tn = net.next_completion().map(|(t, _)| t);
-        let next = match (tq, tn) {
-            (None, None) => break,
-            (Some(a), None) => a,
-            (None, Some(b)) => b,
-            (Some(a), Some(b)) => a.min(b),
+    let out = {
+        let mut h = CoHarness {
+            job: &mut job,
+            svc: &mut svc,
         };
-        let now = next;
-        for fid in net.advance_to(next) {
-            events += 1;
-            if !job.flow_done(fid, now, &mut net, &mut q, &state) {
-                svc.flow_done(fid, now, &mut net, &mut q, &state);
-            }
-        }
-        if q.peek_time() == Some(next) {
-            batch.clear();
-            q.pop_simultaneous(&mut batch);
-            for ev in batch.drain(..) {
-                events += 1;
-                match ev {
-                    CoEv::Svc(SvcEv::Crash { fault }) => {
-                        state.consumed[fault] = true;
-                        if let FaultSpec::SlaveCrash { node, .. } = state.faults[fault] {
-                            if !state.dead[node] {
-                                state.crash(node);
-                                svc.on_crash(node, now, &mut net, &mut q);
-                                job.on_crash(node, now, &mut net, &mut q, &state)?;
-                            }
-                        }
-                    }
-                    CoEv::Svc(SvcEv::DegradeStart { fault }) => {
-                        handle_degrade_start(&mut state, &mut net, &links, testbed, fault, now)
-                    }
-                    CoEv::Svc(SvcEv::DegradeEnd { fault }) => {
-                        handle_degrade_end(&mut state, &mut net, &links, testbed, fault, now)
-                    }
-                    CoEv::Svc(other) => svc.handle_event(other, now, &mut net, &mut q, &state),
-                    CoEv::Job(JobEv::SegStart { gen }) => {
-                        job.start_segment_flow(gen, &mut net, &state)
-                    }
-                    CoEv::Job(JobEv::SpecCheck) => {
-                        job.spec_check_at = None;
-                        job.maybe_speculate(now, &mut q, &state);
-                    }
-                }
-            }
-        }
-        if job.stage_idle() {
-            job.finish_stage(now, &mut q, &state)?;
-        }
-    }
+        core::drive(&mut h, &mut net, &mut q, &mut state, &links, testbed)?
+    };
+    let events = out.events;
 
     let mut job_makespan = job.makespan;
     if workload.kind == WorkloadKind::Angle {
@@ -757,7 +769,7 @@ fn colocated_name(kind: WorkloadKind) -> &'static str {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::scenario::{ColocationSpec, run_scenario};
+    use crate::scenario::{ColocationSpec, FaultSpec, run_scenario};
     use crate::service::{ArrivalProcess, TenantSpec, TrafficSpec};
     use crate::topology::TopologySpec;
     use crate::util::bytes::GB;

@@ -1,0 +1,672 @@
+//! Shared engine core (DESIGN.md §14).
+//!
+//! Five workloads run event loops over the same substrate — batch
+//! stages (`scenario::engine`), client traffic (`service::engine`),
+//! colocated batch+traffic (`scenario::colocate`), the Hadoop baseline
+//! (`hadoop::engine`) and the staged Angle pipeline
+//! (`scenario::angle`).  Their loops were near-copies: pick the next
+//! instant from `min(EventQueue, NetSim)`, advance the network,
+//! dispatch completed flows, drain the simultaneous event wave, apply
+//! faults, run a post-wave hook.  This module owns that skeleton once:
+//!
+//! * [`drive`] is the loop.  An engine implements [`Harness`] — its
+//!   workload semantics (what a finished flow means, what a
+//!   non-fault event does, how to recover from a crash, what runs
+//!   after each wave) — and the core owns time selection, flow
+//!   dispatch, wave draining, event counting and fault application.
+//! * [`FaultEv`]/[`CoreEv`] make the fault plan's events a shared
+//!   vocabulary: each engine's event enum embeds them, the core
+//!   intercepts them, so crash/brown-out handling cannot drift apart
+//!   per engine again.
+//! * [`schedule_faults`] is the one copy of fault-plan scheduling
+//!   (crash instants, degrade windows with their end events, expired
+//!   windows consumed) that every engine calls at setup.
+//! * [`FaultState`] carries fault-plan progress; the degrade handlers
+//!   apply brown-outs as shared-link capacity changes so max-min
+//!   sharing redistributes the loss (and the repair) immediately.
+//! * [`Speculation`] is the sibling-attempt bookkeeping behind
+//!   speculative re-execution (DESIGN.md §11): live attempts per work
+//!   unit, the one-backup latch, first-finisher-wins loser lists, and
+//!   the deduplicated re-check scan.  Engines keep only their cutoff
+//!   policy (threshold x median, 1.2 x mean, 2 x nominal).
+//!
+//! Determinism is inherited, not re-proven: the loop preserves the
+//! exact dispatch order the engines used (flows in id order, then the
+//! FIFO event wave, then the post-wave hook), so a spec's report is
+//! byte-identical through the refactor — pinned by the golden fixture
+//! suite in rust/tests/scenario_golden.rs.
+
+use std::collections::{BTreeMap, HashSet};
+
+use crate::sim::event::EventQueue;
+use crate::sim::netsim::{FlowId, NetSim};
+use crate::topology::{NetLinks, Testbed};
+
+use super::FaultSpec;
+
+// ------------------------------------------------------------ fault state
+
+/// Fault plan progress carried across workload stages.  Shared by
+/// every engine; the traffic engine composes the same plan with a
+/// request stream instead of a batch job.
+pub(crate) struct FaultState {
+    pub(crate) faults: Vec<FaultSpec>,
+    /// crash applied / degrade window fully elapsed.
+    pub(crate) consumed: Vec<bool>,
+    /// fault counted in `injected` (a degrade window can re-fire its
+    /// start event in a later stage; it must not count twice).
+    counted: Vec<bool>,
+    pub(crate) dead: Vec<bool>,
+    /// Live node ids in order — cached because the hot loop asks on
+    /// every segment completion and the set only changes on a crash.
+    alive_list: Vec<usize>,
+    /// Straggler speed multiplier per node (1.0 = nominal).
+    pub(crate) factor: Vec<f64>,
+    pub(crate) injected: usize,
+    pub(crate) crashes: usize,
+}
+
+impl FaultState {
+    pub(crate) fn new(faults: &[FaultSpec], nodes: usize) -> FaultState {
+        let mut s = FaultState {
+            faults: faults.to_vec(),
+            consumed: vec![false; faults.len()],
+            counted: vec![false; faults.len()],
+            dead: vec![false; nodes],
+            alive_list: (0..nodes).collect(),
+            factor: vec![1.0; nodes],
+            injected: 0,
+            crashes: 0,
+        };
+        for (i, f) in faults.iter().enumerate() {
+            if let FaultSpec::Straggler { node, factor } = f {
+                s.factor[*node] *= factor;
+                s.consumed[i] = true;
+                s.counted[i] = true;
+                s.injected += 1;
+            }
+        }
+        s
+    }
+
+    pub(crate) fn count_once(&mut self, fault: usize) {
+        if !self.counted[fault] {
+            self.counted[fault] = true;
+            self.injected += 1;
+        }
+    }
+
+    pub(crate) fn alive(&self) -> &[usize] {
+        &self.alive_list
+    }
+
+    pub(crate) fn crash(&mut self, node: usize) {
+        if !self.dead[node] {
+            self.dead[node] = true;
+            self.alive_list.retain(|&n| n != node);
+            self.crashes += 1;
+            self.injected += 1;
+        }
+    }
+
+    /// Apply every crash scheduled at or before `now` (analytic
+    /// workloads advance in rounds rather than per-event).
+    pub(crate) fn apply_crashes_due(&mut self, now: f64) {
+        for i in 0..self.faults.len() {
+            if self.consumed[i] {
+                continue;
+            }
+            if let FaultSpec::SlaveCrash { at_secs, node } = self.faults[i] {
+                if at_secs <= now {
+                    self.consumed[i] = true;
+                    self.crash(node);
+                }
+            }
+        }
+    }
+
+    /// WAN degradation factor applying to `site` at time `now`.
+    pub(crate) fn degrade_factor_at(&self, site: usize, now: f64) -> f64 {
+        let mut f = 1.0;
+        for fault in &self.faults {
+            if let FaultSpec::LinkDegrade {
+                at_secs,
+                duration_secs,
+                site: s,
+                factor,
+            } = fault
+            {
+                if *s == site && *at_secs <= now && now < at_secs + duration_secs {
+                    f *= factor;
+                }
+            }
+        }
+        f
+    }
+
+    /// Like `degrade_factor_at`, but records the matched windows in
+    /// `faults_injected` — the analytic workloads have no Degrade
+    /// events, so this is where their faults get counted.
+    pub(crate) fn degrade_factor_counting(&mut self, site: usize, now: f64) -> f64 {
+        let mut f = 1.0;
+        for i in 0..self.faults.len() {
+            if let FaultSpec::LinkDegrade {
+                at_secs,
+                duration_secs,
+                site: s,
+                factor,
+            } = self.faults[i]
+            {
+                if s == site && at_secs <= now && now < at_secs + duration_secs {
+                    f *= factor;
+                    self.count_once(i);
+                }
+            }
+        }
+        f
+    }
+}
+
+// ------------------------------------------------------------ fault events
+
+/// The fault plan's discrete events — the shared vocabulary every
+/// engine's event type embeds and the core intercepts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum FaultEv {
+    Crash { fault: usize },
+    DegradeStart { fault: usize },
+    DegradeEnd { fault: usize },
+}
+
+/// An engine event type that can carry the shared fault events.
+pub(crate) trait CoreEv: Sized {
+    fn from_fault(f: FaultEv) -> Self;
+    /// Inverse of `from_fault`: the core intercepts and applies these
+    /// instead of handing them to the harness.
+    fn to_fault(&self) -> Option<FaultEv>;
+}
+
+/// Schedule the not-yet-consumed fault plan into an engine's queue.
+/// `start` is the engine's epoch (a later batch stage re-schedules the
+/// remaining plan from its own start time; single-epoch engines pass
+/// 0.0): crashes clamp to it, and a degrade window that already closed
+/// is consumed without firing.
+pub(crate) fn schedule_faults<E: CoreEv>(
+    state: &mut FaultState,
+    q: &mut EventQueue<E>,
+    start: f64,
+) {
+    for i in 0..state.faults.len() {
+        if state.consumed[i] {
+            continue;
+        }
+        match state.faults[i] {
+            FaultSpec::SlaveCrash { at_secs, .. } => {
+                q.push_at(at_secs.max(start), E::from_fault(FaultEv::Crash { fault: i }));
+            }
+            FaultSpec::LinkDegrade {
+                at_secs,
+                duration_secs,
+                ..
+            } => {
+                let end = at_secs + duration_secs;
+                if end <= start {
+                    state.consumed[i] = true;
+                    continue;
+                }
+                q.push_at(
+                    at_secs.max(start),
+                    E::from_fault(FaultEv::DegradeStart { fault: i }),
+                );
+                if end.is_finite() {
+                    q.push_at(end, E::from_fault(FaultEv::DegradeEnd { fault: i }));
+                }
+            }
+            FaultSpec::Straggler { .. } => {}
+        }
+    }
+}
+
+/// Apply a WAN degradation factor to a site's full-duplex uplink —
+/// one capacity change no matter which engine owns the links.
+pub(crate) fn apply_site_degrade(
+    net: &mut NetSim,
+    links: &NetLinks,
+    testbed: &Testbed,
+    site: usize,
+    factor: f64,
+) {
+    let cap = (testbed.wan_bps * factor).max(1.0);
+    net.set_link_capacity(links.site_up[site], cap);
+    net.set_link_capacity(links.site_down[site], cap);
+}
+
+/// A degradation window opened: count it once and squeeze the site's
+/// uplinks to the combined factor of every window active at `now`
+/// (overlapping degradations compound instead of overwriting).
+pub(crate) fn handle_degrade_start(
+    state: &mut FaultState,
+    net: &mut NetSim,
+    links: &NetLinks,
+    testbed: &Testbed,
+    fault: usize,
+    now: f64,
+) {
+    if let FaultSpec::LinkDegrade { site, .. } = state.faults[fault] {
+        state.count_once(fault);
+        let f = state.degrade_factor_at(site, now);
+        apply_site_degrade(net, links, testbed, site, f);
+    }
+}
+
+/// A degradation window closed: restore the site's uplinks to whatever
+/// the *remaining* windows dictate, not blindly to 1.0.
+pub(crate) fn handle_degrade_end(
+    state: &mut FaultState,
+    net: &mut NetSim,
+    links: &NetLinks,
+    testbed: &Testbed,
+    fault: usize,
+    now: f64,
+) {
+    state.consumed[fault] = true;
+    if let FaultSpec::LinkDegrade { site, .. } = state.faults[fault] {
+        let f = state.degrade_factor_at(site, now);
+        apply_site_degrade(net, links, testbed, site, f);
+    }
+}
+
+// ------------------------------------------------------------ the loop
+
+/// What [`drive`] returns: the events it dispatched (flow completions,
+/// queue events, fault injections — every engine counts them the same
+/// way) and the virtual time of the last wave.
+pub(crate) struct DriveOutcome {
+    pub(crate) events: u64,
+    pub(crate) end: f64,
+}
+
+/// One engine plugged into the shared loop.  The core owns time
+/// selection, flow-completion dispatch, wave draining, event counting
+/// and fault application; the harness owns workload semantics.
+pub(crate) trait Harness {
+    type Ev: CoreEv;
+
+    /// Loop-top exit test.  Engines that must also drain the network
+    /// include `net.active_flows() == 0` here; the staged Angle
+    /// pipeline exits on its own stage machine instead.
+    fn finished(&self, net: &NetSim) -> bool;
+
+    /// Queue and network both exhausted before [`Harness::finished`]:
+    /// `Ok(())` ends the run (batch/traffic semantics — everything
+    /// outstanding was already accounted), `Err` aborts (the Angle
+    /// pipeline treats a stall as a bug).
+    fn on_stall(&mut self) -> Result<(), String> {
+        Ok(())
+    }
+
+    /// A network flow completed at `now`.
+    fn flow_done(
+        &mut self,
+        fid: FlowId,
+        now: f64,
+        net: &mut NetSim,
+        q: &mut EventQueue<Self::Ev>,
+        state: &mut FaultState,
+    ) -> Result<(), String>;
+
+    /// A non-fault event fired at `now` (fault events never reach
+    /// this: the core intercepts them).
+    fn handle(
+        &mut self,
+        ev: Self::Ev,
+        now: f64,
+        net: &mut NetSim,
+        q: &mut EventQueue<Self::Ev>,
+        state: &mut FaultState,
+    ) -> Result<(), String>;
+
+    /// A crash fault named a live node.  The core already marked the
+    /// fault consumed and the node dead (the shared prologue); the
+    /// harness re-queues the node's work and re-routes its transfers.
+    fn on_crash(
+        &mut self,
+        node: usize,
+        now: f64,
+        net: &mut NetSim,
+        q: &mut EventQueue<Self::Ev>,
+        state: &mut FaultState,
+    ) -> Result<(), String>;
+
+    /// End of a wave at `now`; `drained` says whether queue events
+    /// fired this wave (the batch engine only re-pumps its SPEs then;
+    /// the colocation and Angle engines act every wave).
+    fn after_wave(
+        &mut self,
+        now: f64,
+        drained: bool,
+        net: &mut NetSim,
+        q: &mut EventQueue<Self::Ev>,
+        state: &mut FaultState,
+    ) -> Result<(), String>;
+}
+
+/// The shared event loop: `next = min(queue, network)`, advance the
+/// network and dispatch completed flows in id order, drain the
+/// simultaneous event wave FIFO, intercept fault events, then the
+/// post-wave hook.  Returns the event count and end time.
+pub(crate) fn drive<H: Harness>(
+    h: &mut H,
+    net: &mut NetSim,
+    q: &mut EventQueue<H::Ev>,
+    state: &mut FaultState,
+    links: &NetLinks,
+    testbed: &Testbed,
+) -> Result<DriveOutcome, String> {
+    let mut events: u64 = 0;
+    let mut now = net.now();
+    let mut batch: Vec<H::Ev> = Vec::new();
+    loop {
+        if h.finished(net) {
+            break;
+        }
+        let tq = q.peek_time();
+        let tn = net.next_completion().map(|(t, _)| t);
+        let next = match (tq, tn) {
+            (None, None) => {
+                h.on_stall()?;
+                break;
+            }
+            (Some(a), None) => a,
+            (None, Some(b)) => b,
+            (Some(a), Some(b)) => a.min(b),
+        };
+        now = next;
+        for fid in net.advance_to(next) {
+            events += 1;
+            h.flow_done(fid, now, net, q, state)?;
+        }
+        let mut drained = false;
+        if q.peek_time() == Some(next) {
+            drained = true;
+            batch.clear();
+            q.pop_simultaneous(&mut batch);
+            for ev in batch.drain(..) {
+                events += 1;
+                match ev.to_fault() {
+                    Some(FaultEv::Crash { fault }) => {
+                        state.consumed[fault] = true;
+                        if let FaultSpec::SlaveCrash { node, .. } = state.faults[fault] {
+                            if !state.dead[node] {
+                                state.crash(node);
+                                h.on_crash(node, now, net, q, state)?;
+                            }
+                        }
+                    }
+                    Some(FaultEv::DegradeStart { fault }) => {
+                        handle_degrade_start(state, net, links, testbed, fault, now)
+                    }
+                    Some(FaultEv::DegradeEnd { fault }) => {
+                        handle_degrade_end(state, net, links, testbed, fault, now)
+                    }
+                    None => h.handle(ev, now, net, q, state)?,
+                }
+            }
+        }
+        h.after_wave(now, drained, net, q, state)?;
+    }
+    Ok(DriveOutcome { events, end: now })
+}
+
+// ------------------------------------------------------------ speculation
+
+/// A live attempt as the speculation scanner sees it.
+pub(crate) struct SpecCand {
+    pub(crate) gen: u64,
+    /// Work-unit id (segment / task / window) the attempt executes.
+    pub(crate) unit: usize,
+    pub(crate) started: f64,
+    pub(crate) speculative: bool,
+}
+
+/// Sibling-attempt bookkeeping behind speculative re-execution,
+/// shared by the colocation, Hadoop and Angle engines.  The engines
+/// keep only their cutoff policy; launch mechanics (one backup per
+/// unit, first-finisher-wins, deduplicated re-check scheduling) live
+/// here.
+#[derive(Default)]
+pub(crate) struct Speculation {
+    /// Live attempt gens per work-unit id.
+    by_unit: BTreeMap<usize, Vec<u64>>,
+    /// Units that already got their one backup.
+    speculated: HashSet<usize>,
+    /// Earliest pending re-check (dedup so scans don't flood the queue).
+    check_at: Option<f64>,
+}
+
+impl Speculation {
+    pub(crate) fn new() -> Speculation {
+        Speculation::default()
+    }
+
+    /// Record a live attempt of `unit`.
+    pub(crate) fn register(&mut self, unit: usize, gen: u64) {
+        self.by_unit.entry(unit).or_default().push(gen);
+    }
+
+    /// Number of live attempts of `unit`.
+    pub(crate) fn attempts(&self, unit: usize) -> usize {
+        self.by_unit.get(&unit).map_or(0, Vec::len)
+    }
+
+    /// An attempt finished first: forget the unit and return every
+    /// sibling attempt (the speculation loser, or the original when
+    /// the backup won) for cancellation.
+    pub(crate) fn take_losers(&mut self, unit: usize, winner: u64) -> Vec<u64> {
+        self.by_unit
+            .remove(&unit)
+            .map(|gens| gens.into_iter().filter(|&g| g != winner).collect())
+            .unwrap_or_default()
+    }
+
+    /// An attempt died (crash): drop it and return how many sibling
+    /// attempts of the unit remain (0 = the unit must be re-queued).
+    pub(crate) fn drop_attempt(&mut self, unit: usize, gen: u64) -> usize {
+        let remaining = {
+            let v = self.by_unit.entry(unit).or_default();
+            v.retain(|&x| x != gen);
+            v.len()
+        };
+        if remaining == 0 {
+            self.by_unit.remove(&unit);
+        }
+        remaining
+    }
+
+    /// Latch `unit` as having received its one backup attempt.
+    pub(crate) fn mark_speculated(&mut self, unit: usize) {
+        self.speculated.insert(unit);
+    }
+
+    /// Has `unit` already received its one backup?
+    pub(crate) fn is_speculated(&self, unit: usize) -> bool {
+        self.speculated.contains(&unit)
+    }
+
+    /// A backup attempt died before finishing: lift the latch so the
+    /// surviving attempt may earn a new backup.
+    pub(crate) fn unmark_speculated(&mut self, unit: usize) {
+        self.speculated.remove(&unit);
+    }
+
+    /// First live attempt of `unit` in registration order, if any.
+    pub(crate) fn first_attempt(&self, unit: usize) -> Option<u64> {
+        self.by_unit.get(&unit).and_then(|v| v.first().copied())
+    }
+
+    /// Reset per-stage state (a new stage gets fresh backups).
+    pub(crate) fn clear_stage(&mut self) {
+        self.by_unit.clear();
+        self.speculated.clear();
+        self.check_at = None;
+    }
+
+    /// The shared speculation check: given the in-flight attempts (in
+    /// deterministic gen order) and the engine's cutoff, return the
+    /// attempts to back up now plus the earliest future crossing (for
+    /// a re-check).  Backup-ineligible attempts — already speculative,
+    /// unit latched, or a sibling already live — are skipped.
+    pub(crate) fn scan(
+        &self,
+        now: f64,
+        cutoff: f64,
+        inflight: impl Iterator<Item = SpecCand>,
+    ) -> (Vec<u64>, Option<f64>) {
+        let mut launch: Vec<u64> = Vec::new();
+        let mut earliest_cross: Option<f64> = None;
+        for cand in inflight {
+            if cand.speculative
+                || self.speculated.contains(&cand.unit)
+                || self.attempts(cand.unit) > 1
+            {
+                continue;
+            }
+            if now - cand.started >= cutoff {
+                launch.push(cand.gen);
+            } else {
+                let t = cand.started + cutoff;
+                earliest_cross = Some(earliest_cross.map_or(t, |e: f64| e.min(t)));
+            }
+        }
+        (launch, earliest_cross)
+    }
+
+    /// Schedule a re-check at `t` unless an earlier one is already
+    /// pending (`mk` builds the engine's re-check event).
+    pub(crate) fn schedule_recheck<E>(
+        &mut self,
+        t: Option<f64>,
+        now: f64,
+        q: &mut EventQueue<E>,
+        mk: impl FnOnce() -> E,
+    ) {
+        let Some(t) = t else {
+            return;
+        };
+        let t = t.max(now);
+        let stale = match self.check_at {
+            None => true,
+            Some(at) => at <= now || t < at,
+        };
+        if stale {
+            self.check_at = Some(t);
+            q.push_at(t, mk());
+        }
+    }
+
+    /// The pending re-check fired; allow the next one to schedule.
+    pub(crate) fn recheck_fired(&mut self) {
+        self.check_at = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_faults_consumes_expired_windows_and_clamps() {
+        let faults = vec![
+            FaultSpec::SlaveCrash {
+                at_secs: 1.0,
+                node: 0,
+            },
+            FaultSpec::LinkDegrade {
+                at_secs: 0.0,
+                duration_secs: 2.0,
+                site: 0,
+                factor: 0.5,
+            },
+            FaultSpec::LinkDegrade {
+                at_secs: 4.0,
+                duration_secs: 2.0,
+                site: 0,
+                factor: 0.5,
+            },
+            FaultSpec::Straggler {
+                node: 1,
+                factor: 0.5,
+            },
+        ];
+        let mut state = FaultState::new(&faults, 2);
+        let mut q: EventQueue<FaultEv> = EventQueue::new();
+        // Epoch 3.0: the crash clamps forward, the first window is
+        // already over (consumed silently), the second fires whole.
+        schedule_faults(&mut state, &mut q, 3.0);
+        assert!(state.consumed[1], "expired window consumed");
+        let mut evs = Vec::new();
+        while let Some((t, e)) = q.pop() {
+            evs.push((t, e));
+        }
+        assert_eq!(
+            evs,
+            vec![
+                (3.0, FaultEv::Crash { fault: 0 }),
+                (4.0, FaultEv::DegradeStart { fault: 2 }),
+                (6.0, FaultEv::DegradeEnd { fault: 2 }),
+            ]
+        );
+    }
+
+    #[test]
+    fn speculation_one_backup_per_unit_and_recheck_dedup() {
+        let mut spec = Speculation::new();
+        spec.register(7, 1);
+        // One young attempt: nothing launches, a crossing is reported.
+        let (launch, cross) = spec.scan(
+            1.0,
+            10.0,
+            std::iter::once(SpecCand {
+                gen: 1,
+                unit: 7,
+                started: 0.0,
+                speculative: false,
+            }),
+        );
+        assert!(launch.is_empty());
+        assert_eq!(cross, Some(10.0));
+        // Past the cutoff it launches; once a sibling is live or the
+        // unit is latched, it never launches again.
+        let cand = |spec_flag| SpecCand {
+            gen: 1,
+            unit: 7,
+            started: 0.0,
+            speculative: spec_flag,
+        };
+        let (launch, _) = spec.scan(11.0, 10.0, std::iter::once(cand(false)));
+        assert_eq!(launch, vec![1]);
+        spec.mark_speculated(7);
+        spec.register(7, 2);
+        let (launch, _) = spec.scan(11.0, 10.0, std::iter::once(cand(false)));
+        assert!(launch.is_empty(), "latched unit never re-speculates");
+        // First-finisher-wins: the loser list is every sibling.
+        assert_eq!(spec.take_losers(7, 2), vec![1]);
+        // Re-check dedup: an earlier pending check swallows later ones.
+        let mut q: EventQueue<u8> = EventQueue::new();
+        spec.schedule_recheck(Some(5.0), 1.0, &mut q, || 0);
+        spec.schedule_recheck(Some(6.0), 1.0, &mut q, || 1);
+        assert_eq!(q.len(), 1, "later check deduplicated");
+        spec.schedule_recheck(Some(4.0), 1.0, &mut q, || 2);
+        assert_eq!(q.len(), 2, "earlier check replaces the pending one");
+    }
+
+    #[test]
+    fn drop_attempt_reports_remaining_siblings() {
+        let mut spec = Speculation::new();
+        spec.register(3, 10);
+        spec.register(3, 11);
+        assert_eq!(spec.drop_attempt(3, 10), 1, "backup lives on");
+        assert_eq!(spec.drop_attempt(3, 11), 0, "unit must re-queue");
+        assert_eq!(spec.attempts(3), 0);
+    }
+}

@@ -29,6 +29,11 @@
 //! the flow table iterates in id order without hashing, which keeps a
 //! 128-node faulted Terasort scenario in the low milliseconds of wall
 //! time (benches/bench_scale.rs prints events/sec).
+//!
+//! The event loop itself lives in `scenario::core` (DESIGN.md §14):
+//! this engine is a [`core::Harness`] — it owns stage semantics
+//! (segment service times, the shuffle, SPE pumping) while the core
+//! owns dispatch, fault application and event counting.
 
 use std::collections::BTreeMap;
 
@@ -41,7 +46,14 @@ use crate::sphere::simjob::udt_efficiency;
 use crate::topology::{NetLinks, Proximity, Testbed, rack_diverse_replica};
 use crate::transport::TransportModels;
 
-use super::{FaultSpec, ScenarioSpec, WorkloadKind};
+use super::core::{self, CoreEv, FaultEv, Harness};
+use super::{ScenarioSpec, WorkloadKind};
+
+// Fault-plan machinery moved to the shared engine core; re-exported so
+// the service/colocate/hadoop/angle engines keep their import paths.
+pub(crate) use super::core::{
+    apply_site_degrade, handle_degrade_end, handle_degrade_start, FaultState,
+};
 
 /// What a scenario run produced. Byte-identical across repeat runs of
 /// the same spec (the determinism contract the suite asserts).
@@ -190,14 +202,17 @@ pub(crate) fn run_batch(spec: &ScenarioSpec, testbed: &Testbed) -> Result<BatchO
 
     let makespan = match workload.kind {
         WorkloadKind::Terasort => {
-            let end_a = StageRun::new(testbed, &spec.cfg, StageKind::TerasortA, b, 0.0, &mut state)?
-                .execute(&mut agg)?;
-            StageRun::new(testbed, &spec.cfg, StageKind::TerasortB, b, end_a, &mut state)?
-                .execute(&mut agg)?
+            let (run, net, q) =
+                StageRun::new(testbed, &spec.cfg, StageKind::TerasortA, b, 0.0, &state)?;
+            let end_a = run.execute(net, q, &mut state, &mut agg)?;
+            let (run, net, q) =
+                StageRun::new(testbed, &spec.cfg, StageKind::TerasortB, b, end_a, &state)?;
+            run.execute(net, q, &mut state, &mut agg)?
         }
         WorkloadKind::Filegen => {
-            StageRun::new(testbed, &spec.cfg, StageKind::Filegen, b, 0.0, &mut state)?
-                .execute(&mut agg)?
+            let (run, net, q) =
+                StageRun::new(testbed, &spec.cfg, StageKind::Filegen, b, 0.0, &state)?;
+            run.execute(net, q, &mut state, &mut agg)?
         }
         // The staged Angle pipeline owns its whole substrate — ingest,
         // extract, aggregate, cluster and score all run event-driven
@@ -221,129 +236,6 @@ pub(crate) fn run_batch(spec: &ScenarioSpec, testbed: &Testbed) -> Result<BatchO
         state,
         angle: None,
     })
-}
-
-// ------------------------------------------------------------ fault state
-
-/// Fault plan progress carried across workload stages.  Shared with
-/// the service-layer traffic engine, which composes the same fault
-/// plan with a request stream instead of a batch job.
-pub(crate) struct FaultState {
-    pub(crate) faults: Vec<FaultSpec>,
-    /// crash applied / degrade window fully elapsed.
-    pub(crate) consumed: Vec<bool>,
-    /// fault counted in `injected` (a degrade window can re-fire its
-    /// start event in a later stage; it must not count twice).
-    counted: Vec<bool>,
-    pub(crate) dead: Vec<bool>,
-    /// Live node ids in order — cached because the hot loop asks on
-    /// every segment completion and the set only changes on a crash.
-    alive_list: Vec<usize>,
-    /// Straggler speed multiplier per node (1.0 = nominal).
-    pub(crate) factor: Vec<f64>,
-    pub(crate) injected: usize,
-    pub(crate) crashes: usize,
-}
-
-impl FaultState {
-    pub(crate) fn new(faults: &[FaultSpec], nodes: usize) -> FaultState {
-        let mut s = FaultState {
-            faults: faults.to_vec(),
-            consumed: vec![false; faults.len()],
-            counted: vec![false; faults.len()],
-            dead: vec![false; nodes],
-            alive_list: (0..nodes).collect(),
-            factor: vec![1.0; nodes],
-            injected: 0,
-            crashes: 0,
-        };
-        for (i, f) in faults.iter().enumerate() {
-            if let FaultSpec::Straggler { node, factor } = f {
-                s.factor[*node] *= factor;
-                s.consumed[i] = true;
-                s.counted[i] = true;
-                s.injected += 1;
-            }
-        }
-        s
-    }
-
-    pub(crate) fn count_once(&mut self, fault: usize) {
-        if !self.counted[fault] {
-            self.counted[fault] = true;
-            self.injected += 1;
-        }
-    }
-
-    pub(crate) fn alive(&self) -> &[usize] {
-        &self.alive_list
-    }
-
-    pub(crate) fn crash(&mut self, node: usize) {
-        if !self.dead[node] {
-            self.dead[node] = true;
-            self.alive_list.retain(|&n| n != node);
-            self.crashes += 1;
-            self.injected += 1;
-        }
-    }
-
-    /// Apply every crash scheduled at or before `now` (analytic
-    /// workloads advance in rounds rather than per-event).
-    fn apply_crashes_due(&mut self, now: f64) {
-        for i in 0..self.faults.len() {
-            if self.consumed[i] {
-                continue;
-            }
-            if let FaultSpec::SlaveCrash { at_secs, node } = self.faults[i] {
-                if at_secs <= now {
-                    self.consumed[i] = true;
-                    self.crash(node);
-                }
-            }
-        }
-    }
-
-    /// WAN degradation factor applying to `site` at time `now`.
-    pub(crate) fn degrade_factor_at(&self, site: usize, now: f64) -> f64 {
-        let mut f = 1.0;
-        for fault in &self.faults {
-            if let FaultSpec::LinkDegrade {
-                at_secs,
-                duration_secs,
-                site: s,
-                factor,
-            } = fault
-            {
-                if *s == site && *at_secs <= now && now < at_secs + duration_secs {
-                    f *= factor;
-                }
-            }
-        }
-        f
-    }
-
-    /// Like `degrade_factor_at`, but records the matched windows in
-    /// `faults_injected` — the analytic workloads have no Degrade
-    /// events, so this is where their faults get counted.
-    fn degrade_factor_counting(&mut self, site: usize, now: f64) -> f64 {
-        let mut f = 1.0;
-        for i in 0..self.faults.len() {
-            if let FaultSpec::LinkDegrade {
-                at_secs,
-                duration_secs,
-                site: s,
-                factor,
-            } = self.faults[i]
-            {
-                if s == site && at_secs <= now && now < at_secs + duration_secs {
-                    f *= factor;
-                    self.count_once(i);
-                }
-            }
-        }
-        f
-    }
 }
 
 // ------------------------------------------------------------ aggregates
@@ -447,13 +339,26 @@ impl StageKind {
     }
 }
 
-/// Events in a staged run.
+/// Events in a staged run: segment completions plus the shared fault
+/// vocabulary the core intercepts.
 enum Ev {
     /// A segment finished on its SPE (stale if the generation is gone).
     Seg { gen: u64 },
-    Crash { fault: usize },
-    DegradeStart { fault: usize },
-    DegradeEnd { fault: usize },
+    /// Crash / brown-out events owned by `scenario::core`.
+    Fault(FaultEv),
+}
+
+impl CoreEv for Ev {
+    fn from_fault(f: FaultEv) -> Ev {
+        Ev::Fault(f)
+    }
+
+    fn to_fault(&self) -> Option<FaultEv> {
+        match self {
+            Ev::Fault(f) => Some(*f),
+            Ev::Seg { .. } => None,
+        }
+    }
 }
 
 struct FlowOut {
@@ -461,18 +366,17 @@ struct FlowOut {
     dst: usize,
 }
 
-/// One event-driven stage over every node's `bytes_per_node`.
+/// One event-driven stage over every node's `bytes_per_node`.  The
+/// substrate (NetSim, queue, fault state) lives outside and is threaded
+/// through `core::drive`; this struct owns only stage semantics.
 struct StageRun<'a> {
     testbed: &'a Testbed,
     cfg: &'a SimConfig,
     kind: StageKind,
     start: f64,
-    state: &'a mut FaultState,
     models: TransportModels,
     sched: Scheduler,
-    net: NetSim,
     links: NetLinks,
-    q: EventQueue<Ev>,
     /// generation -> (node, segment) for in-flight work.
     inflight: BTreeMap<u64, (usize, Segment)>,
     next_gen: u64,
@@ -494,8 +398,8 @@ impl<'a> StageRun<'a> {
         kind: StageKind,
         bytes_per_node: f64,
         start: f64,
-        state: &'a mut FaultState,
-    ) -> Result<StageRun<'a>, String> {
+        state: &FaultState,
+    ) -> Result<(StageRun<'a>, NetSim, EventQueue<Ev>), String> {
         let n = testbed.nodes();
         let spes = cfg.sphere.spes_per_node.max(1);
         let n_links = 2 * n + 2 * testbed.racks() + 2 * testbed.site_names.len();
@@ -507,72 +411,32 @@ impl<'a> StageRun<'a> {
         net.advance_to(start);
         let q = EventQueue::with_capacity(n * spes + 2 * state.faults.len() + 8);
         let coord_secs = coordination_secs(testbed);
-        StageRun {
+        let segments = build_stage_segments(testbed, cfg, state, bytes_per_node, spes)?;
+        let mut sched = Scheduler::new(segments, cfg.sphere.locality_scheduling);
+        sched.max_attempts = cfg.sphere.max_attempts;
+        let run = StageRun {
             testbed,
             cfg,
             kind,
             start,
-            state,
             models: TransportModels::default(),
-            sched: Scheduler::new(Vec::new(), cfg.sphere.locality_scheduling),
-            net,
+            sched,
             links,
-            q,
             inflight: BTreeMap::new(),
             next_gen: 0,
             running: vec![0; n],
             flows: BTreeMap::new(),
             coord_secs,
             nominal_caps,
-        }
-        .with_segments(bytes_per_node, spes)
-    }
-
-    /// Build the stage's segment list (`build_stage_segments`) and hand
-    /// it to a fresh scheduler.
-    fn with_segments(mut self, bytes_per_node: f64, spes: usize) -> Result<StageRun<'a>, String> {
-        let segments = build_stage_segments(self.testbed, self.cfg, self.state, bytes_per_node, spes)?;
-        self.sched = Scheduler::new(segments, self.cfg.sphere.locality_scheduling);
-        self.sched.max_attempts = self.cfg.sphere.max_attempts;
-        Ok(self)
-    }
-
-    /// Schedule the not-yet-consumed fault plan into this stage's queue.
-    fn schedule_faults(&mut self) {
-        for (i, f) in self.state.faults.clone().into_iter().enumerate() {
-            if self.state.consumed[i] {
-                continue;
-            }
-            match f {
-                FaultSpec::SlaveCrash { at_secs, .. } => {
-                    self.q.push_at(at_secs.max(self.start), Ev::Crash { fault: i });
-                }
-                FaultSpec::LinkDegrade {
-                    at_secs,
-                    duration_secs,
-                    ..
-                } => {
-                    let end = at_secs + duration_secs;
-                    if end <= self.start {
-                        self.state.consumed[i] = true;
-                        continue;
-                    }
-                    self.q
-                        .push_at(at_secs.max(self.start), Ev::DegradeStart { fault: i });
-                    if end.is_finite() {
-                        self.q.push_at(end, Ev::DegradeEnd { fault: i });
-                    }
-                }
-                FaultSpec::Straggler { .. } => {}
-            }
-        }
+        };
+        Ok((run, net, q))
     }
 
     /// Hand pending segments to every idle SPE slot.
-    fn pump(&mut self, now: f64) {
+    fn pump(&mut self, now: f64, q: &mut EventQueue<Ev>, state: &FaultState) {
         let spes = self.cfg.sphere.spes_per_node.max(1);
         for node in 0..self.testbed.nodes() {
-            if self.state.dead[node] {
+            if state.dead[node] {
                 continue;
             }
             while self.running[node] < spes {
@@ -581,16 +445,23 @@ impl<'a> StageRun<'a> {
                 };
                 self.next_gen += 1;
                 let secs = self.kind.service_secs(self.cfg, seg.bytes as f64)
-                    / self.state.factor[node]
+                    / state.factor[node]
                     + self.coord_secs;
-                self.q.push_at(now + secs, Ev::Seg { gen: self.next_gen });
+                q.push_at(now + secs, Ev::Seg { gen: self.next_gen });
                 self.inflight.insert(self.next_gen, (node, seg));
                 self.running[node] += 1;
             }
         }
     }
 
-    fn start_shuffle_flow(&mut self, src: usize, dst: usize, bytes: f64) {
+    fn start_shuffle_flow(
+        &mut self,
+        src: usize,
+        dst: usize,
+        bytes: f64,
+        net: &mut NetSim,
+        state: &FaultState,
+    ) {
         let path = self.testbed.path(&self.links, src, dst);
         let cap = shuffle_rate_cap(
             self.cfg,
@@ -599,49 +470,139 @@ impl<'a> StageRun<'a> {
             &path,
             self.testbed.nic_bps,
             self.testbed.rtt_secs(src, dst),
-            self.state.factor[src],
+            state.factor[src],
         );
-        let fid = self.net.start_flow(&path, bytes.max(1.0), cap.max(1.0));
+        let fid = net.start_flow(&path, bytes.max(1.0), cap.max(1.0));
         self.flows.insert(fid, FlowOut { src, dst });
     }
 
-    fn handle_crash(&mut self, fault: usize, agg: &mut Aggregate) -> Result<(), String> {
-        self.state.consumed[fault] = true;
-        let FaultSpec::SlaveCrash { node, .. } = self.state.faults[fault] else {
-            return Ok(());
+    /// Run the stage to completion on the core loop; returns its end
+    /// time.
+    fn execute(
+        mut self,
+        mut net: NetSim,
+        mut q: EventQueue<Ev>,
+        state: &mut FaultState,
+        agg: &mut Aggregate,
+    ) -> Result<f64, String> {
+        core::schedule_faults(state, &mut q, self.start);
+        self.pump(self.start, &mut q, state);
+        let links = self.links.clone();
+        let testbed = self.testbed;
+        let out = {
+            let mut h = StageHarness {
+                run: &mut self,
+                agg,
+            };
+            core::drive(&mut h, &mut net, &mut q, state, &links, testbed)?
         };
-        if self.state.dead[node] {
-            return Ok(());
+        agg.events += out.events;
+        agg.local_assignments += self.sched.local_assignments;
+        agg.remote_assignments += self.sched.remote_assignments;
+        agg.stage_ends.push((self.kind.name().to_string(), out.end));
+        Ok(out.end)
+    }
+}
+
+/// The batch stage plugged into the core loop: stage state plus the
+/// cross-stage aggregate it reports into.
+struct StageHarness<'r, 'a> {
+    run: &'r mut StageRun<'a>,
+    agg: &'r mut Aggregate,
+}
+
+impl<'r, 'a> Harness for StageHarness<'r, 'a> {
+    type Ev = Ev;
+
+    fn finished(&self, net: &NetSim) -> bool {
+        self.run.sched.is_drained() && self.run.inflight.is_empty() && net.active_flows() == 0
+    }
+
+    fn flow_done(
+        &mut self,
+        fid: FlowId,
+        _now: f64,
+        _net: &mut NetSim,
+        _q: &mut EventQueue<Ev>,
+        _state: &mut FaultState,
+    ) -> Result<(), String> {
+        self.run.flows.remove(&fid);
+        Ok(())
+    }
+
+    fn handle(
+        &mut self,
+        ev: Ev,
+        _now: f64,
+        net: &mut NetSim,
+        _q: &mut EventQueue<Ev>,
+        state: &mut FaultState,
+    ) -> Result<(), String> {
+        let Ev::Seg { gen } = ev else {
+            return Ok(()); // fault events never reach the harness
+        };
+        let run = &mut *self.run;
+        let Some((node, seg)) = run.inflight.remove(&gen) else {
+            return Ok(()); // pre-empted by a crash
+        };
+        run.running[node] -= 1;
+        run.sched.complete(&seg);
+        self.agg.segments += 1;
+        if run.kind.shuffles() {
+            // Scoped: `alive` borrows the fault state,
+            // start_shuffle_flow needs the run mutably.
+            let (n_alive, dst) = {
+                let alive = state.alive();
+                (alive.len(), pick_dst_in(alive, node, seg.id))
+            };
+            if let Some(dst) = dst {
+                let frac = (n_alive - 1) as f64 / n_alive as f64;
+                let bytes = seg.bytes as f64 * frac;
+                run.start_shuffle_flow(node, dst, bytes, net, state);
+                self.agg.shuffle_bytes += bytes;
+                self.agg.tier.add(run.testbed, node, dst, bytes);
+            }
         }
-        self.state.crash(node);
+        Ok(())
+    }
+
+    fn on_crash(
+        &mut self,
+        node: usize,
+        _now: f64,
+        net: &mut NetSim,
+        _q: &mut EventQueue<Ev>,
+        state: &mut FaultState,
+    ) -> Result<(), String> {
+        let run = &mut *self.run;
         // Re-queue the dead node's running segments.
-        let stale: Vec<u64> = self
+        let stale: Vec<u64> = run
             .inflight
             .iter()
             .filter(|(_, (nd, _))| *nd == node)
             .map(|(&g, _)| g)
             .collect();
         for g in stale {
-            let (_, seg) = self.inflight.remove(&g).expect("stale gen exists");
+            let (_, seg) = run.inflight.remove(&g).expect("stale gen exists");
             let id = seg.id;
-            if !self.sched.fail(seg) {
+            if !run.sched.fail(seg) {
                 // Explicit job failure — never a silent drop from
                 // pending (the exhausted id is also recorded in the
                 // scheduler for the property suite).
                 return Err(format!(
                     "job failed: segment {id} exhausted its {} attempts \
                      after node {node} crashed",
-                    self.sched.max_attempts
+                    run.sched.max_attempts
                 ));
             }
-            agg.reassignments += 1;
+            self.agg.reassignments += 1;
         }
-        self.running[node] = 0;
+        run.running[node] = 0;
         // Re-route transfers headed for the dead node: pick the new
         // destinations under a scoped alive-list borrow, then act.
         let redirect: Vec<(FlowId, usize, Option<usize>)> = {
-            let alive = self.state.alive();
-            self.flows
+            let alive = state.alive();
+            run.flows
                 .iter()
                 .filter(|(_, fo)| fo.dst == node)
                 .map(|(&f, fo)| (f, fo.src, pick_dst_in(alive, fo.src, fo.dst + 1)))
@@ -650,96 +611,28 @@ impl<'a> StageRun<'a> {
         // The rerouted remainder is not re-counted in tier/shuffle
         // byte totals — those count each payload once, at first send.
         for (fid, src, new_dst) in redirect {
-            self.flows.remove(&fid);
-            let left = self.net.cancel_flow(fid);
+            run.flows.remove(&fid);
+            let left = net.cancel_flow(fid);
             if let Some(new_dst) = new_dst {
-                self.start_shuffle_flow(src, new_dst, left);
+                run.start_shuffle_flow(src, new_dst, left, net, state);
             }
-            agg.reassignments += 1;
+            self.agg.reassignments += 1;
         }
         Ok(())
     }
 
-    /// Run the stage to completion; returns its end time.
-    fn execute(mut self, agg: &mut Aggregate) -> Result<f64, String> {
-        self.schedule_faults();
-        self.pump(self.start);
-        let mut now = self.start;
-        let mut batch: Vec<Ev> = Vec::new();
-        loop {
-            if self.sched.is_drained() && self.inflight.is_empty() && self.net.active_flows() == 0
-            {
-                break;
-            }
-            let tq = self.q.peek_time();
-            let tn = self.net.next_completion().map(|(t, _)| t);
-            let next = match (tq, tn) {
-                (None, None) => break,
-                (Some(a), None) => a,
-                (None, Some(b)) => b,
-                (Some(a), Some(b)) => a.min(b),
-            };
-            now = next;
-            for fid in self.net.advance_to(next) {
-                agg.events += 1;
-                self.flows.remove(&fid);
-            }
-            if self.q.peek_time() == Some(next) {
-                batch.clear();
-                self.q.pop_simultaneous(&mut batch);
-                for ev in batch.drain(..) {
-                    agg.events += 1;
-                    match ev {
-                        Ev::Seg { gen } => {
-                            let Some((node, seg)) = self.inflight.remove(&gen) else {
-                                continue; // pre-empted by a crash
-                            };
-                            self.running[node] -= 1;
-                            self.sched.complete(&seg);
-                            agg.segments += 1;
-                            if self.kind.shuffles() {
-                                // Scoped: `alive` borrows the fault
-                                // state, start_shuffle_flow needs &mut.
-                                let (n_alive, dst) = {
-                                    let alive = self.state.alive();
-                                    (alive.len(), pick_dst_in(alive, node, seg.id))
-                                };
-                                if let Some(dst) = dst {
-                                    let frac =
-                                        (n_alive - 1) as f64 / n_alive as f64;
-                                    let bytes = seg.bytes as f64 * frac;
-                                    self.start_shuffle_flow(node, dst, bytes);
-                                    agg.shuffle_bytes += bytes;
-                                    agg.tier.add(self.testbed, node, dst, bytes);
-                                }
-                            }
-                        }
-                        Ev::Crash { fault } => self.handle_crash(fault, agg)?,
-                        Ev::DegradeStart { fault } => handle_degrade_start(
-                            self.state,
-                            &mut self.net,
-                            &self.links,
-                            self.testbed,
-                            fault,
-                            now,
-                        ),
-                        Ev::DegradeEnd { fault } => handle_degrade_end(
-                            self.state,
-                            &mut self.net,
-                            &self.links,
-                            self.testbed,
-                            fault,
-                            now,
-                        ),
-                    }
-                }
-                self.pump(now);
-            }
+    fn after_wave(
+        &mut self,
+        now: f64,
+        drained: bool,
+        _net: &mut NetSim,
+        q: &mut EventQueue<Ev>,
+        state: &mut FaultState,
+    ) -> Result<(), String> {
+        if drained {
+            self.run.pump(now, q, state);
         }
-        agg.local_assignments += self.sched.local_assignments;
-        agg.remote_assignments += self.sched.remote_assignments;
-        agg.stage_ends.push((self.kind.name().to_string(), now));
-        Ok(now)
+        Ok(())
     }
 }
 
@@ -1042,7 +935,7 @@ fn run_kmeans(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::scenario::ScenarioSpec;
+    use crate::scenario::{FaultSpec, ScenarioSpec};
     use crate::topology::TopologySpec;
     use crate::util::bytes::GB;
 

@@ -35,6 +35,7 @@
 pub mod angle;
 pub mod colocate;
 pub mod compare;
+pub(crate) mod core;
 pub mod engine;
 
 pub use angle::AngleReport;

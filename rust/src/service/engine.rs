@@ -36,17 +36,19 @@
 //!
 //! Substrate sharing: the engine does NOT own its network, event queue
 //! or fault state — every method borrows them from the driving loop.
-//! `run_traffic` is the standalone driver (service-only scenarios);
-//! `scenario::colocate` drives the same engine interleaved with a
-//! batch Sphere job on one shared substrate (DESIGN.md §11).
+//! `run_traffic` is the standalone driver (service-only scenarios),
+//! a thin [`core::Harness`] over the shared engine core (DESIGN.md
+//! §14); `scenario::colocate` drives the same engine interleaved with
+//! a batch Sphere job on one shared substrate (DESIGN.md §11).
 
 use std::collections::{BTreeMap, VecDeque};
 
 use crate::config::{SimConfig, TransportKind};
 use crate::metrics::Metrics;
 use crate::routing::chord::{ChordRing, hash_name};
-use crate::scenario::engine::{FaultState, handle_degrade_end, handle_degrade_start};
-use crate::scenario::{FaultSpec, ScenarioReport, ScenarioSpec};
+use crate::scenario::core::{self, CoreEv, FaultEv, Harness};
+use crate::scenario::engine::FaultState;
+use crate::scenario::{ScenarioReport, ScenarioSpec};
 use crate::sim::event::EventQueue;
 use crate::sim::netsim::{FlowId, LinkId, NetSim};
 use crate::sphere::simjob::udt_efficiency;
@@ -147,53 +149,16 @@ pub fn run_traffic(spec: &ScenarioSpec, testbed: &Testbed) -> Result<ScenarioRep
     let links = testbed.build_network(&mut net);
     let mut q: EventQueue<Ev> = EventQueue::with_capacity(4096);
     let mut engine = Engine::new(spec, tspec, testbed, &mut net, links.clone(), &state)?;
-    engine.schedule_fault_events(&state, &mut q);
+    core::schedule_faults(&mut state, &mut q, 0.0);
     engine.schedule_arrivals(&mut q);
 
-    let mut batch: Vec<Ev> = Vec::new();
-    loop {
-        if engine.done() && net.active_flows() == 0 {
-            break;
-        }
-        let tq = q.peek_time();
-        let tn = net.next_completion().map(|(t, _)| t);
-        let next = match (tq, tn) {
-            (None, None) => break,
-            (Some(a), None) => a,
-            (None, Some(b)) => b,
-            (Some(a), Some(b)) => a.min(b),
+    let out = {
+        let mut h = TrafficHarness {
+            engine: &mut engine,
         };
-        let now = next;
-        for fid in net.advance_to(next) {
-            engine.events += 1;
-            engine.flow_done(fid, now, &mut net, &mut q, &state);
-        }
-        if q.peek_time() == Some(next) {
-            batch.clear();
-            q.pop_simultaneous(&mut batch);
-            for ev in batch.drain(..) {
-                engine.events += 1;
-                match ev {
-                    Ev::Crash { fault } => {
-                        state.consumed[fault] = true;
-                        if let FaultSpec::SlaveCrash { node, .. } = state.faults[fault] {
-                            if !state.dead[node] {
-                                state.crash(node);
-                                engine.on_crash(node, now, &mut net, &mut q);
-                            }
-                        }
-                    }
-                    Ev::DegradeStart { fault } => {
-                        handle_degrade_start(&mut state, &mut net, &links, testbed, fault, now)
-                    }
-                    Ev::DegradeEnd { fault } => {
-                        handle_degrade_end(&mut state, &mut net, &links, testbed, fault, now)
-                    }
-                    other => engine.handle_event(other, now, &mut net, &mut q, &state),
-                }
-            }
-        }
-    }
+        core::drive(&mut h, &mut net, &mut q, &mut state, &links, testbed)?
+    };
+    engine.events = out.events;
 
     let traffic = engine.traffic_report();
     Ok(ScenarioReport {
@@ -221,9 +186,10 @@ pub fn run_traffic(spec: &ScenarioSpec, testbed: &Testbed) -> Result<ScenarioRep
 
 // ------------------------------------------------------------ events
 
-/// Service-side events.  The fault variants are scheduled and handled
-/// by the DRIVING loop (standalone above, or `scenario::colocate`);
-/// the engine itself only ever emits the first three.
+/// Service-side events.  The fault plan rides the shared
+/// [`FaultEv`] vocabulary, scheduled by `core::schedule_faults` and
+/// intercepted by `core::drive`; the engine itself only ever emits the
+/// first three variants.
 pub(crate) enum Ev {
     /// Open-loop arrival tick: issue one request, schedule the next.
     Arrive,
@@ -231,9 +197,82 @@ pub(crate) enum Ev {
     ClientWake { client: u32 },
     /// Metadata resolved: admit the request at a replica.
     Dispatch { req: u32 },
-    Crash { fault: usize },
-    DegradeStart { fault: usize },
-    DegradeEnd { fault: usize },
+    /// Crash / brown-out events owned by `scenario::core`.
+    Fault(FaultEv),
+}
+
+impl CoreEv for Ev {
+    fn from_fault(f: FaultEv) -> Ev {
+        Ev::Fault(f)
+    }
+
+    fn to_fault(&self) -> Option<FaultEv> {
+        match self {
+            Ev::Fault(f) => Some(*f),
+            _ => None,
+        }
+    }
+}
+
+/// The standalone traffic driver plugged into the core loop: the
+/// engine is the whole workload, with no post-wave hook.
+struct TrafficHarness<'e, 'a> {
+    engine: &'e mut Engine<'a>,
+}
+
+impl<'e, 'a> Harness for TrafficHarness<'e, 'a> {
+    type Ev = Ev;
+
+    fn finished(&self, net: &NetSim) -> bool {
+        self.engine.done() && net.active_flows() == 0
+    }
+
+    fn flow_done(
+        &mut self,
+        fid: FlowId,
+        now: f64,
+        net: &mut NetSim,
+        q: &mut EventQueue<Ev>,
+        state: &mut FaultState,
+    ) -> Result<(), String> {
+        self.engine.flow_done(fid, now, net, q, state);
+        Ok(())
+    }
+
+    fn handle(
+        &mut self,
+        ev: Ev,
+        now: f64,
+        net: &mut NetSim,
+        q: &mut EventQueue<Ev>,
+        state: &mut FaultState,
+    ) -> Result<(), String> {
+        self.engine.handle_event(ev, now, net, q, state);
+        Ok(())
+    }
+
+    fn on_crash(
+        &mut self,
+        node: usize,
+        now: f64,
+        net: &mut NetSim,
+        q: &mut EventQueue<Ev>,
+        _state: &mut FaultState,
+    ) -> Result<(), String> {
+        self.engine.on_crash(node, now, net, q);
+        Ok(())
+    }
+
+    fn after_wave(
+        &mut self,
+        _now: f64,
+        _drained: bool,
+        _net: &mut NetSim,
+        _q: &mut EventQueue<Ev>,
+        _state: &mut FaultState,
+    ) -> Result<(), String> {
+        Ok(())
+    }
 }
 
 enum FlowKind {
@@ -552,37 +591,6 @@ impl<'a> Engine<'a> {
     }
 
     // ---------------------------------------------------- scheduling
-
-    /// Schedule the fault plan into `q` (standalone driver only — a
-    /// colocated driver owns fault scheduling itself).
-    pub(crate) fn schedule_fault_events<E: From<Ev>>(
-        &self,
-        state: &FaultState,
-        q: &mut EventQueue<E>,
-    ) {
-        for (i, f) in state.faults.iter().enumerate() {
-            if state.consumed[i] {
-                continue;
-            }
-            match *f {
-                FaultSpec::SlaveCrash { at_secs, .. } => {
-                    q.push_at(at_secs.max(0.0), Ev::Crash { fault: i }.into());
-                }
-                FaultSpec::LinkDegrade {
-                    at_secs,
-                    duration_secs,
-                    ..
-                } => {
-                    q.push_at(at_secs.max(0.0), Ev::DegradeStart { fault: i }.into());
-                    let end = at_secs + duration_secs;
-                    if end.is_finite() {
-                        q.push_at(end, Ev::DegradeEnd { fault: i }.into());
-                    }
-                }
-                FaultSpec::Straggler { .. } => {}
-            }
-        }
-    }
 
     pub(crate) fn schedule_arrivals<E: From<Ev>>(&mut self, q: &mut EventQueue<E>) {
         match self.tspec.arrival {
@@ -1060,7 +1068,7 @@ impl<'a> Engine<'a> {
                 }
             }
             Ev::Dispatch { req } => self.dispatch(req, now, net, q, state),
-            Ev::Crash { .. } | Ev::DegradeStart { .. } | Ev::DegradeEnd { .. } => {}
+            Ev::Fault(_) => {}
         }
     }
 
@@ -1128,7 +1136,7 @@ fn client_node(seed: u64, client: u32, nodes: usize) -> u32 {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::scenario::run_scenario;
+    use crate::scenario::{run_scenario, FaultSpec};
     use crate::service::TenantSpec;
     use crate::topology::TopologySpec;
 

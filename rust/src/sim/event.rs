@@ -195,4 +195,96 @@ mod tests {
         q.pop();
         q.push_at(1.0, ());
     }
+
+    #[test]
+    fn tie_break_is_deterministic_across_replays() {
+        // Same pushes, same drain order — even when every timestamp is
+        // identical and the heap's internal layout is all that differs.
+        let run = || {
+            let mut q = EventQueue::with_capacity(64);
+            for i in 0..20 {
+                q.push_at(7.0, i);
+            }
+            for i in 20..40 {
+                q.push_at(3.0, i);
+            }
+            let mut order = Vec::new();
+            let mut batch = Vec::new();
+            while let Some(t) = q.pop_simultaneous(&mut batch) {
+                order.push((t, batch.clone()));
+                batch.clear();
+            }
+            order
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b, "replay determinism");
+        assert_eq!(a.len(), 2, "two waves");
+        assert_eq!(a[0].1, (20..40).collect::<Vec<_>>(), "FIFO within t=3 wave");
+        assert_eq!(a[1].1, (0..20).collect::<Vec<_>>(), "FIFO within t=7 wave");
+    }
+
+    #[test]
+    fn fifo_holds_for_events_pushed_mid_drain() {
+        // Events scheduled *during* a wave for the same instant join a
+        // later wave (pop_simultaneous snapshots the earliest time),
+        // still in push order.
+        let mut q = EventQueue::new();
+        q.push_at(1.0, "a");
+        q.push_at(1.0, "b");
+        let mut batch = Vec::new();
+        assert_eq!(q.pop_simultaneous(&mut batch), Some(1.0));
+        assert_eq!(batch, vec!["a", "b"]);
+        q.push_at(1.0, "late1"); // same instant, scheduled by a handler
+        q.push_at(1.0, "late2");
+        batch.clear();
+        assert_eq!(q.pop_simultaneous(&mut batch), Some(1.0));
+        assert_eq!(batch, vec!["late1", "late2"], "handler pushes stay FIFO");
+    }
+
+    #[test]
+    fn interleaves_with_netsim_completion_memo() {
+        // The engine-core loop pattern: next = min(queue, net), and the
+        // NetSim completion memo must stay coherent when a drained
+        // event changes link capacity mid-wave (the PR-2 memo's latent
+        // staleness class).
+        use crate::sim::netsim::NetSim;
+        let mut net = NetSim::new();
+        let l = net.add_link(100.0);
+        net.start_flow(&[l], 1000.0, 1e9); // completes at t=10 at full rate
+        let mut q = EventQueue::new();
+        q.push_at(4.0, "degrade");
+        q.push_at(4.0, "observer");
+
+        // First engine step: the queue wins (4.0 < 10.0).
+        let tq = q.peek_time().unwrap();
+        let tn = net.next_completion().unwrap().0;
+        assert!((tn - 10.0).abs() < 1e-9);
+        let next = tq.min(tn);
+        assert_eq!(next, 4.0);
+        net.advance_to(next); // idle advance: memo must survive
+        assert_eq!(net.next_completion().unwrap().0, tn, "memoized answer");
+        let mut batch = Vec::new();
+        q.pop_simultaneous(&mut batch);
+        assert_eq!(batch, vec!["degrade", "observer"]);
+        for ev in batch.drain(..) {
+            if ev == "degrade" {
+                net.set_link_capacity(l, 30.0);
+            } else {
+                // A handler later in the same batch reads the memo: it
+                // must already see the degraded rate, not a stale time.
+                let (t, _) = net.next_completion().unwrap();
+                assert!(
+                    (t - (4.0 + 600.0 / 30.0)).abs() < 1e-9,
+                    "completion time reflects mid-drain capacity change: {t}"
+                );
+            }
+        }
+        // Second engine step: the network is all that's left.
+        assert_eq!(q.peek_time(), None);
+        let (t, _) = net.next_completion().unwrap();
+        let done = net.advance_to(t);
+        assert_eq!(done.len(), 1);
+        assert!((net.delivered_bytes - 1000.0).abs() < 1e-6);
+    }
 }

@@ -11,13 +11,26 @@
 //! (max-min fairness subject to per-flow caps), the textbook model for
 //! long-lived bulk flows.
 //!
+//! **Incremental recomputation** (DESIGN.md §14): a flow-set or
+//! capacity change dirties only the links it touches.  Before rates are
+//! next read, the affected *connected component* — the closure of
+//! links and flows reachable from the dirty links through shared path
+//! membership — is re-filled from scratch; every other flow keeps its
+//! rate.  Max-min allocation is independent across disjoint components
+//! (no shared link, no interaction), so the result matches the global
+//! algorithm; the global pass is retained verbatim as [`NetSim::oracle_rates`]
+//! and the equivalence is property-tested in rust/tests/props_netsim.rs.
+//! The sole divergence is adversarial near-ties across components
+//! within the filling loop's 1e-12 tie epsilon, bounded well under the
+//! property suite's 1e-9 tolerance.
+//!
 //! Invariants (property-tested in rust/tests/props_netsim.rs):
 //!   * no link carries more than its capacity;
 //!   * allocation is Pareto-optimal: every unfrozen flow is bottlenecked
 //!     by either its cap or a saturated link;
-//!   * flow rates are monotone non-increasing in added contention.
+//!   * incremental rates equal the retained full-recompute oracle.
 
-use std::collections::BTreeMap;
+use std::collections::VecDeque;
 
 /// Directed link with a fixed capacity in bytes/second.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
@@ -38,22 +51,109 @@ struct Flow {
     remaining: f64, // bytes
     rate_cap: f64,  // protocol/application ceiling, bytes/s
     rate: f64,      // currently allocated, bytes/s
+    /// Visit stamp for component discovery (O(1) membership without a
+    /// clearable side table).
+    seen: u64,
+}
+
+/// Arena of live flows keyed by monotonically increasing ids.
+///
+/// Ids are dense-ish: slot = id - base, where `base` advances as the
+/// oldest flows retire.  Lookup, insert and remove are O(1) (the old
+/// `BTreeMap` paid a tree walk per event at 128-node scale, where one
+/// shuffle wave is >10k flows), and front-to-back iteration IS id
+/// order — the allocator's determinism contract needs no sort.
+#[derive(Default)]
+struct FlowTable {
+    slots: VecDeque<Option<Flow>>,
+    base: u64,
+    live: usize,
+}
+
+impl FlowTable {
+    /// Next id that `push` will assign.
+    fn next_id(&self) -> u64 {
+        self.base + self.slots.len() as u64
+    }
+
+    fn push(&mut self, f: Flow) -> FlowId {
+        let id = FlowId(self.next_id());
+        self.slots.push_back(Some(f));
+        self.live += 1;
+        id
+    }
+
+    fn slot_of(&self, id: FlowId) -> Option<usize> {
+        let idx = id.0.checked_sub(self.base)? as usize;
+        (idx < self.slots.len()).then_some(idx)
+    }
+
+    fn get(&self, id: FlowId) -> Option<&Flow> {
+        self.slots.get(self.slot_of(id)?)?.as_ref()
+    }
+
+    fn get_mut(&mut self, id: FlowId) -> Option<&mut Flow> {
+        let idx = self.slot_of(id)?;
+        self.slots.get_mut(idx)?.as_mut()
+    }
+
+    fn remove(&mut self, id: FlowId) -> Option<Flow> {
+        let idx = self.slot_of(id)?;
+        let f = self.slots.get_mut(idx)?.take()?;
+        self.live -= 1;
+        // Compact retired slots off the front so the window tracks the
+        // live id range instead of growing with total churn.
+        while matches!(self.slots.front(), Some(None)) {
+            self.slots.pop_front();
+            self.base += 1;
+        }
+        if self.slots.is_empty() {
+            // Keep ids monotone: base is now exactly next_id.
+            debug_assert_eq!(self.live, 0);
+        }
+        Some(f)
+    }
+
+    fn len(&self) -> usize {
+        self.live
+    }
+
+    /// Live flows in id order.
+    fn iter(&self) -> impl Iterator<Item = (FlowId, &Flow)> {
+        let base = self.base;
+        self.slots
+            .iter()
+            .enumerate()
+            .filter_map(move |(i, s)| s.as_ref().map(|f| (FlowId(base + i as u64), f)))
+    }
+
+    fn iter_mut(&mut self) -> impl Iterator<Item = (FlowId, &mut Flow)> {
+        let base = self.base;
+        self.slots
+            .iter_mut()
+            .enumerate()
+            .filter_map(move |(i, s)| s.as_mut().map(|f| (FlowId(base + i as u64), f)))
+    }
 }
 
 /// The simulator. Time is advanced externally (`advance_to`); the owner
 /// interleaves it with an `EventQueue` via `next_completion`.
-///
-/// Flows live in a `BTreeMap` keyed by monotonically increasing ids:
-/// iteration order IS id order, so the allocator needs no per-query
-/// key sort (the old HashMap + sort cost dominated at 128-node
-/// scenario scale, where one shuffle wave is >10k flows).
 #[derive(Default)]
 pub struct NetSim {
     links: Vec<Link>,
-    flows: BTreeMap<FlowId, Flow>,
-    next_flow: u64,
-    now: f64,
+    flows: FlowTable,
+    /// Per-link membership: which live flows cross each link
+    /// (unordered; used only for component discovery and counting).
+    link_flows: Vec<Vec<FlowId>>,
+    /// Links whose flow set or capacity changed since the last rate
+    /// computation (deduplicated via `link_dirty`).
+    dirty_links: Vec<usize>,
+    link_dirty: Vec<bool>,
     rates_dirty: bool,
+    /// Bench baseline knob: when set, every change re-fills every flow
+    /// (the pre-incremental behavior). See benches/bench_engine.rs.
+    full_recompute: bool,
+    now: f64,
     /// Memoized `next_completion` answer.  Completion times are
     /// absolute and rates only change when the flow/link set does, so
     /// the answer stays valid across `advance_to` calls that complete
@@ -63,6 +163,13 @@ pub struct NetSim {
     completion_cache: Option<Option<(f64, FlowId)>>,
     /// Total bytes delivered, for throughput reporting.
     pub delivered_bytes: f64,
+    // Reusable scratch for the progressive filler (sized to the link
+    // table; entries are re-initialized per component before use).
+    scratch_cap: Vec<f64>,
+    scratch_cnt: Vec<usize>,
+    scratch_link_seen: Vec<bool>,
+    /// Monotone visit stamp; bumped once per component discovery.
+    stamp: u64,
 }
 
 impl NetSim {
@@ -75,6 +182,7 @@ impl NetSim {
     pub fn with_capacity(links: usize) -> Self {
         Self {
             links: Vec::with_capacity(links),
+            link_flows: Vec::with_capacity(links),
             ..Self::default()
         }
     }
@@ -88,6 +196,11 @@ impl NetSim {
         self.links.push(Link {
             capacity: capacity_bytes_per_sec,
         });
+        self.link_flows.push(Vec::new());
+        self.link_dirty.push(false);
+        self.scratch_cap.push(0.0);
+        self.scratch_cnt.push(0);
+        self.scratch_link_seen.push(false);
         LinkId(self.links.len() - 1)
     }
 
@@ -101,15 +214,27 @@ impl NetSim {
     }
 
     /// Change a link's capacity in place (fault injection: degradation
-    /// and repair). Active flows are re-allocated on the next query.
+    /// and repair). Flows in the link's component are re-allocated on
+    /// the next query.
     pub fn set_link_capacity(&mut self, l: LinkId, capacity_bytes_per_sec: f64) {
         assert!(capacity_bytes_per_sec > 0.0);
         self.links[l.0].capacity = capacity_bytes_per_sec;
-        self.mark_dirty();
+        self.mark_link_dirty(l.0);
     }
 
-    /// Rates (and therefore completion times) must be recomputed.
-    fn mark_dirty(&mut self) {
+    /// Disable (or re-enable) incremental recomputation.  With `true`,
+    /// any change re-runs progressive filling over the whole flow set —
+    /// the pre-optimization behavior, kept as the in-process baseline
+    /// for benches/bench_engine.rs.  Rates are identical either way.
+    pub fn set_full_recompute(&mut self, on: bool) {
+        self.full_recompute = on;
+    }
+
+    fn mark_link_dirty(&mut self, l: usize) {
+        if !self.link_dirty[l] {
+            self.link_dirty[l] = true;
+            self.dirty_links.push(l);
+        }
         self.rates_dirty = true;
         self.completion_cache = None;
     }
@@ -127,44 +252,70 @@ impl NetSim {
         for l in path {
             assert!(l.0 < self.links.len(), "unknown link {l:?}");
         }
-        let id = FlowId(self.next_flow);
-        self.next_flow += 1;
-        self.flows.insert(
-            id,
-            Flow {
-                path: path.to_vec(),
-                remaining: bytes,
-                rate_cap,
-                rate: 0.0,
-            },
-        );
-        self.mark_dirty();
+        // Pathless flows never contend: they run at their cap from the
+        // start and no component needs recomputing.
+        let rate = if path.is_empty() { rate_cap } else { 0.0 };
+        let id = self.flows.push(Flow {
+            path: path.to_vec(),
+            remaining: bytes,
+            rate_cap,
+            rate,
+            seen: 0,
+        });
+        for l in path {
+            self.link_flows[l.0].push(id);
+            self.mark_link_dirty(l.0);
+        }
+        self.completion_cache = None;
         id
     }
 
-    /// Max-min fair progressive filling with per-flow rate caps.
-    fn recompute_rates(&mut self) {
-        self.rates_dirty = false;
-        let nl = self.links.len();
-        let mut remaining_cap: Vec<f64> = self.links.iter().map(|l| l.capacity).collect();
-        let mut unfrozen_count: Vec<usize> = vec![0; nl];
+    /// Forget a flow's link memberships and dirty the links it crossed
+    /// (its old rate must be redistributed to its component).
+    fn detach(&mut self, id: FlowId, path: &[LinkId]) {
+        for l in path {
+            let members = &mut self.link_flows[l.0];
+            if let Some(pos) = members.iter().position(|&f| f == id) {
+                members.swap_remove(pos);
+            }
+            self.mark_link_dirty(l.0);
+        }
+        self.completion_cache = None;
+    }
 
-        // BTreeMap keys iterate in id order: deterministic without a sort.
-        let ids: Vec<FlowId> = self.flows.keys().copied().collect();
-        let mut frozen = vec![false; ids.len()];
-        for id in &ids {
-            for l in &self.flows[id].path {
-                unfrozen_count[l.0] += 1;
+    /// Progressive filling (max-min with per-flow caps) restricted to
+    /// `ids` (flow ids, ascending) and the links they cross.  `ids`
+    /// must be *closed*: every flow sharing a link with a member is a
+    /// member — then full link capacities apply and the result equals
+    /// the global algorithm's on those flows.
+    fn fill(&mut self, ids: &[FlowId]) {
+        let cap_left = &mut self.scratch_cap;
+        let cnt = &mut self.scratch_cnt;
+        // Links the component crosses, in index order (the tie-freeze
+        // phase scans links in index order; keep that deterministic).
+        // `cnt` entries are zero between fills, so first touch = new.
+        let mut comp_links: Vec<usize> = Vec::new();
+        for id in ids {
+            for l in &self.flows.get(*id).expect("component flow exists").path {
+                if cnt[l.0] == 0 {
+                    comp_links.push(l.0);
+                }
+                cnt[l.0] += 1;
             }
         }
-        let mut unfrozen = ids.len();
+        comp_links.sort_unstable();
+        for &l in &comp_links {
+            cap_left[l] = self.links[l].capacity;
+        }
 
+        let mut frozen = vec![false; ids.len()];
+        let mut unfrozen = ids.len();
         while unfrozen > 0 {
             // Fair share offered by the most contended link.
             let mut min_share = f64::INFINITY;
-            for i in 0..nl {
-                if unfrozen_count[i] > 0 {
-                    min_share = min_share.min(remaining_cap[i] / unfrozen_count[i] as f64);
+            for &l in &comp_links {
+                if cnt[l] > 0 {
+                    min_share = min_share.min(cap_left[l] / cnt[l] as f64);
                 }
             }
             // Flows not crossing any link are bounded only by their caps.
@@ -176,20 +327,20 @@ impl NetSim {
                 if frozen[k] {
                     continue;
                 }
-                let cap = self.flows[id].rate_cap;
-                let effective_share = if self.flows[id].path.is_empty() {
+                let f = self.flows.get(*id).expect("component flow exists");
+                let cap = f.rate_cap;
+                let effective_share = if f.path.is_empty() {
                     f64::INFINITY
                 } else {
                     min_share
                 };
                 if cap <= effective_share {
-                    Self::freeze(
-                        &mut self.flows,
-                        &mut remaining_cap,
-                        &mut unfrozen_count,
-                        id,
-                        cap,
-                    );
+                    let f = self.flows.get_mut(*id).expect("component flow exists");
+                    f.rate = cap;
+                    for l in &f.path {
+                        cap_left[l.0] = (cap_left[l.0] - cap).max(0.0);
+                        cnt[l.0] -= 1;
+                    }
                     frozen[k] = true;
                     unfrozen -= 1;
                     froze_capped = true;
@@ -201,19 +352,19 @@ impl NetSim {
             debug_assert!(min_share.is_finite(), "uncapped pathless flow");
             // Freeze flows on saturating links at the fair share.
             let mut froze_any = false;
-            for i in 0..nl {
-                if unfrozen_count[i] > 0
-                    && (remaining_cap[i] / unfrozen_count[i] as f64) <= min_share * (1.0 + 1e-12)
-                {
+            for &l in &comp_links {
+                if cnt[l] > 0 && (cap_left[l] / cnt[l] as f64) <= min_share * (1.0 + 1e-12) {
                     for (k, id) in ids.iter().enumerate() {
-                        if !frozen[k] && self.flows[id].path.iter().any(|l| l.0 == i) {
-                            Self::freeze(
-                                &mut self.flows,
-                                &mut remaining_cap,
-                                &mut unfrozen_count,
-                                id,
-                                min_share,
-                            );
+                        if frozen[k] {
+                            continue;
+                        }
+                        let f = self.flows.get_mut(*id).expect("component flow exists");
+                        if f.path.iter().any(|p| p.0 == l) {
+                            f.rate = min_share;
+                            for p in &f.path {
+                                cap_left[p.0] = (cap_left[p.0] - min_share).max(0.0);
+                                cnt[p.0] -= 1;
+                            }
                             frozen[k] = true;
                             unfrozen -= 1;
                             froze_any = true;
@@ -226,37 +377,166 @@ impl NetSim {
                 break; // defensive: avoid an infinite loop in release
             }
         }
+        // Restore the between-fills invariant (cnt all zero).  Freezing
+        // each flow exactly once already zeroes it; the explicit reset
+        // also covers the defensive break path in release builds.
+        for &l in &comp_links {
+            cnt[l] = 0;
+        }
     }
 
-    fn freeze(
-        flows: &mut BTreeMap<FlowId, Flow>,
-        remaining_cap: &mut [f64],
-        unfrozen_count: &mut [usize],
-        id: &FlowId,
-        rate: f64,
-    ) {
-        let f = flows.get_mut(id).unwrap();
-        f.rate = rate;
-        for l in &f.path {
-            remaining_cap[l.0] = (remaining_cap[l.0] - rate).max(0.0);
-            unfrozen_count[l.0] -= 1;
+    /// Recompute rates for the connected component(s) reachable from
+    /// the dirty links; everything else keeps its allocation.
+    fn recompute_dirty_components(&mut self) {
+        // BFS over the link<->flow bipartite graph from the dirty links.
+        let mut queue: Vec<usize> = Vec::with_capacity(self.dirty_links.len());
+        for l in self.dirty_links.drain(..) {
+            self.link_dirty[l] = false;
+            if !self.scratch_link_seen[l] {
+                self.scratch_link_seen[l] = true;
+                queue.push(l);
+            }
         }
+        self.stamp += 1;
+        let stamp = self.stamp;
+        let mut comp_flows: Vec<FlowId> = Vec::new();
+        let mut touched_links: Vec<usize> = queue.clone();
+        while let Some(l) = queue.pop() {
+            for &fid in &self.link_flows[l] {
+                let f = self.flows.get_mut(fid).expect("member flow exists");
+                if f.seen == stamp {
+                    continue;
+                }
+                f.seen = stamp;
+                comp_flows.push(fid);
+                for p in &self.flows.get(fid).expect("member flow exists").path {
+                    if !self.scratch_link_seen[p.0] {
+                        self.scratch_link_seen[p.0] = true;
+                        touched_links.push(p.0);
+                        queue.push(p.0);
+                    }
+                }
+            }
+        }
+        for l in touched_links {
+            self.scratch_link_seen[l] = false;
+        }
+        comp_flows.sort_unstable();
+        if !comp_flows.is_empty() {
+            self.fill(&comp_flows);
+        }
+        self.rates_dirty = false;
+    }
+
+    /// Full re-fill over every flow (initial state, or the bench
+    /// baseline knob).
+    fn recompute_all(&mut self) {
+        for l in self.dirty_links.drain(..) {
+            self.link_dirty[l] = false;
+        }
+        let ids: Vec<FlowId> = self.flows.iter().map(|(id, _)| id).collect();
+        self.fill(&ids);
+        self.rates_dirty = false;
     }
 
     fn ensure_rates(&mut self) {
-        if self.rates_dirty {
-            self.recompute_rates();
+        if !self.rates_dirty {
+            return;
         }
+        if self.full_recompute {
+            self.recompute_all();
+        } else {
+            self.recompute_dirty_components();
+        }
+    }
+
+    /// The pre-incremental global allocator, retained verbatim as the
+    /// testing oracle: progressive filling over the entire flow set,
+    /// computed from scratch without touching simulator state.
+    /// rust/tests/props_netsim.rs asserts the incremental path agrees
+    /// with this within 1e-9 on randomized topologies.
+    pub fn oracle_rates(&self) -> Vec<(FlowId, f64)> {
+        let nl = self.links.len();
+        let mut remaining_cap: Vec<f64> = self.links.iter().map(|l| l.capacity).collect();
+        let mut unfrozen_count: Vec<usize> = vec![0; nl];
+        let entries: Vec<(FlowId, &Flow)> = self.flows.iter().collect();
+        let mut rate = vec![0.0f64; entries.len()];
+        let mut frozen = vec![false; entries.len()];
+        for (_, f) in &entries {
+            for l in &f.path {
+                unfrozen_count[l.0] += 1;
+            }
+        }
+        let mut unfrozen = entries.len();
+        while unfrozen > 0 {
+            let mut min_share = f64::INFINITY;
+            for i in 0..nl {
+                if unfrozen_count[i] > 0 {
+                    min_share = min_share.min(remaining_cap[i] / unfrozen_count[i] as f64);
+                }
+            }
+            let mut froze_capped = false;
+            for (k, (_, f)) in entries.iter().enumerate() {
+                if frozen[k] {
+                    continue;
+                }
+                let effective_share = if f.path.is_empty() {
+                    f64::INFINITY
+                } else {
+                    min_share
+                };
+                if f.rate_cap <= effective_share {
+                    rate[k] = f.rate_cap;
+                    for l in &f.path {
+                        remaining_cap[l.0] = (remaining_cap[l.0] - f.rate_cap).max(0.0);
+                        unfrozen_count[l.0] -= 1;
+                    }
+                    frozen[k] = true;
+                    unfrozen -= 1;
+                    froze_capped = true;
+                }
+            }
+            if froze_capped {
+                continue;
+            }
+            let mut froze_any = false;
+            for i in 0..nl {
+                if unfrozen_count[i] > 0
+                    && (remaining_cap[i] / unfrozen_count[i] as f64) <= min_share * (1.0 + 1e-12)
+                {
+                    for (k, (_, f)) in entries.iter().enumerate() {
+                        if !frozen[k] && f.path.iter().any(|l| l.0 == i) {
+                            rate[k] = min_share;
+                            for l in &f.path {
+                                remaining_cap[l.0] = (remaining_cap[l.0] - min_share).max(0.0);
+                                unfrozen_count[l.0] -= 1;
+                            }
+                            frozen[k] = true;
+                            unfrozen -= 1;
+                            froze_any = true;
+                        }
+                    }
+                }
+            }
+            if !froze_any {
+                break;
+            }
+        }
+        entries
+            .iter()
+            .enumerate()
+            .map(|(k, (id, _))| (*id, rate[k]))
+            .collect()
     }
 
     /// Current allocated rate of a flow (bytes/s).
     pub fn flow_rate(&mut self, id: FlowId) -> f64 {
         self.ensure_rates();
-        self.flows[&id].rate
+        self.flows.get(id).expect("unknown flow").rate
     }
 
     pub fn flow_remaining(&self, id: FlowId) -> f64 {
-        self.flows[&id].remaining
+        self.flows.get(id).expect("unknown flow").remaining
     }
 
     /// Abort an active flow (fault injection: a crashed receiver or
@@ -271,8 +551,8 @@ impl NetSim {
     /// `advance_to` batch as the winner cancelling it.  Returns the
     /// undelivered bytes, or `None` when the flow is gone.
     pub fn try_cancel_flow(&mut self, id: FlowId) -> Option<f64> {
-        let f = self.flows.remove(&id)?;
-        self.mark_dirty();
+        let f = self.flows.remove(id)?;
+        self.detach(id, &f.path);
         Some(f.remaining)
     }
 
@@ -285,7 +565,7 @@ impl NetSim {
             return cached;
         }
         let mut best: Option<(f64, FlowId)> = None;
-        for (&id, f) in &self.flows {
+        for (id, f) in self.flows.iter() {
             if f.rate <= 0.0 {
                 continue;
             }
@@ -306,7 +586,7 @@ impl NetSim {
         let dt = (t - self.now).max(0.0);
         self.now = t;
         let mut done = Vec::new();
-        for (&id, f) in self.flows.iter_mut() {
+        for (id, f) in self.flows.iter_mut() {
             let moved = (f.rate * dt).min(f.remaining);
             f.remaining -= moved;
             self.delivered_bytes += moved;
@@ -315,11 +595,9 @@ impl NetSim {
                 done.push(id);
             }
         }
-        if !done.is_empty() {
-            self.mark_dirty();
-            for id in &done {
-                self.flows.remove(id);
-            }
+        for id in &done {
+            let f = self.flows.remove(*id).expect("completed flow exists");
+            self.detach(*id, &f.path);
         }
         done
     }
@@ -338,9 +616,9 @@ impl NetSim {
     pub fn link_load(&mut self, l: LinkId) -> f64 {
         self.ensure_rates();
         self.flows
-            .values()
-            .filter(|f| f.path.contains(&l))
-            .map(|f| f.rate)
+            .iter()
+            .filter(|(_, f)| f.path.contains(&l))
+            .map(|(_, f)| f.rate)
             .sum()
     }
 }
@@ -504,5 +782,68 @@ mod tests {
         net.run_to_idle();
         assert!((net.delivered_bytes - 150.0).abs() < 1e-3);
         assert_eq!(net.active_flows(), 0);
+    }
+
+    #[test]
+    fn incremental_update_leaves_other_components_alone() {
+        // Two disjoint components: changing one must not disturb the
+        // other's rates, and both must match the global oracle.
+        let mut net = NetSim::new();
+        let a = net.add_link(100.0);
+        let b = net.add_link(80.0);
+        let f1 = net.start_flow(&[a], 1e6, 1e9);
+        let f2 = net.start_flow(&[a], 1e6, 1e9);
+        let g1 = net.start_flow(&[b], 1e6, 1e9);
+        assert!((net.flow_rate(f1) - 50.0).abs() < 1e-9);
+        assert!((net.flow_rate(g1) - 80.0).abs() < 1e-9);
+        // Perturb only component A.
+        net.cancel_flow(f2);
+        assert!((net.flow_rate(f1) - 100.0).abs() < 1e-9);
+        assert!((net.flow_rate(g1) - 80.0).abs() < 1e-9, "B untouched");
+        for (id, want) in net.oracle_rates() {
+            assert!(
+                (net.flow_rate(id) - want).abs() < 1e-9,
+                "flow {id:?}: incremental vs oracle"
+            );
+        }
+    }
+
+    #[test]
+    fn full_recompute_knob_matches_incremental() {
+        let build = |full: bool| {
+            let mut net = NetSim::new();
+            net.set_full_recompute(full);
+            let a = net.add_link(100.0);
+            let b = net.add_link(60.0);
+            let c = net.add_link(40.0);
+            net.start_flow(&[a, b], 1e5, 1e9);
+            net.start_flow(&[a], 1e5, 35.0);
+            net.start_flow(&[b], 1e5, 1e9);
+            net.start_flow(&[c], 1e5, 1e9);
+            net.advance_to(net.next_completion().unwrap().0);
+            net.set_link_capacity(a, 55.0);
+            net.run_to_idle();
+            (net.now(), net.delivered_bytes)
+        };
+        let (t_inc, d_inc) = build(false);
+        let (t_full, d_full) = build(true);
+        assert!((t_inc - t_full).abs() < 1e-9, "{t_inc} vs {t_full}");
+        assert!((d_inc - d_full).abs() < 1e-6);
+    }
+
+    #[test]
+    fn flow_table_window_compacts_under_churn() {
+        // Sustained churn must not grow memory: the id window tracks
+        // live flows because retired slots compact off the front.
+        let mut net = NetSim::new();
+        let l = net.add_link(1e6);
+        for _ in 0..1000 {
+            net.start_flow(&[l], 10.0, 1e9);
+            net.run_to_idle();
+            assert_eq!(net.active_flows(), 0);
+        }
+        assert!(net.flows.slots.len() <= 1, "window: {}", net.flows.slots.len());
+        let f = net.start_flow(&[l], 10.0, 1e9);
+        assert_eq!(f, FlowId(1000), "ids stay monotone across compaction");
     }
 }

@@ -1,0 +1,242 @@
+//! Property suite for the incremental max-min allocator (DESIGN.md
+//! §14).
+//!
+//! Drives randomized link topologies through flow churn — starts,
+//! cancellations, capacity changes, partial and completing time
+//! advances — and asserts after every few mutations that:
+//!
+//!   1. the incremental component-scoped recomputation agrees with the
+//!      retained global allocator [`NetSim::oracle_rates`] within 1e-9;
+//!   2. no link carries more than its capacity;
+//!   3. no flow exceeds its protocol/application rate cap;
+//!   4. no flow is starved below its guaranteed max-min floor,
+//!      `min(cap, min over its path of capacity_l / flows_on_l)`.
+//!
+//! The `set_full_recompute` bench baseline is also replayed against the
+//! incremental path to pin timeline equality, not just instantaneous
+//! rates.
+
+use std::collections::BTreeMap;
+
+use sector_sphere::sim::netsim::{FlowId, LinkId, NetSim};
+use sector_sphere::testkit::forall;
+use sector_sphere::util::rng::Pcg64;
+
+/// Live-flow shadow the properties are computed from: path + rate cap,
+/// maintained alongside the simulator by the op script.
+type Shadow = BTreeMap<FlowId, (Vec<LinkId>, f64)>;
+
+/// The four pinned properties, checked against the current state.
+fn check_invariants(net: &mut NetSim, live: &Shadow) -> Result<(), String> {
+    // 1. Incremental rates equal the retained global oracle.
+    let oracle = net.oracle_rates();
+    if oracle.len() != live.len() {
+        return Err(format!(
+            "oracle sees {} flows, shadow tracks {}",
+            oracle.len(),
+            live.len()
+        ));
+    }
+    for (id, want) in &oracle {
+        let got = net.flow_rate(*id);
+        if (got - want).abs() > 1e-9 {
+            return Err(format!("flow {id:?}: incremental {got} vs oracle {want}"));
+        }
+    }
+    // Per-link active-flow counts for properties 2 and 4.
+    let mut on_link: BTreeMap<usize, usize> = BTreeMap::new();
+    for (path, _) in live.values() {
+        for l in path {
+            *on_link.entry(l.0).or_insert(0) += 1;
+        }
+    }
+    // 2. No link oversubscribed.
+    for &l in on_link.keys() {
+        let load = net.link_load(LinkId(l));
+        let cap = net.link_capacity(LinkId(l));
+        if load > cap + 1e-6 {
+            return Err(format!("link {l} oversubscribed: {load} > {cap}"));
+        }
+    }
+    for (id, (path, cap)) in live {
+        let rate = net.flow_rate(*id);
+        // 3. No flow above its cap.
+        if rate > cap + 1e-9 {
+            return Err(format!("flow {id:?} above its cap: {rate} > {cap}"));
+        }
+        // 4. No flow below its bottleneck fair share: max-min guarantees
+        // at least min(cap, min over the path of capacity/flow-count) —
+        // flows frozen earlier only leave MORE headroom, never less.
+        let mut share = f64::INFINITY;
+        for l in path {
+            share = share.min(net.link_capacity(*l) / on_link[&l.0] as f64);
+        }
+        let floor = cap.min(share);
+        if floor.is_finite() && rate + 1e-9 < floor {
+            return Err(format!("flow {id:?} starved: {rate} < max-min floor {floor}"));
+        }
+    }
+    Ok(())
+}
+
+/// One scripted churn episode: a random topology (4–27 links), then
+/// `steps` random operations — flow starts (50%), cancellations,
+/// capacity changes, completing and partial time advances — with the
+/// invariants re-checked every `check_every` ops and once at the end.
+fn churn_episode(seed: u64, steps: usize, check_every: usize) -> Result<(), String> {
+    let mut rng = Pcg64::new(seed);
+    let mut net = NetSim::new();
+    let n_links = 4 + rng.gen_range(24) as usize;
+    let links: Vec<LinkId> = (0..n_links)
+        .map(|_| net.add_link(rng.gen_range_f64(10.0, 1000.0)))
+        .collect();
+    let mut live: Shadow = BTreeMap::new();
+    for step in 0..steps {
+        match rng.gen_range(10) {
+            0..=4 => {
+                let mut path: Vec<LinkId> = (0..1 + rng.gen_range(3))
+                    .map(|_| links[rng.gen_range(n_links as u64) as usize])
+                    .collect();
+                path.sort_unstable();
+                path.dedup();
+                let bytes = rng.gen_range_f64(1e2, 1e5);
+                let cap = rng.gen_range_f64(20.0, 2000.0);
+                let id = net.start_flow(&path, bytes, cap);
+                live.insert(id, (path, cap));
+            }
+            5 => {
+                let pick = rng.gen_range(live.len().max(1) as u64) as usize;
+                if let Some(&id) = live.keys().nth(pick) {
+                    net.cancel_flow(id);
+                    live.remove(&id);
+                }
+            }
+            6 => {
+                let l = links[rng.gen_range(n_links as u64) as usize];
+                net.set_link_capacity(l, rng.gen_range_f64(10.0, 1000.0));
+            }
+            7..=8 => {
+                if let Some((t, _)) = net.next_completion() {
+                    for id in net.advance_to(t) {
+                        live.remove(&id);
+                    }
+                }
+            }
+            _ => {
+                // Partial advance; slow-tail flows may still finish.
+                let t = net.now() + rng.gen_range_f64(0.0, 2.0);
+                for id in net.advance_to(t) {
+                    live.remove(&id);
+                }
+            }
+        }
+        if step % check_every == 0 {
+            check_invariants(&mut net, &live).map_err(|e| format!("step {step}: {e}"))?;
+        }
+    }
+    check_invariants(&mut net, &live).map_err(|e| format!("final: {e}"))
+}
+
+#[test]
+fn prop_incremental_matches_oracle_under_churn() {
+    forall(
+        "incremental rates = oracle; max-min invariants hold",
+        20,
+        |rng: &mut Pcg64| rng.next_u64(),
+        |&seed| churn_episode(seed, 100, 5),
+    );
+}
+
+/// Replay the same op script under the `set_full_recompute` baseline
+/// and the incremental path: the timelines must agree (same completion
+/// count, same final clock, same delivered bytes) — the optimization
+/// may not change WHAT the simulator computes, only how fast.
+fn scripted_timeline(seed: u64, full: bool) -> (usize, f64, f64) {
+    let mut rng = Pcg64::new(seed);
+    let mut net = NetSim::new();
+    net.set_full_recompute(full);
+    let n_links = 3 + rng.gen_range(10) as usize;
+    let links: Vec<LinkId> = (0..n_links)
+        .map(|_| net.add_link(rng.gen_range_f64(50.0, 500.0)))
+        .collect();
+    let mut completed = 0usize;
+    for _ in 0..60 {
+        match rng.gen_range(4) {
+            0..=1 => {
+                let mut path: Vec<LinkId> = (0..1 + rng.gen_range(3))
+                    .map(|_| links[rng.gen_range(n_links as u64) as usize])
+                    .collect();
+                path.sort_unstable();
+                path.dedup();
+                net.start_flow(
+                    &path,
+                    rng.gen_range_f64(1e3, 1e5),
+                    rng.gen_range_f64(30.0, 800.0),
+                );
+            }
+            2 => {
+                let l = links[rng.gen_range(n_links as u64) as usize];
+                net.set_link_capacity(l, rng.gen_range_f64(50.0, 500.0));
+            }
+            _ => {
+                if let Some((t, _)) = net.next_completion() {
+                    completed += net.advance_to(t).len();
+                }
+            }
+        }
+    }
+    while let Some((t, _)) = net.next_completion() {
+        completed += net.advance_to(t).len();
+    }
+    (completed, net.now(), net.delivered_bytes)
+}
+
+#[test]
+fn prop_full_recompute_baseline_replays_identically() {
+    forall(
+        "full-recompute knob changes cost, not results",
+        12,
+        |rng: &mut Pcg64| rng.next_u64(),
+        |&seed| {
+            let (c_inc, t_inc, d_inc) = scripted_timeline(seed, false);
+            let (c_full, t_full, d_full) = scripted_timeline(seed, true);
+            if c_inc != c_full {
+                return Err(format!("completions: incremental {c_inc} vs full {c_full}"));
+            }
+            if (t_inc - t_full).abs() > 1e-6 {
+                return Err(format!("final clock: {t_inc} vs {t_full}"));
+            }
+            if (d_inc - d_full).abs() > 1e-3 {
+                return Err(format!("delivered bytes: {d_inc} vs {d_full}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// A cancellation storm over one fully shared component: every flow
+/// crosses the trunk link, so each cancellation dirties the whole
+/// component and the incremental path must re-fill it exactly.
+#[test]
+fn cancellation_storm_stays_on_the_oracle() {
+    let mut rng = Pcg64::new(0x5EC7_0354);
+    let mut net = NetSim::new();
+    let trunk = net.add_link(400.0);
+    let spokes: Vec<LinkId> = (0..8).map(|_| net.add_link(90.0)).collect();
+    let mut live: Shadow = BTreeMap::new();
+    for i in 0..40 {
+        let path = vec![trunk, spokes[i % spokes.len()]];
+        let cap = rng.gen_range_f64(10.0, 300.0);
+        let id = net.start_flow(&path, 1e6, cap);
+        live.insert(id, (path, cap));
+    }
+    check_invariants(&mut net, &live).unwrap();
+    while !live.is_empty() {
+        let pick = rng.gen_range(live.len() as u64) as usize;
+        let id = *live.keys().nth(pick).expect("pick < len");
+        net.cancel_flow(id);
+        live.remove(&id);
+        check_invariants(&mut net, &live).unwrap();
+    }
+    assert_eq!(net.active_flows(), 0);
+}

@@ -8,20 +8,56 @@
 //! tests run in debug builds); their full-size determinism is gated in
 //! release builds by benches/bench_traffic.rs, benches/bench_colocate.rs
 //! and examples/scenario_suite.rs.
+//!
+//! Beyond the same-process run-twice check, every preset's report is
+//! pinned against a committed fixture under rust/tests/golden/ — the
+//! cross-refactor equivalence contract for the shared engine core
+//! (DESIGN.md §14).  A missing fixture is blessed on first run (commit
+//! the generated file); any later divergence fails with a diff pointer.
+
+use std::fs;
+use std::path::PathBuf;
 
 use sector_sphere::scenario::{run_scenario, ScenarioSpec};
 use sector_sphere::service::ArrivalProcess;
 use sector_sphere::util::bytes::GB;
 
+fn fixture_path(name: &str) -> PathBuf {
+    let safe: String = name
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c } else { '-' })
+        .collect();
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/golden")
+        .join(format!("{safe}.txt"))
+}
+
 fn assert_golden(spec: &ScenarioSpec) {
     let a = run_scenario(spec).unwrap_or_else(|e| panic!("{}: {e}", spec.name));
     let b = run_scenario(spec).unwrap_or_else(|e| panic!("{}: {e}", spec.name));
+    let text = format!("{a:?}");
     assert_eq!(
-        format!("{a:?}"),
+        text,
         format!("{b:?}"),
         "{}: serialized reports must be byte-identical",
         spec.name
     );
+    let path = fixture_path(&spec.name);
+    match fs::read_to_string(&path) {
+        Ok(want) => assert_eq!(
+            text, want,
+            "{}: report diverged from the committed fixture {} — an \
+             engine-core or workload change altered observable behavior; \
+             if intentional, delete the fixture and re-run to re-bless",
+            spec.name,
+            path.display()
+        ),
+        Err(_) => {
+            fs::create_dir_all(path.parent().expect("fixture dir has parent"))
+                .expect("create fixture dir");
+            fs::write(&path, &text).expect("bless fixture");
+        }
+    }
 }
 
 #[test]
