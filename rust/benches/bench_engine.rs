@@ -25,7 +25,7 @@ use std::collections::BTreeMap;
 use sector_sphere::bench::{time_fn, BenchJson};
 use sector_sphere::routing::hash_name;
 use sector_sphere::sim::event::EventQueue;
-use sector_sphere::sim::netsim::{FlowId, LinkId, NetSim};
+use sector_sphere::sim::netsim::{FlowId, LinkId, NetProfile, NetSim};
 use sector_sphere::util::rng::Pcg64;
 
 const RACKS: usize = 32;
@@ -55,6 +55,7 @@ fn field<'a>(json: &'a str, key: &str) -> Option<&'a str> {
 struct Churn {
     events: u64,
     digest: String,
+    profile: NetProfile,
 }
 
 /// One full churn run: every node pushes `FLOWS_PER_NODE` rack-local
@@ -118,7 +119,11 @@ fn churn(full: bool, with_digest: bool) -> Churn {
         }
     }
     assert_eq!(net.active_flows(), 0, "churn drained");
-    Churn { events, digest }
+    Churn {
+        events,
+        digest,
+        profile: net.profile(),
+    }
 }
 
 fn main() {
@@ -159,6 +164,13 @@ fn main() {
         .num("incremental_events_per_sec", inc_eps)
         .num("full_recompute_events_per_sec", full_eps)
         .num("speedup_vs_full_recompute", speedup)
+        // NetSim self-profiling: how much recomputation the incremental
+        // path actually did, and how big the touched components were —
+        // the trajectory shows WHY the ratio moves, not just that it did.
+        .int("netsim_dirty_recomputes", a.profile.dirty_recomputes)
+        .int("netsim_full_recomputes", a.profile.full_recomputes)
+        .int("netsim_comp_flows_max", a.profile.comp_flows_max)
+        .num("netsim_comp_flows_mean", a.profile.comp_flows_mean())
         .text("determinism_hash", &hash);
 
     // ---- regression gate against the committed baseline ----

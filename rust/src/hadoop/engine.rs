@@ -58,6 +58,7 @@ use std::collections::BTreeMap;
 use crate::config::SimConfig;
 use crate::scenario::core::{self, CoreEv, FaultEv, Harness, SpecCand, Speculation};
 use crate::scenario::engine::{pick_dst_in, FaultState, TierBytes};
+use crate::scenario::trace::{HarnessGauges, TraceRecorder, Tracer};
 use crate::scenario::{ScenarioSpec, WorkloadKind};
 use crate::sim::event::EventQueue;
 use crate::sim::netsim::{FlowId, LinkId, NetSim};
@@ -127,6 +128,14 @@ impl CoreEv for HEv {
         match self {
             HEv::Fault(f) => Some(*f),
             _ => None,
+        }
+    }
+
+    fn trace_name(&self) -> &'static str {
+        match self {
+            HEv::TaskStart { .. } => "task_start",
+            HEv::SpecCheck => "spec_check",
+            HEv::Fault(_) => "fault",
         }
     }
 }
@@ -232,12 +241,19 @@ struct HadoopEngine<'a> {
     last_task_done: f64,
     done: bool,
     makespan: f64,
+    /// Observability feed for task spans, speculation marks and
+    /// cancelled flows.
+    tracer: Tracer,
 }
 
 /// Run the Hadoop baseline to completion on a substrate built from
 /// `testbed` under the spec's fault plan.  Deterministic: the spec is
 /// the only input.
-pub fn run_hadoop(spec: &ScenarioSpec, testbed: &Testbed) -> Result<HadoopRun, String> {
+pub fn run_hadoop(
+    spec: &ScenarioSpec,
+    testbed: &Testbed,
+    rec: &TraceRecorder,
+) -> Result<HadoopRun, String> {
     let workload = spec
         .workload
         .as_ref()
@@ -345,6 +361,7 @@ pub fn run_hadoop(spec: &ScenarioSpec, testbed: &Testbed) -> Result<HadoopRun, S
         last_task_done: 0.0,
         done: false,
         makespan: 0.0,
+        tracer: rec.tracer("hadoop"),
     };
 
     let mut q: EventQueue<HEv> =
@@ -353,8 +370,9 @@ pub fn run_hadoop(spec: &ScenarioSpec, testbed: &Testbed) -> Result<HadoopRun, S
     eng.pump(0.0, &mut q, &state);
 
     let out = {
+        let tracer = rec.tracer("hadoop");
         let mut har = HadoopHarness { eng: &mut eng };
-        core::drive(&mut har, &mut net, &mut q, &mut state, &links, testbed)?
+        core::drive(&mut har, &mut net, &mut q, &mut state, &links, testbed, &tracer)?
     };
 
     Ok(HadoopRun {
@@ -489,6 +507,19 @@ impl<'e, 'a> Harness for HadoopHarness<'e, 'a> {
             self.eng.finish_phase(now, q, state)?;
         }
         Ok(())
+    }
+
+    fn gauges(&self) -> HarnessGauges {
+        HarnessGauges {
+            occupancy: self.eng.running.iter().map(|&r| r as u64).sum(),
+            queued: (self.eng.sched.pending_count() + self.eng.rerun_queue.len()) as u64,
+            spec_inflight: self
+                .eng
+                .inflight
+                .values()
+                .filter(|a| a.speculative)
+                .count() as u64,
+        }
     }
 }
 
@@ -705,6 +736,8 @@ impl<'a> HadoopEngine<'a> {
         self.running[att.node] -= 1;
         if att.rerun {
             // Lost map output restored: re-shuffle the whole output.
+            self.tracer
+                .task(att.started, now, "map rerun", att.node, self.phase().name());
             self.last_task_done = now;
             if self.phase().shuffles() {
                 self.start_shuffle(att.node, att.seg.id, att.seg.bytes as f64, net, state);
@@ -720,13 +753,17 @@ impl<'a> HadoopEngine<'a> {
                 if let Some(lfid) = loser.fid {
                     self.flows.remove(&lfid);
                     net.try_cancel_flow(lfid);
+                    self.tracer.flow_cancel(lfid, now);
                 }
                 self.sched.cancel_attempt(&loser.seg);
             }
         }
         if first {
+            let stage_name = self.phase().name();
+            self.tracer.task(att.started, now, "task", att.node, stage_name);
             if att.speculative {
                 self.sched.record_speculative_win();
+                self.tracer.task_mark(now, "spec won", att.node, stage_name);
             }
             self.tasks_completed += 1;
             self.last_task_done = now;
@@ -863,6 +900,8 @@ impl<'a> HadoopEngine<'a> {
         if !self.sched.speculate(&seg, backup as u32) {
             return;
         }
+        self.tracer
+            .task_mark(now, "speculate", backup, self.phase().name());
         self.spec.mark_speculated(seg.id);
         self.launch(backup, seg, true, false, now, q);
     }
@@ -890,6 +929,7 @@ impl<'a> HadoopEngine<'a> {
             if let Some(fid) = att.fid {
                 self.flows.remove(&fid);
                 net.try_cancel_flow(fid);
+                self.tracer.flow_cancel(fid, now);
             }
             if att.rerun {
                 self.rerun_queue.push(self.block_segment(att.seg.id, state));
@@ -940,6 +980,7 @@ impl<'a> HadoopEngine<'a> {
         for (fid, fl) in doomed {
             self.flows.remove(&fid);
             let left = net.try_cancel_flow(fid).unwrap_or(0.0);
+            self.tracer.flow_cancel(fid, now);
             match fl {
                 HFlow::Shuffle { src, dst, block } => {
                     if src == node {
@@ -1006,6 +1047,7 @@ impl<'a> HadoopEngine<'a> {
                     if let Some(fid) = att.fid.take() {
                         self.flows.remove(&fid);
                         net.try_cancel_flow(fid);
+                        self.tracer.flow_cancel(fid, now);
                         q.push_at(now, HEv::TaskStart { gen });
                         self.reassignments += 1;
                     }
@@ -1076,10 +1118,14 @@ impl<'a> HadoopEngine<'a> {
         self.acc_spec_won += self.sched.speculative_won;
         if self.phase() == Phase::Map {
             // The map tail and the fetch tail end at different times;
-            // report both (the barrier released at `now`).
+            // report both (the barrier released at `now`).  Both trace
+            // marks land at `now` so per-track emission stays monotone.
+            self.tracer.stage_mark(now, "map");
+            self.tracer.stage_mark(now, "shuffle");
             self.stage_ends.push(("map".to_string(), self.last_task_done));
             self.stage_ends.push(("shuffle".to_string(), now));
         } else {
+            self.tracer.stage_mark(now, self.phase().name());
             self.stage_ends.push((self.phase().name().to_string(), now));
         }
         self.phase_idx += 1;
@@ -1140,7 +1186,7 @@ mod tests {
 
     fn run(spec: &ScenarioSpec) -> HadoopRun {
         let testbed = spec.topology.generate().unwrap();
-        run_hadoop(spec, &testbed).unwrap()
+        run_hadoop(spec, &testbed, &TraceRecorder::disabled()).unwrap()
     }
 
     #[test]
@@ -1268,7 +1314,7 @@ mod tests {
             });
         }
         let testbed = s.topology.generate().unwrap();
-        let err = run_hadoop(&s, &testbed).unwrap_err();
+        let err = run_hadoop(&s, &testbed, &TraceRecorder::disabled()).unwrap_err();
         assert!(
             err.contains("lost") || err.contains("exhausted") || err.contains("replica"),
             "{err}"

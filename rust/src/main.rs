@@ -37,6 +37,7 @@ fn flag_spec() -> Vec<FlagSpec> {
         FlagSpec { name: "clients", help: "traffic: simulated client population", takes_value: true },
         FlagSpec { name: "rps", help: "traffic: open-loop arrival rate", takes_value: true },
         FlagSpec { name: "metrics", help: "traffic: also print the metrics registry", takes_value: false },
+        FlagSpec { name: "trace", help: "write trace artifacts (Chrome JSON + JSONL) to this path", takes_value: true },
         FlagSpec { name: "disk", help: "back slaves with real files", takes_value: false },
         FlagSpec { name: "pjrt", help: "load AOT artifacts (needs `make artifacts`)", takes_value: false },
         FlagSpec { name: "help", help: "show usage", takes_value: false },
@@ -144,8 +145,10 @@ fn cmd_angle(args: &Args) -> Result<(), String> {
                 .parse()
                 .map_err(|_| format!("--seed expects an integer, got {seed:?}"))?;
         }
+        apply_trace_flag(args, &mut spec);
         let r = run_scenario(&spec)?;
         print_scenario_report(&r);
+        print_trace_paths(&spec);
         return Ok(());
     }
     // ...otherwise the in-process real-mode pipeline on actual bytes.
@@ -221,6 +224,23 @@ fn load_scenario_spec(
                  compare_wan4|compare_scale128|angle_wan4|angle_scale128) — or pass --file"
             )),
         },
+    }
+}
+
+/// Apply `--trace <path>` to a scenario spec: switches the always-on
+/// recorder from digest-only to artifact-writing mode.
+fn apply_trace_flag(args: &Args, spec: &mut sector_sphere::scenario::ScenarioSpec) {
+    if let Some(path) = args.get("trace") {
+        spec.trace.get_or_insert_with(Default::default).path = Some(path.to_string());
+    }
+}
+
+/// After a traced run: tell the user where the artifacts went.
+fn print_trace_paths(spec: &sector_sphere::scenario::ScenarioSpec) {
+    if let Some(path) = spec.trace.as_ref().and_then(|t| t.path.as_deref()) {
+        let (chrome, jsonl) = sector_sphere::scenario::trace::artifact_paths(path);
+        println!("  trace          {chrome} (load in Perfetto / chrome://tracing)");
+        println!("  trace log      {jsonl}");
     }
 }
 
@@ -365,13 +385,16 @@ fn print_scenario_report(r: &sector_sphere::scenario::ScenarioReport) {
         "  faults         {} injected, {} nodes crashed, {} reassignments",
         r.faults_injected, r.nodes_crashed, r.reassignments
     );
+    println!("  trace digest   {}", r.trace_digest);
 }
 
 fn cmd_scenario(args: &Args) -> Result<(), String> {
     use sector_sphere::scenario::run_scenario;
-    let spec = load_scenario_spec(args, "scale128")?;
+    let mut spec = load_scenario_spec(args, "scale128")?;
+    apply_trace_flag(args, &mut spec);
     let r = run_scenario(&spec)?;
     print_scenario_report(&r);
+    print_trace_paths(&spec);
     Ok(())
 }
 
@@ -404,8 +427,10 @@ fn cmd_traffic(args: &Args) -> Result<(), String> {
             .parse()
             .map_err(|_| format!("--seed expects an integer, got {seed:?}"))?;
     }
+    apply_trace_flag(args, &mut spec);
     let r = run_scenario(&spec)?;
     print_scenario_report(&r);
+    print_trace_paths(&spec);
     if args.has("metrics") {
         let m = Metrics::new();
         r.traffic
@@ -425,8 +450,10 @@ fn cmd_compare(args: &Args) -> Result<(), String> {
     if spec.compare.is_none() {
         spec.compare = Some(CompareSpec::default());
     }
+    apply_trace_flag(args, &mut spec);
     let r = run_scenario(&spec)?;
     print_scenario_report(&r);
+    print_trace_paths(&spec);
     Ok(())
 }
 

@@ -7,11 +7,15 @@ use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
+use crate::util::stats::LogHist;
+
 #[derive(Default)]
 struct Inner {
     counters: Mutex<BTreeMap<String, Arc<AtomicU64>>>,
     gauges: Mutex<BTreeMap<String, Arc<AtomicI64>>>,
-    timers: Mutex<BTreeMap<String, Vec<f64>>>,
+    /// Log-bucketed histograms: O(1) memory per timer no matter how
+    /// many samples a long run records (was an unbounded `Vec<f64>`).
+    timers: Mutex<BTreeMap<String, LogHist>>,
 }
 
 /// Cheap-to-clone handle to a shared metrics registry.
@@ -57,7 +61,7 @@ impl Metrics {
     /// Record a duration sample in seconds under `name`.
     pub fn observe_secs(&self, name: &str, secs: f64) {
         let mut m = self.inner.timers.lock().unwrap();
-        m.entry(name.to_string()).or_default().push(secs);
+        m.entry(name.to_string()).or_default().observe(secs);
     }
 
     /// Time a closure and record it.
@@ -68,14 +72,19 @@ impl Metrics {
         out
     }
 
-    pub fn timer_samples(&self, name: &str) -> Vec<f64> {
+    /// Snapshot of a timer's histogram, or `None` if never observed.
+    pub fn timer_stats(&self, name: &str) -> Option<LogHist> {
         let m = self.inner.timers.lock().unwrap();
-        m.get(name).cloned().unwrap_or_default()
+        m.get(name).cloned()
+    }
+
+    /// How many samples a timer has recorded.
+    pub fn timer_count(&self, name: &str) -> u64 {
+        self.timer_stats(name).map(|h| h.count()).unwrap_or(0)
     }
 
     /// Render all metrics as an aligned text table.
     pub fn report(&self) -> String {
-        use crate::util::stats::Summary;
         let mut out = String::new();
         let counters = self.inner.counters.lock().unwrap();
         if !counters.is_empty() {
@@ -94,11 +103,15 @@ impl Metrics {
         let timers = self.inner.timers.lock().unwrap();
         if !timers.is_empty() {
             out.push_str("timers (secs):\n");
-            for (k, samples) in timers.iter() {
-                if let Some(s) = Summary::of(samples) {
+            for (k, h) in timers.iter() {
+                if h.count() > 0 {
                     out.push_str(&format!(
                         "  {k:<40} n={} mean={:.4} p50={:.4} p99={:.4} max={:.4}\n",
-                        s.n, s.mean, s.p50, s.p99, s.max
+                        h.count(),
+                        h.mean(),
+                        h.quantile(0.50),
+                        h.quantile(0.99),
+                        h.max()
                     ));
                 }
             }
@@ -151,6 +164,26 @@ mod tests {
         let r = m.report();
         assert!(r.contains("op"));
         assert!(r.contains("spes"));
-        assert_eq!(m.timer_samples("op").len(), 2);
+        assert_eq!(m.timer_count("op"), 2);
+        assert_eq!(m.timer_count("missing"), 0);
+    }
+
+    #[test]
+    fn timer_memory_stays_bounded_under_a_million_samples() {
+        let m = Metrics::new();
+        m.observe_secs("hot", 0.25);
+        let before = m.timer_stats("hot").unwrap().footprint_bytes();
+        for i in 0..1_000_000u32 {
+            m.observe_secs("hot", (i % 1000) as f64 * 1e-4);
+        }
+        let h = m.timer_stats("hot").unwrap();
+        assert_eq!(h.count(), 1_000_001);
+        assert_eq!(
+            h.footprint_bytes(),
+            before,
+            "timer storage must not grow with sample count"
+        );
+        let r = m.report();
+        assert!(r.contains("hot") && r.contains("n=1000001"));
     }
 }

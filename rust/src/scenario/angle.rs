@@ -64,6 +64,7 @@ use super::engine::{
     build_stage_segments, coordination_secs, live_owner as walk_live_owner, replica_of,
     shuffle_rate_cap, Aggregate, BatchOutcome, FaultState, StageKind, TierBytes,
 };
+use super::trace::{HarnessGauges, TraceRecorder, Tracer};
 use super::{AngleSpec, ScenarioSpec};
 
 /// k-means iteration budget `analyze_windows` runs with; the oracle's
@@ -163,7 +164,11 @@ fn mine(a: &AngleSpec, sensors: usize, seed: u64) -> Result<Mined, String> {
 
 /// Run the staged Angle pipeline.  Called from `engine::run_batch` for
 /// `WorkloadKind::Angle`; deterministic — the spec is the only input.
-pub(crate) fn run_angle(spec: &ScenarioSpec, testbed: &Testbed) -> Result<BatchOutcome, String> {
+pub(crate) fn run_angle(
+    spec: &ScenarioSpec,
+    testbed: &Testbed,
+    rec: &TraceRecorder,
+) -> Result<BatchOutcome, String> {
     let workload = spec
         .workload
         .as_ref()
@@ -176,8 +181,15 @@ pub(crate) fn run_angle(spec: &ScenarioSpec, testbed: &Testbed) -> Result<BatchO
 
     let n = testbed.nodes();
     let mut state = FaultState::new(&spec.faults, n);
-    let (mut run, mut net, mut q) =
-        AngleRun::new(testbed, &spec.cfg, a, workload.bytes_per_node, &mined, &state)?;
+    let (mut run, mut net, mut q) = AngleRun::new(
+        testbed,
+        &spec.cfg,
+        a,
+        workload.bytes_per_node,
+        &mined,
+        &state,
+        rec.tracer("angle"),
+    )?;
     run.execute(&mut net, &mut q, &mut state)?;
 
     let files = run.files;
@@ -239,6 +251,16 @@ impl CoreEv for AEv {
             _ => None,
         }
     }
+
+    fn trace_name(&self) -> &'static str {
+        match self {
+            AEv::Seg { .. } => "seg",
+            AEv::SpecCheck { .. } => "spec_check",
+            AEv::Open { .. } => "open",
+            AEv::Scored { .. } => "scored",
+            AEv::Fault(_) => "fault",
+        }
+    }
 }
 
 enum AFlow {
@@ -255,6 +277,7 @@ struct Attempt {
     node: usize,
     seg: Segment,
     speculative: bool,
+    started: f64,
 }
 
 struct AngleRun<'a> {
@@ -307,6 +330,8 @@ struct AngleRun<'a> {
     staged_work: f64,
     agg: Aggregate,
     makespan: f64,
+    /// Sim-time trace hook (a disabled recorder's tracer is free).
+    tracer: Tracer,
 }
 
 impl<'a> AngleRun<'a> {
@@ -317,6 +342,7 @@ impl<'a> AngleRun<'a> {
         bytes_per_node: f64,
         mined: &Mined,
         state: &FaultState,
+        tracer: Tracer,
     ) -> Result<(AngleRun<'a>, NetSim, EventQueue<AEv>), String> {
         let n = testbed.nodes();
         let w = a.windows;
@@ -405,6 +431,7 @@ impl<'a> AngleRun<'a> {
             staged_work,
             agg: Aggregate::default(),
             makespan: 0.0,
+            tracer,
         };
         Ok((run, net, q))
     }
@@ -519,6 +546,7 @@ impl<'a> AngleRun<'a> {
                         node,
                         seg,
                         speculative: false,
+                        started: now,
                     },
                 );
                 self.running[node] += 1;
@@ -689,6 +717,7 @@ impl<'a> AngleRun<'a> {
                 node,
                 seg,
                 speculative,
+                started: now,
             },
         );
         self.running[node] += 1;
@@ -733,6 +762,8 @@ impl<'a> AngleRun<'a> {
             return;
         }
         self.spec.mark_speculated(id);
+        self.tracer
+            .task_mark(now, "speculate", backup, "window cluster");
         self.dispatch_cluster(seg, backup, true, now, q, state);
     }
 
@@ -752,6 +783,8 @@ impl<'a> AngleRun<'a> {
         if self.stage == Stage::Extract {
             debug_assert!(first, "extract never speculates");
             self.agg.segments += 1;
+            self.tracer
+                .task(att.started, now, "segment", att.node, "angle extract");
             self.pump_extract(now, q, state);
             return Ok(());
         }
@@ -763,8 +796,12 @@ impl<'a> AngleRun<'a> {
             }
         }
         if first {
+            self.tracer
+                .task(att.started, now, "cluster", att.node, "window cluster");
             if att.speculative {
                 self.sched.record_speculative_win();
+                self.tracer
+                    .task_mark(now, "spec won", att.node, "window cluster");
             }
             self.win_node[att.seg.id] = att.node;
             self.agg.segments += 1;
@@ -1017,6 +1054,7 @@ impl<'a> AngleRun<'a> {
         // model RE-replication above is new traffic and counted.
         for (fid, info) in toward {
             self.flows.remove(&fid);
+            self.tracer.flow_cancel(fid, now);
             let left = net.cancel_flow(fid);
             match info {
                 AFlowInfo::Ingest => {
@@ -1080,12 +1118,14 @@ impl<'a> AngleRun<'a> {
             match self.stage {
                 Stage::Ingest if self.ingest_pending == 0 => {
                     self.agg.stage_ends.push(("sensor ingest".to_string(), now));
+                    self.tracer.stage_mark(now, "sensor ingest");
                     self.stage = Stage::Extract;
                     self.start_extract(now, q, state)?;
                 }
                 Stage::Extract if self.sched.is_drained() && self.inflight.is_empty() => {
                     self.harvest_sched();
                     self.agg.stage_ends.push(("angle extract".to_string(), now));
+                    self.tracer.stage_mark(now, "angle extract");
                     self.stage = Stage::Aggregate;
                     self.start_aggregate(now, net, q, state);
                 }
@@ -1093,17 +1133,20 @@ impl<'a> AngleRun<'a> {
                     self.agg
                         .stage_ends
                         .push(("window aggregate".to_string(), now));
+                    self.tracer.stage_mark(now, "window aggregate");
                     self.stage = Stage::Cluster;
                     self.start_cluster(now, q, state)?;
                 }
                 Stage::Cluster if self.sched.is_drained() && self.inflight.is_empty() => {
                     self.harvest_sched();
                     self.agg.stage_ends.push(("window cluster".to_string(), now));
+                    self.tracer.stage_mark(now, "window cluster");
                     self.stage = Stage::Score;
                     self.start_score(now, net, q, state)?;
                 }
                 Stage::Score if self.score_pending == 0 => {
                     self.agg.stage_ends.push(("model score".to_string(), now));
+                    self.tracer.stage_mark(now, "model score");
                     self.stage = Stage::Done;
                     self.makespan = now;
                 }
@@ -1154,9 +1197,10 @@ impl<'a> AngleRun<'a> {
         self.advance(0.0, net, q, state)?;
         let links = self.links.clone();
         let testbed = self.testbed;
+        let tracer = self.tracer.clone();
         let out = {
             let mut h = AngleHarness { run: self };
-            core::drive(&mut h, net, q, state, &links, testbed)?
+            core::drive(&mut h, net, q, state, &links, testbed, &tracer)?
         };
         self.agg.events += out.events;
         Ok(())
@@ -1179,6 +1223,19 @@ impl<'r, 'a> Harness for AngleHarness<'r, 'a> {
 
     fn on_stall(&mut self) -> Result<(), String> {
         Err("angle pipeline stalled before completing".into())
+    }
+
+    fn gauges(&self) -> HarnessGauges {
+        HarnessGauges {
+            occupancy: self.run.running.iter().map(|&r| r as u64).sum(),
+            queued: self.run.sched.pending_count() as u64,
+            spec_inflight: self
+                .run
+                .inflight
+                .values()
+                .filter(|a| a.speculative)
+                .count() as u64,
+        }
     }
 
     fn flow_done(
@@ -1208,6 +1265,12 @@ impl<'r, 'a> Harness for AngleHarness<'r, 'a> {
                 if self.run.open_gen[window] == Some(gen) {
                     self.run.open_gen[window] = None;
                     self.run.win_opened[window] = true;
+                    self.run.tracer.task_mark(
+                        now,
+                        "window open",
+                        self.run.win_home[window],
+                        "window aggregate",
+                    );
                 }
             }
             AEv::Scored { site, gen } => {
@@ -1215,6 +1278,9 @@ impl<'r, 'a> Harness for AngleHarness<'r, 'a> {
                     self.run.score_gen[site] = None;
                     self.run.scored[site] = true;
                     self.run.score_pending -= 1;
+                    if let Some(rep) = self.run.site_rep[site] {
+                        self.run.tracer.task_mark(now, "site scored", rep, "model score");
+                    }
                 }
             }
             AEv::Fault(_) => {} // intercepted by the core
@@ -1290,7 +1356,7 @@ mod tests {
         assert!(an.model_tier.wan > 0.0, "models crossed sites");
         // Every stage ran on the substrate, in order.
         let testbed = spec.topology.generate().unwrap();
-        let out = run_angle(&spec, &testbed).unwrap();
+        let out = run_angle(&spec, &testbed, &TraceRecorder::disabled()).unwrap();
         let names: Vec<&str> = out.agg.stage_ends.iter().map(|(n, _)| n.as_str()).collect();
         assert_eq!(
             names,

@@ -63,6 +63,7 @@ use super::engine::{
     FaultState, ScenarioReport, StageKind, build_stage_segments, coordination_secs, pick_dst_in,
     shuffle_rate_cap,
 };
+use super::trace::{HarnessGauges, TraceRecorder, Tracer};
 use super::{ScenarioSpec, WorkloadKind, WorkloadSpec};
 
 /// Minimum completed segments before the running median is trusted.
@@ -186,6 +187,9 @@ struct JobSide<'a> {
     stage_ends: Vec<(String, f64)>,
     done: bool,
     makespan: f64,
+    /// Observability feed for task spans, speculation marks and
+    /// cancelled flows.
+    tracer: Tracer,
 }
 
 impl<'a> JobSide<'a> {
@@ -199,6 +203,7 @@ impl<'a> JobSide<'a> {
         disk_write: Vec<LinkId>,
         nominal_caps: Vec<f64>,
         state: &FaultState,
+        tracer: Tracer,
     ) -> Result<JobSide<'a>, String> {
         let kinds = StageKind::stages_of(workload.kind)
             .ok_or("colocation: analytic workloads have no event stream to colocate")?;
@@ -239,6 +244,7 @@ impl<'a> JobSide<'a> {
             stage_ends: Vec::new(),
             done: false,
             makespan: 0.0,
+            tracer,
         })
     }
 
@@ -359,13 +365,18 @@ impl<'a> JobSide<'a> {
                 if let Some(lfid) = loser.fid {
                     self.flows.remove(&lfid);
                     net.try_cancel_flow(lfid);
+                    self.tracer.flow_cancel(lfid, now);
                 }
                 self.sched.cancel_attempt(&loser.seg);
             }
         }
         if first {
+            let stage_name = self.kinds[self.stage].name();
+            self.tracer
+                .task(att.started, now, "segment", att.node, stage_name);
             if att.speculative {
                 self.sched.record_speculative_win();
+                self.tracer.task_mark(now, "spec won", att.node, stage_name);
             }
             self.segments += 1;
             let d = (now - att.started).max(0.0);
@@ -399,7 +410,7 @@ impl<'a> JobSide<'a> {
         if !self.speculative || self.durations.len() < SPEC_MIN_SAMPLES {
             return;
         }
-        let median = self.durations[self.durations.len() / 2];
+        let median = crate::util::stats::median_nearest_rank(&self.durations);
         if !(median > 0.0) {
             return;
         }
@@ -441,6 +452,8 @@ impl<'a> JobSide<'a> {
         if !self.sched.speculate(&seg, backup as u32) {
             return;
         }
+        self.tracer
+            .task_mark(now, "speculate", backup, self.kinds[self.stage].name());
         self.spec.mark_speculated(seg.id);
         self.next_gen += 1;
         let bgen = self.next_gen;
@@ -482,6 +495,7 @@ impl<'a> JobSide<'a> {
             if let Some(fid) = att.fid {
                 self.flows.remove(&fid);
                 net.try_cancel_flow(fid);
+                self.tracer.flow_cancel(fid, now);
             }
             let siblings = self.spec.drop_attempt(att.seg.id, g);
             if siblings > 0 {
@@ -513,6 +527,7 @@ impl<'a> JobSide<'a> {
         for (fid, src, dst) in redirect {
             self.flows.remove(&fid);
             let left = net.cancel_flow(fid);
+            self.tracer.flow_cancel(fid, now);
             let new_dst = {
                 let alive = state.alive();
                 pick_dst_in(alive, src, dst + 1)
@@ -546,6 +561,7 @@ impl<'a> JobSide<'a> {
         self.remote_assignments += self.sched.remote_assignments;
         self.spec_launched += self.sched.speculative_launched;
         self.spec_won += self.sched.speculative_won;
+        self.tracer.stage_mark(now, self.kinds[self.stage].name());
         self.stage_ends
             .push((self.kinds[self.stage].name().to_string(), now));
         self.stage += 1;
@@ -643,6 +659,20 @@ impl<'r, 'a> Harness for CoHarness<'r, 'a> {
         }
         Ok(())
     }
+
+    fn gauges(&self) -> HarnessGauges {
+        let svc = self.svc.gauges();
+        HarnessGauges {
+            occupancy: svc.occupancy + self.job.running.iter().map(|&r| r as u64).sum::<u64>(),
+            queued: svc.queued + self.job.sched.pending_count() as u64,
+            spec_inflight: self
+                .job
+                .inflight
+                .values()
+                .filter(|a| a.speculative)
+                .count() as u64,
+        }
+    }
 }
 
 /// Run a colocated scenario to completion.  Deterministic: the spec is
@@ -650,6 +680,7 @@ impl<'r, 'a> Harness for CoHarness<'r, 'a> {
 pub(crate) fn run_colocated(
     spec: &ScenarioSpec,
     testbed: &Testbed,
+    rec: &TraceRecorder,
 ) -> Result<ScenarioReport, String> {
     let workload = spec
         .workload
@@ -667,7 +698,7 @@ pub(crate) fn run_colocated(
     let baseline = {
         let mut solo = spec.clone();
         solo.workload = None;
-        crate::service::run_traffic(&solo, testbed)?
+        crate::service::run_traffic(&solo, testbed, rec)?
     };
     let baseline_traffic = baseline.traffic.expect("traffic-only run reports SLOs");
 
@@ -677,7 +708,16 @@ pub(crate) fn run_colocated(
         NetSim::with_capacity(4 * n + 2 * testbed.racks() + 2 * testbed.site_names.len());
     let links = testbed.build_network(&mut net);
     let mut q: EventQueue<CoEv> = EventQueue::with_capacity(4096);
-    let mut svc = TrafficEngine::new(spec, tspec, testbed, &mut net, links.clone(), &state)?;
+    let tracer = rec.tracer("colocate");
+    let mut svc = TrafficEngine::new(
+        spec,
+        tspec,
+        testbed,
+        &mut net,
+        links.clone(),
+        &state,
+        tracer.clone(),
+    )?;
     let mut job = JobSide::new(
         spec,
         workload,
@@ -687,6 +727,7 @@ pub(crate) fn run_colocated(
         svc.disk_write.clone(),
         svc.nominal_caps.clone(),
         &state,
+        tracer.clone(),
     )?;
 
     core::schedule_faults(&mut state, &mut q, 0.0);
@@ -698,7 +739,7 @@ pub(crate) fn run_colocated(
             job: &mut job,
             svc: &mut svc,
         };
-        core::drive(&mut h, &mut net, &mut q, &mut state, &links, testbed)?
+        core::drive(&mut h, &mut net, &mut q, &mut state, &links, testbed, &tracer)?
     };
     let events = out.events;
 
@@ -752,6 +793,7 @@ pub(crate) fn run_colocated(
         }),
         comparison: None,
         angle: None,
+        trace_digest: String::new(),
     })
 }
 

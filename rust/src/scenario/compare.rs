@@ -28,6 +28,7 @@ use crate::hadoop::engine::run_hadoop;
 use crate::topology::Testbed;
 
 use super::engine::{run_batch, ScenarioReport, TierBytes};
+use super::trace::TraceRecorder;
 use super::{ScenarioSpec, WorkloadKind};
 
 /// One system's half of the head-to-head.
@@ -65,14 +66,15 @@ pub struct ComparisonReport {
 pub(crate) fn run_compare(
     spec: &ScenarioSpec,
     testbed: &Testbed,
+    rec: &TraceRecorder,
 ) -> Result<ScenarioReport, String> {
     let workload = spec
         .workload
         .as_ref()
         .ok_or("[compare] requires a [workload] block")?;
 
-    let sphere_run = run_batch(spec, testbed)?;
-    let hadoop_run = run_hadoop(spec, testbed)?;
+    let sphere_run = run_batch(spec, testbed, rec)?;
+    let hadoop_run = run_hadoop(spec, testbed, rec)?;
 
     let sphere = SystemOutcome {
         system: "sphere",
@@ -128,6 +130,7 @@ pub(crate) fn run_compare(
             speedup,
         }),
         angle: None,
+        trace_digest: String::new(),
     })
 }
 

@@ -42,6 +42,7 @@ use crate::sim::event::EventQueue;
 use crate::sim::netsim::{FlowId, NetSim};
 use crate::topology::{NetLinks, Testbed};
 
+use super::trace::{sample_gauges, HarnessGauges, Tracer};
 use super::FaultSpec;
 
 // ------------------------------------------------------------ fault state
@@ -184,6 +185,11 @@ pub(crate) trait CoreEv: Sized {
     /// Inverse of `from_fault`: the core intercepts and applies these
     /// instead of handing them to the harness.
     fn to_fault(&self) -> Option<FaultEv>;
+    /// Short static label the trace records for this event's dispatch
+    /// (DESIGN.md §15).  Engines override it with per-variant names.
+    fn trace_name(&self) -> &'static str {
+        "ev"
+    }
 }
 
 /// Schedule the not-yet-consumed fault plan into an engine's queue.
@@ -349,12 +355,25 @@ pub(crate) trait Harness {
         q: &mut EventQueue<Self::Ev>,
         state: &mut FaultState,
     ) -> Result<(), String>;
+
+    /// Harness-side gauges for the sim-time sampler (DESIGN.md §15).
+    /// The default reports idle; engines with schedulers override it.
+    fn gauges(&self) -> HarnessGauges {
+        HarnessGauges::default()
+    }
 }
 
 /// The shared event loop: `next = min(queue, network)`, advance the
 /// network and dispatch completed flows in id order, drain the
 /// simultaneous event wave FIFO, intercept fault events, then the
 /// post-wave hook.  Returns the event count and end time.
+///
+/// Tracing (DESIGN.md §15) rides the loop: flow opens are detected
+/// centrally from the monotone flow-id watermark (every engine's
+/// starts land between two waves), completions close their spans,
+/// fault applications and event dispatches emit instants, and the
+/// sim-time sampler fires on every tick crossed by a wave — sampling
+/// the state immediately *before* the wave that crossed it.
 pub(crate) fn drive<H: Harness>(
     h: &mut H,
     net: &mut NetSim,
@@ -362,11 +381,24 @@ pub(crate) fn drive<H: Harness>(
     state: &mut FaultState,
     links: &NetLinks,
     testbed: &Testbed,
+    tracer: &Tracer,
 ) -> Result<DriveOutcome, String> {
     let mut events: u64 = 0;
     let mut now = net.now();
     let mut batch: Vec<H::Ev> = Vec::new();
+    let tick = tracer.sample_secs();
+    let mut next_tick = if tick > 0.0 {
+        (now / tick).floor() * tick + tick
+    } else {
+        f64::INFINITY
+    };
+    // Engines that rebuild their substrate between stages restart the
+    // flow-id space; re-anchor the open-flow watermark to this net.
+    tracer.reset_flow_watermark(net.flow_id_watermark());
     loop {
+        // Flows the harness started since the last turn opened at the
+        // previous wave's instant (`now` still holds it here).
+        tracer.open_new_flows(net.flow_id_watermark(), now);
         if h.finished(net) {
             break;
         }
@@ -381,9 +413,15 @@ pub(crate) fn drive<H: Harness>(
             (None, Some(b)) => b,
             (Some(a), Some(b)) => a.min(b),
         };
+        while next_tick <= next {
+            let g = h.gauges();
+            sample_gauges(tracer, next_tick, &g, net, q.len(), state.alive().len(), links);
+            next_tick += tick;
+        }
         now = next;
         for fid in net.advance_to(next) {
             events += 1;
+            tracer.flow_done(fid, now);
             h.flow_done(fid, now, net, q, state)?;
         }
         let mut drained = false;
@@ -398,23 +436,41 @@ pub(crate) fn drive<H: Harness>(
                         state.consumed[fault] = true;
                         if let FaultSpec::SlaveCrash { node, .. } = state.faults[fault] {
                             if !state.dead[node] {
+                                tracer.instant_node(now, "fault", "crash", node);
                                 state.crash(node);
                                 h.on_crash(node, now, net, q, state)?;
                             }
                         }
                     }
                     Some(FaultEv::DegradeStart { fault }) => {
+                        if let FaultSpec::LinkDegrade { site, factor, .. } = state.faults[fault]
+                        {
+                            tracer.instant(
+                                now,
+                                "fault",
+                                &format!("degrade site{site} x{factor}"),
+                            );
+                        }
                         handle_degrade_start(state, net, links, testbed, fault, now)
                     }
                     Some(FaultEv::DegradeEnd { fault }) => {
+                        if let FaultSpec::LinkDegrade { site, .. } = state.faults[fault] {
+                            tracer.instant(now, "fault", &format!("restore site{site}"));
+                        }
                         handle_degrade_end(state, net, links, testbed, fault, now)
                     }
-                    None => h.handle(ev, now, net, q, state)?,
+                    None => {
+                        tracer.ev(now, ev.trace_name());
+                        h.handle(ev, now, net, q, state)?;
+                    }
                 }
             }
         }
         h.after_wave(now, drained, net, q, state)?;
     }
+    // Flows started by the final wave (or left mid-transfer) get their
+    // opens recorded before the run's artifacts are written.
+    tracer.open_new_flows(net.flow_id_watermark(), now);
     Ok(DriveOutcome { events, end: now })
 }
 

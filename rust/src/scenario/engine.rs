@@ -47,6 +47,7 @@ use crate::topology::{NetLinks, Proximity, Testbed, rack_diverse_replica};
 use crate::transport::TransportModels;
 
 use super::core::{self, CoreEv, FaultEv, Harness};
+use super::trace::{HarnessGauges, TraceRecorder, Tracer};
 use super::{ScenarioSpec, WorkloadKind};
 
 // Fault-plan machinery moved to the shared engine core; re-exported so
@@ -92,6 +93,10 @@ pub struct ScenarioReport {
     /// windows vs planted ground truth, model-distribution bytes per
     /// link tier (DESIGN.md §13).
     pub angle: Option<super::angle::AngleReport>,
+    /// FNV-1a digest of the run's full trace timeline (DESIGN.md §15).
+    /// Always computed — with or without `--trace` — so the golden
+    /// fixtures pin the event-by-event timeline, not just the summary.
+    pub trace_digest: String,
 }
 
 /// Bytes moved between nodes, bucketed by the deepest link tier the
@@ -127,26 +132,36 @@ impl TierBytes {
 
 /// Run one scenario to completion. Deterministic: no wall clock, no
 /// ambient randomness — the spec is the only input.
+///
+/// One [`TraceRecorder`] observes the whole run (DESIGN.md §15): every
+/// sub-engine feeds it through `core::drive`, the report carries its
+/// timeline digest, and — when `[trace] path` / `--trace` is set — the
+/// JSONL + Chrome `trace_event` artifacts are written at the end.
 pub fn run_scenario(spec: &ScenarioSpec) -> Result<ScenarioReport, String> {
     spec.validate()?;
     let testbed = spec.topology.generate()?;
-    if spec.compare.is_some() {
+    let rec = TraceRecorder::for_spec(spec.trace.as_ref());
+    let mut report = if spec.compare.is_some() {
         // Head-to-head scenario: the same workload through the Sphere
         // engine AND the Hadoop baseline engine (DESIGN.md §12).
-        return super::compare::run_compare(spec, &testbed);
+        super::compare::run_compare(spec, &testbed, &rec)?
+    } else {
+        match (&spec.workload, &spec.traffic) {
+            // Colocated scenario: batch job + client traffic share one
+            // substrate (DESIGN.md §11).
+            (Some(_), Some(_)) => super::colocate::run_colocated(spec, &testbed, &rec)?,
+            // Service-only scenario: the traffic engine replaces the
+            // batch workload, composing with the same fault plan.
+            (None, Some(_)) => crate::service::run_traffic(spec, &testbed, &rec)?,
+            (None, None) => return Err("scenario has neither workload nor traffic".into()),
+            (Some(_), None) => run_batch(spec, &testbed, &rec)?.into_report(spec, &testbed),
+        }
+    };
+    report.trace_digest = rec.digest_hex();
+    if let Some(path) = spec.trace.as_ref().and_then(|t| t.path.as_deref()) {
+        rec.write_artifacts(&spec.name, path, &testbed)?;
     }
-    match (&spec.workload, &spec.traffic) {
-        // Colocated scenario: batch job + client traffic share one
-        // substrate (DESIGN.md §11).
-        (Some(_), Some(_)) => return super::colocate::run_colocated(spec, &testbed),
-        // Service-only scenario: the traffic engine replaces the batch
-        // workload, composing with the same fault plan.
-        (None, Some(_)) => return crate::service::run_traffic(spec, &testbed),
-        (None, None) => return Err("scenario has neither workload nor traffic".into()),
-        (Some(_), None) => {}
-    }
-    let out = run_batch(spec, &testbed)?;
-    Ok(out.into_report(spec, &testbed))
+    Ok(report)
 }
 
 /// Raw outcome of the Sphere batch half of the engine — what the
@@ -184,6 +199,7 @@ impl BatchOutcome {
             colocation: None,
             comparison: None,
             angle: self.angle,
+            trace_digest: String::new(),
         }
     }
 }
@@ -191,7 +207,11 @@ impl BatchOutcome {
 /// Run the `[workload]` block to completion on a fresh substrate built
 /// from `testbed`.  Shared by the plain batch path of [`run_scenario`]
 /// and the Sphere side of the compare driver (DESIGN.md §12).
-pub(crate) fn run_batch(spec: &ScenarioSpec, testbed: &Testbed) -> Result<BatchOutcome, String> {
+pub(crate) fn run_batch(
+    spec: &ScenarioSpec,
+    testbed: &Testbed,
+    rec: &TraceRecorder,
+) -> Result<BatchOutcome, String> {
     let workload = spec
         .workload
         .as_ref()
@@ -199,26 +219,27 @@ pub(crate) fn run_batch(spec: &ScenarioSpec, testbed: &Testbed) -> Result<BatchO
     let mut state = FaultState::new(&spec.faults, testbed.nodes());
     let b = workload.bytes_per_node;
     let mut agg = Aggregate::default();
+    let tracer = rec.tracer("sphere");
 
     let makespan = match workload.kind {
         WorkloadKind::Terasort => {
             let (run, net, q) =
                 StageRun::new(testbed, &spec.cfg, StageKind::TerasortA, b, 0.0, &state)?;
-            let end_a = run.execute(net, q, &mut state, &mut agg)?;
+            let end_a = run.execute(net, q, &mut state, &mut agg, &tracer)?;
             let (run, net, q) =
                 StageRun::new(testbed, &spec.cfg, StageKind::TerasortB, b, end_a, &state)?;
-            run.execute(net, q, &mut state, &mut agg)?
+            run.execute(net, q, &mut state, &mut agg, &tracer)?
         }
         WorkloadKind::Filegen => {
             let (run, net, q) =
                 StageRun::new(testbed, &spec.cfg, StageKind::Filegen, b, 0.0, &state)?;
-            run.execute(net, q, &mut state, &mut agg)?
+            run.execute(net, q, &mut state, &mut agg, &tracer)?
         }
         // The staged Angle pipeline owns its whole substrate — ingest,
         // extract, aggregate, cluster and score all run event-driven
         // (DESIGN.md §13; the old off-substrate clustering scalar
         // survives only as its calibration oracle).
-        WorkloadKind::Angle => return super::angle::run_angle(spec, testbed),
+        WorkloadKind::Angle => return super::angle::run_angle(spec, testbed, rec),
         WorkloadKind::Terasplit => run_terasplit(testbed, &spec.cfg, b, &mut state, &mut agg)?,
         WorkloadKind::Kmeans => run_kmeans(
             testbed,
@@ -359,6 +380,13 @@ impl CoreEv for Ev {
             Ev::Seg { .. } => None,
         }
     }
+
+    fn trace_name(&self) -> &'static str {
+        match self {
+            Ev::Seg { .. } => "seg",
+            Ev::Fault(_) => "fault",
+        }
+    }
 }
 
 struct FlowOut {
@@ -484,6 +512,7 @@ impl<'a> StageRun<'a> {
         mut q: EventQueue<Ev>,
         state: &mut FaultState,
         agg: &mut Aggregate,
+        tracer: &Tracer,
     ) -> Result<f64, String> {
         core::schedule_faults(state, &mut q, self.start);
         self.pump(self.start, &mut q, state);
@@ -493,9 +522,11 @@ impl<'a> StageRun<'a> {
             let mut h = StageHarness {
                 run: &mut self,
                 agg,
+                tracer,
             };
-            core::drive(&mut h, &mut net, &mut q, state, &links, testbed)?
+            core::drive(&mut h, &mut net, &mut q, state, &links, testbed, tracer)?
         };
+        tracer.stage_mark(out.end, self.kind.name());
         agg.events += out.events;
         agg.local_assignments += self.sched.local_assignments;
         agg.remote_assignments += self.sched.remote_assignments;
@@ -509,6 +540,7 @@ impl<'a> StageRun<'a> {
 struct StageHarness<'r, 'a> {
     run: &'r mut StageRun<'a>,
     agg: &'r mut Aggregate,
+    tracer: &'r Tracer,
 }
 
 impl<'r, 'a> Harness for StageHarness<'r, 'a> {
@@ -533,7 +565,7 @@ impl<'r, 'a> Harness for StageHarness<'r, 'a> {
     fn handle(
         &mut self,
         ev: Ev,
-        _now: f64,
+        now: f64,
         net: &mut NetSim,
         _q: &mut EventQueue<Ev>,
         state: &mut FaultState,
@@ -547,6 +579,7 @@ impl<'r, 'a> Harness for StageHarness<'r, 'a> {
         };
         run.running[node] -= 1;
         run.sched.complete(&seg);
+        self.tracer.task_mark(now, "seg done", node, run.kind.name());
         self.agg.segments += 1;
         if run.kind.shuffles() {
             // Scoped: `alive` borrows the fault state,
@@ -633,6 +666,14 @@ impl<'r, 'a> Harness for StageHarness<'r, 'a> {
             self.run.pump(now, q, state);
         }
         Ok(())
+    }
+
+    fn gauges(&self) -> HarnessGauges {
+        HarnessGauges {
+            occupancy: self.run.running.iter().map(|&r| r as u64).sum(),
+            queued: self.run.sched.pending_count() as u64,
+            spec_inflight: 0,
+        }
     }
 }
 

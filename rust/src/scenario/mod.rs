@@ -37,11 +37,13 @@ pub mod colocate;
 pub mod compare;
 pub(crate) mod core;
 pub mod engine;
+pub mod trace;
 
 pub use angle::AngleReport;
 pub use colocate::{ColocationReport, TenantSloDelta};
 pub use compare::{ComparisonReport, SystemOutcome};
 pub use engine::{run_scenario, ScenarioReport, TierBytes};
+pub use trace::{TraceRecorder, TraceSpec};
 
 use crate::config::{SimConfig, Table};
 use crate::mining::pcap::Regime;
@@ -421,6 +423,10 @@ pub struct ScenarioSpec {
     /// an angle workload without the block runs with
     /// `AngleSpec::default()`.
     pub angle: Option<AngleSpec>,
+    /// Sim-time trace capture (the `[trace]` TOML block / `--trace`
+    /// CLI flag; DESIGN.md §15).  `None` still computes the timeline
+    /// digest, but retains and writes nothing.
+    pub trace: Option<TraceSpec>,
 }
 
 impl ScenarioSpec {
@@ -529,6 +535,11 @@ impl ScenarioSpec {
         } else {
             None
         };
+        let trace = if t.section_keys("trace").next().is_some() {
+            Some(TraceSpec::from_table(t)?)
+        } else {
+            None
+        };
         Ok(ScenarioSpec {
             name: t.str_or("name", &topology.name).to_string(),
             topology,
@@ -539,6 +550,7 @@ impl ScenarioSpec {
             colocation,
             compare,
             angle,
+            trace,
         })
     }
 
@@ -551,6 +563,9 @@ impl ScenarioSpec {
         }
         if let Some(traffic) = &self.traffic {
             traffic.validate()?;
+        }
+        if let Some(trace) = &self.trace {
+            trace.validate()?;
         }
         self.colocation.validate()?;
         if let Some(angle) = &self.angle {
@@ -682,6 +697,7 @@ impl ScenarioSpec {
             colocation: ColocationSpec::default(),
             compare: None,
             angle: None,
+            trace: None,
         }
     }
 
@@ -702,6 +718,7 @@ impl ScenarioSpec {
             colocation: ColocationSpec::default(),
             compare: None,
             angle: None,
+            trace: None,
         }
     }
 
@@ -739,6 +756,7 @@ impl ScenarioSpec {
             colocation: ColocationSpec::default(),
             compare: None,
             angle: None,
+            trace: None,
         }
     }
 
@@ -892,6 +910,7 @@ impl ScenarioSpec {
             colocation: ColocationSpec::default(),
             compare: None,
             angle: Some(AngleSpec::default()),
+            trace: None,
         }
     }
 
@@ -943,6 +962,7 @@ impl ScenarioSpec {
                 ],
                 ..AngleSpec::default()
             }),
+            trace: None,
         }
     }
 }

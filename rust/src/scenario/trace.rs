@@ -1,0 +1,1036 @@
+//! Sim-time tracing + run-artifact observability (DESIGN.md §15).
+//!
+//! The paper's claims are timeline claims — where virtual time goes
+//! across stages, links and speculative attempts — so the shared
+//! engine core ([`super::core::drive`]) feeds every run through one
+//! [`TraceRecorder`]:
+//!
+//! * **Spans and instants.**  Flow lifetimes (open → done/cancel),
+//!   queue-event dispatches, fault applications (crash, brown-out
+//!   start/end), task-attempt lifecycle marks and admission decisions,
+//!   each tagged with the emitting harness (`sphere`, `traffic`,
+//!   `colocate`, `hadoop`, `angle`), the node (mapped to rack/site at
+//!   artifact-write time), the stage and the tenant.
+//! * **Sampled gauges.**  On a configurable sim-time tick the core
+//!   snapshots per-tier link utilization, active flows, event-queue
+//!   depth, scheduler occupancy, speculation in-flight and live nodes
+//!   ([`sample_gauges`]; the harness contributes [`HarnessGauges`]).
+//! * **A streaming FNV-1a digest.**  Always on — even without `--trace`
+//!   — over every timeline emission (samples excluded, so enabling
+//!   capture never changes it).  `ScenarioReport.trace_digest` carries
+//!   it, which makes the golden fixtures pin the *timeline*, not just
+//!   the end-of-run aggregates.
+//! * **Two artifacts** behind `--trace <path>` / the `[trace]` TOML
+//!   block: a JSONL event log (one self-describing object per line,
+//!   meta header first) and a Chrome `trace_event` file loadable in
+//!   Perfetto (`pid` = site, `tid` = node; node-less events on a
+//!   synthetic "global" process).
+//!
+//! Memory stays bounded on the `*_scale128` presets: retention is a
+//! ring buffer of `max_events` (oldest dropped first, counted in the
+//! meta line), the digest is O(1), and the open-flow map is bounded by
+//! the number of concurrently active flows.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::fmt::Write as _;
+use std::sync::{Arc, Mutex};
+
+use crate::config::Table;
+use crate::sim::netsim::{FlowId, LinkId, NetSim};
+use crate::topology::{NetLinks, Testbed};
+
+// ------------------------------------------------------------ spec
+
+/// The `[trace]` TOML block / `--trace` CLI flag.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceSpec {
+    /// Artifact base path.  `<path>` gets the Chrome `trace_event`
+    /// file, a sibling `.jsonl` gets the event log; `None` captures
+    /// in memory only (tests) — the digest is always computed.
+    pub path: Option<String>,
+    /// Gauge sampler tick in sim seconds; 0 disables sampling.
+    pub sample_secs: f64,
+    /// Ring-buffer capacity (events retained); 0 = unbounded.
+    pub max_events: usize,
+}
+
+impl Default for TraceSpec {
+    fn default() -> Self {
+        TraceSpec {
+            path: None,
+            sample_secs: 1.0,
+            max_events: 200_000,
+        }
+    }
+}
+
+impl TraceSpec {
+    pub(crate) fn from_table(t: &Table) -> Result<TraceSpec, String> {
+        t.check_known_keys("trace", &["path", "sample_secs", "max_events"], &[])?;
+        let d = TraceSpec::default();
+        let spec = TraceSpec {
+            path: t.get("trace.path").and_then(|v| v.as_str()).map(String::from),
+            sample_secs: t.float_or("trace.sample_secs", d.sample_secs),
+            max_events: t.int_or("trace.max_events", d.max_events as i64).max(0) as usize,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if !self.sample_secs.is_finite() || self.sample_secs < 0.0 {
+            return Err(format!(
+                "trace: sample_secs must be finite and >= 0, got {}",
+                self.sample_secs
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Derive the artifact pair from the `--trace` path: the Chrome file
+/// keeps the given name, the JSONL log swaps a `.json` suffix for
+/// `.jsonl` (or appends `.jsonl`).
+pub fn artifact_paths(path: &str) -> (String, String) {
+    let jsonl = match path.strip_suffix(".json") {
+        Some(stem) => format!("{stem}.jsonl"),
+        None => format!("{path}.jsonl"),
+    };
+    (path.to_string(), jsonl)
+}
+
+// ------------------------------------------------------------ events
+
+/// Chrome-ish phase of a captured event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Ph {
+    /// Closed interval (`t` .. `t + dur`), emitted at its end.
+    Span,
+    /// Point event at `t`.
+    Instant,
+    /// Gauge sample at `t` (value in [`TraceEvent::value`]).
+    Sample,
+}
+
+impl Ph {
+    fn tag(self) -> &'static str {
+        match self {
+            Ph::Span => "X",
+            Ph::Instant => "i",
+            Ph::Sample => "C",
+        }
+    }
+}
+
+/// One captured trace event (the JSONL line, pre-serialization).
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    pub t: f64,
+    pub dur: f64,
+    pub value: f64,
+    pub ph: Ph,
+    /// Taxonomy: `flow`, `ev`, `fault`, `task`, `admit`, `stage`, `sample`.
+    pub kind: &'static str,
+    pub name: String,
+    pub harness: &'static str,
+    /// Emitting node, or -1 for run-global events.
+    pub node: i64,
+    pub stage: String,
+    pub tenant: String,
+}
+
+/// Borrowed form of an emission — lets digest-only runs skip every
+/// `String` allocation.
+struct Parts<'a> {
+    ph: Ph,
+    t: f64,
+    dur: f64,
+    value: f64,
+    kind: &'static str,
+    name: &'a str,
+    harness: &'static str,
+    node: i64,
+    stage: &'a str,
+    tenant: &'a str,
+}
+
+// ------------------------------------------------------------ recorder
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fold_bytes(h: &mut u64, bytes: &[u8]) {
+    for &b in bytes {
+        *h ^= b as u64;
+        *h = h.wrapping_mul(FNV_PRIME);
+    }
+}
+
+fn fold_u64(h: &mut u64, v: u64) {
+    fold_bytes(h, &v.to_le_bytes());
+}
+
+struct Inner {
+    digest: u64,
+    seen: u64,
+    capture: bool,
+    max_events: usize,
+    dropped: u64,
+    sample_secs: f64,
+    buf: VecDeque<TraceEvent>,
+    /// (harness, flow id) -> open time.  Maintained even without
+    /// capture so the digest is invariant to `--trace`.
+    open_flows: BTreeMap<(&'static str, u64), f64>,
+    /// Per-harness high-water mark for central flow-open detection.
+    open_wm: BTreeMap<&'static str, u64>,
+}
+
+impl Inner {
+    fn push(&mut self, p: Parts<'_>) {
+        if p.ph != Ph::Sample {
+            self.seen += 1;
+            let mut h = self.digest;
+            fold_bytes(&mut h, p.harness.as_bytes());
+            fold_bytes(&mut h, &[0x1f]);
+            fold_bytes(&mut h, p.kind.as_bytes());
+            fold_bytes(&mut h, &[0x1f]);
+            fold_bytes(&mut h, p.name.as_bytes());
+            fold_bytes(&mut h, &[0x1f]);
+            fold_bytes(&mut h, p.stage.as_bytes());
+            fold_bytes(&mut h, &[0x1f]);
+            fold_bytes(&mut h, p.tenant.as_bytes());
+            fold_u64(&mut h, p.t.to_bits());
+            fold_u64(&mut h, p.dur.to_bits());
+            fold_u64(&mut h, p.node as u64);
+            self.digest = h;
+        }
+        if self.capture {
+            if self.max_events > 0 && self.buf.len() >= self.max_events {
+                self.buf.pop_front();
+                self.dropped += 1;
+            }
+            self.buf.push_back(TraceEvent {
+                t: p.t,
+                dur: p.dur,
+                value: p.value,
+                ph: p.ph,
+                kind: p.kind,
+                name: p.name.to_string(),
+                harness: p.harness,
+                node: p.node,
+                stage: p.stage.to_string(),
+                tenant: p.tenant.to_string(),
+            });
+        }
+    }
+
+    fn flow_open(&mut self, harness: &'static str, fid: u64, t: f64) {
+        self.open_flows.insert((harness, fid), t);
+        self.push(Parts {
+            ph: Ph::Instant,
+            t,
+            dur: 0.0,
+            value: fid as f64,
+            kind: "flow",
+            name: "open",
+            harness,
+            node: -1,
+            stage: "",
+            tenant: "",
+        });
+    }
+
+    fn flow_close(&mut self, harness: &'static str, fid: u64, t: f64, name: &'static str) {
+        let start = self.open_flows.remove(&(harness, fid));
+        let (t0, dur, ph) = match start {
+            Some(s) => (s, (t - s).max(0.0), Ph::Span),
+            None => (t, 0.0, Ph::Instant),
+        };
+        self.push(Parts {
+            ph,
+            t: t0,
+            dur,
+            value: fid as f64,
+            kind: "flow",
+            name,
+            harness,
+            node: -1,
+            stage: "",
+            tenant: "",
+        });
+    }
+}
+
+/// Shared, cheaply clonable trace sink (the `metrics::Metrics` idiom):
+/// one per run, handed to every engine as a labeled [`Tracer`].
+#[derive(Clone)]
+pub struct TraceRecorder {
+    inner: Arc<Mutex<Inner>>,
+}
+
+impl TraceRecorder {
+    pub fn new(capture: bool, max_events: usize, sample_secs: f64) -> TraceRecorder {
+        TraceRecorder {
+            inner: Arc::new(Mutex::new(Inner {
+                digest: FNV_OFFSET,
+                seen: 0,
+                capture,
+                max_events,
+                dropped: 0,
+                sample_secs,
+                buf: VecDeque::new(),
+                open_flows: BTreeMap::new(),
+                open_wm: BTreeMap::new(),
+            })),
+        }
+    }
+
+    /// Digest-only recorder: no retention, no sampling.  What every
+    /// run uses when no `[trace]` block / `--trace` flag is given.
+    pub fn disabled() -> TraceRecorder {
+        TraceRecorder::new(false, 0, 0.0)
+    }
+
+    /// Build the run's recorder from its (optional) trace spec.
+    pub fn for_spec(spec: Option<&TraceSpec>) -> TraceRecorder {
+        match spec {
+            Some(ts) => TraceRecorder::new(true, ts.max_events, ts.sample_secs),
+            None => TraceRecorder::disabled(),
+        }
+    }
+
+    /// A harness-labeled emission handle over this recorder.
+    pub fn tracer(&self, harness: &'static str) -> Tracer {
+        Tracer {
+            rec: self.clone(),
+            harness,
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.inner.lock().expect("trace lock")
+    }
+
+    /// The streaming FNV-1a timeline digest, `{:016x}`-formatted.
+    pub fn digest_hex(&self) -> String {
+        format!("{:016x}", self.lock().digest)
+    }
+
+    /// Timeline emissions digested so far (samples excluded).
+    pub fn events_seen(&self) -> u64 {
+        self.lock().seen
+    }
+
+    /// Events currently retained in the ring buffer.
+    pub fn captured(&self) -> usize {
+        self.lock().buf.len()
+    }
+
+    /// Events evicted from the ring buffer.
+    pub fn dropped(&self) -> u64 {
+        self.lock().dropped
+    }
+
+    pub fn sample_secs(&self) -> f64 {
+        self.lock().sample_secs
+    }
+
+    /// Copy of the retained events (tests, validation).
+    pub fn snapshot(&self) -> Vec<TraceEvent> {
+        self.lock().buf.iter().cloned().collect()
+    }
+
+    /// Write the JSONL event log and the Chrome `trace_event` file.
+    /// Returns `(chrome_path, jsonl_path)`.
+    pub fn write_artifacts(
+        &self,
+        run_name: &str,
+        path: &str,
+        testbed: &Testbed,
+    ) -> Result<(String, String), String> {
+        let (chrome_path, jsonl_path) = artifact_paths(path);
+        let (jsonl, chrome) = {
+            let g = self.lock();
+            // Flows still open at write time (cancelled without a
+            // tracer notification, or alive at run end) become
+            // explicit `open_at_end` instants so every span in the
+            // artifact is structurally closed.
+            let tail: Vec<TraceEvent> = g
+                .open_flows
+                .iter()
+                .map(|(&(harness, fid), &t)| TraceEvent {
+                    t,
+                    dur: 0.0,
+                    value: fid as f64,
+                    ph: Ph::Instant,
+                    kind: "flow",
+                    name: "open_at_end".to_string(),
+                    harness,
+                    node: -1,
+                    stage: String::new(),
+                    tenant: String::new(),
+                })
+                .collect();
+            let jsonl = render_jsonl(run_name, &g, &tail, testbed);
+            let chrome = render_chrome(g.buf.iter().chain(tail.iter()), testbed);
+            (jsonl, chrome)
+        };
+        std::fs::write(&jsonl_path, jsonl)
+            .map_err(|e| format!("trace: cannot write {jsonl_path}: {e}"))?;
+        std::fs::write(&chrome_path, chrome)
+            .map_err(|e| format!("trace: cannot write {chrome_path}: {e}"))?;
+        Ok((chrome_path, jsonl_path))
+    }
+}
+
+// ------------------------------------------------------------ tracer
+
+/// Harness-labeled emission handle.  All methods take `&self` and are
+/// cheap when capture is off (digest fold only, no allocation).
+#[derive(Clone)]
+pub struct Tracer {
+    rec: TraceRecorder,
+    harness: &'static str,
+}
+
+impl Tracer {
+    pub fn harness(&self) -> &'static str {
+        self.harness
+    }
+
+    pub fn sample_secs(&self) -> f64 {
+        self.rec.sample_secs()
+    }
+
+    fn emit(&self, p: Parts<'_>) {
+        self.rec.lock().push(p);
+    }
+
+    /// A queue event dispatched by the core loop.
+    pub fn ev(&self, t: f64, name: &'static str) {
+        self.emit(Parts {
+            ph: Ph::Instant,
+            t,
+            dur: 0.0,
+            value: 0.0,
+            kind: "ev",
+            name,
+            harness: self.harness,
+            node: -1,
+            stage: "",
+            tenant: "",
+        });
+    }
+
+    /// A run-global instant (fault application, stage boundary, ...).
+    pub fn instant(&self, t: f64, kind: &'static str, name: &str) {
+        self.emit(Parts {
+            ph: Ph::Instant,
+            t,
+            dur: 0.0,
+            value: 0.0,
+            kind,
+            name,
+            harness: self.harness,
+            node: -1,
+            stage: "",
+            tenant: "",
+        });
+    }
+
+    /// A node-tagged instant.
+    pub fn instant_node(&self, t: f64, kind: &'static str, name: &str, node: usize) {
+        self.emit(Parts {
+            ph: Ph::Instant,
+            t,
+            dur: 0.0,
+            value: 0.0,
+            kind,
+            name,
+            harness: self.harness,
+            node: node as i64,
+            stage: "",
+            tenant: "",
+        });
+    }
+
+    /// A closed task-attempt span on `node`, emitted at its end.
+    pub fn task(&self, start: f64, end: f64, name: &str, node: usize, stage: &str) {
+        self.emit(Parts {
+            ph: Ph::Span,
+            t: start,
+            dur: (end - start).max(0.0),
+            value: 0.0,
+            kind: "task",
+            name,
+            harness: self.harness,
+            node: node as i64,
+            stage,
+            tenant: "",
+        });
+    }
+
+    /// A task-attempt lifecycle mark (placed / speculated / crashed /
+    /// lost / won) on `node`.
+    pub fn task_mark(&self, t: f64, name: &str, node: usize, stage: &str) {
+        self.emit(Parts {
+            ph: Ph::Instant,
+            t,
+            dur: 0.0,
+            value: 0.0,
+            kind: "task",
+            name,
+            harness: self.harness,
+            node: node as i64,
+            stage,
+            tenant: "",
+        });
+    }
+
+    /// An admission decision (served / queued / rejected / unavailable)
+    /// for `tenant` at slave `node` (-1 when no live replica existed).
+    pub fn admission(&self, t: f64, verdict: &'static str, node: i64, tenant: &str) {
+        self.emit(Parts {
+            ph: Ph::Instant,
+            t,
+            dur: 0.0,
+            value: 0.0,
+            kind: "admit",
+            name: verdict,
+            harness: self.harness,
+            node,
+            stage: "",
+            tenant,
+        });
+    }
+
+    /// A stage boundary (named after the finishing stage).
+    pub fn stage_mark(&self, t: f64, name: &str) {
+        self.emit(Parts {
+            ph: Ph::Instant,
+            t,
+            dur: 0.0,
+            value: 0.0,
+            kind: "stage",
+            name,
+            harness: self.harness,
+            node: -1,
+            stage: name,
+            tenant: "",
+        });
+    }
+
+    /// A gauge sample (never digested: enabling the sampler must not
+    /// move the timeline digest).
+    pub fn sample(&self, t: f64, name: &'static str, value: f64) {
+        self.emit(Parts {
+            ph: Ph::Sample,
+            t,
+            dur: 0.0,
+            value,
+            kind: "sample",
+            name,
+            harness: self.harness,
+            node: -1,
+            stage: "",
+            tenant: "",
+        });
+    }
+
+    /// Re-align the flow-open watermark to `watermark` — the core
+    /// calls this at drive entry so engines that rebuild their
+    /// substrate between stages (fresh flow-id space) don't
+    /// mis-attribute the new network's flow ids to the old one.
+    pub fn reset_flow_watermark(&self, watermark: u64) {
+        self.rec.lock().open_wm.insert(self.harness, watermark);
+    }
+
+    /// Record flow opens for every id in `[watermark seen last time,
+    /// watermark)` at time `t` — the core calls this each loop turn so
+    /// flow spans need no per-engine plumbing.
+    pub fn open_new_flows(&self, watermark: u64, t: f64) {
+        let mut g = self.rec.lock();
+        let lo = {
+            let wm = g.open_wm.entry(self.harness).or_insert(0);
+            let lo = *wm;
+            *wm = watermark.max(lo);
+            lo
+        };
+        for fid in lo..watermark {
+            g.flow_open(self.harness, fid, t);
+        }
+    }
+
+    /// A flow completed: closes its span (or emits a bare instant if
+    /// the open was never seen).
+    pub fn flow_done(&self, fid: FlowId, t: f64) {
+        self.rec.lock().flow_close(self.harness, fid.0, t, "done");
+    }
+
+    /// A flow was cancelled (speculation loser, crash re-route).
+    pub fn flow_cancel(&self, fid: FlowId, t: f64) {
+        self.rec.lock().flow_close(self.harness, fid.0, t, "cancel");
+    }
+}
+
+// ------------------------------------------------------------ gauges
+
+/// Harness-side gauges for the sim-time sampler; the core adds the
+/// substrate-side ones (active flows, queue depth, live nodes, tier
+/// utilizations).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HarnessGauges {
+    /// Running attempts / busy service slots.
+    pub occupancy: u64,
+    /// Work units waiting to be placed (segments, requests).
+    pub queued: u64,
+    /// Speculative attempts currently in flight.
+    pub spec_inflight: u64,
+}
+
+fn tier_util(net: &NetSim, loads: &[f64], up: &[LinkId], down: &[LinkId]) -> f64 {
+    let mut load = 0.0;
+    let mut cap = 0.0;
+    for &l in up.iter().chain(down.iter()) {
+        load += loads[l.0];
+        cap += net.link_capacity(l);
+    }
+    if cap > 0.0 {
+        load / cap
+    } else {
+        0.0
+    }
+}
+
+/// One sampler tick: harness gauges plus the substrate-side gauges.
+/// `t` is the tick instant; values reflect the state immediately
+/// before the wave that crossed it (DESIGN.md §15).
+pub(crate) fn sample_gauges(
+    tracer: &Tracer,
+    t: f64,
+    g: &HarnessGauges,
+    net: &mut NetSim,
+    queue_depth: usize,
+    live_nodes: usize,
+    links: &NetLinks,
+) {
+    tracer.sample(t, "active_flows", net.active_flows() as f64);
+    tracer.sample(t, "queue_depth", queue_depth as f64);
+    tracer.sample(t, "live_nodes", live_nodes as f64);
+    tracer.sample(t, "occupancy", g.occupancy as f64);
+    tracer.sample(t, "work_queued", g.queued as f64);
+    tracer.sample(t, "spec_inflight", g.spec_inflight as f64);
+    // One pass over the flow table covers all three tiers.
+    let loads = net.link_loads();
+    tracer.sample(t, "util_node", tier_util(net, &loads, &links.node_up, &links.node_down));
+    tracer.sample(t, "util_rack", tier_util(net, &loads, &links.rack_up, &links.rack_down));
+    tracer.sample(t, "util_wan", tier_util(net, &loads, &links.site_up, &links.site_down));
+}
+
+// ------------------------------------------------------------ artifacts
+
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn loc(node: i64, tb: &Testbed) -> (i64, i64) {
+    let n = node as usize;
+    if node >= 0 && n < tb.node_rack.len() {
+        (tb.node_rack[n] as i64, tb.node_site[n] as i64)
+    } else {
+        (-1, -1)
+    }
+}
+
+fn jsonl_line(ev: &TraceEvent, tb: &Testbed, out: &mut String) {
+    let (rack, site) = loc(ev.node, tb);
+    let _ = write!(
+        out,
+        "{{\"t\":{:.9},\"ph\":\"{}\",\"kind\":\"{}\",\"name\":\"{}\",\
+         \"harness\":\"{}\",\"node\":{},\"rack\":{rack},\"site\":{site},\
+         \"stage\":\"{}\",\"tenant\":\"{}\",\"dur\":{:.9},\"value\":{:.6}}}",
+        ev.t,
+        ev.ph.tag(),
+        ev.kind,
+        esc(&ev.name),
+        ev.harness,
+        ev.node,
+        esc(&ev.stage),
+        esc(&ev.tenant),
+        ev.dur,
+        ev.value,
+    );
+    out.push('\n');
+}
+
+fn render_jsonl(run_name: &str, g: &Inner, tail: &[TraceEvent], tb: &Testbed) -> String {
+    let mut out = String::new();
+    let _ = write!(
+        out,
+        "{{\"meta\":\"trace\",\"name\":\"{}\",\"events_seen\":{},\
+         \"captured\":{},\"dropped\":{},\"open_at_end\":{},\
+         \"sample_secs\":{:.6},\"digest\":\"{:016x}\"}}",
+        esc(run_name),
+        g.seen,
+        g.buf.len() + tail.len(),
+        g.dropped,
+        tail.len(),
+        g.sample_secs,
+        g.digest,
+    );
+    out.push('\n');
+    for ev in g.buf.iter().chain(tail.iter()) {
+        jsonl_line(ev, tb, &mut out);
+    }
+    out
+}
+
+fn render_chrome<'a>(events: impl Iterator<Item = &'a TraceEvent>, tb: &Testbed) -> String {
+    // pid = site; two synthetic processes past the real sites: GLOBAL
+    // (node-less instants + counters) and FLOWS (flow spans).
+    let sites = tb.site_names.len() as i64;
+    let pid_global = sites;
+    let pid_flows = sites + 1;
+    let mut out = String::from("{\"traceEvents\":[\n");
+    for (s, name) in tb.site_names.iter().enumerate() {
+        let _ = write!(
+            out,
+            "{{\"ph\":\"M\",\"name\":\"process_name\",\"pid\":{s},\"tid\":0,\
+             \"args\":{{\"name\":\"site {}\"}}}},\n",
+            esc(name)
+        );
+    }
+    let _ = write!(
+        out,
+        "{{\"ph\":\"M\",\"name\":\"process_name\",\"pid\":{pid_global},\"tid\":0,\
+         \"args\":{{\"name\":\"global\"}}}},\n\
+         {{\"ph\":\"M\",\"name\":\"process_name\",\"pid\":{pid_flows},\"tid\":0,\
+         \"args\":{{\"name\":\"flows\"}}}},\n"
+    );
+    for (n, (&rack, &site)) in tb.node_rack.iter().zip(tb.node_site.iter()).enumerate() {
+        let _ = write!(
+            out,
+            "{{\"ph\":\"M\",\"name\":\"thread_name\",\"pid\":{site},\"tid\":{n},\
+             \"args\":{{\"name\":\"node{n} rack{rack}\"}}}},\n"
+        );
+    }
+    let mut first = true;
+    for ev in events {
+        if !first {
+            out.push_str(",\n");
+        }
+        first = false;
+        let ts = ev.t * 1e6;
+        let (_, site) = loc(ev.node, tb);
+        match ev.ph {
+            Ph::Span if ev.kind == "flow" => {
+                let _ = write!(
+                    out,
+                    "{{\"ph\":\"X\",\"name\":\"{}\",\"cat\":\"flow\",\"ts\":{ts:.3},\
+                     \"dur\":{:.3},\"pid\":{pid_flows},\"tid\":0,\
+                     \"args\":{{\"harness\":\"{}\",\"fid\":{:.0}}}}}",
+                    esc(&ev.name),
+                    ev.dur * 1e6,
+                    ev.harness,
+                    ev.value,
+                );
+            }
+            Ph::Span => {
+                let _ = write!(
+                    out,
+                    "{{\"ph\":\"X\",\"name\":\"{}\",\"cat\":\"{}\",\"ts\":{ts:.3},\
+                     \"dur\":{:.3},\"pid\":{},\"tid\":{},\
+                     \"args\":{{\"harness\":\"{}\",\"stage\":\"{}\"}}}}",
+                    esc(&ev.name),
+                    ev.kind,
+                    ev.dur * 1e6,
+                    if site >= 0 { site } else { pid_global },
+                    ev.node.max(0),
+                    ev.harness,
+                    esc(&ev.stage),
+                );
+            }
+            Ph::Instant => {
+                let (pid, tid) = if ev.node >= 0 {
+                    (site, ev.node)
+                } else if ev.kind == "flow" {
+                    (pid_flows, 0)
+                } else {
+                    (pid_global, 0)
+                };
+                let _ = write!(
+                    out,
+                    "{{\"ph\":\"i\",\"name\":\"{}\",\"cat\":\"{}\",\"ts\":{ts:.3},\
+                     \"pid\":{pid},\"tid\":{tid},\"s\":\"t\",\
+                     \"args\":{{\"harness\":\"{}\",\"tenant\":\"{}\"}}}}",
+                    esc(&ev.name),
+                    ev.kind,
+                    ev.harness,
+                    esc(&ev.tenant),
+                );
+            }
+            Ph::Sample => {
+                let _ = write!(
+                    out,
+                    "{{\"ph\":\"C\",\"name\":\"{}.{}\",\"ts\":{ts:.3},\
+                     \"pid\":{pid_global},\"tid\":0,\
+                     \"args\":{{\"value\":{:.6}}}}}",
+                    ev.harness,
+                    esc(&ev.name),
+                    ev.value,
+                );
+            }
+        }
+    }
+    out.push_str("\n]}\n");
+    out
+}
+
+// ------------------------------------------------------------ validation
+
+/// Schema sanity over captured events: finite non-negative times and
+/// durations, nodes within the testbed, and per-(harness, node) track
+/// monotone emission order (a span's emission instant is its end).
+pub fn validate_events(events: &[TraceEvent], nodes: usize) -> Result<(), String> {
+    let mut last: BTreeMap<(&'static str, i64), f64> = BTreeMap::new();
+    for (i, ev) in events.iter().enumerate() {
+        if !ev.t.is_finite() || ev.t < 0.0 {
+            return Err(format!("event {i}: bad time {}", ev.t));
+        }
+        if !ev.dur.is_finite() || ev.dur < 0.0 {
+            return Err(format!("event {i}: bad duration {}", ev.dur));
+        }
+        if ev.node < -1 || ev.node >= nodes as i64 {
+            return Err(format!("event {i}: node {} out of range", ev.node));
+        }
+        if ev.name == "open_at_end" {
+            // Administratively closed at write time; its timestamp is
+            // the open instant, which may precede later emissions.
+            continue;
+        }
+        let end = ev.t + ev.dur;
+        let key = (ev.harness, ev.node);
+        if let Some(&prev) = last.get(&key) {
+            if end + 1e-9 < prev {
+                return Err(format!(
+                    "event {i} ({}/{} {:?}): track ({}, {}) went backwards \
+                     ({end} < {prev})",
+                    ev.kind, ev.name, ev.ph, ev.harness, ev.node
+                ));
+            }
+        }
+        last.insert(key, end);
+    }
+    Ok(())
+}
+
+/// Pull `"key":value` out of one JSONL line without serde.
+fn jfield<'a>(line: &'a str, key: &str) -> Option<&'a str> {
+    let tag = format!("\"{key}\":");
+    let start = line.find(&tag)? + tag.len();
+    let rest = &line[start..];
+    if let Some(stripped) = rest.strip_prefix('"') {
+        stripped.split('"').next()
+    } else {
+        rest.split(&[',', '}'][..]).next().map(str::trim)
+    }
+}
+
+/// Parse + sanity-check a JSONL artifact produced by
+/// [`TraceRecorder::write_artifacts`].  Returns the event-line count.
+/// Checks the meta header, every line's schema, and the per-track
+/// monotonicity contract of [`validate_events`].
+pub fn validate_jsonl(text: &str) -> Result<usize, String> {
+    let mut lines = text.lines();
+    let meta = lines.next().ok_or("empty trace file")?;
+    if jfield(meta, "meta") != Some("trace") {
+        return Err("first line is not a trace meta header".into());
+    }
+    let digest = jfield(meta, "digest").ok_or("meta line missing digest")?;
+    if digest.len() != 16 || !digest.bytes().all(|b| b.is_ascii_hexdigit()) {
+        return Err(format!("meta digest {digest:?} is not 16 hex chars"));
+    }
+    let mut count = 0usize;
+    let mut last: BTreeMap<(String, i64), f64> = BTreeMap::new();
+    for (i, line) in lines.enumerate() {
+        let num = |key: &str| -> Result<f64, String> {
+            jfield(line, key)
+                .and_then(|v| v.parse::<f64>().ok())
+                .ok_or_else(|| format!("line {}: missing numeric {key:?}", i + 2))
+        };
+        let s = |key: &str| -> Result<&str, String> {
+            jfield(line, key).ok_or_else(|| format!("line {}: missing {key:?}", i + 2))
+        };
+        let t = num("t")?;
+        let dur = num("dur")?;
+        let node = num("node")? as i64;
+        let ph = s("ph")?;
+        let name = s("name")?.to_string();
+        let harness = s("harness")?.to_string();
+        s("kind")?;
+        s("stage")?;
+        s("tenant")?;
+        if !t.is_finite() || t < 0.0 || !dur.is_finite() || dur < 0.0 {
+            return Err(format!("line {}: bad time/duration", i + 2));
+        }
+        if !matches!(ph, "X" | "i" | "C") {
+            return Err(format!("line {}: bad ph {ph:?}", i + 2));
+        }
+        if name != "open_at_end" {
+            let end = t + dur;
+            let key = (harness, node);
+            if let Some(&prev) = last.get(&key) {
+                if end + 1e-9 < prev {
+                    return Err(format!(
+                        "line {}: track ({}, {node}) went backwards ({end} < {prev})",
+                        i + 2,
+                        key.0
+                    ));
+                }
+            }
+            last.insert(key, end);
+        }
+        count += 1;
+    }
+    Ok(count)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(rec: &TraceRecorder) -> Tracer {
+        rec.tracer("test")
+    }
+
+    #[test]
+    fn digest_is_deterministic_and_capture_invariant() {
+        let runs: Vec<String> = [false, true]
+            .iter()
+            .map(|&capture| {
+                let rec = TraceRecorder::new(capture, 0, 0.0);
+                let tr = t(&rec);
+                tr.ev(0.5, "seg");
+                tr.open_new_flows(2, 1.0);
+                tr.flow_done(FlowId(0), 3.0);
+                tr.task(1.0, 4.0, "map#1", 3, "map");
+                tr.sample(2.0, "active_flows", 5.0);
+                rec.digest_hex()
+            })
+            .collect();
+        assert_eq!(runs[0], runs[1], "capture and samples must not move the digest");
+        // A different timeline digests differently.
+        let rec = TraceRecorder::disabled();
+        let tr = t(&rec);
+        tr.ev(0.5, "seg");
+        tr.open_new_flows(2, 1.0);
+        tr.flow_done(FlowId(1), 3.0);
+        tr.task(1.0, 4.0, "map#1", 3, "map");
+        assert_ne!(runs[0], rec.digest_hex());
+    }
+
+    #[test]
+    fn ring_buffer_bounds_retention() {
+        let rec = TraceRecorder::new(true, 4, 0.0);
+        let tr = t(&rec);
+        for i in 0..10 {
+            tr.ev(i as f64, "tick");
+        }
+        assert_eq!(rec.captured(), 4);
+        assert_eq!(rec.dropped(), 6);
+        assert_eq!(rec.events_seen(), 10);
+        let snap = rec.snapshot();
+        assert_eq!(snap[0].t, 6.0, "oldest events evicted first");
+    }
+
+    #[test]
+    fn flow_spans_close_and_unseen_opens_fall_back_to_instants() {
+        let rec = TraceRecorder::new(true, 0, 0.0);
+        let tr = t(&rec);
+        tr.open_new_flows(1, 1.0);
+        tr.flow_done(FlowId(0), 4.0);
+        tr.flow_cancel(FlowId(9), 5.0);
+        let snap = rec.snapshot();
+        assert_eq!(snap.len(), 3);
+        assert_eq!(snap[1].ph, Ph::Span);
+        assert_eq!(snap[1].t, 1.0);
+        assert_eq!(snap[1].dur, 3.0);
+        assert_eq!(snap[2].ph, Ph::Instant, "never-opened flow closes as instant");
+        validate_events(&snap, 16).expect("well-formed");
+    }
+
+    #[test]
+    fn open_new_flows_is_idempotent_across_watermarks() {
+        let rec = TraceRecorder::new(true, 0, 0.0);
+        let tr = t(&rec);
+        tr.open_new_flows(2, 0.0);
+        tr.open_new_flows(2, 1.0);
+        tr.open_new_flows(3, 1.0);
+        assert_eq!(rec.captured(), 3, "each flow opened exactly once");
+    }
+
+    #[test]
+    fn validate_rejects_backwards_tracks() {
+        let rec = TraceRecorder::new(true, 0, 0.0);
+        let tr = t(&rec);
+        tr.task_mark(5.0, "placed", 2, "map");
+        tr.task_mark(1.0, "placed", 2, "map");
+        assert!(validate_events(&rec.snapshot(), 16).is_err());
+        // Different node: separate track, no violation.
+        let rec = TraceRecorder::new(true, 0, 0.0);
+        let tr = t(&rec);
+        tr.task_mark(5.0, "placed", 2, "map");
+        tr.task_mark(1.0, "placed", 3, "map");
+        assert!(validate_events(&rec.snapshot(), 16).is_ok());
+    }
+
+    #[test]
+    fn artifact_paths_derive_the_jsonl_sibling() {
+        assert_eq!(
+            artifact_paths("out.trace.json"),
+            ("out.trace.json".to_string(), "out.trace.jsonl".to_string())
+        );
+        assert_eq!(
+            artifact_paths("run"),
+            ("run".to_string(), "run.jsonl".to_string())
+        );
+    }
+
+    #[test]
+    fn trace_spec_parses_and_validates() {
+        let tab = Table::parse(
+            "[trace]\npath = \"x.json\"\nsample_secs = 0.5\nmax_events = 10\n",
+        )
+        .unwrap();
+        let spec = TraceSpec::from_table(&tab).unwrap();
+        assert_eq!(spec.path.as_deref(), Some("x.json"));
+        assert_eq!(spec.sample_secs, 0.5);
+        assert_eq!(spec.max_events, 10);
+        let bad = Table::parse("[trace]\nsample_secs = -1.0\n").unwrap();
+        assert!(TraceSpec::from_table(&bad).is_err());
+        let typo = Table::parse("[trace]\nsample_sec = 1.0\n").unwrap();
+        assert!(TraceSpec::from_table(&typo).is_err());
+    }
+
+    #[test]
+    fn jfield_extracts_strings_and_numbers() {
+        let line = "{\"t\":1.500000000,\"ph\":\"i\",\"name\":\"open\",\"node\":-1}";
+        assert_eq!(jfield(line, "t"), Some("1.500000000"));
+        assert_eq!(jfield(line, "ph"), Some("i"));
+        assert_eq!(jfield(line, "node"), Some("-1"));
+        assert_eq!(jfield(line, "missing"), None);
+    }
+}

@@ -48,6 +48,7 @@ use crate::metrics::Metrics;
 use crate::routing::chord::{ChordRing, hash_name};
 use crate::scenario::core::{self, CoreEv, FaultEv, Harness};
 use crate::scenario::engine::FaultState;
+use crate::scenario::trace::{HarnessGauges, TraceRecorder, Tracer};
 use crate::scenario::{ScenarioReport, ScenarioSpec};
 use crate::sim::event::EventQueue;
 use crate::sim::netsim::{FlowId, LinkId, NetSim};
@@ -136,7 +137,11 @@ impl TrafficReport {
 /// no wall clock, no ambient randomness — the spec is the only input.
 /// This is the standalone driver; colocated scenarios drive the same
 /// [`Engine`] from `scenario::colocate` instead.
-pub fn run_traffic(spec: &ScenarioSpec, testbed: &Testbed) -> Result<ScenarioReport, String> {
+pub fn run_traffic(
+    spec: &ScenarioSpec,
+    testbed: &Testbed,
+    rec: &TraceRecorder,
+) -> Result<ScenarioReport, String> {
     let tspec = spec
         .traffic
         .as_ref()
@@ -148,7 +153,8 @@ pub fn run_traffic(spec: &ScenarioSpec, testbed: &Testbed) -> Result<ScenarioRep
         NetSim::with_capacity(4 * n + 2 * testbed.racks() + 2 * testbed.site_names.len());
     let links = testbed.build_network(&mut net);
     let mut q: EventQueue<Ev> = EventQueue::with_capacity(4096);
-    let mut engine = Engine::new(spec, tspec, testbed, &mut net, links.clone(), &state)?;
+    let tracer = rec.tracer("traffic");
+    let mut engine = Engine::new(spec, tspec, testbed, &mut net, links.clone(), &state, tracer)?;
     core::schedule_faults(&mut state, &mut q, 0.0);
     engine.schedule_arrivals(&mut q);
 
@@ -156,7 +162,8 @@ pub fn run_traffic(spec: &ScenarioSpec, testbed: &Testbed) -> Result<ScenarioRep
         let mut h = TrafficHarness {
             engine: &mut engine,
         };
-        core::drive(&mut h, &mut net, &mut q, &mut state, &links, testbed)?
+        let tracer = rec.tracer("traffic");
+        core::drive(&mut h, &mut net, &mut q, &mut state, &links, testbed, &tracer)?
     };
     engine.events = out.events;
 
@@ -181,6 +188,7 @@ pub fn run_traffic(spec: &ScenarioSpec, testbed: &Testbed) -> Result<ScenarioRep
         colocation: None,
         comparison: None,
         angle: None,
+        trace_digest: String::new(),
     })
 }
 
@@ -210,6 +218,15 @@ impl CoreEv for Ev {
         match self {
             Ev::Fault(f) => Some(*f),
             _ => None,
+        }
+    }
+
+    fn trace_name(&self) -> &'static str {
+        match self {
+            Ev::Arrive => "arrive",
+            Ev::ClientWake { .. } => "client_wake",
+            Ev::Dispatch { .. } => "dispatch",
+            Ev::Fault(_) => "fault",
         }
     }
 }
@@ -272,6 +289,10 @@ impl<'e, 'a> Harness for TrafficHarness<'e, 'a> {
         _state: &mut FaultState,
     ) -> Result<(), String> {
         Ok(())
+    }
+
+    fn gauges(&self) -> HarnessGauges {
+        self.engine.gauges()
     }
 }
 
@@ -421,6 +442,10 @@ pub(crate) struct Engine<'a> {
     /// a degradation window squeezes flows through the shared link and
     /// lifts when it ends).
     pub(crate) nominal_caps: Vec<f64>,
+    /// Observability feed: admission verdicts and cancelled transfers
+    /// go straight to the run's trace recorder (cheap no-ops when
+    /// capture is off — the digest still folds them in).
+    tracer: Tracer,
     ring: ChordRing,
     ring_ids: Vec<u64>,
     ring_to_node: BTreeMap<u64, u32>,
@@ -470,6 +495,7 @@ impl<'a> Engine<'a> {
         net: &mut NetSim,
         links: NetLinks,
         state: &FaultState,
+        tracer: Tracer,
     ) -> Result<Engine<'a>, String> {
         let cfg = &spec.cfg;
         let n = testbed.nodes();
@@ -551,6 +577,7 @@ impl<'a> Engine<'a> {
             disk_read,
             disk_write,
             nominal_caps,
+            tracer,
             ring,
             ring_ids,
             ring_to_node,
@@ -749,6 +776,7 @@ impl<'a> Engine<'a> {
         }
         let cands = self.candidates(req, state);
         if cands.is_empty() || self.requests[req as usize].attempts >= MAX_ATTEMPTS {
+            self.trace_admission(req, now, "unavailable", -1);
             self.finish_non_served(req, now, false, q);
             return;
         }
@@ -757,6 +785,7 @@ impl<'a> Engine<'a> {
         // Pass 1: an idle slot anywhere beats queueing at the nearest.
         for &cand in &cands {
             if self.slaves[cand as usize].active < slots {
+                self.trace_admission(req, now, "served", cand as i64);
                 self.start_service(req, cand, now, net);
                 return;
             }
@@ -764,8 +793,9 @@ impl<'a> Engine<'a> {
         // Pass 2: queue room, in preference order.
         let tenant = self.requests[req as usize].tenant as usize;
         for &cand in &cands {
-            let ss = &mut self.slaves[cand as usize];
-            if ss.queued < self.cfg.service.queue_capacity {
+            if self.slaves[cand as usize].queued < self.cfg.service.queue_capacity {
+                self.trace_admission(req, now, "queued", cand as i64);
+                let ss = &mut self.slaves[cand as usize];
                 ss.queues[tenant].push_back(req);
                 ss.queued += 1;
                 self.peak_queue = self.peak_queue.max(ss.queued);
@@ -774,7 +804,16 @@ impl<'a> Engine<'a> {
             }
         }
         // Every live replica saturated: shed the request.
+        self.trace_admission(req, now, "rejected", cands[0] as i64);
         self.finish_non_served(req, now, true, q);
+    }
+
+    /// Emit the admission verdict for `req` into the trace, tagged with
+    /// the tenant and the slave that took (or shed) it.
+    fn trace_admission(&self, req: u32, now: f64, verdict: &'static str, node: i64) {
+        let tenant = self.requests[req as usize].tenant as usize;
+        self.tracer
+            .admission(now, verdict, node, &self.tspec.tenants[tenant].name);
     }
 
     /// Terminal non-success: `rejected` (admission shed) or
@@ -1018,6 +1057,7 @@ impl<'a> Engine<'a> {
         for (fid, req) in doomed {
             self.flows.remove(&fid);
             net.cancel_flow(fid);
+            self.tracer.flow_cancel(fid, now);
             if let Some(req) = req {
                 self.reassignments += 1;
                 q.push_at(now, Ev::Dispatch { req }.into());
@@ -1069,6 +1109,15 @@ impl<'a> Engine<'a> {
             }
             Ev::Dispatch { req } => self.dispatch(req, now, net, q, state),
             Ev::Fault(_) => {}
+        }
+    }
+
+    /// Scheduler-occupancy gauges for the trace sampler.
+    pub(crate) fn gauges(&self) -> HarnessGauges {
+        HarnessGauges {
+            occupancy: self.slaves.iter().map(|s| s.active as u64).sum(),
+            queued: self.slaves.iter().map(|s| s.queued as u64).sum(),
+            spec_inflight: 0,
         }
     }
 

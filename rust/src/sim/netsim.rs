@@ -136,6 +136,34 @@ impl FlowTable {
     }
 }
 
+/// Wall-clock-free self-profiling counters for the incremental
+/// fair-share hot path (DESIGN.md §14/§15): how often each recompute
+/// path ran and how big the dirty-BFS components were.  Surfaced in
+/// `BENCH_engine.json` by benches/bench_engine.rs; never part of a
+/// deterministic report.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct NetProfile {
+    /// Component-scoped (dirty-BFS) recomputations performed.
+    pub dirty_recomputes: u64,
+    /// Whole-flow-set recomputations (initial fill / bench baseline).
+    pub full_recomputes: u64,
+    /// Sum of dirty-component sizes (flows), for the mean.
+    pub comp_flows_total: u64,
+    /// Largest dirty component seen (flows).
+    pub comp_flows_max: u64,
+}
+
+impl NetProfile {
+    /// Mean flows per dirty-BFS component.
+    pub fn comp_flows_mean(&self) -> f64 {
+        if self.dirty_recomputes == 0 {
+            0.0
+        } else {
+            self.comp_flows_total as f64 / self.dirty_recomputes as f64
+        }
+    }
+}
+
 /// The simulator. Time is advanced externally (`advance_to`); the owner
 /// interleaves it with an `EventQueue` via `next_completion`.
 #[derive(Default)]
@@ -170,6 +198,8 @@ pub struct NetSim {
     scratch_link_seen: Vec<bool>,
     /// Monotone visit stamp; bumped once per component discovery.
     stamp: u64,
+    /// Self-profiling counters (see [`NetProfile`]).
+    profile: NetProfile,
 }
 
 impl NetSim {
@@ -422,6 +452,9 @@ impl NetSim {
             self.scratch_link_seen[l] = false;
         }
         comp_flows.sort_unstable();
+        self.profile.dirty_recomputes += 1;
+        self.profile.comp_flows_total += comp_flows.len() as u64;
+        self.profile.comp_flows_max = self.profile.comp_flows_max.max(comp_flows.len() as u64);
         if !comp_flows.is_empty() {
             self.fill(&comp_flows);
         }
@@ -434,6 +467,7 @@ impl NetSim {
         for l in self.dirty_links.drain(..) {
             self.link_dirty[l] = false;
         }
+        self.profile.full_recomputes += 1;
         let ids: Vec<FlowId> = self.flows.iter().map(|(id, _)| id).collect();
         self.fill(&ids);
         self.rates_dirty = false;
@@ -621,6 +655,34 @@ impl NetSim {
             .map(|(_, f)| f.rate)
             .sum()
     }
+
+    /// Allocated rate per link in one pass over the flow set — the
+    /// trace sampler's per-tier utilization snapshot (calling
+    /// [`NetSim::link_load`] per link would rescan every flow each
+    /// time).  `out[l.0]` is the load crossing link `l`.
+    pub fn link_loads(&mut self) -> Vec<f64> {
+        self.ensure_rates();
+        let mut out = vec![0.0; self.links.len()];
+        for (_, f) in self.flows.iter() {
+            for l in &f.path {
+                out[l.0] += f.rate;
+            }
+        }
+        out
+    }
+
+    /// Next flow id `start_flow` will assign.  Flow ids are a single
+    /// monotone sequence, so `watermark .. flow_id_watermark()` names
+    /// exactly the flows started since `watermark` was read — the
+    /// trace layer's central flow-open detection.
+    pub fn flow_id_watermark(&self) -> u64 {
+        self.flows.next_id()
+    }
+
+    /// Snapshot of the self-profiling counters.
+    pub fn profile(&self) -> NetProfile {
+        self.profile
+    }
 }
 
 #[cfg(test)]
@@ -637,6 +699,33 @@ mod tests {
         assert!((net.flow_rate(f2) - 30.0).abs() < 1e-9);
         // f gets the rest
         assert!((net.flow_rate(f) - 70.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn profile_watermark_and_link_loads() {
+        let mut net = NetSim::new();
+        let l = net.add_link(100.0);
+        assert_eq!(net.flow_id_watermark(), 0);
+        let a = net.start_flow(&[l], 1000.0, 1e9);
+        let b = net.start_flow(&[l], 1000.0, 1e9);
+        assert_eq!(net.flow_id_watermark(), 2);
+        assert_eq!((a.0, b.0), (0, 1));
+        // One-pass per-link loads agree with the per-link scan.
+        let loads = net.link_loads();
+        assert!((loads[l.0] - net.link_load(l)).abs() < 1e-9);
+        assert!((loads[l.0] - 100.0).abs() < 1e-9);
+        // The incremental path ran and saw both flows in one component.
+        let p = net.profile();
+        assert!(p.dirty_recomputes >= 1);
+        assert_eq!(p.full_recomputes, 0);
+        assert_eq!(p.comp_flows_max, 2);
+        assert!(p.comp_flows_mean() > 0.0);
+        // The bench baseline knob routes through the full recompute.
+        net.set_full_recompute(true);
+        net.start_flow(&[l], 1000.0, 1e9);
+        net.flow_rate(a);
+        assert!(net.profile().full_recomputes >= 1);
+        assert_eq!(net.flow_id_watermark(), 3);
     }
 
     #[test]

@@ -96,6 +96,156 @@ pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
     sorted[lo] * (1.0 - frac) + sorted[hi] * frac
 }
 
+/// Nearest-rank median of an already-sorted slice: the upper-median
+/// element `sorted[len / 2]`, 0.0 for an empty slice.  Kept distinct
+/// from `percentile_sorted(_, 0.5)` on purpose — speculation
+/// thresholds compare against a duration that actually occurred, not
+/// an interpolated midpoint between two samples.
+pub fn median_nearest_rank(sorted: &[f64]) -> f64 {
+    if sorted.is_empty() {
+        0.0
+    } else {
+        sorted[sorted.len() / 2]
+    }
+}
+
+/// Sub-buckets per octave: resolution of [`LogHist`] (relative
+/// quantile error is bounded by `2^(1/8) - 1`, about 9%).
+const SUB_BUCKETS: usize = 8;
+/// Octaves covered above [`LOG_HIST_MIN`]: 64 doublings from 1ns
+/// reaches ~1.8e10 seconds, far past any duration we record.
+const OCTAVES: usize = 64;
+const N_BUCKETS: usize = SUB_BUCKETS * OCTAVES;
+/// Values at or below this floor share bucket 0.
+const LOG_HIST_MIN: f64 = 1e-9;
+
+/// Fixed-footprint log-bucketed histogram for duration samples: the
+/// bucket array never grows, so memory is O(1) in the observation
+/// count (a `Vec<f64>` per timer grows without bound on a long run).
+/// n, sum, min and max are exact; quantiles interpolate linearly
+/// inside the owning geometric bucket and are clamped to the observed
+/// range, so `quantile(0.0)`/`quantile(1.0)` are exact too.
+#[derive(Clone, Debug)]
+pub struct LogHist {
+    n: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+    counts: Vec<u64>,
+}
+
+impl Default for LogHist {
+    fn default() -> Self {
+        LogHist {
+            n: 0,
+            sum: 0.0,
+            min: 0.0,
+            max: 0.0,
+            counts: vec![0; N_BUCKETS],
+        }
+    }
+}
+
+impl LogHist {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn bucket(x: f64) -> usize {
+        if x <= LOG_HIST_MIN {
+            return 0;
+        }
+        let idx = ((x / LOG_HIST_MIN).log2() * SUB_BUCKETS as f64) as usize;
+        idx.min(N_BUCKETS - 1)
+    }
+
+    /// Lower edge of bucket `i` (the upper edge is `edge(i + 1)`).
+    fn edge(i: usize) -> f64 {
+        LOG_HIST_MIN * (i as f64 / SUB_BUCKETS as f64).exp2()
+    }
+
+    /// Record one sample.  NaN is dropped; negatives clamp to zero
+    /// (durations cannot be negative, but clock math can wobble).
+    pub fn observe(&mut self, x: f64) {
+        if x.is_nan() {
+            return;
+        }
+        let x = x.max(0.0);
+        if self.n == 0 {
+            self.min = x;
+            self.max = x;
+        } else {
+            self.min = self.min.min(x);
+            self.max = self.max.max(x);
+        }
+        self.n += 1;
+        self.sum += x;
+        self.counts[Self::bucket(x)] += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Quantile estimate, q in [0, 1]; 0.0 when empty.  Follows
+    /// `percentile_sorted`'s rank convention (`q * (n - 1)`), so the
+    /// two agree exactly at the edges and to within bucket resolution
+    /// in the interior.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        if q <= 0.0 {
+            return self.min;
+        }
+        if q >= 1.0 {
+            return self.max;
+        }
+        let rank = q * (self.n - 1) as f64;
+        let mut below = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let last = (below + c - 1) as f64;
+            if rank <= last {
+                let lo = Self::edge(i);
+                let hi = Self::edge(i + 1);
+                let within = if c > 1 {
+                    (rank - below as f64) / (c - 1) as f64
+                } else {
+                    0.5
+                };
+                let v = lo + (hi - lo) * within;
+                return v.clamp(self.min, self.max);
+            }
+            below += c;
+        }
+        self.max
+    }
+
+    /// Total footprint in bytes — constant regardless of `count()`.
+    pub fn footprint_bytes(&self) -> usize {
+        std::mem::size_of::<Self>() + self.counts.capacity() * std::mem::size_of::<u64>()
+    }
+}
+
 /// Shannon entropy (bits) of a count histogram. Zero bins are skipped.
 pub fn entropy_bits(counts: &[f64]) -> f64 {
     let total: f64 = counts.iter().sum();
@@ -143,6 +293,66 @@ mod tests {
         assert_eq!(percentile_sorted(&xs, 0.0), 1.0);
         assert_eq!(percentile_sorted(&xs, 1.0), 4.0);
         assert!((percentile_sorted(&xs, 0.5) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_small_n_pins_interpolation() {
+        // N=2: the only two samples bracket every interior quantile.
+        let xs = [10.0, 20.0];
+        assert!((percentile_sorted(&xs, 0.5) - 15.0).abs() < 1e-12);
+        assert!((percentile_sorted(&xs, 0.95) - 19.5).abs() < 1e-12);
+        // N=3: p50 is the middle element exactly; p25 interpolates.
+        let ys = [1.0, 5.0, 9.0];
+        assert_eq!(percentile_sorted(&ys, 0.5), 5.0);
+        assert!((percentile_sorted(&ys, 0.25) - 3.0).abs() < 1e-12);
+        // N=1: every quantile is the sample.
+        assert_eq!(percentile_sorted(&[7.0], 0.99), 7.0);
+    }
+
+    #[test]
+    fn median_nearest_rank_picks_real_samples() {
+        assert_eq!(median_nearest_rank(&[]), 0.0);
+        assert_eq!(median_nearest_rank(&[3.0]), 3.0);
+        // Even N picks the upper-median ELEMENT, never an interpolated
+        // midpoint — the speculation cutoff must be a real duration.
+        assert_eq!(median_nearest_rank(&[1.0, 9.0]), 9.0);
+        assert_eq!(median_nearest_rank(&[1.0, 2.0, 3.0, 4.0]), 3.0);
+        assert_eq!(median_nearest_rank(&[1.0, 2.0, 3.0]), 2.0);
+    }
+
+    #[test]
+    fn log_hist_tracks_quantiles_within_bucket_error() {
+        let mut h = LogHist::new();
+        assert_eq!(h.quantile(0.5), 0.0);
+        for i in 1..=1000 {
+            h.observe(i as f64 * 1e-3); // 1ms..1s uniform
+        }
+        assert_eq!(h.count(), 1000);
+        assert_eq!(h.min(), 1e-3);
+        assert_eq!(h.max(), 1.0);
+        assert!((h.mean() - 0.5005).abs() < 1e-9);
+        // Edges are exact; interior quantiles within bucket error.
+        assert_eq!(h.quantile(0.0), 1e-3);
+        assert_eq!(h.quantile(1.0), 1.0);
+        let p50 = h.quantile(0.5);
+        assert!((p50 - 0.5).abs() / 0.5 < 0.10, "p50={p50}");
+        let p99 = h.quantile(0.99);
+        assert!((p99 - 0.99).abs() / 0.99 < 0.10, "p99={p99}");
+        assert!(h.quantile(0.5) <= h.quantile(0.95));
+        assert!(h.quantile(0.95) <= h.quantile(0.99));
+    }
+
+    #[test]
+    fn log_hist_footprint_is_constant() {
+        let mut h = LogHist::new();
+        h.observe(0.25);
+        let before = h.footprint_bytes();
+        for i in 0..1_000_000u32 {
+            h.observe((i % 997) as f64 * 1e-4);
+        }
+        assert_eq!(h.count(), 1_000_001);
+        assert_eq!(h.footprint_bytes(), before, "bucket array never grows");
+        assert!(before < 16 * 1024, "footprint stays a few KB: {before}");
     }
 
     #[test]

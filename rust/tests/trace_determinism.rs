@@ -1,0 +1,202 @@
+//! Trace determinism + artifact schema suite (DESIGN.md §15).
+//!
+//! Every preset runs twice with tracing enabled: the JSONL event log
+//! and the Chrome `trace_event` file must come out byte-identical, and
+//! the report's timeline digest must match across runs AND match the
+//! digest embedded in the artifact's meta header.  The service presets
+//! run as the same scaled-down clones the golden suite uses (debug
+//! builds); batch presets run at full size.
+//!
+//! Also pinned here: enabling `--trace` never moves the digest (the
+//! recorder digests the same emissions whether or not it captures),
+//! a different seed moves it, and the ring buffer bounds retention on
+//! the 128-node preset.
+
+use std::fs;
+use std::path::PathBuf;
+
+use sector_sphere::scenario::trace::validate_jsonl;
+use sector_sphere::scenario::{run_scenario, ScenarioSpec, TraceSpec};
+use sector_sphere::service::ArrivalProcess;
+use sector_sphere::util::bytes::GB;
+
+/// Per-(test, run) artifact paths under the system temp dir; the tag
+/// keeps concurrently-running tests from clobbering each other.
+fn trace_paths(tag: &str) -> (PathBuf, PathBuf) {
+    let dir = std::env::temp_dir();
+    let pid = std::process::id();
+    let chrome = dir.join(format!("sector-sphere-trace-{pid}-{tag}.json"));
+    let jsonl = dir.join(format!("sector-sphere-trace-{pid}-{tag}.jsonl"));
+    (chrome, jsonl)
+}
+
+/// Run `spec` with tracing to a temp path; return (digest, jsonl
+/// bytes, chrome bytes) and clean the files up.
+fn run_traced(mut spec: ScenarioSpec, tag: &str) -> (String, String, String) {
+    let (chrome_path, jsonl_path) = trace_paths(tag);
+    spec.trace = Some(TraceSpec {
+        path: Some(chrome_path.to_string_lossy().into_owned()),
+        ..TraceSpec::default()
+    });
+    let r = run_scenario(&spec).unwrap_or_else(|e| panic!("{}: {e}", spec.name));
+    let jsonl = fs::read_to_string(&jsonl_path).expect("jsonl artifact written");
+    let chrome = fs::read_to_string(&chrome_path).expect("chrome artifact written");
+    let _ = fs::remove_file(&jsonl_path);
+    let _ = fs::remove_file(&chrome_path);
+    (r.trace_digest, jsonl, chrome)
+}
+
+fn assert_trace_deterministic(spec: &ScenarioSpec) {
+    let (d1, j1, c1) = run_traced(spec.clone(), &format!("{}-a", spec.name));
+    let (d2, j2, c2) = run_traced(spec.clone(), &format!("{}-b", spec.name));
+    assert_eq!(d1, d2, "{}: digest must not move across reruns", spec.name);
+    assert_eq!(j1, j2, "{}: JSONL must be byte-identical", spec.name);
+    assert_eq!(c1, c2, "{}: Chrome trace must be byte-identical", spec.name);
+    let lines = validate_jsonl(&j1).unwrap_or_else(|e| panic!("{}: {e}", spec.name));
+    assert!(lines > 0, "{}: trace captured no events", spec.name);
+    assert!(
+        j1.lines().next().unwrap().contains(&format!("\"digest\":\"{d1}\"")),
+        "{}: meta header digest must match the report's",
+        spec.name
+    );
+    assert!(
+        c1.starts_with("{\"traceEvents\":[") && c1.trim_end().ends_with("]}"),
+        "{}: Chrome artifact must be a trace_event JSON object",
+        spec.name
+    );
+}
+
+/// The golden suite's scaled-down service clones (full size is a
+/// release-build bench concern, not a debug-build test one).
+fn traffic_scaled() -> ScenarioSpec {
+    let mut spec = ScenarioSpec::traffic_scale128();
+    let t = spec.traffic.as_mut().expect("traffic preset");
+    t.requests = 4_000;
+    t.clients = 20_000;
+    t.arrival = ArrivalProcess::Open { rps: 2_000.0 };
+    spec
+}
+
+fn colocate_scaled() -> ScenarioSpec {
+    let mut spec = ScenarioSpec::colocate_scale128();
+    spec.workload.as_mut().expect("workload preset").bytes_per_node = 0.25 * GB as f64;
+    let t = spec.traffic.as_mut().expect("traffic preset");
+    t.requests = 3_000;
+    t.clients = 20_000;
+    t.arrival = ArrivalProcess::Open { rps: 1_500.0 };
+    spec
+}
+
+#[test]
+fn traced_paper_wan6_is_deterministic() {
+    assert_trace_deterministic(&ScenarioSpec::paper_wan6());
+}
+
+#[test]
+fn traced_paper_lan8_is_deterministic() {
+    assert_trace_deterministic(&ScenarioSpec::paper_lan8());
+}
+
+#[test]
+fn traced_scale128_is_deterministic() {
+    assert_trace_deterministic(&ScenarioSpec::scale128());
+}
+
+#[test]
+fn traced_traffic_is_deterministic() {
+    assert_trace_deterministic(&traffic_scaled());
+}
+
+#[test]
+fn traced_colocate_is_deterministic() {
+    assert_trace_deterministic(&colocate_scaled());
+}
+
+#[test]
+fn traced_compare_wan4_is_deterministic() {
+    assert_trace_deterministic(&ScenarioSpec::compare_wan4());
+}
+
+#[test]
+fn traced_compare_scale128_is_deterministic() {
+    assert_trace_deterministic(&ScenarioSpec::compare_scale128());
+}
+
+#[test]
+fn traced_angle_wan4_is_deterministic() {
+    assert_trace_deterministic(&ScenarioSpec::angle_wan4());
+}
+
+#[test]
+fn traced_angle_scale128_is_deterministic() {
+    assert_trace_deterministic(&ScenarioSpec::angle_scale128());
+}
+
+#[test]
+fn enabling_trace_never_moves_the_digest() {
+    // The digest is computed on every run — artifact capture and the
+    // gauge sampler must not change what gets folded into it.
+    let spec = ScenarioSpec::compare_wan4();
+    let plain = run_scenario(&spec).unwrap();
+    let (traced_digest, _, _) = run_traced(spec, "digest-invariance");
+    assert_eq!(plain.trace_digest, traced_digest);
+}
+
+#[test]
+fn digest_moves_with_the_seed() {
+    let a = run_scenario(&traffic_scaled()).unwrap();
+    let mut spec = traffic_scaled();
+    spec.cfg.seed ^= 0x5eed_5eed;
+    let b = run_scenario(&spec).unwrap();
+    assert_ne!(
+        a.trace_digest, b.trace_digest,
+        "a different seed produces a different timeline"
+    );
+}
+
+/// Pull an integer field out of the JSONL meta header.
+fn meta_u64(meta: &str, key: &str) -> u64 {
+    let tag = format!("\"{key}\":");
+    let start = meta.find(&tag).unwrap_or_else(|| panic!("meta lacks {key}")) + tag.len();
+    meta[start..]
+        .split(&[',', '}'][..])
+        .next()
+        .unwrap()
+        .trim()
+        .parse()
+        .unwrap_or_else(|_| panic!("meta {key} not an integer"))
+}
+
+#[test]
+fn ring_buffer_bounds_capture_on_scale128() {
+    let mut spec = ScenarioSpec::scale128();
+    let (chrome_path, jsonl_path) = trace_paths("ring");
+    spec.trace = Some(TraceSpec {
+        path: Some(chrome_path.to_string_lossy().into_owned()),
+        sample_secs: 0.0,
+        max_events: 512,
+    });
+    let r = run_scenario(&spec).unwrap();
+    let jsonl = fs::read_to_string(&jsonl_path).expect("jsonl written");
+    let _ = fs::remove_file(&jsonl_path);
+    let _ = fs::remove_file(&chrome_path);
+    let meta = jsonl.lines().next().expect("meta header");
+    let seen = meta_u64(meta, "events_seen");
+    let captured = meta_u64(meta, "captured");
+    let dropped = meta_u64(meta, "dropped");
+    let open_at_end = meta_u64(meta, "open_at_end");
+    assert!(
+        seen > 512,
+        "the 128-node preset must overflow a 512-event ring (seen {seen})"
+    );
+    assert!(dropped > 0, "overflow must be visible as dropped events");
+    assert!(
+        captured <= 512 + open_at_end,
+        "retention bounded by max_events (+ synthesized tail): {captured}"
+    );
+    let lines = validate_jsonl(&jsonl).expect("truncated artifact still validates");
+    assert_eq!(lines as u64, captured);
+    // The digest still covers the FULL timeline, not just the ring.
+    let full = run_scenario(&ScenarioSpec::scale128()).unwrap();
+    assert_eq!(r.trace_digest, full.trace_digest);
+}
