@@ -30,6 +30,7 @@ fn main() {
         load_or(ScenarioSpec::paper_lan8(), "paper_lan8.toml"),
         load_or(ScenarioSpec::scale128(), "scale128.toml"),
         load_or(ScenarioSpec::traffic_scale128(), "traffic_scale128.toml"),
+        load_or(ScenarioSpec::traffic_elastic512(), "traffic_elastic512.toml"),
         load_or(ScenarioSpec::colocate_scale128(), "colocate_scale128.toml"),
         load_or(ScenarioSpec::compare_wan4(), "compare_wan4.toml"),
         load_or(ScenarioSpec::compare_scale128(), "compare_scale128.toml"),
@@ -63,6 +64,23 @@ fn main() {
                     slo.name, slo.p50_ms, slo.p95_ms, slo.p99_ms, slo.completed, slo.rejected
                 );
             }
+        }
+        if let Some(e) = &a.elasticity {
+            println!(
+                "  `- {} scaler: {} grows / {} sheds, {:.2} GB re-replicated, \
+                 peak {} replicas, {} violations",
+                e.policy,
+                e.grows,
+                e.sheds,
+                e.rereplication.total() / 1e9,
+                e.peak_replicas,
+                e.invariant_violations
+            );
+            assert_eq!(
+                e.invariant_violations, 0,
+                "{}: replica invariants must hold",
+                a.name
+            );
         }
         if let Some(co) = &a.colocation {
             println!(

@@ -1,0 +1,187 @@
+//! Elastic-serving gate (DESIGN.md §16): run the 512-node
+//! `traffic_elastic512` preset — one million requests from a
+//! 1.2M-client lazy population, watermark scaler on — twice for the
+//! determinism contract, then check the headline claims:
+//!
+//!   * the run is byte-identical across reruns (FNV hash recorded);
+//!   * the watermark policy improves the hot tenant's p99 against the
+//!     embedded same-seed static baseline (negative delta);
+//!   * re-replication moved real bytes across the link tiers.
+//!
+//! Drift against the committed `BENCH_elastic.json` at the repo root
+//! fails the bench (and CI's bench-trajectory job); an intentional
+//! recalibration re-runs with `BENCH_ELASTIC_UPDATE=1` and commits the
+//! rewritten JSON.
+//!
+//!     cargo bench --bench bench_elastic
+//!
+//! The emitted JSON carries ONLY deterministic simulation outputs (no
+//! wall clock), so the file is byte-stable across runs of one build.
+//! Wall-clock timings are printed to stdout instead.
+
+use sector_sphere::bench::{time_fn, BenchJson};
+use sector_sphere::routing::hash_name;
+use sector_sphere::scenario::{run_scenario, ScenarioSpec};
+
+/// Marker a bootstrap baseline carries before the first real run.
+const UNSET: &str = "UNSET";
+
+fn baseline_path() -> std::path::PathBuf {
+    let base = std::env::var("CARGO_MANIFEST_DIR")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("."));
+    base.join("BENCH_elastic.json")
+}
+
+/// Pull `"key": value` out of the flat baseline JSON without serde.
+fn field<'a>(json: &'a str, key: &str) -> Option<&'a str> {
+    let tag = format!("\"{key}\": ");
+    let start = json.find(&tag)? + tag.len();
+    let rest = &json[start..];
+    let end = rest.find(&[',', '}'][..])?;
+    Some(rest[..end].trim().trim_matches('"'))
+}
+
+fn main() {
+    let mut json = BenchJson::new("elastic");
+    json.text("bench", "elastic");
+
+    let spec = ScenarioSpec::traffic_elastic512();
+    assert!(
+        spec.traffic.as_ref().unwrap().clients >= 1_000_000,
+        "the preset must model a million-plus client population"
+    );
+
+    let a = run_scenario(&spec).unwrap_or_else(|e| panic!("traffic_elastic512: {e}"));
+    let b = run_scenario(&spec).unwrap_or_else(|e| panic!("traffic_elastic512 rerun: {e}"));
+    assert_eq!(
+        format!("{a:?}"),
+        format!("{b:?}"),
+        "traffic_elastic512: serialized reports must be byte-identical"
+    );
+    let hash = format!("{:016x}", hash_name(&format!("{a:?}")));
+
+    let t = a.traffic.as_ref().expect("traffic report");
+    let e = a.elasticity.as_ref().expect("elasticity report");
+    assert!(t.requests >= 1_000_000, "the preset must drive a million requests");
+    assert_eq!(
+        t.completed + t.rejected + t.unavailable,
+        t.requests,
+        "every request must resolve exactly once"
+    );
+    assert!(
+        t.sessions_touched > 0 && t.sessions_touched <= t.requests,
+        "lazy sessions must stay bounded by the request count \
+         (touched {} of {} clients)",
+        t.sessions_touched,
+        spec.traffic.as_ref().unwrap().clients
+    );
+    assert_eq!(e.invariant_violations, 0, "replica invariants must hold");
+    assert!(e.grows > 0, "the burst pattern must trigger re-replication");
+    assert!(
+        e.rereplication.total() > 0.0,
+        "re-replication must move real bytes"
+    );
+    let hot = e
+        .tenant_deltas
+        .iter()
+        .find(|d| d.name == "interactive")
+        .expect("hot tenant delta vs the embedded static baseline");
+    assert!(
+        hot.p99_delta_ms <= 0.0,
+        "watermark must not worsen the hot tenant's p99 vs static \
+         (delta {:+.2} ms)",
+        hot.p99_delta_ms
+    );
+
+    let wall = time_fn("traffic_elastic512", 1, 2, || run_scenario(&spec).unwrap());
+    println!(
+        "traffic_elastic512: {} req in {:.1} s sim ({} grows, {} sheds, \
+         {:.2} GB re-replicated) — hot-tenant p99 {:+.2} ms vs static \
+         ({:.0} ms wall)",
+        t.requests,
+        t.makespan_secs,
+        e.grows,
+        e.sheds,
+        e.rereplication.total() / 1e9,
+        hot.p99_delta_ms,
+        wall.secs.mean * 1e3
+    );
+    for d in &e.tenant_deltas {
+        println!(
+            "  {:<12} p50 {:+8.2} ms  p95 {:+8.2} ms  p99 {:+8.2} ms",
+            d.name, d.p50_delta_ms, d.p95_delta_ms, d.p99_delta_ms
+        );
+    }
+
+    json.int("requests", t.requests)
+        .int("completed", t.completed)
+        .int("rejected", t.rejected)
+        .int("unavailable", t.unavailable)
+        .int("sessions_touched", t.sessions_touched)
+        .num("makespan_secs", t.makespan_secs)
+        .int("grows", e.grows)
+        .int("sheds", e.sheds)
+        .int("drained_sheds", e.drained_sheds)
+        .int("peak_replicas", e.peak_replicas)
+        .int("final_replicas", e.final_replicas)
+        .num("rereplication_nic_gbytes", e.rereplication.nic / 1e9)
+        .num("rereplication_rack_gbytes", e.rereplication.rack / 1e9)
+        .num("rereplication_wan_gbytes", e.rereplication.wan / 1e9)
+        .num("hot_p99_delta_ms", hot.p99_delta_ms)
+        .int("events", a.events);
+    json.text("determinism_hash", &hash);
+
+    // ---- regression gate against the committed baseline ----
+    // Read the committed file BEFORE overwriting it, and write the new
+    // numbers BEFORE any drift panic — the CI artifact must carry the
+    // new values even when the gate trips, or the failure is only
+    // diagnosable from the job log.
+    let committed = std::fs::read_to_string(baseline_path());
+    match json.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("BENCH_elastic.json not written: {e}"),
+    }
+    let update = std::env::var("BENCH_ELASTIC_UPDATE").is_ok();
+    match committed {
+        Ok(committed) => {
+            let base_hash = field(&committed, "determinism_hash").unwrap_or(UNSET);
+            if base_hash == UNSET {
+                println!(
+                    "baseline is a bootstrap placeholder: commit the rewritten \
+                     BENCH_elastic.json to arm the drift gate"
+                );
+            } else if update {
+                println!("BENCH_ELASTIC_UPDATE set: accepting new baseline {hash}");
+            } else {
+                let mut drift = Vec::new();
+                if base_hash != hash {
+                    drift.push(format!("determinism hash {base_hash} -> {hash}"));
+                }
+                for key in ["hot_p99_delta_ms", "grows", "sheds"] {
+                    let old: f64 = field(&committed, key)
+                        .and_then(|v| v.parse().ok())
+                        .unwrap_or(f64::NAN);
+                    let new: f64 = field(&json.render(), key)
+                        .and_then(|v| v.parse().ok())
+                        .unwrap_or(f64::NAN);
+                    if !(old.is_finite() && (old - new).abs() <= 1e-9 * old.abs().max(1.0)) {
+                        drift.push(format!("{key} {old} -> {new}"));
+                    }
+                }
+                if !drift.is_empty() {
+                    for d in &drift {
+                        eprintln!("DRIFT: {d}");
+                    }
+                    panic!(
+                        "bench_elastic drifted from the committed baseline — if \
+                         intentional, rerun with BENCH_ELASTIC_UPDATE=1 and commit \
+                         the rewritten BENCH_elastic.json"
+                    );
+                }
+                println!("baseline check: elasticity numbers and determinism hash match");
+            }
+        }
+        Err(_) => println!("no committed baseline found; wrote a fresh one"),
+    }
+}

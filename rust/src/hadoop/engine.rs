@@ -519,6 +519,7 @@ impl<'e, 'a> Harness for HadoopHarness<'e, 'a> {
                 .values()
                 .filter(|a| a.speculative)
                 .count() as u64,
+            replicas: 0,
         }
     }
 }

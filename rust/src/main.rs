@@ -32,7 +32,7 @@ fn flag_spec() -> Vec<FlagSpec> {
         FlagSpec { name: "windows", help: "angle time windows", takes_value: true },
         FlagSpec { name: "seed", help: "deterministic seed", takes_value: true },
         FlagSpec { name: "file", help: "scenario TOML (see config/scenarios/)", takes_value: true },
-        FlagSpec { name: "preset", help: "scenario preset: paper_wan6|paper_lan8|scale128|traffic_scale128|colocate_scale128|compare_wan4|compare_scale128|angle_wan4|angle_scale128", takes_value: true },
+        FlagSpec { name: "preset", help: "scenario preset: paper_wan6|paper_lan8|scale128|traffic_scale128|traffic_elastic512|colocate_scale128|compare_wan4|compare_scale128|angle_wan4|angle_scale128", takes_value: true },
         FlagSpec { name: "requests", help: "traffic: total requests to drive", takes_value: true },
         FlagSpec { name: "clients", help: "traffic: simulated client population", takes_value: true },
         FlagSpec { name: "rps", help: "traffic: open-loop arrival rate", takes_value: true },
@@ -213,6 +213,7 @@ fn load_scenario_spec(
             "paper_lan8" => Ok(ScenarioSpec::paper_lan8()),
             "scale128" => Ok(ScenarioSpec::scale128()),
             "traffic_scale128" => Ok(ScenarioSpec::traffic_scale128()),
+            "traffic_elastic512" => Ok(ScenarioSpec::traffic_elastic512()),
             "colocate_scale128" => Ok(ScenarioSpec::colocate_scale128()),
             "compare_wan4" => Ok(ScenarioSpec::compare_wan4()),
             "compare_scale128" => Ok(ScenarioSpec::compare_scale128()),
@@ -220,8 +221,9 @@ fn load_scenario_spec(
             "angle_scale128" => Ok(ScenarioSpec::angle_scale128()),
             other => Err(format!(
                 "unknown preset {other:?} \
-                 (paper_wan6|paper_lan8|scale128|traffic_scale128|colocate_scale128|\
-                 compare_wan4|compare_scale128|angle_wan4|angle_scale128) — or pass --file"
+                 (paper_wan6|paper_lan8|scale128|traffic_scale128|traffic_elastic512|\
+                 colocate_scale128|compare_wan4|compare_scale128|angle_wan4|\
+                 angle_scale128) — or pass --file"
             )),
         },
     }
@@ -290,6 +292,29 @@ fn print_scenario_report(r: &sector_sphere::scenario::ScenarioReport) {
         println!("  segments       {}", r.segments);
         println!("  locality       {:.0}%", r.locality_fraction * 100.0);
         println!("  shuffled       {:.2} GB", r.shuffle_gbytes);
+    }
+    if let Some(e) = &r.elasticity {
+        println!(
+            "  elasticity     {} policy: {} grows, {} sheds ({} drained), \
+             peak {} replicas, final {}",
+            e.policy, e.grows, e.sheds, e.drained_sheds, e.peak_replicas, e.final_replicas
+        );
+        println!(
+            "  re-replication {:.2} GB moved (nic {:.2} / rack {:.2} / wan {:.2}), \
+             {} invariant violations",
+            e.rereplication.total() / 1e9,
+            e.rereplication.nic / 1e9,
+            e.rereplication.rack / 1e9,
+            e.rereplication.wan / 1e9,
+            e.invariant_violations
+        );
+        for d in &e.tenant_deltas {
+            println!(
+                "  elastic gain   {:<12} p50 {:+8.1} ms  p95 {:+8.1} ms  p99 {:+8.1} ms \
+                 (vs static baseline)",
+                d.name, d.p50_delta_ms, d.p95_delta_ms, d.p99_delta_ms
+            );
+        }
     }
     if let Some(co) = &r.colocation {
         println!(

@@ -1235,6 +1235,7 @@ impl<'r, 'a> Harness for AngleHarness<'r, 'a> {
                 .values()
                 .filter(|a| a.speculative)
                 .count() as u64,
+            replicas: 0,
         }
     }
 

@@ -671,6 +671,7 @@ impl<'r, 'a> Harness for CoHarness<'r, 'a> {
                 .values()
                 .filter(|a| a.speculative)
                 .count() as u64,
+            replicas: svc.replicas,
         }
     }
 }
@@ -793,6 +794,7 @@ pub(crate) fn run_colocated(
         }),
         comparison: None,
         angle: None,
+        elasticity: None,
         trace_digest: String::new(),
     })
 }
@@ -812,7 +814,7 @@ fn colocated_name(kind: WorkloadKind) -> &'static str {
 mod tests {
     use super::*;
     use crate::scenario::{ColocationSpec, FaultSpec, run_scenario};
-    use crate::service::{ArrivalProcess, TenantSpec, TrafficSpec};
+    use crate::service::{ArrivalProcess, ArrivalShape, TenantSpec, TrafficSpec};
     use crate::topology::TopologySpec;
     use crate::util::bytes::GB;
 
@@ -828,18 +830,21 @@ mod tests {
             files: 64,
             zipf_theta: 0.9,
             arrival: ArrivalProcess::Open { rps },
+            shape: ArrivalShape::Flat,
             tenants: vec![
                 TenantSpec {
                     name: "web".into(),
                     weight: 0.8,
                     write_fraction: 0.1,
                     object_bytes: 1.0e6,
+                    priority: 0,
                 },
                 TenantSpec {
                     name: "bulk".into(),
                     weight: 0.2,
                     write_fraction: 0.5,
                     object_bytes: 8.0e6,
+                    priority: 0,
                 },
             ],
         });

@@ -130,6 +130,7 @@ pub(crate) fn run_compare(
             speedup,
         }),
         angle: None,
+        elasticity: None,
         trace_digest: String::new(),
     })
 }

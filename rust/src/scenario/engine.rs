@@ -93,6 +93,10 @@ pub struct ScenarioReport {
     /// windows vs planted ground truth, model-distribution bytes per
     /// link tier (DESIGN.md §13).
     pub angle: Option<super::angle::AngleReport>,
+    /// Elastic-replication summary when the traffic engine ran with a
+    /// `[replication]` block: scaler activity, re-replication bytes per
+    /// link tier and SLO deltas vs the static baseline (DESIGN.md §16).
+    pub elasticity: Option<crate::service::ElasticityReport>,
     /// FNV-1a digest of the run's full trace timeline (DESIGN.md §15).
     /// Always computed — with or without `--trace` — so the golden
     /// fixtures pin the event-by-event timeline, not just the summary.
@@ -199,6 +203,7 @@ impl BatchOutcome {
             colocation: None,
             comparison: None,
             angle: self.angle,
+            elasticity: None,
             trace_digest: String::new(),
         }
     }
@@ -673,6 +678,7 @@ impl<'r, 'a> Harness for StageHarness<'r, 'a> {
             occupancy: self.run.running.iter().map(|&r| r as u64).sum(),
             queued: self.run.sched.pending_count() as u64,
             spec_inflight: 0,
+            replicas: 0,
         }
     }
 }
@@ -777,57 +783,6 @@ pub(crate) fn live_owner(
     Err(format!(
         "node {home}'s data lost: its whole replica chain crashed"
     ))
-}
-
-/// Apply a WAN degradation factor to a site's full-duplex uplink —
-/// shared by the batch, traffic and colocation engines so a brown-out
-/// is one capacity change no matter which engine owns the links.
-pub(crate) fn apply_site_degrade(
-    net: &mut NetSim,
-    links: &NetLinks,
-    testbed: &Testbed,
-    site: usize,
-    factor: f64,
-) {
-    let cap = (testbed.wan_bps * factor).max(1.0);
-    net.set_link_capacity(links.site_up[site], cap);
-    net.set_link_capacity(links.site_down[site], cap);
-}
-
-/// A degradation window opened: count it once and squeeze the site's
-/// uplinks to the combined factor of every window active at `now`
-/// (overlapping degradations compound instead of overwriting).  One
-/// implementation for every engine's event loop.
-pub(crate) fn handle_degrade_start(
-    state: &mut FaultState,
-    net: &mut NetSim,
-    links: &NetLinks,
-    testbed: &Testbed,
-    fault: usize,
-    now: f64,
-) {
-    if let FaultSpec::LinkDegrade { site, .. } = state.faults[fault] {
-        state.count_once(fault);
-        let f = state.degrade_factor_at(site, now);
-        apply_site_degrade(net, links, testbed, site, f);
-    }
-}
-
-/// A degradation window closed: restore the site's uplinks to whatever
-/// the *remaining* windows dictate, not blindly to 1.0.
-pub(crate) fn handle_degrade_end(
-    state: &mut FaultState,
-    net: &mut NetSim,
-    links: &NetLinks,
-    testbed: &Testbed,
-    fault: usize,
-    now: f64,
-) {
-    state.consumed[fault] = true;
-    if let FaultSpec::LinkDegrade { site, .. } = state.faults[fault] {
-        let f = state.degrade_factor_at(site, now);
-        apply_site_degrade(net, links, testbed, site, f);
-    }
 }
 
 /// Transport-model rate cap for a shuffle transfer along `path`,

@@ -47,7 +47,7 @@ pub use trace::{TraceRecorder, TraceSpec};
 
 use crate::config::{SimConfig, Table};
 use crate::mining::pcap::Regime;
-use crate::service::{ArrivalProcess, TenantSpec, TrafficSpec};
+use crate::service::{ArrivalProcess, ArrivalShape, ReplicationSpec, ScalerPolicy, TenantSpec, TrafficSpec};
 use crate::topology::TopologySpec;
 use crate::util::bytes::{parse_bytes, GB, MB};
 
@@ -413,6 +413,10 @@ pub struct ScenarioSpec {
     /// with `[workload]` the two colocate on one shared substrate
     /// (DESIGN.md §11).
     pub traffic: Option<TrafficSpec>,
+    /// Elastic replica management for the serving tier (the
+    /// `[replication]` TOML block; DESIGN.md §16).  Only legal on a
+    /// service-only scenario (`[traffic]` without `[workload]`).
+    pub replication: Option<ReplicationSpec>,
     /// Colocation knobs; only read when both blocks are present.
     pub colocation: ColocationSpec,
     /// The Sphere-vs-Hadoop head-to-head (the `[compare]` TOML block;
@@ -497,6 +501,7 @@ impl ScenarioSpec {
             faults.push(fault);
         }
         let traffic = TrafficSpec::from_table(t)?;
+        let replication = ReplicationSpec::from_table(t)?;
         // [traffic] + [workload] used to be mutually exclusive; since
         // the colocation engine (DESIGN.md §11) the combination runs
         // both on one shared substrate.  A [traffic]-only document
@@ -547,6 +552,7 @@ impl ScenarioSpec {
             workload,
             faults,
             traffic,
+            replication,
             colocation,
             compare,
             angle,
@@ -563,6 +569,23 @@ impl ScenarioSpec {
         }
         if let Some(traffic) = &self.traffic {
             traffic.validate()?;
+        }
+        if let Some(r) = &self.replication {
+            r.validate()?;
+            if self.traffic.is_none() {
+                return Err(
+                    "[replication] only applies to a [traffic] scenario — it \
+                     manages the serving tier's replica sets"
+                        .into(),
+                );
+            }
+            if self.workload.is_some() {
+                return Err(
+                    "[replication] does not colocate with [workload] yet: \
+                     elastic replica management runs in the service-only engine"
+                        .into(),
+                );
+            }
         }
         if let Some(trace) = &self.trace {
             trace.validate()?;
@@ -694,6 +717,7 @@ impl ScenarioSpec {
             }),
             faults: Vec::new(),
             traffic: None,
+            replication: None,
             colocation: ColocationSpec::default(),
             compare: None,
             angle: None,
@@ -715,6 +739,7 @@ impl ScenarioSpec {
             }),
             faults: Vec::new(),
             traffic: None,
+            replication: None,
             colocation: ColocationSpec::default(),
             compare: None,
             angle: None,
@@ -753,6 +778,7 @@ impl ScenarioSpec {
                 },
             ],
             traffic: None,
+            replication: None,
             colocation: ColocationSpec::default(),
             compare: None,
             angle: None,
@@ -776,26 +802,103 @@ impl ScenarioSpec {
             files: 65_536,
             zipf_theta: 0.9,
             arrival: ArrivalProcess::Open { rps: 4_000.0 },
+            shape: ArrivalShape::Flat,
             tenants: vec![
                 TenantSpec {
                     name: "interactive".into(),
                     weight: 0.70,
                     write_fraction: 0.05,
                     object_bytes: 1.0e6,
+                    priority: 0,
                 },
                 TenantSpec {
                     name: "analytics".into(),
                     weight: 0.25,
                     write_fraction: 0.10,
                     object_bytes: 8.0e6,
+                    priority: 0,
                 },
                 TenantSpec {
                     name: "ingest".into(),
                     weight: 0.05,
                     write_fraction: 0.90,
                     object_bytes: 16.0e6,
+                    priority: 0,
                 },
             ],
+        });
+        spec
+    }
+
+    /// Million-client elastic-serving preset: a 512-node cloud (4
+    /// sites × 8 racks × 16 nodes) serving 10^6 requests from a
+    /// 1.2M-client lazy-session population under bursty arrivals and a
+    /// hard Zipf skew, with the watermark scaler re-replicating hot
+    /// files against the same-seed static baseline (DESIGN.md §16).
+    /// Tenants carry distinct priority classes, and the fault plan
+    /// crashes a replica holder mid-scaling.  Mirrors
+    /// config/scenarios/traffic_elastic512.toml;
+    /// `benches/bench_elastic.rs` gates its hot-tenant p99 win.
+    pub fn traffic_elastic512() -> ScenarioSpec {
+        let mut spec = ScenarioSpec::scale128();
+        spec.name = "traffic-elastic512".into();
+        spec.topology = TopologySpec::scale_out(4, 8, 16);
+        // Service-only: the batch workload is replaced, not colocated.
+        spec.workload = None;
+        spec.faults = vec![
+            FaultSpec::Straggler {
+                node: 33,
+                factor: 0.5,
+            },
+            FaultSpec::SlaveCrash {
+                at_secs: 30.0,
+                node: 100,
+            },
+        ];
+        spec.traffic = Some(TrafficSpec {
+            clients: 1_200_000,
+            requests: 1_000_000,
+            files: 65_536,
+            zipf_theta: 1.1,
+            arrival: ArrivalProcess::Open { rps: 8_000.0 },
+            shape: ArrivalShape::Bursty {
+                period_secs: 20.0,
+                burst_secs: 5.0,
+                amplitude: 1.5,
+            },
+            tenants: vec![
+                TenantSpec {
+                    name: "interactive".into(),
+                    weight: 0.70,
+                    write_fraction: 0.02,
+                    object_bytes: 1.0e6,
+                    priority: 0,
+                },
+                TenantSpec {
+                    name: "analytics".into(),
+                    weight: 0.25,
+                    write_fraction: 0.10,
+                    object_bytes: 8.0e6,
+                    priority: 1,
+                },
+                TenantSpec {
+                    name: "ingest".into(),
+                    weight: 0.05,
+                    write_fraction: 0.90,
+                    object_bytes: 16.0e6,
+                    priority: 2,
+                },
+            ],
+        });
+        spec.replication = Some(ReplicationSpec {
+            policy: ScalerPolicy::Watermark,
+            min_replicas: 2,
+            max_replicas: 6,
+            interval_secs: 1.0,
+            high_reads_per_sec: 8.0,
+            low_reads_per_sec: 0.5,
+            max_grows_per_tick: 64,
+            max_sheds_per_tick: 64,
         });
         spec
     }
@@ -835,24 +938,28 @@ impl ScenarioSpec {
             files: 65_536,
             zipf_theta: 0.9,
             arrival: ArrivalProcess::Open { rps: 2_500.0 },
+            shape: ArrivalShape::Flat,
             tenants: vec![
                 TenantSpec {
                     name: "interactive".into(),
                     weight: 0.75,
                     write_fraction: 0.05,
                     object_bytes: 1.0e6,
+                    priority: 0,
                 },
                 TenantSpec {
                     name: "analytics".into(),
                     weight: 0.20,
                     write_fraction: 0.10,
                     object_bytes: 8.0e6,
+                    priority: 0,
                 },
                 TenantSpec {
                     name: "ingest".into(),
                     weight: 0.05,
                     write_fraction: 0.90,
                     object_bytes: 16.0e6,
+                    priority: 0,
                 },
             ],
         });
@@ -907,6 +1014,7 @@ impl ScenarioSpec {
             }),
             faults: Vec::new(),
             traffic: None,
+            replication: None,
             colocation: ColocationSpec::default(),
             compare: None,
             angle: Some(AngleSpec::default()),
@@ -949,6 +1057,7 @@ impl ScenarioSpec {
                 },
             ],
             traffic: None,
+            replication: None,
             colocation: ColocationSpec::default(),
             compare: None,
             angle: Some(AngleSpec {
@@ -1437,5 +1546,67 @@ mod tests {
         let records =
             s128.workload.as_ref().unwrap().bytes_per_node * 128.0 / 32.0;
         assert!((records - 1.0e8).abs() < 1.0, "Table 3's 10^8 records");
+    }
+
+    #[test]
+    fn elastic_preset_validates_at_million_scale() {
+        let spec = ScenarioSpec::traffic_elastic512();
+        spec.validate().unwrap();
+        assert_eq!(spec.topology.nodes(), 512);
+        assert!(spec.workload.is_none(), "service-only preset");
+        let t = spec.traffic.as_ref().unwrap();
+        assert!(t.clients >= 1_000_000, "10^6+ lazy sessions");
+        assert!(t.requests >= 1_000_000, "10^6+ requests");
+        assert!(matches!(t.shape, ArrivalShape::Bursty { .. }));
+        let prios: Vec<u8> = t.tenants.iter().map(|x| x.priority).collect();
+        assert_eq!(prios, vec![0, 1, 2], "distinct priority classes");
+        let r = spec.replication.as_ref().expect("watermark scaler on");
+        assert_eq!(r.policy, ScalerPolicy::Watermark);
+        assert!(r.min_replicas >= 2 && r.max_replicas > r.min_replicas);
+    }
+
+    #[test]
+    fn replication_block_parses_and_rejects_typos() {
+        let base = "[topology]\nsites = 2\nracks_per_site = 2\nnodes_per_rack = 2\n\
+                    [traffic]\nrequests = 10\n";
+        let spec = ScenarioSpec::from_toml(&format!(
+            "{base}[replication]\npolicy = \"watermark\"\nmin_replicas = 2\n\
+             max_replicas = 4\ninterval_secs = 0.5\nhigh_reads_per_sec = 5.0\n\
+             low_reads_per_sec = 0.5"
+        ))
+        .unwrap();
+        let r = spec.replication.as_ref().expect("replication block parsed");
+        assert_eq!(r.policy, ScalerPolicy::Watermark);
+        assert_eq!((r.min_replicas, r.max_replicas), (2, 4));
+        spec.validate().unwrap();
+        // Unknown keys error, never silently default.
+        let err = ScenarioSpec::from_toml(&format!(
+            "{base}[replication]\nmax_replikas = 4"
+        ))
+        .unwrap_err();
+        assert!(err.contains("max_replikas"), "{err}");
+    }
+
+    #[test]
+    fn replication_requires_a_service_only_scenario() {
+        // [replication] without [traffic] manages nothing.
+        let err = ScenarioSpec::from_toml(
+            "[topology]\nsites = 2\nracks_per_site = 2\nnodes_per_rack = 2\n\
+             [workload]\nkind = \"terasort\"\n[replication]\npolicy = \"static\"",
+        )
+        .unwrap()
+        .validate()
+        .unwrap_err();
+        assert!(err.contains("[replication]"), "{err}");
+        // ...and it does not colocate with a batch workload either.
+        let err = ScenarioSpec::from_toml(
+            "[topology]\nsites = 2\nracks_per_site = 2\nnodes_per_rack = 2\n\
+             [workload]\nkind = \"terasort\"\n[traffic]\nrequests = 10\n\
+             [replication]\npolicy = \"static\"",
+        )
+        .unwrap()
+        .validate()
+        .unwrap_err();
+        assert!(err.contains("[replication]"), "{err}");
     }
 }

@@ -586,6 +586,10 @@ pub struct HarnessGauges {
     pub queued: u64,
     /// Speculative attempts currently in flight.
     pub spec_inflight: u64,
+    /// Live data replicas across the catalog (elastic serving only;
+    /// harnesses without replica arenas report 0 and the sample still
+    /// emits, keeping the gauge set schema-stable across workloads).
+    pub replicas: u64,
 }
 
 fn tier_util(net: &NetSim, loads: &[f64], up: &[LinkId], down: &[LinkId]) -> f64 {
@@ -620,6 +624,7 @@ pub(crate) fn sample_gauges(
     tracer.sample(t, "occupancy", g.occupancy as f64);
     tracer.sample(t, "work_queued", g.queued as f64);
     tracer.sample(t, "spec_inflight", g.spec_inflight as f64);
+    tracer.sample(t, "replicas", g.replicas as f64);
     // One pass over the flow table covers all three tiers.
     let loads = net.link_loads();
     tracer.sample(t, "util_node", tier_util(net, &loads, &links.node_up, &links.node_down));

@@ -16,6 +16,9 @@ pub mod storage;
 pub use acl::{Access, Acl};
 pub use cloud::{CloudBuilder, SectorCloud};
 pub use index::{RecordIndex, RecordPos};
-pub use replica::ReplicationManager;
+pub use replica::{
+    FileLoad, ReplicaBounds, ReplicaDirective, ReplicationManager, Scaler, StaticScaler,
+    WatermarkScaler,
+};
 pub use slave::{FileMeta, Slave, SlaveId};
 pub use storage::{DiskStorage, MemStorage, Storage};

@@ -64,6 +64,129 @@ impl ReplicationManager {
     }
 }
 
+// --------------------------------------------------------- elastic scaling
+//
+// The periodic daily check above keeps every file AT a fixed target.
+// The elastic subsystem (DESIGN.md §16) instead asks, each scaler tick,
+// which files should GROW a replica (hot — reads queue behind too few
+// copies) and which should SHED one (cold — copies sit idle).  The
+// policy lives behind the `Scaler` trait so the traffic engine can run
+// different policies under identical demand traces and fault plans and
+// compare the SLO-vs-replication-cost trade in one report.
+
+/// Per-file demand observed over one scaler window, as the policy sees
+/// it: how many live replicas serve the file and the read arrival rate
+/// *per replica* (the quantity the watermarks are defined over — a file
+/// with 4 replicas absorbing 40 reads/s is exactly as loaded as a file
+/// with 1 replica absorbing 10 reads/s).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FileLoad {
+    pub file: u32,
+    /// Live (serving, non-draining) replicas right now.
+    pub replicas: u32,
+    /// Observed reads per second per live replica over the last window.
+    pub reads_per_sec_per_replica: f64,
+}
+
+/// Replica-count bounds the policy must respect (from the
+/// `[replication]` block).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ReplicaBounds {
+    pub min: u32,
+    pub max: u32,
+}
+
+/// One scaling decision.  The engine turns `Grow` into a real transfer
+/// flow on the shared network (the new copy serves only once the bytes
+/// land) and `Shed` into a drain: the replica leaves the read set
+/// immediately but is only removed once its in-flight reads finish.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ReplicaDirective {
+    Grow { file: u32 },
+    Shed { file: u32 },
+}
+
+/// An autoscaling policy: observe one window of per-file demand, emit
+/// grow/shed directives.  Implementations must be deterministic —
+/// `loads` arrives sorted by file id and any internal tie-breaking must
+/// be value-based, never address- or hash-ordered.
+pub trait Scaler {
+    fn name(&self) -> &'static str;
+    fn scale(&mut self, now: f64, loads: &[FileLoad], bounds: ReplicaBounds)
+        -> Vec<ReplicaDirective>;
+}
+
+/// The do-nothing baseline: replica counts stay wherever the initial
+/// placement put them.  Running the watermark policy against this under
+/// the same trace is what gives `ElasticityReport` its SLO deltas.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StaticScaler;
+
+impl Scaler for StaticScaler {
+    fn name(&self) -> &'static str {
+        "static"
+    }
+
+    fn scale(&mut self, _now: f64, _loads: &[FileLoad], _bounds: ReplicaBounds)
+        -> Vec<ReplicaDirective> {
+        Vec::new()
+    }
+}
+
+/// Load-driven watermark policy: grow the hottest files whose
+/// per-replica read rate exceeds `high`, shed the coldest whose rate
+/// sits below `low`, at most `max_grows_per_tick` / `max_sheds_per_tick`
+/// of each per window so one burst cannot flood the network with
+/// re-replication traffic.
+#[derive(Clone, Copy, Debug)]
+pub struct WatermarkScaler {
+    /// Grow when reads/sec/replica exceeds this.
+    pub high: f64,
+    /// Shed when reads/sec/replica falls below this.
+    pub low: f64,
+    pub max_grows_per_tick: u32,
+    pub max_sheds_per_tick: u32,
+}
+
+impl Scaler for WatermarkScaler {
+    fn name(&self) -> &'static str {
+        "watermark"
+    }
+
+    fn scale(&mut self, _now: f64, loads: &[FileLoad], bounds: ReplicaBounds)
+        -> Vec<ReplicaDirective> {
+        // Hottest first for grows; coldest first for sheds.  f64 rates
+        // come from deterministic counters so total_cmp is a stable
+        // order; file id breaks exact ties.
+        let mut hot: Vec<&FileLoad> = loads
+            .iter()
+            .filter(|l| l.reads_per_sec_per_replica > self.high && l.replicas < bounds.max)
+            .collect();
+        hot.sort_by(|a, b| {
+            b.reads_per_sec_per_replica
+                .total_cmp(&a.reads_per_sec_per_replica)
+                .then(a.file.cmp(&b.file))
+        });
+        let mut cold: Vec<&FileLoad> = loads
+            .iter()
+            .filter(|l| l.reads_per_sec_per_replica < self.low && l.replicas > bounds.min)
+            .collect();
+        cold.sort_by(|a, b| {
+            a.reads_per_sec_per_replica
+                .total_cmp(&b.reads_per_sec_per_replica)
+                .then(a.file.cmp(&b.file))
+        });
+        let mut out = Vec::new();
+        for l in hot.into_iter().take(self.max_grows_per_tick as usize) {
+            out.push(ReplicaDirective::Grow { file: l.file });
+        }
+        for l in cold.into_iter().take(self.max_sheds_per_tick as usize) {
+            out.push(ReplicaDirective::Shed { file: l.file });
+        }
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -147,5 +270,90 @@ mod tests {
                 "slave {i} holds {n} of {total} (mean {mean})"
             );
         }
+    }
+
+    fn load(file: u32, replicas: u32, rate: f64) -> FileLoad {
+        FileLoad { file, replicas, reads_per_sec_per_replica: rate }
+    }
+
+    const BOUNDS: ReplicaBounds = ReplicaBounds { min: 2, max: 4 };
+
+    #[test]
+    fn static_scaler_never_acts() {
+        let loads = vec![load(0, 2, 1e9), load(1, 4, 0.0)];
+        assert!(StaticScaler.scale(0.0, &loads, BOUNDS).is_empty());
+    }
+
+    #[test]
+    fn watermark_grows_hot_and_sheds_cold() {
+        let mut s = WatermarkScaler {
+            high: 10.0,
+            low: 1.0,
+            max_grows_per_tick: 8,
+            max_sheds_per_tick: 8,
+        };
+        let loads = vec![
+            load(0, 2, 50.0), // hot -> grow
+            load(1, 3, 5.0),  // between the marks -> untouched
+            load(2, 3, 0.2),  // cold -> shed
+        ];
+        assert_eq!(
+            s.scale(0.0, &loads, BOUNDS),
+            vec![
+                ReplicaDirective::Grow { file: 0 },
+                ReplicaDirective::Shed { file: 2 }
+            ]
+        );
+    }
+
+    #[test]
+    fn watermark_respects_bounds() {
+        let mut s = WatermarkScaler {
+            high: 10.0,
+            low: 1.0,
+            max_grows_per_tick: 8,
+            max_sheds_per_tick: 8,
+        };
+        // Hot but already at max; cold but already at min.
+        let loads = vec![load(0, 4, 50.0), load(1, 2, 0.0)];
+        assert!(s.scale(0.0, &loads, BOUNDS).is_empty());
+    }
+
+    #[test]
+    fn watermark_budget_takes_hottest_and_coldest_first() {
+        let mut s = WatermarkScaler {
+            high: 10.0,
+            low: 1.0,
+            max_grows_per_tick: 1,
+            max_sheds_per_tick: 1,
+        };
+        let loads = vec![
+            load(0, 2, 20.0),
+            load(1, 2, 90.0), // hottest wins the single grow slot
+            load(2, 3, 0.5),
+            load(3, 3, 0.1), // coldest wins the single shed slot
+        ];
+        assert_eq!(
+            s.scale(0.0, &loads, BOUNDS),
+            vec![
+                ReplicaDirective::Grow { file: 1 },
+                ReplicaDirective::Shed { file: 3 }
+            ]
+        );
+    }
+
+    #[test]
+    fn watermark_breaks_rate_ties_by_file_id() {
+        let mut s = WatermarkScaler {
+            high: 10.0,
+            low: 1.0,
+            max_grows_per_tick: 1,
+            max_sheds_per_tick: 0,
+        };
+        let loads = vec![load(7, 2, 20.0), load(3, 2, 20.0)];
+        assert_eq!(
+            s.scale(0.0, &loads, BOUNDS),
+            vec![ReplicaDirective::Grow { file: 3 }]
+        );
     }
 }

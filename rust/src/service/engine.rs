@@ -40,6 +40,19 @@
 //! a thin [`core::Harness`] over the shared engine core (DESIGN.md
 //! §14); `scenario::colocate` drives the same engine interleaved with
 //! a batch Sphere job on one shared substrate (DESIGN.md §11).
+//!
+//! Elastic replication (DESIGN.md §16): with a `[replication]` block
+//! the engine keeps per-file replica *sets* in a flat arena (up to
+//! `max_replicas` slots per file) and a periodic `ScalerTick` event
+//! feeds one window of per-file demand to the configured
+//! [`Scaler`] policy.  Grow directives become real transfer flows on
+//! the shared network (contending with serving traffic; the new copy
+//! serves only once the bytes land); shed directives drain — the
+//! replica leaves the read set immediately but its data is removed
+//! only after every admitted request pinned to it completes.  Without
+//! the block, and under `policy = "static"`, no tick is ever scheduled
+//! and the request timeline is byte-identical to the pre-elastic
+//! engine.
 
 use std::collections::{BTreeMap, VecDeque};
 
@@ -49,7 +62,8 @@ use crate::routing::chord::{ChordRing, hash_name};
 use crate::scenario::core::{self, CoreEv, FaultEv, Harness};
 use crate::scenario::engine::FaultState;
 use crate::scenario::trace::{HarnessGauges, TraceRecorder, Tracer};
-use crate::scenario::{ScenarioReport, ScenarioSpec};
+use crate::scenario::{ScenarioReport, ScenarioSpec, TenantSloDelta, TierBytes};
+use crate::sector::{FileLoad, ReplicaDirective, Scaler};
 use crate::sim::event::EventQueue;
 use crate::sim::netsim::{FlowId, LinkId, NetSim};
 use crate::sphere::simjob::udt_efficiency;
@@ -59,7 +73,7 @@ use crate::util::rng::{Pcg64, SplitMix64};
 use crate::util::stats::Summary;
 
 use super::session::{ClientSession, rank_replicas};
-use super::{ArrivalProcess, TrafficSpec};
+use super::{ArrivalProcess, ArrivalShape, ReplicationSpec, ScalerPolicy, TrafficSpec};
 
 /// Re-dispatch budget per request (crash re-routes).
 const MAX_ATTEMPTS: u8 = 4;
@@ -102,7 +116,48 @@ pub struct TrafficReport {
     pub near_fraction: f64,
     /// Deepest any slave's admission queue got.
     pub peak_queue: usize,
+    /// Distinct client sessions actually materialized.  Open-loop
+    /// populations are lazy: this stays bounded by the request count,
+    /// never by the (possibly million-client) population.
+    pub sessions_touched: u64,
 }
+
+/// What elastic replication did during a traffic run (DESIGN.md §16).
+/// Present whenever the scenario carried a `[replication]` block;
+/// under `policy = "watermark"` the engine also runs the identical
+/// trace under static replication and reports per-tenant SLO deltas
+/// against it (negative delta = the scaler improved that percentile).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ElasticityReport {
+    /// Name of the policy that ran ("static" | "watermark").
+    pub policy: &'static str,
+    /// Grow / shed directives the engine actually applied.
+    pub grows: u64,
+    pub sheds: u64,
+    /// Sheds that had to wait for in-flight reads to drain before the
+    /// replica's data could be removed.
+    pub drained_sheds: u64,
+    /// Re-replication transfer volume by deepest link tier crossed —
+    /// the network cost of elasticity, distinct from serving traffic.
+    pub rereplication: TierBytes,
+    /// Most live replicas held at any scaler tick, summed over files.
+    pub peak_replicas: u64,
+    /// Live replicas at the end of the run.
+    pub final_replicas: u64,
+    /// (sim time, total live replicas) at each scaler tick, capped at
+    /// [`TIMELINE_CAP`] points.
+    pub replica_timeline: Vec<(f64, u64)>,
+    /// Invariant breaches observed while running (replica on a dead
+    /// node, bounds violation, drain accounting underflow).  Always 0
+    /// on a correct engine; the property suite asserts it.
+    pub invariant_violations: u64,
+    /// Per-tenant p50/p95/p99 deltas vs the embedded static baseline
+    /// (watermark policy only; empty under static).
+    pub tenant_deltas: Vec<TenantSloDelta>,
+}
+
+/// Retention cap for [`ElasticityReport::replica_timeline`].
+const TIMELINE_CAP: usize = 4096;
 
 impl TrafficReport {
     /// Record the report into a shared metrics registry (counters for
@@ -147,6 +202,23 @@ pub fn run_traffic(
         .as_ref()
         .ok_or("run_traffic called without a [traffic] block")?;
     tspec.validate()?;
+    // Elastic runs embed their own control: the identical trace under
+    // static replication on an identical substrate, so the report can
+    // state what the scaler bought each tenant (the colocate engine's
+    // baseline pattern).  Untraced — the main run owns the recorder —
+    // and non-recursive, because the clone's policy is static.
+    let baseline = match &spec.replication {
+        Some(r) if r.policy == ScalerPolicy::Watermark => {
+            let mut solo = spec.clone();
+            solo.replication = Some(ReplicationSpec {
+                policy: ScalerPolicy::Static,
+                ..r.clone()
+            });
+            let disabled = TraceRecorder::disabled();
+            Some(run_traffic(&solo, testbed, &disabled)?)
+        }
+        _ => None,
+    };
     let n = testbed.nodes();
     let mut state = FaultState::new(&spec.faults, n);
     let mut net =
@@ -168,6 +240,21 @@ pub fn run_traffic(
     engine.events = out.events;
 
     let traffic = engine.traffic_report();
+    let mut elasticity = engine.elasticity_report(&state);
+    if let (Some(e), Some(base)) = (elasticity.as_mut(), baseline.as_ref()) {
+        let base_traffic = base.traffic.as_ref().expect("baseline run reports SLOs");
+        e.tenant_deltas = traffic
+            .tenants
+            .iter()
+            .zip(&base_traffic.tenants)
+            .map(|(m, b)| TenantSloDelta {
+                name: m.name.clone(),
+                p50_delta_ms: m.p50_ms - b.p50_ms,
+                p95_delta_ms: m.p95_ms - b.p95_ms,
+                p99_delta_ms: m.p99_ms - b.p99_ms,
+            })
+            .collect();
+    }
     Ok(ScenarioReport {
         name: spec.name.clone(),
         workload: "traffic",
@@ -188,6 +275,7 @@ pub fn run_traffic(
         colocation: None,
         comparison: None,
         angle: None,
+        elasticity,
         trace_digest: String::new(),
     })
 }
@@ -205,6 +293,10 @@ pub(crate) enum Ev {
     ClientWake { client: u32 },
     /// Metadata resolved: admit the request at a replica.
     Dispatch { req: u32 },
+    /// Periodic elastic-replication evaluation (DESIGN.md §16).  Only
+    /// ever scheduled when the `[replication]` policy is non-static,
+    /// so static and scaler-off runs share a byte-identical timeline.
+    ScalerTick,
     /// Crash / brown-out events owned by `scenario::core`.
     Fault(FaultEv),
 }
@@ -226,6 +318,7 @@ impl CoreEv for Ev {
             Ev::Arrive => "arrive",
             Ev::ClientWake { .. } => "client_wake",
             Ev::Dispatch { .. } => "dispatch",
+            Ev::ScalerTick => "scaler_tick",
             Ev::Fault(_) => "fault",
         }
     }
@@ -296,11 +389,78 @@ impl<'e, 'a> Harness for TrafficHarness<'e, 'a> {
     }
 }
 
+#[derive(Clone, Copy)]
 enum FlowKind {
     /// A client-visible request transfer.
     Service { req: u32 },
     /// Background write replication between the recorded endpoints.
     Replicate { src: u32, dst: u32 },
+    /// A scaler-ordered replica grow: `file`'s bytes moving from live
+    /// holder `src` into arena slot `slot` on the destination node.
+    /// The slot is `pending` until the bytes land.
+    Rereplicate { file: u32, slot: u8, src: u32, dst: u32 },
+}
+
+/// Flow-id-indexed side table for this engine's flows.  Flow ids are
+/// issued monotonically by the shared `NetSim`, so a base-offset ring
+/// replaces the former `BTreeMap`: O(1) insert/remove, iteration in id
+/// order with no hashing or tree rebalancing — the map lookups that
+/// dominated the 10^6-request profile.  Holes (`None`) are ids owned by
+/// a co-driven engine (colocate) or flows already completed.
+#[derive(Default)]
+struct FlowTable {
+    base: u64,
+    slots: VecDeque<Option<FlowKind>>,
+    len: usize,
+}
+
+impl FlowTable {
+    fn insert(&mut self, fid: FlowId, kind: FlowKind) {
+        if self.slots.is_empty() {
+            self.base = fid.0;
+        }
+        debug_assert!(fid.0 >= self.base, "flow ids are monotone");
+        let idx = (fid.0 - self.base) as usize;
+        if idx >= self.slots.len() {
+            self.slots.resize(idx + 1, None);
+        }
+        debug_assert!(self.slots[idx].is_none(), "flow id reused");
+        self.slots[idx] = Some(kind);
+        self.len += 1;
+    }
+
+    fn remove(&mut self, fid: FlowId) -> Option<FlowKind> {
+        if fid.0 < self.base {
+            return None;
+        }
+        let idx = (fid.0 - self.base) as usize;
+        let kind = self.slots.get_mut(idx)?.take()?;
+        self.len -= 1;
+        // Advance the base past leading holes so the ring stays sized
+        // to the in-flight window, not the run's full flow history.
+        while let Some(None) = self.slots.front() {
+            self.slots.pop_front();
+            self.base += 1;
+        }
+        self.len_shrink();
+        Some(kind)
+    }
+
+    /// Trailing holes accumulate when removals hit the back; trim them
+    /// so `iter` stays proportional to the window.
+    fn len_shrink(&mut self) {
+        while let Some(None) = self.slots.back() {
+            self.slots.pop_back();
+        }
+    }
+
+    /// Live (fid, kind) pairs in flow-id order.
+    fn iter(&self) -> impl Iterator<Item = (FlowId, &FlowKind)> + '_ {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter_map(move |(i, k)| k.as_ref().map(|k| (FlowId(self.base + i as u64), k)))
+    }
 }
 
 // ------------------------------------------------------------ catalog
@@ -369,6 +529,107 @@ impl Catalog {
     }
 }
 
+// ------------------------------------------------------------ replica sets
+
+const SLOT_EMPTY: u8 = 0;
+const SLOT_LIVE: u8 = 1;
+/// Grow transfer in flight: the slot is claimed but does not serve.
+const SLOT_PENDING: u8 = 2;
+/// Shed ordered: out of the read set, data removed once `pinned` = 0.
+const SLOT_DRAINING: u8 = 3;
+
+/// Per-file replica sets in one flat arena: `cap` slots per file, laid
+/// out file-major so a file's whole set is one cache line at cap <= 8.
+/// Replaces the fixed primary/partner pair wherever requests are
+/// admitted; the catalog keeps seeding the first two slots so a static
+/// run reproduces the pre-elastic placement exactly.
+struct ReplicaSets {
+    cap: usize,
+    /// Node holding each slot (`u32::MAX` when empty).
+    nodes: Vec<u32>,
+    /// SLOT_* state per slot.
+    state: Vec<u8>,
+    /// Admitted requests (serving or queued) pinned to each slot: a
+    /// draining slot's data is removed only when this reaches zero.
+    pinned: Vec<u32>,
+    /// Live replicas per file.
+    live: Vec<u8>,
+    total_live: u64,
+}
+
+impl ReplicaSets {
+    fn build(catalog: &Catalog, cap: usize) -> ReplicaSets {
+        let files = catalog.primary.len();
+        let mut sets = ReplicaSets {
+            cap,
+            nodes: vec![u32::MAX; files * cap],
+            state: vec![SLOT_EMPTY; files * cap],
+            pinned: vec![0; files * cap],
+            live: vec![0; files],
+            total_live: 0,
+        };
+        for f in 0..files {
+            let i = f * cap;
+            sets.nodes[i] = catalog.primary[f];
+            sets.state[i] = SLOT_LIVE;
+            sets.live[f] = 1;
+            sets.total_live += 1;
+            if cap > 1 && catalog.replica[f] != catalog.primary[f] {
+                sets.nodes[i + 1] = catalog.replica[f];
+                sets.state[i + 1] = SLOT_LIVE;
+                sets.live[f] += 1;
+                sets.total_live += 1;
+            }
+        }
+        sets
+    }
+
+    fn idx(&self, file: u32, slot: usize) -> usize {
+        file as usize * self.cap + slot
+    }
+
+    /// Live slot nodes in slot order (what admission ranks).
+    fn live_nodes_into(&self, file: u32, out: &mut Vec<u32>) {
+        out.clear();
+        let base = file as usize * self.cap;
+        for s in 0..self.cap {
+            if self.state[base + s] == SLOT_LIVE {
+                out.push(self.nodes[base + s]);
+            }
+        }
+    }
+
+    /// The live slot hosted on `node`, if any.
+    fn slot_on(&self, file: u32, node: u32) -> Option<usize> {
+        let base = file as usize * self.cap;
+        (0..self.cap)
+            .find(|&s| self.state[base + s] == SLOT_LIVE && self.nodes[base + s] == node)
+    }
+
+    /// Any non-empty slot on `node` (live, pending or draining)?
+    fn holds(&self, file: u32, node: u32) -> bool {
+        let base = file as usize * self.cap;
+        (0..self.cap)
+            .any(|s| self.state[base + s] != SLOT_EMPTY && self.nodes[base + s] == node)
+    }
+
+    fn first_empty_slot(&self, file: u32) -> Option<usize> {
+        let base = file as usize * self.cap;
+        (0..self.cap).find(|&s| self.state[base + s] == SLOT_EMPTY)
+    }
+
+    fn clear_slot(&mut self, file: u32, slot: usize) {
+        let i = self.idx(file, slot);
+        if self.state[i] == SLOT_LIVE {
+            self.live[file as usize] -= 1;
+            self.total_live -= 1;
+        }
+        self.state[i] = SLOT_EMPTY;
+        self.nodes[i] = u32::MAX;
+        self.pinned[i] = 0;
+    }
+}
+
 // ------------------------------------------------------------ sessions
 
 /// Client-session store: dense for closed-loop populations (every
@@ -402,6 +663,10 @@ struct Request {
     overhead: f64,
     /// Slave currently serving or queueing this request.
     slave: u32,
+    /// Replica-arena slot the request is pinned to while admitted
+    /// (serving or queued); keeps a draining replica's data alive
+    /// until the request completes.  `u8::MAX` = not pinned.
+    slot: u8,
     attempts: u8,
     /// Served same-node or same-rack (set at service start).
     near: bool,
@@ -413,11 +678,12 @@ struct Request {
 
 struct SlaveState {
     active: usize,
-    /// Per-tenant admission queues, drained round-robin.
+    /// Per-tenant admission queues, drained priority-class by
+    /// priority-class (ascending), round-robin within a class.
     queues: Vec<VecDeque<u32>>,
     queued: usize,
-    /// Round-robin pointer over tenants.
-    rr: usize,
+    /// Round-robin pointer per priority class.
+    rr: Vec<usize>,
 }
 
 // ------------------------------------------------------------ engine
@@ -450,6 +716,7 @@ pub(crate) struct Engine<'a> {
     ring_ids: Vec<u64>,
     ring_to_node: BTreeMap<u64, u32>,
     catalog: Catalog,
+    sets: ReplicaSets,
     sessions: Sessions,
     conn: ConnectionCache,
     rng: Pcg64,
@@ -457,7 +724,24 @@ pub(crate) struct Engine<'a> {
     mean_rtt: f64,
     requests: Vec<Request>,
     slaves: Vec<SlaveState>,
-    flows: BTreeMap<FlowId, FlowKind>,
+    flows: FlowTable,
+    /// Tenant indices grouped by ascending priority class (the drain
+    /// order at every slave); one entry per distinct priority.
+    priority_classes: Vec<Vec<usize>>,
+    // ---- elastic replication (None = static pair, no scaler)
+    rspec: Option<&'a ReplicationSpec>,
+    scaler: Option<Box<dyn Scaler>>,
+    /// Reads per file over the current scaler window.
+    window_reads: Vec<u32>,
+    /// Mix-weighted mean object size: what one re-replication moves.
+    mean_object_bytes: f64,
+    grows: u64,
+    sheds: u64,
+    drained_sheds: u64,
+    rerep_tier: TierBytes,
+    peak_replicas: u64,
+    timeline: Vec<(f64, u64)>,
+    invariant_violations: u64,
     // ---- counters
     issued: u64,
     outstanding: u64,
@@ -559,14 +843,43 @@ impl<'a> Engine<'a> {
             ArrivalProcess::Open { .. } => Sessions::Sparse(BTreeMap::new()),
         };
 
+        // Tenants grouped by ascending priority class, stable within a
+        // class (tenant order = parse order, already name-sorted).
+        let mut prios: Vec<u8> = tspec.tenants.iter().map(|t| t.priority).collect();
+        prios.sort_unstable();
+        prios.dedup();
+        let priority_classes: Vec<Vec<usize>> = prios
+            .iter()
+            .map(|&p| {
+                (0..tenants)
+                    .filter(|&i| tspec.tenants[i].priority == p)
+                    .collect()
+            })
+            .collect();
+
         let slaves = (0..n)
             .map(|_| SlaveState {
                 active: 0,
                 queues: (0..tenants).map(|_| VecDeque::new()).collect(),
                 queued: 0,
-                rr: 0,
+                rr: vec![0; priority_classes.len()],
             })
             .collect();
+
+        let rspec = spec.replication.as_ref();
+        if let Some(r) = rspec {
+            r.validate()?;
+        }
+        // Replica arena: static pairs without a [replication] block.
+        let cap = rspec.map_or(2, |r| r.max_replicas as usize).max(2);
+        let sets = ReplicaSets::build(&catalog, cap);
+        let total_live = sets.total_live;
+        let mean_object_bytes = tspec
+            .tenants
+            .iter()
+            .map(|t| t.weight / total_weight * t.object_bytes)
+            .sum::<f64>()
+            .max(1.0);
 
         Ok(Engine {
             tspec,
@@ -582,6 +895,7 @@ impl<'a> Engine<'a> {
             ring_ids,
             ring_to_node,
             catalog,
+            sets,
             sessions,
             conn: ConnectionCache::new(
                 cfg.service.conn_cache_entries,
@@ -592,7 +906,19 @@ impl<'a> Engine<'a> {
             mean_rtt,
             requests: Vec::with_capacity(tspec.requests.min(1 << 22) as usize),
             slaves,
-            flows: BTreeMap::new(),
+            flows: FlowTable::default(),
+            priority_classes,
+            rspec,
+            scaler: rspec.map(|r| r.scaler()),
+            window_reads: vec![0; tspec.files],
+            mean_object_bytes,
+            grows: 0,
+            sheds: 0,
+            drained_sheds: 0,
+            rerep_tier: TierBytes::default(),
+            peak_replicas: total_live,
+            timeline: vec![(0.0, total_live)],
+            invariant_violations: 0,
             issued: 0,
             outstanding: 0,
             completed: 0,
@@ -622,7 +948,7 @@ impl<'a> Engine<'a> {
     pub(crate) fn schedule_arrivals<E: From<Ev>>(&mut self, q: &mut EventQueue<E>) {
         match self.tspec.arrival {
             ArrivalProcess::Open { rps } => {
-                let dt = self.rng.next_exp(rps);
+                let dt = self.rng.next_exp(rps * self.tspec.shape.rate_factor(0.0));
                 q.push_at(dt, Ev::Arrive.into());
             }
             ArrivalProcess::Closed { think_secs } => {
@@ -634,6 +960,13 @@ impl<'a> Engine<'a> {
                     };
                     q.push_at(dt, Ev::ClientWake { client }.into());
                 }
+            }
+        }
+        // Static policies never tick: their event timeline must equal a
+        // run with no [replication] block at all, byte for byte.
+        if let Some(r) = self.rspec {
+            if r.policy != ScalerPolicy::Static {
+                q.push_at(r.interval_secs, Ev::ScalerTick.into());
             }
         }
     }
@@ -672,6 +1005,11 @@ impl<'a> Engine<'a> {
     ) {
         let key = self.catalog.sample_key(&mut self.rng);
         let write = self.rng.next_f64() < self.tspec.tenants[tenant as usize].write_fraction;
+        if !write {
+            // Demand feed for the scaler window (reads only: writes pin
+            // to one copy regardless of replica count).
+            self.window_reads[key as usize] += 1;
+        }
         let lookup_secs = self.resolve_meta(client, key, now, state);
         let req = self.requests.len() as u32;
         self.requests.push(Request {
@@ -682,6 +1020,7 @@ impl<'a> Engine<'a> {
             arrived: now,
             overhead: 0.0,
             slave: u32::MAX,
+            slot: u8::MAX,
             attempts: 0,
             near: false,
             fill_meta: lookup_secs > 0.0,
@@ -727,25 +1066,19 @@ impl<'a> Engine<'a> {
     // ---------------------------------------------------- admission
 
     /// Live candidate slaves for a request, in the client's preference
-    /// order.  Writes must land on the primary (or the surviving
-    /// replica when the primary is down); reads take any live copy.
+    /// order.  Candidates come from the replica arena: pending copies
+    /// are still transferring and draining copies have left the read
+    /// set.  Writes pin to the first live copy (the primary while it
+    /// lives); reads take any live copy, ranked by proximity.
     fn candidates(&self, req: u32, state: &FaultState) -> Vec<u32> {
         let r = &self.requests[req as usize];
-        let primary = self.catalog.primary[r.key as usize];
-        let replica = self.catalog.replica[r.key as usize];
+        let mut cands = Vec::with_capacity(self.sets.cap);
+        self.sets.live_nodes_into(r.key, &mut cands);
+        cands.retain(|&c| !state.dead[c as usize]);
         if r.write {
-            for cand in [primary, replica] {
-                if !state.dead[cand as usize] {
-                    return vec![cand];
-                }
-            }
-            return Vec::new();
+            cands.truncate(1);
+            return cands;
         }
-        let mut cands: Vec<u32> = [primary, replica]
-            .into_iter()
-            .filter(|&c| !state.dead[c as usize])
-            .collect();
-        cands.dedup();
         let home = client_node(self.seed, r.client, self.testbed.nodes()) as usize;
         rank_replicas(self.testbed, home, &mut cands);
         cands
@@ -786,6 +1119,7 @@ impl<'a> Engine<'a> {
         for &cand in &cands {
             if self.slaves[cand as usize].active < slots {
                 self.trace_admission(req, now, "served", cand as i64);
+                self.pin(req, cand);
                 self.start_service(req, cand, now, net);
                 return;
             }
@@ -795,6 +1129,7 @@ impl<'a> Engine<'a> {
         for &cand in &cands {
             if self.slaves[cand as usize].queued < self.cfg.service.queue_capacity {
                 self.trace_admission(req, now, "queued", cand as i64);
+                self.pin(req, cand);
                 let ss = &mut self.slaves[cand as usize];
                 ss.queues[tenant].push_back(req);
                 ss.queued += 1;
@@ -814,6 +1149,49 @@ impl<'a> Engine<'a> {
         let tenant = self.requests[req as usize].tenant as usize;
         self.tracer
             .admission(now, verdict, node, &self.tspec.tenants[tenant].name);
+    }
+
+    /// Pin an admitted request to the replica slot that will serve it:
+    /// a draining slot's data survives until every pin is released.
+    fn pin(&mut self, req: u32, slave: u32) {
+        let key = self.requests[req as usize].key;
+        match self.sets.slot_on(key, slave) {
+            Some(slot) => {
+                let i = self.sets.idx(key, slot);
+                self.sets.pinned[i] += 1;
+                self.requests[req as usize].slot = slot as u8;
+            }
+            None => {
+                // Admission only offers live slots; missing one is a bug.
+                self.invariant_violations += 1;
+                self.requests[req as usize].slot = u8::MAX;
+            }
+        }
+    }
+
+    /// Release a completed request's pin; a draining slot whose last
+    /// pin leaves is removed here (the deferred half of a shed).
+    fn unpin(&mut self, req: u32) {
+        let (key, slave, slot) = {
+            let r = &self.requests[req as usize];
+            (r.key, r.slave, r.slot)
+        };
+        if slot == u8::MAX {
+            return;
+        }
+        let i = self.sets.idx(key, slot as usize);
+        if self.sets.state[i] == SLOT_EMPTY
+            || self.sets.nodes[i] != slave
+            || self.sets.pinned[i] == 0
+        {
+            self.invariant_violations += 1;
+            return;
+        }
+        self.sets.pinned[i] -= 1;
+        if self.sets.state[i] == SLOT_DRAINING && self.sets.pinned[i] == 0 {
+            self.sets.clear_slot(key, slot as usize);
+            self.drained_sheds += 1;
+        }
     }
 
     /// Terminal non-success: `rejected` (admission shed) or
@@ -924,22 +1302,27 @@ impl<'a> Engine<'a> {
         r.near = self.testbed.proximity(s, home) <= Proximity::SameRack;
     }
 
-    /// A slot freed at `slave`: serve the next queued request, fair
-    /// round-robin across tenants.
+    /// A slot freed at `slave`: serve the next queued request.  Lower
+    /// priority classes drain first; within a class, round-robin across
+    /// tenants so equals share fairly (a single class reproduces the
+    /// old all-tenant round-robin exactly).
     fn dequeue_next(&mut self, slave: u32, now: f64, net: &mut NetSim) {
         let slots = self.cfg.service.slots_per_slave.max(1);
         let s = slave as usize;
         if self.slaves[s].active >= slots || self.slaves[s].queued == 0 {
             return;
         }
-        let tenants = self.slaves[s].queues.len();
-        for i in 1..=tenants {
-            let idx = (self.slaves[s].rr + i) % tenants;
-            if let Some(req) = self.slaves[s].queues[idx].pop_front() {
-                self.slaves[s].rr = idx;
-                self.slaves[s].queued -= 1;
-                self.start_service(req, slave, now, net);
-                return;
+        for ci in 0..self.priority_classes.len() {
+            let len = self.priority_classes[ci].len();
+            for i in 1..=len {
+                let pos = (self.slaves[s].rr[ci] + i) % len;
+                let idx = self.priority_classes[ci][pos];
+                if let Some(req) = self.slaves[s].queues[idx].pop_front() {
+                    self.slaves[s].rr[ci] = pos;
+                    self.slaves[s].queued -= 1;
+                    self.start_service(req, slave, now, net);
+                    return;
+                }
             }
         }
     }
@@ -957,11 +1340,29 @@ impl<'a> Engine<'a> {
         q: &mut EventQueue<E>,
         state: &FaultState,
     ) -> bool {
-        let Some(kind) = self.flows.remove(&fid) else {
+        let Some(kind) = self.flows.remove(fid) else {
             return false;
         };
-        let FlowKind::Service { req } = kind else {
-            return true; // background replication landed; bytes already counted
+        let req = match kind {
+            FlowKind::Service { req } => req,
+            FlowKind::Replicate { .. } => {
+                return true; // background write copy landed; bytes already counted
+            }
+            FlowKind::Rereplicate { file, slot, src: _, dst } => {
+                // The grow transfer landed: the new copy enters the
+                // read set (unless its host died mid-transfer — the
+                // crash path cancels those flows, so reaching here with
+                // a dead host is an accounting bug, not a race).
+                let i = self.sets.idx(file, slot as usize);
+                if self.sets.state[i] == SLOT_PENDING && self.sets.nodes[i] == dst {
+                    self.sets.state[i] = SLOT_LIVE;
+                    self.sets.live[file as usize] += 1;
+                    self.sets.total_live += 1;
+                } else {
+                    self.invariant_violations += 1;
+                }
+                return true;
+            }
         };
         let (slave, tenant, write, key, near, latency_ms, client) = {
             let r = &self.requests[req as usize];
@@ -985,18 +1386,22 @@ impl<'a> Engine<'a> {
         self.t_lat_ms[tenant].push(latency_ms);
         self.near_served += near as u64;
         self.makespan = self.makespan.max(now);
+        self.unpin(req);
 
-        // A completed write replicates to the rack-diverse partner in
-        // the background (paper §4: replicas restored to target count).
+        // A completed write replicates to every other live copy in the
+        // background (paper §4: replicas restored to target count; with
+        // a static pair this is exactly the old primary<->partner copy).
         if write {
-            let primary = self.catalog.primary[key as usize] as usize;
-            let partner = self.catalog.replica[key as usize] as usize;
-            let (src, dst) = if slave as usize == primary {
-                (primary, partner)
-            } else {
-                (partner, primary)
-            };
-            if !state.dead[dst] && src != dst {
+            let src = slave as usize;
+            let base = key as usize * self.sets.cap;
+            for s in 0..self.sets.cap {
+                if self.sets.state[base + s] != SLOT_LIVE {
+                    continue;
+                }
+                let dst = self.sets.nodes[base + s] as usize;
+                if dst == src || state.dead[dst] {
+                    continue;
+                }
                 self.start_transfer(
                     src,
                     dst,
@@ -1036,31 +1441,60 @@ impl<'a> Engine<'a> {
 
         // Cancel transfers served by the dead slave and re-dispatch
         // their requests; background replications touching it are
-        // simply dropped (the copy is lost with the node).
-        let doomed: Vec<(FlowId, Option<u32>)> = self
+        // simply dropped (the copy is lost with the node), and grow
+        // transfers from or to it abort — the claimed slot reopens.
+        enum Doom {
+            Redispatch(u32),
+            Drop,
+            AbortGrow { file: u32, slot: u8 },
+        }
+        let doomed: Vec<(FlowId, Doom)> = self
             .flows
             .iter()
-            .filter_map(|(&fid, kind)| match kind {
+            .filter_map(|(fid, kind)| match *kind {
                 FlowKind::Service { req }
-                    if self.requests[*req as usize].slave as usize == node =>
+                    if self.requests[req as usize].slave as usize == node =>
                 {
-                    Some((fid, Some(*req)))
+                    Some((fid, Doom::Redispatch(req)))
                 }
                 FlowKind::Replicate { src, dst }
-                    if *src as usize == node || *dst as usize == node =>
+                    if src as usize == node || dst as usize == node =>
                 {
-                    Some((fid, None))
+                    Some((fid, Doom::Drop))
+                }
+                FlowKind::Rereplicate { file, slot, src, dst }
+                    if src as usize == node || dst as usize == node =>
+                {
+                    Some((fid, Doom::AbortGrow { file, slot }))
                 }
                 _ => None,
             })
             .collect();
-        for (fid, req) in doomed {
-            self.flows.remove(&fid);
+        for (fid, doom) in doomed {
+            self.flows.remove(fid);
             net.cancel_flow(fid);
             self.tracer.flow_cancel(fid, now);
-            if let Some(req) = req {
-                self.reassignments += 1;
-                q.push_at(now, Ev::Dispatch { req }.into());
+            match doom {
+                Doom::Redispatch(req) => {
+                    self.reassignments += 1;
+                    q.push_at(now, Ev::Dispatch { req }.into());
+                }
+                Doom::Drop => {}
+                Doom::AbortGrow { file, slot } => self.sets.clear_slot(file, slot as usize),
+            }
+        }
+        // Every replica slot on the dead node empties: the copies are
+        // gone with the machine.  No automatic restore — that is the
+        // scaler's job (or nobody's, under static replication, exactly
+        // like the pre-elastic pair).
+        for file in 0..self.window_reads.len() as u32 {
+            let base = file as usize * self.sets.cap;
+            for s in 0..self.sets.cap {
+                if self.sets.state[base + s] != SLOT_EMPTY
+                    && self.sets.nodes[base + s] as usize == node
+                {
+                    self.sets.clear_slot(file, s);
+                }
             }
         }
         // Re-dispatch everything queued at the dead slave.
@@ -1096,7 +1530,7 @@ impl<'a> Engine<'a> {
                     let client = self.rng.gen_range(self.tspec.clients as u64) as u32;
                     self.issue_request(client, tenant, now, state, q);
                     if let ArrivalProcess::Open { rps } = self.tspec.arrival {
-                        let dt = self.rng.next_exp(rps);
+                        let dt = self.rng.next_exp(rps * self.tspec.shape.rate_factor(now));
                         q.push_at(now + dt, Ev::Arrive.into());
                     }
                 }
@@ -1108,8 +1542,206 @@ impl<'a> Engine<'a> {
                 }
             }
             Ev::Dispatch { req } => self.dispatch(req, now, net, q, state),
+            Ev::ScalerTick => self.scaler_tick(now, net, q, state),
             Ev::Fault(_) => {}
         }
+    }
+
+    // ---------------------------------------------------- elastic scaling
+
+    /// One scaler window closed: feed the window's per-file demand to
+    /// the policy, apply its directives, reschedule.  The tick chain
+    /// ends once the arrival stream is exhausted, so the run still
+    /// terminates when the queue and network drain.
+    fn scaler_tick<E: From<Ev>>(
+        &mut self,
+        now: f64,
+        net: &mut NetSim,
+        q: &mut EventQueue<E>,
+        state: &FaultState,
+    ) {
+        let Some(r) = self.rspec else { return };
+        let bounds = r.bounds();
+        // Demand snapshot: every file that saw reads this window, plus
+        // every file still holding more than the floor (shed candidates
+        // even at zero demand).
+        let mut loads = Vec::new();
+        for (f, &reads) in self.window_reads.iter().enumerate() {
+            let live = self.sets.live[f] as u32;
+            if live > bounds.max {
+                self.invariant_violations += 1;
+            }
+            if live == 0 || (reads == 0 && live <= bounds.min) {
+                continue;
+            }
+            loads.push(FileLoad {
+                file: f as u32,
+                replicas: live,
+                reads_per_sec_per_replica: reads as f64 / r.interval_secs / live as f64,
+            });
+        }
+        let directives = match self.scaler.as_mut() {
+            Some(s) => s.scale(now, &loads, bounds),
+            None => Vec::new(),
+        };
+        if !directives.is_empty() {
+            self.tracer.instant(now, "scaler", "directives");
+        }
+        // One network census per tick steers grow placement toward
+        // quiet NICs; directives within the tick share it.
+        let flows_per_link = net.link_flow_counts();
+        for d in directives {
+            match d {
+                ReplicaDirective::Grow { file } => {
+                    self.apply_grow(file, bounds.max, &flows_per_link, state, net)
+                }
+                ReplicaDirective::Shed { file } => self.apply_shed(file, bounds.min),
+            }
+        }
+        for w in &mut self.window_reads {
+            *w = 0;
+        }
+        self.peak_replicas = self.peak_replicas.max(self.sets.total_live);
+        if self.timeline.len() < TIMELINE_CAP {
+            self.timeline.push((now, self.sets.total_live));
+        }
+        self.tracer.sample(now, "replicas", self.sets.total_live as f64);
+        if self.issued < self.tspec.requests {
+            q.push_at(now + r.interval_secs, Ev::ScalerTick.into());
+        }
+    }
+
+    /// Grow one replica of `file`: claim an empty slot, pick the
+    /// least-pinned live holder as the source and the quietest
+    /// non-holding live node as the destination, and put the bytes on
+    /// the shared network.  The copy serves once the transfer lands.
+    fn apply_grow(
+        &mut self,
+        file: u32,
+        max: u32,
+        flows_per_link: &[usize],
+        state: &FaultState,
+        net: &mut NetSim,
+    ) {
+        // Re-checked here (not only in the policy): pending grows from
+        // earlier ticks count against the cap through slot occupancy.
+        if (self.sets.live[file as usize] as u32) >= max {
+            return;
+        }
+        let Some(slot) = self.sets.first_empty_slot(file) else { return };
+        let base = file as usize * self.sets.cap;
+        // Source: the live copy with the fewest admitted requests.
+        let mut src: Option<(u32, usize)> = None;
+        for s in 0..self.sets.cap {
+            if self.sets.state[base + s] == SLOT_LIVE {
+                let p = self.sets.pinned[base + s];
+                if src.map_or(true, |(bp, _)| p < bp) {
+                    src = Some((p, self.sets.nodes[base + s] as usize));
+                }
+            }
+        }
+        let Some((_, src)) = src else { return };
+        // Destination: lowest (rack-already-covered, load, id) among
+        // live nodes not already holding the file — rack diversity
+        // first, then admission load plus NIC flow count, then id for
+        // a total deterministic order.
+        let covered_racks: Vec<usize> = (0..self.sets.cap)
+            .filter(|&s| self.sets.state[base + s] != SLOT_EMPTY)
+            .map(|s| self.testbed.node_rack[self.sets.nodes[base + s] as usize])
+            .collect();
+        let mut dst: Option<(u64, usize)> = None;
+        for n in state.alive() {
+            let n = *n;
+            if self.sets.holds(file, n as u32) {
+                continue;
+            }
+            let rack_covered = covered_racks.contains(&self.testbed.node_rack[n]) as u64;
+            let load = (self.slaves[n].active + self.slaves[n].queued) as u64
+                + flows_per_link[self.links.node_up[n].0] as u64;
+            let score = (rack_covered << 62) | (load.min(1 << 31) << 30) | n as u64;
+            if dst.map_or(true, |(best, _)| score < best) {
+                dst = Some((score, n));
+            }
+        }
+        let Some((_, dst)) = dst else { return };
+        let bytes = self.mean_object_bytes;
+        self.sets.nodes[base + slot] = dst as u32;
+        self.sets.state[base + slot] = SLOT_PENDING;
+        self.sets.pinned[base + slot] = 0;
+        self.rerep_tier.add(self.testbed, src, dst, bytes);
+        self.start_transfer(
+            src,
+            dst,
+            bytes,
+            Some(src),
+            Some(dst),
+            FlowKind::Rereplicate {
+                file,
+                slot: slot as u8,
+                src: src as u32,
+                dst: dst as u32,
+            },
+            net,
+        );
+        self.grows += 1;
+    }
+
+    /// Shed one replica of `file`: the highest live slot leaves the
+    /// read set immediately; its data is removed now if nothing is
+    /// pinned to it, else when the last pinned request completes.
+    fn apply_shed(&mut self, file: u32, min: u32) {
+        if (self.sets.live[file as usize] as u32) <= min {
+            return;
+        }
+        let base = file as usize * self.sets.cap;
+        let Some(slot) = (0..self.sets.cap)
+            .rev()
+            .find(|&s| self.sets.state[base + s] == SLOT_LIVE)
+        else {
+            return;
+        };
+        self.sets.live[file as usize] -= 1;
+        self.sets.total_live -= 1;
+        self.sheds += 1;
+        if self.sets.pinned[base + slot] == 0 {
+            self.sets.state[base + slot] = SLOT_EMPTY;
+            self.sets.nodes[base + slot] = u32::MAX;
+        } else {
+            self.sets.state[base + slot] = SLOT_DRAINING;
+        }
+    }
+
+    /// Elasticity summary (None without a `[replication]` block); the
+    /// caller fills in the baseline SLO deltas.
+    pub(crate) fn elasticity_report(&mut self, state: &FaultState) -> Option<ElasticityReport> {
+        let r = self.rspec?;
+        // End-of-run sweep: no copy may survive on a crashed node, and
+        // no file may exceed the ceiling.
+        for (f, &live) in self.sets.live.iter().enumerate() {
+            if live as u32 > r.max_replicas {
+                self.invariant_violations += 1;
+            }
+            let base = f * self.sets.cap;
+            for s in 0..self.sets.cap {
+                if self.sets.state[base + s] != SLOT_EMPTY
+                    && state.dead[self.sets.nodes[base + s] as usize]
+                {
+                    self.invariant_violations += 1;
+                }
+            }
+        }
+        Some(ElasticityReport {
+            policy: r.policy.name(),
+            grows: self.grows,
+            sheds: self.sheds,
+            drained_sheds: self.drained_sheds,
+            rereplication: self.rerep_tier,
+            peak_replicas: self.peak_replicas.max(self.sets.total_live),
+            final_replicas: self.sets.total_live,
+            replica_timeline: std::mem::take(&mut self.timeline),
+            invariant_violations: self.invariant_violations,
+            tenant_deltas: Vec::new(),
+        })
     }
 
     /// Scheduler-occupancy gauges for the trace sampler.
@@ -1118,6 +1750,7 @@ impl<'a> Engine<'a> {
             occupancy: self.slaves.iter().map(|s| s.active as u64).sum(),
             queued: self.slaves.iter().map(|s| s.queued as u64).sum(),
             spec_inflight: 0,
+            replicas: self.sets.total_live,
         }
     }
 
@@ -1171,6 +1804,10 @@ impl<'a> Engine<'a> {
                 self.near_served as f64 / self.completed as f64
             },
             peak_queue: self.peak_queue,
+            sessions_touched: match &self.sessions {
+                Sessions::Dense(v) => v.len() as u64,
+                Sessions::Sparse(m) => m.len() as u64,
+            },
         }
     }
 }
@@ -1203,18 +1840,21 @@ mod tests {
             files: 64,
             zipf_theta: 0.9,
             arrival: ArrivalProcess::Open { rps },
+            shape: ArrivalShape::Flat,
             tenants: vec![
                 TenantSpec {
                     name: "web".into(),
                     weight: 0.8,
                     write_fraction: 0.1,
                     object_bytes: 1.0e6,
+                    priority: 0,
                 },
                 TenantSpec {
                     name: "bulk".into(),
                     weight: 0.2,
                     write_fraction: 0.5,
                     object_bytes: 8.0e6,
+                    priority: 0,
                 },
             ],
         });
@@ -1330,6 +1970,7 @@ mod tests {
             weight: 1.0,
             write_fraction: 1.0,
             object_bytes: 2.0e6,
+            priority: 0,
         }];
         let r = run_scenario(&spec).unwrap();
         let t = traffic(&r);
@@ -1360,5 +2001,144 @@ mod tests {
         let r = run_scenario(&spec).unwrap();
         assert_eq!(r.name, "traffic-test");
         assert_eq!(r.workload, "traffic");
+    }
+
+    // ------------------------------------------------ elastic scaling
+
+    /// Elastic variant of `small_spec`: hard skew, bursty arrivals and
+    /// a watermark scaler with room to grow above the 2-copy floor.
+    fn elastic_spec(requests: u64, rps: f64) -> ScenarioSpec {
+        let mut spec = small_spec(requests, rps);
+        let t = spec.traffic.as_mut().unwrap();
+        t.files = 32;
+        t.zipf_theta = 1.2;
+        t.shape = ArrivalShape::Bursty {
+            period_secs: 2.0,
+            burst_secs: 0.6,
+            amplitude: 4.0,
+        };
+        spec.replication = Some(ReplicationSpec {
+            policy: ScalerPolicy::Watermark,
+            min_replicas: 2,
+            max_replicas: 5,
+            interval_secs: 0.25,
+            high_reads_per_sec: 2.0,
+            low_reads_per_sec: 0.25,
+            max_grows_per_tick: 8,
+            max_sheds_per_tick: 8,
+        });
+        spec
+    }
+
+    fn elasticity(r: &ScenarioReport) -> &ElasticityReport {
+        r.elasticity.as_ref().expect("elasticity report present")
+    }
+
+    #[test]
+    fn elastic_run_is_deterministic_and_scales() {
+        let spec = elastic_spec(3000, 700.0);
+        let a = run_scenario(&spec).unwrap();
+        let b = run_scenario(&spec).unwrap();
+        assert_eq!(a, b, "elastic runs stay deterministic");
+        let e = elasticity(&a);
+        assert_eq!(e.policy, "watermark");
+        assert_eq!(e.invariant_violations, 0);
+        assert!(e.grows > 0, "a hot skew under bursts must trigger grows");
+        assert!(e.rereplication.total() > 0.0, "grows move real bytes");
+        assert!(e.peak_replicas >= e.final_replicas);
+        assert!(e.sheds >= e.drained_sheds);
+        assert!(!e.replica_timeline.is_empty());
+        let t = traffic(&a);
+        assert_eq!(t.completed + t.rejected + t.unavailable, 3000);
+    }
+
+    #[test]
+    fn watermark_beats_static_hot_p99() {
+        // The acceptance gate: under a skewed, bursty open-loop load
+        // the watermark policy's extra replicas of hot files must cut
+        // the hot tenant's p99 relative to the same-seed static run.
+        let spec = elastic_spec(4000, 1200.0);
+        let r = run_scenario(&spec).unwrap();
+        let e = elasticity(&r);
+        assert!(e.grows > 0);
+        let hot = e
+            .tenant_deltas
+            .iter()
+            .find(|d| d.name == "web")
+            .expect("hot tenant delta present");
+        assert!(
+            hot.p99_delta_ms <= 0.0,
+            "watermark must not worsen hot-tenant p99 (delta {} ms)",
+            hot.p99_delta_ms
+        );
+    }
+
+    #[test]
+    fn scaler_off_equals_static_policy() {
+        // No [replication] block and an explicit static policy must be
+        // byte-identical in everything but the elasticity summary: the
+        // static scaler schedules no ticks and moves no replicas.
+        let base = small_spec(2000, 400.0);
+        let mut stat = base.clone();
+        stat.replication = Some(ReplicationSpec {
+            policy: ScalerPolicy::Static,
+            min_replicas: 2,
+            max_replicas: 4,
+            interval_secs: 0.5,
+            high_reads_per_sec: 10.0,
+            low_reads_per_sec: 0.1,
+            max_grows_per_tick: 4,
+            max_sheds_per_tick: 4,
+        });
+        let a = run_scenario(&base).unwrap();
+        let b = run_scenario(&stat).unwrap();
+        assert!(a.elasticity.is_none());
+        let e = elasticity(&b);
+        assert_eq!((e.policy, e.grows, e.sheds), ("static", 0, 0));
+        assert_eq!(e.invariant_violations, 0);
+        assert_eq!(a.traffic, b.traffic, "static scaler must be a no-op");
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.makespan_secs, b.makespan_secs);
+    }
+
+    #[test]
+    fn million_lazy_clients_touch_bounded_sessions() {
+        // 3M configured clients, 20k requests: the sparse session store
+        // must only materialise state for clients that actually arrive
+        // (the dense path would be 3M entries before the first event).
+        let mut spec = small_spec(20_000, 4000.0);
+        spec.traffic.as_mut().unwrap().clients = 3_000_000;
+        let r = run_scenario(&spec).unwrap();
+        let t = traffic(&r);
+        assert_eq!(t.completed + t.rejected + t.unavailable, 20_000);
+        assert!(t.sessions_touched > 0);
+        assert!(
+            t.sessions_touched <= 20_000,
+            "at most one session per request, got {}",
+            t.sessions_touched
+        );
+    }
+
+    #[test]
+    fn crash_mid_scaling_keeps_replica_invariants() {
+        let mut spec = elastic_spec(3000, 700.0);
+        spec.faults.push(FaultSpec::SlaveCrash {
+            at_secs: 0.8,
+            node: 1,
+        });
+        spec.faults.push(FaultSpec::SlaveCrash {
+            at_secs: 1.6,
+            node: 5,
+        });
+        let a = run_scenario(&spec).unwrap();
+        let b = run_scenario(&spec).unwrap();
+        assert_eq!(a, b, "faulted elastic runs stay deterministic");
+        let e = elasticity(&a);
+        assert_eq!(
+            e.invariant_violations, 0,
+            "no replica may survive on a crashed node"
+        );
+        let t = traffic(&a);
+        assert_eq!(t.completed + t.rejected + t.unavailable, 3000);
     }
 }

@@ -37,10 +37,11 @@
 pub mod engine;
 pub mod session;
 
-pub use engine::{run_traffic, TenantSlo, TrafficReport};
+pub use engine::{run_traffic, ElasticityReport, TenantSlo, TrafficReport};
 pub use session::ClientSession;
 
 use crate::config::Table;
+use crate::sector::{ReplicaBounds, Scaler, StaticScaler, WatermarkScaler};
 use crate::util::bytes::parse_bytes;
 
 /// One tenant sharing the cloud.
@@ -53,6 +54,10 @@ pub struct TenantSpec {
     pub write_fraction: f64,
     /// Bytes moved per request.
     pub object_bytes: f64,
+    /// Scheduling priority class: lower drains first at every slave
+    /// (0 = most urgent).  Requests round-robin across tenants *within*
+    /// a class, so equal-priority tenants still share fairly.
+    pub priority: u8,
 }
 
 /// How requests arrive.
@@ -68,6 +73,54 @@ pub enum ArrivalProcess {
     Closed { think_secs: f64 },
 }
 
+/// Time-of-day modulation of the open-loop arrival rate, so demand
+/// hotspots actually form and the elastic scaler has something to chase
+/// (DESIGN.md §16).  Closed-loop runs ignore the shape (their rate is
+/// set by service completions, not a clock).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ArrivalShape {
+    /// Constant rate — the pre-elastic behaviour, and the default.
+    Flat,
+    /// A triangle wave with the given period: rate swings between
+    /// `(1 - amplitude)` and `(1 + amplitude)` of nominal.  (A triangle
+    /// rather than a sinusoid keeps the factor pure arithmetic — no
+    /// libm calls in the deterministic hot path.)
+    Diurnal { period_secs: f64, amplitude: f64 },
+    /// A square wave: for the first `burst_secs` of every
+    /// `period_secs`, rate is `(1 + amplitude)` of nominal; nominal
+    /// otherwise.
+    Bursty {
+        period_secs: f64,
+        burst_secs: f64,
+        amplitude: f64,
+    },
+}
+
+impl ArrivalShape {
+    /// Multiplier on the nominal open-loop rate at sim time `now`.
+    /// Floored well above zero so a deep trough never stalls the
+    /// arrival process outright.
+    pub fn rate_factor(&self, now: f64) -> f64 {
+        match *self {
+            ArrivalShape::Flat => 1.0,
+            ArrivalShape::Diurnal { period_secs, amplitude } => {
+                let phase = (now / period_secs).fract();
+                // Triangle in [-1, 1]: rises over the first half period,
+                // falls over the second.
+                let tri = 1.0 - 4.0 * (phase - 0.5).abs();
+                (1.0 + amplitude * tri).max(0.05)
+            }
+            ArrivalShape::Bursty { period_secs, burst_secs, amplitude } => {
+                if (now % period_secs) < burst_secs {
+                    1.0 + amplitude
+                } else {
+                    1.0
+                }
+            }
+        }
+    }
+}
+
 /// A complete traffic workload description (the `[traffic]` block).
 #[derive(Clone, Debug, PartialEq)]
 pub struct TrafficSpec {
@@ -77,9 +130,12 @@ pub struct TrafficSpec {
     pub requests: u64,
     /// Distinct objects in the catalog.
     pub files: usize,
-    /// Zipf popularity exponent over the catalog (0 = uniform).
+    /// Zipf popularity exponent over the catalog (must be positive;
+    /// small values approach uniform).
     pub zipf_theta: f64,
     pub arrival: ArrivalProcess,
+    /// Time-of-day modulation of the open-loop rate.
+    pub shape: ArrivalShape,
     pub tenants: Vec<TenantSpec>,
 }
 
@@ -102,6 +158,10 @@ impl TrafficSpec {
                 "arrival",
                 "rps",
                 "think_secs",
+                "shape",
+                "shape_period_secs",
+                "shape_burst_secs",
+                "shape_amplitude",
             ],
             &["tenants"],
         )?;
@@ -118,19 +178,43 @@ impl TrafficSpec {
                 ))
             }
         };
+        let shape = match t.str_or("traffic.shape", "flat") {
+            "flat" => ArrivalShape::Flat,
+            "diurnal" => ArrivalShape::Diurnal {
+                period_secs: t.float_or("traffic.shape_period_secs", 86_400.0),
+                amplitude: t.float_or("traffic.shape_amplitude", 0.5),
+            },
+            "bursty" => ArrivalShape::Bursty {
+                period_secs: t.float_or("traffic.shape_period_secs", 60.0),
+                burst_secs: t.float_or("traffic.shape_burst_secs", 10.0),
+                amplitude: t.float_or("traffic.shape_amplitude", 2.0),
+            },
+            other => {
+                return Err(format!(
+                    "traffic.shape: unknown shape {other:?} (flat|diurnal|bursty)"
+                ))
+            }
+        };
         let mut tenants = Vec::new();
         for label in t.subsections("traffic.tenants") {
             let k = |field: &str| format!("traffic.tenants.{label}.{field}");
             t.check_known_keys(
                 &format!("traffic.tenants.{label}"),
-                &["weight", "write_fraction", "object_bytes"],
+                &["weight", "write_fraction", "object_bytes", "priority"],
                 &[],
             )?;
+            let priority = t.int_or(&k("priority"), 0);
+            if !(0..=255).contains(&priority) {
+                return Err(format!(
+                    "tenant {label:?}: priority must be in [0, 255] (got {priority})"
+                ));
+            }
             tenants.push(TenantSpec {
                 name: label.clone(),
                 weight: t.float_or(&k("weight"), 1.0),
                 write_fraction: t.float_or(&k("write_fraction"), 0.0),
                 object_bytes: parse_bytes(t.str_or(&k("object_bytes"), "4MB"))? as f64,
+                priority: priority as u8,
             });
         }
         if tenants.is_empty() {
@@ -142,6 +226,7 @@ impl TrafficSpec {
             files: t.int_or("traffic.files", 65_536).max(1) as usize,
             zipf_theta: t.float_or("traffic.zipf_theta", 0.9),
             arrival,
+            shape,
             tenants,
         }))
     }
@@ -151,11 +236,35 @@ impl TrafficSpec {
         if self.clients == 0 {
             return Err("traffic: clients must be >= 1".into());
         }
+        // Sessions and catalog entries are indexed by u32 in the
+        // engine's arenas; a larger population must be a named config
+        // error here, never a silent truncation downstream.
+        if self.clients > u32::MAX as usize {
+            return Err(format!(
+                "traffic: clients = {} overflows the u32 session index (max {})",
+                self.clients,
+                u32::MAX
+            ));
+        }
         if self.requests == 0 {
             return Err("traffic: requests must be >= 1".into());
         }
+        if self.requests > u32::MAX as u64 {
+            return Err(format!(
+                "traffic: requests = {} overflows the u32 request index (max {})",
+                self.requests,
+                u32::MAX
+            ));
+        }
         if self.files == 0 {
             return Err("traffic: files must be >= 1".into());
+        }
+        if self.files > u32::MAX as usize {
+            return Err(format!(
+                "traffic: files = {} overflows the u32 catalog index (max {})",
+                self.files,
+                u32::MAX
+            ));
         }
         if self.tenants.is_empty() {
             return Err("traffic: at least one tenant required".into());
@@ -178,8 +287,12 @@ impl TrafficSpec {
                 return Err(format!("tenant {:?}: object_bytes must be > 0", t.name));
             }
         }
-        if !(self.zipf_theta >= 0.0) {
-            return Err("traffic: zipf_theta must be >= 0".into());
+        // `!(x > 0)` (not `x <= 0`) so NaN fails too.
+        if !(self.zipf_theta > 0.0 && self.zipf_theta.is_finite()) {
+            return Err(format!(
+                "traffic: zipf_theta must be a positive finite exponent (got {})",
+                self.zipf_theta
+            ));
         }
         match self.arrival {
             ArrivalProcess::Open { rps } => {
@@ -190,6 +303,30 @@ impl TrafficSpec {
             ArrivalProcess::Closed { think_secs } => {
                 if !(think_secs >= 0.0) {
                     return Err("traffic: think_secs must be >= 0".into());
+                }
+            }
+        }
+        match self.shape {
+            ArrivalShape::Flat => {}
+            ArrivalShape::Diurnal { period_secs, amplitude } => {
+                if !(period_secs > 0.0 && period_secs.is_finite()) {
+                    return Err("traffic: diurnal shape_period_secs must be > 0".into());
+                }
+                if !(0.0..=1.0).contains(&amplitude) {
+                    return Err("traffic: diurnal shape_amplitude must be in [0, 1]".into());
+                }
+            }
+            ArrivalShape::Bursty { period_secs, burst_secs, amplitude } => {
+                if !(period_secs > 0.0 && period_secs.is_finite()) {
+                    return Err("traffic: bursty shape_period_secs must be > 0".into());
+                }
+                if !(burst_secs > 0.0 && burst_secs <= period_secs) {
+                    return Err(
+                        "traffic: bursty shape_burst_secs must be in (0, period]".into()
+                    );
+                }
+                if !(amplitude >= 0.0 && amplitude.is_finite()) {
+                    return Err("traffic: bursty shape_amplitude must be >= 0".into());
                 }
             }
         }
@@ -205,6 +342,159 @@ impl TenantSpec {
             weight: 1.0,
             write_fraction: 0.1,
             object_bytes: 4.0e6,
+            priority: 0,
+        }
+    }
+}
+
+/// Which autoscaling policy the `[replication]` block selects.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScalerPolicy {
+    /// Replica counts stay at their initial placement — the baseline
+    /// every elastic run is measured against.
+    Static,
+    /// Load-driven watermarks ([`WatermarkScaler`]).
+    Watermark,
+}
+
+impl ScalerPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ScalerPolicy::Static => "static",
+            ScalerPolicy::Watermark => "watermark",
+        }
+    }
+}
+
+/// The `[replication]` block: elastic replica management for the
+/// traffic engine (DESIGN.md §16).  Absent block = static replication
+/// with no scaler ticks at all, byte-identical to the pre-elastic
+/// engine.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ReplicationSpec {
+    pub policy: ScalerPolicy,
+    /// Replica-count floor (>= 1; the initial placement starts here).
+    pub min_replicas: u32,
+    /// Replica-count ceiling (engine arenas are sized by this).
+    pub max_replicas: u32,
+    /// Scaler tick period, sim seconds.
+    pub interval_secs: f64,
+    /// Grow watermark: reads/sec/replica above this marks a file hot.
+    pub high_reads_per_sec: f64,
+    /// Shed watermark: reads/sec/replica below this marks a file cold.
+    pub low_reads_per_sec: f64,
+    /// Per-tick grow / shed budgets, so one burst cannot flood the
+    /// network with re-replication transfers.
+    pub max_grows_per_tick: u32,
+    pub max_sheds_per_tick: u32,
+}
+
+impl ReplicationSpec {
+    /// Parse the `[replication]` block.  Returns `None` when the
+    /// document has no such block.
+    pub fn from_table(t: &Table) -> Result<Option<ReplicationSpec>, String> {
+        if t.section_keys("replication").next().is_none() {
+            return Ok(None);
+        }
+        t.check_known_keys(
+            "replication",
+            &[
+                "policy",
+                "min_replicas",
+                "max_replicas",
+                "interval_secs",
+                "high_reads_per_sec",
+                "low_reads_per_sec",
+                "max_grows_per_tick",
+                "max_sheds_per_tick",
+            ],
+            &[],
+        )?;
+        let policy = match t.str_or("replication.policy", "watermark") {
+            "static" => ScalerPolicy::Static,
+            "watermark" => ScalerPolicy::Watermark,
+            other => {
+                return Err(format!(
+                    "replication.policy: unknown policy {other:?} (static|watermark)"
+                ))
+            }
+        };
+        Ok(Some(ReplicationSpec {
+            policy,
+            min_replicas: t.int_or("replication.min_replicas", 2).max(0) as u32,
+            max_replicas: t.int_or("replication.max_replicas", 4).max(0) as u32,
+            interval_secs: t.float_or("replication.interval_secs", 1.0),
+            high_reads_per_sec: t.float_or("replication.high_reads_per_sec", 4.0),
+            low_reads_per_sec: t.float_or("replication.low_reads_per_sec", 0.5),
+            max_grows_per_tick: t.int_or("replication.max_grows_per_tick", 32).max(0) as u32,
+            max_sheds_per_tick: t.int_or("replication.max_sheds_per_tick", 32).max(0) as u32,
+        }))
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.min_replicas < 1 {
+            return Err("replication: min_replicas must be >= 1".into());
+        }
+        if self.max_replicas < self.min_replicas {
+            return Err(format!(
+                "replication: max_replicas ({}) must be >= min_replicas ({})",
+                self.max_replicas, self.min_replicas
+            ));
+        }
+        if self.max_replicas < 2 {
+            return Err(
+                "replication: max_replicas must be >= 2 — the initial catalog \
+                 placement is always pair-replicated"
+                    .into(),
+            );
+        }
+        if self.max_replicas > 8 {
+            return Err("replication: max_replicas must be <= 8".into());
+        }
+        if !(self.interval_secs > 0.0 && self.interval_secs.is_finite()) {
+            return Err("replication: interval_secs must be > 0".into());
+        }
+        if !(self.low_reads_per_sec >= 0.0) {
+            return Err("replication: low_reads_per_sec must be >= 0".into());
+        }
+        if !(self.high_reads_per_sec > self.low_reads_per_sec) {
+            return Err(format!(
+                "replication: high_reads_per_sec ({}) must exceed low_reads_per_sec ({})",
+                self.high_reads_per_sec, self.low_reads_per_sec
+            ));
+        }
+        Ok(())
+    }
+
+    /// The defaults the TOML parser fills in — what a bare
+    /// `[replication]` block with just `policy` set resolves to.
+    pub fn with_policy(policy: ScalerPolicy) -> ReplicationSpec {
+        ReplicationSpec {
+            policy,
+            min_replicas: 2,
+            max_replicas: 4,
+            interval_secs: 1.0,
+            high_reads_per_sec: 4.0,
+            low_reads_per_sec: 0.5,
+            max_grows_per_tick: 32,
+            max_sheds_per_tick: 32,
+        }
+    }
+
+    pub fn bounds(&self) -> ReplicaBounds {
+        ReplicaBounds { min: self.min_replicas, max: self.max_replicas }
+    }
+
+    /// Build the configured policy object.
+    pub fn scaler(&self) -> Box<dyn Scaler> {
+        match self.policy {
+            ScalerPolicy::Static => Box::new(StaticScaler),
+            ScalerPolicy::Watermark => Box::new(WatermarkScaler {
+                high: self.high_reads_per_sec,
+                low: self.low_reads_per_sec,
+                max_grows_per_tick: self.max_grows_per_tick,
+                max_sheds_per_tick: self.max_sheds_per_tick,
+            }),
         }
     }
 }
@@ -295,9 +585,142 @@ mod tests {
     }
 
     #[test]
+    fn rejects_nonpositive_zipf_exponents() {
+        // A zero/negative/NaN exponent must be a named config error,
+        // not a downstream panic in the catalog sampler.
+        let t = Table::parse("[traffic]\nrequests = 10").unwrap();
+        let mut spec = TrafficSpec::from_table(&t).unwrap().unwrap();
+        for bad in [0.0, -0.5, f64::NAN, f64::INFINITY] {
+            spec.zipf_theta = bad;
+            let err = spec.validate().unwrap_err();
+            assert!(err.contains("zipf_theta"), "{bad}: {err}");
+        }
+        spec.zipf_theta = 0.9;
+        spec.validate().unwrap();
+    }
+
+    #[test]
+    fn rejects_populations_that_overflow_the_session_index() {
+        let t = Table::parse("[traffic]\nrequests = 10").unwrap();
+        let mut spec = TrafficSpec::from_table(&t).unwrap().unwrap();
+        spec.clients = u32::MAX as usize + 1;
+        let err = spec.validate().unwrap_err();
+        assert!(err.contains("session index"), "{err}");
+        spec.clients = u32::MAX as usize;
+        spec.validate().unwrap();
+        spec.requests = u32::MAX as u64 + 1;
+        let err = spec.validate().unwrap_err();
+        assert!(err.contains("request index"), "{err}");
+        spec.requests = 10;
+        spec.files = u32::MAX as usize + 1;
+        let err = spec.validate().unwrap_err();
+        assert!(err.contains("catalog index"), "{err}");
+    }
+
+    #[test]
     fn closed_loop_parses() {
         let t = Table::parse("[traffic]\narrival = \"closed\"\nthink_secs = 2.0").unwrap();
         let spec = TrafficSpec::from_table(&t).unwrap().unwrap();
         assert_eq!(spec.arrival, ArrivalProcess::Closed { think_secs: 2.0 });
+    }
+
+    #[test]
+    fn arrival_shapes_parse_and_modulate() {
+        let t = Table::parse(
+            "[traffic]\nshape = \"bursty\"\nshape_period_secs = 10.0\n\
+             shape_burst_secs = 2.0\nshape_amplitude = 3.0",
+        )
+        .unwrap();
+        let spec = TrafficSpec::from_table(&t).unwrap().unwrap();
+        let shape = spec.shape;
+        assert_eq!(
+            shape,
+            ArrivalShape::Bursty { period_secs: 10.0, burst_secs: 2.0, amplitude: 3.0 }
+        );
+        spec.validate().unwrap();
+        assert_eq!(shape.rate_factor(1.0), 4.0, "inside the burst");
+        assert_eq!(shape.rate_factor(5.0), 1.0, "outside the burst");
+        assert_eq!(shape.rate_factor(11.0), 4.0, "bursts recur every period");
+
+        let diurnal = ArrivalShape::Diurnal { period_secs: 100.0, amplitude: 0.5 };
+        assert!((diurnal.rate_factor(50.0) - 1.5).abs() < 1e-12, "peak at mid-period");
+        assert!((diurnal.rate_factor(0.0) - 0.5).abs() < 1e-12, "trough at the boundary");
+        assert_eq!(ArrivalShape::Flat.rate_factor(123.0), 1.0);
+
+        let bad = Table::parse("[traffic]\nshape = \"square\"").unwrap();
+        assert!(TrafficSpec::from_table(&bad).unwrap_err().contains("square"));
+        let mut spec = TrafficSpec::from_table(&Table::parse("[traffic]\n").unwrap())
+            .unwrap()
+            .unwrap();
+        spec.shape = ArrivalShape::Diurnal { period_secs: 0.0, amplitude: 0.5 };
+        assert!(spec.validate().is_err());
+        spec.shape = ArrivalShape::Bursty { period_secs: 5.0, burst_secs: 6.0, amplitude: 1.0 };
+        assert!(spec.validate().is_err());
+    }
+
+    #[test]
+    fn tenant_priority_parses_and_rejects_out_of_range() {
+        let t = Table::parse(
+            "[traffic]\nrequests = 10\n[traffic.tenants.a]\npriority = 2",
+        )
+        .unwrap();
+        let spec = TrafficSpec::from_table(&t).unwrap().unwrap();
+        assert_eq!(spec.tenants[0].priority, 2);
+        let bad = Table::parse(
+            "[traffic]\nrequests = 10\n[traffic.tenants.a]\npriority = 300",
+        )
+        .unwrap();
+        let err = TrafficSpec::from_table(&bad).unwrap_err();
+        assert!(err.contains("priority"), "{err}");
+    }
+
+    #[test]
+    fn replication_block_parses_with_defaults() {
+        let none = Table::parse("[traffic]\nrequests = 10").unwrap();
+        assert_eq!(ReplicationSpec::from_table(&none).unwrap(), None);
+
+        let t = Table::parse("[replication]\npolicy = \"watermark\"").unwrap();
+        let spec = ReplicationSpec::from_table(&t).unwrap().unwrap();
+        assert_eq!(spec, ReplicationSpec::with_policy(ScalerPolicy::Watermark));
+        spec.validate().unwrap();
+        assert_eq!(spec.scaler().name(), "watermark");
+        assert_eq!(spec.bounds(), crate::sector::ReplicaBounds { min: 2, max: 4 });
+
+        let t = Table::parse(
+            "[replication]\npolicy = \"static\"\nmin_replicas = 1\nmax_replicas = 6\n\
+             interval_secs = 0.5\nhigh_reads_per_sec = 10.0\nlow_reads_per_sec = 1.0\n\
+             max_grows_per_tick = 4\nmax_sheds_per_tick = 2",
+        )
+        .unwrap();
+        let spec = ReplicationSpec::from_table(&t).unwrap().unwrap();
+        assert_eq!(spec.policy, ScalerPolicy::Static);
+        assert_eq!(spec.max_replicas, 6);
+        assert_eq!(spec.scaler().name(), "static");
+        spec.validate().unwrap();
+    }
+
+    #[test]
+    fn replication_block_rejects_typos_and_bad_values() {
+        let typo = Table::parse("[replication]\npollicy = \"static\"").unwrap();
+        let err = ReplicationSpec::from_table(&typo).unwrap_err();
+        assert!(err.contains("pollicy"), "{err}");
+        let bad = Table::parse("[replication]\npolicy = \"psychic\"").unwrap();
+        assert!(ReplicationSpec::from_table(&bad).is_err());
+
+        let mut spec = ReplicationSpec::with_policy(ScalerPolicy::Watermark);
+        spec.min_replicas = 0;
+        assert!(spec.validate().is_err());
+        spec = ReplicationSpec::with_policy(ScalerPolicy::Watermark);
+        spec.max_replicas = 1;
+        assert!(spec.validate().is_err(), "max below min");
+        spec = ReplicationSpec::with_policy(ScalerPolicy::Watermark);
+        spec.max_replicas = 9;
+        assert!(spec.validate().is_err());
+        spec = ReplicationSpec::with_policy(ScalerPolicy::Watermark);
+        spec.interval_secs = 0.0;
+        assert!(spec.validate().is_err());
+        spec = ReplicationSpec::with_policy(ScalerPolicy::Watermark);
+        spec.high_reads_per_sec = spec.low_reads_per_sec;
+        assert!(spec.validate().is_err(), "watermarks must be ordered");
     }
 }

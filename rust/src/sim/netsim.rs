@@ -243,6 +243,15 @@ impl NetSim {
         self.links.len()
     }
 
+    /// Per-link active-flow census, indexed by `LinkId`.  The membership
+    /// lists are pruned on completion and cancellation (`detach`), so
+    /// the counts reflect exactly the flows currently crossing each
+    /// link — the elastic scaler reads this once per tick to steer
+    /// re-replication toward quiet NICs (DESIGN.md §16).
+    pub fn link_flow_counts(&self) -> Vec<usize> {
+        self.link_flows.iter().map(Vec::len).collect()
+    }
+
     /// Change a link's capacity in place (fault injection: degradation
     /// and repair). Flows in the link's component are re-allocated on
     /// the next query.
@@ -726,6 +735,23 @@ mod tests {
         net.flow_rate(a);
         assert!(net.profile().full_recomputes >= 1);
         assert_eq!(net.flow_id_watermark(), 3);
+    }
+
+    #[test]
+    fn link_flow_counts_track_membership() {
+        let mut net = NetSim::new();
+        let a = net.add_link(100.0);
+        let b = net.add_link(100.0);
+        assert_eq!(net.link_flow_counts(), vec![0, 0]);
+        let f1 = net.start_flow(&[a, b], 1000.0, 1e9);
+        let _f2 = net.start_flow(&[a], 1000.0, 1e9);
+        assert_eq!(net.link_flow_counts(), vec![2, 1]);
+        // Cancellation prunes membership immediately...
+        net.cancel_flow(f1);
+        assert_eq!(net.link_flow_counts(), vec![1, 0]);
+        // ...and so does completion.
+        net.run_to_idle();
+        assert_eq!(net.link_flow_counts(), vec![0, 0]);
     }
 
     #[test]

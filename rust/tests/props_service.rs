@@ -1,0 +1,243 @@
+//! Service-layer property suite (DESIGN.md §16): forall random
+//! topologies × arrival traces × fault plans, the elastic serving
+//! engine must keep its replica-management invariants:
+//!
+//!   1. replica counts stay within the configured [min, max] bounds;
+//!   2. no replica survives on a crashed node;
+//!   3. shed data is never read after removal (drain accounting);
+//!   4. every admitted request is served exactly once or explicitly
+//!      rejected — totals and per-tenant counts both conserve;
+//!   5. a spec with no [replication] block is byte-equivalent to the
+//!      static-policy scaler (scaler-off ≡ static baseline);
+//!   6. every run is deterministic: same spec, identical report.
+//!
+//! Invariants 1–3 are checked continuously inside the engine (every
+//! pin, unpin, grow completion and crash purge) and surface as
+//! `ElasticityReport::invariant_violations`; the properties here
+//! assert that counter is zero and re-check the bounds from the
+//! report's own aggregates.
+
+use sector_sphere::scenario::{run_scenario, FaultSpec, ScenarioSpec};
+use sector_sphere::service::{
+    ArrivalProcess, ArrivalShape, ReplicationSpec, ScalerPolicy, TenantSpec, TrafficSpec,
+};
+use sector_sphere::testkit::forall;
+use sector_sphere::util::rng::Pcg64;
+
+/// A case descriptor: ((sites, racks/site, extra nodes/rack),
+/// (requests, derivation seed, fault mask)).  Everything else —
+/// tenants, shape, watermark knobs, fault placement — derives from the
+/// seed, so shrinking works over plain integers.
+type Case = ((u64, u64, u64), (u64, u64, u64));
+
+fn gen_case(rng: &mut Pcg64) -> Case {
+    (
+        (rng.gen_range(3), rng.gen_range(3), rng.gen_range(3)),
+        (
+            200 + rng.gen_range(2_300),
+            rng.next_u64(),
+            rng.gen_range(4),
+        ),
+    )
+}
+
+/// Build a watermark-policy scenario from a case descriptor.
+fn elastic_case(case: &Case) -> ScenarioSpec {
+    let ((sites, racks, extra), (requests, seed, fault_mask)) = *case;
+    let sites = 1 + (sites % 3) as usize;
+    let racks = 1 + (racks % 3) as usize;
+    let per_rack = 2 + (extra % 3) as usize;
+    let nodes = sites * racks * per_rack;
+    let mut d = Pcg64::new(seed ^ 0x9E37_79B9_7F4A_7C15);
+
+    let mut spec = ScenarioSpec::traffic_scale128();
+    spec.name = "props-elastic".into();
+    spec.topology = sector_sphere::topology::TopologySpec::scale_out(sites, racks, per_rack);
+    spec.cfg.seed = seed;
+
+    spec.faults = Vec::new();
+    if fault_mask & 1 != 0 {
+        spec.faults.push(FaultSpec::Straggler {
+            node: (d.next_u64() % nodes as u64) as usize,
+            factor: 0.3 + d.next_f64() * 0.5,
+        });
+    }
+    if fault_mask & 2 != 0 {
+        let node = (d.next_u64() % nodes as u64) as usize;
+        spec.faults.push(FaultSpec::SlaveCrash {
+            at_secs: 0.3 + d.next_f64() * 1.5,
+            node,
+        });
+    }
+
+    let shape = match d.gen_range(3) {
+        0 => ArrivalShape::Flat,
+        1 => ArrivalShape::Diurnal {
+            period_secs: 2.0 + d.next_f64() * 8.0,
+            amplitude: d.next_f64(),
+        },
+        _ => {
+            let period = 2.0 + d.next_f64() * 8.0;
+            ArrivalShape::Bursty {
+                period_secs: period,
+                burst_secs: 0.1 + d.next_f64() * (period - 0.1),
+                amplitude: d.next_f64() * 2.0,
+            }
+        }
+    };
+    let n_tenants = 1 + d.gen_range(3) as usize;
+    let tenants = (0..n_tenants)
+        .map(|i| TenantSpec {
+            name: format!("t{i}"),
+            weight: 0.2 + d.next_f64(),
+            write_fraction: d.next_f64() * 0.3,
+            object_bytes: (0.5 + d.next_f64() * 4.0) * 1.0e6,
+            priority: d.gen_range(3) as u8,
+        })
+        .collect();
+    spec.traffic = Some(TrafficSpec {
+        clients: 2_000 + d.gen_range(30_000) as usize,
+        requests: requests.clamp(64, 3_000),
+        files: 24 + d.gen_range(160) as usize,
+        zipf_theta: 0.7 + d.next_f64() * 0.8,
+        arrival: ArrivalProcess::Open {
+            rps: 300.0 + d.next_f64() * 1_200.0,
+        },
+        shape,
+        tenants,
+    });
+
+    let min = 1 + d.gen_range(2) as u32; // 1..=2
+    let low = d.next_f64() * 0.3;
+    spec.replication = Some(ReplicationSpec {
+        policy: ScalerPolicy::Watermark,
+        min_replicas: min,
+        max_replicas: 2 + d.gen_range(4) as u32, // 2..=5, always >= min
+        interval_secs: 0.2 + d.next_f64() * 0.5,
+        high_reads_per_sec: low + 0.5 + d.next_f64() * 4.0,
+        low_reads_per_sec: low,
+        max_grows_per_tick: 2 + d.gen_range(10) as u32,
+        max_sheds_per_tick: 2 + d.gen_range(10) as u32,
+    });
+    spec
+}
+
+#[test]
+fn prop_elastic_invariants_and_conservation() {
+    forall(
+        "replica bounds, crash safety, drain accounting, conservation",
+        10,
+        gen_case,
+        |case| {
+            let spec = elastic_case(case);
+            let r = run_scenario(&spec)?;
+            let t = r.traffic.as_ref().ok_or("no traffic report")?;
+            let e = r.elasticity.as_ref().ok_or("no elasticity report")?;
+            if e.invariant_violations != 0 {
+                return Err(format!(
+                    "{} invariant violations (bounds / dead-node replica / \
+                     read-after-shed)",
+                    e.invariant_violations
+                ));
+            }
+            let rs = spec.replication.as_ref().unwrap();
+            let cap = spec.traffic.as_ref().unwrap().files as u64 * rs.max_replicas as u64;
+            if e.peak_replicas > cap {
+                return Err(format!("peak {} exceeds files*max {cap}", e.peak_replicas));
+            }
+            if e.final_replicas > e.peak_replicas {
+                return Err(format!(
+                    "final {} exceeds peak {}",
+                    e.final_replicas, e.peak_replicas
+                ));
+            }
+            if e.drained_sheds > e.sheds {
+                return Err(format!(
+                    "drained {} exceeds total sheds {}",
+                    e.drained_sheds, e.sheds
+                ));
+            }
+            // Every request resolves exactly once: totals...
+            if t.completed + t.rejected + t.unavailable != t.requests {
+                return Err(format!(
+                    "{} + {} + {} != {} requests",
+                    t.completed, t.rejected, t.unavailable, t.requests
+                ));
+            }
+            // ...and again per tenant, summing back to the totals.
+            let mut sum = 0;
+            for ten in &t.tenants {
+                if ten.completed + ten.rejected + ten.unavailable != ten.requests {
+                    return Err(format!("tenant {}: counts do not conserve", ten.name));
+                }
+                sum += ten.requests;
+            }
+            if sum != t.requests {
+                return Err(format!("tenant requests sum {sum} != total {}", t.requests));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_elastic_runs_are_deterministic() {
+    forall(
+        "same spec, identical report (scaler ticks included)",
+        5,
+        gen_case,
+        |case| {
+            let spec = elastic_case(case);
+            let a = run_scenario(&spec)?;
+            let b = run_scenario(&spec)?;
+            if a != b {
+                return Err("reports diverged across reruns".into());
+            }
+            if format!("{a:?}") != format!("{b:?}") {
+                return Err("serialized reports diverged".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_scaler_off_equals_static_baseline() {
+    // Dropping the [replication] block entirely and running the static
+    // policy must produce the same observable service behavior: the
+    // static scaler issues no directives and schedules no ticks, so
+    // the request timeline is untouched.
+    forall(
+        "no [replication] block ≡ static policy",
+        5,
+        gen_case,
+        |case| {
+            let mut off = elastic_case(case);
+            off.replication = None;
+            let mut stat = elastic_case(case);
+            stat.replication = Some(ReplicationSpec::with_policy(ScalerPolicy::Static));
+            let a = run_scenario(&off)?;
+            let b = run_scenario(&stat)?;
+            if a.elasticity.is_some() {
+                return Err("scaler-off run must carry no elasticity report".into());
+            }
+            let e = b.elasticity.as_ref().ok_or("static run lacks elasticity report")?;
+            if e.policy != "static" || e.grows != 0 || e.sheds != 0 {
+                return Err(format!(
+                    "static policy acted: policy {} grows {} sheds {}",
+                    e.policy, e.grows, e.sheds
+                ));
+            }
+            if a.traffic != b.traffic {
+                return Err("SLO reports differ between scaler-off and static".into());
+            }
+            if a.events != b.events || a.makespan_secs != b.makespan_secs {
+                return Err(format!(
+                    "timelines differ: {} vs {} events, {} vs {} s",
+                    a.events, b.events, a.makespan_secs, b.makespan_secs
+                ));
+            }
+            Ok(())
+        },
+    );
+}

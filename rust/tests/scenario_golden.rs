@@ -18,7 +18,7 @@
 use std::fs;
 use std::path::PathBuf;
 
-use sector_sphere::scenario::{run_scenario, ScenarioSpec};
+use sector_sphere::scenario::{run_scenario, FaultSpec, ScenarioSpec};
 use sector_sphere::service::ArrivalProcess;
 use sector_sphere::util::bytes::GB;
 
@@ -93,6 +93,26 @@ fn golden_colocate_scale128_scaled() {
     t.requests = 3_000;
     t.clients = 20_000;
     t.arrival = ArrivalProcess::Open { rps: 1_500.0 };
+    assert_golden(&spec);
+}
+
+#[test]
+fn golden_traffic_elastic512_scaled() {
+    // Debug-scaled clone of the elastic preset (same topology, tenants
+    // and watermark policy; fewer requests; crash pulled inside the
+    // shortened horizon).  Pins the full report — including the
+    // embedded-baseline tenant deltas and the replica timeline —
+    // against a committed fixture.
+    let mut spec = ScenarioSpec::traffic_elastic512();
+    let t = spec.traffic.as_mut().expect("traffic preset");
+    t.requests = 4_000;
+    t.clients = 40_000;
+    t.arrival = ArrivalProcess::Open { rps: 2_000.0 };
+    for f in &mut spec.faults {
+        if let FaultSpec::SlaveCrash { at_secs, .. } = f {
+            *at_secs = 1.0;
+        }
+    }
     assert_golden(&spec);
 }
 
@@ -241,6 +261,40 @@ fn golden_compare_toml_matches_preset_shape() {
             from_toml.workload.as_ref().map(|w| w.kind),
             preset.workload.as_ref().map(|w| w.kind),
         );
+    }
+}
+
+#[test]
+fn golden_elastic_toml_matches_preset_shape() {
+    // The shipped TOML must stay in sync with the built-in preset:
+    // same topology, traffic mix, fault plan and [replication] block.
+    let text = std::fs::read_to_string(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/config/scenarios/traffic_elastic512.toml"
+    ))
+    .expect("preset TOML readable");
+    let from_toml = ScenarioSpec::from_toml(&text).expect("preset TOML parses");
+    let preset = ScenarioSpec::traffic_elastic512();
+    assert_eq!(from_toml.name, preset.name);
+    assert_eq!(from_toml.topology.nodes(), preset.topology.nodes());
+    assert_eq!(from_toml.replication, preset.replication);
+    // Tenant subsections parse in name order; compare as a set, and
+    // the scalar traffic knobs directly.
+    let (a, b) = (
+        from_toml.traffic.as_ref().expect("TOML traffic"),
+        preset.traffic.as_ref().expect("preset traffic"),
+    );
+    assert_eq!(
+        (a.clients, a.requests, a.files, a.zipf_theta, a.arrival, a.shape),
+        (b.clients, b.requests, b.files, b.zipf_theta, b.arrival, b.shape),
+    );
+    assert_eq!(a.tenants.len(), b.tenants.len());
+    for tenant in &b.tenants {
+        assert!(a.tenants.contains(tenant), "TOML missing tenant {tenant:?}");
+    }
+    assert_eq!(from_toml.faults.len(), preset.faults.len());
+    for f in &preset.faults {
+        assert!(from_toml.faults.contains(f), "TOML missing fault {f:?}");
     }
 }
 

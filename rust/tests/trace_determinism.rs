@@ -16,7 +16,7 @@ use std::fs;
 use std::path::PathBuf;
 
 use sector_sphere::scenario::trace::validate_jsonl;
-use sector_sphere::scenario::{run_scenario, ScenarioSpec, TraceSpec};
+use sector_sphere::scenario::{run_scenario, FaultSpec, ScenarioSpec, TraceSpec};
 use sector_sphere::service::ArrivalProcess;
 use sector_sphere::util::bytes::GB;
 
@@ -87,6 +87,24 @@ fn colocate_scaled() -> ScenarioSpec {
     spec
 }
 
+/// Debug-scaled clone of the elastic 512-node preset: same topology,
+/// tenants, shape and watermark policy; fewer requests, and the crash
+/// pulled inside the shortened horizon so re-replication races the
+/// fault plan here too.
+fn elastic_scaled() -> ScenarioSpec {
+    let mut spec = ScenarioSpec::traffic_elastic512();
+    let t = spec.traffic.as_mut().expect("traffic preset");
+    t.requests = 4_000;
+    t.clients = 40_000;
+    t.arrival = ArrivalProcess::Open { rps: 2_000.0 };
+    for f in &mut spec.faults {
+        if let FaultSpec::SlaveCrash { at_secs, .. } = f {
+            *at_secs = 1.0;
+        }
+    }
+    spec
+}
+
 #[test]
 fn traced_paper_wan6_is_deterministic() {
     assert_trace_deterministic(&ScenarioSpec::paper_wan6());
@@ -130,6 +148,27 @@ fn traced_angle_wan4_is_deterministic() {
 #[test]
 fn traced_angle_scale128_is_deterministic() {
     assert_trace_deterministic(&ScenarioSpec::angle_scale128());
+}
+
+#[test]
+fn traced_elastic_is_deterministic() {
+    // Satellite contract: the debug-scaled elastic preset's JSONL and
+    // Chrome artifacts are byte-identical across reruns and the
+    // embedded digest matches the report's — with the scaler ticking,
+    // re-replication flows in flight and a mid-run crash.
+    assert_trace_deterministic(&elastic_scaled());
+}
+
+#[test]
+fn elastic_digest_moves_with_the_seed() {
+    let a = run_scenario(&elastic_scaled()).unwrap();
+    let mut spec = elastic_scaled();
+    spec.cfg.seed ^= 0x5eed_5eed;
+    let b = run_scenario(&spec).unwrap();
+    assert_ne!(
+        a.trace_digest, b.trace_digest,
+        "a different seed must reshuffle the elastic timeline"
+    );
 }
 
 #[test]
