@@ -1,0 +1,209 @@
+//! Sweep-orchestrator gate (DESIGN.md §17): run both shipped sweep
+//! presets — the Fig 5–6 strong-scaling grid and the Sphere-over-Hadoop
+//! WAN speedup surface — twice each, assert the SweepReport JSON is
+//! byte-identical across runs and the per-point results invariant to
+//! the worker count (only the shard/workers bookkeeping fields may
+//! move), gate the grid shape (point counts, fig5 monotonicity,
+//! speedup > 1 everywhere),
+//! then check the FNV determinism hash against the committed baseline
+//! in `BENCH_sweep.json` at the repo root.  Any drift fails the bench
+//! (and CI's bench-trajectory job); an intentional recalibration
+//! re-runs with `BENCH_SWEEP_UPDATE=1` and commits the rewritten JSON.
+//!
+//!     cargo bench --bench bench_sweep
+//!
+//! The emitted JSON carries ONLY deterministic simulation outputs (no
+//! wall clock): grid fingerprints, per-preset point counts, makespan
+//! extrema, the speedup surface extrema, the full per-point record
+//! arrays (via `BenchJson::raw`), and one FNV hash over both reports.
+//! Wall-clock timings are printed to stdout instead.
+
+use sector_sphere::bench::{time_fn, BenchJson};
+use sector_sphere::routing::hash_name;
+use sector_sphere::scenario::{run_sweep, SweepReport, SweepSpec};
+
+/// Marker a bootstrap baseline carries before the first real run.
+const UNSET: &str = "UNSET";
+
+fn baseline_path() -> std::path::PathBuf {
+    let base = std::env::var("CARGO_MANIFEST_DIR")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("."));
+    base.join("BENCH_sweep.json")
+}
+
+/// Pull `"key": value` out of the flat baseline JSON without serde.
+fn field<'a>(json: &'a str, key: &str) -> Option<&'a str> {
+    let tag = format!("\"{key}\": ");
+    let start = json.find(&tag)? + tag.len();
+    let rest = &json[start..];
+    let end = rest.find(&[',', '}'][..])?;
+    Some(rest[..end].trim().trim_matches('"'))
+}
+
+fn run_preset(name: &str, spec: &SweepSpec, json: &mut BenchJson) -> (SweepReport, u64) {
+    let a = run_sweep(spec).unwrap_or_else(|e| panic!("{name}: {e}"));
+    let b = run_sweep(spec).unwrap_or_else(|e| panic!("{name} rerun: {e}"));
+    assert_eq!(
+        a.to_json(),
+        b.to_json(),
+        "{name}: the SweepReport JSON must be byte-identical across runs"
+    );
+    // Worker-count invariance: the shard plan changes, the per-point
+    // results must not (grid-order aggregation, DESIGN.md §17).
+    let mut serial = spec.clone();
+    serial.workers = 1;
+    let c = run_sweep(&serial).unwrap_or_else(|e| panic!("{name} serial: {e}"));
+    for (x, y) in a.records.iter().zip(&c.records) {
+        assert_eq!(
+            (x.index, &x.fingerprint, &x.determinism, x.makespan_secs),
+            (y.index, &y.fingerprint, &y.determinism, y.makespan_secs),
+            "{name}: worker count leaked into point #{}",
+            x.index
+        );
+    }
+    let hash = hash_name(&a.to_json());
+    let t = time_fn(name, 0, 2, || run_sweep(spec).unwrap());
+    println!(
+        "{name}: {} points, grid {}, {:.0} ms wall per sweep",
+        a.records.len(),
+        a.grid_fingerprint,
+        t.secs.mean * 1e3
+    );
+    for r in &a.records {
+        let assignment: Vec<String> = r.axes.iter().map(|(k, v)| format!("{k}={v}")).collect();
+        println!(
+            "  #{:<3} {:<32} makespan {:>9.1} s{}",
+            r.index,
+            assignment.join(","),
+            r.makespan_secs,
+            r.speedup.map(|s| format!("  speedup {s:.2}x")).unwrap_or_default()
+        );
+    }
+    let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+    for r in &a.records {
+        lo = lo.min(r.makespan_secs);
+        hi = hi.max(r.makespan_secs);
+    }
+    json.int(&format!("{name}_points"), a.records.len() as u64)
+        .text(&format!("{name}_grid_fingerprint"), &a.grid_fingerprint)
+        .num(&format!("{name}_min_makespan_secs"), lo)
+        .num(&format!("{name}_max_makespan_secs"), hi)
+        .raw(&format!("{name}_records"), &a.records_json());
+    (a, hash)
+}
+
+fn main() {
+    let mut json = BenchJson::new("sweep");
+    json.text("bench", "sweep");
+
+    // ---- Fig 5-6 strong-scaling grid: point-count + monotonicity ----
+    let fig5_spec = SweepSpec::fig5_scaling();
+    let (fig5, h_fig5) = run_preset("fig5_scaling", &fig5_spec, &mut json);
+    assert_eq!(fig5.records.len(), 6, "fig5 grid is 3 node counts x 2 total sizes");
+    // At a fixed total size the per-node share shrinks as nodes grow:
+    // makespans must be monotone non-increasing along the nodes axis
+    // (the acceptance criterion for the Fig 5-6 reproduction).
+    let sizes: Vec<String> = fig5
+        .records
+        .iter()
+        .map(|r| r.axes[1].1.clone())
+        .collect::<std::collections::BTreeSet<_>>()
+        .into_iter()
+        .collect();
+    for size in &sizes {
+        let curve: Vec<(usize, f64)> = fig5
+            .records
+            .iter()
+            .filter(|r| &r.axes[1].1 == size)
+            .map(|r| (r.nodes, r.makespan_secs))
+            .collect();
+        for w in curve.windows(2) {
+            assert!(
+                w[0].0 < w[1].0,
+                "fig5 records must arrive in grid order ({:?})",
+                curve
+            );
+            assert!(
+                w[1].1 <= w[0].1 * (1.0 + 1e-9),
+                "fig5 {size}: makespan must not grow with nodes — \
+                 {} nodes {:.1} s vs {} nodes {:.1} s",
+                w[0].0,
+                w[0].1,
+                w[1].0,
+                w[1].1
+            );
+        }
+    }
+
+    // ---- Sphere-over-Hadoop WAN speedup surface ----
+    let wan_spec = SweepSpec::speedup_wan();
+    let (wan, h_wan) = run_preset("speedup_wan", &wan_spec, &mut json);
+    assert_eq!(wan.records.len(), 12, "wan grid is 3 node counts x 4 WAN capacities");
+    let (mut s_lo, mut s_hi) = (f64::INFINITY, f64::NEG_INFINITY);
+    for r in &wan.records {
+        let s = r.speedup.expect("every surface point ran both engines");
+        assert!(
+            s > 1.0,
+            "the paper's headline must hold at every grid point — Sphere beats \
+             Hadoop (point #{} got {s:.2}x)",
+            r.index
+        );
+        s_lo = s_lo.min(s);
+        s_hi = s_hi.max(s);
+    }
+    json.num("speedup_wan_min_speedup", s_lo).num("speedup_wan_max_speedup", s_hi);
+
+    let hash = format!("{:016x}-{:016x}", h_fig5, h_wan);
+    json.text("determinism_hash", &hash);
+
+    // ---- regression gate against the committed baseline ----
+    // Read the committed file BEFORE overwriting it, and write the new
+    // numbers BEFORE any drift panic — the CI artifact must carry the
+    // new values even when the gate trips.
+    let committed = std::fs::read_to_string(baseline_path());
+    match json.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("BENCH_sweep.json not written: {e}"),
+    }
+    let update = std::env::var("BENCH_SWEEP_UPDATE").is_ok();
+    match committed {
+        Ok(committed) => {
+            let base_hash = field(&committed, "determinism_hash").unwrap_or(UNSET);
+            if base_hash == UNSET {
+                println!(
+                    "baseline is a bootstrap placeholder: commit the rewritten \
+                     BENCH_sweep.json to arm the drift gate \
+                     (README 'Calibration & baselines')"
+                );
+            } else if update {
+                println!("BENCH_SWEEP_UPDATE set: accepting new baseline {hash}");
+            } else {
+                let mut drift = Vec::new();
+                if base_hash != hash {
+                    drift.push(format!("determinism hash {base_hash} -> {hash}"));
+                }
+                for key in ["fig5_scaling_points", "speedup_wan_points"] {
+                    let old = field(&committed, key).unwrap_or("?");
+                    let new_json = json.render();
+                    let new = field(&new_json, key).unwrap_or("?");
+                    if old != new {
+                        drift.push(format!("{key} {old} -> {new}"));
+                    }
+                }
+                if !drift.is_empty() {
+                    for d in &drift {
+                        eprintln!("DRIFT: {d}");
+                    }
+                    panic!(
+                        "bench_sweep drifted from the committed baseline — if \
+                         intentional, rerun with BENCH_SWEEP_UPDATE=1 and commit \
+                         the rewritten BENCH_sweep.json"
+                    );
+                }
+                println!("baseline check: point counts and determinism hash match");
+            }
+        }
+        Err(_) => println!("no committed baseline found; wrote a fresh one"),
+    }
+}

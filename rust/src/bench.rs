@@ -105,6 +105,15 @@ impl BenchJson {
         self
     }
 
+    /// Embed a pre-rendered JSON value (array or object) under `key` —
+    /// how `bench_sweep` folds the SweepReport's per-point record array
+    /// into the flat trajectory file without a serde dependency.  The
+    /// caller owns the validity of `rendered_json`.
+    pub fn raw(&mut self, key: &str, rendered_json: &str) -> &mut Self {
+        self.fields.push((key.to_string(), rendered_json.to_string()));
+        self
+    }
+
     pub fn render(&self) -> String {
         let body: Vec<String> = self
             .fields
@@ -274,6 +283,17 @@ mod tests {
             j.render(),
             "{\"events\": 42, \"wall_ms\": 1.5, \"bad\": null, \
              \"name\": \"scale\\\"128\\\"\"}\n"
+        );
+    }
+
+    #[test]
+    fn bench_json_embeds_raw_values() {
+        let mut j = BenchJson::new("unit");
+        j.int("points", 2)
+            .raw("records", "[{\"index\": 0}, {\"index\": 1}]");
+        assert_eq!(
+            j.render(),
+            "{\"points\": 2, \"records\": [{\"index\": 0}, {\"index\": 1}]}\n"
         );
     }
 

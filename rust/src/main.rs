@@ -20,6 +20,7 @@ const SUBCOMMANDS: &[(&str, &str)] = &[
     ("scenario", "run a TOML-described scenario (topology+workload+faults)"),
     ("traffic", "serve multi-tenant client traffic (SLO report)"),
     ("compare", "run the same job through Sphere AND Hadoop (head-to-head)"),
+    ("sweep", "expand a [sweep] grid and run every point (SweepReport JSON)"),
     ("quickstart", "upload files and run a grep UDF"),
 ];
 
@@ -32,12 +33,14 @@ fn flag_spec() -> Vec<FlagSpec> {
         FlagSpec { name: "windows", help: "angle time windows", takes_value: true },
         FlagSpec { name: "seed", help: "deterministic seed", takes_value: true },
         FlagSpec { name: "file", help: "scenario TOML (see config/scenarios/)", takes_value: true },
-        FlagSpec { name: "preset", help: "scenario preset: paper_wan6|paper_lan8|scale128|traffic_scale128|traffic_elastic512|colocate_scale128|compare_wan4|compare_scale128|angle_wan4|angle_scale128", takes_value: true },
+        FlagSpec { name: "preset", help: "scenario preset: paper_wan6|paper_lan8|scale128|traffic_scale128|traffic_elastic512|colocate_scale128|compare_wan4|compare_scale128|angle_wan4|angle_scale128; sweep: sweep_fig5_scaling|sweep_speedup_wan", takes_value: true },
         FlagSpec { name: "requests", help: "traffic: total requests to drive", takes_value: true },
         FlagSpec { name: "clients", help: "traffic: simulated client population", takes_value: true },
         FlagSpec { name: "rps", help: "traffic: open-loop arrival rate", takes_value: true },
         FlagSpec { name: "metrics", help: "traffic: also print the metrics registry", takes_value: false },
         FlagSpec { name: "trace", help: "write trace artifacts (Chrome JSON + JSONL) to this path", takes_value: true },
+        FlagSpec { name: "out", help: "sweep: SweepReport JSON path (default <sweep-name>.json)", takes_value: true },
+        FlagSpec { name: "workers", help: "sweep: worker threads for the point fan-out", takes_value: true },
         FlagSpec { name: "disk", help: "back slaves with real files", takes_value: false },
         FlagSpec { name: "pjrt", help: "load AOT artifacts (needs `make artifacts`)", takes_value: false },
         FlagSpec { name: "help", help: "show usage", takes_value: false },
@@ -65,6 +68,7 @@ fn main() {
         "scenario" => cmd_scenario(&args),
         "traffic" => cmd_traffic(&args),
         "compare" => cmd_compare(&args),
+        "sweep" => cmd_sweep(&args),
         "quickstart" => cmd_quickstart(&args),
         other => Err(format!("unknown command {other:?}")),
     };
@@ -479,6 +483,70 @@ fn cmd_compare(args: &Args) -> Result<(), String> {
     let r = run_scenario(&spec)?;
     print_scenario_report(&r);
     print_trace_paths(&spec);
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<(), String> {
+    use sector_sphere::scenario::{run_sweep, SweepSpec};
+    let mut spec = match args.get("file") {
+        Some(path) => {
+            let text =
+                std::fs::read_to_string(path).map_err(|e| format!("read sweep {path}: {e}"))?;
+            SweepSpec::from_toml(&text)?
+        }
+        None => match args.str_or("preset", "sweep_fig5_scaling") {
+            "sweep_fig5_scaling" => SweepSpec::fig5_scaling(),
+            "sweep_speedup_wan" => SweepSpec::speedup_wan(),
+            other => {
+                return Err(format!(
+                    "unknown sweep preset {other:?} \
+                     (sweep_fig5_scaling|sweep_speedup_wan) — or pass --file"
+                ))
+            }
+        },
+    };
+    if let Some(v) = args.get("workers") {
+        spec.workers = v
+            .parse::<usize>()
+            .ok()
+            .filter(|w| *w >= 1)
+            .ok_or_else(|| format!("--workers expects a positive integer, got {v:?}"))?;
+    }
+    let r = run_sweep(&spec)?;
+    let axes: Vec<String> = r.axes.iter().map(|(k, v)| format!("{k}[{}]", v.len())).collect();
+    println!(
+        "sweep {}: {} points over {} ({} workers)",
+        r.name,
+        r.records.len(),
+        axes.join(" x "),
+        r.workers
+    );
+    for rec in &r.records {
+        let assignment: Vec<String> =
+            rec.axes.iter().map(|(k, v)| format!("{k}={v}")).collect();
+        let mut extras = String::new();
+        if let Some(s) = rec.speedup {
+            extras.push_str(&format!("  speedup {s:.2}x"));
+        }
+        if let Some(rc) = rec.recall {
+            extras.push_str(&format!("  recall {rc:.2}"));
+        }
+        if let Some(p99) = rec.worst_p99_ms {
+            extras.push_str(&format!("  worst p99 {p99:.1} ms"));
+        }
+        println!(
+            "  #{:<3} {:<44} makespan {:>10}{extras}  [{}]",
+            rec.index,
+            assignment.join(","),
+            fmt_duration_secs(rec.makespan_secs),
+            rec.fingerprint
+        );
+    }
+    println!("  grid fingerprint {}", r.grid_fingerprint);
+    let default_out = format!("{}.json", r.name);
+    let out = args.str_or("out", &default_out);
+    r.write(out).map_err(|e| format!("write {out}: {e}"))?;
+    println!("  report           {out}");
     Ok(())
 }
 

@@ -37,12 +37,14 @@ pub mod colocate;
 pub mod compare;
 pub(crate) mod core;
 pub mod engine;
+pub mod sweep;
 pub mod trace;
 
 pub use angle::AngleReport;
 pub use colocate::{ColocationReport, TenantSloDelta};
 pub use compare::{ComparisonReport, SystemOutcome};
 pub use engine::{run_scenario, ScenarioReport, TierBytes};
+pub use sweep::{run_sweep, Axis, PointRecord, SweepPoint, SweepReport, SweepSpec};
 pub use trace::{TraceRecorder, TraceSpec};
 
 use crate::config::{SimConfig, Table};
@@ -444,6 +446,20 @@ impl ScenarioSpec {
     }
 
     pub fn from_table(t: &Table) -> Result<ScenarioSpec, String> {
+        if t.section_keys("sweep").next().is_some() {
+            return Err(
+                "[sweep]: this document describes a parameter sweep — run it \
+                 through the `sweep` subcommand (or scenario::SweepSpec)"
+                    .into(),
+            );
+        }
+        Self::from_table_base(t)
+    }
+
+    /// The body of [`ScenarioSpec::from_table`] without the `[sweep]`
+    /// rejection — how [`sweep::SweepSpec`] parses the base scenario
+    /// out of a sweep document.
+    pub(crate) fn from_table_base(t: &Table) -> Result<ScenarioSpec, String> {
         let topology = TopologySpec::from_table(t)?;
         let cfg = SimConfig::profile(t.str_or("hardware.profile", "lan"))?.apply_table(t)?;
         let kind = WorkloadKind::parse(t.str_or("workload.kind", "terasort"))?;

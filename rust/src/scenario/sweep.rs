@@ -1,0 +1,1133 @@
+//! Deterministic parameter-sweep orchestration (DESIGN.md §17).
+//!
+//! The paper's headline results are curves and surfaces, not points:
+//! Figs 5–6 scale node count and data size, and Table 1's
+//! Sphere-vs-Hadoop comparison moves with WAN capacity.  A [`SweepSpec`]
+//! takes a base scenario plus a grid of axes (the `[sweep]` TOML
+//! block), expands the cartesian product into a deterministic shard
+//! plan — every point carries a config fingerprint and a fixed worker
+//! shard — fans the points out across worker threads (each point runs
+//! the existing batch/traffic/compare/angle engine on its own
+//! substrate), and aggregates one machine-readable [`SweepReport`].
+//!
+//! Determinism contract: the report is assembled in grid order, never
+//! completion order, so the same grid always renders byte-identical
+//! JSON regardless of thread scheduling.  Axes expand row-major with
+//! the *last* axis fastest, in the canonical axis order `nodes`,
+//! `wan_gbps`, `bytes_per_node`, `total_bytes`, `fault_intensity`,
+//! `tenant_mix`, `replication_policy`, `replication_max` — the order
+//! the axes are applied to the base spec (so `total_bytes` divides by
+//! the already-rescaled node count).
+//!
+//! ```
+//! use sector_sphere::scenario::sweep::SweepSpec;
+//!
+//! let spec = SweepSpec::from_toml(
+//!     r#"
+//!     name = "minimal-grid"
+//!     [topology]
+//!     sites = 2
+//!     racks_per_site = 1
+//!     nodes_per_rack = 4
+//!     [workload]
+//!     kind = "terasort"
+//!     bytes_per_node = "1GB"
+//!     [sweep]
+//!     nodes = [4, 8]
+//!     total_bytes = ["8GB"]
+//!     "#,
+//! )
+//! .unwrap();
+//! assert_eq!(spec.points(), 2);
+//! assert_eq!(spec.plan().unwrap()[1].axes[0], ("nodes", "8".to_string()));
+//! ```
+
+use crate::config::{Table, Value};
+use crate::routing::hash_name;
+use crate::service::ScalerPolicy;
+use crate::util::bytes::parse_bytes;
+
+use super::{run_scenario, FaultSpec, ScenarioReport, ScenarioSpec};
+
+/// Hard cap on the grid's point count: past this a "sweep" is really a
+/// batch queue and should be split (also the guard that makes an
+/// accidentally huge product an explicit error, not an hour of CI).
+pub const MAX_POINTS: usize = 4096;
+
+/// Worker threads used when the `[sweep]` block does not set
+/// `workers`.  A fixed constant — NOT the machine's core count — so the
+/// shard ids in the report are machine-independent.
+pub const DEFAULT_WORKERS: usize = 4;
+
+const GBPS: f64 = 1.0e9 / 8.0;
+
+/// A byte quantity that remembers its spelling ("32GB"), so axis
+/// labels in the report read like the TOML that produced them.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ByteSize {
+    pub bytes: f64,
+    pub label: String,
+}
+
+impl ByteSize {
+    pub fn parse(label: &str) -> Result<ByteSize, String> {
+        Ok(ByteSize {
+            bytes: parse_bytes(label)? as f64,
+            label: label.to_string(),
+        })
+    }
+}
+
+/// One swept parameter: which knob of the base scenario varies, and
+/// the values it takes.  Enum order IS the canonical application and
+/// expansion order.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Axis {
+    /// Total node count; the base topology rescales uniformly (every
+    /// rack gets `n / racks` nodes), so each value must divide evenly.
+    Nodes(Vec<usize>),
+    /// WAN uplink capacity in Gbit/s (`topology.wan_bps` override).
+    WanGbps(Vec<f64>),
+    /// Per-node workload size — total data grows with the node count.
+    BytesPerNode(Vec<ByteSize>),
+    /// Fixed total workload size — per-node data is `total / nodes`,
+    /// the Fig 5–6 strong-scaling shape.  Mutually exclusive with
+    /// [`Axis::BytesPerNode`].
+    TotalBytes(Vec<ByteSize>),
+    /// Fault-plan severity: `0` drops every fault; `k > 0` keeps
+    /// crashes and raises straggler/degrade factors to the power `k`
+    /// (factors live in `(0, 1]`, so larger `k` means slower).
+    FaultIntensity(Vec<f64>),
+    /// Tenant weight mix as colon-separated weights ("70:25:5"),
+    /// applied positionally to the base `[traffic]` tenants.
+    TenantMix(Vec<String>),
+    /// Replica-scaler policy (`static` | `watermark`).
+    ReplicationPolicy(Vec<ScalerPolicy>),
+    /// Replica-count ceiling (`replication.max_replicas`).
+    ReplicationMax(Vec<u32>),
+}
+
+impl Axis {
+    /// The `[sweep]` key this axis parses from (also its report label).
+    pub fn key(&self) -> &'static str {
+        match self {
+            Axis::Nodes(_) => "nodes",
+            Axis::WanGbps(_) => "wan_gbps",
+            Axis::BytesPerNode(_) => "bytes_per_node",
+            Axis::TotalBytes(_) => "total_bytes",
+            Axis::FaultIntensity(_) => "fault_intensity",
+            Axis::TenantMix(_) => "tenant_mix",
+            Axis::ReplicationPolicy(_) => "replication_policy",
+            Axis::ReplicationMax(_) => "replication_max",
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Axis::Nodes(v) => v.len(),
+            Axis::WanGbps(v) => v.len(),
+            Axis::BytesPerNode(v) | Axis::TotalBytes(v) => v.len(),
+            Axis::FaultIntensity(v) => v.len(),
+            Axis::TenantMix(v) => v.len(),
+            Axis::ReplicationPolicy(v) => v.len(),
+            Axis::ReplicationMax(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Human/JSON label of value `i` (the TOML spelling where one
+    /// exists — "32GB", not "34359738368").
+    pub fn label(&self, i: usize) -> String {
+        match self {
+            Axis::Nodes(v) => v[i].to_string(),
+            Axis::WanGbps(v) => format!("{}", v[i]),
+            Axis::BytesPerNode(v) | Axis::TotalBytes(v) => v[i].label.clone(),
+            Axis::FaultIntensity(v) => format!("{}", v[i]),
+            Axis::TenantMix(v) => v[i].clone(),
+            Axis::ReplicationPolicy(v) => v[i].name().to_string(),
+            Axis::ReplicationMax(v) => v[i].to_string(),
+        }
+    }
+
+    /// All value labels, in grid order.
+    pub fn labels(&self) -> Vec<String> {
+        (0..self.len()).map(|i| self.label(i)).collect()
+    }
+
+    /// Mutate `spec` to value `i` of this axis.
+    fn apply(&self, i: usize, spec: &mut ScenarioSpec) -> Result<(), String> {
+        match self {
+            Axis::Nodes(v) => {
+                let n = v[i];
+                let racks: usize = spec.topology.sites.iter().map(|s| s.racks).sum();
+                if racks == 0 || n % racks != 0 {
+                    return Err(format!(
+                        "sweep.nodes: {n} nodes does not divide evenly over the \
+                         base topology's {racks} racks"
+                    ));
+                }
+                let per_rack = n / racks;
+                for site in &mut spec.topology.sites {
+                    site.nodes_per_rack = per_rack;
+                }
+            }
+            Axis::WanGbps(v) => spec.topology.wan_bps = v[i] * GBPS,
+            Axis::BytesPerNode(v) => {
+                workload_mut(spec, "sweep.bytes_per_node")?.bytes_per_node = v[i].bytes;
+            }
+            Axis::TotalBytes(v) => {
+                // Canonical order applies `nodes` first, so this sees
+                // the point's final node count.
+                let nodes = spec.topology.nodes().max(1) as f64;
+                workload_mut(spec, "sweep.total_bytes")?.bytes_per_node = v[i].bytes / nodes;
+            }
+            Axis::FaultIntensity(v) => {
+                let k = v[i];
+                if k == 0.0 {
+                    spec.faults.clear();
+                } else {
+                    for f in &mut spec.faults {
+                        match f {
+                            FaultSpec::Straggler { factor, .. }
+                            | FaultSpec::LinkDegrade { factor, .. } => {
+                                *factor = factor.powf(k).clamp(1e-6, 1.0);
+                            }
+                            FaultSpec::SlaveCrash { .. } => {}
+                        }
+                    }
+                }
+            }
+            Axis::TenantMix(v) => {
+                let weights = parse_mix(&v[i])?;
+                let traffic = spec
+                    .traffic
+                    .as_mut()
+                    .ok_or("sweep.tenant_mix: the base scenario has no [traffic] block")?;
+                if weights.len() != traffic.tenants.len() {
+                    return Err(format!(
+                        "sweep.tenant_mix: mix {:?} has {} weights but the base \
+                         scenario declares {} tenants",
+                        v[i],
+                        weights.len(),
+                        traffic.tenants.len()
+                    ));
+                }
+                for (tenant, w) in traffic.tenants.iter_mut().zip(&weights) {
+                    tenant.weight = *w;
+                }
+            }
+            Axis::ReplicationPolicy(v) => {
+                replication_mut(spec, "sweep.replication_policy")?.policy = v[i];
+            }
+            Axis::ReplicationMax(v) => {
+                replication_mut(spec, "sweep.replication_max")?.max_replicas = v[i];
+            }
+        }
+        Ok(())
+    }
+}
+
+fn workload_mut<'a>(
+    spec: &'a mut ScenarioSpec,
+    key: &str,
+) -> Result<&'a mut super::WorkloadSpec, String> {
+    spec.workload
+        .as_mut()
+        .ok_or_else(|| format!("{key}: the base scenario has no [workload] block"))
+}
+
+fn replication_mut<'a>(
+    spec: &'a mut ScenarioSpec,
+    key: &str,
+) -> Result<&'a mut crate::service::ReplicationSpec, String> {
+    spec.replication
+        .as_mut()
+        .ok_or_else(|| format!("{key}: the base scenario has no [replication] block"))
+}
+
+/// Parse a "70:25:5"-style tenant weight mix.
+fn parse_mix(s: &str) -> Result<Vec<f64>, String> {
+    let mut out = Vec::new();
+    for part in s.split(':') {
+        let w: f64 = part.trim().parse().map_err(|_| {
+            format!(
+                "sweep.tenant_mix: {s:?} is not a colon-separated weight list \
+                 (e.g. \"70:25:5\")"
+            )
+        })?;
+        if !(w.is_finite() && w > 0.0) {
+            return Err(format!("sweep.tenant_mix: weight {part:?} in {s:?} must be > 0"));
+        }
+        out.push(w);
+    }
+    Ok(out)
+}
+
+/// A base scenario plus the grid of axes swept over it (the `[sweep]`
+/// TOML block).
+#[derive(Clone, Debug)]
+pub struct SweepSpec {
+    /// Sweep name (`sweep.name`, defaulting to the base scenario's).
+    pub name: String,
+    /// The scenario every point derives from.  Its own `[trace]` block
+    /// is ignored per point — hundreds of runs must not race on one
+    /// artifact path (digests are still computed).
+    pub base: ScenarioSpec,
+    /// Worker threads for the fan-out.  Part of the spec (not probed
+    /// from the machine) so the report's shard ids are reproducible.
+    pub workers: usize,
+    /// Axes in canonical order; the cartesian product is the grid.
+    pub axes: Vec<Axis>,
+}
+
+/// One expanded grid point of the shard plan.
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    /// Row-major grid index (last axis fastest).
+    pub index: usize,
+    /// Worker shard this point runs on (`index % workers`).
+    pub shard: usize,
+    /// `(axis key, value label)` assignment, in canonical axis order.
+    pub axes: Vec<(&'static str, String)>,
+    /// FNV-1a over the fully materialized spec — the config
+    /// fingerprint that names this point across runs and machines.
+    pub fingerprint: String,
+    /// The derived, validated scenario this point runs.
+    pub spec: ScenarioSpec,
+}
+
+impl SweepSpec {
+    /// Parse a sweep document: a normal scenario TOML plus a `[sweep]`
+    /// block with at least one axis.  Validates the whole grid (every
+    /// derived point included) before returning.
+    pub fn from_toml(text: &str) -> Result<SweepSpec, String> {
+        let t = Table::parse(text).map_err(|e| e.to_string())?;
+        Self::from_table(&t)
+    }
+
+    pub fn from_table(t: &Table) -> Result<SweepSpec, String> {
+        if t.section_keys("sweep").next().is_none() {
+            return Err(
+                "[sweep]: missing — a sweep document needs at least one axis \
+                 (nodes, wan_gbps, bytes_per_node, total_bytes, fault_intensity, \
+                 tenant_mix, replication_policy, replication_max)"
+                    .into(),
+            );
+        }
+        t.check_known_keys(
+            "sweep",
+            &[
+                "name",
+                "workers",
+                "nodes",
+                "wan_gbps",
+                "bytes_per_node",
+                "total_bytes",
+                "fault_intensity",
+                "tenant_mix",
+                "replication_policy",
+                "replication_max",
+            ],
+            &[],
+        )?;
+        let base = ScenarioSpec::from_table_base(t)?;
+        let workers = t.int_or("sweep.workers", DEFAULT_WORKERS as i64);
+        if workers < 1 {
+            return Err(format!("sweep.workers: must be >= 1, got {workers}"));
+        }
+        let mut axes = Vec::new();
+        if let Some(vals) = axis_array(t, "nodes")? {
+            let mut out = Vec::new();
+            for v in vals {
+                match v.as_int() {
+                    Some(n) if n > 0 => out.push(n as usize),
+                    _ => return Err("sweep.nodes: values must be positive integers".into()),
+                }
+            }
+            axes.push(Axis::Nodes(out));
+        }
+        if let Some(vals) = axis_array(t, "wan_gbps")? {
+            axes.push(Axis::WanGbps(positive_floats(vals, "sweep.wan_gbps")?));
+        }
+        for (key, total) in [("bytes_per_node", false), ("total_bytes", true)] {
+            if let Some(vals) = axis_array(t, key)? {
+                let mut out = Vec::new();
+                for v in vals {
+                    let label = v.as_str().ok_or_else(|| {
+                        format!("sweep.{key}: values must be byte-size strings (e.g. \"32GB\")")
+                    })?;
+                    out.push(ByteSize::parse(label).map_err(|e| format!("sweep.{key}: {e}"))?);
+                }
+                axes.push(if total {
+                    Axis::TotalBytes(out)
+                } else {
+                    Axis::BytesPerNode(out)
+                });
+            }
+        }
+        if let Some(vals) = axis_array(t, "fault_intensity")? {
+            let mut out = Vec::new();
+            for v in vals {
+                match v.as_float() {
+                    Some(k) if k.is_finite() && k >= 0.0 => out.push(k),
+                    _ => {
+                        return Err(
+                            "sweep.fault_intensity: values must be numbers >= 0 \
+                             (0 disables the fault plan)"
+                                .into(),
+                        )
+                    }
+                }
+            }
+            axes.push(Axis::FaultIntensity(out));
+        }
+        if let Some(vals) = axis_array(t, "tenant_mix")? {
+            let mut out = Vec::new();
+            for v in vals {
+                let mix = v
+                    .as_str()
+                    .ok_or("sweep.tenant_mix: values must be strings like \"70:25:5\"")?;
+                parse_mix(mix)?; // fail at parse time, not per point
+                out.push(mix.to_string());
+            }
+            axes.push(Axis::TenantMix(out));
+        }
+        if let Some(vals) = axis_array(t, "replication_policy")? {
+            let mut out = Vec::new();
+            for v in vals {
+                out.push(match v.as_str() {
+                    Some("static") => ScalerPolicy::Static,
+                    Some("watermark") => ScalerPolicy::Watermark,
+                    other => {
+                        return Err(format!(
+                            "sweep.replication_policy: unknown policy {other:?} \
+                             (static|watermark)"
+                        ))
+                    }
+                });
+            }
+            axes.push(Axis::ReplicationPolicy(out));
+        }
+        if let Some(vals) = axis_array(t, "replication_max")? {
+            let mut out = Vec::new();
+            for v in vals {
+                match v.as_int() {
+                    Some(n) if n >= 1 => out.push(n as u32),
+                    _ => {
+                        return Err("sweep.replication_max: values must be integers >= 1".into())
+                    }
+                }
+            }
+            axes.push(Axis::ReplicationMax(out));
+        }
+        let spec = SweepSpec {
+            name: t.str_or("sweep.name", &base.name).to_string(),
+            base,
+            workers: workers as usize,
+            axes,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Grid size (product of axis lengths; saturating).
+    pub fn points(&self) -> usize {
+        self.axes.iter().map(Axis::len).fold(1usize, |a, b| a.saturating_mul(b))
+    }
+
+    fn effective_workers(&self, total: usize) -> usize {
+        self.workers.max(1).min(total.max(1))
+    }
+
+    /// Structural grid checks — every error names the offending
+    /// `sweep.<key>`.  Returns the point count.
+    fn validate_grid(&self) -> Result<usize, String> {
+        if self.workers == 0 {
+            return Err("sweep.workers: must be >= 1".into());
+        }
+        if self.axes.is_empty() {
+            return Err(
+                "[sweep]: declares no axes (nodes, wan_gbps, bytes_per_node, \
+                 total_bytes, fault_intensity, tenant_mix, replication_policy, \
+                 replication_max)"
+                    .into(),
+            );
+        }
+        let mut total: usize = 1;
+        for (i, axis) in self.axes.iter().enumerate() {
+            let key = axis.key();
+            if self.axes[..i].iter().any(|a| a.key() == key) {
+                return Err(format!("sweep.{key}: duplicate axis"));
+            }
+            if axis.is_empty() {
+                return Err(format!("sweep.{key}: axis is empty"));
+            }
+            let labels = axis.labels();
+            for (j, label) in labels.iter().enumerate() {
+                if labels[..j].contains(label) {
+                    return Err(format!("sweep.{key}: duplicate value {label}"));
+                }
+            }
+            total = total
+                .checked_mul(axis.len())
+                .ok_or_else(|| "sweep: the grid's point count overflows".to_string())?;
+        }
+        if total > MAX_POINTS {
+            return Err(format!(
+                "sweep: {total} points exceeds the {MAX_POINTS}-point cap (split the grid)"
+            ));
+        }
+        let has = |k: &str| self.axes.iter().any(|a| a.key() == k);
+        if has("bytes_per_node") && has("total_bytes") {
+            return Err(
+                "sweep.bytes_per_node and sweep.total_bytes are mutually exclusive \
+                 (per-node vs fixed-total sizing)"
+                    .into(),
+            );
+        }
+        if (has("bytes_per_node") || has("total_bytes")) && self.base.workload.is_none() {
+            return Err(
+                "sweep.bytes_per_node/total_bytes: the base scenario has no [workload] block"
+                    .into(),
+            );
+        }
+        if has("tenant_mix") && self.base.traffic.is_none() {
+            return Err("sweep.tenant_mix: the base scenario has no [traffic] block".into());
+        }
+        if (has("replication_policy") || has("replication_max")) && self.base.replication.is_none()
+        {
+            return Err(
+                "sweep.replication_policy/replication_max: the base scenario has no \
+                 [replication] block"
+                    .into(),
+            );
+        }
+        Ok(total)
+    }
+
+    /// Validate the grid AND every derived point (each materialized
+    /// spec must pass [`ScenarioSpec::validate`]).
+    pub fn validate(&self) -> Result<(), String> {
+        self.plan().map(|_| ())
+    }
+
+    /// Expand the grid into the deterministic shard plan: every point
+    /// gets its derived spec, its `(axis, value)` assignment, its
+    /// config fingerprint and its worker shard.  Pure function of the
+    /// spec — no clocks, no machine probes.
+    pub fn plan(&self) -> Result<Vec<SweepPoint>, String> {
+        let total = self.validate_grid()?;
+        let workers = self.effective_workers(total);
+        let mut points = Vec::with_capacity(total);
+        for index in 0..total {
+            let mut spec = self.base.clone();
+            // Points never write trace artifacts (they would race on
+            // one path); the timeline digest is still computed and
+            // becomes the point's determinism hash.
+            spec.trace = None;
+            let mut axes = Vec::with_capacity(self.axes.len());
+            let mut rem = index;
+            let mut stride = total;
+            for axis in &self.axes {
+                stride /= axis.len();
+                let vi = rem / stride;
+                rem %= stride;
+                axis.apply(vi, &mut spec)
+                    .map_err(|e| format!("sweep point #{index}: {e}"))?;
+                axes.push((axis.key(), axis.label(vi)));
+            }
+            let label: Vec<String> = axes.iter().map(|(k, v)| format!("{k}={v}")).collect();
+            let label = label.join(",");
+            spec.name = format!("{}/{label}", self.name);
+            spec.validate()
+                .map_err(|e| format!("sweep point #{index} ({label}): {e}"))?;
+            let fingerprint = format!("{:016x}", hash_name(&format!("{spec:?}")));
+            points.push(SweepPoint {
+                index,
+                shard: index % workers,
+                axes,
+                fingerprint,
+                spec,
+            });
+        }
+        Ok(points)
+    }
+
+    // ---------------------------------------------------- presets
+
+    /// Fig 5–6-style strong-scaling curve: the scale-out Terasort
+    /// topology (4 sites x 4 racks) swept over node count at two fixed
+    /// TOTAL data sizes, fault-free.  Per-node data is `total / nodes`,
+    /// so makespans must fall (or hold) as nodes grow — the acceptance
+    /// gate `benches/bench_sweep.rs` enforces monotonicity per size.
+    /// Mirrors config/scenarios/sweep_fig5_scaling.toml.
+    pub fn fig5_scaling() -> SweepSpec {
+        let mut base = ScenarioSpec::scale128();
+        base.name = "sweep-fig5-scaling".into();
+        // The paper's scaling figures are fault-free runs; the scale128
+        // fault plan would also pin node ids past the smallest point.
+        base.faults.clear();
+        SweepSpec {
+            name: "sweep-fig5-scaling".into(),
+            base,
+            workers: DEFAULT_WORKERS,
+            axes: vec![
+                Axis::Nodes(vec![32, 64, 128]),
+                Axis::TotalBytes(vec![
+                    ByteSize::parse("32GB").expect("static byte size"),
+                    ByteSize::parse("64GB").expect("static byte size"),
+                ]),
+            ],
+        }
+    }
+
+    /// Sphere-over-Hadoop speedup surface: the §7 head-to-head swept
+    /// over WAN capacity and node count on a two-site wide-area
+    /// testbed.  Each point runs BOTH engines; `records[].speedup`
+    /// is the surface.  Mirrors config/scenarios/sweep_speedup_wan.toml.
+    pub fn speedup_wan() -> SweepSpec {
+        use super::{CompareSpec, WorkloadKind, WorkloadSpec};
+        use crate::config::SimConfig;
+        use crate::topology::TopologySpec;
+        let base = ScenarioSpec {
+            name: "sweep-speedup-wan".into(),
+            topology: TopologySpec::scale_out(2, 2, 4),
+            cfg: SimConfig::wan_default(),
+            workload: Some(WorkloadSpec {
+                kind: WorkloadKind::Terasort,
+                bytes_per_node: 2.0 * crate::util::bytes::GB as f64,
+                iterations: 10,
+            }),
+            faults: Vec::new(),
+            traffic: None,
+            replication: None,
+            colocation: super::ColocationSpec::default(),
+            compare: Some(CompareSpec::default()),
+            angle: None,
+            trace: None,
+        };
+        SweepSpec {
+            name: "sweep-speedup-wan".into(),
+            base,
+            workers: DEFAULT_WORKERS,
+            axes: vec![
+                Axis::Nodes(vec![8, 16, 32]),
+                Axis::WanGbps(vec![1.0, 2.5, 5.0, 10.0]),
+            ],
+        }
+    }
+}
+
+fn axis_array<'a>(t: &'a Table, key: &str) -> Result<Option<&'a [Value]>, String> {
+    match t.get(&format!("sweep.{key}")) {
+        None => Ok(None),
+        Some(v) => match v.as_array() {
+            Some(a) => Ok(Some(a)),
+            None => Err(format!(
+                "sweep.{key}: expected an array of values (e.g. {key} = [...])"
+            )),
+        },
+    }
+}
+
+fn positive_floats(vals: &[Value], key: &str) -> Result<Vec<f64>, String> {
+    let mut out = Vec::new();
+    for v in vals {
+        match v.as_float() {
+            Some(f) if f.is_finite() && f > 0.0 => out.push(f),
+            _ => return Err(format!("{key}: values must be positive numbers")),
+        }
+    }
+    Ok(out)
+}
+
+/// One executed grid point's extracted metrics.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PointRecord {
+    pub index: usize,
+    pub shard: usize,
+    /// The derived scenario name (`<sweep>/<axis=value,...>`).
+    pub name: String,
+    /// `(axis key, value label)` assignment for this point.
+    pub axes: Vec<(&'static str, String)>,
+    /// FNV-1a config fingerprint of the materialized spec.
+    pub fingerprint: String,
+    /// FNV-1a digest of the run's full event timeline — the per-point
+    /// determinism hash (DESIGN.md §15).
+    pub determinism: String,
+    pub nodes: usize,
+    pub makespan_secs: f64,
+    pub events: u64,
+    pub segments: usize,
+    pub shuffle_gbytes: f64,
+    /// Hadoop/Sphere makespan ratio when the point ran `[compare]`.
+    pub speedup: Option<f64>,
+    /// Emergent-window recall when the point ran the Angle pipeline.
+    pub recall: Option<f64>,
+    /// Worst per-tenant p99 latency when the point served `[traffic]`.
+    pub worst_p99_ms: Option<f64>,
+    pub completed: Option<u64>,
+    pub rejected: Option<u64>,
+}
+
+impl PointRecord {
+    fn from_report(p: &SweepPoint, r: &ScenarioReport) -> PointRecord {
+        PointRecord {
+            index: p.index,
+            shard: p.shard,
+            name: r.name.clone(),
+            axes: p.axes.clone(),
+            fingerprint: p.fingerprint.clone(),
+            determinism: r.trace_digest.clone(),
+            nodes: r.nodes,
+            makespan_secs: r.makespan_secs,
+            events: r.events,
+            segments: r.segments,
+            shuffle_gbytes: r.shuffle_gbytes,
+            speedup: r.comparison.as_ref().map(|c| c.speedup),
+            recall: r.angle.as_ref().map(|a| a.recall),
+            worst_p99_ms: r
+                .traffic
+                .as_ref()
+                .map(|t| t.tenants.iter().map(|s| s.p99_ms).fold(0.0, f64::max)),
+            completed: r.traffic.as_ref().map(|t| t.completed),
+            rejected: r.traffic.as_ref().map(|t| t.rejected),
+        }
+    }
+
+    /// Single-line JSON object (stable key order, no wall clock).
+    pub fn to_json(&self) -> String {
+        let axes: Vec<String> = self
+            .axes
+            .iter()
+            .map(|(k, v)| format!("{}: {}", jstr(k), jstr(v)))
+            .collect();
+        format!(
+            "{{\"index\": {}, \"shard\": {}, \"name\": {}, \"axes\": {{{}}}, \
+             \"fingerprint\": {}, \"determinism\": {}, \"nodes\": {}, \
+             \"makespan_secs\": {}, \"events\": {}, \"segments\": {}, \
+             \"shuffle_gbytes\": {}, \"speedup\": {}, \"recall\": {}, \
+             \"worst_p99_ms\": {}, \"completed\": {}, \"rejected\": {}}}",
+            self.index,
+            self.shard,
+            jstr(&self.name),
+            axes.join(", "),
+            jstr(&self.fingerprint),
+            jstr(&self.determinism),
+            self.nodes,
+            jnum(self.makespan_secs),
+            self.events,
+            self.segments,
+            jnum(self.shuffle_gbytes),
+            jopt(self.speedup),
+            jopt(self.recall),
+            jopt(self.worst_p99_ms),
+            jopt_u64(self.completed),
+            jopt_u64(self.rejected),
+        )
+    }
+}
+
+/// The aggregated machine-readable result of one sweep run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SweepReport {
+    pub name: String,
+    pub base_scenario: String,
+    pub workers: usize,
+    /// `(axis key, value labels)` — the grid axes, canonical order.
+    pub axes: Vec<(&'static str, Vec<String>)>,
+    /// FNV-1a over every point fingerprint in grid order — one hash
+    /// naming the whole materialized grid.
+    pub grid_fingerprint: String,
+    /// Per-point records, always in grid order (never completion
+    /// order) — the byte-identical-JSON determinism contract.
+    pub records: Vec<PointRecord>,
+}
+
+impl SweepReport {
+    /// Render the full report as JSON.  Deterministic: same grid, same
+    /// bytes — no wall clock, no machine probes, records in grid order.
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("{\n");
+        s.push_str(&format!("  \"sweep\": {},\n", jstr(&self.name)));
+        s.push_str(&format!("  \"base_scenario\": {},\n", jstr(&self.base_scenario)));
+        s.push_str(&format!("  \"workers\": {},\n", self.workers));
+        s.push_str(&format!("  \"points\": {},\n", self.records.len()));
+        s.push_str(&format!("  \"grid_fingerprint\": {},\n", jstr(&self.grid_fingerprint)));
+        s.push_str("  \"axes\": [\n");
+        for (i, (key, values)) in self.axes.iter().enumerate() {
+            let vals: Vec<String> = values.iter().map(|v| jstr(v)).collect();
+            let comma = if i + 1 < self.axes.len() { "," } else { "" };
+            s.push_str(&format!(
+                "    {{\"key\": {}, \"values\": [{}]}}{comma}\n",
+                jstr(key),
+                vals.join(", ")
+            ));
+        }
+        s.push_str("  ],\n");
+        s.push_str("  \"records\": [\n");
+        for (i, rec) in self.records.iter().enumerate() {
+            let comma = if i + 1 < self.records.len() { "," } else { "" };
+            s.push_str(&format!("    {}{comma}\n", rec.to_json()));
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+
+    /// The records array alone, single-line — what `bench_sweep` folds
+    /// into the flat `BENCH_sweep.json` trajectory file.
+    pub fn records_json(&self) -> String {
+        let recs: Vec<String> = self.records.iter().map(PointRecord::to_json).collect();
+        format!("[{}]", recs.join(", "))
+    }
+
+    /// Write the JSON to `path`.
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())
+    }
+}
+
+fn jstr(s: &str) -> String {
+    format!("\"{}\"", s.replace('\\', "\\\\").replace('"', "\\\""))
+}
+
+fn jnum(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn jopt(v: Option<f64>) -> String {
+    match v {
+        Some(v) => jnum(v),
+        None => "null".to_string(),
+    }
+}
+
+fn jopt_u64(v: Option<u64>) -> String {
+    match v {
+        Some(v) => format!("{v}"),
+        None => "null".to_string(),
+    }
+}
+
+/// Expand the grid and run every point across the spec's worker
+/// threads.  Each worker owns the shard `index % workers` and runs its
+/// points in index order; results are slotted back by grid index, so
+/// the aggregated report (and its JSON) is independent of thread
+/// completion order.  The first failing point (by grid index) fails
+/// the sweep.
+pub fn run_sweep(spec: &SweepSpec) -> Result<SweepReport, String> {
+    let points = spec.plan()?;
+    let workers = spec.effective_workers(points.len());
+    let shard_results: Vec<Vec<Result<(usize, PointRecord), (usize, String)>>> =
+        std::thread::scope(|scope| {
+            let points = &points;
+            let handles: Vec<_> = (0..workers)
+                .map(|w| {
+                    scope.spawn(move || {
+                        points
+                            .iter()
+                            .skip(w)
+                            .step_by(workers)
+                            .map(|p| match run_scenario(&p.spec) {
+                                Ok(r) => Ok((p.index, PointRecord::from_report(p, &r))),
+                                Err(e) => Err((p.index, e)),
+                            })
+                            .collect()
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("sweep worker panicked"))
+                .collect()
+        });
+    let mut records: Vec<(usize, PointRecord)> = Vec::with_capacity(points.len());
+    let mut errors: Vec<(usize, String)> = Vec::new();
+    for shard in shard_results {
+        for result in shard {
+            match result {
+                Ok(r) => records.push(r),
+                Err(e) => errors.push(e),
+            }
+        }
+    }
+    if !errors.is_empty() {
+        errors.sort_by_key(|(i, _)| *i);
+        let (index, e) = &errors[0];
+        return Err(format!(
+            "sweep point #{index} failed: {e}{}",
+            if errors.len() > 1 {
+                format!(" (+{} more points failed)", errors.len() - 1)
+            } else {
+                String::new()
+            }
+        ));
+    }
+    records.sort_by_key(|(i, _)| *i);
+    let concat: String = points.iter().map(|p| p.fingerprint.as_str()).collect();
+    Ok(SweepReport {
+        name: spec.name.clone(),
+        base_scenario: spec.base.name.clone(),
+        workers,
+        axes: spec.axes.iter().map(|a| (a.key(), a.labels())).collect(),
+        grid_fingerprint: format!("{:016x}", hash_name(&concat)),
+        records: records.into_iter().map(|(_, r)| r).collect(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::TopologySpec;
+
+    fn tiny_base() -> ScenarioSpec {
+        let mut base = ScenarioSpec::scale128();
+        base.name = "tiny".into();
+        base.faults.clear();
+        base.topology = TopologySpec::scale_out(2, 2, 2);
+        base.workload.as_mut().unwrap().bytes_per_node = 64.0 * 1024.0 * 1024.0;
+        base
+    }
+
+    fn tiny_sweep() -> SweepSpec {
+        SweepSpec {
+            name: "tiny-sweep".into(),
+            base: tiny_base(),
+            workers: 3,
+            axes: vec![
+                Axis::Nodes(vec![4, 8]),
+                Axis::TotalBytes(vec![ByteSize::parse("512MB").unwrap()]),
+            ],
+        }
+    }
+
+    #[test]
+    fn parses_a_sweep_document() {
+        let spec = SweepSpec::from_toml(
+            r#"
+            name = "doc"
+            [topology]
+            sites = 2
+            racks_per_site = 1
+            nodes_per_rack = 4
+            [workload]
+            kind = "terasort"
+            bytes_per_node = "1GB"
+            [sweep]
+            workers = 2
+            nodes = [4, 8]
+            total_bytes = ["4GB", "8GB"]
+            fault_intensity = [0.0, 1.0]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(spec.name, "doc");
+        assert_eq!(spec.workers, 2);
+        assert_eq!(spec.points(), 8);
+        // Canonical axis order regardless of TOML order.
+        let keys: Vec<&str> = spec.axes.iter().map(|a| a.key()).collect();
+        assert_eq!(keys, vec!["nodes", "total_bytes", "fault_intensity"]);
+    }
+
+    #[test]
+    fn expansion_is_row_major_with_the_last_axis_fastest() {
+        let plan = tiny_sweep().plan().unwrap();
+        assert_eq!(plan.len(), 2);
+        assert_eq!(plan[0].axes[0], ("nodes", "4".to_string()));
+        assert_eq!(plan[1].axes[0], ("nodes", "8".to_string()));
+        // total_bytes divides by the point's final node count
+        // (parse_bytes is decimal: 512MB = 512e6, exact under /4 and /8).
+        assert_eq!(plan[0].spec.workload.as_ref().unwrap().bytes_per_node, 512.0e6 / 4.0);
+        assert_eq!(plan[1].spec.workload.as_ref().unwrap().bytes_per_node, 512.0e6 / 8.0);
+        // Shards follow index % workers; names carry the assignment.
+        assert_eq!(plan[0].shard, 0);
+        assert_eq!(plan[1].shard, 1);
+        assert_eq!(plan[1].spec.name, "tiny-sweep/nodes=8,total_bytes=512MB");
+    }
+
+    #[test]
+    fn fingerprints_are_deterministic_and_distinct() {
+        let a = tiny_sweep().plan().unwrap();
+        let b = tiny_sweep().plan().unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.fingerprint, y.fingerprint);
+        }
+        assert_ne!(a[0].fingerprint, a[1].fingerprint);
+    }
+
+    #[test]
+    fn empty_axis_error_names_the_key() {
+        let mut spec = tiny_sweep();
+        spec.axes = vec![Axis::WanGbps(vec![])];
+        let e = spec.validate().unwrap_err();
+        assert!(e.contains("sweep.wan_gbps") && e.contains("empty"), "{e}");
+    }
+
+    #[test]
+    fn duplicate_value_error_names_the_key() {
+        let mut spec = tiny_sweep();
+        spec.axes = vec![Axis::Nodes(vec![4, 8, 4])];
+        let e = spec.validate().unwrap_err();
+        assert!(e.contains("sweep.nodes") && e.contains("duplicate value 4"), "{e}");
+    }
+
+    #[test]
+    fn duplicate_axis_is_rejected() {
+        let mut spec = tiny_sweep();
+        spec.axes = vec![Axis::Nodes(vec![4]), Axis::Nodes(vec![8])];
+        let e = spec.validate().unwrap_err();
+        assert!(e.contains("sweep.nodes") && e.contains("duplicate axis"), "{e}");
+    }
+
+    #[test]
+    fn overflowing_product_is_capped() {
+        let mut spec = tiny_sweep();
+        spec.axes = vec![
+            Axis::Nodes((1..=80).map(|i| i * 4).collect()),
+            Axis::FaultIntensity((0..80).map(|i| i as f64).collect()),
+        ];
+        let e = spec.validate().unwrap_err();
+        assert!(e.contains("6400 points exceeds the 4096-point cap"), "{e}");
+    }
+
+    #[test]
+    fn sizing_axes_are_mutually_exclusive() {
+        let mut spec = tiny_sweep();
+        spec.axes = vec![
+            Axis::BytesPerNode(vec![ByteSize::parse("1GB").unwrap()]),
+            Axis::TotalBytes(vec![ByteSize::parse("8GB").unwrap()]),
+        ];
+        let e = spec.validate().unwrap_err();
+        assert!(e.contains("mutually exclusive"), "{e}");
+    }
+
+    #[test]
+    fn axis_applicability_is_checked_against_the_base() {
+        let mut spec = tiny_sweep();
+        spec.axes = vec![Axis::TenantMix(vec!["70:30".into()])];
+        let e = spec.validate().unwrap_err();
+        assert!(e.contains("sweep.tenant_mix") && e.contains("[traffic]"), "{e}");
+        let mut spec = tiny_sweep();
+        spec.axes = vec![Axis::ReplicationMax(vec![4])];
+        let e = spec.validate().unwrap_err();
+        assert!(e.contains("sweep.replication_max") && e.contains("[replication]"), "{e}");
+    }
+
+    #[test]
+    fn indivisible_node_count_is_rejected_per_point() {
+        let mut spec = tiny_sweep();
+        spec.axes = vec![Axis::Nodes(vec![6])]; // 4 racks
+        let e = spec.validate().unwrap_err();
+        assert!(
+            e.contains("sweep.nodes") && e.contains("does not divide"),
+            "{e}"
+        );
+    }
+
+    #[test]
+    fn fault_intensity_scales_the_plan() {
+        let mut spec = tiny_sweep();
+        spec.base.faults = vec![
+            FaultSpec::Straggler { node: 1, factor: 0.5 },
+            FaultSpec::SlaveCrash { at_secs: 1.0, node: 2 },
+        ];
+        spec.axes = vec![Axis::FaultIntensity(vec![0.0, 1.0, 2.0])];
+        let plan = spec.plan().unwrap();
+        assert!(plan[0].spec.faults.is_empty(), "intensity 0 clears the plan");
+        assert_eq!(plan[1].spec.faults, spec.base.faults, "intensity 1 is as written");
+        assert!(
+            matches!(
+                plan[2].spec.faults[0],
+                FaultSpec::Straggler { node: 1, factor } if (factor - 0.25).abs() < 1e-12
+            ),
+            "intensity 2 squares the straggler factor: {:?}",
+            plan[2].spec.faults[0]
+        );
+        assert_eq!(plan[2].spec.faults[1], spec.base.faults[1], "crashes are unscaled");
+    }
+
+    #[test]
+    fn scenario_from_toml_rejects_sweep_documents() {
+        let e = ScenarioSpec::from_toml(
+            "[workload]\nkind = \"terasort\"\n[sweep]\nnodes = [2, 4]\n",
+        )
+        .unwrap_err();
+        assert!(e.contains("`sweep` subcommand"), "{e}");
+    }
+
+    #[test]
+    fn sweep_from_toml_requires_the_block() {
+        let e = SweepSpec::from_toml("[workload]\nkind = \"terasort\"\n").unwrap_err();
+        assert!(e.contains("[sweep]"), "{e}");
+    }
+
+    #[test]
+    fn unknown_sweep_key_is_rejected() {
+        let e = SweepSpec::from_toml(
+            "[workload]\nkind = \"terasort\"\n[sweep]\nnode = [2]\n",
+        )
+        .unwrap_err();
+        assert!(e.contains("unknown field \"node\""), "{e}");
+    }
+
+    #[test]
+    fn presets_expand_to_their_documented_grids() {
+        let fig5 = SweepSpec::fig5_scaling();
+        assert_eq!(fig5.points(), 6);
+        fig5.validate().unwrap();
+        let wan = SweepSpec::speedup_wan();
+        assert_eq!(wan.points(), 12);
+        wan.validate().unwrap();
+        // Every compare point keeps its [compare] block.
+        assert!(wan.plan().unwrap().iter().all(|p| p.spec.compare.is_some()));
+    }
+
+    #[test]
+    fn run_sweep_is_deterministic_and_worker_invariant() {
+        let spec = tiny_sweep();
+        let a = run_sweep(&spec).unwrap();
+        let b = run_sweep(&spec).unwrap();
+        assert_eq!(a.to_json(), b.to_json(), "same grid twice -> byte-identical JSON");
+        let mut serial = spec.clone();
+        serial.workers = 1;
+        let c = run_sweep(&serial).unwrap();
+        for (x, y) in a.records.iter().zip(&c.records) {
+            assert_eq!(x.index, y.index);
+            assert_eq!(x.fingerprint, y.fingerprint);
+            assert_eq!(x.determinism, y.determinism, "worker count must not leak into results");
+            assert_eq!(x.makespan_secs, y.makespan_secs);
+        }
+        assert_eq!(a.grid_fingerprint, c.grid_fingerprint);
+    }
+
+    #[test]
+    fn report_json_has_the_documented_shape() {
+        let r = run_sweep(&tiny_sweep()).unwrap();
+        let json = r.to_json();
+        for needle in [
+            "\"sweep\": \"tiny-sweep\"",
+            "\"points\": 2",
+            "\"grid_fingerprint\": \"",
+            "{\"key\": \"nodes\", \"values\": [\"4\", \"8\"]}",
+            "\"makespan_secs\": ",
+            "\"determinism\": \"",
+            "\"speedup\": null",
+        ] {
+            assert!(json.contains(needle), "missing {needle} in:\n{json}");
+        }
+        assert!(r.records_json().starts_with("[{\"index\": 0"));
+        // A failing point names its grid index.
+        let mut bad = tiny_sweep();
+        bad.base.faults = vec![FaultSpec::SlaveCrash { at_secs: 1.0, node: 6 }];
+        bad.axes = vec![Axis::Nodes(vec![8, 4])];
+        let e = bad.plan().unwrap_err();
+        assert!(e.contains("sweep point #1"), "{e}");
+    }
+}

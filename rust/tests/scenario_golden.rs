@@ -18,7 +18,7 @@
 use std::fs;
 use std::path::PathBuf;
 
-use sector_sphere::scenario::{run_scenario, FaultSpec, ScenarioSpec};
+use sector_sphere::scenario::{run_scenario, run_sweep, FaultSpec, ScenarioSpec, SweepSpec};
 use sector_sphere::service::ArrivalProcess;
 use sector_sphere::util::bytes::GB;
 
@@ -295,6 +295,105 @@ fn golden_elastic_toml_matches_preset_shape() {
     assert_eq!(from_toml.faults.len(), preset.faults.len());
     for f in &preset.faults {
         assert!(from_toml.faults.contains(f), "TOML missing fault {f:?}");
+    }
+}
+
+/// Debug-scaled clone of the fig5 sweep: same axes, smaller grid and
+/// data sizes so the whole sweep finishes in debug-build milliseconds.
+fn scaled_fig5_sweep() -> SweepSpec {
+    let mut spec = SweepSpec::fig5_scaling();
+    spec.name = "sweep-fig5-scaled".to_string();
+    spec.axes = SweepSpec::from_toml(
+        r#"
+        name = "sweep-fig5-scaled"
+        [topology]
+        sites = 4
+        racks_per_site = 4
+        nodes_per_rack = 8
+        [workload]
+        kind = "terasort"
+        bytes_per_node = "1GB"
+        [sweep]
+        nodes = [16, 32]
+        total_bytes = ["8GB"]
+        "#,
+    )
+    .expect("scaled sweep TOML parses")
+    .axes;
+    spec
+}
+
+#[test]
+fn golden_sweep_fig5_scaled() {
+    // The sweep-level determinism contract (DESIGN.md §17): the full
+    // SweepReport JSON — axes, per-point fingerprints, determinism
+    // digests and metrics — runs twice byte-identical and is pinned
+    // against a committed fixture like every scenario preset.
+    let spec = scaled_fig5_sweep();
+    let a = run_sweep(&spec).expect("scaled sweep runs");
+    let b = run_sweep(&spec).expect("scaled sweep reruns");
+    let text = a.to_json();
+    assert_eq!(
+        text,
+        b.to_json(),
+        "sweep-fig5-scaled: SweepReport JSON must be byte-identical"
+    );
+    assert_eq!(a.records.len(), 2);
+    assert!(
+        a.records[1].makespan_secs <= a.records[0].makespan_secs,
+        "fixed total: 32 nodes ({:.1} s) must not be slower than 16 ({:.1} s)",
+        a.records[1].makespan_secs,
+        a.records[0].makespan_secs
+    );
+    let path = fixture_path("sweep-fig5-scaled");
+    match fs::read_to_string(&path) {
+        Ok(want) => assert_eq!(
+            text,
+            want,
+            "sweep-fig5-scaled: report diverged from the committed fixture {} — \
+             if intentional, delete the fixture and re-run to re-bless",
+            path.display()
+        ),
+        Err(_) => {
+            fs::create_dir_all(path.parent().expect("fixture dir has parent"))
+                .expect("create fixture dir");
+            fs::write(&path, &text).expect("bless fixture");
+        }
+    }
+}
+
+#[test]
+fn golden_sweep_toml_matches_preset_shape() {
+    // The shipped sweep TOMLs must stay in sync with the built-in
+    // SweepSpec presets: name, workers, grid shape and base scenario.
+    for (file, preset) in [
+        ("sweep_fig5_scaling.toml", SweepSpec::fig5_scaling()),
+        ("sweep_speedup_wan.toml", SweepSpec::speedup_wan()),
+    ] {
+        let text = std::fs::read_to_string(format!(
+            "{}/config/scenarios/{file}",
+            env!("CARGO_MANIFEST_DIR")
+        ))
+        .expect("sweep TOML readable");
+        let from_toml = SweepSpec::from_toml(&text).expect("sweep TOML parses");
+        assert_eq!(from_toml.name, preset.name, "{file}");
+        assert_eq!(from_toml.workers, preset.workers, "{file}");
+        assert_eq!(from_toml.points(), preset.points(), "{file}");
+        assert_eq!(from_toml.axes.len(), preset.axes.len(), "{file}");
+        for (a, b) in from_toml.axes.iter().zip(&preset.axes) {
+            assert_eq!(a.key(), b.key(), "{file}: axis order");
+            assert_eq!(a.labels(), b.labels(), "{file}: axis {} values", a.key());
+        }
+        assert_eq!(
+            from_toml.base.topology.nodes(),
+            preset.base.topology.nodes(),
+            "{file}"
+        );
+        assert_eq!(
+            from_toml.base.compare.is_some(),
+            preset.base.compare.is_some(),
+            "{file}: compare block presence"
+        );
     }
 }
 
