@@ -1,0 +1,99 @@
+//! Fold every per-bench `BENCH_*.json` at the repo root into one
+//! `BENCH_trajectory.json` aggregate — the single artifact CI's
+//! bench-trajectory and nightly jobs upload, so the perf trajectory
+//! across PRs is one file per run instead of a loose pile of
+//! per-bench emissions.
+//!
+//!     cargo run --release --example bench_trajectory
+//!
+//! No dependencies and no serde: each per-bench file is embedded
+//! verbatim (they are trusted single-object emissions from
+//! `BenchJson`), keyed by bench name in sorted order so the aggregate
+//! is deterministic for a given set of inputs.  Benches whose
+//! committed baseline still carries the `"UNSET"` bootstrap marker
+//! are listed under `"unarmed"` — a reviewer can see at a glance
+//! which drift gates are live.
+
+use std::fs;
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+const OUT: &str = "BENCH_trajectory.json";
+
+fn main() -> ExitCode {
+    let root = std::env::var("CARGO_MANIFEST_DIR")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("."));
+    let mut reports: Vec<(String, String)> = Vec::new();
+    let dir = match fs::read_dir(&root) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("cannot read {}: {e}", root.display());
+            return ExitCode::FAILURE;
+        }
+    };
+    for entry in dir.flatten() {
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if !name.starts_with("BENCH_") || !name.ends_with(".json") || name == OUT {
+            continue;
+        }
+        let bench = name["BENCH_".len()..name.len() - ".json".len()].to_string();
+        match fs::read_to_string(entry.path()) {
+            Ok(body) => {
+                let body = body.trim().to_string();
+                // Only well-formed single-object emissions embed raw;
+                // anything else would corrupt the aggregate.
+                if body.starts_with('{') && body.ends_with('}') {
+                    reports.push((bench, body));
+                } else {
+                    eprintln!("skipping {name}: not a JSON object");
+                }
+            }
+            Err(e) => eprintln!("skipping {name}: {e}"),
+        }
+    }
+    if reports.is_empty() {
+        eprintln!("no BENCH_*.json found at {} — run the benches first", root.display());
+        return ExitCode::FAILURE;
+    }
+    reports.sort();
+
+    let benches: Vec<String> = reports.iter().map(|(b, _)| format!("\"{b}\"")).collect();
+    let unarmed: Vec<String> = reports
+        .iter()
+        .filter(|(_, body)| body.contains("\"determinism_hash\": \"UNSET\""))
+        .map(|(b, _)| format!("\"{b}\""))
+        .collect();
+    let embedded: Vec<String> = reports
+        .iter()
+        .map(|(b, body)| format!("    \"{b}\": {body}"))
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"trajectory\",\n  \"count\": {},\n  \
+         \"benches\": [{}],\n  \"unarmed\": [{}],\n  \"reports\": {{\n{}\n  }}\n}}\n",
+        reports.len(),
+        benches.join(", "),
+        unarmed.join(", "),
+        embedded.join(",\n"),
+    );
+    let out = root.join(OUT);
+    if let Err(e) = fs::write(&out, &json) {
+        eprintln!("cannot write {}: {e}", out.display());
+        return ExitCode::FAILURE;
+    }
+    println!(
+        "folded {} bench reports into {} ({} drift gate(s) still unarmed)",
+        reports.len(),
+        out.display(),
+        unarmed.len()
+    );
+    for (b, _) in &reports {
+        let armed = if unarmed.contains(&format!("\"{b}\"")) {
+            "unarmed (bootstrap placeholder)"
+        } else {
+            "armed"
+        };
+        println!("  {b:<12} {armed}");
+    }
+    ExitCode::SUCCESS
+}

@@ -36,6 +36,8 @@ fn main() {
         load_or(ScenarioSpec::compare_scale128(), "compare_scale128.toml"),
         load_or(ScenarioSpec::angle_wan4(), "angle_wan4.toml"),
         load_or(ScenarioSpec::angle_scale128(), "angle_scale128.toml"),
+        load_or(ScenarioSpec::churn_wan32(), "churn_wan32.toml"),
+        load_or(ScenarioSpec::weather_compare16(), "weather_compare16.toml"),
     ];
     println!(
         "{:<28} {:>6} {:>6} {:>12} {:>9} {:>9} {:>7} {:>7}",

@@ -1,0 +1,234 @@
+//! Wide-area transport + churn gate (DESIGN.md §18): the paper's
+//! reason for UDT is that stock TCP cannot fill a long-fat pipe, so a
+//! `compare` run on the 10 Gbps WAN preset must show Sphere-over-UDT
+//! beating Sphere-over-TCP (>1x), with the gap widening as the WAN RTT
+//! grows — the `transport = "udt" | "tcp"` knob exercised end to end.
+//! Alongside it, the churn-rate sweep axis runs twice and must render
+//! byte-identical SweepReport JSON; one FNV hash over both experiments
+//! is checked against the committed baseline in `BENCH_wan.json` at
+//! the repo root.  Any drift fails the bench (and CI's
+//! bench-trajectory job); an intentional recalibration re-runs with
+//! `BENCH_WAN_UPDATE=1` and commits the rewritten JSON.
+//!
+//!     cargo bench --bench bench_wan
+//!
+//! The emitted JSON carries ONLY deterministic simulation outputs (no
+//! wall clock): per-transport makespans, the UDT-over-TCP gains at
+//! both RTTs, the churn sweep's fingerprints and per-point records,
+//! and the combined determinism hash.  Wall-clock timings are printed
+//! to stdout instead.
+
+use sector_sphere::bench::{time_fn, BenchJson};
+use sector_sphere::config::TransportKind;
+use sector_sphere::routing::hash_name;
+use sector_sphere::scenario::{run_scenario, run_sweep, Axis, ScenarioReport, ScenarioSpec, SweepSpec};
+
+/// Marker a bootstrap baseline carries before the first real run.
+const UNSET: &str = "UNSET";
+
+fn baseline_path() -> std::path::PathBuf {
+    let base = std::env::var("CARGO_MANIFEST_DIR")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("."));
+    base.join("BENCH_wan.json")
+}
+
+/// Pull `"key": value` out of the flat baseline JSON without serde.
+fn field<'a>(json: &'a str, key: &str) -> Option<&'a str> {
+    let tag = format!("\"{key}\": ");
+    let start = json.find(&tag)? + tag.len();
+    let rest = &json[start..];
+    let end = rest.find(&[',', '}'][..])?;
+    Some(rest[..end].trim().trim_matches('"'))
+}
+
+/// The weather preset's 16-node compare topology under a clear sky —
+/// weather stripped so the transport term is the ONLY thing moving
+/// between runs — at the given WAN RTT and Sphere transport.
+fn wan_compare_spec(transport: TransportKind, rtt_ms: f64) -> ScenarioSpec {
+    let mut spec = ScenarioSpec::weather_compare16();
+    spec.weather = None;
+    spec.name = format!("wan16-{}-rtt{rtt_ms:.0}ms", transport.name());
+    spec.topology.wan_rtt_secs = rtt_ms / 1e3;
+    spec.cfg.sphere_transport = transport;
+    spec
+}
+
+fn run_compare_pair(rtt_ms: f64) -> (ScenarioReport, ScenarioReport) {
+    let udt_spec = wan_compare_spec(TransportKind::Udt, rtt_ms);
+    let tcp_spec = wan_compare_spec(TransportKind::Tcp, rtt_ms);
+    let udt = run_scenario(&udt_spec).unwrap_or_else(|e| panic!("{}: {e}", udt_spec.name));
+    let tcp = run_scenario(&tcp_spec).unwrap_or_else(|e| panic!("{}: {e}", tcp_spec.name));
+    // Determinism: same spec, same report, bit for bit.
+    let udt2 = run_scenario(&udt_spec).unwrap();
+    assert_eq!(
+        format!("{udt:?}"),
+        format!("{udt2:?}"),
+        "rtt {rtt_ms} ms: the compare run must be byte-identical across reruns"
+    );
+    (udt, tcp)
+}
+
+/// `tcp_makespan / udt_makespan` for the Sphere side of a compare pair.
+fn sphere_gain(udt: &ScenarioReport, tcp: &ScenarioReport) -> f64 {
+    let u = udt.comparison.as_ref().expect("compare preset ran both engines");
+    let t = tcp.comparison.as_ref().expect("compare preset ran both engines");
+    // Hadoop never reads `sphere_transport`: its side is the control
+    // arm and must not move between the two runs.
+    assert_eq!(
+        u.hadoop.makespan_secs, t.hadoop.makespan_secs,
+        "the transport knob leaked into the Hadoop engine"
+    );
+    t.sphere.makespan_secs / u.sphere.makespan_secs.max(1e-9)
+}
+
+fn main() {
+    let mut json = BenchJson::new("wan");
+    json.text("bench", "wan");
+
+    // ---- UDT-over-TCP on the 10 Gbps WAN compare preset ----
+    let (udt40, tcp40) = run_compare_pair(40.0);
+    let gain40 = sphere_gain(&udt40, &tcp40);
+    let c40 = udt40.comparison.as_ref().unwrap();
+    println!(
+        "rtt 40ms: sphere/udt {:.1} s, sphere/tcp {:.1} s, hadoop {:.1} s \
+         -> udt-over-tcp {gain40:.2}x, sphere-over-hadoop {:.2}x",
+        c40.sphere.makespan_secs,
+        tcp40.comparison.as_ref().unwrap().sphere.makespan_secs,
+        c40.hadoop.makespan_secs,
+        c40.speedup
+    );
+    // The acceptance gate: at 10 Gbps WAN the UDT run must beat the
+    // TCP run outright, and the UDT-transported Sphere must still beat
+    // Hadoop (the paper's headline, now conditional on the transport).
+    assert!(
+        gain40 > 1.0,
+        "UDT must beat 2008-era TCP on the 10 Gbps WAN preset (got {gain40:.3}x)"
+    );
+    assert!(
+        c40.speedup > 1.0,
+        "Sphere-over-UDT must still beat Hadoop on the WAN preset (got {:.3}x)",
+        c40.speedup
+    );
+
+    // ---- the gap widens with RTT (long-fat-network asymmetry) ----
+    let (udt120, tcp120) = run_compare_pair(120.0);
+    let gain120 = sphere_gain(&udt120, &tcp120);
+    println!("rtt 120ms: udt-over-tcp {gain120:.2}x");
+    assert!(
+        gain120 > gain40,
+        "TCP's window cap scales as 1/RTT while UDT holds the link: the \
+         UDT-over-TCP gain must widen from 40 ms ({gain40:.2}x) to 120 ms \
+         ({gain120:.2}x)"
+    );
+    json.num("udt_sphere_makespan_secs", c40.sphere.makespan_secs)
+        .num(
+            "tcp_sphere_makespan_secs",
+            tcp40.comparison.as_ref().unwrap().sphere.makespan_secs,
+        )
+        .num("hadoop_makespan_secs", c40.hadoop.makespan_secs)
+        .num("udt_over_tcp_gain_rtt40", gain40)
+        .num("udt_over_tcp_gain_rtt120", gain120)
+        .num("udt_compare_speedup", c40.speedup);
+    let h_transport = hash_name(&format!(
+        "{:.9}|{:.9}|{:.9}|{:.9}",
+        c40.sphere.makespan_secs,
+        tcp40.comparison.as_ref().unwrap().sphere.makespan_secs,
+        udt120.comparison.as_ref().unwrap().sphere.makespan_secs,
+        tcp120.comparison.as_ref().unwrap().sphere.makespan_secs,
+    ));
+    let t = time_fn("wan_compare_udt", 0, 2, || {
+        run_scenario(&wan_compare_spec(TransportKind::Udt, 40.0)).unwrap()
+    });
+    println!("wan_compare_udt: {:.0} ms wall per run", t.secs.mean * 1e3);
+
+    // ---- churn-rate sweep over the 32-node churn preset ----
+    let sweep = SweepSpec {
+        name: "churn-rate-wan32".into(),
+        base: ScenarioSpec::churn_wan32(),
+        workers: 2,
+        axes: vec![Axis::ChurnRate(vec![0.0, 4.0, 8.0])],
+    };
+    let a = run_sweep(&sweep).unwrap_or_else(|e| panic!("churn sweep: {e}"));
+    let b = run_sweep(&sweep).unwrap_or_else(|e| panic!("churn sweep rerun: {e}"));
+    assert_eq!(
+        a.to_json(),
+        b.to_json(),
+        "churn sweep: the SweepReport JSON must be byte-identical across runs"
+    );
+    assert_eq!(a.records.len(), 3, "churn grid is the 3 swept rates");
+    let calm = a.records[0].makespan_secs;
+    for r in &a.records {
+        println!(
+            "  churn_rate={:<4} makespan {:>9.1} s  ({})",
+            r.axes[0].1, r.makespan_secs, r.fingerprint
+        );
+        assert!(!r.determinism.is_empty(), "every point carries its digest");
+        // Losing nodes mid-run can only cost time: re-runs and
+        // re-replication contend with the job (rate 0 is the floor).
+        assert!(
+            r.makespan_secs >= calm * (1.0 - 1e-9),
+            "churn_rate={} finished faster ({:.1} s) than the churnless \
+             floor ({calm:.1} s)",
+            r.axes[0].1,
+            r.makespan_secs
+        );
+    }
+    let h_churn = hash_name(&a.to_json());
+    json.int("churn_points", a.records.len() as u64)
+        .text("churn_grid_fingerprint", &a.grid_fingerprint)
+        .raw("churn_records", &a.records_json());
+
+    let hash = format!("{:016x}-{:016x}", h_transport, h_churn);
+    json.text("determinism_hash", &hash);
+
+    // ---- regression gate against the committed baseline ----
+    // Read the committed file BEFORE overwriting it, and write the new
+    // numbers BEFORE any drift panic — the CI artifact must carry the
+    // new values even when the gate trips.
+    let committed = std::fs::read_to_string(baseline_path());
+    match json.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("BENCH_wan.json not written: {e}"),
+    }
+    let update = std::env::var("BENCH_WAN_UPDATE").is_ok();
+    match committed {
+        Ok(committed) => {
+            let base_hash = field(&committed, "determinism_hash").unwrap_or(UNSET);
+            if base_hash == UNSET {
+                println!(
+                    "baseline is a bootstrap placeholder: commit the rewritten \
+                     BENCH_wan.json to arm the drift gate \
+                     (README 'Calibration & baselines')"
+                );
+            } else if update {
+                println!("BENCH_WAN_UPDATE set: accepting new baseline {hash}");
+            } else {
+                let mut drift = Vec::new();
+                if base_hash != hash {
+                    drift.push(format!("determinism hash {base_hash} -> {hash}"));
+                }
+                for key in ["churn_points", "churn_grid_fingerprint"] {
+                    let old = field(&committed, key).unwrap_or("?");
+                    let new_json = json.render();
+                    let new = field(&new_json, key).unwrap_or("?");
+                    if old != new {
+                        drift.push(format!("{key} {old} -> {new}"));
+                    }
+                }
+                if !drift.is_empty() {
+                    for d in &drift {
+                        eprintln!("DRIFT: {d}");
+                    }
+                    panic!(
+                        "bench_wan drifted from the committed baseline — if \
+                         intentional, rerun with BENCH_WAN_UPDATE=1 and commit \
+                         the rewritten BENCH_wan.json"
+                    );
+                }
+                println!("baseline check: churn grid and determinism hash match");
+            }
+        }
+        Err(_) => println!("no committed baseline found; wrote a fresh one"),
+    }
+}

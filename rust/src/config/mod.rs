@@ -272,6 +272,13 @@ impl TransportKind {
             other => Err(format!("unknown transport {other:?} (udt|tcp)")),
         }
     }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TransportKind::Udt => "udt",
+            TransportKind::Tcp => "tcp",
+        }
+    }
 }
 
 /// Everything a simulated run needs.

@@ -272,7 +272,7 @@ pub fn run_hadoop(
     let cfg = &spec.cfg;
     let h = &cfg.hadoop;
     let n = testbed.nodes();
-    let mut state = FaultState::new(&spec.faults, n);
+    let mut state = FaultState::for_run(spec, testbed);
 
     let mut net = NetSim::with_capacity(
         4 * n + 2 * testbed.racks() + 2 * testbed.site_names.len() + 1,
@@ -495,6 +495,35 @@ impl<'e, 'a> Harness for HadoopHarness<'e, 'a> {
         self.eng.on_crash(node, now, net, q, state)
     }
 
+    fn on_join(
+        &mut self,
+        _node: usize,
+        now: f64,
+        _net: &mut NetSim,
+        q: &mut EventQueue<HEv>,
+        state: &mut FaultState,
+    ) -> Result<(), String> {
+        // The re-joined TaskTracker heartbeats in with free slots.
+        self.eng.pump(now, q, state);
+        Ok(())
+    }
+
+    fn on_master(
+        &mut self,
+        up: bool,
+        now: f64,
+        net: &mut NetSim,
+        q: &mut EventQueue<HEv>,
+        state: &mut FaultState,
+    ) -> Result<(), String> {
+        if up {
+            // Recovered JobTracker re-dispatches from scheduler state.
+            self.eng.pump(now, q, state);
+            return Ok(());
+        }
+        self.eng.on_master_down(now, net, q, state)
+    }
+
     fn after_wave(
         &mut self,
         now: f64,
@@ -575,6 +604,13 @@ impl<'a> HadoopEngine<'a> {
     /// Hand pending tasks to every idle slot (re-executions first —
     /// they block the barrier).
     fn pump(&mut self, now: f64, q: &mut EventQueue<HEv>, state: &FaultState) {
+        // JobTracker down: nobody is running the assignment loop.  The
+        // crash itself already unwound in-flight attempts (see
+        // `on_master_down`); recovery re-pumps on `MasterUp`
+        // (DESIGN.md §18).
+        if state.master_down {
+            return;
+        }
         let slots = self.slots();
         for node in 0..self.testbed.nodes() {
             if state.dead[node] {
@@ -1056,6 +1092,57 @@ impl<'a> HadoopEngine<'a> {
             }
         }
         self.pump(now, q, state);
+        Ok(())
+    }
+
+    /// The JobTracker crashed.  Unlike Sector's master — whose outage
+    /// only pauses NEW dispatch while running SPEs stream on (paper §4,
+    /// modelled by the `pump` gate in the Sphere engines) — Hadoop 0.16
+    /// kept all in-flight task state in JobTracker memory, so every
+    /// running attempt is lost and re-queued, paying its work again
+    /// after recovery.  Data-plane transfers (shuffle fetches, HDFS
+    /// output pipelines, rescue copies) ride on TaskTrackers/DataNodes
+    /// and survive the outage.  This is the availability asymmetry the
+    /// `master_crash` fault exists to surface (DESIGN.md §18).
+    fn on_master_down(
+        &mut self,
+        now: f64,
+        net: &mut NetSim,
+        _q: &mut EventQueue<HEv>,
+        state: &FaultState,
+    ) -> Result<(), String> {
+        let stale: Vec<u64> = self.inflight.keys().copied().collect();
+        for g in stale {
+            let att = self.inflight.remove(&g).expect("inflight gen exists");
+            if let Some(fid) = att.fid {
+                self.flows.remove(&fid);
+                net.try_cancel_flow(fid);
+                self.tracer.flow_cancel(fid, now);
+            }
+            if att.rerun {
+                self.rerun_queue.push(self.block_segment(att.seg.id, state));
+                self.reassignments += 1;
+                continue;
+            }
+            let siblings = self.spec.drop_attempt(att.seg.id, g);
+            if siblings > 0 {
+                self.sched.cancel_attempt(&att.seg);
+            } else {
+                let id = att.seg.id;
+                if !self.sched.fail(att.seg) {
+                    return Err(format!(
+                        "job failed: {} task {id} exhausted its {} attempts \
+                         when the JobTracker crashed",
+                        self.phase().name(),
+                        self.sched.max_attempts
+                    ));
+                }
+                self.reassignments += 1;
+            }
+        }
+        for r in self.running.iter_mut() {
+            *r = 0;
+        }
         Ok(())
     }
 

@@ -33,7 +33,7 @@ fn flag_spec() -> Vec<FlagSpec> {
         FlagSpec { name: "windows", help: "angle time windows", takes_value: true },
         FlagSpec { name: "seed", help: "deterministic seed", takes_value: true },
         FlagSpec { name: "file", help: "scenario TOML (see config/scenarios/)", takes_value: true },
-        FlagSpec { name: "preset", help: "scenario preset: paper_wan6|paper_lan8|scale128|traffic_scale128|traffic_elastic512|colocate_scale128|compare_wan4|compare_scale128|angle_wan4|angle_scale128; sweep: sweep_fig5_scaling|sweep_speedup_wan", takes_value: true },
+        FlagSpec { name: "preset", help: "scenario preset: paper_wan6|paper_lan8|scale128|traffic_scale128|traffic_elastic512|colocate_scale128|compare_wan4|compare_scale128|angle_wan4|angle_scale128|churn_wan32|weather_compare16; sweep: sweep_fig5_scaling|sweep_speedup_wan", takes_value: true },
         FlagSpec { name: "requests", help: "traffic: total requests to drive", takes_value: true },
         FlagSpec { name: "clients", help: "traffic: simulated client population", takes_value: true },
         FlagSpec { name: "rps", help: "traffic: open-loop arrival rate", takes_value: true },
@@ -223,11 +223,13 @@ fn load_scenario_spec(
             "compare_scale128" => Ok(ScenarioSpec::compare_scale128()),
             "angle_wan4" => Ok(ScenarioSpec::angle_wan4()),
             "angle_scale128" => Ok(ScenarioSpec::angle_scale128()),
+            "churn_wan32" => Ok(ScenarioSpec::churn_wan32()),
+            "weather_compare16" => Ok(ScenarioSpec::weather_compare16()),
             other => Err(format!(
                 "unknown preset {other:?} \
                  (paper_wan6|paper_lan8|scale128|traffic_scale128|traffic_elastic512|\
                  colocate_scale128|compare_wan4|compare_scale128|angle_wan4|\
-                 angle_scale128) — or pass --file"
+                 angle_scale128|churn_wan32|weather_compare16) — or pass --file"
             )),
         },
     }

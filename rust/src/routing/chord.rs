@@ -292,6 +292,79 @@ mod tests {
     }
 
     #[test]
+    fn join_repairs_successor_and_fingers() {
+        // Every row of per-node state must equal the stabilized fixed
+        // point after a join: finger[i] = successor(id + 2^i) and the
+        // predecessor link closes the ring around the newcomer.
+        let (mut ring, ids) = ring_of(16, 8);
+        let newcomer = 0x5eed_0000_dead_beef;
+        assert!(!ids.contains(&newcomer));
+        ring.join(newcomer);
+        for id in ring.node_ids().collect::<Vec<_>>() {
+            let node = &ring.nodes[&id];
+            for (i, &f) in node.finger.iter().enumerate() {
+                let start = id.wrapping_add(1u64.wrapping_shl(i as u32));
+                assert_eq!(
+                    f,
+                    ring.naive_successor(start).unwrap(),
+                    "node {id:#x} finger {i} stale after join"
+                );
+            }
+            assert_eq!(node.predecessor, ring.naive_predecessor(id));
+        }
+        // The key just below the newcomer now belongs to it.
+        assert_eq!(
+            ring.naive_successor(newcomer.wrapping_sub(1)).unwrap(),
+            newcomer
+        );
+    }
+
+    #[test]
+    fn concurrent_leave_and_join_converge() {
+        // One maintenance round sees a departure AND an arrival (the
+        // churn expansion schedules both at the same instant when
+        // rejoin_secs lines up).  Whatever the order, the ring must
+        // stabilize to the membership set — and match a ring built
+        // from scratch with that membership.
+        let (ring0, ids) = ring_of(12, 9);
+        let gone = ids[5];
+        let newcomer = 0x0c0f_fee0_0c0f_fee0;
+        let mut a = ring0.clone();
+        a.leave(gone);
+        a.join(newcomer);
+        let mut b = ring0.clone();
+        b.join(newcomer);
+        b.leave(gone);
+        let want: Vec<Id> = a.node_ids().collect();
+        assert_eq!(want, b.node_ids().collect::<Vec<_>>());
+        let fresh = ChordRing::build(&want);
+        let mut rng = Pcg64::new(10);
+        for _ in 0..200 {
+            let key = rng.next_u64();
+            let start = want[rng.gen_range(want.len() as u64) as usize];
+            let (oa, _) = a.lookup(start, key).unwrap();
+            let (ob, _) = b.lookup(start, key).unwrap();
+            assert_eq!(oa, ob, "leave/join order changed ownership");
+            assert_eq!(oa, fresh.naive_successor(key).unwrap());
+        }
+    }
+
+    #[test]
+    fn rejoin_of_departed_id_restores_the_ring() {
+        // A churned node comes back under its SAME ring id (the churn
+        // plan re-joins the same slave name): the ring must be
+        // indistinguishable from one that never saw the departure.
+        let (mut ring, ids) = ring_of(10, 11);
+        let before = format!("{ring:?}");
+        let victim = ids[4];
+        assert!(ring.leave(victim));
+        assert!(!ring.contains(victim));
+        ring.join(victim);
+        assert_eq!(ring.len(), ids.len());
+        assert_eq!(format!("{ring:?}"), before, "rejoin must restore all state");
+    }
+
+    #[test]
     fn keys_redistribute_on_leave() {
         let (mut ring, ids) = ring_of(8, 7);
         let victim = ids[3];

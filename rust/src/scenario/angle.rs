@@ -180,7 +180,7 @@ pub(crate) fn run_angle(
     let mined = mine(a, sensors, spec.cfg.seed)?;
 
     let n = testbed.nodes();
-    let mut state = FaultState::new(&spec.faults, n);
+    let mut state = FaultState::for_run(spec, testbed);
     let (mut run, mut net, mut q) = AngleRun::new(
         testbed,
         &spec.cfg,

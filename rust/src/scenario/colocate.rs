@@ -252,8 +252,14 @@ impl<'a> JobSide<'a> {
         self.cfg.sphere.spes_per_node.max(1)
     }
 
-    /// Hand pending segments to every idle SPE slot.
+    /// Hand pending segments to every idle SPE slot.  While the master
+    /// is down no NEW segment can be scheduled (assignment goes through
+    /// it); in-flight work keeps running and the drained-wave pump
+    /// resumes dispatch after `MasterUp` (DESIGN.md §18).
     fn pump(&mut self, now: f64, q: &mut EventQueue<CoEv>, state: &FaultState) {
+        if state.master_down {
+            return;
+        }
         let spes = self.spes();
         for node in 0..self.testbed.nodes() {
             if state.dead[node] {
@@ -646,6 +652,35 @@ impl<'r, 'a> Harness for CoHarness<'r, 'a> {
         self.job.on_crash(node, now, net, q, state)
     }
 
+    fn on_join(
+        &mut self,
+        _node: usize,
+        now: f64,
+        _net: &mut NetSim,
+        q: &mut EventQueue<CoEv>,
+        state: &mut FaultState,
+    ) -> Result<(), String> {
+        // The re-joined node's SPE slots are idle: offer it pending work.
+        self.job.pump(now, q, state);
+        Ok(())
+    }
+
+    fn on_master(
+        &mut self,
+        up: bool,
+        now: f64,
+        _net: &mut NetSim,
+        q: &mut EventQueue<CoEv>,
+        state: &mut FaultState,
+    ) -> Result<(), String> {
+        // Recovery resumes batch dispatch; client traffic never stopped
+        // (metadata is cached client-side, paper §4).
+        if up {
+            self.job.pump(now, q, state);
+        }
+        Ok(())
+    }
+
     fn after_wave(
         &mut self,
         now: f64,
@@ -704,7 +739,7 @@ pub(crate) fn run_colocated(
     let baseline_traffic = baseline.traffic.expect("traffic-only run reports SLOs");
 
     let n = testbed.nodes();
-    let mut state = FaultState::new(&spec.faults, n);
+    let mut state = FaultState::for_run(spec, testbed);
     let mut net =
         NetSim::with_capacity(4 * n + 2 * testbed.racks() + 2 * testbed.site_names.len());
     let links = testbed.build_network(&mut net);

@@ -254,6 +254,44 @@ mod tests {
     }
 
     #[test]
+    fn master_crash_hurts_hadoop_more_than_sphere() {
+        // The availability asymmetry (paper §4, DESIGN.md §18): a
+        // Sector master outage only pauses NEW dispatch — running SPEs
+        // stream on and clients keep cached metadata — while a Hadoop
+        // 0.16 JobTracker crash loses every in-flight attempt, which
+        // re-runs from scratch after recovery.  The same outage at the
+        // same virtual time must therefore cost Hadoop more wall-clock.
+        let mut spec = cmp_spec(WorkloadKind::Terasort);
+        spec.faults.push(FaultSpec::MasterCrash {
+            at_secs: 2.0,
+            down_secs: 10.0,
+        });
+        let clean = run_scenario(&cmp_spec(WorkloadKind::Terasort)).unwrap();
+        let faulted = run_scenario(&spec).unwrap();
+        assert_eq!(
+            faulted,
+            run_scenario(&spec).unwrap(),
+            "failover runs stay deterministic"
+        );
+        let (c, f) = (
+            clean.comparison.as_ref().unwrap(),
+            faulted.comparison.as_ref().unwrap(),
+        );
+        let sphere_cost = f.sphere.makespan_secs - c.sphere.makespan_secs;
+        let hadoop_cost = f.hadoop.makespan_secs - c.hadoop.makespan_secs;
+        assert!(sphere_cost >= -1e-9, "the outage never speeds Sphere up");
+        assert!(hadoop_cost > 0.0, "the JobTracker crash must cost Hadoop time");
+        assert!(
+            hadoop_cost > sphere_cost + 1e-9,
+            "availability asymmetry: hadoop +{hadoop_cost:.1}s vs sphere +{sphere_cost:.1}s"
+        );
+        assert!(
+            f.hadoop.reassignments > c.hadoop.reassignments,
+            "hadoop re-ran the in-flight attempts the crash unwound"
+        );
+    }
+
+    #[test]
     fn filegen_compares_write_pipelines() {
         // §6.3: Sphere wrote 10 GB in 68 s, Hadoop's HDFS client
         // pipeline took 212 s on the same disks.

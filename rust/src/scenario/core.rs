@@ -38,12 +38,13 @@
 
 use std::collections::{BTreeMap, HashSet};
 
+use crate::routing::{hash_name, ChordRing, Id};
 use crate::sim::event::EventQueue;
 use crate::sim::netsim::{FlowId, NetSim};
 use crate::topology::{NetLinks, Testbed};
 
 use super::trace::{sample_gauges, HarnessGauges, Tracer};
-use super::FaultSpec;
+use super::{FaultSpec, ScenarioSpec};
 
 // ------------------------------------------------------------ fault state
 
@@ -65,6 +66,19 @@ pub(crate) struct FaultState {
     pub(crate) factor: Vec<f64>,
     pub(crate) injected: usize,
     pub(crate) crashes: usize,
+    /// Standing per-site weather factor (DESIGN.md §18): the latest
+    /// `WeatherSet` point applied per site.  Grown lazily so plans
+    /// without weather never allocate; out-of-range reads are 1.0.
+    weather: Vec<f64>,
+    /// Master/NameNode down (a `MasterCrash` window is open): engines
+    /// gate new task assignments on this.
+    pub(crate) master_down: bool,
+    /// The Chord ring membership walks through on every leave/join —
+    /// built by [`FaultState::for_run`] only when the plan has churn.
+    pub(crate) ring: Option<ChordRing>,
+    /// node index -> ring id (FNV of the slave name), parallel to
+    /// `dead`; empty when no ring is maintained.
+    ring_ids: Vec<Id>,
 }
 
 impl FaultState {
@@ -78,6 +92,10 @@ impl FaultState {
             factor: vec![1.0; nodes],
             injected: 0,
             crashes: 0,
+            weather: Vec::new(),
+            master_down: false,
+            ring: None,
+            ring_ids: Vec::new(),
         };
         for (i, f) in faults.iter().enumerate() {
             if let FaultSpec::Straggler { node, factor } = f {
@@ -86,6 +104,31 @@ impl FaultState {
                 s.counted[i] = true;
                 s.injected += 1;
             }
+        }
+        s
+    }
+
+    /// The run-time fault prologue every engine shares (DESIGN.md §18):
+    /// the *effective* plan (explicit faults + the expanded churn
+    /// episode + the weather trace), per-site disk-speed multipliers
+    /// folded into the node factors, and — when the plan has churn —
+    /// the Chord ring that membership maintenance walks through on
+    /// every leave/join.
+    pub(crate) fn for_run(spec: &ScenarioSpec, testbed: &Testbed) -> FaultState {
+        let faults = spec.effective_faults();
+        let mut s = FaultState::new(&faults, testbed.nodes());
+        for node in 0..testbed.nodes() {
+            s.factor[node] *= testbed.disk_mult(node);
+        }
+        let churns = faults
+            .iter()
+            .any(|f| matches!(f, FaultSpec::NodeLeave { .. } | FaultSpec::NodeJoin { .. }));
+        if churns {
+            let ids: Vec<Id> = (0..testbed.nodes())
+                .map(|i| hash_name(&format!("slave{i:04}")))
+                .collect();
+            s.ring = Some(ChordRing::build(&ids));
+            s.ring_ids = ids;
         }
         s
     }
@@ -107,7 +150,38 @@ impl FaultState {
             self.alive_list.retain(|&n| n != node);
             self.crashes += 1;
             self.injected += 1;
+            if let Some(ring) = self.ring.as_mut() {
+                ring.leave(self.ring_ids[node]);
+            }
         }
+    }
+
+    /// A departed node re-joins (churn `NodeJoin`): live again, back in
+    /// the Chord ring, and a placement target from the next pump.  The
+    /// `crashes` counter is cumulative departures — a re-join does not
+    /// roll it back.
+    pub(crate) fn revive(&mut self, node: usize) {
+        if self.dead[node] {
+            self.dead[node] = false;
+            let pos = self.alive_list.partition_point(|&x| x < node);
+            self.alive_list.insert(pos, node);
+            if let Some(ring) = self.ring.as_mut() {
+                ring.join(self.ring_ids[node]);
+            }
+        }
+    }
+
+    /// Record a site's standing weather factor (latest point wins).
+    pub(crate) fn set_weather(&mut self, site: usize, factor: f64) {
+        if self.weather.len() <= site {
+            self.weather.resize(site + 1, 1.0);
+        }
+        self.weather[site] = factor;
+    }
+
+    /// The standing weather factor for `site` (1.0 when no point set).
+    pub(crate) fn weather_factor(&self, site: usize) -> f64 {
+        self.weather.get(site).copied().unwrap_or(1.0)
     }
 
     /// Apply every crash scheduled at or before `now` (analytic
@@ -177,6 +251,16 @@ pub(crate) enum FaultEv {
     Crash { fault: usize },
     DegradeStart { fault: usize },
     DegradeEnd { fault: usize },
+    /// Churn: a node leaves the system (crash semantics + ring
+    /// maintenance).
+    Leave { fault: usize },
+    /// Churn: a previously departed node re-joins.
+    Join { fault: usize },
+    /// Network weather: a site's standing WAN capacity factor steps.
+    Weather { fault: usize },
+    /// Master failover window opens / closes (DESIGN.md §18).
+    MasterDown { fault: usize },
+    MasterUp { fault: usize },
 }
 
 /// An engine event type that can carry the shared fault events.
@@ -228,28 +312,64 @@ pub(crate) fn schedule_faults<E: CoreEv>(
                     q.push_at(end, E::from_fault(FaultEv::DegradeEnd { fault: i }));
                 }
             }
+            FaultSpec::NodeLeave { at_secs, .. } => {
+                q.push_at(at_secs.max(start), E::from_fault(FaultEv::Leave { fault: i }));
+            }
+            FaultSpec::NodeJoin { at_secs, .. } => {
+                q.push_at(at_secs.max(start), E::from_fault(FaultEv::Join { fault: i }));
+            }
+            // Weather points are standing state, not windows: a later
+            // stage's fresh NetSim must re-learn every point already
+            // passed.  They are never consumed — past points fire again
+            // at the stage epoch in plan (= time) order, so the latest
+            // point per site wins.
+            FaultSpec::WeatherSet { at_secs, .. } => {
+                q.push_at(
+                    at_secs.max(start),
+                    E::from_fault(FaultEv::Weather { fault: i }),
+                );
+            }
+            FaultSpec::MasterCrash { at_secs, down_secs } => {
+                let end = at_secs + down_secs;
+                if end <= start {
+                    state.consumed[i] = true;
+                    continue;
+                }
+                q.push_at(
+                    at_secs.max(start),
+                    E::from_fault(FaultEv::MasterDown { fault: i }),
+                );
+                if end.is_finite() {
+                    q.push_at(end, E::from_fault(FaultEv::MasterUp { fault: i }));
+                }
+            }
             FaultSpec::Straggler { .. } => {}
         }
     }
 }
 
-/// Apply a WAN degradation factor to a site's full-duplex uplink —
-/// one capacity change no matter which engine owns the links.
-pub(crate) fn apply_site_degrade(
+/// Re-derive a site's full-duplex WAN uplink capacity from everything
+/// that scales it — the per-site nominal rate (heterogeneous sites),
+/// the degradation windows active at `now`, and the standing weather
+/// factor — and apply it as one capacity change no matter which engine
+/// owns the links.  Overlapping degradations compound; weather
+/// multiplies on top.
+pub(crate) fn apply_site_uplink(
+    state: &FaultState,
     net: &mut NetSim,
     links: &NetLinks,
     testbed: &Testbed,
     site: usize,
-    factor: f64,
+    now: f64,
 ) {
-    let cap = (testbed.wan_bps * factor).max(1.0);
+    let f = state.degrade_factor_at(site, now) * state.weather_factor(site);
+    let cap = (testbed.site_wan_bps(site) * f).max(1.0);
     net.set_link_capacity(links.site_up[site], cap);
     net.set_link_capacity(links.site_down[site], cap);
 }
 
 /// A degradation window opened: count it once and squeeze the site's
-/// uplinks to the combined factor of every window active at `now`
-/// (overlapping degradations compound instead of overwriting).
+/// uplinks to the combined factor of every window active at `now`.
 pub(crate) fn handle_degrade_start(
     state: &mut FaultState,
     net: &mut NetSim,
@@ -260,13 +380,12 @@ pub(crate) fn handle_degrade_start(
 ) {
     if let FaultSpec::LinkDegrade { site, .. } = state.faults[fault] {
         state.count_once(fault);
-        let f = state.degrade_factor_at(site, now);
-        apply_site_degrade(net, links, testbed, site, f);
+        apply_site_uplink(state, net, links, testbed, site, now);
     }
 }
 
 /// A degradation window closed: restore the site's uplinks to whatever
-/// the *remaining* windows dictate, not blindly to 1.0.
+/// the *remaining* windows (and weather) dictate, not blindly to 1.0.
 pub(crate) fn handle_degrade_end(
     state: &mut FaultState,
     net: &mut NetSim,
@@ -277,8 +396,25 @@ pub(crate) fn handle_degrade_end(
 ) {
     state.consumed[fault] = true;
     if let FaultSpec::LinkDegrade { site, .. } = state.faults[fault] {
-        let f = state.degrade_factor_at(site, now);
-        apply_site_degrade(net, links, testbed, site, f);
+        apply_site_uplink(state, net, links, testbed, site, now);
+    }
+}
+
+/// A weather point fired: record the site's standing factor and
+/// re-derive its uplink capacity (composed with any open degradation
+/// windows).
+pub(crate) fn handle_weather_set(
+    state: &mut FaultState,
+    net: &mut NetSim,
+    links: &NetLinks,
+    testbed: &Testbed,
+    fault: usize,
+    now: f64,
+) {
+    if let FaultSpec::WeatherSet { site, factor, .. } = state.faults[fault] {
+        state.count_once(fault);
+        state.set_weather(site, factor);
+        apply_site_uplink(state, net, links, testbed, site, now);
     }
 }
 
@@ -343,6 +479,38 @@ pub(crate) trait Harness {
         q: &mut EventQueue<Self::Ev>,
         state: &mut FaultState,
     ) -> Result<(), String>;
+
+    /// A join fault revived a departed node (the core already marked it
+    /// live and re-inserted it into the ring).  Default: nothing —
+    /// engines whose `after_wave` re-pumps on drained waves resume
+    /// assignment to the node automatically; engines that pump from
+    /// completions only (Hadoop) override this to pump.
+    fn on_join(
+        &mut self,
+        _node: usize,
+        _now: f64,
+        _net: &mut NetSim,
+        _q: &mut EventQueue<Self::Ev>,
+        _state: &mut FaultState,
+    ) -> Result<(), String> {
+        Ok(())
+    }
+
+    /// The master went down (`up == false`) or recovered (`up ==
+    /// true`).  The core already flipped `state.master_down`; engines
+    /// gate their pump on that flag and use this hook for transition
+    /// work (Hadoop loses its in-flight attempts on the way down and
+    /// re-pumps on the way up; Sector's slaves keep working).
+    fn on_master(
+        &mut self,
+        _up: bool,
+        _now: f64,
+        _net: &mut NetSim,
+        _q: &mut EventQueue<Self::Ev>,
+        _state: &mut FaultState,
+    ) -> Result<(), String> {
+        Ok(())
+    }
 
     /// End of a wave at `now`; `drained` says whether queue events
     /// fired this wave (the batch engine only re-pumps its SPEs then;
@@ -458,6 +626,53 @@ pub(crate) fn drive<H: Harness>(
                             tracer.instant(now, "fault", &format!("restore site{site}"));
                         }
                         handle_degrade_end(state, net, links, testbed, fault, now)
+                    }
+                    Some(FaultEv::Leave { fault }) => {
+                        state.consumed[fault] = true;
+                        if let FaultSpec::NodeLeave { node, .. } = state.faults[fault] {
+                            if !state.dead[node] {
+                                tracer.instant_node(now, "fault", "leave", node);
+                                state.crash(node);
+                                h.on_crash(node, now, net, q, state)?;
+                            }
+                        }
+                    }
+                    Some(FaultEv::Join { fault }) => {
+                        state.consumed[fault] = true;
+                        if let FaultSpec::NodeJoin { node, .. } = state.faults[fault] {
+                            if state.dead[node] {
+                                state.count_once(fault);
+                                tracer.instant_node(now, "fault", "join", node);
+                                state.revive(node);
+                                h.on_join(node, now, net, q, state)?;
+                            }
+                        }
+                    }
+                    Some(FaultEv::Weather { fault }) => {
+                        if let FaultSpec::WeatherSet { site, factor, .. } = state.faults[fault] {
+                            tracer.instant(
+                                now,
+                                "fault",
+                                &format!("weather site{site} x{factor}"),
+                            );
+                        }
+                        handle_weather_set(state, net, links, testbed, fault, now)
+                    }
+                    Some(FaultEv::MasterDown { fault }) => {
+                        state.count_once(fault);
+                        if !state.master_down {
+                            state.master_down = true;
+                            tracer.instant(now, "fault", "master down");
+                            h.on_master(false, now, net, q, state)?;
+                        }
+                    }
+                    Some(FaultEv::MasterUp { fault }) => {
+                        state.consumed[fault] = true;
+                        if state.master_down {
+                            state.master_down = false;
+                            tracer.instant(now, "fault", "master up");
+                            h.on_master(true, now, net, q, state)?;
+                        }
                     }
                     None => {
                         tracer.ev(now, ev.trace_name());
@@ -672,6 +887,96 @@ mod tests {
                 (6.0, FaultEv::DegradeEnd { fault: 2 }),
             ]
         );
+    }
+
+    #[test]
+    fn churn_weather_and_master_faults_schedule_like_their_primitives() {
+        let faults = vec![
+            FaultSpec::NodeLeave {
+                at_secs: 1.0,
+                node: 0,
+            },
+            FaultSpec::NodeJoin {
+                at_secs: 5.0,
+                node: 0,
+            },
+            FaultSpec::WeatherSet {
+                at_secs: 2.0,
+                site: 0,
+                factor: 0.5,
+            },
+            FaultSpec::MasterCrash {
+                at_secs: 0.5,
+                down_secs: 1.0,
+            },
+            FaultSpec::MasterCrash {
+                at_secs: 4.0,
+                down_secs: 2.0,
+            },
+        ];
+        let mut state = FaultState::new(&faults, 2);
+        let mut q: EventQueue<FaultEv> = EventQueue::new();
+        // Epoch 3.0: the leave clamps forward like a crash, the already
+        // passed weather point re-fires at the epoch (standing state),
+        // the first master window is over (consumed silently), the
+        // second fires whole.
+        schedule_faults(&mut state, &mut q, 3.0);
+        assert!(state.consumed[3], "expired master window consumed");
+        let mut evs = Vec::new();
+        while let Some((t, e)) = q.pop() {
+            evs.push((t, e));
+        }
+        assert_eq!(
+            evs,
+            vec![
+                (3.0, FaultEv::Leave { fault: 0 }),
+                (3.0, FaultEv::Weather { fault: 2 }),
+                (4.0, FaultEv::MasterDown { fault: 4 }),
+                (5.0, FaultEv::Join { fault: 1 }),
+                (6.0, FaultEv::MasterUp { fault: 4 }),
+            ]
+        );
+        // Weather is never consumed: a later epoch re-schedules it so a
+        // fresh NetSim re-learns the standing factor.
+        let mut q2: EventQueue<FaultEv> = EventQueue::new();
+        schedule_faults(&mut state, &mut q2, 10.0);
+        let mut seen_weather = false;
+        while let Some((t, e)) = q2.pop() {
+            if e == (FaultEv::Weather { fault: 2 }) {
+                assert_eq!(t, 10.0);
+                seen_weather = true;
+            }
+        }
+        assert!(seen_weather, "weather point re-fires at the new epoch");
+    }
+
+    #[test]
+    fn weather_factor_defaults_and_latest_point_wins() {
+        let mut state = FaultState::new(&[], 2);
+        assert_eq!(state.weather_factor(3), 1.0, "unset sites read nominal");
+        state.set_weather(1, 0.5);
+        assert_eq!(state.weather_factor(1), 0.5);
+        assert_eq!(state.weather_factor(0), 1.0);
+        state.set_weather(1, 0.8);
+        assert_eq!(state.weather_factor(1), 0.8, "latest point wins");
+    }
+
+    #[test]
+    fn revive_restores_membership_and_ring() {
+        let ids: Vec<Id> = (0..4).map(|i| hash_name(&format!("slave{i:04}"))).collect();
+        let mut state = FaultState::new(&[], 4);
+        state.ring = Some(ChordRing::build(&ids));
+        state.ring_ids = ids.clone();
+        state.crash(2);
+        assert_eq!(state.alive(), &[0, 1, 3]);
+        assert!(!state.ring.as_ref().unwrap().contains(ids[2]));
+        assert_eq!(state.crashes, 1);
+        state.revive(2);
+        assert_eq!(state.alive(), &[0, 1, 2, 3]);
+        assert!(state.ring.as_ref().unwrap().contains(ids[2]));
+        assert_eq!(state.crashes, 1, "re-join never rolls back departures");
+        state.revive(2);
+        assert_eq!(state.alive(), &[0, 1, 2, 3], "double revive is a no-op");
     }
 
     #[test]

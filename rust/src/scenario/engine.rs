@@ -52,9 +52,7 @@ use super::{ScenarioSpec, WorkloadKind};
 
 // Fault-plan machinery moved to the shared engine core; re-exported so
 // the service/colocate/hadoop/angle engines keep their import paths.
-pub(crate) use super::core::{
-    apply_site_degrade, handle_degrade_end, handle_degrade_start, FaultState,
-};
+pub(crate) use super::core::FaultState;
 
 /// What a scenario run produced. Byte-identical across repeat runs of
 /// the same spec (the determinism contract the suite asserts).
@@ -221,7 +219,7 @@ pub(crate) fn run_batch(
         .workload
         .as_ref()
         .ok_or("batch run requires a [workload] block")?;
-    let mut state = FaultState::new(&spec.faults, testbed.nodes());
+    let mut state = FaultState::for_run(spec, testbed);
     let b = workload.bytes_per_node;
     let mut agg = Aggregate::default();
     let tracer = rec.tracer("sphere");
@@ -465,8 +463,14 @@ impl<'a> StageRun<'a> {
         Ok((run, net, q))
     }
 
-    /// Hand pending segments to every idle SPE slot.
+    /// Hand pending segments to every idle SPE slot.  While the master
+    /// is down no NEW segment can be scheduled (assignment goes through
+    /// it); in-flight work keeps running and the drained-wave pump
+    /// resumes dispatch after `MasterUp` (DESIGN.md §18).
     fn pump(&mut self, now: f64, q: &mut EventQueue<Ev>, state: &FaultState) {
+        if state.master_down {
+            return;
+        }
         let spes = self.cfg.sphere.spes_per_node.max(1);
         for node in 0..self.testbed.nodes() {
             if state.dead[node] {

@@ -47,11 +47,13 @@ pub use engine::{run_scenario, ScenarioReport, TierBytes};
 pub use sweep::{run_sweep, Axis, PointRecord, SweepPoint, SweepReport, SweepSpec};
 pub use trace::{TraceRecorder, TraceSpec};
 
-use crate::config::{SimConfig, Table};
+use crate::config::{SimConfig, Table, TransportKind};
 use crate::mining::pcap::Regime;
 use crate::service::{ArrivalProcess, ArrivalShape, ReplicationSpec, ScalerPolicy, TenantSpec, TrafficSpec};
 use crate::topology::TopologySpec;
 use crate::util::bytes::{parse_bytes, GB, MB};
+use crate::util::rng::Pcg64;
+use std::collections::BTreeMap;
 
 /// Which workload the scenario runs.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -118,6 +120,39 @@ pub enum FaultSpec {
     },
     /// `node` runs all local work at `factor` (< 1.0) speed throughout.
     Straggler { node: usize, factor: f64 },
+    /// Churn: `node` departs at `at_secs` — crash semantics plus Chord
+    /// ring maintenance (DESIGN.md §18).  Usually expanded from a
+    /// `[churn]` block rather than written by hand.
+    NodeLeave { at_secs: f64, node: usize },
+    /// Churn: a previously departed `node` re-joins at `at_secs`,
+    /// re-enters the ring and becomes a placement target again.
+    NodeJoin { at_secs: f64, node: usize },
+    /// Network weather: site `site`'s WAN uplink capacity steps to
+    /// `factor` of nominal at `at_secs` and stays there until the
+    /// site's next point.  Usually expanded from a `[weather]` block.
+    WeatherSet {
+        at_secs: f64,
+        site: usize,
+        factor: f64,
+    },
+    /// The master/NameNode crashes at `at_secs` and recovers
+    /// `down_secs` later: no NEW work is assigned while it is down;
+    /// in-flight work keeps running (DESIGN.md §18).
+    MasterCrash { at_secs: f64, down_secs: f64 },
+}
+
+/// The injection instant of a fault (stragglers are standing state and
+/// sort first).
+fn fault_at(f: &FaultSpec) -> f64 {
+    match f {
+        FaultSpec::SlaveCrash { at_secs, .. }
+        | FaultSpec::LinkDegrade { at_secs, .. }
+        | FaultSpec::NodeLeave { at_secs, .. }
+        | FaultSpec::NodeJoin { at_secs, .. }
+        | FaultSpec::WeatherSet { at_secs, .. }
+        | FaultSpec::MasterCrash { at_secs, .. } => *at_secs,
+        FaultSpec::Straggler { .. } => 0.0,
+    }
 }
 
 /// Colocation knobs (the `[colocation]` TOML block; DESIGN.md §11).
@@ -400,6 +435,292 @@ impl Default for CompareSpec {
     }
 }
 
+/// The `[churn]` TOML block (DESIGN.md §18): a seeded Poisson episode
+/// of node departures and re-joins, expanded deterministically into
+/// `NodeLeave`/`NodeJoin` faults by [`ChurnSpec::expand`].  Rate 0 (or
+/// duration 0) expands to NO faults, so the run is byte-identical to
+/// the same scenario without the block.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ChurnSpec {
+    /// Mean departures per 100 s of episode (Poisson arrivals).
+    pub rate_per_100s: f64,
+    /// Episode start (virtual seconds).
+    pub start_secs: f64,
+    /// Episode length; departures are only generated inside
+    /// `[start_secs, start_secs + duration_secs)`.
+    pub duration_secs: f64,
+    /// Each departed node re-joins this long after it left; 0 = never.
+    pub rejoin_secs: f64,
+    /// Seed for the churn stream, independent of the scenario seed.
+    pub seed: u64,
+    /// At most this fraction of the cluster may be absent at once —
+    /// further departures are suppressed until someone re-joins.
+    pub max_fraction: f64,
+}
+
+impl Default for ChurnSpec {
+    fn default() -> Self {
+        ChurnSpec {
+            rate_per_100s: 4.0,
+            start_secs: 0.0,
+            duration_secs: 60.0,
+            rejoin_secs: 30.0,
+            seed: 11,
+            max_fraction: 0.25,
+        }
+    }
+}
+
+impl ChurnSpec {
+    fn from_table(t: &Table) -> Result<Option<ChurnSpec>, String> {
+        if t.section_keys("churn").next().is_none() {
+            return Ok(None);
+        }
+        t.check_known_keys(
+            "churn",
+            &[
+                "rate_per_100s",
+                "start_secs",
+                "duration_secs",
+                "rejoin_secs",
+                "seed",
+                "max_fraction",
+            ],
+            &[],
+        )?;
+        let d = ChurnSpec::default();
+        Ok(Some(ChurnSpec {
+            rate_per_100s: t.float_or("churn.rate_per_100s", d.rate_per_100s),
+            start_secs: t.float_or("churn.start_secs", d.start_secs),
+            duration_secs: t.float_or("churn.duration_secs", d.duration_secs),
+            rejoin_secs: t.float_or("churn.rejoin_secs", d.rejoin_secs),
+            seed: t.int_or("churn.seed", d.seed as i64).max(0) as u64,
+            max_fraction: t.float_or("churn.max_fraction", d.max_fraction),
+        }))
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        for (label, v) in [
+            ("rate_per_100s", self.rate_per_100s),
+            ("start_secs", self.start_secs),
+            ("duration_secs", self.duration_secs),
+            ("rejoin_secs", self.rejoin_secs),
+        ] {
+            if !v.is_finite() || v < 0.0 {
+                return Err(format!(
+                    "churn: {label} must be finite and >= 0, got {v}"
+                ));
+            }
+        }
+        if !(self.max_fraction > 0.0 && self.max_fraction < 1.0) {
+            return Err(format!(
+                "churn: max_fraction must be in (0, 1) — 1.0 could empty \
+                 the cluster mid-run — got {}",
+                self.max_fraction
+            ));
+        }
+        Ok(())
+    }
+
+    /// Deterministically expand the episode into explicit
+    /// `NodeLeave`/`NodeJoin` faults for an `nodes`-slave cluster.
+    pub fn expand(&self, nodes: usize) -> Vec<FaultSpec> {
+        if self.rate_per_100s <= 0.0 || self.duration_secs <= 0.0 || nodes == 0 {
+            return Vec::new();
+        }
+        let mut rng = Pcg64::new(self.seed);
+        let lambda = self.rate_per_100s / 100.0;
+        let max_out = ((nodes as f64 * self.max_fraction) as usize).max(1);
+        let end = self.start_secs + self.duration_secs;
+        // node -> when it comes back (INFINITY = never).
+        let mut away: BTreeMap<usize, f64> = BTreeMap::new();
+        let mut out = Vec::new();
+        let mut t = self.start_secs + rng.next_exp(lambda);
+        while t < end {
+            away.retain(|_, back| *back > t);
+            if away.len() < max_out {
+                let present: Vec<usize> =
+                    (0..nodes).filter(|n| !away.contains_key(n)).collect();
+                let victim = present[rng.gen_range(present.len() as u64) as usize];
+                out.push(FaultSpec::NodeLeave { at_secs: t, node: victim });
+                let back = if self.rejoin_secs > 0.0 {
+                    t + self.rejoin_secs
+                } else {
+                    f64::INFINITY
+                };
+                if back.is_finite() {
+                    out.push(FaultSpec::NodeJoin { at_secs: back, node: victim });
+                }
+                away.insert(victim, back);
+            }
+            t += rng.next_exp(lambda);
+        }
+        out.sort_by(|a, b| {
+            fault_at(a)
+                .partial_cmp(&fault_at(b))
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        out
+    }
+}
+
+/// One explicit weather point: site `site`'s WAN capacity steps to
+/// `factor` of nominal at `at_secs`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WeatherPoint {
+    pub at_secs: f64,
+    pub site: usize,
+    pub factor: f64,
+}
+
+/// The `[weather]` TOML block (DESIGN.md §18): a deterministic
+/// time-varying WAN capacity trace — explicit `[weather.points.*]`
+/// replayed as given, plus an optional seeded piecewise generator
+/// (`amplitude` > 0, `steps` > 0) that redraws every site's capacity
+/// each `period_secs`.  Amplitude 0 with no points expands to NO
+/// faults, so the run is byte-identical to the same scenario without
+/// the block.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WeatherSpec {
+    /// Explicit trace points, replayed verbatim.
+    pub points: Vec<WeatherPoint>,
+    /// Seed for the generated part of the trace.
+    pub seed: u64,
+    /// Generated trace epoch length (virtual seconds).
+    pub period_secs: f64,
+    /// Generated capacity factors are drawn uniformly from
+    /// `[1 - amplitude, 1)`; 0 disables generation.
+    pub amplitude: f64,
+    /// Number of generated epochs (at `period_secs`, `2*period_secs`, …).
+    pub steps: usize,
+}
+
+impl Default for WeatherSpec {
+    fn default() -> Self {
+        WeatherSpec {
+            points: Vec::new(),
+            seed: 7,
+            period_secs: 10.0,
+            amplitude: 0.0,
+            steps: 0,
+        }
+    }
+}
+
+impl WeatherSpec {
+    fn from_table(t: &Table) -> Result<Option<WeatherSpec>, String> {
+        if t.section_keys("weather").next().is_none() {
+            return Ok(None);
+        }
+        t.check_known_keys(
+            "weather",
+            &["seed", "period_secs", "amplitude", "steps"],
+            &["points"],
+        )?;
+        let mut points = Vec::new();
+        for label in t.subsections("weather.points") {
+            let k = |field: &str| format!("weather.points.{label}.{field}");
+            let section = format!("weather.points.{label}");
+            for key in t.section_keys(&section) {
+                let field = key.rsplit('.').next().unwrap_or(key);
+                if !["at_secs", "site", "factor"].contains(&field) {
+                    return Err(format!(
+                        "weather point {label:?}: unknown field {field:?} \
+                         (expected at_secs|site|factor)"
+                    ));
+                }
+            }
+            points.push(WeatherPoint {
+                at_secs: t.float_or(&k("at_secs"), 0.0),
+                site: t.int_or(&k("site"), 0) as usize,
+                factor: t.float_or(&k("factor"), 1.0),
+            });
+        }
+        let d = WeatherSpec::default();
+        Ok(Some(WeatherSpec {
+            points,
+            seed: t.int_or("weather.seed", d.seed as i64).max(0) as u64,
+            period_secs: t.float_or("weather.period_secs", d.period_secs),
+            amplitude: t.float_or("weather.amplitude", d.amplitude),
+            steps: t.int_or("weather.steps", 0).max(0) as usize,
+        }))
+    }
+
+    pub fn validate(&self, sites: usize) -> Result<(), String> {
+        if sites < 2 {
+            return Err(
+                "weather: single-site topology has no WAN uplinks — the \
+                 trace would be silently inert"
+                    .into(),
+            );
+        }
+        if !(self.amplitude >= 0.0 && self.amplitude < 1.0) {
+            return Err(format!(
+                "weather: amplitude must be in [0, 1) so generated factors \
+                 stay positive, got {}",
+                self.amplitude
+            ));
+        }
+        if !self.period_secs.is_finite() || self.period_secs <= 0.0 {
+            return Err(format!(
+                "weather: period_secs must be finite and > 0, got {}",
+                self.period_secs
+            ));
+        }
+        for p in &self.points {
+            if p.site >= sites {
+                return Err(format!(
+                    "weather: point site {} out of range (sites: {sites})",
+                    p.site
+                ));
+            }
+            if !(p.factor > 0.0 && p.factor <= 1.0) {
+                return Err(format!(
+                    "weather: point factor must be in (0, 1], got {}",
+                    p.factor
+                ));
+            }
+            if !p.at_secs.is_finite() || p.at_secs < 0.0 {
+                return Err(format!(
+                    "weather: point at_secs must be finite and >= 0, got {}",
+                    p.at_secs
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Deterministically expand the trace into explicit `WeatherSet`
+    /// faults for a `sites`-site topology.  Generated factors within
+    /// 1e-9 of 1.0 are elided, so amplitude 0 yields an empty plan.
+    pub fn expand(&self, sites: usize) -> Vec<FaultSpec> {
+        let mut raw: Vec<(f64, usize, f64)> = self
+            .points
+            .iter()
+            .map(|p| (p.at_secs, p.site, p.factor))
+            .collect();
+        if self.amplitude > 0.0 && self.steps > 0 {
+            let mut rng = Pcg64::new(self.seed);
+            for k in 1..=self.steps {
+                let t = k as f64 * self.period_secs;
+                for site in 0..sites {
+                    let factor = 1.0 - self.amplitude * rng.next_f64();
+                    raw.push((t, site, factor));
+                }
+            }
+        }
+        raw.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal));
+        raw.into_iter()
+            .filter(|(_, _, f)| (f - 1.0).abs() > 1e-9)
+            .map(|(at_secs, site, factor)| FaultSpec::WeatherSet {
+                at_secs,
+                site,
+                factor,
+            })
+            .collect()
+    }
+}
+
 /// A complete, reproducible run description.
 #[derive(Clone, Debug)]
 pub struct ScenarioSpec {
@@ -410,6 +731,14 @@ pub struct ScenarioSpec {
     /// service-only scenarios.
     pub workload: Option<WorkloadSpec>,
     pub faults: Vec<FaultSpec>,
+    /// Seeded churn episode (the `[churn]` TOML block; DESIGN.md §18).
+    /// Expanded into explicit leave/join faults by
+    /// [`ScenarioSpec::effective_faults`].
+    pub churn: Option<ChurnSpec>,
+    /// Network-weather trace (the `[weather]` TOML block; DESIGN.md
+    /// §18).  Expanded into explicit `WeatherSet` faults by
+    /// [`ScenarioSpec::effective_faults`].
+    pub weather: Option<WeatherSpec>,
     /// The service-layer traffic stream (the `[traffic]` TOML block;
     /// DESIGN.md §10).  Alone it replaces the batch workload; together
     /// with `[workload]` the two colocate on one shared substrate
@@ -461,7 +790,16 @@ impl ScenarioSpec {
     /// out of a sweep document.
     pub(crate) fn from_table_base(t: &Table) -> Result<ScenarioSpec, String> {
         let topology = TopologySpec::from_table(t)?;
-        let cfg = SimConfig::profile(t.str_or("hardware.profile", "lan"))?.apply_table(t)?;
+        let mut cfg = SimConfig::profile(t.str_or("hardware.profile", "lan"))?.apply_table(t)?;
+        // Top-level `transport = "udt" | "tcp"` is scenario-facing sugar
+        // over `[sphere] transport` — it picks the WAN flow-throughput
+        // model for the run (DESIGN.md §18).
+        if let Some(v) = t.get("transport") {
+            let s = v
+                .as_str()
+                .ok_or("transport must be a string (udt|tcp)")?;
+            cfg.sphere_transport = TransportKind::parse(s)?;
+        }
         let kind = WorkloadKind::parse(t.str_or("workload.kind", "terasort"))?;
         let bytes_per_node = parse_bytes(t.str_or("workload.bytes_per_node", "10GB"))? as f64;
         let iterations = t.int_or("workload.iterations", 10).max(1) as usize;
@@ -494,10 +832,40 @@ impl ScenarioSpec {
                     },
                     &["kind", "node", "factor"],
                 ),
+                "leave" => (
+                    FaultSpec::NodeLeave {
+                        at_secs: t.float_or(&k("at_secs"), 0.0),
+                        node: t.int_or(&k("node"), 0) as usize,
+                    },
+                    &["kind", "at_secs", "node"],
+                ),
+                "join" => (
+                    FaultSpec::NodeJoin {
+                        at_secs: t.float_or(&k("at_secs"), 0.0),
+                        node: t.int_or(&k("node"), 0) as usize,
+                    },
+                    &["kind", "at_secs", "node"],
+                ),
+                "weather_set" => (
+                    FaultSpec::WeatherSet {
+                        at_secs: t.float_or(&k("at_secs"), 0.0),
+                        site: t.int_or(&k("site"), 0) as usize,
+                        factor: t.float_or(&k("factor"), 1.0),
+                    },
+                    &["kind", "at_secs", "site", "factor"],
+                ),
+                "master_crash" => (
+                    FaultSpec::MasterCrash {
+                        at_secs: t.float_or(&k("at_secs"), 0.0),
+                        down_secs: t.float_or(&k("down_secs"), 10.0),
+                    },
+                    &["kind", "at_secs", "down_secs"],
+                ),
                 other => {
                     return Err(format!(
                         "fault {label:?}: unknown kind {other:?} \
-                         (crash|link_degrade|straggler)"
+                         (crash|link_degrade|straggler|leave|join|\
+                         weather_set|master_crash)"
                     ))
                 }
             };
@@ -516,6 +884,8 @@ impl ScenarioSpec {
             }
             faults.push(fault);
         }
+        let churn = ChurnSpec::from_table(t)?;
+        let weather = WeatherSpec::from_table(t)?;
         let traffic = TrafficSpec::from_table(t)?;
         let replication = ReplicationSpec::from_table(t)?;
         // [traffic] + [workload] used to be mutually exclusive; since
@@ -567,6 +937,8 @@ impl ScenarioSpec {
             cfg,
             workload,
             faults,
+            churn,
+            weather,
             traffic,
             replication,
             colocation,
@@ -574,6 +946,21 @@ impl ScenarioSpec {
             angle,
             trace,
         })
+    }
+
+    /// The full fault plan the engines execute: the explicit
+    /// `[faults.*]` list plus the deterministic expansions of the
+    /// `[churn]` and `[weather]` blocks (DESIGN.md §18).  Same spec,
+    /// same plan — byte for byte.
+    pub fn effective_faults(&self) -> Vec<FaultSpec> {
+        let mut out = self.faults.clone();
+        if let Some(churn) = &self.churn {
+            out.extend(churn.expand(self.topology.nodes()));
+        }
+        if let Some(weather) = &self.weather {
+            out.extend(weather.expand(self.topology.sites.len()));
+        }
+        out
     }
 
     /// Check fault references against the topology before running.
@@ -664,8 +1051,36 @@ impl ScenarioSpec {
                 }
             }
         }
+        let analytic = matches!(
+            self.workload.as_ref().map(|w| w.kind),
+            Some(WorkloadKind::Terasplit) | Some(WorkloadKind::Kmeans)
+        );
+        if let Some(churn) = &self.churn {
+            churn.validate()?;
+            if analytic {
+                return Err(
+                    "churn: terasplit/kmeans are analytic workloads — ring \
+                     maintenance and re-joins have no event path there and \
+                     the episode would be silently distorted"
+                        .into(),
+                );
+            }
+        }
+        if let Some(weather) = &self.weather {
+            weather.validate(sites)?;
+            if analytic {
+                return Err(
+                    "weather: terasplit/kmeans are analytic workloads — the \
+                     trace acts on NetSim link capacities, which the \
+                     closed-form models never touch, so it would be \
+                     silently inert"
+                        .into(),
+                );
+            }
+        }
+        let effective = self.effective_faults();
         let mut crash_nodes: Vec<usize> = Vec::new();
-        for f in &self.faults {
+        for f in &effective {
             match f {
                 FaultSpec::SlaveCrash { node, at_secs } => {
                     if *node >= nodes {
@@ -707,6 +1122,88 @@ impl ScenarioSpec {
                         return Err("straggler fault: factor must be in (0, 1]".into());
                     }
                 }
+                FaultSpec::NodeLeave { node, at_secs } => {
+                    if *node >= nodes {
+                        return Err(format!("leave fault: node {node} >= {nodes}"));
+                    }
+                    if !at_secs.is_finite() || *at_secs < 0.0 {
+                        return Err("leave fault: at_secs must be >= 0".into());
+                    }
+                    // A departure with a LATER matching join is transient
+                    // and cannot contribute to emptying the cluster.
+                    let returns = effective.iter().any(|g| {
+                        matches!(g, FaultSpec::NodeJoin { node: n2, at_secs: a2 }
+                                 if n2 == node && *a2 > *at_secs)
+                    });
+                    if !returns {
+                        crash_nodes.push(*node);
+                    }
+                }
+                FaultSpec::NodeJoin { node, at_secs } => {
+                    if *node >= nodes {
+                        return Err(format!("join fault: node {node} >= {nodes}"));
+                    }
+                    if !at_secs.is_finite() || *at_secs < 0.0 {
+                        return Err("join fault: at_secs must be >= 0".into());
+                    }
+                }
+                FaultSpec::WeatherSet { site, factor, at_secs } => {
+                    if sites < 2 {
+                        return Err(
+                            "weather_set fault: single-site topology has no WAN \
+                             uplink in any path, the fault would be silently inert"
+                                .into(),
+                        );
+                    }
+                    if analytic {
+                        return Err(
+                            "weather_set fault: terasplit/kmeans never touch the \
+                             NetSim links the fault acts on — it would be \
+                             silently inert"
+                                .into(),
+                        );
+                    }
+                    if *site >= sites {
+                        return Err(format!("weather_set fault: site {site} >= {sites}"));
+                    }
+                    if !(*factor > 0.0 && *factor <= 1.0) {
+                        return Err("weather_set fault: factor must be in (0, 1]".into());
+                    }
+                    if !at_secs.is_finite() || *at_secs < 0.0 {
+                        return Err("weather_set fault: at_secs must be >= 0".into());
+                    }
+                }
+                FaultSpec::MasterCrash { at_secs, down_secs } => {
+                    if !at_secs.is_finite() || *at_secs < 0.0 {
+                        return Err("master_crash fault: at_secs must be >= 0".into());
+                    }
+                    // An infinite outage would let the event queue drain
+                    // with work still pending and end the run silently.
+                    if !down_secs.is_finite() || !(*down_secs > 0.0) {
+                        return Err(
+                            "master_crash fault: down_secs must be finite and > 0"
+                                .into(),
+                        );
+                    }
+                    match self.workload.as_ref().map(|w| w.kind) {
+                        Some(WorkloadKind::Terasort) | Some(WorkloadKind::Filegen) => {}
+                        Some(other) => {
+                            return Err(format!(
+                                "master_crash fault: {} does not dispatch through \
+                                 the master's assignment loop (terasort|filegen)",
+                                other.name()
+                            ))
+                        }
+                        None => {
+                            return Err(
+                                "master_crash fault: a traffic-only scenario is \
+                                 unaffected — clients cache file metadata and \
+                                 read from slaves directly (paper §4)"
+                                    .into(),
+                            )
+                        }
+                    }
+                }
             }
         }
         crash_nodes.sort_unstable();
@@ -732,6 +1229,8 @@ impl ScenarioSpec {
                 iterations: 10,
             }),
             faults: Vec::new(),
+            churn: None,
+            weather: None,
             traffic: None,
             replication: None,
             colocation: ColocationSpec::default(),
@@ -754,6 +1253,8 @@ impl ScenarioSpec {
                 iterations: 10,
             }),
             faults: Vec::new(),
+            churn: None,
+            weather: None,
             traffic: None,
             replication: None,
             colocation: ColocationSpec::default(),
@@ -793,6 +1294,8 @@ impl ScenarioSpec {
                     factor: 0.25,
                 },
             ],
+            churn: None,
+            weather: None,
             traffic: None,
             replication: None,
             colocation: ColocationSpec::default(),
@@ -1029,6 +1532,8 @@ impl ScenarioSpec {
                 iterations: 10,
             }),
             faults: Vec::new(),
+            churn: None,
+            weather: None,
             traffic: None,
             replication: None,
             colocation: ColocationSpec::default(),
@@ -1072,6 +1577,8 @@ impl ScenarioSpec {
                     factor: 0.25,
                 },
             ],
+            churn: None,
+            weather: None,
             traffic: None,
             replication: None,
             colocation: ColocationSpec::default(),
@@ -1089,6 +1596,56 @@ impl ScenarioSpec {
             }),
             trace: None,
         }
+    }
+
+    /// Wide-area churn preset (DESIGN.md §18): a 32-node 4-site WAN
+    /// Terasort at 1 GB/node through a seeded churn episode — Poisson
+    /// departures at 4 per 100 s for the first minute, each node
+    /// re-joining 30 s later, at most a quarter of the cluster absent
+    /// at once.  Mirrors config/scenarios/churn_wan32.toml.
+    pub fn churn_wan32() -> ScenarioSpec {
+        let mut spec = ScenarioSpec::paper_wan6();
+        spec.name = "churn-wan32".into();
+        spec.topology = TopologySpec::scale_out(4, 2, 4);
+        spec.workload = Some(WorkloadSpec {
+            kind: WorkloadKind::Terasort,
+            bytes_per_node: 1.0 * GB as f64,
+            iterations: 10,
+        });
+        spec.churn = Some(ChurnSpec {
+            rate_per_100s: 4.0,
+            start_secs: 5.0,
+            duration_secs: 60.0,
+            rejoin_secs: 30.0,
+            seed: 11,
+            max_fraction: 0.25,
+        });
+        spec
+    }
+
+    /// Network-weather head-to-head preset (DESIGN.md §18): a 16-node
+    /// 2-site WAN Terasort at 1 GB/node through BOTH engines while a
+    /// seeded piecewise trace redraws every site's WAN capacity from
+    /// [0.5, 1) each 10 s epoch for 6 epochs.  Mirrors
+    /// config/scenarios/weather_compare16.toml.
+    pub fn weather_compare16() -> ScenarioSpec {
+        let mut spec = ScenarioSpec::paper_wan6();
+        spec.name = "weather-compare16".into();
+        spec.topology = TopologySpec::scale_out(2, 2, 4);
+        spec.workload = Some(WorkloadSpec {
+            kind: WorkloadKind::Terasort,
+            bytes_per_node: 1.0 * GB as f64,
+            iterations: 10,
+        });
+        spec.compare = Some(CompareSpec::default());
+        spec.weather = Some(WeatherSpec {
+            points: Vec::new(),
+            seed: 7,
+            period_secs: 10.0,
+            amplitude: 0.5,
+            steps: 6,
+        });
+        spec
     }
 }
 
@@ -1184,11 +1741,15 @@ mod tests {
             ScenarioSpec::paper_wan6(),
             ScenarioSpec::paper_lan8(),
             ScenarioSpec::scale128(),
+            ScenarioSpec::churn_wan32(),
+            ScenarioSpec::weather_compare16(),
         ] {
             spec.validate().unwrap();
             assert!(spec.topology.generate().is_ok());
         }
         assert_eq!(ScenarioSpec::scale128().topology.nodes(), 128);
+        assert_eq!(ScenarioSpec::churn_wan32().topology.nodes(), 32);
+        assert_eq!(ScenarioSpec::weather_compare16().topology.nodes(), 16);
     }
 
     #[test]
@@ -1209,6 +1770,288 @@ mod tests {
             FaultSpec::SlaveCrash { at_secs: 2.0, node: 0 },
         ];
         assert!(spec.validate().is_ok());
+    }
+
+    #[test]
+    fn leaves_with_rejoins_do_not_count_as_crashes() {
+        let mut spec = ScenarioSpec::from_toml(
+            "[topology]\nsites = 1\nracks_per_site = 1\nnodes_per_rack = 2",
+        )
+        .unwrap();
+        // Both nodes depart but both come back: the cluster is never
+        // permanently empty, so the plan is legal.
+        spec.faults = vec![
+            FaultSpec::NodeLeave { at_secs: 1.0, node: 0 },
+            FaultSpec::NodeJoin { at_secs: 5.0, node: 0 },
+            FaultSpec::NodeLeave { at_secs: 2.0, node: 1 },
+            FaultSpec::NodeJoin { at_secs: 6.0, node: 1 },
+        ];
+        assert!(spec.validate().is_ok());
+        // Drop one of the joins: that node never returns, and together
+        // with a permanent crash the plan empties the cluster.
+        spec.faults = vec![
+            FaultSpec::NodeLeave { at_secs: 1.0, node: 0 },
+            FaultSpec::SlaveCrash { at_secs: 2.0, node: 1 },
+        ];
+        let err = spec.validate().unwrap_err();
+        assert!(err.contains("crashes all"), "{err}");
+    }
+
+    #[test]
+    fn churn_block_parses_and_validates() {
+        let spec = ScenarioSpec::from_toml(
+            r#"
+            [topology]
+            sites = 2
+            racks_per_site = 2
+            nodes_per_rack = 4
+            [churn]
+            rate_per_100s = 8.0
+            start_secs = 2.0
+            duration_secs = 30.0
+            rejoin_secs = 10.0
+            seed = 42
+            max_fraction = 0.5
+            "#,
+        )
+        .unwrap();
+        let churn = spec.churn.expect("churn block parsed");
+        assert_eq!(churn.seed, 42);
+        assert!((churn.rate_per_100s - 8.0).abs() < 1e-12);
+        assert!(spec.validate().is_ok());
+        // Typo'd key must error, not silently default.
+        let err = ScenarioSpec::from_toml("[churn]\nrate = 4.0").unwrap_err();
+        assert!(err.contains("rate"), "{err}");
+        // Bad max_fraction is rejected at validate time.
+        let mut bad = ScenarioSpec::churn_wan32();
+        bad.churn.as_mut().unwrap().max_fraction = 1.0;
+        let err = bad.validate().unwrap_err();
+        assert!(err.contains("max_fraction"), "{err}");
+        // Analytic workloads cannot host a churn episode.
+        let mut bad = ScenarioSpec::churn_wan32();
+        bad.workload.as_mut().unwrap().kind = WorkloadKind::Kmeans;
+        let err = bad.validate().unwrap_err();
+        assert!(err.contains("analytic"), "{err}");
+    }
+
+    #[test]
+    fn churn_expansion_is_deterministic_and_bounded() {
+        let churn = ChurnSpec {
+            rate_per_100s: 20.0,
+            start_secs: 1.0,
+            duration_secs: 50.0,
+            rejoin_secs: 5.0,
+            seed: 9,
+            max_fraction: 0.25,
+        };
+        let a = churn.expand(16);
+        let b = churn.expand(16);
+        assert_eq!(a, b, "same spec, same plan");
+        assert!(!a.is_empty(), "a 20/100s rate over 50 s should fire");
+        let mut leaves = 0usize;
+        let mut prev = f64::NEG_INFINITY;
+        for f in &a {
+            let at = match f {
+                FaultSpec::NodeLeave { at_secs, node } => {
+                    leaves += 1;
+                    assert!(*node < 16);
+                    *at_secs
+                }
+                FaultSpec::NodeJoin { at_secs, node } => {
+                    assert!(*node < 16);
+                    *at_secs
+                }
+                other => panic!("unexpected fault in churn expansion: {other:?}"),
+            };
+            assert!(at >= prev, "plan must be time-sorted: {a:?}");
+            prev = at;
+        }
+        // Every leave has its matching rejoin (rejoin_secs > 0).
+        assert_eq!(a.len(), leaves * 2);
+        // A different seed moves the instants.
+        let other = ChurnSpec { seed: 10, ..churn }.expand(16);
+        assert_ne!(a, other, "seed must matter");
+        // Rate 0 expands to nothing at all.
+        assert!(ChurnSpec { rate_per_100s: 0.0, ..churn }.expand(16).is_empty());
+    }
+
+    #[test]
+    fn churn_respects_max_fraction() {
+        // Never-rejoining churn at a huge rate: the absent set is
+        // capped at floor(8 * 0.25) = 2 nodes, so exactly 2 leaves.
+        let churn = ChurnSpec {
+            rate_per_100s: 10_000.0,
+            start_secs: 0.0,
+            duration_secs: 100.0,
+            rejoin_secs: 0.0,
+            seed: 3,
+            max_fraction: 0.25,
+        };
+        let plan = churn.expand(8);
+        let leaves = plan
+            .iter()
+            .filter(|f| matches!(f, FaultSpec::NodeLeave { .. }))
+            .count();
+        assert_eq!(leaves, 2, "{plan:?}");
+        assert_eq!(plan.len(), leaves, "rejoin_secs = 0 emits no joins");
+        // Distinct victims.
+        let mut nodes: Vec<usize> = plan
+            .iter()
+            .filter_map(|f| match f {
+                FaultSpec::NodeLeave { node, .. } => Some(*node),
+                _ => None,
+            })
+            .collect();
+        nodes.dedup();
+        assert_eq!(nodes.len(), 2);
+    }
+
+    #[test]
+    fn weather_block_parses_and_expands() {
+        let spec = ScenarioSpec::from_toml(
+            r#"
+            [topology]
+            sites = 2
+            racks_per_site = 1
+            nodes_per_rack = 4
+            [weather]
+            seed = 21
+            period_secs = 5.0
+            amplitude = 0.4
+            steps = 3
+            [weather.points.squeeze]
+            at_secs = 2.0
+            site = 1
+            factor = 0.3
+            "#,
+        )
+        .unwrap();
+        let weather = spec.weather.clone().expect("weather block parsed");
+        assert_eq!(weather.points.len(), 1);
+        assert_eq!(weather.steps, 3);
+        assert!(spec.validate().is_ok());
+        let plan = weather.expand(2);
+        // 1 explicit point + 3 epochs x 2 sites generated (all factors
+        // < 1 since amplitude > 0 draws from [0.6, 1)).
+        assert_eq!(plan.len(), 1 + 3 * 2, "{plan:?}");
+        assert_eq!(plan, weather.expand(2), "same spec, same plan");
+        let mut prev = f64::NEG_INFINITY;
+        for f in &plan {
+            match f {
+                FaultSpec::WeatherSet { at_secs, site, factor } => {
+                    assert!(*site < 2);
+                    assert!(*factor > 0.0 && *factor <= 1.0);
+                    assert!(*at_secs >= prev);
+                    prev = *at_secs;
+                }
+                other => panic!("unexpected fault in weather expansion: {other:?}"),
+            }
+        }
+        // Seed sensitivity on the generated part.
+        let other = WeatherSpec { seed: 22, ..weather.clone() }.expand(2);
+        assert_ne!(plan, other);
+        // Amplitude 0 with no points expands to nothing.
+        let flat = WeatherSpec { amplitude: 0.0, points: Vec::new(), ..weather };
+        assert!(flat.expand(2).is_empty());
+        // Typo'd point field must error.
+        let err = ScenarioSpec::from_toml(
+            "[weather.points.p]\nat = 1.0\nsite = 0\nfactor = 0.5",
+        )
+        .unwrap_err();
+        assert!(err.contains("unknown field"), "{err}");
+        // Single-site topology rejects the trace.
+        let mut bad = ScenarioSpec::paper_lan8();
+        bad.weather = Some(WeatherSpec::default());
+        let err = bad.validate().unwrap_err();
+        assert!(err.contains("single-site"), "{err}");
+    }
+
+    #[test]
+    fn effective_faults_with_inert_blocks_match_base_plan() {
+        // Churn at rate 0 plus a flat weather trace must reproduce the
+        // plain fault plan byte-identically (the acceptance criterion
+        // that makes the blocks safe to leave in a spec).
+        let base = ScenarioSpec::scale128();
+        let mut decorated = base.clone();
+        decorated.churn = Some(ChurnSpec {
+            rate_per_100s: 0.0,
+            ..ChurnSpec::default()
+        });
+        decorated.weather = Some(WeatherSpec::default());
+        assert!(decorated.validate().is_ok());
+        assert_eq!(
+            format!("{:?}", base.effective_faults()),
+            format!("{:?}", decorated.effective_faults()),
+        );
+    }
+
+    #[test]
+    fn top_level_transport_key_picks_the_flow_model() {
+        let toml = |transport: &str| {
+            format!(
+                "name = \"t\"\ntransport = {transport}\n\
+                 [topology]\nsites = 2\nracks_per_site = 1\nnodes_per_rack = 2\n\
+                 [hardware]\nprofile = \"wan\""
+            )
+        };
+        let udt = ScenarioSpec::from_toml(&toml("\"udt\"")).unwrap();
+        assert_eq!(udt.cfg.sphere_transport, TransportKind::Udt);
+        let tcp = ScenarioSpec::from_toml(&toml("\"tcp\"")).unwrap();
+        assert_eq!(tcp.cfg.sphere_transport, TransportKind::Tcp);
+        let err = ScenarioSpec::from_toml(&toml("\"carrier-pigeon\"")).unwrap_err();
+        assert!(err.contains("carrier-pigeon"), "{err}");
+        let err = ScenarioSpec::from_toml(&toml("3")).unwrap_err();
+        assert!(err.contains("string"), "{err}");
+    }
+
+    #[test]
+    fn new_fault_kinds_parse_from_toml() {
+        let spec = ScenarioSpec::from_toml(
+            r#"
+            [topology]
+            sites = 2
+            racks_per_site = 1
+            nodes_per_rack = 4
+            [faults.away]
+            kind = "leave"
+            at_secs = 3.0
+            node = 1
+            [faults.back]
+            kind = "join"
+            at_secs = 9.0
+            node = 1
+            [faults.storm]
+            kind = "weather_set"
+            at_secs = 4.0
+            site = 1
+            factor = 0.6
+            [faults.outage]
+            kind = "master_crash"
+            at_secs = 5.0
+            down_secs = 2.5
+            "#,
+        )
+        .unwrap();
+        assert_eq!(spec.faults.len(), 4);
+        assert!(spec.validate().is_ok());
+        assert!(matches!(
+            spec.faults[3],
+            FaultSpec::MasterCrash { down_secs, .. } if (down_secs - 2.5).abs() < 1e-12
+        ));
+        // master_crash needs a batch workload to bite.
+        let mut bad = spec.clone();
+        bad.workload = None;
+        bad.traffic = ScenarioSpec::traffic_scale128().traffic;
+        let err = bad.validate().unwrap_err();
+        assert!(err.contains("cache file metadata"), "{err}");
+        // ...and a finite, positive outage.
+        let mut bad = spec.clone();
+        bad.faults = vec![FaultSpec::MasterCrash {
+            at_secs: 1.0,
+            down_secs: f64::INFINITY,
+        }];
+        let err = bad.validate().unwrap_err();
+        assert!(err.contains("down_secs"), "{err}");
     }
 
     #[test]

@@ -15,9 +15,10 @@
 //! JSON regardless of thread scheduling.  Axes expand row-major with
 //! the *last* axis fastest, in the canonical axis order `nodes`,
 //! `wan_gbps`, `bytes_per_node`, `total_bytes`, `fault_intensity`,
-//! `tenant_mix`, `replication_policy`, `replication_max` — the order
-//! the axes are applied to the base spec (so `total_bytes` divides by
-//! the already-rescaled node count).
+//! `tenant_mix`, `replication_policy`, `replication_max`,
+//! `churn_rate`, `weather_trace`, `transport` — the order the axes are
+//! applied to the base spec (so `total_bytes` divides by the
+//! already-rescaled node count).
 //!
 //! ```
 //! use sector_sphere::scenario::sweep::SweepSpec;
@@ -42,7 +43,7 @@
 //! assert_eq!(spec.plan().unwrap()[1].axes[0], ("nodes", "8".to_string()));
 //! ```
 
-use crate::config::{Table, Value};
+use crate::config::{Table, TransportKind, Value};
 use crate::routing::hash_name;
 use crate::service::ScalerPolicy;
 use crate::util::bytes::parse_bytes;
@@ -105,6 +106,16 @@ pub enum Axis {
     ReplicationPolicy(Vec<ScalerPolicy>),
     /// Replica-count ceiling (`replication.max_replicas`).
     ReplicationMax(Vec<u32>),
+    /// Churn severity: departures per 100 s (`churn.rate_per_100s`
+    /// override; 0 disables the episode).  Requires a base `[churn]`
+    /// block.
+    ChurnRate(Vec<f64>),
+    /// Weather-trace identity: the seed of the generated part of the
+    /// `[weather]` trace.  Requires a base `[weather]` block.
+    WeatherTrace(Vec<u64>),
+    /// WAN flow-throughput model (`udt` | `tcp`) — the paper's
+    /// Sector-uses-UDT / Hadoop-uses-TCP contrast as a swept axis.
+    Transport(Vec<TransportKind>),
 }
 
 impl Axis {
@@ -119,6 +130,9 @@ impl Axis {
             Axis::TenantMix(_) => "tenant_mix",
             Axis::ReplicationPolicy(_) => "replication_policy",
             Axis::ReplicationMax(_) => "replication_max",
+            Axis::ChurnRate(_) => "churn_rate",
+            Axis::WeatherTrace(_) => "weather_trace",
+            Axis::Transport(_) => "transport",
         }
     }
 
@@ -131,6 +145,9 @@ impl Axis {
             Axis::TenantMix(v) => v.len(),
             Axis::ReplicationPolicy(v) => v.len(),
             Axis::ReplicationMax(v) => v.len(),
+            Axis::ChurnRate(v) => v.len(),
+            Axis::WeatherTrace(v) => v.len(),
+            Axis::Transport(v) => v.len(),
         }
     }
 
@@ -149,6 +166,9 @@ impl Axis {
             Axis::TenantMix(v) => v[i].clone(),
             Axis::ReplicationPolicy(v) => v[i].name().to_string(),
             Axis::ReplicationMax(v) => v[i].to_string(),
+            Axis::ChurnRate(v) => format!("{}", v[i]),
+            Axis::WeatherTrace(v) => v[i].to_string(),
+            Axis::Transport(v) => v[i].name().to_string(),
         }
     }
 
@@ -188,14 +208,20 @@ impl Axis {
                 let k = v[i];
                 if k == 0.0 {
                     spec.faults.clear();
+                    spec.churn = None;
+                    spec.weather = None;
                 } else {
                     for f in &mut spec.faults {
                         match f {
                             FaultSpec::Straggler { factor, .. }
-                            | FaultSpec::LinkDegrade { factor, .. } => {
+                            | FaultSpec::LinkDegrade { factor, .. }
+                            | FaultSpec::WeatherSet { factor, .. } => {
                                 *factor = factor.powf(k).clamp(1e-6, 1.0);
                             }
-                            FaultSpec::SlaveCrash { .. } => {}
+                            FaultSpec::SlaveCrash { .. }
+                            | FaultSpec::NodeLeave { .. }
+                            | FaultSpec::NodeJoin { .. }
+                            | FaultSpec::MasterCrash { .. } => {}
                         }
                     }
                 }
@@ -225,6 +251,19 @@ impl Axis {
             Axis::ReplicationMax(v) => {
                 replication_mut(spec, "sweep.replication_max")?.max_replicas = v[i];
             }
+            Axis::ChurnRate(v) => {
+                spec.churn
+                    .as_mut()
+                    .ok_or("sweep.churn_rate: the base scenario has no [churn] block")?
+                    .rate_per_100s = v[i];
+            }
+            Axis::WeatherTrace(v) => {
+                spec.weather
+                    .as_mut()
+                    .ok_or("sweep.weather_trace: the base scenario has no [weather] block")?
+                    .seed = v[i];
+            }
+            Axis::Transport(v) => spec.cfg.sphere_transport = v[i],
         }
         Ok(())
     }
@@ -313,7 +352,8 @@ impl SweepSpec {
             return Err(
                 "[sweep]: missing — a sweep document needs at least one axis \
                  (nodes, wan_gbps, bytes_per_node, total_bytes, fault_intensity, \
-                 tenant_mix, replication_policy, replication_max)"
+                 tenant_mix, replication_policy, replication_max, churn_rate, \
+                 weather_trace, transport)"
                     .into(),
             );
         }
@@ -330,6 +370,9 @@ impl SweepSpec {
                 "tenant_mix",
                 "replication_policy",
                 "replication_max",
+                "churn_rate",
+                "weather_trace",
+                "transport",
             ],
             &[],
         )?;
@@ -423,6 +466,48 @@ impl SweepSpec {
             }
             axes.push(Axis::ReplicationMax(out));
         }
+        if let Some(vals) = axis_array(t, "churn_rate")? {
+            let mut out = Vec::new();
+            for v in vals {
+                match v.as_float() {
+                    Some(r) if r.is_finite() && r >= 0.0 => out.push(r),
+                    _ => {
+                        return Err(
+                            "sweep.churn_rate: values must be numbers >= 0 \
+                             (departures per 100 s; 0 disables the episode)"
+                                .into(),
+                        )
+                    }
+                }
+            }
+            axes.push(Axis::ChurnRate(out));
+        }
+        if let Some(vals) = axis_array(t, "weather_trace")? {
+            let mut out = Vec::new();
+            for v in vals {
+                match v.as_int() {
+                    Some(s) if s >= 0 => out.push(s as u64),
+                    _ => {
+                        return Err(
+                            "sweep.weather_trace: values must be non-negative \
+                             integer seeds"
+                                .into(),
+                        )
+                    }
+                }
+            }
+            axes.push(Axis::WeatherTrace(out));
+        }
+        if let Some(vals) = axis_array(t, "transport")? {
+            let mut out = Vec::new();
+            for v in vals {
+                let s = v
+                    .as_str()
+                    .ok_or("sweep.transport: values must be strings (udt|tcp)")?;
+                out.push(TransportKind::parse(s).map_err(|e| format!("sweep.transport: {e}"))?);
+            }
+            axes.push(Axis::Transport(out));
+        }
         let spec = SweepSpec {
             name: t.str_or("sweep.name", &base.name).to_string(),
             base,
@@ -452,7 +537,7 @@ impl SweepSpec {
             return Err(
                 "[sweep]: declares no axes (nodes, wan_gbps, bytes_per_node, \
                  total_bytes, fault_intensity, tenant_mix, replication_policy, \
-                 replication_max)"
+                 replication_max, churn_rate, weather_trace, transport)"
                     .into(),
             );
         }
@@ -504,6 +589,12 @@ impl SweepSpec {
                  [replication] block"
                     .into(),
             );
+        }
+        if has("churn_rate") && self.base.churn.is_none() {
+            return Err("sweep.churn_rate: the base scenario has no [churn] block".into());
+        }
+        if has("weather_trace") && self.base.weather.is_none() {
+            return Err("sweep.weather_trace: the base scenario has no [weather] block".into());
         }
         Ok(total)
     }
@@ -602,6 +693,8 @@ impl SweepSpec {
                 iterations: 10,
             }),
             faults: Vec::new(),
+            churn: None,
+            weather: None,
             traffic: None,
             replication: None,
             colocation: super::ColocationSpec::default(),
@@ -1129,5 +1222,74 @@ mod tests {
         bad.axes = vec![Axis::Nodes(vec![8, 4])];
         let e = bad.plan().unwrap_err();
         assert!(e.contains("sweep point #1"), "{e}");
+    }
+
+    #[test]
+    fn wide_area_axes_parse_apply_and_gate_on_the_base() {
+        let spec = SweepSpec::from_toml(
+            r#"
+            [topology]
+            sites = 2
+            racks_per_site = 1
+            nodes_per_rack = 4
+            [workload]
+            kind = "terasort"
+            bytes_per_node = "256MB"
+            [churn]
+            rate_per_100s = 4.0
+            duration_secs = 200.0
+            [weather]
+            amplitude = 0.3
+            steps = 2
+            [sweep]
+            churn_rate = [0.0, 4.0]
+            weather_trace = [7, 8]
+            transport = ["udt", "tcp"]
+            "#,
+        )
+        .unwrap();
+        let keys: Vec<&str> = spec.axes.iter().map(|a| a.key()).collect();
+        assert_eq!(keys, vec!["churn_rate", "weather_trace", "transport"]);
+        let plan = spec.plan().unwrap();
+        assert_eq!(plan.len(), 8);
+        // Last axis fastest: point 0 is udt, point 1 tcp.
+        assert_eq!(
+            plan[0].spec.cfg.sphere_transport,
+            crate::config::TransportKind::Udt
+        );
+        assert_eq!(
+            plan[1].spec.cfg.sphere_transport,
+            crate::config::TransportKind::Tcp
+        );
+        // churn_rate 0 points expand to weather faults only.
+        let p0 = &plan[0].spec;
+        assert_eq!(p0.churn.unwrap().rate_per_100s, 0.0);
+        assert!(p0
+            .effective_faults()
+            .iter()
+            .all(|f| matches!(f, FaultSpec::WeatherSet { .. })));
+        // Rate 4 points carry churn faults; seeds move the instants.
+        let p4 = &plan[4].spec;
+        assert!((p4.churn.unwrap().rate_per_100s - 4.0).abs() < 1e-12);
+        assert!(p4
+            .effective_faults()
+            .iter()
+            .any(|f| matches!(f, FaultSpec::NodeLeave { .. })));
+        assert_ne!(plan[4].fingerprint, plan[6].fingerprint, "weather seed axis");
+        // Missing base blocks are named.
+        let mut bad = tiny_sweep();
+        bad.axes = vec![Axis::ChurnRate(vec![1.0])];
+        let e = bad.validate().unwrap_err();
+        assert!(e.contains("sweep.churn_rate") && e.contains("[churn]"), "{e}");
+        let mut bad = tiny_sweep();
+        bad.axes = vec![Axis::WeatherTrace(vec![1])];
+        let e = bad.validate().unwrap_err();
+        assert!(e.contains("sweep.weather_trace") && e.contains("[weather]"), "{e}");
+        // Bad transport values are rejected at parse time.
+        let e = SweepSpec::from_toml(
+            "[workload]\nkind = \"terasort\"\n[sweep]\ntransport = [\"ipx\"]\n",
+        )
+        .unwrap_err();
+        assert!(e.contains("sweep.transport"), "{e}");
     }
 }

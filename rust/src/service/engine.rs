@@ -220,7 +220,7 @@ pub fn run_traffic(
         _ => None,
     };
     let n = testbed.nodes();
-    let mut state = FaultState::new(&spec.faults, n);
+    let mut state = FaultState::for_run(spec, testbed);
     let mut net =
         NetSim::with_capacity(4 * n + 2 * testbed.racks() + 2 * testbed.site_names.len());
     let links = testbed.build_network(&mut net);

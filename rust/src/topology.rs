@@ -64,6 +64,14 @@ pub struct TopologySpec {
     pub rack_bps: f64,
     /// Per-site WAN uplink rate, bytes/s.
     pub wan_bps: f64,
+    /// Per-site WAN uplink multipliers (heterogeneous sites).  Empty
+    /// means uniform 1.0; otherwise one entry per site, applied to
+    /// `wan_bps` when the site uplinks are instantiated.
+    pub site_link_mult: Vec<f64>,
+    /// Per-site disk throughput multipliers (heterogeneous sites).
+    /// Empty means uniform 1.0; otherwise one entry per site, folded
+    /// into every member node's effective disk rate.
+    pub site_disk_mult: Vec<f64>,
 }
 
 impl TopologySpec {
@@ -88,6 +96,8 @@ impl TopologySpec {
             nic_bps: TEN_GBPS,
             rack_bps: TEN_GBPS,
             wan_bps: TEN_GBPS,
+            site_link_mult: Vec::new(),
+            site_disk_mult: Vec::new(),
         }
     }
 
@@ -116,6 +126,8 @@ impl TopologySpec {
                 row.truncate(used);
             }
         }
+        spec.site_link_mult.truncate(used);
+        spec.site_disk_mult.truncate(used);
         spec.name = format!("wan-{nodes}node");
         Ok(spec)
     }
@@ -137,6 +149,8 @@ impl TopologySpec {
             nic_bps: TEN_GBPS,
             rack_bps: TEN_GBPS,
             wan_bps: TEN_GBPS,
+            site_link_mult: Vec::new(),
+            site_disk_mult: Vec::new(),
         }
     }
 
@@ -162,6 +176,8 @@ impl TopologySpec {
             nic_bps: TEN_GBPS,
             rack_bps: 4.0 * TEN_GBPS,
             wan_bps: TEN_GBPS,
+            site_link_mult: Vec::new(),
+            site_disk_mult: Vec::new(),
         }
     }
 
@@ -201,6 +217,23 @@ impl TopologySpec {
         spec.nic_bps = t.float_or("topology.nic_gbps", spec.nic_bps / gbps) * gbps;
         spec.rack_bps = t.float_or("topology.rack_gbps", spec.rack_bps / gbps) * gbps;
         spec.wan_bps = t.float_or("topology.wan_gbps", spec.wan_bps / gbps) * gbps;
+        for (key, out) in [
+            ("site_link_mult", &mut spec.site_link_mult),
+            ("site_disk_mult", &mut spec.site_disk_mult),
+        ] {
+            if let Some(v) = t.get(&format!("topology.{key}")) {
+                let arr = v
+                    .as_array()
+                    .ok_or_else(|| format!("topology.{key} must be an array of numbers"))?;
+                *out = arr
+                    .iter()
+                    .map(|x| {
+                        x.as_float()
+                            .ok_or_else(|| format!("topology.{key} entries must be numbers"))
+                    })
+                    .collect::<Result<_, _>>()?;
+            }
+        }
         spec.name = t.str_or("topology.name", &spec.name).to_string();
         Ok(spec)
     }
@@ -222,6 +255,20 @@ impl TopologySpec {
         }
         if self.nic_bps <= 0.0 || self.rack_bps <= 0.0 || self.wan_bps <= 0.0 {
             return Err("link rates must be positive".into());
+        }
+        for (key, mult) in [
+            ("site_link_mult", &self.site_link_mult),
+            ("site_disk_mult", &self.site_disk_mult),
+        ] {
+            if !mult.is_empty() && mult.len() != ns {
+                return Err(format!(
+                    "{key} must have one entry per site ({ns}), got {}",
+                    mult.len()
+                ));
+            }
+            if mult.iter().any(|m| !m.is_finite() || *m <= 0.0) {
+                return Err(format!("{key} entries must be positive and finite"));
+            }
         }
         let mut site_names = Vec::with_capacity(ns);
         let mut node_site = Vec::new();
@@ -268,6 +315,8 @@ impl TopologySpec {
             rack_site,
             rack_bps: self.rack_bps,
             intra_rack_rtt_secs: self.intra_rack_rtt_secs,
+            site_link_mult: self.site_link_mult.clone(),
+            site_disk_mult: self.site_disk_mult.clone(),
         })
     }
 }
@@ -293,6 +342,10 @@ pub struct Testbed {
     pub rack_bps: f64,
     /// RTT between two nodes in the same rack, seconds.
     pub intra_rack_rtt_secs: f64,
+    /// Per-site WAN uplink multipliers (empty = uniform 1.0).
+    pub site_link_mult: Vec<f64>,
+    /// Per-site disk throughput multipliers (empty = uniform 1.0).
+    pub site_disk_mult: Vec<f64>,
 }
 
 /// Network distance classes between two nodes, nearest first.  The
@@ -384,6 +437,22 @@ impl Testbed {
         self.rack_site.iter().filter(|&&s| s == site).count()
     }
 
+    /// Nominal WAN uplink rate of `site` with its heterogeneity
+    /// multiplier applied (network weather composes on top of this
+    /// in the scenario engine, it is not folded in here).
+    pub fn site_wan_bps(&self, site: usize) -> f64 {
+        self.wan_bps * self.site_link_mult.get(site).copied().unwrap_or(1.0)
+    }
+
+    /// Disk throughput multiplier for `node` (its site's entry; 1.0 on
+    /// homogeneous testbeds).  > 1 is a faster-than-baseline site.
+    pub fn disk_mult(&self, node: usize) -> f64 {
+        self.site_disk_mult
+            .get(self.node_site[node])
+            .copied()
+            .unwrap_or(1.0)
+    }
+
     /// Network distance class between two nodes.
     pub fn proximity(&self, a: usize, b: usize) -> Proximity {
         if a == b {
@@ -435,10 +504,10 @@ impl Testbed {
             .map(|_| net.add_link(self.rack_bps))
             .collect();
         let site_up = (0..self.site_names.len())
-            .map(|_| net.add_link(self.wan_bps))
+            .map(|s| net.add_link(self.site_wan_bps(s)))
             .collect();
         let site_down = (0..self.site_names.len())
-            .map(|_| net.add_link(self.wan_bps))
+            .map(|s| net.add_link(self.site_wan_bps(s)))
             .collect();
         NetLinks {
             node_up,
@@ -698,6 +767,45 @@ mod tests {
             0,
             "single rack wraps to next node"
         );
+    }
+
+    #[test]
+    fn heterogeneous_site_multipliers() {
+        let mut spec = TopologySpec::scale_out(2, 1, 2);
+        spec.site_link_mult = vec![1.0, 0.5];
+        spec.site_disk_mult = vec![2.0, 1.0];
+        let t = spec.generate().unwrap();
+        assert!((t.site_wan_bps(0) - t.wan_bps).abs() < 1.0);
+        assert!((t.site_wan_bps(1) - t.wan_bps * 0.5).abs() < 1.0);
+        assert!((t.disk_mult(0) - 2.0).abs() < 1e-12, "node 0 sits in site 0");
+        assert!((t.disk_mult(3) - 1.0).abs() < 1e-12, "node 3 sits in site 1");
+        let mut net = NetSim::new();
+        let links = t.build_network(&mut net);
+        assert!((net.link_capacity(links.site_up[1]) - t.wan_bps * 0.5).abs() < 1.0);
+        assert!((net.link_capacity(links.site_down[0]) - t.wan_bps).abs() < 1.0);
+        // Empty vectors mean uniform 1.0 everywhere.
+        let uniform = TopologySpec::scale_out(2, 1, 2).generate().unwrap();
+        assert!((uniform.site_wan_bps(1) - uniform.wan_bps).abs() < 1.0);
+        assert!((uniform.disk_mult(3) - 1.0).abs() < 1e-12);
+        // Wrong lengths and non-positive entries are rejected.
+        spec.site_link_mult = vec![1.0];
+        assert!(spec.generate().is_err());
+        spec.site_link_mult = vec![1.0, -1.0];
+        assert!(spec.generate().is_err());
+        spec.site_link_mult = vec![1.0, 0.5];
+        spec.site_disk_mult = vec![0.0, 1.0];
+        assert!(spec.generate().is_err());
+        // And they parse from `[topology]` arrays.
+        let t2 = Table::parse(
+            "[topology]\nsites = 2\nnodes_per_rack = 2\n\
+             site_link_mult = [1.0, 0.5]\nsite_disk_mult = [2.0, 1.0]",
+        )
+        .unwrap();
+        let spec2 = TopologySpec::from_table(&t2).unwrap();
+        assert_eq!(spec2.site_link_mult, vec![1.0, 0.5]);
+        assert_eq!(spec2.site_disk_mult, vec![2.0, 1.0]);
+        let bad = Table::parse("[topology]\nsites = 2\nsite_link_mult = 2.0").unwrap();
+        assert!(TopologySpec::from_table(&bad).is_err());
     }
 
     #[test]

@@ -1,0 +1,338 @@
+//! Wide-area churn property suite (DESIGN.md §18).
+//!
+//! The ISSUE-10 contract, property by property: Chord ring membership
+//! converges after EVERY leave/join of an arbitrary churn sequence; no
+//! task span survives on a departed node (observed through the JSONL
+//! trace — cancelled work is never emitted, and a dead node gets no
+//! new work until it re-joins); Sector replica counts return to bounds
+//! after fail/revive churn plus a replication pass; churned runs are
+//! deterministic end to end; and the inert wide-area blocks — churn at
+//! rate 0 plus a flat weather trace — reproduce the plain fault-plan
+//! timeline byte-identically.
+
+use std::collections::BTreeSet;
+use std::fs;
+use std::path::PathBuf;
+
+use sector_sphere::routing::chord::ChordRing;
+use sector_sphere::scenario::{
+    run_scenario, ChurnSpec, FaultSpec, ScenarioSpec, TraceSpec, WeatherSpec,
+};
+use sector_sphere::sector::{ReplicationManager, SectorCloud};
+use sector_sphere::testkit::forall;
+use sector_sphere::util::rng::Pcg64;
+
+#[test]
+fn prop_ring_membership_converges_after_any_churn_sequence() {
+    forall(
+        "chord ring stays at the stabilized fixed point through churn",
+        20,
+        |rng: &mut Pcg64| {
+            let n = 4 + rng.gen_range(12) as usize;
+            let ids: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+            let ops = 6 + rng.gen_range(14) as usize;
+            (ids, ops, rng.next_u64())
+        },
+        |(ids, ops, seed)| {
+            let mut ids: Vec<u64> = ids.clone();
+            ids.sort_unstable();
+            ids.dedup();
+            if ids.len() < 2 {
+                return Ok(()); // shrunk below the interesting regime
+            }
+            let mut ring = ChordRing::build(&ids);
+            let mut present: BTreeSet<u64> = ids.iter().copied().collect();
+            let mut away: Vec<u64> = Vec::new();
+            let mut rng = Pcg64::new(*seed);
+            for step in 0..*ops {
+                // Leave while >2 present; re-join a departed id otherwise
+                // (and sometimes by choice), mirroring the churn plan's
+                // leave/re-join pairing.
+                let rejoin = !away.is_empty() && (present.len() <= 2 || rng.next_f64() < 0.4);
+                if rejoin {
+                    let id = away.remove(rng.gen_range(away.len() as u64) as usize);
+                    ring.join(id);
+                    present.insert(id);
+                } else {
+                    let live: Vec<u64> = present.iter().copied().collect();
+                    let id = live[rng.gen_range(live.len() as u64) as usize];
+                    if !ring.leave(id) {
+                        return Err(format!("step {step}: leave({id:#x}) found nothing"));
+                    }
+                    present.remove(&id);
+                    away.push(id);
+                }
+                // Convergence after EVERY op: membership matches, and a
+                // finger-table walk from any node owns every key exactly
+                // as the ground-truth successor does.
+                let members: Vec<u64> = ring.node_ids().collect();
+                if members != present.iter().copied().collect::<Vec<u64>>() {
+                    return Err(format!("step {step}: membership diverged"));
+                }
+                let start = members[rng.gen_range(members.len() as u64) as usize];
+                for _ in 0..20 {
+                    let key = rng.next_u64();
+                    let (owner, _) = ring
+                        .lookup(start, key)
+                        .ok_or_else(|| format!("step {step}: lookup failed"))?;
+                    let want = ring.naive_successor(key).unwrap();
+                    if owner != want {
+                        return Err(format!(
+                            "step {step}: key {key:#x} routed to {owner:#x}, owner {want:#x}"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_replica_counts_return_to_bounds_after_churn() {
+    forall(
+        "sector replicas restore to min(target, live) after fail/revive churn",
+        15,
+        |rng: &mut Pcg64| {
+            let target = 2 + rng.gen_range(2) as usize; // 2..=3
+            let nodes = target + 3 + rng.gen_range(5) as usize;
+            let files = 3 + rng.gen_range(10) as usize;
+            ((nodes, target), (files, rng.next_u64()))
+        },
+        |&((nodes, target), (files, seed))| {
+            if target < 2 || nodes < target + 2 {
+                return Ok(()); // shrunk below the interesting regime
+            }
+            let cloud = SectorCloud::builder()
+                .nodes(nodes)
+                .replicas(target)
+                .seed(seed)
+                .build()
+                .map_err(|e| e.to_string())?;
+            let ip = "10.0.0.1".parse().unwrap();
+            for i in 0..files {
+                cloud
+                    .upload(ip, &format!("f{i}.dat"), &[9, 9, 9], None, None)
+                    .map_err(|e| e.to_string())?;
+            }
+            let mut mgr = ReplicationManager::new(1.0);
+            mgr.check_all(&cloud);
+            let mut rng = Pcg64::new(seed ^ 0xc4u64);
+            let mut dead: Vec<u32> = Vec::new();
+            for _ in 0..12 {
+                // Never let churn outrun the replica chain: at most
+                // target-1 slaves away at once (the ChurnSpec
+                // max_fraction rationale at storage scale).
+                if !dead.is_empty() && (dead.len() >= target - 1 || rng.next_f64() < 0.4) {
+                    let back = dead.remove(rng.gen_range(dead.len() as u64) as usize);
+                    cloud.revive_slave(back);
+                } else {
+                    let victim = loop {
+                        let v = rng.gen_range(nodes as u64) as u32;
+                        if !dead.contains(&v) {
+                            break v;
+                        }
+                    };
+                    cloud.fail_slave(victim);
+                    dead.push(victim);
+                }
+                // The daily check runs after each membership change.
+                mgr.check_all(&cloud);
+                let live = nodes - dead.len();
+                let expect = target.min(live);
+                for name in cloud.list() {
+                    let locs = cloud.stat(&name).unwrap().locations;
+                    if locs.len() != expect {
+                        return Err(format!(
+                            "{name}: {} replicas with {live} live, want {expect}",
+                            locs.len()
+                        ));
+                    }
+                    let mut dedup = locs.clone();
+                    dedup.sort_unstable();
+                    dedup.dedup();
+                    if dedup.len() != locs.len() {
+                        return Err(format!("{name}: duplicate locations {locs:?}"));
+                    }
+                    if let Some(d) = locs.iter().find(|l| cloud.is_dead(**l)) {
+                        return Err(format!("{name}: replica on dead slave {d}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ----------------------------------------------------- trace-level props
+
+/// One parsed JSONL event — just the fields these properties need.
+struct Ev {
+    t: f64,
+    dur: f64,
+    ph: String,
+    kind: String,
+    name: String,
+    node: i64,
+}
+
+fn jstr(line: &str, key: &str) -> String {
+    let tag = format!("\"{key}\":\"");
+    let start = line.find(&tag).unwrap_or_else(|| panic!("missing {key}: {line}")) + tag.len();
+    line[start..].split('"').next().unwrap().to_string()
+}
+
+fn jnum(line: &str, key: &str) -> f64 {
+    let tag = format!("\"{key}\":");
+    let start = line.find(&tag).unwrap_or_else(|| panic!("missing {key}: {line}")) + tag.len();
+    line[start..]
+        .split(&[',', '}'][..])
+        .next()
+        .unwrap()
+        .trim()
+        .parse()
+        .unwrap_or_else(|_| panic!("bad {key}: {line}"))
+}
+
+/// Run `spec` traced; return the parsed JSONL events (meta line
+/// skipped) and clean the artifacts up.
+fn traced_events(mut spec: ScenarioSpec, tag: &str) -> Vec<Ev> {
+    let dir = std::env::temp_dir();
+    let pid = std::process::id();
+    let chrome: PathBuf = dir.join(format!("sector-sphere-churn-{pid}-{tag}.json"));
+    let jsonl: PathBuf = dir.join(format!("sector-sphere-churn-{pid}-{tag}.jsonl"));
+    spec.trace = Some(TraceSpec {
+        path: Some(chrome.to_string_lossy().into_owned()),
+        ..TraceSpec::default()
+    });
+    run_scenario(&spec).unwrap_or_else(|e| panic!("{}: {e}", spec.name));
+    let text = fs::read_to_string(&jsonl).expect("jsonl artifact written");
+    let _ = fs::remove_file(&jsonl);
+    let _ = fs::remove_file(&chrome);
+    text.lines()
+        .skip(1) // meta header
+        .map(|l| Ev {
+            t: jnum(l, "t"),
+            dur: jnum(l, "dur"),
+            ph: jstr(l, "ph"),
+            kind: jstr(l, "kind"),
+            name: jstr(l, "name"),
+            node: jnum(l, "node") as i64,
+        })
+        .collect()
+}
+
+#[test]
+fn prop_no_task_survives_a_departed_node() {
+    let events = traced_events(ScenarioSpec::churn_wan32(), "departed");
+    let leaves: Vec<&Ev> = events
+        .iter()
+        .filter(|e| e.kind == "fault" && e.name == "leave")
+        .collect();
+    assert!(
+        !leaves.is_empty(),
+        "churn_wan32 must generate at least one departure"
+    );
+    // Per node: sorted alternating leave/join instants -> away windows.
+    let nodes: BTreeSet<i64> = leaves.iter().map(|e| e.node).collect();
+    let mut windows: Vec<(i64, f64, f64)> = Vec::new();
+    for &n in &nodes {
+        let mut instants: Vec<(f64, bool)> = events
+            .iter()
+            .filter(|e| e.kind == "fault" && e.node == n && (e.name == "leave" || e.name == "join"))
+            .map(|e| (e.t, e.name == "leave"))
+            .collect();
+        instants.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let mut open: Option<f64> = None;
+        for (t, is_leave) in instants {
+            match (is_leave, open) {
+                (true, None) => open = Some(t),
+                (false, Some(l)) => {
+                    windows.push((n, l, t));
+                    open = None;
+                }
+                (pat, _) => panic!("node {n}: unpaired churn instant (leave={pat}) at {t}"),
+            }
+        }
+        if let Some(l) = open {
+            windows.push((n, l, f64::INFINITY)); // never came back
+        }
+    }
+    // No completed task span on a node may overlap its away window:
+    // in-flight work is unwound at the leave (and so never emitted),
+    // and a departed node gets nothing new before its join.
+    let eps = 1e-6;
+    for ev in events.iter().filter(|e| e.ph == "X" && e.kind == "task") {
+        for &(n, l, j) in &windows {
+            if ev.node == n {
+                assert!(
+                    ev.t + ev.dur <= l + eps || ev.t >= j - eps,
+                    "task [{:.3}, {:.3}] on node {n} overlaps its absence [{l:.3}, {j:.3})",
+                    ev.t,
+                    ev.t + ev.dur,
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_churned_runs_are_deterministic() {
+    for spec in [
+        ScenarioSpec::churn_wan32(),
+        ScenarioSpec::weather_compare16(),
+    ] {
+        let a = run_scenario(&spec).unwrap();
+        let b = run_scenario(&spec).unwrap();
+        assert_eq!(a, b, "{}: run-twice reports must match bytewise", spec.name);
+        assert!(!a.trace_digest.is_empty());
+    }
+}
+
+#[test]
+fn prop_inert_wide_area_blocks_reproduce_the_plain_timeline() {
+    // THE acceptance property: churn at rate 0 plus a flat weather
+    // trace must not move a single byte of the timeline relative to
+    // the same scenario without the blocks — digest AND full report.
+    let mut plain = ScenarioSpec::churn_wan32();
+    plain.churn = None;
+    let mut inert = plain.clone();
+    inert.churn = Some(ChurnSpec {
+        rate_per_100s: 0.0,
+        ..ChurnSpec::default()
+    });
+    inert.weather = Some(WeatherSpec {
+        amplitude: 0.0,
+        steps: 0,
+        ..WeatherSpec::default()
+    });
+    let a = run_scenario(&plain).unwrap();
+    let b = run_scenario(&inert).unwrap();
+    assert_eq!(a, b, "inert churn/weather blocks changed the run");
+    // And with a real fault plan alongside: the blocks stay invisible.
+    let mut faulted_plain = plain.clone();
+    faulted_plain.name = "churn-inert-faulted".into();
+    faulted_plain.faults = vec![
+        FaultSpec::Straggler {
+            node: 17,
+            factor: 0.5,
+        },
+        FaultSpec::SlaveCrash {
+            at_secs: 3.0,
+            node: 7,
+        },
+        FaultSpec::LinkDegrade {
+            at_secs: 5.0,
+            duration_secs: 20.0,
+            site: 2,
+            factor: 0.25,
+        },
+    ];
+    let mut faulted_inert = faulted_plain.clone();
+    faulted_inert.churn = inert.churn;
+    faulted_inert.weather = inert.weather;
+    let fa = run_scenario(&faulted_plain).unwrap();
+    let fb = run_scenario(&faulted_inert).unwrap();
+    assert_eq!(fa, fb, "inert blocks changed a faulted run");
+    assert!(fa.faults_injected > 0, "the borrowed fault plan must fire");
+}

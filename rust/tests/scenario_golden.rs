@@ -142,6 +142,66 @@ fn golden_angle_scale128() {
 }
 
 #[test]
+fn golden_churn_wan32() {
+    // Full size: 32 nodes at 1 GB/node with the seeded churn episode —
+    // every leave/join instant and the resulting re-replication flows
+    // are pinned through the report fixture.
+    assert_golden(&ScenarioSpec::churn_wan32());
+}
+
+#[test]
+fn golden_weather_compare16() {
+    // Full size: both engines under the same 6-epoch WAN weather trace.
+    assert_golden(&ScenarioSpec::weather_compare16());
+}
+
+#[test]
+fn golden_wide_area_toml_matches_preset_shape() {
+    // The shipped TOMLs must stay in sync with the built-in presets:
+    // same topology, workload, and — the wide-area additions — the
+    // [churn] block, the [weather] trace and the compare half.
+    for (file, preset) in [
+        ("churn_wan32.toml", ScenarioSpec::churn_wan32()),
+        ("weather_compare16.toml", ScenarioSpec::weather_compare16()),
+    ] {
+        let text = std::fs::read_to_string(format!(
+            "{}/config/scenarios/{file}",
+            env!("CARGO_MANIFEST_DIR")
+        ))
+        .expect("preset TOML readable");
+        let from_toml = ScenarioSpec::from_toml(&text).expect("preset TOML parses");
+        assert_eq!(from_toml.name, preset.name, "{file}");
+        assert_eq!(from_toml.topology.nodes(), preset.topology.nodes(), "{file}");
+        assert_eq!(from_toml.churn, preset.churn, "{file}: [churn] block");
+        assert_eq!(from_toml.weather, preset.weather, "{file}: [weather] block");
+        assert_eq!(from_toml.compare, preset.compare, "{file}: compare half");
+        assert_eq!(
+            from_toml.cfg.sphere_transport, preset.cfg.sphere_transport,
+            "{file}: transport knob"
+        );
+        assert_eq!(
+            from_toml.workload.as_ref().map(|w| w.kind),
+            preset.workload.as_ref().map(|w| w.kind),
+            "{file}"
+        );
+        let (a, b) = (
+            from_toml.workload.as_ref().unwrap().bytes_per_node,
+            preset.workload.as_ref().unwrap().bytes_per_node,
+        );
+        assert!((a - b).abs() < 1.0, "{file}: bytes_per_node {a} vs {b}");
+        // Both presets' hand-written fault lists are empty — the plan
+        // comes entirely from the churn/weather expansion, which the
+        // shape equality above pins exactly.
+        assert_eq!(from_toml.faults, preset.faults, "{file}");
+        assert_eq!(
+            from_toml.effective_faults().len(),
+            preset.effective_faults().len(),
+            "{file}: expanded plans must line up"
+        );
+    }
+}
+
+#[test]
 fn angle_recall_holds_under_the_fault_plan() {
     // The §7.1 regime shifts (scan at window 5, exfiltration at 11)
     // must still be detected while the crash re-homes a window, the 4x

@@ -172,6 +172,59 @@ fn elastic_digest_moves_with_the_seed() {
 }
 
 #[test]
+fn traced_churn_wan32_is_deterministic() {
+    // The churn preset's leave/join instants are part of the digested
+    // timeline: byte-identical reruns, and the instants visible in the
+    // JSONL artifact.
+    let spec = ScenarioSpec::churn_wan32();
+    assert_trace_deterministic(&spec);
+    let (_, jsonl, _) = run_traced(spec, "churn-instants");
+    assert!(
+        jsonl.contains("\"kind\":\"fault\",\"name\":\"leave\""),
+        "churn departures must be traced as fault instants"
+    );
+    assert!(
+        jsonl.contains("\"kind\":\"fault\",\"name\":\"join\""),
+        "churn re-joins must be traced as fault instants"
+    );
+}
+
+#[test]
+fn traced_weather_compare16_is_deterministic() {
+    let spec = ScenarioSpec::weather_compare16();
+    assert_trace_deterministic(&spec);
+    let (_, jsonl, _) = run_traced(spec, "weather-instants");
+    assert!(
+        jsonl.contains("\"name\":\"weather site"),
+        "weather trace points must be traced as fault instants"
+    );
+}
+
+#[test]
+fn churn_digest_moves_with_the_churn_seed() {
+    let a = run_scenario(&ScenarioSpec::churn_wan32()).unwrap();
+    let mut spec = ScenarioSpec::churn_wan32();
+    spec.churn.as_mut().expect("churn preset").seed ^= 0x5eed_5eed;
+    let b = run_scenario(&spec).unwrap();
+    assert_ne!(
+        a.trace_digest, b.trace_digest,
+        "a different churn seed must move the departure instants"
+    );
+}
+
+#[test]
+fn weather_digest_moves_with_the_weather_seed() {
+    let a = run_scenario(&ScenarioSpec::weather_compare16()).unwrap();
+    let mut spec = ScenarioSpec::weather_compare16();
+    spec.weather.as_mut().expect("weather preset").seed ^= 0x5eed_5eed;
+    let b = run_scenario(&spec).unwrap();
+    assert_ne!(
+        a.trace_digest, b.trace_digest,
+        "a different weather seed must redraw the capacity trace"
+    );
+}
+
+#[test]
 fn enabling_trace_never_moves_the_digest() {
     // The digest is computed on every run — artifact capture and the
     // gauge sampler must not change what gets folded into it.
